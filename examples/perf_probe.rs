@@ -1,0 +1,82 @@
+//! Perf probe (EXPERIMENTS.md §Perf): break one training run into its
+//! phases — host batch assembly, literal creation, PJRT execute, result
+//! sync — so optimization targets the real bottleneck.
+//!
+//! ```bash
+//! cargo run --release --example perf_probe [-- preset layers steps]
+//! ```
+
+use cluster_gcn::coordinator::batch::BatchAssembler;
+use cluster_gcn::coordinator::trainer::{step, TrainState};
+use cluster_gcn::coordinator::ClusterSampler;
+use cluster_gcn::datagen::{build_cached, preset};
+use cluster_gcn::norm::NormConfig;
+use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
+use cluster_gcn::runtime::Engine;
+use cluster_gcn::util::{Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let preset_name = args.get(1).map(String::as_str).unwrap_or("reddit_like");
+    let layers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let steps: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(100);
+
+    let p = preset(preset_name).expect("preset");
+    let ds = build_cached(p, 42, std::path::Path::new("data"))?;
+    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let short = preset_name.trim_end_matches("_like");
+    let artifact = format!("{short}_L{layers}");
+    let meta = engine.meta(&artifact)?;
+    engine.ensure_compiled(&artifact)?;
+
+    let mut rng = Rng::new(7);
+    let part = MultilevelPartitioner::default().partition(
+        &ds.graph,
+        p.default_partitions,
+        &mut rng,
+    );
+    let sampler = ClusterSampler::new(parts_to_clusters(&part, p.default_partitions), p.default_q);
+    let mut asm = BatchAssembler::new(ds.n(), meta.b_max, NormConfig::PAPER_DEFAULT);
+    let mut state = TrainState::init(&meta, 0);
+
+    let mut assembly_s = 0.0;
+    let mut step_s = 0.0;
+    let mut done = 0usize;
+    let mut nodes = Vec::new();
+    let total = Timer::start();
+    'outer: loop {
+        let plan = sampler.epoch_plan(&mut rng);
+        for ids in &plan {
+            if done >= steps {
+                break 'outer;
+            }
+            let t = Timer::start();
+            sampler.batch_nodes(ids, &mut nodes);
+            let batch = asm.assemble(&ds, &nodes);
+            assembly_s += t.secs();
+            if batch.n_train == 0 {
+                continue;
+            }
+            let t = Timer::start();
+            step(&mut engine, &artifact, &mut state, 0.01, &batch)?;
+            step_s += t.secs();
+            done += 1;
+        }
+    }
+    let total_s = total.secs();
+
+    println!("== perf probe: {artifact}, {done} steps, b_max {} ==", meta.b_max);
+    let pct = |x: f64| 100.0 * x / total_s;
+    println!("total          {total_s:8.3}s");
+    println!("  assembly     {assembly_s:8.3}s  ({:.1}%)", pct(assembly_s));
+    println!("  step         {step_s:8.3}s  ({:.1}%)", pct(step_s));
+    println!("    literal    {:8.3}s  ({:.1}%)", engine.lit_seconds, pct(engine.lit_seconds));
+    println!("    execute    {:8.3}s  ({:.1}%)", engine.exec_seconds, pct(engine.exec_seconds));
+    println!("    sync+out   {:8.3}s  ({:.1}%)", engine.sync_seconds, pct(engine.sync_seconds));
+    println!(
+        "    other      {:8.3}s  (tensor clones, output conversion)",
+        step_s - engine.lit_seconds - engine.exec_seconds - engine.sync_seconds
+    );
+    println!("per-step: {:.2} ms", 1e3 * total_s / done as f64);
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT export: lower every manifest config to HLO **text** + write the
+JSON manifest the rust runtime discovers artifacts through.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` rust crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only name_prefix]
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+Incremental: a config is skipped when its .hlo.txt already exists and is
+newer than the compile/ sources (make-level dependency also guards this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import manifest
+from compile.model import ModelConfig, build_fn, example_args
+from compile.kernels.gcn_layer import vmem_bytes, mxu_utilization_estimate
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: ModelConfig) -> str:
+    fn = build_fn(cfg)
+    specs = example_args(cfg)
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(cfg: ModelConfig, filename: str) -> dict:
+    return {
+        "name": cfg.name,
+        "file": filename,
+        "kind": cfg.kind,
+        "task": cfg.task,
+        "layers": cfg.layers,
+        "f_in": cfg.f_in,
+        "f_hid": cfg.f_hid,
+        "classes": cfg.classes,
+        "b_max": cfg.b_max,
+        "residual": cfg.residual,
+        "weight_shapes": [list(s) for s in cfg.weight_shapes()],
+        "vmem_bytes_est": vmem_bytes(cfg.b_max, max(cfg.f_in, cfg.f_hid),
+                                     max(cfg.f_hid, cfg.classes)),
+        "mxu_utilization_est": round(
+            mxu_utilization_estimate(cfg.b_max,
+                                     max(cfg.f_in, cfg.f_hid),
+                                     max(cfg.f_hid, cfg.classes)), 4),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="only lower configs whose name starts with this")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    total = skipped = 0
+    t_start = time.time()
+    for cfg in manifest.CONFIGS:
+        filename = f"{cfg.name}.hlo.txt"
+        path = os.path.join(args.out_dir, filename)
+        entries.append(manifest_entry(cfg, filename))
+        if args.only and not cfg.name.startswith(args.only):
+            continue
+        total += 1
+        if not args.force and os.path.exists(path):
+            skipped += 1
+            continue
+        t0 = time.time()
+        text = lower_config(cfg)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        print(f"  {cfg.name}: {len(text)} chars in {time.time()-t0:.1f}s",
+              flush=True)
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1, sort_keys=True)
+    print(f"aot: {total - skipped} lowered, {skipped} up-to-date, "
+          f"manifest {len(entries)} entries, {time.time()-t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

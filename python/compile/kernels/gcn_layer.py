@@ -1,0 +1,297 @@
+"""Layer-1 Pallas kernels for Cluster-GCN.
+
+The per-batch hot spot of Cluster-GCN (eq. (1) of the paper) is one GCN
+layer over the current cluster batch:
+
+    Z = A_hat @ X @ W ;  X_next = relu(Z)           (hidden layers)
+    Z = A_hat @ X @ W                               (output layer)
+
+where ``A_hat`` is the renormalized (b, b) adjacency block of the batch
+(dense — see DESIGN.md §Hardware-Adaptation: after graph clustering the
+within-batch block is dense enough that on TPU the right realization is a
+blocked dense matmul on the MXU, not a scatter/gather SpMM), ``X`` is the
+(b, f) activation matrix and ``W`` the (f, g) weight matrix.
+
+Kernel schedule
+---------------
+Grid is 1-D over row tiles of the batch: program ``i`` owns rows
+``[i*bm, (i+1)*bm)``.  Per program the VMEM working set is
+
+    A row stripe   (bm, b)      bm*b*4 bytes
+    X              (b,  f)      b*f*4  bytes   (streamed once per program)
+    W              (f,  g)      f*g*4  bytes
+    H scratch      (bm, f)      bm*f*4 bytes   (A@X intermediate)
+    O output tile  (bm, g)      bm*g*4 bytes
+
+With the default ``bm = 128`` and the largest shipped config
+(b=2048, f=512, g=512) this is ~6.5 MiB — comfortably inside a TPU core's
+16 MiB VMEM, and both matmuls are (128, K) x (K, N) shapes that map onto
+the 128x128 MXU systolic array at full occupancy.  For batches where
+``b*f*4`` alone would overflow VMEM, ``gcn_layer_matmul`` K-tiles the
+contraction (2-D grid) at the cost of re-multiplying by ``W`` per K step;
+the AOT manifest picks the single-pass variant whenever it fits.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are lowered through the Pallas interpreter into
+plain HLO (while-loop over the grid + dynamic-slice).  Correctness is
+pinned against the pure-jnp oracle in ``ref.py`` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile. 128 matches the MXU systolic array edge; see module
+# docstring for the VMEM budget.
+DEFAULT_BM = 128
+
+
+def _gcn_layer_kernel(a_ref, x_ref, w_ref, o_ref, *, relu: bool):
+    """One row-stripe of relu?(A @ X @ W).
+
+    a_ref: (bm, b) stripe of the adjacency block.
+    x_ref: (b, f) full activation matrix.
+    w_ref: (f, g) weight matrix.
+    o_ref: (bm, g) output stripe.
+    """
+    # H = A_stripe @ X: (bm, b) @ (b, f) -> (bm, f). f32 accumulation on
+    # the MXU (preferred_element_type pins the accumulator dtype).
+    h = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    # Z = H @ W: (bm, f) @ (f, g) -> (bm, g).
+    z = jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm"))
+def gcn_layer(a, x, w, *, relu: bool = True, bm: int = DEFAULT_BM):
+    """Fused GCN layer ``relu?(a @ x @ w)`` as a row-tiled Pallas kernel.
+
+    Args:
+      a: (b, b) dense normalized adjacency block (rows padded with zeros
+         for inert padding nodes).
+      x: (b, f) activations.
+      w: (f, g) weights.
+      relu: apply the elementwise ReLU (hidden layers) or not (output).
+      bm: row-tile size; must divide b.
+    Returns:
+      (b, g) output activations.
+    """
+    b, b2 = a.shape
+    bx, f = x.shape
+    f2, g = w.shape
+    if b != b2 or b != bx or f != f2:
+        raise ValueError(f"shape mismatch: a={a.shape} x={x.shape} w={w.shape}")
+    if b % bm != 0:
+        raise ValueError(f"row tile {bm} must divide batch {b}")
+    grid = (b // bm,)
+    return pl.pallas_call(
+        functools.partial(_gcn_layer_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, b), lambda i: (i, 0)),  # A row stripe
+            pl.BlockSpec((b, f), lambda i: (0, 0)),   # X resident
+            pl.BlockSpec((f, g), lambda i: (0, 0)),   # W resident
+        ],
+        out_specs=pl.BlockSpec((bm, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g), jnp.float32),
+        interpret=True,
+    )(a, x, w)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, relu: bool):
+    z = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "relu"))
+def matmul(a, b, *, bm: int = DEFAULT_BM, relu: bool = False):
+    """Row-tiled Pallas matmul ``relu?(a @ b)`` used by the right-
+    associated layer variant and the custom-VJP backward pass
+    (dW = H^T dZ, dX = A^T dZ W^T are all plain matmuls)."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: a={a.shape} b={b.shape}")
+    tile = bm if m % bm == 0 else m
+    grid = (m // tile,)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def layer_flops(b: int, f: int, g: int) -> tuple:
+    """(left, right) MAC counts for Z = A@X@W: left = (A@X)@W costs
+    b²f + bfg; right = A@(X@W) costs bfg + b²g.  The §Perf association
+    pick: right wins iff g < f (e.g. wide-hidden → narrow-output
+    layers)."""
+    return (b * b * f + b * f * g, b * f * g + b * b * g)
+
+
+def _gcn_layer_ktiled_kernel(a_ref, x_ref, w_ref, o_ref, *, relu: bool, nk: int):
+    """K-tiled variant: 2-D grid (row tiles, K tiles) for batches whose
+    full X does not fit VMEM.  Accumulates (A_blk @ X_blk) @ W into the
+    output tile; W-multiply is distributed over the K sum (valid since W
+    is constant across the contraction)."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+
+    if relu:
+        @pl.when(k == nk - 1)
+        def _act():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bk"))
+def gcn_layer_ktiled(a, x, w, *, relu: bool = True,
+                     bm: int = DEFAULT_BM, bk: int = 512):
+    """K-tiled fused GCN layer for large b*f (see module docstring)."""
+    b, _ = a.shape
+    _, f = x.shape
+    _, g = w.shape
+    if b % bm != 0 or b % bk != 0:
+        raise ValueError(f"tiles ({bm},{bk}) must divide batch {b}")
+    nk = b // bk
+    grid = (b // bm, nk)
+    return pl.pallas_call(
+        functools.partial(_gcn_layer_ktiled_kernel, relu=relu, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+            pl.BlockSpec((f, g), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, g), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g), jnp.float32),
+        interpret=True,
+    )(a, x, w)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused layer: custom VJP so jax.grad works through the
+# Pallas kernels (pallas_call has no automatic transpose rule).  Both
+# forward and backward pick the cheaper matmul association per layer
+# (§Perf: right-association halves the output-layer cost when the
+# class count is far below the hidden width, as on PPI).
+# ---------------------------------------------------------------------------
+
+def _use_right(b: int, f: int, g: int) -> bool:
+    left, right = layer_flops(b, f, g)
+    return right < left
+
+
+def gcn_layer_auto(a, x, w, *, relu: bool = True):
+    """Non-differentiable fused layer with automatic association pick
+    (forward/eval artifacts)."""
+    b, f = x.shape
+    g = w.shape[1]
+    if _use_right(b, f, g):
+        return matmul(a, matmul(x, w), relu=relu)
+    return gcn_layer(a, x, w, relu=relu)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def gcn_layer_ad(a, x, w, relu: bool = True):
+    """Differentiable relu?(a @ x @ w); gradients flow to x and w only
+    (the adjacency block is data, not a parameter)."""
+    b, f = x.shape
+    g = w.shape[1]
+    if _use_right(b, f, g):
+        return matmul(a, matmul(x, w), relu=relu)
+    return gcn_layer(a, x, w, relu=relu)
+
+
+def _gcn_layer_fwd(a, x, w, relu):
+    b, f = x.shape
+    g = w.shape[1]
+    if _use_right(b, f, g):
+        xw = matmul(x, w)                    # (b, g), cheap
+        z = matmul(a, xw)                    # (b, g)
+        out = jnp.maximum(z, 0.0) if relu else z
+        return out, (a, x, w, out, True)
+    h = matmul(a, x)                         # cache A@X: reused by dW
+    z = matmul(h, w)
+    out = jnp.maximum(z, 0.0) if relu else z
+    return out, (a, h, w, out, False)
+
+
+def _gcn_layer_bwd(relu, res, g_out):
+    a, xh, w, out, right = res
+    dz = jnp.where(out > 0.0, g_out, 0.0) if relu else g_out
+    if right:
+        # Z = A @ (X @ W): share T = A^T dZ (b, g) between dW and dX
+        x = xh
+        t = matmul(a.T, dz)                  # (b, g)
+        dw = matmul(x.T, t)                  # (f, g)
+        dx = matmul(t, w.T)                  # (b, f)
+    else:
+        # Z = (A @ X) @ W with H = A @ X cached
+        h = xh
+        dw = matmul(h.T, dz)                 # (f, g)
+        dh = matmul(dz, w.T)                 # (b, f)
+        dx = matmul(a.T, dh)                 # (b, f); A^T since A not sym
+    return (jnp.zeros_like(a), dx, dw)
+
+
+gcn_layer_ad.defvjp(_gcn_layer_fwd, _gcn_layer_bwd)
+
+
+# Differentiable matmul (pallas_call lacks an automatic transpose rule);
+# backward is itself expressed with the pallas matmul.
+@jax.custom_vjp
+def matmul_ad(a, b):
+    return matmul(a, b)
+
+
+def _matmul_ad_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_ad_bwd(res, g):
+    a, b = res
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)
+
+
+def vmem_bytes(b: int, f: int, g: int, bm: int = DEFAULT_BM) -> int:
+    """Per-program VMEM working set of ``gcn_layer`` in bytes (see module
+    docstring); used by the AOT manifest to pick the kernel variant and by
+    DESIGN/EXPERIMENTS to report the TPU feasibility estimate."""
+    return 4 * (bm * b + b * f + f * g + bm * f + bm * g)
+
+
+def mxu_utilization_estimate(b: int, f: int, g: int, bm: int = DEFAULT_BM) -> float:
+    """Fraction of MXU-issue slots doing useful work, assuming 128x128x128
+    macro-ops: both matmuls have M=bm(=128 by default) and K,N multiples
+    of 128 in shipped configs, so the only waste is edge padding."""
+    def eff(m, k, n):
+        pad = lambda v: ((v + 127) // 128) * 128
+        return (m * k * n) / (pad(m) * pad(k) * pad(n))
+    flops_1 = b * b * f  # A@X per full batch
+    flops_2 = b * f * g
+    return (flops_1 * eff(bm, b, f) + flops_2 * eff(bm, f, g)) / (
+        flops_1 + flops_2
+    )

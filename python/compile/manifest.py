@@ -1,0 +1,92 @@
+"""The AOT artifact manifest: every (dataset preset x architecture)
+executable the rust coordinator may request.
+
+The dataset presets mirror ``rust/src/datagen/presets.rs`` — scaled-down
+synthetic stand-ins for the paper's datasets (DESIGN.md §4).  Shapes here
+are the *padded batch* shapes: ``b_max`` is the static batch size every
+cluster-batch is padded to, chosen as ~1.3x the expected multi-cluster
+batch size rounded up to the kernel tile (128).
+
+Keep this list in sync with the experiment index in DESIGN.md §5; adding
+an experiment usually means adding a line here and re-running
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from compile.model import ModelConfig
+
+# dataset presets: (task, f_in, classes, default hidden)
+PPI = dict(task="multilabel", f_in=64, classes=121)
+REDDIT = dict(task="multiclass", f_in=128, classes=41)
+AMAZON = dict(task="multilabel", f_in=64, classes=58)
+AMAZON2M = dict(task="multiclass", f_in=100, classes=47)
+CORA = dict(task="multiclass", f_in=128, classes=7)
+PUBMED = dict(task="multiclass", f_in=128, classes=3)
+
+
+def _cfgs() -> List[ModelConfig]:
+    out: List[ModelConfig] = []
+
+    def add(name, ds, layers, f_hid, b_max, kind="train", residual=False):
+        out.append(ModelConfig(
+            name=name, task=ds["task"], layers=layers, f_in=ds["f_in"],
+            f_hid=f_hid, classes=ds["classes"], b_max=b_max, kind=kind,
+            residual=residual,
+        ))
+
+    # --- Table 2: random-vs-clustering partitions (Cora/Pubmed/PPI) -----
+    add("cora_L2", CORA, 2, 128, 512)
+    add("pubmed_L2", PUBMED, 2, 128, 2560)
+
+    # --- PPI: Fig. 6, Tables 5/9/11, Fig. 5 ----------------------------
+    # depth sweep 2..8, hidden 512, single-cluster batches (50 parts).
+    for l in range(2, 9):
+        add(f"ppi_L{l}", PPI, l, 512, 512)
+    add("ppi_L2_fwd", PPI, 2, 512, 512, kind="forward")
+    add("ppi_L5_fwd", PPI, 5, 512, 512, kind="forward")
+    # VR-GCN baseline, depths 2..6 (Table 9).
+    for l in range(2, 7):
+        add(f"ppi_vrgcn_L{l}", PPI, l, 512, 512, kind="vrgcn")
+    # GraphSAGE baseline: neighborhood-union batches, 4x budget.
+    for l in (2, 3, 4):
+        add(f"ppi_sage_L{l}", PPI, l, 512, 2048)
+    # Table 10 SOTA: deep + wide.
+    add("ppi_sota_L5", PPI, 5, 1024, 512)
+
+    # --- Reddit: Figs. 2/4/6, Table 5 ----------------------------------
+    for l in (2, 3, 4):
+        add(f"reddit_L{l}", REDDIT, l, 128, 768)
+        add(f"reddit_h512_L{l}", REDDIT, l, 512, 768)   # Table 5 (512)
+        add(f"reddit_vrgcn_L{l}", REDDIT, l, 128, 768, kind="vrgcn")
+        add(f"reddit_sage_L{l}", REDDIT, l, 128, 1536)
+    add("reddit_small_L2", REDDIT, 2, 128, 256)          # Fig. 4 batches
+    add("reddit_L2_fwd", REDDIT, 2, 128, 768, kind="forward")
+
+    # --- Amazon: Fig. 6 ------------------------------------------------
+    for l in (2, 3, 4):
+        add(f"amazon_L{l}", AMAZON, l, 128, 384)
+        add(f"amazon_vrgcn_L{l}", AMAZON, l, 128, 384, kind="vrgcn")
+
+    # --- Amazon2M: Table 8 ---------------------------------------------
+    for l in (2, 3, 4):
+        add(f"amazon2m_L{l}", AMAZON2M, l, 400, 1792)
+    for l in (2, 3):
+        add(f"amazon2m_vrgcn_L{l}", AMAZON2M, l, 400, 1792, kind="vrgcn")
+    add("amazon2m_L3_fwd", AMAZON2M, 3, 400, 1792, kind="forward")
+
+    names = [c.name for c in out]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return out
+
+
+CONFIGS: List[ModelConfig] = _cfgs()
+
+
+def by_name(name: str) -> ModelConfig:
+    for c in CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(name)

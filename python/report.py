@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Render bench_results/*.jsonl into the EXPERIMENTS.md result tables.
+
+Build-time tooling only (like compile/): reads the JSONL rows the rust
+benches append and prints markdown, one section per experiment, so
+EXPERIMENTS.md stays mechanically derivable from recorded runs.
+
+Usage: python python/report.py [bench_results_dir]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import OrderedDict
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def md_table(headers, rows):
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def fmt(v, nd=3):
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def latest_by(rows, keys):
+    """Keep the last row per key tuple (benches append across runs)."""
+    seen = OrderedDict()
+    for r in rows:
+        seen[tuple(r.get(k) for k in keys)] = r
+    return list(seen.values())
+
+
+SECTIONS = [
+    ("table2", ["dataset"], ["dataset", "random_f1", "cluster_f1"]),
+    ("fig2", ["clusters"], ["clusters", "mean_entropy_clustering", "mean_entropy_random"]),
+    ("fig4", ["epoch"], ["epoch", "one_cluster_f1", "multi_cluster_f1"]),
+    ("table5", ["dataset", "hidden", "layers"],
+     ["dataset", "hidden", "layers", "vrgcn_mb", "cluster_mb", "sage_mb"]),
+    ("table6", ["hidden"], ["hidden", "dense_ms", "gather_ms"]),
+    ("fig6", ["dataset", "layers", "method", "epoch"],
+     ["dataset", "layers", "method", "epoch", "train_s", "val_f1"]),
+    ("table8", ["layers"],
+     ["layers", "vrgcn_s", "cluster_s", "vrgcn_mb", "cluster_mb",
+      "vrgcn_f1", "cluster_f1", "vrgcn_oom"]),
+    ("table9", ["layers"], ["layers", "cluster_s", "vrgcn_s"]),
+    ("table10", ["config"], ["config", "test_f1"]),
+    ("table11", ["variant", "layers"], ["variant", "layers", "best_val_f1"]),
+    ("fig5", ["variant", "epoch"], ["variant", "epoch", "val_f1"]),
+    ("table13", ["dataset"],
+     ["dataset", "partitions", "clustering_s", "preprocessing_s"]),
+    ("complexity", ["layers"],
+     ["layers", "cluster_per_target", "vanilla_per_target", "sage_per_target"]),
+    ("ablation_partitioner", ["partitioner"],
+     ["partitioner", "clustering_s", "within_fraction", "val_f1"]),
+    ("ablation_q", ["q"], ["q", "s_per_epoch", "val_f1"]),
+]
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "bench_results"
+    if not os.path.isdir(d):
+        print(f"no {d}/ — run `cargo bench` first", file=sys.stderr)
+        return 1
+    for name, keys, cols in SECTIONS:
+        path = os.path.join(d, f"{name}.jsonl")
+        if not os.path.exists(path):
+            continue
+        rows = latest_by(load(path), keys)
+        print(f"\n### {name}\n")
+        print(md_table(cols, [[fmt(r.get(c, "")) for c in cols] for r in rows]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,227 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (tile-aligned and ragged-in-f dims), value
+ranges, and the relu flag; every kernel must match `ref.py` to f32
+round-off.  This is the core correctness signal for the compute layer —
+the AOT artifacts embed exactly these kernels.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gcn_layer import (
+    gcn_layer,
+    gcn_layer_ad,
+    gcn_layer_ktiled,
+    matmul,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+import jax
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape smoke tests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [True, False])
+@pytest.mark.parametrize("b,f,g", [(128, 64, 32), (256, 128, 121), (512, 50, 16)])
+def test_gcn_layer_matches_ref(b, f, g, relu):
+    rng = np.random.default_rng(b + f + g)
+    a, x, w = rand(rng, b, b), rand(rng, b, f), rand(rng, f, g)
+    out = gcn_layer(a, x, w, relu=relu)
+    expect = ref.gcn_layer_ref(a, x, w, relu=relu)
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 64, 32), (100, 7, 13), (256, 256, 256)])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m + k)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=RTOL, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("bm,bk", [(128, 512), (256, 256), (128, 128)])
+def test_gcn_layer_ktiled_matches_single_pass(bm, bk):
+    rng = np.random.default_rng(bm)
+    b, f, g = 512, 64, 48
+    a, x, w = rand(rng, b, b), rand(rng, b, f), rand(rng, f, g)
+    out = gcn_layer_ktiled(a, x, w, relu=True, bm=bm, bk=bk)
+    expect = ref.gcn_layer_ref(a, x, w, relu=True)
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=1e-3)
+
+
+def test_shape_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        gcn_layer(rand(rng, 128, 128), rand(rng, 64, 8), rand(rng, 8, 4))
+    with pytest.raises(ValueError):
+        gcn_layer(rand(rng, 100, 100), rand(rng, 100, 8), rand(rng, 8, 4),
+                  bm=64)  # 64 does not divide 100
+    with pytest.raises(ValueError):
+        matmul(rand(rng, 8, 4), rand(rng, 5, 2))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+tile_dims = st.sampled_from([128, 256, 384])
+feat_dims = st.integers(min_value=1, max_value=96)
+scales = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=tile_dims, f=feat_dims, g=feat_dims, relu=st.booleans(),
+       scale=scales, seed=st.integers(0, 2**31 - 1))
+def test_gcn_layer_hypothesis(b, f, g, relu, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, b, b) * scale
+    x, w = rand(rng, b, f), rand(rng, f, g)
+    out = np.asarray(gcn_layer(a, x, w, relu=relu))
+    expect = np.asarray(ref.gcn_layer_ref(a, x, w, relu=relu))
+    tol = 1e-3 * max(scale, 1.0) * np.sqrt(b)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 64), n=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b)), a @ b, rtol=1e-4, atol=1e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([128, 256]), f=st.integers(2, 48),
+       g=st.integers(2, 48), seed=st.integers(0, 2**31 - 1))
+def test_padding_rows_inert(b, f, g, seed):
+    """Zero rows/cols of A (batch padding) must produce zero outputs and
+    not perturb real rows — the padding invariant batch assembly relies
+    on."""
+    rng = np.random.default_rng(seed)
+    n_real = b // 2
+    a = np.zeros((b, b), np.float32)
+    a[:n_real, :n_real] = rand(rng, n_real, n_real)
+    x = rand(rng, b, f)
+    w = rand(rng, f, g)
+    out = np.asarray(gcn_layer(a, x, w, relu=False))
+    # padded rows: A row is zero -> output row is zero
+    np.testing.assert_allclose(out[n_real:], 0.0, atol=1e-6)
+    # real rows match the unpadded computation
+    small = ref.gcn_layer_ref(a[:n_real, :n_real], x[:n_real], w, relu=False)
+    np.testing.assert_allclose(out[:n_real], small, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrapper
+# ---------------------------------------------------------------------------
+
+def test_layer_flops_association_pick():
+    from compile.kernels.gcn_layer import layer_flops
+
+    # wide hidden -> narrow output: right association must be cheaper
+    left, right = layer_flops(512, 512, 121)
+    assert right < left
+    # narrow -> wide: left cheaper
+    left, right = layer_flops(512, 64, 512)
+    assert left < right
+
+
+def test_gcn_layer_auto_matches_ref_both_associations():
+    from compile.kernels.gcn_layer import gcn_layer_auto
+
+    rng = np.random.default_rng(11)
+    for (b, f, g) in [(128, 96, 8), (128, 8, 96)]:  # right / left paths
+        a, x, w = rand(rng, b, b), rand(rng, b, f), rand(rng, f, g)
+        out = gcn_layer_auto(a, x, w, relu=True)
+        expect = ref.gcn_layer_ref(a, x, w, relu=True)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-3)
+
+
+def test_custom_vjp_right_association_grads():
+    """The right-associated VJP (wide f, narrow g) must match ref grads."""
+    rng = np.random.default_rng(12)
+    b, f, g = 128, 64, 4  # g << f -> right path
+    a, x, w = rand(rng, b, b) * 0.1, rand(rng, b, f), rand(rng, f, g)
+
+    def loss_kernel(x_, w_):
+        return jnp.sum(gcn_layer_ad(a, x_, w_, True) ** 2)
+
+    def loss_ref(x_, w_):
+        return jnp.sum(ref.gcn_layer_ref(a, x_, w_, relu=True) ** 2)
+
+    gx_k, gw_k = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_fused_relu():
+    rng = np.random.default_rng(13)
+    a, b = rand(rng, 64, 32), rand(rng, 32, 16)
+    np.testing.assert_allclose(
+        matmul(a, b, relu=True), np.maximum(a @ b, 0.0), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_custom_vjp_matches_jax_grad_of_ref():
+    rng = np.random.default_rng(7)
+    b, f, g = 128, 16, 8
+    a, x, w = rand(rng, b, b) * 0.1, rand(rng, b, f), rand(rng, f, g)
+
+    def loss_kernel(x_, w_):
+        return jnp.sum(gcn_layer_ad(a, x_, w_, True) ** 2)
+
+    def loss_ref(x_, w_):
+        return jnp.sum(ref.gcn_layer_ref(a, x_, w_, relu=True) ** 2)
+
+    gx_k, gw_k = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-3)
+
+
+def test_vjp_no_grad_to_adjacency():
+    rng = np.random.default_rng(8)
+    b, f, g = 128, 8, 4
+    a, x, w = rand(rng, b, b), rand(rng, b, f), rand(rng, f, g)
+    ga = jax.grad(lambda a_: jnp.sum(gcn_layer_ad(a_, x, w, True)))(a)
+    np.testing.assert_allclose(ga, 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# feasibility estimators
+# ---------------------------------------------------------------------------
+
+def test_vmem_estimate_within_tpu_budget_for_shipped_configs():
+    from compile.manifest import CONFIGS
+
+    for cfg in CONFIGS:
+        f = max(cfg.f_in, cfg.f_hid)
+        g = max(cfg.f_hid, cfg.classes)
+        vb = vmem_bytes(cfg.b_max, f, g)
+        assert vb < 16 * 2**20, f"{cfg.name}: VMEM estimate {vb} > 16MiB"
+
+
+def test_mxu_utilization_reasonable():
+    # fully tile-aligned: perfect
+    assert mxu_utilization_estimate(2048, 512, 512) == pytest.approx(1.0)
+    # ragged small dims waste MXU slots
+    assert mxu_utilization_estimate(256, 50, 121) < 1.0

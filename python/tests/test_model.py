@@ -1,0 +1,222 @@
+"""L2 correctness: model forward vs oracle, analytic vs numeric
+gradients, Adam semantics, the train_step contract (argument order,
+output order, loss behaviour), and the VR-GCN estimator."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def cfg_multiclass(layers=2, residual=False, kind="train"):
+    return model.ModelConfig(
+        name="t", task="multiclass", layers=layers, f_in=12, f_hid=24,
+        classes=5, b_max=128, residual=residual, kind=kind,
+    )
+
+
+def cfg_multilabel(layers=3):
+    return model.ModelConfig(
+        name="t", task="multilabel", layers=layers, f_in=10, f_hid=16,
+        classes=7, b_max=128,
+    )
+
+
+def make_batch(cfg, rng, n_real=100):
+    b = cfg.b_max
+    a = np.zeros((b, b), np.float32)
+    block = rng.random((n_real, n_real)).astype(np.float32)
+    block = (block < 0.05).astype(np.float32)
+    # row-normalize with self loops
+    np.fill_diagonal(block, 1.0)
+    block /= block.sum(1, keepdims=True)
+    a[:n_real, :n_real] = block
+    x = rng.standard_normal((b, cfg.f_in)).astype(np.float32)
+    y = np.zeros((b, cfg.classes), np.float32)
+    if cfg.task == "multiclass":
+        idx = rng.integers(0, cfg.classes, n_real)
+        y[np.arange(n_real), idx] = 1.0
+    else:
+        y[:n_real] = (rng.random((n_real, cfg.classes)) < 0.3).astype(np.float32)
+    mask = np.zeros((b,), np.float32)
+    mask[:n_real] = 1.0
+    return a, x, y, mask
+
+
+def test_forward_matches_ref():
+    cfg = cfg_multiclass(layers=3)
+    rng = np.random.default_rng(0)
+    a, x, _, _ = make_batch(cfg, rng)
+    ws = model.init_weights(cfg, seed=1)
+    out = model.forward(cfg, ws, a, x)
+    expect = ref.gcn_forward_ref(a, x, ws)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-3)
+
+
+def test_forward_residual_differs_and_matches_ref():
+    cfg = cfg_multiclass(layers=3, residual=True)
+    rng = np.random.default_rng(1)
+    a, x, _, _ = make_batch(cfg, rng)
+    ws = model.init_weights(cfg, seed=2)
+    out_res = model.forward(cfg, ws, a, x)
+    expect = ref.gcn_forward_ref(a, x, ws, residual=True)
+    np.testing.assert_allclose(out_res, expect, rtol=1e-4, atol=1e-3)
+    plain = ref.gcn_forward_ref(a, x, ws, residual=False)
+    assert not np.allclose(out_res, plain)
+
+
+@pytest.mark.parametrize("task", ["multiclass", "multilabel"])
+def test_loss_matches_ref(task):
+    cfg = cfg_multiclass() if task == "multiclass" else cfg_multilabel()
+    rng = np.random.default_rng(3)
+    _, _, y, mask = make_batch(cfg, rng)
+    logits = rng.standard_normal((cfg.b_max, cfg.classes)).astype(np.float32)
+    got = model.masked_loss(cfg, logits, y, mask)
+    if task == "multiclass":
+        expect = ref.softmax_xent_ref(logits, y, mask)
+    else:
+        expect = ref.sigmoid_bce_ref(logits, y, mask)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_loss_ignores_padding():
+    cfg = cfg_multiclass()
+    rng = np.random.default_rng(4)
+    _, _, y, mask = make_batch(cfg, rng, n_real=50)
+    logits = rng.standard_normal((cfg.b_max, cfg.classes)).astype(np.float32)
+    base = model.masked_loss(cfg, logits, y, mask)
+    # perturb only masked-out rows: loss must not change
+    logits2 = logits.copy()
+    logits2[50:] += 100.0
+    np.testing.assert_allclose(
+        base, model.masked_loss(cfg, logits2, y, mask), rtol=1e-6
+    )
+
+
+def test_grads_match_finite_difference():
+    cfg = cfg_multiclass(layers=2)
+    rng = np.random.default_rng(5)
+    a, x, y, mask = make_batch(cfg, rng, n_real=64)
+    ws = model.init_weights(cfg, seed=3)
+
+    def loss_fn(ws_):
+        logits = model.forward(cfg, ws_, a, x, differentiable=True)
+        return model.masked_loss(cfg, logits, y, mask)
+
+    grads = jax.grad(loss_fn)(ws)
+    # central differences on a few random entries of each weight
+    eps = 1e-2
+    check_rng = np.random.default_rng(6)
+    for li, w in enumerate(ws):
+        for _ in range(3):
+            i = check_rng.integers(0, w.shape[0])
+            j = check_rng.integers(0, w.shape[1])
+            wp = [w_.copy() for w_ in ws]
+            wm = [w_.copy() for w_ in ws]
+            wp[li] = wp[li].at[i, j].add(eps)
+            wm[li] = wm[li].at[i, j].add(-eps)
+            fd = (loss_fn(wp) - loss_fn(wm)) / (2 * eps)
+            an = grads[li][i, j]
+            assert abs(fd - an) < 5e-3 + 0.05 * abs(fd), (
+                f"layer {li} ({i},{j}): fd={fd} analytic={an}"
+            )
+
+
+def test_adam_update_semantics():
+    w = jnp.ones((4,))
+    g = jnp.full((4,), 0.5)
+    m = jnp.zeros((4,))
+    v = jnp.zeros((4,))
+    w2, m2, v2 = model.adam_update(w, g, m, v, step=1.0, lr=0.1)
+    # step 1 with zero state: mhat = g, vhat = g^2 -> w -= lr * sign(g)
+    np.testing.assert_allclose(w2, 1.0 - 0.1 * (0.5 / (0.5 + model.ADAM_EPS)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(m2, 0.1 * 0.5, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.001 * 0.25, rtol=1e-5)
+
+
+def test_train_step_contract_and_learning():
+    cfg = cfg_multiclass(layers=2)
+    rng = np.random.default_rng(7)
+    a, x, y, mask = make_batch(cfg, rng)
+    ws = model.init_weights(cfg, seed=4)
+    ms = [jnp.zeros_like(w) for w in ws]
+    vs = [jnp.zeros_like(w) for w in ws]
+    fn = jax.jit(model.build_fn(cfg))
+
+    losses = []
+    step = 1.0
+    for _ in range(40):
+        out = fn(*ws, *ms, *vs, jnp.float32(step), jnp.float32(0.01),
+                 a, x, y, mask)
+        L = cfg.layers
+        assert len(out) == 3 * L + 1
+        ws, ms, vs = list(out[:L]), list(out[L:2 * L]), list(out[2 * L:3 * L])
+        losses.append(float(out[-1]))
+        step += 1.0
+    assert losses[-1] < losses[0] * 0.9, f"no learning: {losses[0]} -> {losses[-1]}"
+    for w, spec in zip(ws, cfg.weight_shapes()):
+        assert w.shape == spec
+
+
+def test_vrgcn_step_contract():
+    cfg = model.ModelConfig(
+        name="v", task="multiclass", layers=2, f_in=12, f_hid=24,
+        classes=5, b_max=128, kind="vrgcn",
+    )
+    rng = np.random.default_rng(8)
+    a, x, y, mask = make_batch(cfg, rng)
+    ws = model.init_weights(cfg, seed=5)
+    ms = [jnp.zeros_like(w) for w in ws]
+    vs = [jnp.zeros_like(w) for w in ws]
+    hcs = [np.zeros((cfg.b_max, d), np.float32) for d in cfg.layer_in_dims()]
+    fn = jax.jit(model.build_fn(cfg))
+    out = fn(*ws, *ms, *vs, jnp.float32(1.0), jnp.float32(0.01),
+             a, *hcs, x, y, mask)
+    L = cfg.layers
+    assert len(out) == 3 * L + 1 + (L - 1)
+    hidden = out[-1]
+    assert hidden.shape == (cfg.b_max, cfg.f_hid)
+    # with zero Hc, vrgcn forward == plain forward; hidden = relu(A x W0)
+    expect_h = np.maximum((a @ x) @ np.asarray(ws[0]), 0.0)
+    np.testing.assert_allclose(hidden, expect_h, rtol=1e-4, atol=1e-3)
+
+
+def test_vrgcn_history_contribution_shifts_forward():
+    cfg = model.ModelConfig(
+        name="v", task="multiclass", layers=2, f_in=12, f_hid=24,
+        classes=5, b_max=128, kind="vrgcn",
+    )
+    rng = np.random.default_rng(9)
+    a, x, _, _ = make_batch(cfg, rng)
+    ws = model.init_weights(cfg, seed=6)
+    hcs0 = [np.zeros((cfg.b_max, d), np.float32) for d in cfg.layer_in_dims()]
+    hcs1 = [np.full((cfg.b_max, d), 0.5, np.float32) for d in cfg.layer_in_dims()]
+    out0, _ = model.vrgcn_forward(cfg, ws, a, hcs0, x)
+    out1, _ = model.vrgcn_forward(cfg, ws, a, hcs1, x)
+    assert not np.allclose(out0, out1), "history term had no effect"
+
+
+def test_example_args_shapes_cover_all_kinds():
+    for kind, extra in [("train", 0), ("forward", 0), ("vrgcn", 0)]:
+        cfg = cfg_multiclass(kind=kind)
+        specs = model.example_args(cfg)
+        if kind == "train":
+            assert len(specs) == 3 * cfg.layers + 2 + 4
+        elif kind == "forward":
+            assert len(specs) == cfg.layers + 2
+        else:
+            assert len(specs) == 3 * cfg.layers + 2 + 1 + cfg.layers + 3
+        assert all(s.dtype == jnp.float32 for s in specs)
+
+
+def test_init_weights_glorot_bounds():
+    cfg = cfg_multiclass(layers=3)
+    ws = model.init_weights(cfg, seed=0)
+    for w, (fi, fo) in zip(ws, cfg.weight_shapes()):
+        bound = (6.0 / (fi + fo)) ** 0.5
+        assert np.abs(np.asarray(w)).max() <= bound + 1e-6
+        assert np.asarray(w).std() > 0.1 * bound

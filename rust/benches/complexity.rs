@@ -1,0 +1,73 @@
+//! Table 1 (empirical): embedding-utilization and embedding-computation
+//! counters per training algorithm, measured on real batches.
+//!
+//! Cluster-GCN computes O(b·L) embeddings per batch with high
+//! within-batch edge counts (utilization); vanilla SGD's full expansion
+//! and GraphSAGE's sampled expansion compute far more embeddings per
+//! *target* node, growing with depth.
+
+use cluster_gcn::baselines::expansion::{expand, target_batches};
+use cluster_gcn::baselines::graphsage::{sample_field, SageParams};
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::graph::{within_edges, SubgraphScratch};
+use cluster_gcn::util::{Json, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let seed = bs::env_seed();
+    let ds = bs::dataset("ppi_like")?;
+    let p = bs::preset_of(&ds);
+    let mut rng = Rng::new(seed);
+    let mut scratch = SubgraphScratch::new(ds.n());
+
+    println!("== Table 1 (empirical): embeddings computed per target node ==");
+    let mut table = bs::Table::new(&[
+        "L", "cluster", "vanilla-SGD", "graphsage", "cluster util(edges/node)",
+    ]);
+
+    // cluster batches: one partition per batch (paper PPI setting)
+    let sampler = bs::cluster_sampler(&ds, p.default_partitions, p.default_q, seed);
+    let plan = sampler.epoch_plan(&mut rng);
+    let mut nodes = Vec::new();
+    sampler.batch_nodes(&plan[0], &mut nodes);
+    let cluster_batch = nodes.len();
+    let cluster_edges = within_edges(&ds.graph, &nodes, &mut scratch);
+
+    let train_nodes = ds.nodes_in_split(cluster_gcn::graph::Split::Train);
+    for layers in [2usize, 3, 4, 5] {
+        // cluster-GCN: every batch node embedded at every layer; batch
+        // IS the target set
+        let cluster_per_target = layers as f64;
+
+        // vanilla SGD: full L-hop expansion per batch of 64 targets
+        let batches = target_batches(&train_nodes, 64, &mut rng);
+        let e = expand(&ds.graph, &batches[0], layers, ds.n());
+        let vanilla_per_target =
+            (e.nodes.len() * layers) as f64 / batches[0].len() as f64;
+
+        // graphsage: sampled expansion
+        let params = SageParams::for_depth(layers, 64);
+        let f = sample_field(&ds, &batches[0], &params, ds.n(), &mut rng);
+        let sage_per_target =
+            (f.nodes.len() * layers) as f64 / batches[0].len() as f64;
+
+        table.row(&[
+            layers.to_string(),
+            format!("{cluster_per_target:.1}"),
+            format!("{vanilla_per_target:.1}"),
+            format!("{sage_per_target:.1}"),
+            format!("{:.1}", cluster_edges as f64 / cluster_batch as f64),
+        ]);
+        bs::dump_row(
+            "complexity",
+            Json::obj(vec![
+                ("layers", Json::num(layers as f64)),
+                ("cluster_per_target", Json::num(cluster_per_target)),
+                ("vanilla_per_target", Json::num(vanilla_per_target)),
+                ("sage_per_target", Json::num(sage_per_target)),
+            ]),
+        );
+    }
+    table.print();
+    println!("(Table 1: cluster O(L) per node; SGD methods grow with depth)");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Figure 4: one cluster per batch (300 partitions) vs multiple
+//! clusters per batch (1500 partitions, sample 5) — epoch vs val F1.
+//!
+//! Paper: the stochastic multiple-partitions scheme converges better
+//! because between-cluster links return and batch variance drops.
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let epochs = bs::env_usize("CGCN_EPOCHS", 12);
+    let seed = bs::env_seed();
+    let ds = bs::dataset("reddit_like")?;
+    let mut engine = bs::engine()?;
+
+    println!("== Figure 4: one cluster vs multiple clusters (reddit_like) ==");
+    let mut curves = Vec::new();
+    for (label, parts, q) in [("1 cluster (300)", 300, 1), ("5 clusters (1500)", 1500, 5)] {
+        let sampler = bs::cluster_sampler(&ds, parts, q, seed);
+        let opts = TrainOptions {
+            epochs,
+            eval_every: 2,
+            seed,
+            ..TrainOptions::default()
+        };
+        let r = train(&mut engine, &ds, &sampler, "reddit_small_L2", &opts)?;
+        curves.push((label, r.curve));
+    }
+
+    let mut table = bs::Table::new(&["epoch", curves[0].0, curves[1].0]);
+    let n = curves[0].1.len().min(curves[1].1.len());
+    for i in 0..n {
+        table.row(&[
+            curves[0].1[i].epoch.to_string(),
+            bs::fmt_f1(curves[0].1[i].eval_f1),
+            bs::fmt_f1(curves[1].1[i].eval_f1),
+        ]);
+        bs::dump_row(
+            "fig4",
+            Json::obj(vec![
+                ("epoch", Json::num(curves[0].1[i].epoch as f64)),
+                ("one_cluster_f1", Json::num(curves[0].1[i].eval_f1)),
+                ("multi_cluster_f1", Json::num(curves[1].1[i].eval_f1)),
+            ]),
+        );
+    }
+    table.print();
+    println!("(paper: multiple clusters per batch converge better)");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figure 6: training time (x) vs validation F1 (y) for Cluster-GCN,
+//! VR-GCN and GraphSAGE across PPI / Reddit / Amazon at 2/3/4 layers.
+//!
+//! Paper: Cluster-GCN fastest on PPI and Reddit at every depth;
+//! GraphSAGE slowest (it only appears on PPI/Reddit); on Amazon (no
+//! sage) VRGCN and Cluster-GCN trade places by depth.  We reproduce the
+//! per-depth time-to-F1 curves; epochs default small for CPU budget
+//! (CGCN_EPOCHS raises them).
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let epochs = bs::env_usize("CGCN_EPOCHS", 4);
+    let sage_epochs = bs::env_usize("CGCN_SAGE_EPOCHS", 1);
+    let seed = bs::env_seed();
+    let mut engine = bs::engine()?;
+
+    println!("== Figure 6: training time vs val F1 ==");
+    for preset in ["ppi_like", "reddit_like", "amazon_like"] {
+        let ds = bs::dataset(preset)?;
+        for layers in [2usize, 3, 4] {
+            println!("\n--- {preset}, {layers}-layer ---");
+            let mut table =
+                bs::Table::new(&["method", "epoch", "train_s", "val_f1"]);
+            for method in ["cluster", "vrgcn", "graphsage"] {
+                // paper: GraphSAGE curves only for PPI and Reddit
+                if method == "graphsage" && preset == "amazon_like" {
+                    continue;
+                }
+                let e = if method == "graphsage" { sage_epochs } else { epochs };
+                let opts = TrainOptions {
+                    epochs: e,
+                    eval_every: (e / 3).max(1),
+                    seed,
+                    ..TrainOptions::default()
+                };
+                match bs::run_method(&mut engine, &ds, method, layers, &opts) {
+                    Ok(r) => {
+                        for pt in &r.curve {
+                            table.row(&[
+                                method.to_string(),
+                                pt.epoch.to_string(),
+                                bs::fmt_s(pt.train_seconds),
+                                bs::fmt_f1(pt.eval_f1),
+                            ]);
+                            bs::dump_row(
+                                "fig6",
+                                Json::obj(vec![
+                                    ("dataset", Json::str(preset)),
+                                    ("layers", Json::num(layers as f64)),
+                                    ("method", Json::str(method)),
+                                    ("epoch", Json::num(pt.epoch as f64)),
+                                    ("train_s", Json::num(pt.train_seconds)),
+                                    ("val_f1", Json::num(pt.eval_f1)),
+                                ]),
+                            );
+                        }
+                    }
+                    Err(e) => println!("  {method}: skipped ({e})"),
+                }
+                // XLA CPU retains big buffers per executable; evict
+                // between configurations to bound RSS
+                engine.clear_cache();
+            }
+            table.print();
+        }
+    }
+    println!("\n(paper: Cluster-GCN reaches a given F1 fastest on PPI/Reddit)");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Table 2: random partition vs clustering partition, trained with
+//! mini-batch SGD (one partition per batch), same epoch budget.
+//!
+//! Paper: Cora 78.4 vs 82.5, Pubmed 78.9 vs 79.9, PPI 68.1 vs 92.9 —
+//! clustering wins everywhere, dramatically on PPI.  We reproduce the
+//! *shape* (clustering >= random, largest gap on the ppi-like
+//! multilabel data) on the synthetic stand-ins.
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::graph::Split;
+use cluster_gcn::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let epochs = bs::env_usize("CGCN_EPOCHS", 15);
+    let seed = bs::env_seed();
+    let mut engine = bs::engine()?;
+
+    println!("== Table 2: random vs clustering partition (test F1) ==");
+    let mut table = bs::Table::new(&["dataset", "random", "clustering"]);
+
+    for (preset, artifact, parts) in [
+        ("cora_like", "cora_L2", 10),
+        ("pubmed_like", "pubmed_L2", 10),
+        ("ppi_like", "ppi_L2", 50),
+        // weak-feature PPI: the paper's real PPI has features that are
+        // individually uninformative (motif/positional), so learning
+        // *requires* neighbor aggregation — that regime is where the
+        // random-partition gap blows up (paper: 68.1 vs 92.9). Our
+        // default synthetic features are stronger; this row rebuilds the
+        // dataset with 4x feature noise to match the paper's regime.
+        ("ppi_weak", "ppi_L2", 50),
+    ] {
+        let ds = if preset == "ppi_weak" {
+            let mut p = cluster_gcn::datagen::preset("ppi_like").unwrap().clone();
+            p.feat_noise = 4.0;
+            p.label_noise = 0.02;
+            cluster_gcn::datagen::build(&p, seed)
+        } else {
+            bs::dataset(preset)?
+        };
+        let opts = TrainOptions {
+            epochs,
+            eval_every: 0, // final eval only
+            seed,
+            eval_split: Split::Test,
+            ..TrainOptions::default()
+        };
+        let mut f1 = [0.0f64; 2];
+        for (i, random) in [(0usize, false), (1usize, true)] {
+            let sampler = if random {
+                bs::random_sampler(&ds, parts, 1, seed)
+            } else {
+                bs::cluster_sampler(&ds, parts, 1, seed)
+            };
+            let r = train(&mut engine, &ds, &sampler, artifact, &opts)?;
+            f1[i] = r.curve.last().unwrap().eval_f1;
+        }
+        table.row(&[
+            preset.to_string(),
+            bs::fmt_f1(f1[1]),
+            bs::fmt_f1(f1[0]),
+        ]);
+        bs::dump_row(
+            "table2",
+            Json::obj(vec![
+                ("dataset", Json::str(preset)),
+                ("random_f1", Json::num(f1[1])),
+                ("cluster_f1", Json::num(f1[0])),
+                ("epochs", Json::num(epochs as f64)),
+            ]),
+        );
+    }
+    table.print();
+    println!("(paper: clustering beats random; largest gap on PPI)");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Table 5: training-memory comparison across methods × depths ×
+//! hidden sizes (paper: VRGCN/Cluster-GCN/GraphSAGE on PPI-512,
+//! Reddit-128, Reddit-512, Amazon-128).
+//!
+//! We report both the *measured* peak bytes of live runs (batch tensors
+//! + params/optimizer + method-private state like the VR-GCN history)
+//! and the analytic Table-1 models from `coordinator::memory`.
+//! Expected shape: Cluster-GCN flat in depth; VRGCN grows with L and
+//! dominates at hidden 512; GraphSAGE in between.
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::memory::{
+    cluster_gcn_bytes, graphsage_bytes, vrgcn_bytes, Dims,
+};
+use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let epochs = bs::env_usize("CGCN_EPOCHS", 1);
+    let seed = bs::env_seed();
+    let mut engine = bs::engine()?;
+
+    println!("== Table 5: memory usage (MB), measured + [analytic] ==");
+    let mut table = bs::Table::new(&[
+        "dataset(hid)", "L", "vrgcn", "cluster", "sage",
+    ]);
+
+    // (preset, hidden, artifact prefix remap for the 512-hidden reddit)
+    let rows: Vec<(&str, usize, Option<&str>)> = vec![
+        ("ppi_like", 512, None),
+        ("reddit_like", 128, None),
+        ("reddit_like", 512, Some("reddit_h512")),
+        ("amazon_like", 128, None),
+    ];
+
+    for (preset_name, hidden, cluster_override) in rows {
+        let ds = bs::dataset(preset_name)?;
+        let p = bs::preset_of(&ds);
+        for layers in [2usize, 3, 4] {
+            let opts = TrainOptions {
+                epochs,
+                eval_every: 0,
+                seed,
+                // a few steps reach peak state; no need for a full pass
+                max_steps_per_epoch: bs::env_usize("CGCN_MEM_STEPS", 3),
+                ..TrainOptions::default()
+            };
+            // measured runs --------------------------------------------
+            let measure = |engine: &mut cluster_gcn::runtime::Engine,
+                           method: &str|
+             -> Option<usize> {
+                let short = preset_name.trim_end_matches("_like");
+                let artifact = match (method, cluster_override) {
+                    ("cluster", Some(o)) => format!("{o}_L{layers}"),
+                    ("cluster", None) => format!("{short}_L{layers}"),
+                    ("graphsage", _) => format!("{short}_sage_L{layers}"),
+                    ("vrgcn", _) => format!("{short}_vrgcn_L{layers}"),
+                    _ => unreachable!(),
+                };
+                if engine.meta(&artifact).is_err() {
+                    return None; // combination not shipped (like paper's N/A)
+                }
+                let r = match method {
+                    "cluster" => {
+                        let sampler = bs::cluster_sampler(
+                            &ds,
+                            p.default_partitions,
+                            p.default_q,
+                            seed,
+                        );
+                        cluster_gcn::coordinator::train(engine, &ds, &sampler, &artifact, &opts)
+                    }
+                    "graphsage" => cluster_gcn::baselines::train_graphsage(
+                        engine,
+                        &ds,
+                        &artifact,
+                        &cluster_gcn::baselines::SageParams::for_depth(layers, 256),
+                        &opts,
+                    ),
+                    "vrgcn" => cluster_gcn::baselines::train_vrgcn(
+                        engine,
+                        &ds,
+                        &artifact,
+                        &cluster_gcn::baselines::VrgcnParams::default(),
+                        &opts,
+                    ),
+                    _ => unreachable!(),
+                };
+                r.ok().map(|r| r.peak_bytes)
+            };
+            let m_vr = measure(&mut engine, "vrgcn");
+            let m_cl = measure(&mut engine, "cluster");
+            let m_sg = measure(&mut engine, "graphsage");
+            engine.clear_cache(); // bound RSS across the grid
+
+            // analytic models -------------------------------------------
+            let dims = Dims {
+                n: ds.n(),
+                f_in: ds.f_in,
+                f_hid: hidden,
+                classes: ds.num_classes,
+                layers,
+                b: p.b_max,
+                r: 2,
+                d: ds.graph.nnz() as f64 / ds.n() as f64,
+            };
+            let fmt = |m: Option<usize>, analytic: usize| match m {
+                Some(b) => format!("{} [{}]", bs::fmt_mb(b), bs::fmt_mb(analytic)),
+                None => format!("N/A [{}]", bs::fmt_mb(analytic)),
+            };
+            table.row(&[
+                format!("{preset_name}({hidden})"),
+                layers.to_string(),
+                fmt(m_vr, vrgcn_bytes(&dims)),
+                fmt(m_cl, cluster_gcn_bytes(&dims)),
+                fmt(m_sg, graphsage_bytes(&dims)),
+            ]);
+            bs::dump_row(
+                "table5",
+                Json::obj(vec![
+                    ("dataset", Json::str(preset_name)),
+                    ("hidden", Json::num(hidden as f64)),
+                    ("layers", Json::num(layers as f64)),
+                    ("vrgcn_mb", Json::num(m_vr.unwrap_or(0) as f64 / 1e6)),
+                    ("cluster_mb", Json::num(m_cl.unwrap_or(0) as f64 / 1e6)),
+                    ("sage_mb", Json::num(m_sg.unwrap_or(0) as f64 / 1e6)),
+                ]),
+            );
+        }
+    }
+    table.print();
+    println!("(paper: Cluster-GCN flat in depth; VRGCN grows and dominates)");
+    Ok(())
+}

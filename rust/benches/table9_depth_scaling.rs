@@ -1,0 +1,66 @@
+//! Table 9: running time vs depth (PPI, fixed epoch budget):
+//! Cluster-GCN grows linearly with L, VR-GCN super-linearly (its
+//! receptive field explodes, so deeper nets need smaller target batches
+//! and more steps).
+//!
+//! Paper (200 epochs): cluster 52.9/82.5/109.4/137.8/157.3s for L=2..6;
+//! vrgcn 103.6/229/521.2/1054/1956s.  We run a scaled epoch budget and
+//! check the growth *shapes* (cluster ~linear, vrgcn ~exponential).
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::util::Json;
+
+fn main() -> anyhow::Result<()> {
+    let epochs = bs::env_usize("CGCN_EPOCHS", 2);
+    // depth cap: the 6-layer VR-GCN artifact's XLA compile needs tens of
+    // GB of host RAM (deep interpret-mode loops); default to 5 on
+    // smaller machines and raise via CGCN_MAX_LAYERS where it fits.
+    let max_layers = bs::env_usize("CGCN_MAX_LAYERS", 5);
+    let seed = bs::env_seed();
+    let mut engine = bs::engine()?;
+    let ds = bs::dataset("ppi_like")?;
+
+    println!("== Table 9: runtime vs depth (ppi_like, {epochs} epochs) ==");
+    let mut table = bs::Table::new(&["layers", "cluster s", "vrgcn s", "ratio"]);
+    let mut cluster_times = Vec::new();
+    let mut vrgcn_times = Vec::new();
+
+    for layers in 2..=max_layers {
+        let opts = TrainOptions {
+            epochs,
+            eval_every: 0,
+            seed,
+            ..TrainOptions::default()
+        };
+        let c = bs::run_method(&mut engine, &ds, "cluster", layers, &opts)?;
+        let v = bs::run_method(&mut engine, &ds, "vrgcn", layers, &opts)?;
+        cluster_times.push(c.train_seconds);
+        vrgcn_times.push(v.train_seconds);
+        engine.clear_cache(); // bound RSS across deep compiles
+        table.row(&[
+            layers.to_string(),
+            bs::fmt_s(c.train_seconds),
+            bs::fmt_s(v.train_seconds),
+            format!("{:.2}", v.train_seconds / c.train_seconds),
+        ]);
+        bs::dump_row(
+            "table9",
+            Json::obj(vec![
+                ("layers", Json::num(layers as f64)),
+                ("cluster_s", Json::num(c.train_seconds)),
+                ("vrgcn_s", Json::num(v.train_seconds)),
+                ("epochs", Json::num(epochs as f64)),
+            ]),
+        );
+    }
+    table.print();
+
+    // shape checks: cluster growth with depth should be mild (~linear
+    // in L); vrgcn growth should clearly outpace cluster's.
+    let cg = cluster_times.last().unwrap() / cluster_times.first().unwrap();
+    let vg = vrgcn_times.last().unwrap() / vrgcn_times.first().unwrap();
+    println!("growth L2->L{max_layers}: cluster {cg:.2}x, vrgcn {vg:.2}x");
+    println!("(paper: cluster ~3x over L2..6, vrgcn ~19x)");
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Vanilla mini-batch SGD with exact neighborhood expansion (§3 of the
+//! paper: the method whose per-epoch cost is O(d^L) per node).  A batch
+//! is a random set of target training nodes plus their full L-hop
+//! neighborhood; only targets contribute to the loss.
+//!
+//! The exploding receptive field is the point: `expand` reports the
+//! per-hop frontier sizes (the embedding-computation counters behind
+//! Table 1 / Table 9), and the batch only fits the executable's `b_max`
+//! for shallow networks or tiny targets — exactly the paper's argument.
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+/// Result of an L-hop expansion from `targets`.
+pub struct Expansion {
+    /// union of targets + all hops, in discovery order (targets first).
+    pub nodes: Vec<u32>,
+    /// cumulative union size after each hop (index 0 = |targets|).
+    pub frontier_sizes: Vec<usize>,
+    /// true if the expansion was truncated by the cap.
+    pub truncated: bool,
+}
+
+/// Expand `hops` levels of full neighborhoods, capping the union at
+/// `cap` nodes (discovery order keeps the cap deterministic).
+pub fn expand(g: &Csr, targets: &[u32], hops: usize, cap: usize) -> Expansion {
+    let mut in_set = vec![false; g.n()];
+    let mut nodes: Vec<u32> = Vec::with_capacity(targets.len() * 4);
+    for &t in targets {
+        if !in_set[t as usize] {
+            in_set[t as usize] = true;
+            nodes.push(t);
+        }
+    }
+    let mut frontier_sizes = vec![nodes.len()];
+    let mut truncated = false;
+    let mut frontier: Vec<u32> = nodes.clone();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        'hop: for &v in &frontier {
+            for &u in g.neighbors(v as usize) {
+                if !in_set[u as usize] {
+                    if nodes.len() >= cap {
+                        truncated = true;
+                        break 'hop;
+                    }
+                    in_set[u as usize] = true;
+                    nodes.push(u);
+                    next.push(u);
+                }
+            }
+        }
+        frontier_sizes.push(nodes.len());
+        if truncated {
+            break;
+        }
+        frontier = next;
+    }
+    Expansion { nodes, frontier_sizes, truncated }
+}
+
+/// Random target batches over the training nodes: one epoch = shuffled
+/// training nodes sliced into chunks of `batch`.
+pub fn target_batches(train_nodes: &[u32], batch: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut order = train_nodes.to_vec();
+    rng.shuffle(&mut order);
+    order.chunks(batch).map(|c| c.to_vec()).collect()
+}
+
+/// Embedding computations per batch in our dense-block realization:
+/// every batch node gets an embedding at every layer.
+pub fn embeddings_computed(union: usize, layers: usize) -> usize {
+    union * layers
+}
+
+/// Train with vanilla neighborhood-expansion SGD through a plain
+/// `train`-kind artifact.  Targets per batch are sized so the full
+/// L-hop expansion usually fits `b_max`; overflowing unions are capped
+/// (and counted), which *underestimates* vanilla SGD's true cost —
+/// i.e. the comparison is conservative in the baseline's favor.
+pub fn train_expansion(
+    engine: &mut crate::runtime::Engine,
+    ds: &crate::graph::Dataset,
+    artifact: &str,
+    targets_per_batch: usize,
+    opts: &crate::coordinator::trainer::TrainOptions,
+) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
+    use crate::coordinator::trainer::{evaluate, step, CurvePoint, TrainResult, TrainState};
+    use crate::coordinator::batch::BatchAssembler;
+    use crate::graph::Split;
+    use crate::util::Timer;
+
+    let meta = engine.meta(artifact)?;
+    engine.ensure_compiled(artifact)?;
+    let mut state = TrainState::init(&meta, opts.seed);
+    let mut rng = Rng::new(opts.seed ^ 0xE0A5_1011_2233_4455);
+    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let train_nodes = ds.nodes_in_split(Split::Train);
+    let eval_nodes = ds.nodes_in_split(opts.eval_split);
+
+    let mut curve = Vec::new();
+    let mut train_seconds = 0.0;
+    let mut steps_done = 0u64;
+    let mut peak_bytes = 0usize;
+    let mut truncated_batches = 0u64;
+
+    for epoch in 1..=opts.epochs {
+        let timer = Timer::start();
+        let batches = target_batches(&train_nodes, targets_per_batch, &mut rng);
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        for targets in &batches {
+            if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
+                break;
+            }
+            let exp = expand(&ds.graph, targets, meta.layers, meta.b_max);
+            if exp.truncated {
+                truncated_batches += 1;
+            }
+            let mut batch = assembler.assemble(ds, &exp.nodes);
+            // loss only on the targets (first in local order)
+            batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
+            for i in 0..targets.len().min(exp.nodes.len()) {
+                batch.mask.data[i] = 1.0;
+            }
+            peak_bytes = peak_bytes.max(
+                batch.bytes()
+                    + state.param_bytes()
+                    + exp.nodes.len() * meta.f_hid * 4 * meta.layers,
+            );
+            let loss = step(engine, artifact, &mut state, opts.lr, &batch)?;
+            epoch_loss += loss as f64;
+            nb += 1;
+            steps_done += 1;
+        }
+        train_seconds += timer.secs();
+        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
+            || epoch == opts.epochs;
+        if do_eval {
+            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            curve.push(CurvePoint {
+                epoch,
+                train_seconds,
+                train_loss: epoch_loss / nb.max(1) as f64,
+                eval_f1: f1,
+            });
+        }
+    }
+    if truncated_batches > 0 {
+        eprintln!(
+            "[expansion] {truncated_batches} batches hit the b_max cap \
+             (vanilla SGD cost underestimated)"
+        );
+    }
+    Ok(TrainResult {
+        state,
+        curve,
+        train_seconds,
+        steps: steps_done,
+        peak_bytes,
+        avg_within_edges_per_node: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star_of_paths() -> Csr {
+        // hub 0 connected to 1..=5, each i connected to i+5
+        let mut e = Vec::new();
+        for i in 1..=5u32 {
+            e.push((0, i));
+            e.push((i, i + 5));
+        }
+        Csr::from_edges(11, &e)
+    }
+
+    #[test]
+    fn expansion_grows_by_hops() {
+        let g = star_of_paths();
+        let e1 = expand(&g, &[0], 1, 1000);
+        assert_eq!(e1.frontier_sizes, vec![1, 6]);
+        let e2 = expand(&g, &[0], 2, 1000);
+        assert_eq!(e2.frontier_sizes, vec![1, 6, 11]);
+        assert!(!e2.truncated);
+    }
+
+    #[test]
+    fn cap_truncates() {
+        let g = star_of_paths();
+        let e = expand(&g, &[0], 2, 4);
+        assert!(e.truncated);
+        assert!(e.nodes.len() <= 4);
+    }
+
+    #[test]
+    fn targets_first_and_unique() {
+        let g = star_of_paths();
+        let e = expand(&g, &[3, 3, 7], 1, 100);
+        assert_eq!(&e.nodes[..2], &[3, 7]);
+        let set: std::collections::HashSet<_> = e.nodes.iter().collect();
+        assert_eq!(set.len(), e.nodes.len());
+    }
+
+    #[test]
+    fn batches_cover_all_targets() {
+        let train: Vec<u32> = (0..103).collect();
+        let mut rng = Rng::new(1);
+        let batches = target_batches(&train, 10, &mut rng);
+        assert_eq!(batches.len(), 11);
+        let mut all: Vec<u32> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, train);
+    }
+}

@@ -1,0 +1,248 @@
+//! GraphSAGE-style baseline [Hamilton et al., NIPS'17]: fixed-size
+//! uniform neighbor sampling per layer (paper's comparison settings:
+//! S1 = 25, S2 = 10, batch 512 — scaled down with our datasets).
+//!
+//! A batch is built by sampling receptive fields top-down
+//! (R^L = targets, R^{l-1} = R^l ∪ sample_{S_l}(R^l)), then the union
+//! runs through the same dense-block executable with the *sampled* edge
+//! list (the adjacency renormalizes over sampled neighbors, which is
+//! what the mean aggregator does).  Loss is masked to the targets.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::{Batch, BatchAssembler};
+use crate::coordinator::trainer::{evaluate, step, CurvePoint, TrainOptions, TrainResult, TrainState};
+use crate::graph::{Dataset, Split};
+use crate::util::{Rng, Timer};
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct SageParams {
+    /// neighbor samples per layer, outermost (layer-1 input) first;
+    /// length must equal the model depth.
+    pub samples: Vec<usize>,
+    /// target nodes per batch.
+    pub batch: usize,
+}
+
+impl SageParams {
+    /// Paper defaults (S1=25, S2=10) scaled for depth L.
+    pub fn for_depth(layers: usize, batch: usize) -> SageParams {
+        let mut samples = vec![10; layers];
+        if !samples.is_empty() {
+            samples[0] = 25;
+        }
+        SageParams { samples, batch }
+    }
+}
+
+/// Sampled receptive field: union node list (targets first) + sampled
+/// directed local edges (u -> sampled neighbor v), both directions
+/// inserted so propagation stays symmetric-ish like the mean aggregator.
+pub struct SampledField {
+    pub nodes: Vec<u32>,
+    pub edges: Vec<(u32, u32)>,
+    /// per-hop union sizes (embedding counters).
+    pub frontier_sizes: Vec<usize>,
+    pub truncated: bool,
+}
+
+pub fn sample_field(
+    ds: &Dataset,
+    targets: &[u32],
+    params: &SageParams,
+    cap: usize,
+    rng: &mut Rng,
+) -> SampledField {
+    let g = &ds.graph;
+    let mut local_of = vec![u32::MAX; g.n()];
+    let mut nodes: Vec<u32> = Vec::new();
+    let mut truncated = false;
+    for &t in targets {
+        if local_of[t as usize] == u32::MAX {
+            local_of[t as usize] = nodes.len() as u32;
+            nodes.push(t);
+        }
+    }
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut frontier: Vec<u32> = nodes.clone();
+    let mut frontier_sizes = vec![nodes.len()];
+
+    for &s in &params.samples {
+        let mut next: Vec<u32> = Vec::new();
+        'frontier: for &v in &frontier {
+            let lv = local_of[v as usize];
+            let nbrs = g.neighbors(v as usize);
+            if nbrs.is_empty() {
+                continue;
+            }
+            // sample s neighbors (with replacement beyond degree, like
+            // GraphSAGE's uniform-with-replacement sampler)
+            for _ in 0..s.min(nbrs.len().max(s)) {
+                let u = nbrs[rng.usize_below(nbrs.len())];
+                let lu = if local_of[u as usize] != u32::MAX {
+                    local_of[u as usize]
+                } else {
+                    if nodes.len() >= cap {
+                        truncated = true;
+                        break 'frontier;
+                    }
+                    let lu = nodes.len() as u32;
+                    local_of[u as usize] = lu;
+                    nodes.push(u);
+                    next.push(u);
+                    lu
+                };
+                if lu != lv {
+                    edges.push((lv, lu));
+                    edges.push((lu, lv));
+                }
+            }
+        }
+        frontier_sizes.push(nodes.len());
+        if truncated {
+            break;
+        }
+        frontier = next;
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    SampledField { nodes, edges, frontier_sizes, truncated }
+}
+
+/// Train with GraphSAGE batching through the given `train`-kind
+/// artifact (typically the `*_sage_*` configs with enlarged b_max).
+pub fn train_graphsage(
+    engine: &mut Engine,
+    ds: &Dataset,
+    artifact: &str,
+    params: &SageParams,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let meta = engine.meta(artifact)?;
+    if params.samples.len() != meta.layers {
+        return Err(anyhow!(
+            "sage samples {:?} must match artifact depth {}",
+            params.samples,
+            meta.layers
+        ));
+    }
+    engine.ensure_compiled(artifact)?;
+    let mut state = TrainState::init(&meta, opts.seed);
+    let mut rng = Rng::new(opts.seed ^ 0x5A6E_0000_3333_4444);
+    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let train_nodes = ds.nodes_in_split(Split::Train);
+    let eval_nodes = ds.nodes_in_split(opts.eval_split);
+
+    let mut curve = Vec::new();
+    let mut train_seconds = 0.0;
+    let mut steps_done = 0u64;
+    let mut peak_bytes = 0usize;
+    let mut union_total = 0u64;
+    let mut batches_total = 0u64;
+
+    for epoch in 1..=opts.epochs {
+        let timer = Timer::start();
+        let batches = super::expansion::target_batches(&train_nodes, params.batch, &mut rng);
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        for targets in &batches {
+            if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
+                break;
+            }
+            let field = sample_field(ds, targets, params, meta.b_max, &mut rng);
+            let mut batch: Batch =
+                assembler.assemble_with_edges(ds, &field.nodes, &field.edges);
+            // loss only on the targets (they are first in local order)
+            batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
+            for i in 0..targets.len() {
+                batch.mask.data[i] = 1.0;
+            }
+            union_total += field.nodes.len() as u64;
+            batches_total += 1;
+            peak_bytes = peak_bytes.max(
+                batch.bytes()
+                    + state.param_bytes()
+                    // per-layer activations over the whole union
+                    + field.nodes.len() * meta.f_hid * 4 * meta.layers,
+            );
+            let loss = step(engine, artifact, &mut state, opts.lr, &batch)?;
+            epoch_loss += loss as f64;
+            nb += 1;
+            steps_done += 1;
+        }
+        train_seconds += timer.secs();
+        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
+            || epoch == opts.epochs;
+        if do_eval {
+            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            curve.push(CurvePoint {
+                epoch,
+                train_seconds,
+                train_loss: epoch_loss / nb.max(1) as f64,
+                eval_f1: f1,
+            });
+        }
+    }
+    Ok(TrainResult {
+        state,
+        curve,
+        train_seconds,
+        steps: steps_done,
+        peak_bytes,
+        // for sage this reports avg sampled-union size per batch
+        avg_within_edges_per_node: union_total as f64 / batches_total.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{build, preset};
+
+    #[test]
+    fn field_respects_cap_and_orders_targets_first() {
+        let ds = build(preset("cora_like").unwrap(), 1);
+        let mut rng = Rng::new(2);
+        let params = SageParams::for_depth(2, 8);
+        let targets: Vec<u32> = (0..8).collect();
+        let f = sample_field(&ds, &targets, &params, 128, &mut rng);
+        assert_eq!(&f.nodes[..8], &targets[..]);
+        assert!(f.nodes.len() <= 128);
+        // all edges reference in-range locals
+        for &(u, v) in &f.edges {
+            assert!((u as usize) < f.nodes.len() && (v as usize) < f.nodes.len());
+        }
+    }
+
+    #[test]
+    fn frontier_grows_with_depth() {
+        let ds = build(preset("ppi_like").unwrap(), 1);
+        let mut rng = Rng::new(3);
+        let p2 = SageParams::for_depth(2, 16);
+        let p3 = SageParams::for_depth(3, 16);
+        let targets: Vec<u32> = (0..16).collect();
+        let f2 = sample_field(&ds, &targets, &p2, 100_000, &mut rng);
+        let mut rng = Rng::new(3);
+        let f3 = sample_field(&ds, &targets, &p3, 100_000, &mut rng);
+        assert!(
+            f3.nodes.len() > f2.nodes.len(),
+            "3-layer field ({}) should exceed 2-layer ({})",
+            f3.nodes.len(),
+            f2.nodes.len()
+        );
+    }
+
+    #[test]
+    fn sampled_edges_are_deduped_and_symmetric() {
+        let ds = build(preset("cora_like").unwrap(), 4);
+        let mut rng = Rng::new(5);
+        let params = SageParams { samples: vec![5, 5], batch: 4 };
+        let f = sample_field(&ds, &(0..4u32).collect::<Vec<_>>(), &params, 512, &mut rng);
+        let set: std::collections::HashSet<_> = f.edges.iter().collect();
+        assert_eq!(set.len(), f.edges.len());
+        for &(u, v) in &f.edges {
+            assert!(set.contains(&(v, u)), "missing reverse of ({u},{v})");
+        }
+    }
+}

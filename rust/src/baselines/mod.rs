@@ -1,0 +1,13 @@
+//! Baseline GCN training algorithms the paper compares against
+//! (Table 1, Fig. 6, Tables 8/9): vanilla neighborhood-expansion SGD,
+//! GraphSAGE-style fixed-size sampling, and VR-GCN with historical
+//! activations.  Full-batch gradient descent is covered analytically in
+//! `coordinator::memory` (the paper likewise excludes it from the
+//! large-graph runs: "[9] has difficulty to scale").
+
+pub mod expansion;
+pub mod graphsage;
+pub mod vrgcn;
+
+pub use graphsage::{train_graphsage, SageParams};
+pub use vrgcn::{train_vrgcn, VrgcnParams};

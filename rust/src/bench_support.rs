@@ -1,0 +1,188 @@
+//! Shared plumbing for the paper-reproduction benches (`benches/`):
+//! engine/dataset setup, method runners keyed the way the experiment
+//! index in DESIGN.md §5 names them, table formatting, and JSON result
+//! dumps under `bench_results/`.
+//!
+//! Benches read their effort from env vars so `cargo bench` stays
+//! tractable on CPU while EXPERIMENTS.md records longer runs:
+//!   CGCN_EPOCHS   — epochs per training run (default per-bench)
+//!   CGCN_SEED     — experiment seed (default 42)
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::baselines::{train_graphsage, train_vrgcn, SageParams, VrgcnParams};
+use crate::coordinator::{train, ClusterSampler, TrainOptions, TrainResult};
+use crate::datagen::{build_cached, preset, Preset};
+use crate::graph::Dataset;
+use crate::partition::{
+    parts_to_clusters, MultilevelPartitioner, Partitioner, RandomPartitioner,
+};
+use crate::runtime::Engine;
+use crate::util::{Json, Rng};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn env_seed() -> u64 {
+    std::env::var("CGCN_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(42)
+}
+
+pub fn engine() -> Result<Engine> {
+    Engine::new(Path::new("artifacts"))
+}
+
+pub fn dataset(name: &str) -> Result<Dataset> {
+    let p = preset(name).expect("unknown preset");
+    Ok(build_cached(p, env_seed(), Path::new("data"))?)
+}
+
+pub fn preset_of(ds: &Dataset) -> &'static Preset {
+    preset(&ds.name).expect("dataset built from preset")
+}
+
+/// Cluster partition -> sampler with the preset's defaults (or
+/// overridden p/q).
+pub fn cluster_sampler(
+    ds: &Dataset,
+    parts: usize,
+    q: usize,
+    seed: u64,
+) -> ClusterSampler {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let part = MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng);
+    ClusterSampler::new(parts_to_clusters(&part, parts), q)
+}
+
+pub fn random_sampler(ds: &Dataset, parts: usize, q: usize, seed: u64) -> ClusterSampler {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let part = RandomPartitioner.partition(&ds.graph, parts, &mut rng);
+    ClusterSampler::new(parts_to_clusters(&part, parts), q)
+}
+
+/// One named training run (rows of Fig. 6 / Tables 8-9).
+pub fn run_method(
+    engine: &mut Engine,
+    ds: &Dataset,
+    method: &str,
+    layers: usize,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let p = preset_of(ds);
+    let short = ds.name.trim_end_matches("_like");
+    match method {
+        "cluster" => {
+            let sampler =
+                cluster_sampler(ds, p.default_partitions, p.default_q, opts.seed);
+            train(engine, ds, &sampler, &format!("{short}_L{layers}"), opts)
+        }
+        "graphsage" => {
+            let params = SageParams::for_depth(layers, 256);
+            train_graphsage(engine, ds, &format!("{short}_sage_L{layers}"), &params, opts)
+        }
+        "vrgcn" => {
+            let params = VrgcnParams::default();
+            train_vrgcn(engine, ds, &format!("{short}_vrgcn_L{layers}"), &params, opts)
+        }
+        other => anyhow::bail!("unknown method {other}"),
+    }
+}
+
+/// Append a result row to `bench_results/<bench>.json` (one JSON object
+/// per line; the file is a JSONL log so repeated runs accumulate).
+pub fn dump_row(bench: &str, row: Json) {
+    let dir = Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{bench}.jsonl"));
+    let mut line = row.to_string();
+    line.push('\n');
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+pub fn fmt_mb(bytes: usize) -> String {
+    format!("{:.1}", bytes as f64 / 1e6)
+}
+
+pub fn fmt_s(secs: f64) -> String {
+    format!("{secs:.2}")
+}
+
+pub fn fmt_f1(f1: f64) -> String {
+    format!("{:.4}", f1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_parsing_defaults() {
+        assert_eq!(env_usize("CGCN_DOES_NOT_EXIST_XYZ", 7), 7);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // must not panic
+    }
+}

@@ -1,0 +1,134 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `cluster-gcn <subcommand> [--key value | --flag]...`.
+//! Unknown keys are rejected against a per-command whitelist so typos
+//! fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the program name).
+    pub fn parse(argv: &[String], allowed: &[&str]) -> Result<Args> {
+        let command = argv
+            .first()
+            .ok_or_else(|| anyhow!("missing subcommand"))?
+            .clone();
+        let mut opts = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            if !allowed.contains(&key) {
+                bail!(
+                    "unknown option --{key} for {command} (allowed: {})",
+                    allowed.join(", ")
+                );
+            }
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { command, opts })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_values_and_flags() {
+        let a = Args::parse(
+            &argv(&["train", "--preset", "cora_like", "--epochs", "10", "--verbose"]),
+            &["preset", "epochs", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("preset"), Some("cora_like"));
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn rejects_unknown_option() {
+        let e = Args::parse(&argv(&["train", "--nope", "1"]), &["preset"]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn rejects_missing_command() {
+        assert!(Args::parse(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["x"]), &[]).unwrap();
+        assert_eq!(a.usize_or("k", 7).unwrap(), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["x", "--k", "abc"]), &["k"]).unwrap();
+        assert!(a.usize_or("k", 1).is_err());
+    }
+}

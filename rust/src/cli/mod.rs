@@ -1,0 +1,302 @@
+//! `cluster-gcn` command-line interface: dataset generation, graph
+//! partitioning, training (cluster-gcn + baselines), and inspection.
+//!
+//! ```text
+//! cluster-gcn datagen   --preset ppi_like [--seed 42] [--cache data/]
+//! cluster-gcn partition --preset ppi_like [--parts 50] [--algo multilevel|random]
+//! cluster-gcn train     --preset ppi_like [--layers 2] [--epochs 40]
+//!                       [--method cluster|graphsage|vrgcn] [--q 1] [--parts 50]
+//!                       [--norm sym|row|row+id|row+l1] [--lr 0.01] [--seed 0]
+//!                       [--artifacts artifacts/]
+//! cluster-gcn inspect   [--artifacts artifacts/]
+//! ```
+
+pub mod args;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{train, ClusterSampler, TrainOptions};
+use crate::datagen::{build_cached, preset, PRESETS};
+use crate::norm::NormConfig;
+use crate::partition::{
+    parts_to_clusters, MultilevelPartitioner, Partitioner, RandomPartitioner,
+};
+use crate::runtime::Engine;
+use crate::util::{Rng, Timer};
+use args::Args;
+
+pub fn parse_norm(s: &str) -> Result<NormConfig> {
+    Ok(match s {
+        "sym" => NormConfig::PAPER_DEFAULT,
+        "row" => NormConfig::ROW,
+        "row+id" => NormConfig::ROW_IDENTITY,
+        "row+l1" => NormConfig::ROW_LAMBDA1,
+        other => bail!("unknown norm {other} (sym|row|row+id|row+l1)"),
+    })
+}
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{}", USAGE);
+        return Ok(());
+    }
+    match argv[0].as_str() {
+        "datagen" => cmd_datagen(&argv),
+        "partition" => cmd_partition(&argv),
+        "train" => cmd_train(&argv),
+        "eval" => cmd_eval(&argv),
+        "inspect" => cmd_inspect(&argv),
+        other => Err(anyhow!("unknown command {other}\n{USAGE}")),
+    }
+}
+
+const USAGE: &str = "\
+cluster-gcn — Cluster-GCN (KDD'19) three-layer reproduction
+
+USAGE:
+  cluster-gcn datagen   --preset NAME [--seed N] [--cache DIR]
+  cluster-gcn partition --preset NAME [--parts K] [--algo multilevel|random] [--seed N]
+  cluster-gcn train     --preset NAME [--layers L] [--epochs N] [--method cluster|graphsage|vrgcn]
+                        [--q Q] [--parts P] [--norm sym|row|row+id|row+l1]
+                        [--lr F] [--seed N] [--artifacts DIR] [--cache DIR] [--eval-every K]
+  cluster-gcn eval      --preset NAME --checkpoint FILE [--norm ...] [--split val|test]
+  cluster-gcn inspect   [--artifacts DIR]
+
+Presets: cora_like pubmed_like ppi_like reddit_like amazon_like amazon2m_like
+";
+
+fn load_ds(a: &Args) -> Result<crate::graph::Dataset> {
+    let name = a
+        .get("preset")
+        .ok_or_else(|| anyhow!("--preset required"))?;
+    let p = preset(name).ok_or_else(|| {
+        anyhow!(
+            "unknown preset {name}; have: {}",
+            PRESETS.iter().map(|p| p.name).collect::<Vec<_>>().join(" ")
+        )
+    })?;
+    let seed = a.u64_or("seed", 42)?;
+    let cache = a.str_or("cache", "data");
+    let t = Timer::start();
+    let ds = build_cached(p, seed, std::path::Path::new(&cache))?;
+    eprintln!(
+        "dataset {} ready in {:.2}s (cache {})",
+        p.name,
+        t.secs(),
+        cache
+    );
+    Ok(ds)
+}
+
+fn cmd_datagen(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &["preset", "seed", "cache"])?;
+    let ds = load_ds(&a)?;
+    let (dmin, dmax, davg) = ds.graph.degree_stats();
+    let (tr, va, te) = ds.split_counts();
+    // Table 3 / Table 12 style report
+    println!("name       : {}", ds.name);
+    println!("task       : {:?}", ds.task);
+    println!("#nodes     : {}", ds.n());
+    println!("#edges     : {}", ds.graph.num_edges());
+    println!("#labels    : {}", ds.num_classes);
+    println!("#features  : {}", ds.f_in);
+    println!("degree     : min {dmin} max {dmax} avg {davg:.1}");
+    println!("splits     : {tr}/{va}/{te} (train/val/test)");
+    Ok(())
+}
+
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &["preset", "seed", "cache", "parts", "algo"])?;
+    let ds = load_ds(&a)?;
+    let k = a.usize_or(
+        "parts",
+        preset(&ds.name).map(|p| p.default_partitions).unwrap_or(10),
+    )?;
+    let algo = a.str_or("algo", "multilevel");
+    let mut rng = Rng::new(a.u64_or("seed", 42)? ^ 0xBEEF);
+    let t = Timer::start();
+    let part = match algo.as_str() {
+        "multilevel" => MultilevelPartitioner::default().partition(&ds.graph, k, &mut rng),
+        "random" => RandomPartitioner.partition(&ds.graph, k, &mut rng),
+        other => bail!("unknown algo {other}"),
+    };
+    let secs = t.secs();
+    let stats = crate::partition::metrics::stats(&ds.graph, &part, k);
+    // Table 13 style report
+    println!("algo             : {algo}");
+    println!("#partitions      : {k}");
+    println!("clustering time  : {secs:.2}s");
+    println!(
+        "edge cut         : {} ({:.1}% of entries)",
+        stats.edge_cut,
+        100.0 * (1.0 - stats.within_fraction)
+    );
+    println!("within fraction  : {:.3}", stats.within_fraction);
+    println!("balance          : {:.3}", stats.balance);
+    println!("part sizes       : min {} max {}", stats.min_part, stats.max_part);
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "preset", "seed", "cache", "layers", "epochs", "method", "q",
+            "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
+            "lr-decay", "lr-decay-every", "patience", "save",
+        ],
+    )?;
+    let ds = load_ds(&a)?;
+    let p = preset(&ds.name).unwrap();
+    let layers = a.usize_or("layers", 2)?;
+    let method = a.str_or("method", "cluster");
+    let artifacts = a.str_or("artifacts", "artifacts");
+    let mut engine = Engine::new(std::path::Path::new(&artifacts))?;
+
+    let short = ds.name.trim_end_matches("_like");
+    let artifact = match method.as_str() {
+        "cluster" => match a.get("hidden") {
+            Some("512") if short == "reddit" => format!("reddit_h512_L{layers}"),
+            _ => format!("{short}_L{layers}"),
+        },
+        "graphsage" => format!("{short}_sage_L{layers}"),
+        "vrgcn" => format!("{short}_vrgcn_L{layers}"),
+        other => bail!("unknown method {other}"),
+    };
+
+    let opts = TrainOptions {
+        lr: a.f64_or("lr", 0.01)? as f32,
+        epochs: a.usize_or("epochs", 40)?,
+        eval_every: a.usize_or("eval-every", 5)?,
+        seed: a.u64_or("seed", 0)?,
+        norm: parse_norm(&a.str_or("norm", "sym"))?,
+        eval_split: crate::graph::Split::Val,
+        max_steps_per_epoch: 0,
+        schedule: match a.get("lr-decay") {
+            Some(f) => crate::coordinator::LrSchedule::StepDecay {
+                every: a.usize_or("lr-decay-every", 20)?,
+                factor: f.parse().map_err(|_| anyhow!("bad --lr-decay"))?,
+            },
+            None => crate::coordinator::LrSchedule::Constant,
+        },
+        patience: a.usize_or("patience", 0)?,
+    };
+
+    let t = Timer::start();
+    let result = match method.as_str() {
+        "cluster" => {
+            let parts = a.usize_or("parts", p.default_partitions)?;
+            let q = a.usize_or("q", p.default_q)?;
+            let mut rng = Rng::new(opts.seed ^ 0xBEEF);
+            let pt = Timer::start();
+            let part =
+                MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng);
+            eprintln!("partitioned into {parts} parts in {:.2}s", pt.secs());
+            let sampler = ClusterSampler::new(parts_to_clusters(&part, parts), q);
+            train(&mut engine, &ds, &sampler, &artifact, &opts)?
+        }
+        "graphsage" => {
+            let params = crate::baselines::SageParams::for_depth(layers, 128);
+            crate::baselines::train_graphsage(&mut engine, &ds, &artifact, &params, &opts)?
+        }
+        "vrgcn" => {
+            let params = crate::baselines::VrgcnParams::default();
+            crate::baselines::train_vrgcn(&mut engine, &ds, &artifact, &params, &opts)?
+        }
+        _ => unreachable!(),
+    };
+
+    if let Some(path) = a.get("save") {
+        crate::coordinator::checkpoint::save(
+            &result.state,
+            &artifact,
+            std::path::Path::new(path),
+        )?;
+        eprintln!("checkpoint saved to {path}");
+    }
+    println!("method        : {method} ({artifact})");
+    println!("epochs        : {}", opts.epochs);
+    println!("steps         : {}", result.steps);
+    println!(
+        "train time    : {:.2}s (wall {:.2}s)",
+        result.train_seconds,
+        t.secs()
+    );
+    println!("peak memory   : {:.1} MB", result.peak_bytes as f64 / 1e6);
+    println!("curve (epoch, train_s, loss, val_f1):");
+    for pt in &result.curve {
+        println!(
+            "  {:4}  {:8.2}  {:.4}  {:.4}",
+            pt.epoch, pt.train_seconds, pt.train_loss, pt.eval_f1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &["preset", "seed", "cache", "checkpoint", "norm", "split"],
+    )?;
+    let ds = load_ds(&a)?;
+    let ckpt = a
+        .get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let (state, artifact) =
+        crate::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
+    let norm = parse_norm(&a.str_or("norm", "sym"))?;
+    let split = match a.str_or("split", "test").as_str() {
+        "val" => crate::graph::Split::Val,
+        "test" => crate::graph::Split::Test,
+        other => bail!("unknown split {other}"),
+    };
+    let nodes = ds.nodes_in_split(split);
+    let t = Timer::start();
+    let f1 = crate::coordinator::evaluate(&ds, &state.weights, norm, false, &nodes);
+    println!("checkpoint    : {ckpt} (trained via {artifact}, step {})", state.step);
+    println!("split         : {split:?} ({} nodes)", nodes.len());
+    println!("micro-F1      : {f1:.4}  ({:.2}s exact host inference)", t.secs());
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let a = Args::parse(argv, &["artifacts"])?;
+    let dir = a.str_or("artifacts", "artifacts");
+    let reg = crate::runtime::Registry::load(std::path::Path::new(&dir))?;
+    println!(
+        "{:<22} {:>5} {:>7} {:>6} {:>6} {:>7} {:>9} {:>6}",
+        "artifact", "kind", "layers", "f_in", "f_hid", "b_max", "vmem_est", "mxu"
+    );
+    for name in reg.names() {
+        let m = reg.get(name)?;
+        println!(
+            "{:<22} {:>5} {:>7} {:>6} {:>6} {:>7} {:>8.1}M {:>6.2}",
+            m.name,
+            match m.kind {
+                crate::runtime::Kind::Train => "train",
+                crate::runtime::Kind::Forward => "fwd",
+                crate::runtime::Kind::Vrgcn => "vrgcn",
+            },
+            m.layers,
+            m.f_in,
+            m.f_hid,
+            m.b_max,
+            m.vmem_bytes_est as f64 / 1e6,
+            m.mxu_utilization_est,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_parsing() {
+        assert_eq!(parse_norm("sym").unwrap(), NormConfig::PAPER_DEFAULT);
+        assert_eq!(parse_norm("row+l1").unwrap(), NormConfig::ROW_LAMBDA1);
+        assert!(parse_norm("bogus").is_err());
+    }
+}

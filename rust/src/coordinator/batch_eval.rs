@@ -1,0 +1,74 @@
+//! Cluster-wise inference through the PJRT `forward` artifacts: the
+//! paper-style evaluation path where prediction, like training, runs on
+//! block-diagonal cluster batches (between-batch links are dropped —
+//! the Δ approximation of eq. (4) applied at eval time).
+//!
+//! `coordinator::inference` is the *exact* full-graph evaluator; this
+//! module is the accelerated approximate one.  The integration suite
+//! pins each batch against a host oracle, and `examples/perf_probe`
+//! compares both paths' F1.
+
+use anyhow::Result;
+
+use crate::coordinator::batch::BatchAssembler;
+use crate::coordinator::sampler::ClusterSampler;
+use crate::graph::Dataset;
+use crate::norm::NormConfig;
+use crate::runtime::{Engine, Tensor};
+use crate::util::Rng;
+
+/// Run the forward artifact over every cluster batch; returns dense
+/// (n, classes) logits assembled from the per-batch outputs.
+pub fn cluster_forward(
+    engine: &mut Engine,
+    ds: &Dataset,
+    sampler: &ClusterSampler,
+    fwd_artifact: &str,
+    weights: &[Tensor],
+    norm: NormConfig,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let meta = engine.meta(fwd_artifact)?;
+    engine.ensure_compiled(fwd_artifact)?;
+    let classes = meta.classes;
+    let mut logits = vec![0f32; ds.n() * classes];
+    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, norm);
+    let mut rng = Rng::new(seed);
+    let plan = sampler.epoch_plan(&mut rng);
+    let mut nodes = Vec::new();
+    for ids in &plan {
+        sampler.batch_nodes(ids, &mut nodes);
+        let batch = assembler.assemble(ds, &nodes);
+        let mut inputs: Vec<Tensor> = weights.to_vec();
+        inputs.push(batch.a);
+        inputs.push(batch.x);
+        let out = engine.run(fwd_artifact, &inputs)?;
+        let rows = &out[0];
+        for (i, &v) in nodes.iter().enumerate() {
+            logits[v as usize * classes..(v as usize + 1) * classes]
+                .copy_from_slice(&rows.data[i * classes..(i + 1) * classes]);
+        }
+    }
+    Ok(logits)
+}
+
+/// Micro-F1 over `nodes` using cluster-wise PJRT inference.
+pub fn cluster_evaluate(
+    engine: &mut Engine,
+    ds: &Dataset,
+    sampler: &ClusterSampler,
+    fwd_artifact: &str,
+    weights: &[Tensor],
+    norm: NormConfig,
+    nodes: &[u32],
+    seed: u64,
+) -> Result<f64> {
+    let logits = cluster_forward(engine, ds, sampler, fwd_artifact, weights, norm, seed)?;
+    let rows = crate::coordinator::inference::gather_rows(&logits, ds.num_classes, nodes);
+    Ok(crate::coordinator::metrics::micro_f1(
+        ds,
+        nodes,
+        &rows,
+        ds.num_classes,
+    ))
+}

@@ -1,0 +1,181 @@
+//! Checkpointing: persist/restore `TrainState` (weights + Adam moments
+//! + step counter) so trained models survive the process — the paper's
+//! workflow of "cluster once, train, reuse" extends to "train once,
+//! evaluate anywhere" (CLI `train --save` / `eval`).
+//!
+//! Format: magic + version, artifact name, per-tensor (dims, f32 data),
+//! little-endian.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::coordinator::trainer::TrainState;
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 8] = b"CGCNCKP1";
+
+fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_tensor(w: &mut impl Write, t: &Tensor) -> std::io::Result<()> {
+    w_u64(w, t.dims.len() as u64)?;
+    for &d in &t.dims {
+        w_u64(w, d as u64)?;
+    }
+    let mut buf = Vec::with_capacity(t.data.len() * 4);
+    for &x in &t.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_tensor(r: &mut impl Read) -> std::io::Result<Tensor> {
+    let rank = r_u64(r)? as usize;
+    if rank > 8 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "implausible tensor rank",
+        ));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(r_u64(r)? as usize);
+    }
+    let len: usize = dims.iter().product();
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    let data = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::new(dims, data))
+}
+
+pub fn save(state: &TrainState, artifact: &str, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u64(&mut w, artifact.len() as u64)?;
+    w.write_all(artifact.as_bytes())?;
+    w_u64(&mut w, state.step)?;
+    w_u64(&mut w, state.weights.len() as u64)?;
+    for group in [&state.weights, &state.m, &state.v] {
+        for t in group {
+            w_tensor(&mut w, t)?;
+        }
+    }
+    w.flush()
+}
+
+/// Returns (state, artifact name recorded at save time).
+pub fn load(path: &Path) -> std::io::Result<(TrainState, String)> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a cluster-gcn checkpoint"));
+    }
+    let name_len = r_u64(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let artifact = String::from_utf8(name).map_err(|_| bad("bad name"))?;
+    let step = r_u64(&mut r)?;
+    let layers = r_u64(&mut r)? as usize;
+    let mut groups: Vec<Vec<Tensor>> = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let mut g = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            g.push(r_tensor(&mut r)?);
+        }
+        groups.push(g);
+    }
+    let v = groups.pop().unwrap();
+    let m = groups.pop().unwrap();
+    let weights = groups.pop().unwrap();
+    // invariants
+    for (w_, m_) in weights.iter().zip(&m) {
+        if w_.dims != m_.dims {
+            return Err(bad("weight/moment shape mismatch"));
+        }
+    }
+    Ok((TrainState { weights, m, v, step }, artifact))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Task;
+    use crate::runtime::artifacts::{ArtifactMeta, Kind};
+
+    fn state() -> TrainState {
+        let meta = ArtifactMeta {
+            name: "x".into(),
+            file: "/dev/null".into(),
+            kind: Kind::Train,
+            task: Task::Multiclass,
+            layers: 3,
+            f_in: 6,
+            f_hid: 10,
+            classes: 4,
+            b_max: 128,
+            residual: false,
+            weight_shapes: vec![(6, 10), (10, 10), (10, 4)],
+            vmem_bytes_est: 0,
+            mxu_utilization_est: 0.0,
+        };
+        let mut s = TrainState::init(&meta, 9);
+        s.step = 77;
+        s
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cgcn_ckpt_{}_{}", std::process::id(), tag));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = state();
+        let p = tmp("rt");
+        save(&s, "ppi_L3", &p).unwrap();
+        let (s2, art) = load(&p).unwrap();
+        assert_eq!(art, "ppi_L3");
+        assert_eq!(s2.step, 77);
+        assert_eq!(s2.weights.len(), 3);
+        for (a, b) in s.weights.iter().zip(&s2.weights) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in s.v.iter().zip(&s2.v) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let s = state();
+        let p = tmp("trunc");
+        save(&s, "a", &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

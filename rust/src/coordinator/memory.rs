@@ -1,0 +1,144 @@
+//! Memory accounting: the analytic models of Table 1 instantiated with
+//! real dimensions, plus measured byte counts from the live runs.  Used
+//! by the Table 5 / Table 8 benches.
+//!
+//! Following the paper (§1 footnote 1), the accounting covers the dense
+//! embedding storage (the training bottleneck) + model/optimizer state;
+//! the graph itself is excluded ("fixed and usually not the main
+//! bottleneck").
+
+/// Shared problem dimensions.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub n: usize,
+    pub f_in: usize,
+    pub f_hid: usize,
+    pub classes: usize,
+    pub layers: usize,
+    /// batch size (real nodes for SGD methods).
+    pub b: usize,
+    /// neighbor samples per node (GraphSAGE r / VR-GCN r).
+    pub r: usize,
+    /// average degree (vanilla SGD expansion).
+    pub d: f64,
+}
+
+const F32: usize = 4;
+
+fn param_bytes(d: &Dims) -> usize {
+    // W_0..W_{L-1} + Adam m, v
+    let p = d.f_in * d.f_hid
+        + d.f_hid * d.f_hid * d.layers.saturating_sub(2)
+        + d.f_hid * d.classes;
+    3 * p * F32
+}
+
+/// Cluster-GCN: O(b·L·F) embeddings (Table 1, last column).
+pub fn cluster_gcn_bytes(d: &Dims) -> usize {
+    let emb = d.b * d.f_in + d.b * d.f_hid * d.layers.saturating_sub(1)
+        + d.b * d.classes;
+    emb * F32 + param_bytes(d)
+}
+
+/// Full-batch GD / VR-GCN history: O(N·L·F) (Table 1).
+pub fn full_embedding_bytes(d: &Dims) -> usize {
+    let emb = d.n * d.f_in + d.n * d.f_hid * d.layers.saturating_sub(1);
+    emb * F32 + param_bytes(d)
+}
+
+/// VR-GCN: history for every node & layer + the batch working set.
+pub fn vrgcn_bytes(d: &Dims) -> usize {
+    let history = d.n * d.f_hid * d.layers.saturating_sub(1);
+    // batch receptive field with r samples: sum_{l<=L} b * (1+r)^l capped at n
+    let field = receptive_field(d.b, 1.0 + d.r as f64, d.layers, d.n);
+    let batch_emb: usize = field.iter().map(|&nodes| nodes * d.f_hid).sum();
+    (history + batch_emb) * F32 + param_bytes(d)
+}
+
+/// GraphSAGE: O(b·r^L·F) working set (Table 1).
+pub fn graphsage_bytes(d: &Dims) -> usize {
+    let field = receptive_field(d.b, d.r as f64, d.layers, d.n);
+    let emb: usize = field.iter().map(|&nodes| nodes * d.f_hid.max(d.f_in)).sum();
+    emb * F32 + param_bytes(d)
+}
+
+/// Vanilla SGD: O(b·d^L·F) — full neighborhood expansion.
+pub fn vanilla_sgd_bytes(d: &Dims) -> usize {
+    let field = receptive_field(d.b, d.d, d.layers, d.n);
+    let emb: usize = field.iter().map(|&nodes| nodes * d.f_hid.max(d.f_in)).sum();
+    emb * F32 + param_bytes(d)
+}
+
+/// per-layer receptive-field sizes, geometric growth capped at n.
+fn receptive_field(b: usize, factor: f64, layers: usize, n: usize) -> Vec<usize> {
+    let mut sizes = Vec::with_capacity(layers + 1);
+    let mut cur = b as f64;
+    for _ in 0..=layers {
+        sizes.push((cur as usize).min(n));
+        cur *= factor.max(1.0);
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> Dims {
+        Dims {
+            n: 100_000,
+            f_in: 128,
+            f_hid: 128,
+            classes: 41,
+            layers: 3,
+            b: 1024,
+            r: 2,
+            d: 30.0,
+        }
+    }
+
+    #[test]
+    fn cluster_gcn_is_smallest() {
+        let d = dims();
+        let c = cluster_gcn_bytes(&d);
+        assert!(c < vrgcn_bytes(&d), "cluster >= vrgcn");
+        assert!(c < graphsage_bytes(&d), "cluster >= sage");
+        assert!(c < vanilla_sgd_bytes(&d), "cluster >= vanilla");
+        assert!(c < full_embedding_bytes(&d), "cluster >= full");
+    }
+
+    #[test]
+    fn vrgcn_dominated_by_history() {
+        let d = dims();
+        // history alone: n * f_hid * (L-1) * 4
+        let history = d.n * d.f_hid * 2 * 4;
+        assert!(vrgcn_bytes(&d) > history);
+    }
+
+    #[test]
+    fn cluster_memory_flat_in_layers() {
+        // the paper's key memory claim: depth barely moves Cluster-GCN
+        let mut d = dims();
+        d.layers = 2;
+        let m2 = cluster_gcn_bytes(&d);
+        d.layers = 8;
+        let m8 = cluster_gcn_bytes(&d);
+        assert!(
+            (m8 as f64) < (m2 as f64) * 5.0,
+            "cluster-gcn memory blew up with depth"
+        );
+        // while vrgcn history scales with L
+        d.layers = 2;
+        let v2 = vrgcn_bytes(&d);
+        d.layers = 8;
+        let v8 = vrgcn_bytes(&d);
+        assert!(v8 as f64 > v2 as f64 * 2.0);
+    }
+
+    #[test]
+    fn receptive_field_caps_at_n() {
+        let f = receptive_field(512, 30.0, 4, 10_000);
+        assert_eq!(f.last().copied(), Some(10_000));
+        assert_eq!(f[0], 512);
+    }
+}

@@ -1,0 +1,188 @@
+//! Evaluation metrics: micro-F1 (the paper's accuracy metric for both
+//! the multi-class and multi-label tasks) and label entropy (Fig. 2).
+
+use crate::graph::{Dataset, Labels, Task};
+
+/// Micro-F1 over the given nodes from dense logits rows.
+///
+/// - multiclass: argmax prediction; micro-F1 == accuracy.
+/// - multilabel: sigmoid(logit) > 0.5 ⇔ logit > 0 per class.
+pub fn micro_f1(
+    ds: &Dataset,
+    nodes: &[u32],
+    logits: &[f32],
+    classes: usize,
+) -> f64 {
+    debug_assert_eq!(logits.len(), nodes.len() * classes);
+    match ds.task {
+        Task::Multiclass => {
+            let mut correct = 0usize;
+            for (i, &v) in nodes.iter().enumerate() {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = argmax(row);
+                if ds.labels.has_label(v as usize, pred) {
+                    correct += 1;
+                }
+            }
+            if nodes.is_empty() {
+                0.0
+            } else {
+                correct as f64 / nodes.len() as f64
+            }
+        }
+        Task::Multilabel => {
+            let (mut tp, mut fp, mut fnn) = (0u64, 0u64, 0u64);
+            for (i, &v) in nodes.iter().enumerate() {
+                let row = &logits[i * classes..(i + 1) * classes];
+                for c in 0..classes {
+                    let pred = row[c] > 0.0;
+                    let truth = ds.labels.has_label(v as usize, c);
+                    match (pred, truth) {
+                        (true, true) => tp += 1,
+                        (true, false) => fp += 1,
+                        (false, true) => fnn += 1,
+                        (false, false) => {}
+                    }
+                }
+            }
+            let denom = 2 * tp + fp + fnn;
+            if denom == 0 {
+                0.0
+            } else {
+                2.0 * tp as f64 / denom as f64
+            }
+        }
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Label-distribution entropy of a batch (Fig. 2); multiclass uses the
+/// class histogram, multilabel the per-class positive counts.
+pub fn batch_label_entropy(ds: &Dataset, nodes: &[u32]) -> f64 {
+    let hist = ds.label_histogram(nodes);
+    crate::util::entropy(&hist)
+}
+
+/// Fraction of exactly-matching label sets (subset accuracy; secondary
+/// metric for multilabel sanity checks).
+pub fn subset_accuracy(
+    ds: &Dataset,
+    nodes: &[u32],
+    logits: &[f32],
+    classes: usize,
+) -> f64 {
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    let mut exact = 0usize;
+    for (i, &v) in nodes.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let ok = match &ds.labels {
+            Labels::Multiclass(l) => argmax(row) == l[v as usize] as usize,
+            Labels::Multilabel { .. } => (0..classes)
+                .all(|c| (row[c] > 0.0) == ds.labels.has_label(v as usize, c)),
+        };
+        if ok {
+            exact += 1;
+        }
+    }
+    exact as f64 / nodes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, Split};
+
+    fn ds_multiclass() -> Dataset {
+        Dataset {
+            name: "m".into(),
+            task: Task::Multiclass,
+            graph: Csr::from_edges(3, &[(0, 1)]),
+            f_in: 1,
+            num_classes: 3,
+            features: vec![0.0; 3],
+            labels: Labels::Multiclass(vec![0, 1, 2]),
+            split: vec![Split::Train; 3],
+        }
+    }
+
+    #[test]
+    fn multiclass_f1_is_accuracy() {
+        let ds = ds_multiclass();
+        // predictions: node0 -> 0 (right), node1 -> 2 (wrong), node2 -> 2
+        let logits = vec![
+            5.0, 0.0, 0.0, //
+            0.0, 1.0, 3.0, //
+            0.0, 0.0, 9.0,
+        ];
+        let f1 = micro_f1(&ds, &[0, 1, 2], &logits, 3);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    fn ds_multilabel() -> Dataset {
+        let mut labels = Labels::multilabel_new(2, 3);
+        labels.set_label(0, 0);
+        labels.set_label(0, 1);
+        labels.set_label(1, 2);
+        Dataset {
+            name: "ml".into(),
+            task: Task::Multilabel,
+            graph: Csr::from_edges(2, &[(0, 1)]),
+            f_in: 1,
+            num_classes: 3,
+            features: vec![0.0; 2],
+            labels,
+            split: vec![Split::Train; 2],
+        }
+    }
+
+    #[test]
+    fn multilabel_f1() {
+        let ds = ds_multilabel();
+        // node0 predicts {0} (1 tp, 1 fn); node1 predicts {1,2} (1 tp, 1 fp)
+        let logits = vec![
+            1.0, -1.0, -1.0, //
+            -1.0, 1.0, 1.0,
+        ];
+        let f1 = micro_f1(&ds, &[0, 1], &logits, 3);
+        // tp=2 fp=1 fn=1 -> 2*2/(4+1+1) = 4/6
+        assert!((f1 - 4.0 / 6.0).abs() < 1e-12, "f1={f1}");
+    }
+
+    #[test]
+    fn perfect_predictions() {
+        let ds = ds_multilabel();
+        let logits = vec![
+            1.0, 1.0, -1.0, //
+            -1.0, -1.0, 1.0,
+        ];
+        assert_eq!(micro_f1(&ds, &[0, 1], &logits, 3), 1.0);
+        assert_eq!(subset_accuracy(&ds, &[0, 1], &logits, 3), 1.0);
+    }
+
+    #[test]
+    fn entropy_of_skewed_batch_is_lower() {
+        let ds = ds_multiclass();
+        let skewed = batch_label_entropy(&ds, &[0, 0, 0]);
+        let uniform = batch_label_entropy(&ds, &[0, 1, 2]);
+        assert!(skewed < uniform);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

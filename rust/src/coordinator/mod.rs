@@ -1,0 +1,19 @@
+//! The Cluster-GCN coordinator (the paper's system contribution at L3):
+//! cluster-batch sampling, batch assembly + renormalization, the fused
+//! PJRT training loop, exact host evaluation, metrics, and memory
+//! accounting.
+
+pub mod batch;
+pub mod batch_eval;
+pub mod checkpoint;
+pub mod inference;
+pub mod memory;
+pub mod metrics;
+pub mod sampler;
+pub mod schedule;
+pub mod trainer;
+
+pub use batch::{Batch, BatchAssembler};
+pub use sampler::ClusterSampler;
+pub use schedule::{EarlyStopper, LrSchedule};
+pub use trainer::{evaluate, train, CurvePoint, TrainOptions, TrainResult, TrainState};

@@ -1,0 +1,113 @@
+//! Stochastic multiple-partition batch scheduler (§3.2, Fig. 3,
+//! Algorithm 1 line 3): per epoch, shuffle the p clusters and emit
+//! batches of q clusters *without replacement*; the batch assembler adds
+//! back the between-cluster links of the union.
+
+use crate::util::Rng;
+
+pub struct ClusterSampler {
+    /// cluster node lists V_1..V_p (global node ids).
+    pub clusters: Vec<Vec<u32>>,
+    /// clusters per batch (q of §3.2).
+    pub q: usize,
+}
+
+impl ClusterSampler {
+    pub fn new(clusters: Vec<Vec<u32>>, q: usize) -> ClusterSampler {
+        assert!(q >= 1 && q <= clusters.len());
+        ClusterSampler { clusters, q }
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.clusters.len() / self.q
+    }
+
+    /// Largest possible batch (for b_max validation): sum of the q
+    /// largest clusters.
+    pub fn max_batch_nodes(&self) -> usize {
+        let mut sizes: Vec<usize> = self.clusters.iter().map(|c| c.len()).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        sizes.iter().take(self.q).sum()
+    }
+
+    /// One epoch's batch plan: a shuffled partition of cluster ids into
+    /// groups of q (trailing remainder dropped, like the paper's
+    /// without-replacement sampling).
+    pub fn epoch_plan(&self, rng: &mut Rng) -> Vec<Vec<u32>> {
+        let p = self.clusters.len();
+        let mut ids: Vec<u32> = (0..p as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.chunks_exact(self.q).map(|c| c.to_vec()).collect()
+    }
+
+    /// Materialize the node list of a batch (concatenated cluster
+    /// members; order defines the local indexing).
+    pub fn batch_nodes(&self, cluster_ids: &[u32], out: &mut Vec<u32>) {
+        out.clear();
+        for &c in cluster_ids {
+            out.extend_from_slice(&self.clusters[c as usize]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler(p: usize, q: usize) -> ClusterSampler {
+        let clusters: Vec<Vec<u32>> = (0..p)
+            .map(|c| ((c * 10)..(c * 10 + 10)).map(|v| v as u32).collect())
+            .collect();
+        ClusterSampler::new(clusters, q)
+    }
+
+    #[test]
+    fn plan_covers_all_clusters_once() {
+        let s = sampler(10, 2);
+        let mut rng = Rng::new(1);
+        let plan = s.epoch_plan(&mut rng);
+        assert_eq!(plan.len(), 5);
+        let mut seen: Vec<u32> = plan.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn remainder_dropped() {
+        let s = sampler(10, 3);
+        let mut rng = Rng::new(2);
+        let plan = s.epoch_plan(&mut rng);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(s.batches_per_epoch(), 3);
+    }
+
+    #[test]
+    fn plans_differ_across_epochs() {
+        let s = sampler(12, 3);
+        let mut rng = Rng::new(3);
+        let p1 = s.epoch_plan(&mut rng);
+        let p2 = s.epoch_plan(&mut rng);
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn batch_nodes_concatenate() {
+        let s = sampler(4, 2);
+        let mut nodes = Vec::new();
+        s.batch_nodes(&[2, 0], &mut nodes);
+        assert_eq!(nodes.len(), 20);
+        assert_eq!(nodes[0], 20);
+        assert_eq!(nodes[10], 0);
+    }
+
+    #[test]
+    fn max_batch_nodes() {
+        let mut clusters = vec![vec![0; 5], vec![0; 9], vec![0; 7]];
+        clusters[0] = (0..5).collect();
+        clusters[1] = (5..14).collect();
+        clusters[2] = (14..21).collect();
+        let s = ClusterSampler::new(clusters, 2);
+        assert_eq!(s.max_batch_nodes(), 16);
+    }
+}

@@ -1,0 +1,113 @@
+//! Learning-rate schedules + early stopping for the training loop.
+//!
+//! The AOT `train_step` takes `lr` as a runtime scalar input, so
+//! schedules are purely host-side policy — no artifact changes needed.
+
+/// Per-epoch learning-rate policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// paper setting: constant (Adam, lr 0.01).
+    Constant,
+    /// multiply by `factor` every `every` epochs.
+    StepDecay { every: usize, factor: f32 },
+    /// linear decay from base to `end_frac * base` over the run.
+    Linear { end_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, base: f32, epoch: usize, total_epochs: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant => base,
+            LrSchedule::StepDecay { every, factor } => {
+                let k = if every == 0 { 0 } else { (epoch - 1) / every };
+                base * factor.powi(k as i32)
+            }
+            LrSchedule::Linear { end_frac } => {
+                if total_epochs <= 1 {
+                    return base;
+                }
+                let t = (epoch - 1) as f32 / (total_epochs - 1) as f32;
+                base * (1.0 - t + t * end_frac)
+            }
+        }
+    }
+}
+
+/// Early stopping on the eval metric (higher = better).
+#[derive(Clone, Debug)]
+pub struct EarlyStopper {
+    /// stop after this many evals without improvement (0 = disabled).
+    pub patience: usize,
+    best: f64,
+    since_best: usize,
+}
+
+impl EarlyStopper {
+    pub fn new(patience: usize) -> EarlyStopper {
+        EarlyStopper { patience, best: f64::NEG_INFINITY, since_best: 0 }
+    }
+
+    /// Record an eval; returns true when training should stop.
+    pub fn update(&mut self, metric: f64) -> bool {
+        if self.patience == 0 {
+            return false;
+        }
+        if metric > self.best {
+            self.best = metric;
+            self.since_best = 0;
+            false
+        } else {
+            self.since_best += 1;
+            self.since_best >= self.patience
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        assert_eq!(LrSchedule::Constant.lr_at(0.01, 5, 10), 0.01);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { every: 10, factor: 0.5 };
+        assert_eq!(s.lr_at(0.08, 1, 100), 0.08);
+        assert_eq!(s.lr_at(0.08, 10, 100), 0.08);
+        assert_eq!(s.lr_at(0.08, 11, 100), 0.04);
+        assert_eq!(s.lr_at(0.08, 21, 100), 0.02);
+    }
+
+    #[test]
+    fn linear() {
+        let s = LrSchedule::Linear { end_frac: 0.1 };
+        assert_eq!(s.lr_at(1.0, 1, 11), 1.0);
+        assert!((s.lr_at(1.0, 11, 11) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(1.0, 6, 11) - 0.55).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stop_patience() {
+        let mut e = EarlyStopper::new(2);
+        assert!(!e.update(0.5));
+        assert!(!e.update(0.6)); // improved
+        assert!(!e.update(0.55)); // 1 since best
+        assert!(e.update(0.58)); // 2 since best -> stop
+        assert_eq!(e.best(), 0.6);
+    }
+
+    #[test]
+    fn disabled_never_stops() {
+        let mut e = EarlyStopper::new(0);
+        for _ in 0..100 {
+            assert!(!e.update(0.1));
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! The Cluster-GCN training loop (Algorithm 1): sample q clusters,
+//! assemble the renormalized union block, run the fused PJRT
+//! `train_step`, keep params/Adam state across steps; periodically
+//! evaluate with exact host inference.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::BatchAssembler;
+use crate::coordinator::schedule::{EarlyStopper, LrSchedule};
+use crate::coordinator::inference::{full_forward, gather_rows};
+use crate::coordinator::metrics::micro_f1;
+use crate::coordinator::sampler::ClusterSampler;
+use crate::graph::{Dataset, Split};
+use crate::norm::NormConfig;
+use crate::runtime::{ArtifactMeta, Engine, Tensor};
+use crate::util::{Rng, Timer};
+
+/// Model parameters + Adam state, fed through the executable each step.
+#[derive(Clone)]
+pub struct TrainState {
+    pub weights: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Glorot-uniform init (matches `model.init_weights` in spirit; the
+    /// exact stream differs — reproducibility is per-side, keyed by
+    /// seed).
+    pub fn init(meta: &ArtifactMeta, seed: u64) -> TrainState {
+        let mut rng = Rng::new(seed ^ 0x1717_C6CA_11AD_0001);
+        let mut weights = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for &(fi, fo) in &meta.weight_shapes {
+            let bound = (6.0 / (fi + fo) as f64).sqrt() as f32;
+            let data: Vec<f32> = (0..fi * fo)
+                .map(|_| (rng.f32() * 2.0 - 1.0) * bound)
+                .collect();
+            weights.push(Tensor::new(vec![fi, fo], data));
+            m.push(Tensor::zeros(vec![fi, fo]));
+            v.push(Tensor::zeros(vec![fi, fo]));
+        }
+        TrainState { weights, m, v, step: 0 }
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        self.weights.iter().map(|w| w.size_bytes()).sum::<usize>() * 3
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub lr: f32,
+    pub epochs: usize,
+    /// evaluate every k epochs (0 = only at the end).
+    pub eval_every: usize,
+    pub seed: u64,
+    pub norm: NormConfig,
+    /// evaluate on this split for the convergence curve.
+    pub eval_split: Split,
+    /// cap steps per epoch (0 = no cap); memory/timing benches use a
+    /// few steps to reach peak state without a full pass.
+    pub max_steps_per_epoch: usize,
+    /// learning-rate schedule over epochs (lr is a runtime input).
+    pub schedule: LrSchedule,
+    /// early-stop patience in evals (0 = disabled).
+    pub patience: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            lr: 0.01, // the paper: Adam, lr 0.01, for every method
+            epochs: 40,
+            eval_every: 5,
+            seed: 0,
+            norm: NormConfig::PAPER_DEFAULT,
+            eval_split: Split::Val,
+            max_steps_per_epoch: 0,
+            schedule: LrSchedule::Constant,
+            patience: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub epoch: usize,
+    /// cumulative *training* seconds (eval time excluded, like the
+    /// paper's Fig. 6 x-axis).
+    pub train_seconds: f64,
+    pub train_loss: f64,
+    pub eval_f1: f64,
+}
+
+pub struct TrainResult {
+    pub state: TrainState,
+    pub curve: Vec<CurvePoint>,
+    pub train_seconds: f64,
+    pub steps: u64,
+    /// peak bytes of (batch tensors + param/opt state) — the measured
+    /// analogue of Table 5's training memory.
+    pub peak_bytes: usize,
+    /// total within-batch directed edges / total batch nodes (embedding
+    /// utilization diagnostics).
+    pub avg_within_edges_per_node: f64,
+}
+
+/// Run Cluster-GCN training; the sampler supplies cluster batches.
+pub fn train(
+    engine: &mut Engine,
+    ds: &Dataset,
+    sampler: &ClusterSampler,
+    artifact: &str,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let meta = engine.meta(artifact)?;
+    if sampler.max_batch_nodes() > meta.b_max {
+        return Err(anyhow!(
+            "sampler can produce {} nodes but artifact {} has b_max={}",
+            sampler.max_batch_nodes(),
+            artifact,
+            meta.b_max
+        ));
+    }
+    engine.ensure_compiled(artifact)?;
+
+    let mut state = TrainState::init(&meta, opts.seed);
+    let mut rng = Rng::new(opts.seed ^ 0x5A5A_0000_1111_2222);
+    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let eval_nodes = ds.nodes_in_split(opts.eval_split);
+
+    let mut curve = Vec::new();
+    let mut train_seconds = 0.0;
+    let mut steps = 0u64;
+    let mut peak_bytes = 0usize;
+    let mut within_edges = 0u64;
+    let mut batch_nodes = 0u64;
+    let mut nodes_buf: Vec<u32> = Vec::new();
+
+    let mut stopper = EarlyStopper::new(opts.patience);
+    for epoch in 1..=opts.epochs {
+        let lr = opts.schedule.lr_at(opts.lr, epoch, opts.epochs);
+        let timer = Timer::start();
+        let plan = sampler.epoch_plan(&mut rng);
+        let mut epoch_loss = 0.0f64;
+        let mut epoch_batches = 0usize;
+        for cluster_ids in &plan {
+            if opts.max_steps_per_epoch > 0 && epoch_batches >= opts.max_steps_per_epoch {
+                break;
+            }
+            sampler.batch_nodes(cluster_ids, &mut nodes_buf);
+            let batch = assembler.assemble(ds, &nodes_buf);
+            if batch.n_train == 0 {
+                continue; // nothing to learn from (all val/test nodes)
+            }
+            within_edges += batch.within_edges as u64;
+            batch_nodes += batch.n_real as u64;
+            peak_bytes = peak_bytes.max(batch.bytes() + state.param_bytes());
+
+            let loss = step(engine, artifact, &mut state, lr, &batch)?;
+            epoch_loss += loss as f64;
+            epoch_batches += 1;
+            steps += 1;
+        }
+        train_seconds += timer.secs();
+
+        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
+            || epoch == opts.epochs;
+        if do_eval {
+            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            curve.push(CurvePoint {
+                epoch,
+                train_seconds,
+                train_loss: epoch_loss / epoch_batches.max(1) as f64,
+                eval_f1: f1,
+            });
+            if stopper.update(f1) {
+                break; // early stop: no improvement for `patience` evals
+            }
+        }
+    }
+
+    Ok(TrainResult {
+        state,
+        curve,
+        train_seconds,
+        steps,
+        peak_bytes,
+        avg_within_edges_per_node: within_edges as f64 / batch_nodes.max(1) as f64,
+    })
+}
+
+/// One fused train step over an assembled batch; updates `state`
+/// in-place and returns the batch loss.
+pub fn step(
+    engine: &mut Engine,
+    artifact: &str,
+    state: &mut TrainState,
+    lr: f32,
+    batch: &crate::coordinator::batch::Batch,
+) -> Result<f32> {
+    state.step += 1;
+    let l = state.weights.len();
+    let step_t = Tensor::scalar(state.step as f32);
+    let lr_t = Tensor::scalar(lr);
+    let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * l + 6);
+    inputs.extend(state.weights.iter());
+    inputs.extend(state.m.iter());
+    inputs.extend(state.v.iter());
+    inputs.push(&step_t);
+    inputs.push(&lr_t);
+    inputs.push(&batch.a);
+    inputs.push(&batch.x);
+    inputs.push(&batch.y);
+    inputs.push(&batch.mask);
+
+    let mut out = engine.run_refs(artifact, &inputs)?;
+    let loss = out
+        .pop()
+        .ok_or_else(|| anyhow!("empty output"))?
+        .data
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty loss"))?;
+    if !loss.is_finite() {
+        return Err(anyhow!("non-finite loss at step {}", state.step));
+    }
+    let vs: Vec<Tensor> = out.split_off(2 * l);
+    let ms: Vec<Tensor> = out.split_off(l);
+    state.weights = out;
+    state.m = ms;
+    state.v = vs;
+    Ok(loss)
+}
+
+/// Exact host-side evaluation (full-graph inference) → micro-F1.
+pub fn evaluate(
+    ds: &Dataset,
+    weights: &[Tensor],
+    norm: NormConfig,
+    residual: bool,
+    nodes: &[u32],
+) -> f64 {
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    let logits = full_forward(ds, weights, norm, residual);
+    let rows = gather_rows(&logits, ds.num_classes, nodes);
+    micro_f1(ds, nodes, &rows, ds.num_classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Kind;
+    use crate::graph::Task;
+
+    fn fake_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "x".into(),
+            file: "/dev/null".into(),
+            kind: Kind::Train,
+            task: Task::Multiclass,
+            layers: 2,
+            f_in: 8,
+            f_hid: 16,
+            classes: 4,
+            b_max: 128,
+            residual: false,
+            weight_shapes: vec![(8, 16), (16, 4)],
+            vmem_bytes_est: 0,
+            mxu_utilization_est: 0.0,
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_range() {
+        let st = TrainState::init(&fake_meta(), 3);
+        assert_eq!(st.weights.len(), 2);
+        assert_eq!(st.weights[0].dims, vec![8, 16]);
+        assert_eq!(st.m[1].dims, vec![16, 4]);
+        let bound = (6.0f64 / 24.0).sqrt() as f32;
+        assert!(st.weights[0].data.iter().all(|&w| w.abs() <= bound));
+        assert!(st.m.iter().all(|t| t.data.iter().all(|&x| x == 0.0)));
+        // not all zero
+        assert!(st.weights[0].data.iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let a = TrainState::init(&fake_meta(), 1);
+        let b = TrainState::init(&fake_meta(), 1);
+        let c = TrainState::init(&fake_meta(), 2);
+        assert_eq!(a.weights[0].data, b.weights[0].data);
+        assert_ne!(a.weights[0].data, c.weights[0].data);
+    }
+
+    #[test]
+    fn param_bytes_counts_adam() {
+        let st = TrainState::init(&fake_meta(), 0);
+        let one_set = (8 * 16 + 16 * 4) * 4;
+        assert_eq!(st.param_bytes(), 3 * one_set);
+    }
+}

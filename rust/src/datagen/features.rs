@@ -1,0 +1,234 @@
+//! Label/community-correlated feature + label models layered on the SBM
+//! topology (DESIGN.md §4): features are Gaussian mixtures around
+//! class + community centroids, so a GCN can actually learn — and
+//! deeper propagation genuinely helps (neighbors share community, hence
+//! centroid), mirroring why depth pays off on PPI in the paper.
+
+use crate::graph::{Labels, Task};
+use crate::util::Rng;
+
+pub struct LabelModel {
+    pub task: Task,
+    pub classes: usize,
+    /// multiclass: probability a node keeps its community's class;
+    /// multilabel: per-class flip noise.
+    pub noise: f64,
+    /// multilabel only: how many classes a community switches "on".
+    pub active_per_community: usize,
+}
+
+/// Assign labels given community structure.
+pub fn gen_labels(
+    model: &LabelModel,
+    community: &[u32],
+    communities: usize,
+    rng: &mut Rng,
+) -> Labels {
+    let n = community.len();
+    match model.task {
+        Task::Multiclass => {
+            // each community leans to one dominant class
+            let dominant: Vec<u32> = (0..communities)
+                .map(|_| rng.below(model.classes as u64) as u32)
+                .collect();
+            let mut labels = vec![0u32; n];
+            for v in 0..n {
+                labels[v] = if rng.f64() < model.noise {
+                    rng.below(model.classes as u64) as u32
+                } else {
+                    dominant[community[v] as usize]
+                };
+            }
+            Labels::Multiclass(labels)
+        }
+        Task::Multilabel => {
+            // each community activates a subset of classes
+            let mut active: Vec<Vec<bool>> = Vec::with_capacity(communities);
+            for _ in 0..communities {
+                let mut on = vec![false; model.classes];
+                let k = model.active_per_community.min(model.classes);
+                for idx in rng.sample_distinct(model.classes, k) {
+                    on[idx] = true;
+                }
+                active.push(on);
+            }
+            let mut labels = Labels::multilabel_new(n, model.classes);
+            for v in 0..n {
+                let on = &active[community[v] as usize];
+                for (c, &is_on) in on.iter().enumerate() {
+                    let p = if is_on { 0.85 } else { 0.03 };
+                    let p = if rng.f64() < model.noise { 1.0 - p } else { p };
+                    if rng.f64() < p {
+                        labels.set_label(v, c);
+                    }
+                }
+            }
+            labels
+        }
+    }
+}
+
+/// Features: class-centroid + community-centroid + white noise,
+/// row-major [n, f_in].
+pub fn gen_features(
+    labels: &Labels,
+    community: &[u32],
+    communities: usize,
+    classes: usize,
+    f_in: usize,
+    noise: f64,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let n = community.len();
+    let centroid = |rng: &mut Rng| -> Vec<f32> {
+        (0..f_in).map(|_| rng.normal() as f32 * 0.8).collect()
+    };
+    let class_c: Vec<Vec<f32>> = (0..classes).map(|_| centroid(rng)).collect();
+    let comm_c: Vec<Vec<f32>> = (0..communities).map(|_| centroid(rng)).collect();
+
+    let mut x = vec![0f32; n * f_in];
+    for v in 0..n {
+        let row = &mut x[v * f_in..(v + 1) * f_in];
+        let cc = &comm_c[community[v] as usize];
+        match labels {
+            Labels::Multiclass(l) => {
+                let lc = &class_c[l[v] as usize];
+                for j in 0..f_in {
+                    row[j] = lc[j] + 0.5 * cc[j] + noise as f32 * rng.normal() as f32;
+                }
+            }
+            Labels::Multilabel { .. } => {
+                // average of active class centroids
+                let mut cnt = 0f32;
+                for c in 0..classes {
+                    if labels.has_label(v, c) {
+                        for j in 0..f_in {
+                            row[j] += class_c[c][j];
+                        }
+                        cnt += 1.0;
+                    }
+                }
+                let inv = if cnt > 0.0 { 1.0 / cnt } else { 0.0 };
+                for j in 0..f_in {
+                    row[j] = row[j] * inv + 0.5 * cc[j]
+                        + noise as f32 * rng.normal() as f32;
+                }
+            }
+        }
+    }
+    // feature normalization (paper §6.2 "feature normalization is also
+    // conducted"): per-feature standardization.
+    for j in 0..f_in {
+        let mut mean = 0f64;
+        for v in 0..n {
+            mean += x[v * f_in + j] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0f64;
+        for v in 0..n {
+            let d = x[v * f_in + j] as f64 - mean;
+            var += d * d;
+        }
+        let std = (var / n as f64).sqrt().max(1e-6);
+        for v in 0..n {
+            x[v * f_in + j] = ((x[v * f_in + j] as f64 - mean) / std) as f32;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiclass_labels_in_range() {
+        let mut rng = Rng::new(1);
+        let community: Vec<u32> = (0..500).map(|i| (i % 10) as u32).collect();
+        let m = LabelModel {
+            task: Task::Multiclass,
+            classes: 7,
+            noise: 0.1,
+            active_per_community: 0,
+        };
+        let labels = gen_labels(&m, &community, 10, &mut rng);
+        if let Labels::Multiclass(v) = &labels {
+            assert!(v.iter().all(|&c| c < 7));
+            // same community should be mostly one class
+            let c0: Vec<u32> = (0..500).filter(|i| i % 10 == 0).map(|i| v[i]).collect();
+            let mut h = [0usize; 7];
+            for &c in &c0 {
+                h[c as usize] += 1;
+            }
+            assert!(*h.iter().max().unwrap() as f64 > 0.6 * c0.len() as f64);
+        } else {
+            panic!("wrong labels kind");
+        }
+    }
+
+    #[test]
+    fn multilabel_density() {
+        let mut rng = Rng::new(2);
+        let community: Vec<u32> = (0..400).map(|i| (i % 4) as u32).collect();
+        let m = LabelModel {
+            task: Task::Multilabel,
+            classes: 50,
+            noise: 0.02,
+            active_per_community: 15,
+        };
+        let labels = gen_labels(&m, &community, 4, &mut rng);
+        let mut on = 0usize;
+        for v in 0..400 {
+            for c in 0..50 {
+                if labels.has_label(v, c) {
+                    on += 1;
+                }
+            }
+        }
+        let per_node = on as f64 / 400.0;
+        // ~ 15*0.85 + 35*0.03 ≈ 13.8
+        assert!(per_node > 9.0 && per_node < 19.0, "per_node={per_node}");
+    }
+
+    #[test]
+    fn features_standardized() {
+        let mut rng = Rng::new(3);
+        let community: Vec<u32> = (0..300).map(|i| (i % 3) as u32).collect();
+        let labels = Labels::Multiclass((0..300).map(|i| (i % 5) as u32).collect());
+        let x = gen_features(&labels, &community, 3, 5, 16, 0.5, &mut rng);
+        assert_eq!(x.len(), 300 * 16);
+        for j in 0..16 {
+            let mean: f64 = (0..300).map(|v| x[v * 16 + j] as f64).sum::<f64>() / 300.0;
+            assert!(mean.abs() < 1e-3, "feature {j} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn features_separate_classes() {
+        // nodes of the same class should be closer in feature space
+        let mut rng = Rng::new(4);
+        let community = vec![0u32; 200];
+        let labels = Labels::Multiclass(
+            (0..200).map(|i| if i < 100 { 0 } else { 1 }).collect(),
+        );
+        let x = gen_features(&labels, &community, 1, 2, 8, 0.3, &mut rng);
+        let centroid = |lo: usize, hi: usize| -> Vec<f64> {
+            let mut c = vec![0f64; 8];
+            for v in lo..hi {
+                for j in 0..8 {
+                    c[j] += x[v * 8 + j] as f64;
+                }
+            }
+            c.iter().map(|s| s / (hi - lo) as f64).collect()
+        };
+        let c0 = centroid(0, 100);
+        let c1 = centroid(100, 200);
+        let dist: f64 = c0
+            .iter()
+            .zip(&c1)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.5, "class centroids not separated: {dist}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic dataset generation (stand-ins for the paper's datasets —
+//! DESIGN.md §4): SBM topology + community-correlated labels/features.
+
+pub mod features;
+pub mod presets;
+pub mod sbm;
+
+pub use presets::{build, build_cached, preset, Preset, PRESETS};
+pub use sbm::{generate, SbmGraph, SbmSpec};

@@ -1,0 +1,273 @@
+//! Named dataset presets — scaled synthetic stand-ins for the paper's
+//! datasets (Table 3 / Table 12; substitutions documented in DESIGN.md
+//! §4).  Feature dims are padded to multiples the kernels tile well
+//! (e.g. PPI's 50 -> 64).  Shapes must stay in sync with
+//! `python/compile/manifest.py`.
+
+use crate::graph::{Dataset, Split, Task};
+use crate::util::Rng;
+
+use super::features::{gen_features, gen_labels, LabelModel};
+use super::sbm::{generate, SbmSpec};
+
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: &'static str,
+    pub task: Task,
+    pub n: usize,
+    pub communities: usize,
+    pub avg_deg: f64,
+    pub intra_frac: f64,
+    pub classes: usize,
+    pub f_in: usize,
+    pub label_noise: f64,
+    pub feat_noise: f64,
+    pub active_per_community: usize,
+    /// (train, val) fractions; test = remainder.
+    pub split: (f64, f64),
+    /// default #partitions (paper Table 4) and clusters per batch.
+    pub default_partitions: usize,
+    pub default_q: usize,
+    /// padded batch size — must match the AOT manifest's b_max.
+    pub b_max: usize,
+    pub f_hid: usize,
+}
+
+pub const PRESETS: &[Preset] = &[
+    // Table 2 datasets -----------------------------------------------------
+    Preset {
+        name: "cora_like",
+        task: Task::Multiclass,
+        n: 2708,
+        communities: 28,
+        avg_deg: 4.9,
+        intra_frac: 0.83,
+        classes: 7,
+        f_in: 128,
+        label_noise: 0.12,
+        feat_noise: 1.0,
+        active_per_community: 0,
+        split: (0.60, 0.20),
+        default_partitions: 10,
+        default_q: 1,
+        b_max: 512,
+        f_hid: 128,
+    },
+    Preset {
+        name: "pubmed_like",
+        task: Task::Multiclass,
+        n: 19_717,
+        communities: 60,
+        avg_deg: 5.5,
+        intra_frac: 0.82,
+        classes: 3,
+        f_in: 128,
+        label_noise: 0.15,
+        feat_noise: 1.2,
+        active_per_community: 0,
+        split: (0.60, 0.20),
+        default_partitions: 10,
+        default_q: 1,
+        b_max: 2560,
+        f_hid: 128,
+    },
+    // PPI: 56,944 nodes scaled 1/4; multilabel 121 classes ----------------
+    Preset {
+        name: "ppi_like",
+        task: Task::Multilabel,
+        n: 14_236,
+        communities: 110,
+        avg_deg: 28.8,
+        intra_frac: 0.88,
+        classes: 121,
+        f_in: 64,
+        label_noise: 0.03,
+        feat_noise: 0.9,
+        active_per_community: 30,
+        split: (0.79, 0.11),
+        default_partitions: 50,
+        default_q: 1,
+        b_max: 512,
+        f_hid: 512,
+    },
+    // Reddit: 232,965 nodes scaled ~1/6.5; degree scaled 99.6 -> 50 -------
+    Preset {
+        name: "reddit_like",
+        task: Task::Multiclass,
+        n: 36_000,
+        communities: 450,
+        avg_deg: 50.0,
+        intra_frac: 0.87,
+        classes: 41,
+        f_in: 128,
+        label_noise: 0.08,
+        feat_noise: 1.0,
+        active_per_community: 0,
+        split: (0.66, 0.10),
+        default_partitions: 1500,
+        default_q: 20,
+        b_max: 768,
+        f_hid: 128,
+    },
+    // Amazon: 334,863 nodes scaled ~1/8; paper has no features (identity);
+    // we substitute low-dim random-projection features (DESIGN.md §4).
+    Preset {
+        name: "amazon_like",
+        task: Task::Multilabel,
+        n: 40_000,
+        communities: 320,
+        avg_deg: 5.5,
+        intra_frac: 0.85,
+        classes: 58,
+        f_in: 64,
+        label_noise: 0.04,
+        feat_noise: 1.1,
+        active_per_community: 12,
+        split: (0.27, 0.05),
+        default_partitions: 200,
+        default_q: 1,
+        b_max: 384,
+        f_hid: 128,
+    },
+    // Amazon2M: 2,449,029 nodes scaled ~1/15; degree 50.5 -> 25 -----------
+    Preset {
+        name: "amazon2m_like",
+        task: Task::Multiclass,
+        n: 160_000,
+        communities: 1400,
+        avg_deg: 25.0,
+        intra_frac: 0.86,
+        classes: 47,
+        f_in: 100,
+        label_noise: 0.10,
+        feat_noise: 1.1,
+        active_per_community: 0,
+        split: (0.70, 0.05),
+        default_partitions: 1200,
+        default_q: 10,
+        b_max: 1792,
+        f_hid: 400,
+    },
+];
+
+pub fn preset(name: &str) -> Option<&'static Preset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+/// Generate the dataset for a preset (deterministic in `seed`).
+pub fn build(p: &Preset, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xC1A5_7E2C_6C4E_5EED);
+    let sbm = generate(
+        &SbmSpec {
+            n: p.n,
+            communities: p.communities,
+            avg_deg: p.avg_deg,
+            intra_frac: p.intra_frac,
+            size_skew: 1.5,
+        },
+        &mut rng,
+    );
+    let labels = gen_labels(
+        &LabelModel {
+            task: p.task,
+            classes: p.classes,
+            noise: p.label_noise,
+            active_per_community: p.active_per_community,
+        },
+        &sbm.community,
+        p.communities,
+        &mut rng,
+    );
+    let features = gen_features(
+        &labels,
+        &sbm.community,
+        p.communities,
+        p.classes,
+        p.f_in,
+        p.feat_noise,
+        &mut rng,
+    );
+    let split = (0..p.n)
+        .map(|_| {
+            let r = rng.f64();
+            if r < p.split.0 {
+                Split::Train
+            } else if r < p.split.0 + p.split.1 {
+                Split::Val
+            } else {
+                Split::Test
+            }
+        })
+        .collect();
+    let ds = Dataset {
+        name: p.name.to_string(),
+        task: p.task,
+        graph: sbm.graph,
+        f_in: p.f_in,
+        num_classes: p.classes,
+        features,
+        labels,
+        split,
+    };
+    debug_assert!(ds.validate().is_ok());
+    ds
+}
+
+/// Build or load from the on-disk cache under `dir`.
+pub fn build_cached(p: &Preset, seed: u64, dir: &std::path::Path) -> std::io::Result<Dataset> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}_s{}.bin", p.name, seed));
+    if path.exists() {
+        if let Ok(ds) = crate::graph::io::load(&path) {
+            return Ok(ds);
+        }
+    }
+    let ds = build(p, seed);
+    crate::graph::io::save(&ds, &path)?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cora_like_builds_and_validates() {
+        let p = preset("cora_like").unwrap();
+        let ds = build(p, 42);
+        ds.validate().unwrap();
+        assert_eq!(ds.n(), 2708);
+        assert_eq!(ds.num_classes, 7);
+        let (tr, va, te) = ds.split_counts();
+        assert!(tr > va && tr > te && va > 0 && te > 0);
+    }
+
+    #[test]
+    fn ppi_like_multilabel() {
+        let p = preset("ppi_like").unwrap();
+        let ds = build(p, 42);
+        ds.validate().unwrap();
+        assert_eq!(ds.task, Task::Multilabel);
+        // mean labels per node should be ~ active * 0.85
+        let h = ds.label_histogram(&(0..200u32).collect::<Vec<_>>());
+        let per_node: f64 = h.iter().sum::<usize>() as f64 / 200.0;
+        assert!(per_node > 5.0, "labels too sparse: {per_node}");
+    }
+
+    #[test]
+    fn all_presets_resolve() {
+        for p in PRESETS {
+            assert!(preset(p.name).is_some());
+            assert!(p.b_max % 128 == 0, "{} b_max not tile aligned", p.name);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = preset("cora_like").unwrap();
+        let a = build(p, 7);
+        let b = build(p, 7);
+        assert_eq!(a.graph.cols, b.graph.cols);
+        assert_eq!(a.features, b.features);
+    }
+}

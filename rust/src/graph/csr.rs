@@ -1,0 +1,217 @@
+//! Compressed-sparse-row graph store.
+//!
+//! The whole pipeline — generators, the multilevel partitioner, batch
+//! assembly, exact host inference — operates on this one structure.
+//! Graphs are undirected and stored symmetrically (every edge appears in
+//! both adjacency lists), matching the paper's setting where `A` is a
+//! symmetric 0/1 adjacency matrix.
+
+/// CSR adjacency with optional edge weights (the coarsened graphs of the
+/// multilevel partitioner carry accumulated edge weights; level-0 input
+/// graphs have unit weights).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Row offsets, length n+1.
+    pub offsets: Vec<usize>,
+    /// Column indices, length = 2 * #edges (symmetric storage).
+    pub cols: Vec<u32>,
+    /// Edge weights aligned with `cols` (unit for level-0 graphs).
+    pub weights: Vec<u32>,
+    /// Node weights (coarsening accumulates contracted node counts).
+    pub node_weights: Vec<u32>,
+}
+
+impl Csr {
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges (symmetric entries / 2).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.cols.len() / 2
+    }
+
+    /// Number of stored (directed) entries == nnz of A.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.cols[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    #[inline]
+    pub fn neighbor_weights(&self, v: usize) -> &[u32] {
+        &self.weights[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    pub fn total_node_weight(&self) -> u64 {
+        self.node_weights.iter().map(|&w| w as u64).sum()
+    }
+
+    /// Build from an undirected edge list (deduplicates, drops self
+    /// loops, symmetrizes). Nodes are `0..n`.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0usize; n];
+        let mut clean = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            debug_assert!((u as usize) < n && (v as usize) < n);
+            let (a, b) = if u < v { (u, v) } else { (v, u) };
+            clean.push((a, b));
+        }
+        clean.sort_unstable();
+        clean.dedup();
+        for &(u, v) in &clean {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut cols = vec![0u32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(u, v) in &clean {
+            cols[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            cols[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // sort each adjacency list for binary-searchable lookups
+        for v in 0..n {
+            cols[offsets[v]..offsets[v + 1]].sort_unstable();
+        }
+        let nnz = cols.len();
+        Csr {
+            offsets,
+            cols,
+            weights: vec![1; nnz],
+            node_weights: vec![1; n],
+        }
+    }
+
+    /// Is (u, v) an edge? Adjacency lists are sorted by construction.
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Structural validation; used by tests and after IO.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n();
+        if self.weights.len() != self.cols.len() {
+            return Err("weights/cols length mismatch".into());
+        }
+        if self.node_weights.len() != n {
+            return Err("node_weights length mismatch".into());
+        }
+        if *self.offsets.last().unwrap() != self.cols.len() {
+            return Err("offsets end != cols len".into());
+        }
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets not monotone at {v}"));
+            }
+            let nb = self.neighbors(v);
+            for w in nb.windows(2) {
+                if w[0] > w[1] {
+                    return Err(format!("unsorted adjacency at {v}"));
+                }
+            }
+            for &u in nb {
+                if u as usize >= n {
+                    return Err(format!("col out of range at {v}"));
+                }
+                if u as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if !self.has_edge(u as usize, v) {
+                    return Err(format!("asymmetric edge {v}->{u}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Degree statistics (Table 3-style reporting).
+    pub fn degree_stats(&self) -> (usize, usize, f64) {
+        let n = self.n();
+        if n == 0 {
+            return (0, 0, 0.0);
+        }
+        let mut min = usize::MAX;
+        let mut max = 0;
+        for v in 0..n {
+            let d = self.degree(v);
+            min = min.min(d);
+            max = max.max(d);
+        }
+        (min, max, self.nnz() as f64 / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Csr {
+        Csr::from_edges(3, &[(0, 1), (1, 2), (2, 0)])
+    }
+
+    #[test]
+    fn build_triangle() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.nnz(), 6);
+        for v in 0..3 {
+            assert_eq!(g.degree(v), 2);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(2), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn has_edge() {
+        let g = triangle();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        let g2 = Csr::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!g2.has_edge(0, 2));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(5, &[]);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.num_edges(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = Csr::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let (min, max, avg) = g.degree_stats();
+        assert_eq!((min, max), (1, 3));
+        assert!((avg - 1.5).abs() < 1e-12);
+    }
+}

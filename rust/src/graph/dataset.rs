@@ -1,0 +1,238 @@
+//! Dataset container: graph + node features + labels + train/val/test
+//! split (Table 3 / Table 12 of the paper).
+
+use super::csr::Csr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Softmax cross-entropy, single label per node (Reddit, Amazon2M).
+    Multiclass,
+    /// Sigmoid BCE, label bitset per node (PPI, Amazon).
+    Multilabel,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+#[derive(Clone, Debug)]
+pub enum Labels {
+    /// class id per node.
+    Multiclass(Vec<u32>),
+    /// row-major dense 0/1 matrix [n, classes] packed into u64 words;
+    /// `words_per_node = ceil(classes / 64)`.
+    Multilabel { bits: Vec<u64>, words_per_node: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub graph: Csr,
+    pub f_in: usize,
+    pub num_classes: usize,
+    /// row-major [n, f_in]
+    pub features: Vec<f32>,
+    pub labels: Labels,
+    pub split: Vec<Split>,
+}
+
+impl Labels {
+    pub fn multilabel_new(n: usize, classes: usize) -> Labels {
+        let wpn = classes.div_ceil(64);
+        Labels::Multilabel { bits: vec![0; n * wpn], words_per_node: wpn }
+    }
+
+    pub fn set_label(&mut self, node: usize, class: usize) {
+        match self {
+            Labels::Multiclass(v) => v[node] = class as u32,
+            Labels::Multilabel { bits, words_per_node } => {
+                bits[node * *words_per_node + class / 64] |= 1u64 << (class % 64);
+            }
+        }
+    }
+
+    pub fn has_label(&self, node: usize, class: usize) -> bool {
+        match self {
+            Labels::Multiclass(v) => v[node] == class as u32,
+            Labels::Multilabel { bits, words_per_node } => {
+                bits[node * *words_per_node + class / 64] >> (class % 64) & 1 == 1
+            }
+        }
+    }
+
+    pub fn class_of(&self, node: usize) -> Option<u32> {
+        match self {
+            Labels::Multiclass(v) => Some(v[node]),
+            Labels::Multilabel { .. } => None,
+        }
+    }
+
+    /// Write the one-hot / multi-hot row for `node` into `row` (length
+    /// = num_classes). Used by batch assembly.
+    pub fn write_row(&self, node: usize, classes: usize, row: &mut [f32]) {
+        debug_assert_eq!(row.len(), classes);
+        row.iter_mut().for_each(|x| *x = 0.0);
+        match self {
+            Labels::Multiclass(v) => {
+                row[v[node] as usize] = 1.0;
+            }
+            Labels::Multilabel { bits, words_per_node } => {
+                for c in 0..classes {
+                    if bits[node * *words_per_node + c / 64] >> (c % 64) & 1 == 1 {
+                        row[c] = 1.0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn feature_row(&self, node: usize) -> &[f32] {
+        &self.features[node * self.f_in..(node + 1) * self.f_in]
+    }
+
+    pub fn split_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for s in &self.split {
+            match s {
+                Split::Train => c.0 += 1,
+                Split::Val => c.1 += 1,
+                Split::Test => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    pub fn nodes_in_split(&self, want: Split) -> Vec<u32> {
+        (0..self.n())
+            .filter(|&v| self.split[v] == want)
+            .map(|v| v as u32)
+            .collect()
+    }
+
+    /// Class histogram over a node set (Fig. 2 label entropy; for
+    /// multilabel, each set bit counts).
+    pub fn label_histogram(&self, nodes: &[u32]) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &v in nodes {
+            match &self.labels {
+                Labels::Multiclass(l) => h[l[v as usize] as usize] += 1,
+                Labels::Multilabel { .. } => {
+                    for c in 0..self.num_classes {
+                        if self.labels.has_label(v as usize, c) {
+                            h[c] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Structural + shape validation.
+    pub fn validate(&self) -> Result<(), String> {
+        self.graph.validate()?;
+        let n = self.n();
+        if self.features.len() != n * self.f_in {
+            return Err("features shape mismatch".into());
+        }
+        if self.split.len() != n {
+            return Err("split length mismatch".into());
+        }
+        match &self.labels {
+            Labels::Multiclass(v) => {
+                if v.len() != n {
+                    return Err("labels length mismatch".into());
+                }
+                if v.iter().any(|&c| c as usize >= self.num_classes) {
+                    return Err("label out of range".into());
+                }
+            }
+            Labels::Multilabel { bits, words_per_node } => {
+                if *words_per_node != self.num_classes.div_ceil(64)
+                    || bits.len() != n * *words_per_node
+                {
+                    return Err("multilabel bits shape mismatch".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let graph = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let mut labels = Labels::Multiclass(vec![0; 4]);
+        labels.set_label(1, 2);
+        Dataset {
+            name: "tiny".into(),
+            task: Task::Multiclass,
+            graph,
+            f_in: 2,
+            num_classes: 3,
+            features: vec![0.0; 8],
+            labels,
+            split: vec![Split::Train, Split::Train, Split::Val, Split::Test],
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn split_counts() {
+        assert_eq!(tiny().split_counts(), (2, 1, 1));
+    }
+
+    #[test]
+    fn multiclass_row() {
+        let d = tiny();
+        let mut row = vec![9.0; 3];
+        d.labels.write_row(1, 3, &mut row);
+        assert_eq!(row, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn multilabel_bits() {
+        let mut l = Labels::multilabel_new(2, 70);
+        l.set_label(0, 0);
+        l.set_label(0, 69);
+        l.set_label(1, 64);
+        assert!(l.has_label(0, 0) && l.has_label(0, 69) && l.has_label(1, 64));
+        assert!(!l.has_label(0, 64) && !l.has_label(1, 0));
+        let mut row = vec![0.0; 70];
+        l.write_row(0, 70, &mut row);
+        assert_eq!(row.iter().sum::<f32>(), 2.0);
+    }
+
+    #[test]
+    fn histogram() {
+        let d = tiny();
+        let h = d.label_histogram(&[0, 1, 2, 3]);
+        assert_eq!(h, vec![3, 0, 1]);
+    }
+
+    #[test]
+    fn validate_catches_bad_label() {
+        let mut d = tiny();
+        if let Labels::Multiclass(v) = &mut d.labels {
+            v[0] = 99;
+        }
+        assert!(d.validate().is_err());
+    }
+}

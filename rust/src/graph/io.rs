@@ -1,0 +1,252 @@
+//! Binary dataset IO.
+//!
+//! Generated datasets are cached on disk so benches don't regenerate
+//! (Table 13's "preprocessing" timing separates generation, clustering
+//! and training).  Format: little-endian sections with a magic header;
+//! version-checked on load.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::csr::Csr;
+use super::dataset::{Dataset, Labels, Split, Task};
+
+const MAGIC: &[u8; 8] = b"CGCNDS01";
+
+fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_u32s(w: &mut impl Write, v: &[u32]) -> std::io::Result<()> {
+    w_u64(w, v.len() as u64)?;
+    // SAFETY-free path: serialize via chunks to avoid unsafe casts.
+    let mut buf = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_u32s(r: &mut impl Read) -> std::io::Result<Vec<u32>> {
+    let len = r_u64(r)? as usize;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn w_f32s(w: &mut impl Write, v: &[f32]) -> std::io::Result<()> {
+    w_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_f32s(r: &mut impl Read) -> std::io::Result<Vec<f32>> {
+    let len = r_u64(r)? as usize;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn w_u64s(w: &mut impl Write, v: &[u64]) -> std::io::Result<()> {
+    w_u64(w, v.len() as u64)?;
+    let mut buf = Vec::with_capacity(v.len() * 8);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_u64s(r: &mut impl Read) -> std::io::Result<Vec<u64>> {
+    let len = r_u64(r)? as usize;
+    let mut buf = vec![0u8; len * 8];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn save(ds: &Dataset, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w_u64(&mut w, name.len() as u64)?;
+    w.write_all(name)?;
+    w_u64(&mut w, match ds.task {
+        Task::Multiclass => 0,
+        Task::Multilabel => 1,
+    })?;
+    w_u64(&mut w, ds.f_in as u64)?;
+    w_u64(&mut w, ds.num_classes as u64)?;
+    // graph
+    w_u64(&mut w, ds.graph.n() as u64)?;
+    let offs: Vec<u32> = ds.graph.offsets.iter().map(|&o| o as u32).collect();
+    w_u32s(&mut w, &offs)?;
+    w_u32s(&mut w, &ds.graph.cols)?;
+    w_u32s(&mut w, &ds.graph.weights)?;
+    w_u32s(&mut w, &ds.graph.node_weights)?;
+    // features / labels / split
+    w_f32s(&mut w, &ds.features)?;
+    match &ds.labels {
+        Labels::Multiclass(v) => {
+            w_u64(&mut w, 0)?;
+            w_u32s(&mut w, v)?;
+        }
+        Labels::Multilabel { bits, words_per_node } => {
+            w_u64(&mut w, 1)?;
+            w_u64(&mut w, *words_per_node as u64)?;
+            w_u64s(&mut w, bits)?;
+        }
+    }
+    let split: Vec<u32> = ds
+        .split
+        .iter()
+        .map(|s| match s {
+            Split::Train => 0u32,
+            Split::Val => 1,
+            Split::Test => 2,
+        })
+        .collect();
+    w_u32s(&mut w, &split)?;
+    w.flush()
+}
+
+pub fn load(path: &Path) -> std::io::Result<Dataset> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic / version"));
+    }
+    let name_len = r_u64(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).map_err(|_| bad("bad name"))?;
+    let task = match r_u64(&mut r)? {
+        0 => Task::Multiclass,
+        1 => Task::Multilabel,
+        _ => return Err(bad("bad task")),
+    };
+    let f_in = r_u64(&mut r)? as usize;
+    let num_classes = r_u64(&mut r)? as usize;
+    let _n = r_u64(&mut r)? as usize;
+    let offsets: Vec<usize> = r_u32s(&mut r)?.into_iter().map(|o| o as usize).collect();
+    let cols = r_u32s(&mut r)?;
+    let weights = r_u32s(&mut r)?;
+    let node_weights = r_u32s(&mut r)?;
+    let graph = Csr { offsets, cols, weights, node_weights };
+    let features = r_f32s(&mut r)?;
+    let labels = match r_u64(&mut r)? {
+        0 => Labels::Multiclass(r_u32s(&mut r)?),
+        1 => {
+            let wpn = r_u64(&mut r)? as usize;
+            Labels::Multilabel { bits: r_u64s(&mut r)?, words_per_node: wpn }
+        }
+        _ => return Err(bad("bad labels tag")),
+    };
+    let split = r_u32s(&mut r)?
+        .into_iter()
+        .map(|s| match s {
+            0 => Ok(Split::Train),
+            1 => Ok(Split::Val),
+            2 => Ok(Split::Test),
+            _ => Err(bad("bad split tag")),
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let ds = Dataset {
+        name,
+        task,
+        graph,
+        f_in,
+        num_classes,
+        features,
+        labels,
+        split,
+    };
+    ds.validate().map_err(|e| bad(&e))?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cgcn_io_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn sample(task: Task) -> Dataset {
+        let graph = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let labels = match task {
+            Task::Multiclass => Labels::Multiclass(vec![0, 1, 2, 0]),
+            Task::Multilabel => {
+                let mut l = Labels::multilabel_new(4, 3);
+                l.set_label(0, 0);
+                l.set_label(2, 2);
+                l
+            }
+        };
+        Dataset {
+            name: "io_sample".into(),
+            task,
+            graph,
+            f_in: 3,
+            num_classes: 3,
+            features: (0..12).map(|i| i as f32 * 0.5).collect(),
+            labels,
+            split: vec![Split::Train, Split::Val, Split::Test, Split::Train],
+        }
+    }
+
+    #[test]
+    fn roundtrip_multiclass() {
+        let p = tmpfile("mc");
+        let ds = sample(Task::Multiclass);
+        save(&ds, &p).unwrap();
+        let ds2 = load(&p).unwrap();
+        assert_eq!(ds2.name, ds.name);
+        assert_eq!(ds2.task, ds.task);
+        assert_eq!(ds2.graph.cols, ds.graph.cols);
+        assert_eq!(ds2.features, ds.features);
+        assert_eq!(ds2.split, ds.split);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_multilabel() {
+        let p = tmpfile("ml");
+        let ds = sample(Task::Multilabel);
+        save(&ds, &p).unwrap();
+        let ds2 = load(&p).unwrap();
+        assert!(ds2.labels.has_label(2, 2));
+        assert!(!ds2.labels.has_label(1, 0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("bad");
+        std::fs::write(&p, b"not a dataset").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

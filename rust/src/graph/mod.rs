@@ -1,0 +1,12 @@
+//! Graph substrate: CSR store, dataset container, induced-subgraph
+//! extraction, and binary IO.
+
+pub mod csr;
+pub mod dataset;
+pub mod io;
+pub mod subgraph;
+pub mod text_io;
+
+pub use csr::Csr;
+pub use dataset::{Dataset, Labels, Split, Task};
+pub use subgraph::{induced_csr, induced_edges, within_edges, SubgraphScratch};

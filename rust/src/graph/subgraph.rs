@@ -1,0 +1,151 @@
+//! Induced-subgraph extraction — the core of batch assembly.
+//!
+//! Given a node set (the union of the sampled clusters, Algorithm 1
+//! line 4), extract the induced adjacency block `A_{V̄,V̄}` *including
+//! between-cluster links* (§3.2).  The extraction is allocation-light:
+//! callers reuse a scratch `SubgraphScratch` across batches (the batch
+//! assembly loop is the L3 hot path — see DESIGN.md §8).
+
+use super::csr::Csr;
+
+/// Reusable scratch for repeated extractions over the same parent graph.
+pub struct SubgraphScratch {
+    /// global node id -> local index + 1, 0 = absent. Reset lazily via
+    /// an epoch counter so clearing is O(|batch|), not O(N).
+    local_of: Vec<u32>,
+    epoch_of: Vec<u32>,
+    epoch: u32,
+}
+
+impl SubgraphScratch {
+    pub fn new(n: usize) -> Self {
+        SubgraphScratch {
+            local_of: vec![0; n],
+            epoch_of: vec![0; n],
+            epoch: 0,
+        }
+    }
+
+    fn begin(&mut self, nodes: &[u32]) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // wrapped: hard reset
+            self.epoch_of.iter_mut().for_each(|e| *e = 0);
+            self.epoch = 1;
+        }
+        for (i, &g) in nodes.iter().enumerate() {
+            self.local_of[g as usize] = i as u32;
+            self.epoch_of[g as usize] = self.epoch;
+        }
+    }
+
+    #[inline]
+    fn local(&self, g: u32) -> Option<u32> {
+        if self.epoch_of[g as usize] == self.epoch {
+            Some(self.local_of[g as usize])
+        } else {
+            None
+        }
+    }
+}
+
+/// Induced subgraph in local indices; `edges` are (local_u, local_v)
+/// directed entries (both directions present, mirroring Csr storage).
+pub struct Induced {
+    pub n: usize,
+    /// (src, dst) directed pairs over local ids.
+    pub edges: Vec<(u32, u32)>,
+}
+
+/// Extract the induced subgraph over `nodes` (global ids, defining the
+/// local ordering).  Returns directed local edge pairs.
+pub fn induced_edges(
+    g: &Csr,
+    nodes: &[u32],
+    scratch: &mut SubgraphScratch,
+    out: &mut Vec<(u32, u32)>,
+) {
+    scratch.begin(nodes);
+    out.clear();
+    for (li, &gi) in nodes.iter().enumerate() {
+        for &gj in g.neighbors(gi as usize) {
+            if let Some(lj) = scratch.local(gj) {
+                out.push((li as u32, lj));
+            }
+        }
+    }
+}
+
+/// Induced subgraph as a standalone Csr (used by tests, the partitioner
+/// per-part reporting, and exact inference over parts).
+pub fn induced_csr(g: &Csr, nodes: &[u32]) -> Csr {
+    let mut scratch = SubgraphScratch::new(g.n());
+    let mut edges = Vec::new();
+    induced_edges(g, nodes, &mut scratch, &mut edges);
+    // keep one direction; from_edges re-symmetrizes
+    let undirected: Vec<(u32, u32)> =
+        edges.into_iter().filter(|&(u, v)| u < v).collect();
+    Csr::from_edges(nodes.len(), &undirected)
+}
+
+/// Count edges inside the node set (embedding utilization ||A_BB||_0 of
+/// §3.1, in directed entries).
+pub fn within_edges(g: &Csr, nodes: &[u32], scratch: &mut SubgraphScratch) -> usize {
+    scratch.begin(nodes);
+    let mut count = 0;
+    for &gi in nodes {
+        for &gj in g.neighbors(gi as usize) {
+            if scratch.local(gj).is_some() {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path5() -> Csr {
+        // 0-1-2-3-4
+        Csr::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)])
+    }
+
+    #[test]
+    fn induced_block() {
+        let g = path5();
+        let sub = induced_csr(&g, &[1, 2, 3]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.num_edges(), 2); // 1-2, 2-3 survive
+        sub.validate().unwrap();
+    }
+
+    #[test]
+    fn induced_no_edges() {
+        let g = path5();
+        let sub = induced_csr(&g, &[0, 2, 4]);
+        assert_eq!(sub.num_edges(), 0);
+    }
+
+    #[test]
+    fn within_edges_counts_directed() {
+        let g = path5();
+        let mut scratch = SubgraphScratch::new(g.n());
+        assert_eq!(within_edges(&g, &[1, 2, 3], &mut scratch), 4);
+        assert_eq!(within_edges(&g, &[0, 4], &mut scratch), 0);
+        // reuse across calls (epoch reset works)
+        assert_eq!(within_edges(&g, &[0, 1], &mut scratch), 2);
+    }
+
+    #[test]
+    fn local_ordering_follows_input() {
+        let g = path5();
+        let mut scratch = SubgraphScratch::new(g.n());
+        let mut edges = Vec::new();
+        induced_edges(&g, &[3, 2], &mut scratch, &mut edges);
+        edges.sort_unstable();
+        // local 0 = global 3, local 1 = global 2; edge both directions
+        assert_eq!(edges, vec![(0, 1), (1, 0)]);
+    }
+}

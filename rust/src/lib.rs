@@ -1,0 +1,30 @@
+//! # cluster-gcn
+//!
+//! A production-quality reproduction of **Cluster-GCN: An Efficient
+//! Algorithm for Training Deep and Large Graph Convolutional Networks**
+//! (Chiang et al., KDD 2019) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **rust (this crate)** — the training coordinator: graph store,
+//!   multilevel (METIS-like) partitioner, stochastic multiple-partition
+//!   batch sampler, batch assembly/renormalization, PJRT runtime, the
+//!   epoch loop, metrics, memory accounting, and the baseline training
+//!   algorithms the paper compares against.
+//! - **JAX (python/compile, build-time only)** — the L-layer GCN model
+//!   with fused Adam `train_step`, AOT-lowered to HLO text artifacts.
+//! - **Pallas (python/compile/kernels)** — the fused blocked `Â·X·W`
+//!   GCN-layer kernel the model is built from.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod datagen;
+pub mod graph;
+pub mod norm;
+pub mod partition;
+pub mod runtime;
+pub mod testing;
+pub mod util;

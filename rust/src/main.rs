@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    cluster_gcn::cli::main()
+}

@@ -1,0 +1,252 @@
+//! Adjacency normalization + diagonal enhancement (paper §2, §3.3,
+//! §6.2).
+//!
+//! Every variant the paper studies is a transform of the adjacency
+//! *matrix*, so the AOT model needs no variants: rust builds the dense
+//! normalized block per batch and feeds it through the one `A` input
+//! (DESIGN.md §2).  Variants (Table 11):
+//!
+//! - `Sym`      — eq. (1)'s A' = D̃^{-1/2} (A+I) D̃^{-1/2} (Kipf-style).
+//! - `RowNorm`  — eq. (10): Ã = (D+I)^{-1} (A+I).
+//!
+//! enhancements applied after normalization:
+//!
+//! - `AddIdentity`     — eq. (9): use Ã + I per layer.
+//! - `AddLambdaDiag λ` — eq. (11): Ã + λ·diag(Ã).
+//!
+//! Renormalization happens **per batch** over the combined multi-cluster
+//! subgraph (§6.2: "the new combined adjacency matrix should be
+//! re-normalized"), which is why these run on local (batch) edges.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NormKind {
+    /// symmetric D̃^{-1/2}(A+I)D̃^{-1/2} — eq. (1) default.
+    Sym,
+    /// row (D+I)^{-1}(A+I) — eq. (10).
+    RowNorm,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DiagEnhance {
+    /// plain eq. (1)/(10).
+    None,
+    /// eq. (9): + I after normalization.
+    AddIdentity,
+    /// eq. (11): + λ diag(Ã).
+    AddLambdaDiag(f32),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NormConfig {
+    pub kind: NormKind,
+    pub enhance: DiagEnhance,
+}
+
+impl NormConfig {
+    pub const PAPER_DEFAULT: NormConfig =
+        NormConfig { kind: NormKind::Sym, enhance: DiagEnhance::None };
+
+    /// Table 11 row "with (10)".
+    pub const ROW: NormConfig =
+        NormConfig { kind: NormKind::RowNorm, enhance: DiagEnhance::None };
+
+    /// Table 11 row "with (10) + (9)".
+    pub const ROW_IDENTITY: NormConfig =
+        NormConfig { kind: NormKind::RowNorm, enhance: DiagEnhance::AddIdentity };
+
+    /// Table 11 row "with (10) + (11), λ = 1".
+    pub const ROW_LAMBDA1: NormConfig = NormConfig {
+        kind: NormKind::RowNorm,
+        enhance: DiagEnhance::AddLambdaDiag(1.0),
+    };
+}
+
+/// Build the dense normalized (b_max, b_max) row-major block for a batch
+/// of `n_local` nodes with the given induced directed `edges` (local
+/// ids).  Self-loops (the +I of Ã) are added here.  Rows/cols >=
+/// n_local stay zero (inert padding).  `out` must be b_max*b_max long;
+/// it is fully overwritten.
+pub fn build_dense_block(
+    n_local: usize,
+    edges: &[(u32, u32)],
+    b_max: usize,
+    cfg: NormConfig,
+    out: &mut [f32],
+) {
+    assert!(n_local <= b_max);
+    assert_eq!(out.len(), b_max * b_max);
+    out.iter_mut().for_each(|x| *x = 0.0);
+
+    // degrees including self loop
+    let mut deg = vec![1.0f32; n_local];
+    for &(u, _) in edges {
+        deg[u as usize] += 1.0;
+    }
+
+    match cfg.kind {
+        NormKind::Sym => {
+            let inv_sqrt: Vec<f32> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+            for &(u, v) in edges {
+                out[u as usize * b_max + v as usize] =
+                    inv_sqrt[u as usize] * inv_sqrt[v as usize];
+            }
+            for i in 0..n_local {
+                out[i * b_max + i] = inv_sqrt[i] * inv_sqrt[i];
+            }
+        }
+        NormKind::RowNorm => {
+            for &(u, v) in edges {
+                out[u as usize * b_max + v as usize] = 1.0 / deg[u as usize];
+            }
+            for i in 0..n_local {
+                out[i * b_max + i] = 1.0 / deg[i];
+            }
+        }
+    }
+
+    match cfg.enhance {
+        DiagEnhance::None => {}
+        DiagEnhance::AddIdentity => {
+            for i in 0..n_local {
+                out[i * b_max + i] += 1.0;
+            }
+        }
+        DiagEnhance::AddLambdaDiag(lambda) => {
+            for i in 0..n_local {
+                out[i * b_max + i] *= 1.0 + lambda;
+            }
+        }
+    }
+}
+
+/// Normalized sparse adjacency values for the **full graph** (exact host
+/// inference in `coordinator::inference`); returns per-entry values
+/// aligned with `g.cols` plus the per-node self-loop value.
+pub fn normalize_sparse(
+    g: &crate::graph::Csr,
+    cfg: NormConfig,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = g.n();
+    let deg: Vec<f32> = (0..n).map(|v| g.degree(v) as f32 + 1.0).collect();
+    let mut vals = vec![0f32; g.nnz()];
+    let mut self_loop = vec![0f32; n];
+    match cfg.kind {
+        NormKind::Sym => {
+            let inv: Vec<f32> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+            for v in 0..n {
+                for (i, &u) in g.neighbors(v).iter().enumerate() {
+                    vals[g.offsets[v] + i] = inv[v] * inv[u as usize];
+                }
+                self_loop[v] = inv[v] * inv[v];
+            }
+        }
+        NormKind::RowNorm => {
+            for v in 0..n {
+                let inv = 1.0 / deg[v];
+                for i in 0..g.degree(v) {
+                    vals[g.offsets[v] + i] = inv;
+                }
+                self_loop[v] = inv;
+            }
+        }
+    }
+    match cfg.enhance {
+        DiagEnhance::None => {}
+        DiagEnhance::AddIdentity => self_loop.iter_mut().for_each(|s| *s += 1.0),
+        DiagEnhance::AddLambdaDiag(l) => {
+            self_loop.iter_mut().for_each(|s| *s *= 1.0 + l)
+        }
+    }
+    (vals, self_loop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    fn path3_edges() -> Vec<(u32, u32)> {
+        // 0-1-2 both directions
+        vec![(0, 1), (1, 0), (1, 2), (2, 1)]
+    }
+
+    #[test]
+    fn rownorm_rows_sum_to_one() {
+        let mut out = vec![0f32; 16];
+        build_dense_block(3, &path3_edges(), 4, NormConfig::ROW, &mut out);
+        for i in 0..3 {
+            let s: f32 = out[i * 4..(i + 1) * 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums to {s}");
+        }
+        // padding row is zero
+        assert!(out[12..16].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sym_is_symmetric() {
+        let mut out = vec![0f32; 16];
+        build_dense_block(3, &path3_edges(), 4, NormConfig::PAPER_DEFAULT, &mut out);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((out[i * 4 + j] - out[j * 4 + i]).abs() < 1e-7);
+            }
+        }
+        // known value: node 0 deg=2 (self+1), node 1 deg=3
+        assert!((out[0] - 1.0 / 2.0).abs() < 1e-6); // 1/sqrt(2)^2
+        assert!((out[1] - 1.0 / (2.0f32.sqrt() * 3.0f32.sqrt())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_identity() {
+        let mut plain = vec![0f32; 16];
+        let mut enh = vec![0f32; 16];
+        build_dense_block(3, &path3_edges(), 4, NormConfig::ROW, &mut plain);
+        build_dense_block(3, &path3_edges(), 4, NormConfig::ROW_IDENTITY, &mut enh);
+        for i in 0..3 {
+            assert!((enh[i * 4 + i] - plain[i * 4 + i] - 1.0).abs() < 1e-6);
+        }
+        // off-diagonal unchanged
+        assert_eq!(plain[1], enh[1]);
+    }
+
+    #[test]
+    fn lambda_diag_scales_diagonal() {
+        let mut plain = vec![0f32; 16];
+        let mut enh = vec![0f32; 16];
+        build_dense_block(3, &path3_edges(), 4, NormConfig::ROW, &mut plain);
+        build_dense_block(3, &path3_edges(), 4, NormConfig::ROW_LAMBDA1, &mut enh);
+        for i in 0..3 {
+            assert!((enh[i * 4 + i] - 2.0 * plain[i * 4 + i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn isolated_node_gets_self_loop_only() {
+        let mut out = vec![0f32; 16];
+        build_dense_block(3, &[], 4, NormConfig::ROW, &mut out);
+        for i in 0..3 {
+            assert!((out[i * 4 + i] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_full_graph() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+        let (vals, self_loop) = normalize_sparse(&g, NormConfig::ROW);
+        let mut dense = vec![0f32; 9];
+        let edges: Vec<(u32, u32)> = (0..3)
+            .flat_map(|v| {
+                g.neighbors(v).iter().map(move |&u| (v as u32, u)).collect::<Vec<_>>()
+            })
+            .collect();
+        build_dense_block(3, &edges, 3, NormConfig::ROW, &mut dense);
+        for v in 0..3 {
+            assert!((dense[v * 3 + v] - self_loop[v]).abs() < 1e-7);
+            for (i, &u) in g.neighbors(v).iter().enumerate() {
+                assert!(
+                    (dense[v * 3 + u as usize] - vals[g.offsets[v] + i]).abs() < 1e-7
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Graph contraction: collapse a matching into a coarse graph,
+//! accumulating parallel-edge weights and node weights.
+
+use crate::graph::Csr;
+
+pub struct Coarse {
+    pub graph: Csr,
+    /// fine node -> coarse node.
+    pub map: Vec<u32>,
+}
+
+pub fn contract(g: &Csr, mate: &[u32]) -> Coarse {
+    let n = g.n();
+    // assign coarse ids: the lower endpoint of each pair owns the id
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        let m = mate[v] as usize;
+        map[v] = next;
+        map[m] = next; // m == v for self-matched
+        next += 1;
+    }
+    let nc = next as usize;
+
+    // accumulate coarse node weights
+    let mut node_weights = vec![0u32; nc];
+    for v in 0..n {
+        node_weights[map[v] as usize] += g.node_weights[v];
+    }
+
+    // build coarse adjacency: bucket per coarse node, dedupe with a
+    // per-row marker array (O(nnz) total)
+    let mut deg_cap = vec![0usize; nc];
+    for v in 0..n {
+        deg_cap[map[v] as usize] += g.degree(v);
+    }
+    let mut offsets = vec![0usize; nc + 1];
+    for i in 0..nc {
+        offsets[i + 1] = offsets[i] + deg_cap[i];
+    }
+    let mut cols = vec![0u32; offsets[nc]];
+    let mut weights = vec![0u32; offsets[nc]];
+    let mut fill = vec![0usize; nc];
+    // marker: coarse col -> position in current row
+    let mut pos_of = vec![usize::MAX; nc];
+    let mut touched: Vec<u32> = Vec::new();
+
+    // iterate coarse nodes by iterating their fine members
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); nc];
+    for v in 0..n {
+        members[map[v] as usize].push(v as u32);
+    }
+    for c in 0..nc {
+        touched.clear();
+        for &v in &members[c] {
+            let v = v as usize;
+            for (&u, &w) in g.neighbors(v).iter().zip(g.neighbor_weights(v)) {
+                let cu = map[u as usize] as usize;
+                if cu == c {
+                    continue; // contracted internal edge disappears
+                }
+                if pos_of[cu] == usize::MAX {
+                    let p = offsets[c] + fill[c];
+                    fill[c] += 1;
+                    cols[p] = cu as u32;
+                    weights[p] = w;
+                    pos_of[cu] = p;
+                    touched.push(cu as u32);
+                } else {
+                    weights[pos_of[cu]] += w;
+                }
+            }
+        }
+        for &t in &touched {
+            pos_of[t as usize] = usize::MAX;
+        }
+    }
+
+    // compact rows (fill <= cap)
+    let mut new_offsets = vec![0usize; nc + 1];
+    for c in 0..nc {
+        new_offsets[c + 1] = new_offsets[c] + fill[c];
+    }
+    let mut new_cols = vec![0u32; new_offsets[nc]];
+    let mut new_weights = vec![0u32; new_offsets[nc]];
+    for c in 0..nc {
+        let src = offsets[c]..offsets[c] + fill[c];
+        let dst = new_offsets[c]..new_offsets[c + 1];
+        new_cols[dst.clone()].copy_from_slice(&cols[src.clone()]);
+        new_weights[dst].copy_from_slice(&weights[src]);
+    }
+    // sort rows for Csr invariants
+    for c in 0..nc {
+        let r = new_offsets[c]..new_offsets[c + 1];
+        let mut pairs: Vec<(u32, u32)> = new_cols[r.clone()]
+            .iter()
+            .zip(&new_weights[r.clone()])
+            .map(|(&a, &b)| (a, b))
+            .collect();
+        pairs.sort_unstable();
+        for (i, (cc, ww)) in pairs.into_iter().enumerate() {
+            new_cols[new_offsets[c] + i] = cc;
+            new_weights[new_offsets[c] + i] = ww;
+        }
+    }
+
+    Coarse {
+        graph: Csr {
+            offsets: new_offsets,
+            cols: new_cols,
+            weights: new_weights,
+            node_weights,
+        },
+        map,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::matching::heavy_edge_matching;
+    use crate::util::Rng;
+
+    #[test]
+    fn contract_pair() {
+        // square 0-1-2-3-0; match (0,1) and (2,3) manually
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let mate = vec![1, 0, 3, 2];
+        let c = contract(&g, &mate);
+        assert_eq!(c.graph.n(), 2);
+        c.graph.validate().unwrap();
+        // two parallel edges (1-2 and 3-0) merge into weight 2
+        assert_eq!(c.graph.neighbor_weights(0), &[2]);
+        assert_eq!(c.graph.node_weights, vec![2, 2]);
+    }
+
+    #[test]
+    fn node_weight_conserved() {
+        let g = Csr::from_edges(7, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6)]);
+        let mut rng = Rng::new(2);
+        let mate = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &mate);
+        assert_eq!(c.graph.total_node_weight(), 7);
+        c.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_weight_conserved_minus_internal() {
+        let g = Csr::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let mut rng = Rng::new(3);
+        let mate = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &mate);
+        let internal: u32 = (0..6)
+            .map(|v| if mate[v] != v as u32 && g.has_edge(v, mate[v] as usize) { 1 } else { 0 })
+            .sum::<u32>()
+            / 2 * 2; // both directions
+        let fine_total: u32 = g.weights.iter().sum();
+        let coarse_total: u32 = c.graph.weights.iter().sum();
+        assert_eq!(coarse_total, fine_total - internal);
+    }
+
+    #[test]
+    fn map_is_consistent() {
+        let g = Csr::from_edges(8, &[(0, 1), (2, 3), (4, 5), (6, 7), (1, 2), (5, 6)]);
+        let mut rng = Rng::new(4);
+        let mate = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &mate);
+        for v in 0..8 {
+            assert_eq!(c.map[v], c.map[mate[v] as usize]);
+            assert!((c.map[v] as usize) < c.graph.n());
+        }
+    }
+}

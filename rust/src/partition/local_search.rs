@@ -1,0 +1,89 @@
+//! Single-level local-search partitioner: balanced random start + FM
+//! boundary refinement until convergence (a Graclus-flavored
+//! no-coarsening baseline — the paper cites both METIS [8] and
+//! Graclus [4] as suitable cluster constructors).
+//!
+//! Used by the partitioner-ablation bench: it shows *why* the
+//! multilevel scheme matters — pure local search gets stuck on large
+//! graphs (local optima), giving a worse edge cut than
+//! coarsen-partition-refine at the same balance.
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+use super::random::RandomPartitioner;
+use super::refine::{refine, RefineParams};
+use super::Partitioner;
+
+pub struct LocalSearchPartitioner {
+    pub params: RefineParams,
+    /// rounds of full refinement sweeps.
+    pub rounds: usize,
+}
+
+impl Default for LocalSearchPartitioner {
+    fn default() -> Self {
+        LocalSearchPartitioner {
+            params: RefineParams { epsilon: 0.10, max_passes: 10 },
+            rounds: 3,
+        }
+    }
+}
+
+impl Partitioner for LocalSearchPartitioner {
+    fn partition(&self, g: &Csr, k: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut part = RandomPartitioner.partition(g, k, rng);
+        for _ in 0..self.rounds {
+            let gain = refine(g, &mut part, k, &self.params);
+            if gain <= 0 {
+                break;
+            }
+        }
+        part
+    }
+
+    fn name(&self) -> &'static str {
+        "local-search"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, SbmSpec};
+    use crate::partition::metrics::{balance, edge_cut};
+    use crate::partition::MultilevelPartitioner;
+
+    #[test]
+    fn improves_over_random_but_loses_to_multilevel() {
+        let mut rng = Rng::new(11);
+        let sbm = generate(
+            &SbmSpec {
+                n: 4000,
+                communities: 40,
+                avg_deg: 12.0,
+                intra_frac: 0.9,
+                size_skew: 1.0,
+            },
+            &mut rng,
+        );
+        let g = &sbm.graph;
+        let k = 10;
+        let rd = RandomPartitioner.partition(g, k, &mut rng);
+        let ls = LocalSearchPartitioner::default().partition(g, k, &mut rng);
+        let ml = MultilevelPartitioner::default().partition(g, k, &mut rng);
+        let (c_rd, c_ls, c_ml) =
+            (edge_cut(g, &rd), edge_cut(g, &ls), edge_cut(g, &ml));
+        assert!(c_ls < c_rd, "local search should beat random: {c_ls} vs {c_rd}");
+        assert!(c_ml < c_ls, "multilevel should beat local search: {c_ml} vs {c_ls}");
+    }
+
+    #[test]
+    fn stays_balanced() {
+        let mut rng = Rng::new(12);
+        let edges: Vec<(u32, u32)> = (0..999).map(|i| (i, i + 1)).collect();
+        let g = Csr::from_edges(1000, &edges);
+        let part = LocalSearchPartitioner::default().partition(&g, 8, &mut rng);
+        assert!(balance(&g, &part, 8) < 1.25);
+    }
+}

@@ -1,0 +1,101 @@
+//! Heavy-edge matching — the coarsening step of the multilevel scheme
+//! (Karypis & Kumar's METIS, which the paper uses as a black box; we
+//! implement the algorithm family from scratch — DESIGN.md §2).
+//!
+//! Visits nodes in random order; an unmatched node matches its unmatched
+//! neighbor with the heaviest connecting edge (ties → lower degree, to
+//! keep coarse graphs sparse).  Unmatched leftovers match themselves.
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+/// `mate[v] == v` means v is unmatched (self-matched).
+pub fn heavy_edge_matching(g: &Csr, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n();
+    let mut mate: Vec<u32> = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    for &v in &order {
+        let v = v as usize;
+        if mate[v] != u32::MAX {
+            continue;
+        }
+        let mut best: Option<(u32, u32)> = None; // (weight, node)
+        let nbrs = g.neighbors(v);
+        let wts = g.neighbor_weights(v);
+        for (&u, &w) in nbrs.iter().zip(wts) {
+            if mate[u as usize] != u32::MAX {
+                continue;
+            }
+            match best {
+                None => best = Some((w, u)),
+                Some((bw, bu)) => {
+                    if w > bw || (w == bw && g.degree(u as usize) < g.degree(bu as usize)) {
+                        best = Some((w, u));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                mate[v] = u;
+                mate[u as usize] = v as u32;
+            }
+            None => mate[v] = v as u32,
+        }
+    }
+    mate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matching_is_symmetric_and_total() {
+        let g = Csr::from_edges(
+            6,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0), (0, 3)],
+        );
+        let mut rng = Rng::new(1);
+        let mate = heavy_edge_matching(&g, &mut rng);
+        for v in 0..6 {
+            let m = mate[v] as usize;
+            assert!(m < 6);
+            assert_eq!(mate[m] as usize, v, "asymmetric at {v}");
+        }
+    }
+
+    fn set_weight(g: &mut Csr, u: usize, v: usize, w: u32) {
+        for (a, b) in [(u, v), (v, u)] {
+            let row = g.offsets[a]..g.offsets[a + 1];
+            let idx = g.cols[row.clone()]
+                .binary_search(&(b as u32))
+                .expect("edge exists");
+            g.weights[g.offsets[a] + idx] = w;
+        }
+    }
+
+    #[test]
+    fn prefers_heavy_edges() {
+        // 1 - 0 = 2, 1 - 3: the heavy edge (0,2) must be matched no
+        // matter the visit order (every other node has an alternative).
+        let mut g = Csr::from_edges(4, &[(0, 1), (0, 2), (1, 3)]);
+        set_weight(&mut g, 0, 2, 5);
+        for seed in 0..16 {
+            let mut rng = Rng::new(seed);
+            let mate = heavy_edge_matching(&g, &mut rng);
+            assert_eq!(mate[0], 2, "seed {seed}");
+            assert_eq!(mate[2], 0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_self_match() {
+        let g = Csr::from_edges(3, &[(0, 1)]);
+        let mut rng = Rng::new(5);
+        let mate = heavy_edge_matching(&g, &mut rng);
+        assert_eq!(mate[2], 2);
+    }
+}

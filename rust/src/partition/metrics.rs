@@ -1,0 +1,77 @@
+//! Partition quality metrics: edge cut (the Δ of eq. (4) — the links the
+//! block-diagonal approximation drops), balance, and per-part stats.
+
+use crate::graph::Csr;
+
+/// Directed entries crossing parts (== nnz(Δ) in eq. (4)).
+pub fn edge_cut(g: &Csr, part: &[u32]) -> usize {
+    let mut cut = 0usize;
+    for v in 0..g.n() {
+        for &u in g.neighbors(v) {
+            if part[v] != part[u as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut
+}
+
+/// max part weight / average part weight (1.0 = perfect).
+pub fn balance(g: &Csr, part: &[u32], k: usize) -> f64 {
+    let mut w = vec![0u64; k];
+    for v in 0..g.n() {
+        w[part[v] as usize] += g.node_weights[v] as u64;
+    }
+    let avg = g.total_node_weight() as f64 / k as f64;
+    w.iter().copied().max().unwrap_or(0) as f64 / avg
+}
+
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    pub k: usize,
+    /// fraction of directed entries kept inside parts (embedding
+    /// utilization of §3.1, normalized).
+    pub within_fraction: f64,
+    pub edge_cut: usize,
+    pub balance: f64,
+    pub min_part: usize,
+    pub max_part: usize,
+}
+
+pub fn stats(g: &Csr, part: &[u32], k: usize) -> PartitionStats {
+    let cut = edge_cut(g, part);
+    let mut sizes = vec![0usize; k];
+    for &p in part {
+        sizes[p as usize] += 1;
+    }
+    PartitionStats {
+        k,
+        within_fraction: 1.0 - cut as f64 / g.nnz().max(1) as f64,
+        edge_cut: cut,
+        balance: balance(g, part, k),
+        min_part: sizes.iter().copied().min().unwrap_or(0),
+        max_part: sizes.iter().copied().max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut_and_balance() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let part = vec![0, 0, 1, 1];
+        assert_eq!(edge_cut(&g, &part), 2); // edge 1-2 both directions
+        assert!((balance(&g, &part, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_within_fraction() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let s = stats(&g, &[0, 0, 1, 1], 2);
+        assert!((s.within_fraction - (1.0 - 2.0 / 6.0)).abs() < 1e-12);
+        assert_eq!(s.min_part, 2);
+        assert_eq!(s.max_part, 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! Graph partitioning substrate (the paper delegates to METIS [8]; we
+//! implement the multilevel family from scratch, plus the random
+//! baseline of Table 2).
+
+pub mod coarsen;
+pub mod initial;
+pub mod local_search;
+pub mod matching;
+pub mod metrics;
+pub mod multilevel;
+pub mod random;
+pub mod refine;
+
+pub use metrics::{balance, edge_cut, PartitionStats};
+pub use local_search::LocalSearchPartitioner;
+pub use multilevel::{MultilevelParams, MultilevelPartitioner};
+pub use random::RandomPartitioner;
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+/// A partitioning algorithm: maps nodes to `k` parts.
+pub trait Partitioner {
+    fn partition(&self, g: &Csr, k: usize, rng: &mut Rng) -> Vec<u32>;
+    fn name(&self) -> &'static str;
+}
+
+/// Group nodes by part id (the cluster node lists V_1..V_c of §3.1).
+pub fn parts_to_clusters(part: &[u32], k: usize) -> Vec<Vec<u32>> {
+    let mut clusters: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &p) in part.iter().enumerate() {
+        clusters[p as usize].push(v as u32);
+    }
+    clusters
+}

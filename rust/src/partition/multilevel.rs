@@ -1,0 +1,178 @@
+//! The multilevel partitioner: coarsen (heavy-edge matching) until the
+//! graph is small, partition the coarsest graph by region growing, then
+//! uncoarsen with boundary refinement at every level — the METIS
+//! algorithm family [Karypis & Kumar '98], which the paper uses for
+//! cluster construction (Algorithm 1, line 1).
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+use super::coarsen::contract;
+use super::initial::region_growing;
+use super::matching::heavy_edge_matching;
+use super::refine::{refine, RefineParams};
+use super::Partitioner;
+
+#[derive(Clone, Debug)]
+pub struct MultilevelParams {
+    /// stop coarsening when n <= max(coarsest, k * per_part_floor).
+    pub coarsest: usize,
+    pub per_part_floor: usize,
+    /// stop when a matching round shrinks the graph by < this factor
+    /// (matching stalls on star-like graphs).
+    pub min_shrink: f64,
+    pub refine: RefineParams,
+}
+
+impl Default for MultilevelParams {
+    fn default() -> Self {
+        MultilevelParams {
+            coarsest: 256,
+            per_part_floor: 8,
+            min_shrink: 0.95,
+            refine: RefineParams::default(),
+        }
+    }
+}
+
+pub struct MultilevelPartitioner {
+    pub params: MultilevelParams,
+}
+
+impl Default for MultilevelPartitioner {
+    fn default() -> Self {
+        MultilevelPartitioner { params: MultilevelParams::default() }
+    }
+}
+
+impl Partitioner for MultilevelPartitioner {
+    fn partition(&self, g: &Csr, k: usize, rng: &mut Rng) -> Vec<u32> {
+        assert!(k >= 1);
+        if k == 1 {
+            return vec![0; g.n()];
+        }
+        let p = &self.params;
+        let stop_at = p.coarsest.max(k * p.per_part_floor);
+
+        // --- coarsening phase ------------------------------------------
+        let mut levels: Vec<(Csr, Vec<u32>)> = Vec::new(); // (fine graph, fine->coarse map)
+        let mut current = g.clone();
+        while current.n() > stop_at {
+            let mate = heavy_edge_matching(&current, rng);
+            let coarse = contract(&current, &mate);
+            let shrink = coarse.graph.n() as f64 / current.n() as f64;
+            let stalled = shrink > p.min_shrink;
+            levels.push((std::mem::replace(&mut current, coarse.graph), coarse.map));
+            if stalled {
+                break;
+            }
+        }
+
+        // --- initial partition on the coarsest graph --------------------
+        let mut part = region_growing(&current, k, rng);
+        refine(&current, &mut part, k, &p.refine);
+
+        // --- uncoarsening + refinement ----------------------------------
+        while let Some((fine, map)) = levels.pop() {
+            let mut fine_part = vec![0u32; fine.n()];
+            for v in 0..fine.n() {
+                fine_part[v] = part[map[v] as usize];
+            }
+            refine(&fine, &mut fine_part, k, &p.refine);
+            part = fine_part;
+        }
+        part
+    }
+
+    fn name(&self) -> &'static str {
+        "multilevel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, SbmSpec};
+    use crate::partition::metrics::{balance, stats};
+    use crate::partition::random::RandomPartitioner;
+
+    fn sbm(n: usize, k: usize, seed: u64) -> (Csr, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let g = generate(
+            &SbmSpec {
+                n,
+                communities: k,
+                avg_deg: 12.0,
+                intra_frac: 0.9,
+                size_skew: 0.5,
+            },
+            &mut rng,
+        );
+        (g.graph, g.community)
+    }
+
+    #[test]
+    fn beats_random_on_clustered_graph() {
+        let (g, _) = sbm(3000, 30, 1);
+        let mut rng = Rng::new(2);
+        let ml = MultilevelPartitioner::default().partition(&g, 10, &mut rng);
+        let rnd = RandomPartitioner.partition(&g, 10, &mut rng);
+        let s_ml = stats(&g, &ml, 10);
+        let s_rnd = stats(&g, &rnd, 10);
+        // random keeps ~1/k of edges within parts; multilevel should keep
+        // the vast majority (communities are recoverable)
+        assert!(
+            s_ml.within_fraction > 0.75,
+            "multilevel within={:.3}",
+            s_ml.within_fraction
+        );
+        assert!(
+            s_ml.within_fraction > s_rnd.within_fraction + 0.3,
+            "ml={:.3} rnd={:.3}",
+            s_ml.within_fraction,
+            s_rnd.within_fraction
+        );
+    }
+
+    #[test]
+    fn balanced() {
+        let (g, _) = sbm(2000, 20, 3);
+        let mut rng = Rng::new(4);
+        let part = MultilevelPartitioner::default().partition(&g, 8, &mut rng);
+        let b = balance(&g, &part, 8);
+        assert!(b < 1.35, "imbalance {b}");
+    }
+
+    #[test]
+    fn all_parts_nonempty() {
+        let (g, _) = sbm(1500, 15, 5);
+        let mut rng = Rng::new(6);
+        let k = 12;
+        let part = MultilevelPartitioner::default().partition(&g, k, &mut rng);
+        let mut seen = vec![false; k];
+        for &p in &part {
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "empty part");
+    }
+
+    #[test]
+    fn k_one() {
+        let (g, _) = sbm(500, 5, 7);
+        let mut rng = Rng::new(8);
+        let part = MultilevelPartitioner::default().partition(&g, 1, &mut rng);
+        assert!(part.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn many_parts() {
+        // paper's regime: #parts comparable to #communities (Reddit: 1500)
+        let (g, _) = sbm(4000, 40, 9);
+        let mut rng = Rng::new(10);
+        let k = 100;
+        let part = MultilevelPartitioner::default().partition(&g, k, &mut rng);
+        let s = stats(&g, &part, k);
+        assert!(s.balance < 2.0, "imbalance {}", s.balance);
+        assert!(s.within_fraction > 0.4, "within {}", s.within_fraction);
+    }
+}

@@ -1,0 +1,51 @@
+//! Random partition baseline (Table 2 of the paper: "partitions should
+//! not be formed randomly").  Balanced by construction: a shuffled node
+//! list is sliced into k equal chunks.
+
+use crate::graph::Csr;
+use crate::util::Rng;
+
+use super::Partitioner;
+
+pub struct RandomPartitioner;
+
+impl Partitioner for RandomPartitioner {
+    fn partition(&self, g: &Csr, k: usize, rng: &mut Rng) -> Vec<u32> {
+        let n = g.n();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+        let mut part = vec![0u32; n];
+        for (i, &v) in order.iter().enumerate() {
+            part[v as usize] = (i * k / n) as u32;
+        }
+        part
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::metrics::balance;
+
+    #[test]
+    fn balanced_and_total() {
+        let g = Csr::from_edges(100, &(0..99).map(|i| (i, i + 1)).collect::<Vec<_>>());
+        let mut rng = Rng::new(1);
+        let part = RandomPartitioner.partition(&g, 7, &mut rng);
+        assert!(part.iter().all(|&p| p < 7));
+        // 100 nodes over 7 parts: sizes 14/15, max/avg = 15/14.29
+        assert!(balance(&g, &part, 7) < 1.06);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let g = Csr::from_edges(50, &(0..49).map(|i| (i, i + 1)).collect::<Vec<_>>());
+        let p1 = RandomPartitioner.partition(&g, 5, &mut Rng::new(1));
+        let p2 = RandomPartitioner.partition(&g, 5, &mut Rng::new(2));
+        assert_ne!(p1, p2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and exposes typed metadata for every AOT
+//! executable.  The argument-order convention is documented in
+//! `python/compile/model.py` and mirrored by `runtime::exec`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::Task;
+use crate::util::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Train,
+    Forward,
+    Vrgcn,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: Kind,
+    pub task: Task,
+    pub layers: usize,
+    pub f_in: usize,
+    pub f_hid: usize,
+    pub classes: usize,
+    pub b_max: usize,
+    pub residual: bool,
+    /// (f_in, f_out) per layer.
+    pub weight_shapes: Vec<(usize, usize)>,
+    /// kernel feasibility estimates exported by the AOT step.
+    pub vmem_bytes_est: usize,
+    pub mxu_utilization_est: f64,
+}
+
+impl ArtifactMeta {
+    /// Per-layer activation input dims (VR-GCN Hc shapes).
+    pub fn layer_in_dims(&self) -> Vec<usize> {
+        self.weight_shapes.iter().map(|&(fi, _)| fi).collect()
+    }
+
+    /// Total parameter element count (one weight set; Adam state is 2x).
+    pub fn param_elements(&self) -> usize {
+        self.weight_shapes.iter().map(|&(a, b)| a * b).sum()
+    }
+
+    /// Number of expected inputs in order (see model.py docstring).
+    pub fn input_count(&self) -> usize {
+        let l = self.layers;
+        match self.kind {
+            Kind::Train => 3 * l + 2 + 4,
+            Kind::Forward => l + 2,
+            Kind::Vrgcn => 3 * l + 2 + 1 + l + 3,
+        }
+    }
+
+    /// Number of outputs in the result tuple.
+    pub fn output_count(&self) -> usize {
+        let l = self.layers;
+        match self.kind {
+            Kind::Train => 3 * l + 1,
+            Kind::Forward => 1,
+            Kind::Vrgcn => 3 * l + 1 + (l - 1),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path).with_context(|| {
+            format!(
+                "reading {man_path:?} — run `make artifacts` first"
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut by_name = BTreeMap::new();
+        for a in arts {
+            let get_str = |k: &str| -> Result<&str> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing str {k}"))
+            };
+            let get_n = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("artifact missing num {k}"))
+            };
+            let kind = match get_str("kind")? {
+                "train" => Kind::Train,
+                "forward" => Kind::Forward,
+                "vrgcn" => Kind::Vrgcn,
+                other => bail!("unknown kind {other}"),
+            };
+            let task = match get_str("task")? {
+                "multiclass" => Task::Multiclass,
+                "multilabel" => Task::Multilabel,
+                other => bail!("unknown task {other}"),
+            };
+            let weight_shapes = a
+                .get("weight_shapes")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing weight_shapes"))?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().ok_or_else(|| anyhow!("bad shape"))?;
+                    Ok((
+                        p[0].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                        p[1].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = ArtifactMeta {
+                name: get_str("name")?.to_string(),
+                file: dir.join(get_str("file")?),
+                kind,
+                task,
+                layers: get_n("layers")?,
+                f_in: get_n("f_in")?,
+                f_hid: get_n("f_hid")?,
+                classes: get_n("classes")?,
+                b_max: get_n("b_max")?,
+                residual: a
+                    .get("residual")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                weight_shapes,
+                vmem_bytes_est: get_n("vmem_bytes_est").unwrap_or(0),
+                mxu_utilization_est: a
+                    .get("mxu_utilization_est")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+            };
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} known); \
+                 re-run `make artifacts`?",
+                self.by_name.len()
+            )
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"t_L2","file":"t_L2.hlo.txt","kind":"train",
+                "task":"multiclass","layers":2,"f_in":8,"f_hid":16,"classes":4,
+                "b_max":128,"residual":false,
+                "weight_shapes":[[8,16],[16,4]],
+                "vmem_bytes_est":1000,"mxu_utilization_est":0.9}]}"#,
+        )
+        .unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cgcn_reg_{}_{}", std::process::id(), tag));
+        p
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir);
+        let reg = Registry::load(&dir).unwrap();
+        let m = reg.get("t_L2").unwrap();
+        assert_eq!(m.layers, 2);
+        assert_eq!(m.kind, Kind::Train);
+        assert_eq!(m.weight_shapes, vec![(8, 16), (16, 4)]);
+        assert_eq!(m.param_elements(), 8 * 16 + 16 * 4);
+        // train: 3L weights/adam + step + lr + A,X,Y,mask
+        assert_eq!(m.input_count(), 6 + 2 + 4);
+        assert_eq!(m.output_count(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let dir = tmpdir("miss");
+        write_manifest(&dir);
+        let reg = Registry::load(&dir).unwrap();
+        assert!(reg.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = tmpdir("nodir2");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(Registry::load(&dir).is_err());
+    }
+}

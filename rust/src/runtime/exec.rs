@@ -1,0 +1,234 @@
+//! PJRT execution engine: wraps the `xla` crate (PJRT C API) to load
+//! `artifacts/*.hlo.txt`, compile once per artifact, and run train/eval
+//! steps from the L3 hot loop.
+//!
+//! Pattern (see /opt/xla-example): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` →
+//! `execute(&[Literal])` → the 1-tuple result is decomposed into output
+//! literals.  Python is never involved at this point.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{ArtifactMeta, Registry};
+
+/// f32 host tensor — the interchange type between the coordinator and
+/// PJRT.  Row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let len = dims.iter().product();
+        Tensor { dims, data: vec![0.0; len] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.dims,
+            bytes,
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative phase timings (profiling; EXPERIMENTS.md §Perf).
+    pub lit_seconds: f64,
+    pub exec_seconds: f64,
+    pub sync_seconds: f64,
+    pub exec_count: u64,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            registry,
+            cache: HashMap::new(),
+            lit_seconds: 0.0,
+            exec_seconds: 0.0,
+            sync_seconds: 0.0,
+            exec_count: 0,
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        Ok(self.registry.get(name)?.clone())
+    }
+
+    /// Drop all cached executables.  XLA CPU retains sizeable buffers
+    /// per compiled executable; long bench sweeps over many artifacts
+    /// must evict between configurations or exhaust host RAM
+    /// (EXPERIMENTS.md §Perf).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Number of live compiled executables.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.registry.get(name)?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))
+            .with_context(|| format!("artifact {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named artifact on the given inputs; returns the
+    /// decomposed output tuple as host tensors.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(name, &refs)
+    }
+
+    /// Reference-taking variant of [`Engine::run`] — the training hot
+    /// loop passes params/batch tensors without cloning them
+    /// (EXPERIMENTS.md §Perf: ~10 MB/step of memcpy saved on wide
+    /// models).
+    pub fn run_refs(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let meta = self.registry.get(name)?;
+        if inputs.len() != meta.input_count() {
+            return Err(anyhow!(
+                "artifact {name} expects {} inputs, got {}",
+                meta.input_count(),
+                inputs.len()
+            ));
+        }
+        let expected_outputs = meta.output_count();
+        let exe = self.cache.get(name).unwrap();
+
+        let t0 = std::time::Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("PJRT execute of {name}: {e:?}"))?;
+        let t2 = std::time::Instant::now();
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("result sync: {e:?}"))?;
+        let t3 = std::time::Instant::now();
+        self.lit_seconds += (t1 - t0).as_secs_f64();
+        self.exec_seconds += (t2 - t1).as_secs_f64();
+        self.sync_seconds += (t3 - t2).as_secs_f64();
+        self.exec_count += 1;
+
+        // aot.py lowers with return_tuple=True: the root is a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("result decompose: {e:?}"))?;
+        if parts.len() != expected_outputs {
+            return Err(anyhow!(
+                "artifact {name}: expected {expected_outputs} outputs, got {}",
+                parts.len()
+            ));
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_through_literal() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar(7.5);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t2.data, vec![7.5]);
+        assert!(t2.dims.is_empty());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(vec![4, 5]);
+        assert_eq!(t.len(), 20);
+        assert_eq!(t.size_bytes(), 80);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact registry + execution engine.  Loads the HLO
+//! text artifacts produced once by `python/compile/aot.py` and runs them
+//! on the PJRT CPU client — python is never on the training path.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactMeta, Kind, Registry};
+pub use exec::{Engine, Tensor};

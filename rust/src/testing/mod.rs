@@ -1,0 +1,156 @@
+//! Minimal property-testing harness (crates.io proptest is unavailable
+//! offline — DESIGN.md §7).
+//!
+//! `forall` runs a seeded generator through N cases with sizes ramping
+//! up; on failure it re-runs the same seed at smaller sizes (shrink) and
+//! panics with the smallest failing (seed, size) so failures reproduce
+//! from the printed values alone.
+
+use crate::util::Rng;
+
+const SEED_BASE: u64 = 0xC6C4_5EED_0000_0001;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint passed to generators (e.g. node count).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: SEED_BASE, max_size: 128 }
+    }
+}
+
+impl Config {
+    pub const fn with(cases: usize, seed: u64, max_size: usize) -> Config {
+        Config { cases, seed, max_size }
+    }
+}
+
+/// Run `prop(rng, size)`; `Err(msg)` fails the property.  On failure,
+/// retries with smaller sizes to find a smaller counterexample, then
+/// panics with the seed + size needed to reproduce.
+pub fn forall<F>(cfg: &Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg
+            .seed
+            .wrapping_add(case as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // ramp size up over the run: early cases are small
+        let size = 2 + (cfg.max_size.saturating_sub(2)) * (case + 1) / cfg.cases;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: try the same seed at smaller sizes
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 2 {
+                let mut rng2 = Rng::new(seed);
+                if let Err(m2) = prop(&mut rng2, s) {
+                    smallest = (s, m2);
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Generator helpers shared by property tests.
+pub mod gen {
+    use crate::graph::Csr;
+    use crate::util::Rng;
+
+    /// Random graph with ~`avg_deg` average degree.
+    pub fn graph(rng: &mut Rng, n: usize, avg_deg: f64) -> Csr {
+        let m = ((n as f64 * avg_deg) / 2.0) as usize;
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            edges.push((u, v));
+        }
+        Csr::from_edges(n, &edges)
+    }
+
+    /// Connected random graph (random tree + extra edges).
+    pub fn connected_graph(rng: &mut Rng, n: usize, extra: usize) -> Csr {
+        let mut edges = Vec::with_capacity(n + extra);
+        for v in 1..n as u32 {
+            let parent = rng.below(v as u64) as u32;
+            edges.push((parent, v));
+        }
+        for _ in 0..extra {
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            edges.push((u, v));
+        }
+        Csr::from_edges(n, &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(&Config::with(16, 1, 64), "trivial", |rng, size| {
+            let v = rng.usize_below(size.max(1));
+            if v < size {
+                Ok(())
+            } else {
+                Err(format!("{v} >= {size}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn forall_reports_failure() {
+        forall(&Config::with(4, 2, 32), "always_fails", |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn gen_graph_valid() {
+        forall(&Config::with(16, 3, 96), "gen_graph_valid", |rng, size| {
+            let g = gen::graph(rng, size, 4.0);
+            g.validate()
+        });
+    }
+
+    #[test]
+    fn gen_connected_is_connected() {
+        forall(&Config::with(12, 4, 64), "connected", |rng, size| {
+            let g = gen::connected_graph(rng, size, 3);
+            // BFS from 0 must reach all
+            let mut seen = vec![false; g.n()];
+            let mut queue = vec![0usize];
+            seen[0] = true;
+            while let Some(v) = queue.pop() {
+                for &u in g.neighbors(v) {
+                    if !seen[u as usize] {
+                        seen[u as usize] = true;
+                        queue.push(u as usize);
+                    }
+                }
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err("not connected".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic PRNG, minimal JSON, stats/benching,
+//! and a tiny thread pool (tokio/rand/serde/criterion are unavailable in
+//! the offline build — DESIGN.md §7).
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{bench, entropy, Summary, Timer};

@@ -1,0 +1,68 @@
+//! Scoped fork-join helpers over std::thread (no tokio offline).
+//!
+//! The coordinator uses this for batch-assembly prefetch and the bench
+//! harness for parallel workload generation.  `std::thread::scope` keeps
+//! lifetimes simple — no 'static bounds on closures.
+
+/// Run `f(chunk_index, item_range)` over `n` items split into at most
+/// `threads` contiguous chunks; returns per-chunk results in order.
+pub fn parallel_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<_> = (0..threads)
+        .map(|i| (i * chunk).min(n)..((i + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let f = &f;
+                let r = r.clone();
+                s.spawn(move || f(i, r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Available parallelism with a sane floor.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_items() {
+        let results = parallel_chunks(100, 7, |_, r| r.len());
+        assert_eq!(results.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn single_item() {
+        let results = parallel_chunks(1, 8, |i, r| (i, r.start, r.end));
+        assert_eq!(results, vec![(0, 0, 1)]);
+    }
+
+    #[test]
+    fn empty() {
+        let results = parallel_chunks(0, 4, |_, _| 1);
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn ordered_results() {
+        let results = parallel_chunks(64, 4, |i, _| i);
+        assert_eq!(results, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,348 @@
+//! End-to-end integration tests over the real PJRT runtime + AOT
+//! artifacts.  These require `make artifacts` to have produced at least
+//! the cora/ppi artifacts; they are skipped (with a message) otherwise
+//! so `cargo test` stays usable before the python step.
+
+#![allow(unused_imports)]
+
+use cluster_gcn::coordinator::{
+    evaluate, train, BatchAssembler, ClusterSampler, TrainOptions, TrainState,
+};
+use cluster_gcn::datagen::{build, preset};
+use cluster_gcn::norm::NormConfig;
+use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
+use cluster_gcn::runtime::{Engine, Tensor};
+use cluster_gcn::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn engine_or_skip(needed: &[&str]) -> Option<Engine> {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return None;
+    };
+    for name in needed {
+        let meta = Engine::new(&dir).ok()?.meta(name).ok()?;
+        if !meta.file.exists() {
+            eprintln!("SKIP: artifact {name} not lowered yet");
+            return None;
+        }
+    }
+    Engine::new(&dir).ok()
+}
+
+/// Host dense-block forward oracle over an assembled batch (independent
+/// of both the PJRT path and `coordinator::inference`).
+fn dense_block_forward(
+    a: &Tensor,
+    x: &Tensor,
+    weights: &[Tensor],
+) -> Vec<f32> {
+    let b = a.dims[0];
+    let mut h = x.data.clone();
+    let mut f = x.dims[1];
+    let last = weights.len() - 1;
+    for (l, w) in weights.iter().enumerate() {
+        let g = w.dims[1];
+        let mut p = vec![0f32; b * f];
+        for i in 0..b {
+            for j in 0..b {
+                let av = a.data[i * b + j];
+                if av != 0.0 {
+                    for t in 0..f {
+                        p[i * f + t] += av * h[j * f + t];
+                    }
+                }
+            }
+        }
+        let mut z = vec![0f32; b * g];
+        for i in 0..b {
+            for t in 0..f {
+                let pv = p[i * f + t];
+                if pv != 0.0 {
+                    for k in 0..g {
+                        z[i * g + k] += pv * w.data[t * g + k];
+                    }
+                }
+            }
+        }
+        if l != last {
+            z.iter_mut().for_each(|v| *v = v.max(0.0));
+        }
+        h = z;
+        f = g;
+    }
+    h
+}
+
+#[test]
+fn forward_artifact_matches_host_oracle() {
+    let Some(mut engine) = engine_or_skip(&["ppi_L2_fwd"]) else {
+        return;
+    };
+    let meta = engine.meta("ppi_L2_fwd").unwrap();
+    let ds = build(preset("ppi_like").unwrap(), 11);
+    let mut asm = BatchAssembler::new(ds.n(), meta.b_max, NormConfig::PAPER_DEFAULT);
+    let nodes: Vec<u32> = (0..400u32).collect();
+    let batch = asm.assemble(&ds, &nodes);
+
+    let state = TrainState::init(&meta, 5);
+    let mut inputs: Vec<Tensor> = state.weights.clone();
+    inputs.push(batch.a.clone());
+    inputs.push(batch.x.clone());
+    let out = engine.run("ppi_L2_fwd", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let logits = &out[0];
+    assert_eq!(logits.dims, vec![meta.b_max, meta.classes]);
+
+    let expect = dense_block_forward(&batch.a, &batch.x, &state.weights);
+    let mut max_err = 0f32;
+    for (a, b) in logits.data.iter().zip(&expect) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-3, "PJRT vs host oracle max err {max_err}");
+}
+
+#[test]
+fn train_step_decreases_loss_and_learns() {
+    let Some(mut engine) = engine_or_skip(&["cora_L2"]) else {
+        return;
+    };
+    let ds = build(preset("cora_like").unwrap(), 42);
+    let mut rng = Rng::new(9);
+    let part = MultilevelPartitioner::default().partition(&ds.graph, 10, &mut rng);
+    let clusters = parts_to_clusters(&part, 10);
+    let sampler = ClusterSampler::new(clusters, 1);
+
+    let opts = TrainOptions {
+        epochs: 12,
+        eval_every: 6,
+        seed: 1,
+        ..TrainOptions::default()
+    };
+    let result = train(&mut engine, &ds, &sampler, "cora_L2", &opts).unwrap();
+
+    // loss must drop substantially from the first to the last epoch
+    let first = result.curve.first().unwrap().train_loss;
+    let last = result.curve.last().unwrap().train_loss;
+    assert!(
+        last < first * 0.8,
+        "loss did not decrease: {first} -> {last}"
+    );
+    // and val F1 must comfortably beat the 1/7 random-guess baseline
+    let f1 = result.curve.last().unwrap().eval_f1;
+    assert!(f1 > 0.4, "val F1 too low: {f1}");
+    assert!(result.steps >= 100, "expected ~10 steps/epoch");
+}
+
+#[test]
+fn vrgcn_baseline_trains() {
+    let Some(mut engine) = engine_or_skip(&["ppi_vrgcn_L2"]) else {
+        return;
+    };
+    let ds = build(preset("ppi_like").unwrap(), 6);
+    let opts = TrainOptions {
+        epochs: 1,
+        eval_every: 1,
+        seed: 3,
+        max_steps_per_epoch: 100,
+        ..TrainOptions::default()
+    };
+    let r = cluster_gcn::baselines::train_vrgcn(
+        &mut engine,
+        &ds,
+        "ppi_vrgcn_L2",
+        &cluster_gcn::baselines::VrgcnParams::default(),
+        &opts,
+    )
+    .unwrap();
+    assert!(r.steps >= 50, "expected a full-ish epoch, got {}", r.steps);
+    let pt = r.curve.last().unwrap();
+    assert!(pt.train_loss.is_finite());
+    // all-negative predictions score 0 F1; 100 steps must clearly learn
+    assert!(pt.eval_f1 > 0.3, "vrgcn f1 {}", pt.eval_f1);
+    // the O(NLF) history must show up in the memory accounting
+    let history_bytes = ds.n() * 512 * 4;
+    assert!(r.peak_bytes > history_bytes, "history missing from peak");
+}
+
+#[test]
+fn graphsage_baseline_trains() {
+    let Some(mut engine) = engine_or_skip(&["ppi_sage_L2"]) else {
+        return;
+    };
+    let ds = build(preset("ppi_like").unwrap(), 6);
+    let opts = TrainOptions {
+        epochs: 1,
+        eval_every: 1,
+        seed: 3,
+        max_steps_per_epoch: 5,
+        ..TrainOptions::default()
+    };
+    let r = cluster_gcn::baselines::train_graphsage(
+        &mut engine,
+        &ds,
+        "ppi_sage_L2",
+        &cluster_gcn::baselines::SageParams::for_depth(2, 128),
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(r.steps, 5);
+    assert!(r.curve.last().unwrap().train_loss.is_finite());
+}
+
+#[test]
+fn engine_rejects_wrong_input_count() {
+    let Some(mut engine) = engine_or_skip(&["cora_L2"]) else {
+        return;
+    };
+    let err = engine.run("cora_L2", &[Tensor::scalar(1.0)]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "unexpected: {err}");
+}
+
+#[test]
+fn engine_rejects_unknown_artifact() {
+    let Some(mut engine) = engine_or_skip(&["cora_L2"]) else {
+        return;
+    };
+    assert!(engine.run("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn cluster_forward_matches_host_oracle_per_batch() {
+    // batch_eval's PJRT cluster-wise inference must agree with the host
+    // dense-block oracle on every batch (same weights, same blocks).
+    let Some(mut engine) = engine_or_skip(&["ppi_L2_fwd"]) else {
+        return;
+    };
+    let meta = engine.meta("ppi_L2_fwd").unwrap();
+    let ds = build(preset("ppi_like").unwrap(), 21);
+    let mut rng = Rng::new(5);
+    let part = MultilevelPartitioner::default().partition(&ds.graph, 50, &mut rng);
+    let sampler = ClusterSampler::new(parts_to_clusters(&part, 50), 1);
+    let state = TrainState::init(&meta, 1);
+
+    let logits = cluster_gcn::coordinator::batch_eval::cluster_forward(
+        &mut engine,
+        &ds,
+        &sampler,
+        "ppi_L2_fwd",
+        &state.weights,
+        NormConfig::PAPER_DEFAULT,
+        7,
+    )
+    .unwrap();
+    assert_eq!(logits.len(), ds.n() * ds.num_classes);
+
+    // oracle check on one batch
+    let mut rng2 = Rng::new(7);
+    let plan = sampler.epoch_plan(&mut rng2);
+    let mut nodes = Vec::new();
+    sampler.batch_nodes(&plan[0], &mut nodes);
+    let mut asm = BatchAssembler::new(ds.n(), meta.b_max, NormConfig::PAPER_DEFAULT);
+    let batch = asm.assemble(&ds, &nodes);
+    let expect = dense_block_forward(&batch.a, &batch.x, &state.weights);
+    for (i, &v) in nodes.iter().enumerate() {
+        for c in 0..ds.num_classes {
+            let got = logits[v as usize * ds.num_classes + c];
+            let want = expect[i * ds.num_classes + c];
+            assert!(
+                (got - want).abs() < 1e-3,
+                "node {v} class {c}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn expansion_trainer_runs() {
+    let Some(mut engine) = engine_or_skip(&["ppi_sage_L2"]) else {
+        return;
+    };
+    let ds = build(preset("ppi_like").unwrap(), 8);
+    let opts = TrainOptions {
+        epochs: 1,
+        eval_every: 1,
+        seed: 2,
+        max_steps_per_epoch: 5,
+        ..TrainOptions::default()
+    };
+    // vanilla SGD through the wider sage artifact (expansion needs room)
+    let r = cluster_gcn::baselines::expansion::train_expansion(
+        &mut engine,
+        &ds,
+        "ppi_sage_L2",
+        32,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(r.steps, 5);
+    assert!(r.curve.last().unwrap().train_loss.is_finite());
+}
+
+#[test]
+fn early_stopping_halts_training() {
+    let Some(mut engine) = engine_or_skip(&["cora_L2"]) else {
+        return;
+    };
+    let ds = build(preset("cora_like").unwrap(), 9);
+    let mut rng = Rng::new(1);
+    let part = MultilevelPartitioner::default().partition(&ds.graph, 10, &mut rng);
+    let sampler = ClusterSampler::new(parts_to_clusters(&part, 10), 1);
+    let opts = TrainOptions {
+        epochs: 100,
+        eval_every: 1,
+        seed: 1,
+        patience: 2,
+        ..TrainOptions::default()
+    };
+    let r = train(&mut engine, &ds, &sampler, "cora_L2", &opts).unwrap();
+    let last_epoch = r.curve.last().unwrap().epoch;
+    assert!(
+        last_epoch < 100,
+        "early stopping never fired (ran all {last_epoch} epochs)"
+    );
+}
+
+#[test]
+fn random_vs_cluster_partition_quality_table2_shape() {
+    // The Table 2 effect at miniature scale: training on clustered
+    // batches beats training on random batches for the same budget.
+    let Some(mut engine) = engine_or_skip(&["cora_L2"]) else {
+        return;
+    };
+    let ds = build(preset("cora_like").unwrap(), 3);
+    let opts = TrainOptions {
+        epochs: 10,
+        eval_every: 10,
+        seed: 2,
+        eval_split: cluster_gcn::graph::Split::Test,
+        ..TrainOptions::default()
+    };
+
+    let mut f1s = Vec::new();
+    for use_cluster in [true, false] {
+        let mut rng = Rng::new(4);
+        let part = if use_cluster {
+            MultilevelPartitioner::default().partition(&ds.graph, 10, &mut rng)
+        } else {
+            cluster_gcn::partition::RandomPartitioner.partition(&ds.graph, 10, &mut rng)
+        };
+        let sampler = ClusterSampler::new(parts_to_clusters(&part, 10), 1);
+        let r = train(&mut engine, &ds, &sampler, "cora_L2", &opts).unwrap();
+        f1s.push(r.curve.last().unwrap().eval_f1);
+    }
+    assert!(
+        f1s[0] > f1s[1] - 0.02,
+        "cluster ({:.3}) should not trail random ({:.3})",
+        f1s[0],
+        f1s[1]
+    );
+}

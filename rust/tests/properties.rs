@@ -1,0 +1,326 @@
+//! Property tests over the coordinator substrates (routing, batching,
+//! state invariants) using the in-tree `testing` harness (offline
+//! stand-in for proptest — failures print a reproducible seed+size).
+
+use cluster_gcn::coordinator::{BatchAssembler, ClusterSampler};
+use cluster_gcn::graph::{
+    induced_csr, within_edges, Csr, Dataset, Labels, Split, SubgraphScratch, Task,
+};
+use cluster_gcn::norm::{build_dense_block, NormConfig};
+use cluster_gcn::partition::{
+    balance, edge_cut, parts_to_clusters, MultilevelPartitioner, Partitioner,
+    RandomPartitioner,
+};
+use cluster_gcn::testing::{forall, gen, Config};
+use cluster_gcn::util::{Json, Rng};
+
+fn cfg(cases: usize, seed: u64, max: usize) -> Config {
+    Config::with(cases, seed, max)
+}
+
+// --------------------------------------------------------------------------
+// partitioning invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_multilevel_partition_is_total_and_bounded() {
+    forall(&cfg(24, 0xA1, 400), "partition_total", |rng, size| {
+        let g = gen::connected_graph(rng, size.max(8), size);
+        let k = 2 + rng.usize_below(6.min(g.n() / 2)).max(1);
+        let part = MultilevelPartitioner::default().partition(&g, k, rng);
+        if part.len() != g.n() {
+            return Err("wrong length".into());
+        }
+        if part.iter().any(|&p| p as usize >= k) {
+            return Err("part id out of range".into());
+        }
+        let b = balance(&g, &part, k);
+        if b > 3.0 {
+            return Err(format!("balance {b} too large (k={k}, n={})", g.n()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multilevel_cut_not_worse_than_random() {
+    // on clusterable graphs the multilevel cut must beat random's
+    forall(&cfg(10, 0xA2, 1200), "cut_beats_random", |rng, size| {
+        let n = (size * 8).max(400);
+        let k = 8;
+        let sbm = cluster_gcn::datagen::generate(
+            &cluster_gcn::datagen::SbmSpec {
+                n,
+                communities: k * 2,
+                avg_deg: 10.0,
+                intra_frac: 0.9,
+                size_skew: 1.0,
+            },
+            rng,
+        );
+        let ml = MultilevelPartitioner::default().partition(&sbm.graph, k, rng);
+        let rd = RandomPartitioner.partition(&sbm.graph, k, rng);
+        let (c_ml, c_rd) = (edge_cut(&sbm.graph, &ml), edge_cut(&sbm.graph, &rd));
+        if c_ml >= c_rd {
+            return Err(format!("multilevel cut {c_ml} >= random {c_rd}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clusters_partition_nodes_exactly() {
+    forall(&cfg(24, 0xA3, 300), "clusters_partition", |rng, size| {
+        let g = gen::graph(rng, size.max(6), 4.0);
+        let k = 3.min(g.n());
+        let part = RandomPartitioner.partition(&g, k, rng);
+        let clusters = parts_to_clusters(&part, k);
+        let mut all: Vec<u32> = clusters.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let expect: Vec<u32> = (0..g.n() as u32).collect();
+        if all != expect {
+            return Err("clusters don't partition the node set".into());
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------------------
+// subgraph / normalization invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_induced_subgraph_edge_count_matches_within_edges() {
+    forall(&cfg(32, 0xB1, 200), "induced_vs_within", |rng, size| {
+        let g = gen::graph(rng, size.max(4), 5.0);
+        let take = 1 + rng.usize_below(g.n());
+        let mut nodes: Vec<u32> = (0..g.n() as u32).collect();
+        rng.shuffle(&mut nodes);
+        nodes.truncate(take);
+        let sub = induced_csr(&g, &nodes);
+        let mut scratch = SubgraphScratch::new(g.n());
+        let we = within_edges(&g, &nodes, &mut scratch);
+        if sub.nnz() != we {
+            return Err(format!("induced nnz {} != within {}", sub.nnz(), we));
+        }
+        sub.validate()
+    });
+}
+
+#[test]
+fn prop_rownorm_block_rows_sum_to_one() {
+    forall(&cfg(32, 0xB2, 150), "rownorm_rows", |rng, size| {
+        let g = gen::graph(rng, size.max(4), 6.0);
+        let nodes: Vec<u32> = (0..g.n() as u32).collect();
+        let mut scratch = SubgraphScratch::new(g.n());
+        let mut edges = Vec::new();
+        cluster_gcn::graph::induced_edges(&g, &nodes, &mut scratch, &mut edges);
+        let b = g.n().next_multiple_of(8);
+        let mut out = vec![0f32; b * b];
+        build_dense_block(g.n(), &edges, b, NormConfig::ROW, &mut out);
+        for i in 0..g.n() {
+            let s: f32 = out[i * b..(i + 1) * b].iter().sum();
+            if (s - 1.0).abs() > 1e-4 {
+                return Err(format!("row {i} sums to {s}"));
+            }
+        }
+        // padding rows all zero
+        for i in g.n()..b {
+            if out[i * b..(i + 1) * b].iter().any(|&v| v != 0.0) {
+                return Err(format!("padding row {i} non-zero"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sym_block_is_symmetric() {
+    forall(&cfg(24, 0xB3, 120), "sym_block", |rng, size| {
+        let g = gen::graph(rng, size.max(4), 5.0);
+        let nodes: Vec<u32> = (0..g.n() as u32).collect();
+        let mut scratch = SubgraphScratch::new(g.n());
+        let mut edges = Vec::new();
+        cluster_gcn::graph::induced_edges(&g, &nodes, &mut scratch, &mut edges);
+        let b = g.n();
+        let mut out = vec![0f32; b * b];
+        build_dense_block(b, &edges, b, NormConfig::PAPER_DEFAULT, &mut out);
+        for i in 0..b {
+            for j in 0..b {
+                if (out[i * b + j] - out[j * b + i]).abs() > 1e-6 {
+                    return Err(format!("asymmetric at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------------------
+// sampler / batch invariants
+// --------------------------------------------------------------------------
+
+fn random_dataset(rng: &mut Rng, n: usize) -> Dataset {
+    let g = gen::connected_graph(rng, n, n / 2);
+    let classes = 2 + rng.usize_below(5);
+    let f_in = 4 + rng.usize_below(8);
+    let mut labels = Labels::Multiclass(vec![0; n]);
+    for v in 0..n {
+        labels.set_label(v, rng.usize_below(classes));
+    }
+    let features: Vec<f32> = (0..n * f_in).map(|_| rng.f32() - 0.5).collect();
+    let split = (0..n)
+        .map(|_| match rng.usize_below(10) {
+            0..=6 => Split::Train,
+            7..=8 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+    Dataset {
+        name: "prop".into(),
+        task: Task::Multiclass,
+        graph: g,
+        f_in,
+        num_classes: classes,
+        features,
+        labels,
+        split,
+    }
+}
+
+#[test]
+fn prop_epoch_plan_uses_each_cluster_once() {
+    forall(&cfg(32, 0xC1, 64), "epoch_plan", |rng, size| {
+        let p = 2 + size;
+        let q = 1 + rng.usize_below(p.min(5));
+        let clusters: Vec<Vec<u32>> =
+            (0..p).map(|c| vec![c as u32]).collect();
+        let sampler = ClusterSampler::new(clusters, q);
+        let plan = sampler.epoch_plan(rng);
+        let mut seen = std::collections::HashSet::new();
+        for batch in &plan {
+            if batch.len() != q {
+                return Err("batch with wrong q".into());
+            }
+            for &c in batch {
+                if !seen.insert(c) {
+                    return Err(format!("cluster {c} reused in one epoch"));
+                }
+            }
+        }
+        if seen.len() != (p / q) * q {
+            return Err("plan size wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_assembly_invariants() {
+    forall(&cfg(20, 0xC2, 120), "batch_assembly", |rng, size| {
+        let ds = random_dataset(rng, size.max(10));
+        let b_max = ds.n().next_multiple_of(16);
+        let mut asm = BatchAssembler::new(ds.n(), b_max, NormConfig::ROW);
+        let take = 1 + rng.usize_below(ds.n());
+        let mut nodes: Vec<u32> = (0..ds.n() as u32).collect();
+        rng.shuffle(&mut nodes);
+        nodes.truncate(take);
+        let batch = asm.assemble(&ds, &nodes);
+
+        // mask only on train nodes, count matches
+        let expect_train = nodes
+            .iter()
+            .filter(|&&v| ds.split[v as usize] == Split::Train)
+            .count();
+        if batch.n_train != expect_train {
+            return Err("n_train mismatch".into());
+        }
+        for (i, &m) in batch.mask.data.iter().enumerate() {
+            let should = i < nodes.len()
+                && ds.split[nodes[i] as usize] == Split::Train;
+            if (m == 1.0) != should {
+                return Err(format!("mask wrong at {i}"));
+            }
+        }
+        // features copied faithfully
+        for (i, &v) in nodes.iter().enumerate() {
+            let row = &batch.x.data[i * ds.f_in..(i + 1) * ds.f_in];
+            if row != ds.feature_row(v as usize) {
+                return Err("feature row mismatch".into());
+            }
+        }
+        // y rows one-hot
+        for i in 0..nodes.len() {
+            let row = &batch.y.data[i * ds.num_classes..(i + 1) * ds.num_classes];
+            let s: f32 = row.iter().sum();
+            if (s - 1.0).abs() > 1e-6 {
+                return Err("label row not one-hot".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------------------
+// serialization invariants
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_dataset_io_roundtrip() {
+    forall(&cfg(10, 0xD1, 80), "dataset_io", |rng, size| {
+        let ds = random_dataset(rng, size.max(8));
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cgcn_prop_io_{}_{}.bin",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        cluster_gcn::graph::io::save(&ds, &path).map_err(|e| e.to_string())?;
+        let ds2 = cluster_gcn::graph::io::load(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if ds2.graph.cols != ds.graph.cols
+            || ds2.features != ds.features
+            || ds2.split != ds.split
+        {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.usize_below(4) } else { rng.usize_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool_with(0.5)),
+        2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+        3 => Json::Str(
+            (0..rng.usize_below(12))
+                .map(|_| char::from(b'a' + (rng.usize_below(26) as u8)))
+                .collect::<String>()
+                + if rng.bool_with(0.3) { "\"\\\n✓" } else { "" },
+        ),
+        4 => Json::Arr(
+            (0..rng.usize_below(4))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.usize_below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(&cfg(200, 0xD2, 4), "json_roundtrip", |rng, size| {
+        let v = random_json(rng, size.min(3));
+        let s = v.to_string();
+        let v2 = Json::parse(&s).map_err(|e| format!("{e} for {s}"))?;
+        if v != v2 {
+            return Err(format!("roundtrip mismatch: {s}"));
+        }
+        Ok(())
+    });
+}
