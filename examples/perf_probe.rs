@@ -1,42 +1,227 @@
-//! Perf probe (EXPERIMENTS.md §Perf): break one training run into its
-//! phases — host batch assembly, literal creation, PJRT execute, result
-//! sync — so optimization targets the real bottleneck.
+//! Perf probe (EXPERIMENTS.md §Perf): break the training pipeline into
+//! its phases so optimization targets the real bottleneck.
+//!
+//! Sections (each dumps JSONL rows under `bench_results/perf_probe.jsonl`
+//! in the same shape as the bench harness):
+//!
+//! 1. **host kernels** — full-graph forward: naive scalar oracle vs the
+//!    tiled fused SpMM·GEMM at 1 thread vs on the persistent pool, plus
+//!    the normalize / spmm / gemm phase split.
+//! 2. **dispatch** — persistent-pool `run_chunks` vs spawn-per-call
+//!    `scoped_chunks` dispatch overhead.
+//! 3. **assembly** — per-step batch assembly: allocate-per-step vs the
+//!    reused zero-allocation `assemble_into` path.
+//! 4. **PJRT loop** — the original per-step phase breakdown (assembly /
+//!    literal / execute / sync); skipped with a note when no compiled
+//!    artifacts are available.
 //!
 //! ```bash
 //! cargo run --release --example perf_probe [-- preset layers steps]
 //! ```
 
+use cluster_gcn::bench_support as bs;
 use cluster_gcn::coordinator::batch::BatchAssembler;
+use cluster_gcn::coordinator::inference::{
+    full_forward_cached, propagate_into, spmm_layer_naive,
+};
 use cluster_gcn::coordinator::trainer::{step, TrainState};
 use cluster_gcn::coordinator::ClusterSampler;
 use cluster_gcn::datagen::{build_cached, preset};
-use cluster_gcn::norm::NormConfig;
+use cluster_gcn::graph::Dataset;
+use cluster_gcn::norm::{normalize_sparse, NormCache, NormConfig};
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
-use cluster_gcn::runtime::Engine;
-use cluster_gcn::util::{Rng, Timer};
+use cluster_gcn::runtime::{Engine, Tensor};
+use cluster_gcn::util::pool::{self, scoped_chunks};
+use cluster_gcn::util::{bench, Json, Rng, Timer};
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let preset_name = args.get(1).map(String::as_str).unwrap_or("reddit_like");
-    let layers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
-    let steps: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(100);
+/// Deterministic pseudo-random layer weights (Glorot-ish scale).
+fn probe_weights(ds: &Dataset, layers: usize, hidden: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut dims = vec![ds.f_in];
+    dims.extend(std::iter::repeat(hidden).take(layers - 1));
+    dims.push(ds.num_classes);
+    dims.windows(2)
+        .map(|d| {
+            let bound = (6.0 / (d[0] + d[1]) as f64).sqrt() as f32;
+            let data = (0..d[0] * d[1]).map(|_| (rng.f32() * 2.0 - 1.0) * bound).collect();
+            Tensor::new(vec![d[0], d[1]], data)
+        })
+        .collect()
+}
 
-    let p = preset(preset_name).expect("preset");
-    let ds = build_cached(p, 42, std::path::Path::new("data"))?;
-    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
-    let short = preset_name.trim_end_matches("_like");
-    let artifact = format!("{short}_L{layers}");
-    let meta = engine.meta(&artifact)?;
-    engine.ensure_compiled(&artifact)?;
+fn host_kernel_probe(ds: &Dataset, layers: usize, iters: usize) {
+    let hidden = 128;
+    let weights = probe_weights(ds, layers, hidden, 11);
+    let threads = pool::default_threads();
 
-    let mut rng = Rng::new(7);
-    let part = MultilevelPartitioner::default().partition(
-        &ds.graph,
-        p.default_partitions,
-        &mut rng,
+    // normalization phase (cold cost; the NormCache amortizes it away)
+    let t = Timer::start();
+    let (vals, sl) = normalize_sparse(&ds.graph, NormConfig::PAPER_DEFAULT);
+    let normalize_ms = t.secs() * 1e3;
+
+    // naive scalar chain (the pre-overhaul kernel at 1 thread)
+    let naive = bench(1, iters, || {
+        let mut h = ds.features.clone();
+        let mut f = ds.f_in;
+        let last = weights.len() - 1;
+        for (l, w) in weights.iter().enumerate() {
+            h = spmm_layer_naive(&ds.graph, &vals, &sl, &h, f, w, l != last);
+            f = w.dims[1];
+        }
+    });
+
+    // tiled fused kernel, single thread and pooled, through the cache
+    let mut cache = NormCache::new();
+    let tiled1 = {
+        // thread cap 1: same kernel, no parallel dispatch
+        let mut cache1 = NormCache::new();
+        cache1.get_or_compute(&ds.graph, NormConfig::PAPER_DEFAULT);
+        bench(1, iters, || {
+            let n = ds.n();
+            let adj = cache1.get_or_compute(&ds.graph, NormConfig::PAPER_DEFAULT);
+            let mut h = ds.features.clone();
+            let mut f = ds.f_in;
+            let last = weights.len() - 1;
+            for (l, w) in weights.iter().enumerate() {
+                let mut z = vec![0f32; n * w.dims[1]];
+                cluster_gcn::coordinator::inference::spmm_layer_into(
+                    &ds.graph, &adj.vals, &adj.self_loop, &h, f, w, l != last, 1, &mut z,
+                );
+                h = z;
+                f = w.dims[1];
+            }
+        })
+    };
+    cache.get_or_compute(&ds.graph, NormConfig::PAPER_DEFAULT); // warm
+    let pooled = bench(1, iters, || {
+        let _ = full_forward_cached(ds, &weights, NormConfig::PAPER_DEFAULT, false, &mut cache);
+    });
+
+    // phase attribution on the first (widest-fanout) layer
+    let mut p = vec![0f32; ds.n() * ds.f_in];
+    let s_prop = bench(1, iters, || {
+        propagate_into(&ds.graph, &vals, &sl, &ds.features, ds.f_in, threads, &mut p);
+    });
+    let w0 = &weights[0];
+    let mut z0 = vec![0f32; ds.n() * w0.dims[1]];
+    let s_layer = bench(1, iters, || {
+        cluster_gcn::coordinator::inference::spmm_layer_into(
+            &ds.graph, &vals, &sl, &ds.features, ds.f_in, w0, true, threads, &mut z0,
+        );
+    });
+    let gemm_ms = ((s_layer.mean - s_prop.mean) * 1e3).max(0.0);
+
+    println!("== host kernels: full-graph forward ({layers} layers, hidden {hidden}) ==");
+    println!("normalize (cold)   {normalize_ms:9.2} ms   (amortized to once/run by NormCache)");
+    println!("naive  1t          {:9.2} ms", naive.mean * 1e3);
+    println!("tiled  1t          {:9.2} ms   ({:.2}x vs naive)", tiled1.mean * 1e3, naive.mean / tiled1.mean);
+    println!("tiled  pool({threads})     {:9.2} ms   ({:.2}x vs naive)", pooled.mean * 1e3, naive.mean / pooled.mean);
+    println!("layer-0 phase split: spmm {:.2} ms, gemm {gemm_ms:.2} ms", s_prop.mean * 1e3);
+    bs::dump_row(
+        "perf_probe",
+        Json::obj(vec![
+            ("kind", Json::str("host_forward")),
+            ("layers", Json::num(layers as f64)),
+            ("hidden", Json::num(hidden as f64)),
+            ("normalize_ms", Json::num(normalize_ms)),
+            ("naive_ms", Json::num(naive.mean * 1e3)),
+            ("tiled_ms", Json::num(tiled1.mean * 1e3)),
+            ("pooled_ms", Json::num(pooled.mean * 1e3)),
+            ("spmm_ms", Json::num(s_prop.mean * 1e3)),
+            ("gemm_ms", Json::num(gemm_ms)),
+            ("speedup_pooled_vs_naive", Json::num(naive.mean / pooled.mean)),
+        ]),
     );
-    let sampler = ClusterSampler::new(parts_to_clusters(&part, p.default_partitions), p.default_q);
+}
+
+fn dispatch_probe() {
+    let threads = pool::default_threads();
+    let reps = 300;
+    let spawn = bench(5, reps, || {
+        let _ = scoped_chunks(threads, threads, |_, r| r.len());
+    });
+    let pooled = bench(5, reps, || {
+        pool::global().run_chunks(threads, |_, _| {});
+    });
+    println!("== dispatch overhead ({threads} chunks) ==");
+    println!("spawn-per-call     {:9.1} µs", spawn.mean * 1e6);
+    println!("persistent pool    {:9.1} µs   ({:.1}x)", pooled.mean * 1e6, spawn.mean / pooled.mean);
+    bs::dump_row(
+        "perf_probe",
+        Json::obj(vec![
+            ("kind", Json::str("dispatch")),
+            ("spawn_us", Json::num(spawn.mean * 1e6)),
+            ("pool_us", Json::num(pooled.mean * 1e6)),
+        ]),
+    );
+}
+
+fn assembly_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, steps: usize) {
+    let mut rng = Rng::new(9);
+    let plan = sampler.epoch_plan(&mut rng);
+    let mut asm = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+    let mut nodes = Vec::new();
+
+    // allocate-per-step (the pre-overhaul path)
+    let t = Timer::start();
+    let mut done = 0usize;
+    'a: loop {
+        for ids in &plan {
+            if done >= steps {
+                break 'a;
+            }
+            sampler.batch_nodes(ids, &mut nodes);
+            let _batch = asm.assemble(ds, &nodes);
+            done += 1;
+        }
+    }
+    let alloc_ms = t.secs() * 1e3 / done as f64;
+
+    // reused zero-allocation path
+    let mut batch = asm.new_batch(ds);
+    let t = Timer::start();
+    let mut done = 0usize;
+    'b: loop {
+        for ids in &plan {
+            if done >= steps {
+                break 'b;
+            }
+            sampler.batch_nodes(ids, &mut nodes);
+            asm.assemble_into(ds, &nodes, &mut batch);
+            done += 1;
+        }
+    }
+    let reuse_ms = t.secs() * 1e3 / done as f64;
+
+    println!("== batch assembly ({done} steps, b_max {b_max}) ==");
+    println!("alloc-per-step     {alloc_ms:9.3} ms/step");
+    println!(
+        "reused buffers     {reuse_ms:9.3} ms/step   ({:.1}% less)",
+        100.0 * (1.0 - reuse_ms / alloc_ms)
+    );
+    bs::dump_row(
+        "perf_probe",
+        Json::obj(vec![
+            ("kind", Json::str("assembly")),
+            ("alloc_ms", Json::num(alloc_ms)),
+            ("reuse_ms", Json::num(reuse_ms)),
+            ("reduction_pct", Json::num(100.0 * (1.0 - reuse_ms / alloc_ms))),
+        ]),
+    );
+}
+
+fn pjrt_probe(
+    ds: &Dataset,
+    sampler: &ClusterSampler,
+    artifact: &str,
+    steps: usize,
+) -> anyhow::Result<()> {
+    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let meta = engine.meta(artifact)?;
+    engine.ensure_compiled(artifact)?;
+    let mut rng = Rng::new(7);
     let mut asm = BatchAssembler::new(ds.n(), meta.b_max, NormConfig::PAPER_DEFAULT);
+    let mut batch = asm.new_batch(ds);
     let mut state = TrainState::init(&meta, 0);
 
     let mut assembly_s = 0.0;
@@ -52,13 +237,13 @@ fn main() -> anyhow::Result<()> {
             }
             let t = Timer::start();
             sampler.batch_nodes(ids, &mut nodes);
-            let batch = asm.assemble(&ds, &nodes);
+            asm.assemble_into(ds, &nodes, &mut batch);
             assembly_s += t.secs();
             if batch.n_train == 0 {
                 continue;
             }
             let t = Timer::start();
-            step(&mut engine, &artifact, &mut state, 0.01, &batch)?;
+            step(&mut engine, artifact, &mut state, 0.01, &batch)?;
             step_s += t.secs();
             done += 1;
         }
@@ -78,5 +263,46 @@ fn main() -> anyhow::Result<()> {
         step_s - engine.lit_seconds - engine.exec_seconds - engine.sync_seconds
     );
     println!("per-step: {:.2} ms", 1e3 * total_s / done as f64);
+    bs::dump_row(
+        "perf_probe",
+        Json::obj(vec![
+            ("kind", Json::str("pjrt_loop")),
+            ("artifact", Json::str(artifact)),
+            ("assembly_s", Json::num(assembly_s)),
+            ("step_s", Json::num(step_s)),
+            ("per_step_ms", Json::num(1e3 * total_s / done.max(1) as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let preset_name = args.get(1).map(String::as_str).unwrap_or("reddit_like");
+    let layers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let steps: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(100);
+    let iters = bs::env_usize("CGCN_ITERS", 3);
+
+    let p = preset(preset_name).expect("preset");
+    let ds = build_cached(p, 42, std::path::Path::new("data"))?;
+
+    host_kernel_probe(&ds, layers, iters);
+    dispatch_probe();
+
+    let mut rng = Rng::new(7);
+    let part = MultilevelPartitioner::default().partition(
+        &ds.graph,
+        p.default_partitions,
+        &mut rng,
+    );
+    let sampler =
+        ClusterSampler::new(parts_to_clusters(&part, p.default_partitions), p.default_q);
+    assembly_probe(&ds, &sampler, p.b_max, steps.max(20));
+
+    let short = preset_name.trim_end_matches("_like");
+    let artifact = format!("{short}_L{layers}");
+    if let Err(e) = pjrt_probe(&ds, &sampler, &artifact, steps) {
+        println!("(PJRT loop skipped: {e})");
+    }
     Ok(())
 }

@@ -15,10 +15,13 @@
 //! milliseconds for hidden 128 and 512.
 
 use cluster_gcn::bench_support as bs;
+use cluster_gcn::coordinator::inference::spmm_layer_into;
 use cluster_gcn::coordinator::BatchAssembler;
-use cluster_gcn::graph::SubgraphScratch;
-use cluster_gcn::norm::NormConfig;
-use cluster_gcn::util::{bench, Json, Rng};
+use cluster_gcn::graph::{induced_csr, SubgraphScratch};
+use cluster_gcn::norm::{normalize_sparse, NormConfig};
+use cluster_gcn::runtime::Tensor;
+use cluster_gcn::util::pool::default_threads;
+use cluster_gcn::util::{bench, Json, Rng, Timer};
 
 /// Gather-style SpMM: z = (A_local @ x) @ w with CSR-ish edge list.
 fn gather_spmm(
@@ -112,7 +115,27 @@ fn main() -> anyhow::Result<()> {
     sampler.batch_nodes(&plan[0], &mut nodes);
     let b = p.b_max;
     let mut asm = BatchAssembler::new(ds.n(), b, NormConfig::PAPER_DEFAULT);
-    let batch = asm.assemble(&ds, &nodes);
+
+    // phase timings: reused-buffer assembly + subgraph renormalization
+    let mut batch = asm.new_batch(&ds);
+    asm.assemble_into(&ds, &nodes, &mut batch); // warm the buffers
+    let t = Timer::start();
+    asm.assemble_into(&ds, &nodes, &mut batch);
+    let assemble_ms = t.secs() * 1e3;
+
+    // CSR view of the same batch block for the tiled fused kernel
+    let sub = induced_csr(&ds.graph, &nodes);
+    let t = Timer::start();
+    let (svals, ssl) = normalize_sparse(&sub, NormConfig::PAPER_DEFAULT);
+    let normalize_ms = t.secs() * 1e3;
+    println!("phases: assemble {assemble_ms:.2} ms, normalize {normalize_ms:.2} ms");
+    bs::dump_row(
+        "table6",
+        Json::obj(vec![
+            ("assemble_ms", Json::num(assemble_ms)),
+            ("normalize_ms", Json::num(normalize_ms)),
+        ]),
+    );
 
     // edge list + values for the gather path
     let mut scratch_sub = SubgraphScratch::new(ds.n());
@@ -134,7 +157,10 @@ fn main() -> anyhow::Result<()> {
         edges.len(),
         b
     );
-    let mut table = bs::Table::new(&["hidden", "dense-block ms", "gather ms"]);
+    let mut table = bs::Table::new(&[
+        "hidden", "dense-block ms", "gather ms", "tiled-1t ms", "tiled-pool ms",
+    ]);
+    let pool_threads = default_threads();
     for hidden in [128usize, 512] {
         let f = ds.f_in;
         let w: Vec<f32> = (0..f * hidden).map(|i| (i % 13) as f32 * 0.01).collect();
@@ -152,10 +178,25 @@ fn main() -> anyhow::Result<()> {
                 &mut out2, &mut scr2,
             );
         });
-        // numeric agreement on real rows
+        // tiled fused SpMM·GEMM over the batch CSR, single-thread and
+        // on the persistent pool
+        let wt = Tensor::new(vec![f, hidden], w.clone());
+        let x_real = &batch.x.data[..batch.n_real * f];
+        let mut out3 = vec![0f32; batch.n_real * hidden];
+        let s_tiled1 = bench(2, iters, || {
+            spmm_layer_into(&sub, &svals, &ssl, x_real, f, &wt, false, 1, &mut out3);
+        });
+        let mut out4 = vec![0f32; batch.n_real * hidden];
+        let s_tiledp = bench(2, iters, || {
+            spmm_layer_into(&sub, &svals, &ssl, x_real, f, &wt, false, pool_threads, &mut out4);
+        });
+
+        // numeric agreement on real rows across all realizations
         let mut max_err = 0f32;
         for i in 0..batch.n_real * hidden {
             max_err = max_err.max((out[i] - out2[i]).abs());
+            max_err = max_err.max((out[i] - out3[i]).abs());
+            max_err = max_err.max((out[i] - out4[i]).abs());
         }
         assert!(max_err < 1e-3, "realizations disagree: {max_err}");
 
@@ -163,6 +204,8 @@ fn main() -> anyhow::Result<()> {
             hidden.to_string(),
             format!("{:.2}", s_dense.mean * 1e3),
             format!("{:.2}", s_gather.mean * 1e3),
+            format!("{:.2}", s_tiled1.mean * 1e3),
+            format!("{:.2}", s_tiledp.mean * 1e3),
         ]);
         bs::dump_row(
             "table6",
@@ -170,6 +213,8 @@ fn main() -> anyhow::Result<()> {
                 ("hidden", Json::num(hidden as f64)),
                 ("dense_ms", Json::num(s_dense.mean * 1e3)),
                 ("gather_ms", Json::num(s_gather.mean * 1e3)),
+                ("tiled_ms", Json::num(s_tiled1.mean * 1e3)),
+                ("tiled_pool_ms", Json::num(s_tiledp.mean * 1e3)),
             ]),
         );
     }

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI gate: style + lints + the tier-1 verify from ROADMAP.md.
+# Run from anywhere inside the repo; requires the rust toolchain.
+set -euo pipefail
+
+cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (all targets, -D warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "CI gate passed."

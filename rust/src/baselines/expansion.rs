@@ -85,9 +85,10 @@ pub fn train_expansion(
     targets_per_batch: usize,
     opts: &crate::coordinator::trainer::TrainOptions,
 ) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
-    use crate::coordinator::trainer::{evaluate, step, CurvePoint, TrainResult, TrainState};
+    use crate::coordinator::trainer::{evaluate_cached, step, CurvePoint, TrainResult, TrainState};
     use crate::coordinator::batch::BatchAssembler;
     use crate::graph::Split;
+    use crate::norm::NormCache;
     use crate::util::Timer;
 
     let meta = engine.meta(artifact)?;
@@ -95,6 +96,8 @@ pub fn train_expansion(
     let mut state = TrainState::init(&meta, opts.seed);
     let mut rng = Rng::new(opts.seed ^ 0xE0A5_1011_2233_4455);
     let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let mut batch = assembler.new_batch(ds);
+    let mut norm_cache = NormCache::new();
     let train_nodes = ds.nodes_in_split(Split::Train);
     let eval_nodes = ds.nodes_in_split(opts.eval_split);
 
@@ -117,7 +120,7 @@ pub fn train_expansion(
             if exp.truncated {
                 truncated_batches += 1;
             }
-            let mut batch = assembler.assemble(ds, &exp.nodes);
+            assembler.assemble_into(ds, &exp.nodes, &mut batch);
             // loss only on the targets (first in local order)
             batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
             for i in 0..targets.len().min(exp.nodes.len()) {
@@ -137,7 +140,9 @@ pub fn train_expansion(
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
-            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            let f1 = evaluate_cached(
+                ds, &state.weights, opts.norm, meta.residual, &eval_nodes, &mut norm_cache,
+            );
             curve.push(CurvePoint {
                 epoch,
                 train_seconds,

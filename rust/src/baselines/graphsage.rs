@@ -10,9 +10,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batch::{Batch, BatchAssembler};
-use crate::coordinator::trainer::{evaluate, step, CurvePoint, TrainOptions, TrainResult, TrainState};
+use crate::coordinator::batch::BatchAssembler;
+use crate::coordinator::trainer::{
+    evaluate_cached, step, CurvePoint, TrainOptions, TrainResult, TrainState,
+};
 use crate::graph::{Dataset, Split};
+use crate::norm::NormCache;
 use crate::util::{Rng, Timer};
 use crate::runtime::Engine;
 
@@ -131,6 +134,8 @@ pub fn train_graphsage(
     let mut state = TrainState::init(&meta, opts.seed);
     let mut rng = Rng::new(opts.seed ^ 0x5A6E_0000_3333_4444);
     let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let mut batch = assembler.new_batch(ds);
+    let mut norm_cache = NormCache::new();
     let train_nodes = ds.nodes_in_split(Split::Train);
     let eval_nodes = ds.nodes_in_split(opts.eval_split);
 
@@ -151,8 +156,7 @@ pub fn train_graphsage(
                 break;
             }
             let field = sample_field(ds, targets, params, meta.b_max, &mut rng);
-            let mut batch: Batch =
-                assembler.assemble_with_edges(ds, &field.nodes, &field.edges);
+            assembler.assemble_with_edges_into(ds, &field.nodes, &field.edges, &mut batch);
             // loss only on the targets (they are first in local order)
             batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
             for i in 0..targets.len() {
@@ -175,7 +179,9 @@ pub fn train_graphsage(
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
-            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            let f1 = evaluate_cached(
+                ds, &state.weights, opts.norm, meta.residual, &eval_nodes, &mut norm_cache,
+            );
             curve.push(CurvePoint {
                 epoch,
                 train_seconds,

@@ -22,9 +22,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::trainer::{evaluate, CurvePoint, TrainOptions, TrainResult, TrainState};
+use crate::coordinator::trainer::{evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState};
 use crate::graph::{Dataset, Split};
-use crate::norm::normalize_sparse;
+use crate::norm::NormCache;
 use crate::runtime::{Engine, Kind, Tensor};
 use crate::util::{Rng, Timer};
 
@@ -98,7 +98,9 @@ pub fn train_vrgcn(
 
     let mut state = TrainState::init(&meta, opts.seed);
     let mut history = History::new(n, f_hid, l - 1);
-    let (avals, aself) = normalize_sparse(&ds.graph, opts.norm);
+    // one normalization for the whole run, shared with every eval
+    let mut norm_cache = NormCache::new();
+    let adj_idx = norm_cache.ensure(&ds.graph, opts.norm);
     let mut rng = Rng::new(opts.seed ^ 0x7766_5544_3322_1100);
     let train_nodes = ds.nodes_in_split(Split::Train);
     let eval_nodes = ds.nodes_in_split(opts.eval_split);
@@ -122,6 +124,8 @@ pub fn train_vrgcn(
             if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
                 break;
             }
+            let adj = norm_cache.get(adj_idx);
+            let (avals, aself) = (&adj.vals, &adj.self_loop);
             // ---- receptive union: targets + r-sampled per hop ---------
             let mut nodes: Vec<u32> = Vec::new();
             for &t in targets {
@@ -303,7 +307,9 @@ pub fn train_vrgcn(
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
-            let f1 = evaluate(ds, &state.weights, opts.norm, false, &eval_nodes);
+            let f1 = evaluate_cached(
+                ds, &state.weights, opts.norm, false, &eval_nodes, &mut norm_cache,
+            );
             curve.push(CurvePoint {
                 epoch,
                 train_seconds,

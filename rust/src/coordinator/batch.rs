@@ -2,11 +2,18 @@
 //! between-cluster links added back, §3.2) → per-batch renormalization
 //! (§6.2) → padded dense tensors for the AOT executable.
 //!
-//! This is the L3 hot path: all buffers live in a reusable
-//! `BatchAssembler` and are overwritten per batch (DESIGN.md §8).
+//! This is the L3 hot path.  [`BatchAssembler::assemble_into`] writes
+//! into a caller-owned reusable [`Batch`]: the `a/x/y/mask` tensors and
+//! the `nodes` list keep their allocations across steps, only the rows
+//! dirtied by the *previous* batch are cleared (tracked per `Batch`, so
+//! the trainer can double-buffer two batches through one assembler),
+//! and the degree scratch for the dense-block normalization lives in
+//! the assembler.  Steady-state assembly performs no heap allocation.
+//! The owning `assemble`/`assemble_with_edges` wrappers allocate a
+//! fresh `Batch` per call and remain for one-off callers and tests.
 
 use crate::graph::{Dataset, Split, SubgraphScratch};
-use crate::norm::{build_dense_block, NormConfig};
+use crate::norm::{build_dense_block_prezeroed, NormConfig};
 use crate::runtime::Tensor;
 
 /// Assembled batch, ready to feed the train/eval executable.
@@ -27,6 +34,28 @@ pub struct Batch {
     pub within_edges: usize,
     /// labeled nodes in the batch.
     pub n_train: usize,
+    /// rows of a/x/y (and mask entries) possibly non-zero from the last
+    /// assembly into this batch — the only region the next
+    /// `assemble_into` needs to clear.  Invariant: callers mutating a
+    /// batch in place (e.g. mask overrides) only touch rows < n_real.
+    dirty_rows: usize,
+}
+
+impl Batch {
+    /// Fresh zeroed batch shaped for `b_max` × (f_in, classes).
+    pub fn new(b_max: usize, f_in: usize, classes: usize) -> Batch {
+        Batch {
+            nodes: Vec::new(),
+            a: Tensor::zeros(vec![b_max, b_max]),
+            x: Tensor::zeros(vec![b_max, f_in]),
+            y: Tensor::zeros(vec![b_max, classes]),
+            mask: Tensor::zeros(vec![b_max]),
+            n_real: 0,
+            within_edges: 0,
+            n_train: 0,
+            dirty_rows: 0,
+        }
+    }
 }
 
 pub struct BatchAssembler {
@@ -34,6 +63,9 @@ pub struct BatchAssembler {
     pub norm: NormConfig,
     scratch: SubgraphScratch,
     edges: Vec<(u32, u32)>,
+    /// degree scratch for `build_dense_block_prezeroed`, reused across
+    /// batches instead of a fresh Vec per call.
+    deg: Vec<f32>,
 }
 
 impl BatchAssembler {
@@ -43,27 +75,56 @@ impl BatchAssembler {
             norm,
             scratch: SubgraphScratch::new(n_graph),
             edges: Vec::new(),
+            deg: Vec::new(),
         }
     }
 
+    /// A reusable batch shaped for this assembler and dataset.
+    pub fn new_batch(&self, ds: &Dataset) -> Batch {
+        Batch::new(self.b_max, ds.f_in, ds.num_classes)
+    }
+
     /// Assemble a batch over `nodes` using the graph's induced edges.
+    /// Allocating wrapper over [`BatchAssembler::assemble_into`].
     pub fn assemble(&mut self, ds: &Dataset, nodes: &[u32]) -> Batch {
-        crate::graph::induced_edges(&ds.graph, nodes, &mut self.scratch, &mut self.edges);
-        let edges = std::mem::take(&mut self.edges);
-        let batch = self.assemble_with_edges(ds, nodes, &edges);
-        self.edges = edges;
+        let mut batch = self.new_batch(ds);
+        self.assemble_into(ds, nodes, &mut batch);
         batch
     }
 
     /// Assemble with an explicit (local-id) edge list — used by the
     /// GraphSAGE/VR-GCN baselines whose adjacency is *sampled*, not
-    /// induced.
+    /// induced.  Allocating wrapper over
+    /// [`BatchAssembler::assemble_with_edges_into`].
     pub fn assemble_with_edges(
         &mut self,
         ds: &Dataset,
         nodes: &[u32],
         edges: &[(u32, u32)],
     ) -> Batch {
+        let mut batch = self.new_batch(ds);
+        self.assemble_with_edges_into(ds, nodes, edges, &mut batch);
+        batch
+    }
+
+    /// Assemble the induced batch over `nodes` into a reused `batch`
+    /// (zero steady-state allocation).
+    pub fn assemble_into(&mut self, ds: &Dataset, nodes: &[u32], batch: &mut Batch) {
+        crate::graph::induced_edges(&ds.graph, nodes, &mut self.scratch, &mut self.edges);
+        let edges = std::mem::take(&mut self.edges);
+        self.assemble_with_edges_into(ds, nodes, &edges, batch);
+        self.edges = edges;
+    }
+
+    /// Core assembly into a reused `batch`: clears only the rows the
+    /// previous assembly dirtied, then writes the new block/rows.
+    pub fn assemble_with_edges_into(
+        &mut self,
+        ds: &Dataset,
+        nodes: &[u32],
+        edges: &[(u32, u32)],
+        batch: &mut Batch,
+    ) {
         let b = self.b_max;
         let n_real = nodes.len();
         assert!(
@@ -71,36 +132,48 @@ impl BatchAssembler {
             "batch of {n_real} nodes exceeds b_max={b}; increase b_max \
              or reduce clusters per batch"
         );
-
-        let mut a = Tensor::zeros(vec![b, b]);
-        build_dense_block(n_real, edges, b, self.norm, &mut a.data);
-
         let f = ds.f_in;
         let c = ds.num_classes;
-        let mut x = Tensor::zeros(vec![b, f]);
-        let mut y = Tensor::zeros(vec![b, c]);
-        let mut mask = Tensor::zeros(vec![b]);
-        let mut n_train = 0;
+        assert_eq!(batch.a.dims, vec![b, b], "batch shaped for a different assembler");
+        assert_eq!(batch.x.dims, vec![b, f], "batch shaped for a different dataset");
+        assert_eq!(batch.y.dims, vec![b, c], "batch shaped for a different dataset");
+
+        let prev = batch.dirty_rows;
+        // A is sparsely written (edges + diagonal): zero exactly the
+        // previously-dirtied rows, not the full b_max² block.
+        batch.a.data[..prev * b].fill(0.0);
+        build_dense_block_prezeroed(n_real, edges, b, self.norm, &mut self.deg, &mut batch.a.data);
+
         for (i, &v) in nodes.iter().enumerate() {
             let v = v as usize;
-            x.data[i * f..(i + 1) * f].copy_from_slice(ds.feature_row(v));
-            ds.labels.write_row(v, c, &mut y.data[i * c..(i + 1) * c]);
-            if ds.split[v] == Split::Train {
-                mask.data[i] = 1.0;
-                n_train += 1;
-            }
+            batch.x.data[i * f..(i + 1) * f].copy_from_slice(ds.feature_row(v));
+            ds.labels.write_row(v, c, &mut batch.y.data[i * c..(i + 1) * c]);
+        }
+        // rows the previous batch used beyond this batch's extent
+        if prev > n_real {
+            batch.x.data[n_real * f..prev * f].fill(0.0);
+            batch.y.data[n_real * c..prev * c].fill(0.0);
         }
 
-        Batch {
-            nodes: nodes.to_vec(),
-            a,
-            x,
-            y,
-            mask,
-            n_real,
-            within_edges: edges.len(),
-            n_train,
+        let mut n_train = 0;
+        for (i, &v) in nodes.iter().enumerate() {
+            if ds.split[v as usize] == Split::Train {
+                batch.mask.data[i] = 1.0;
+                n_train += 1;
+            } else {
+                batch.mask.data[i] = 0.0;
+            }
         }
+        if prev > n_real {
+            batch.mask.data[n_real..prev].fill(0.0);
+        }
+
+        batch.nodes.clear();
+        batch.nodes.extend_from_slice(nodes);
+        batch.n_real = n_real;
+        batch.within_edges = edges.len();
+        batch.n_train = n_train;
+        batch.dirty_rows = n_real;
     }
 }
 
@@ -184,6 +257,71 @@ mod tests {
         for i in 0..b2.n_real {
             let s: f32 = b2.a.data[i * 256..(i + 1) * 256].iter().sum();
             assert!((s - 1.0).abs() < 1e-5, "row {i} sums {s}");
+        }
+    }
+
+    /// The zero-allocation contract: assembling a smaller batch into a
+    /// buffer previously used by a larger one must (a) not reallocate
+    /// any tensor, and (b) produce exactly what a fresh assembly would
+    /// — i.e. the dirty-row clearing leaves no stale state behind.
+    #[test]
+    fn reused_batch_matches_fresh_and_keeps_allocations() {
+        let ds = small_ds();
+        let mut asm = BatchAssembler::new(ds.n(), 256, NormConfig::ROW);
+        let big: Vec<u32> = (0..230u32).collect();
+        let small: Vec<u32> = (500..560u32).collect();
+
+        let mut reused = asm.new_batch(&ds);
+        asm.assemble_into(&ds, &big, &mut reused);
+        let ptrs = (
+            reused.a.data.as_ptr(),
+            reused.x.data.as_ptr(),
+            reused.y.data.as_ptr(),
+            reused.mask.data.as_ptr(),
+        );
+        let nodes_cap = reused.nodes.capacity();
+        asm.assemble_into(&ds, &small, &mut reused);
+
+        // (a) no reallocation of any batch tensor or the node list
+        assert_eq!(ptrs.0, reused.a.data.as_ptr());
+        assert_eq!(ptrs.1, reused.x.data.as_ptr());
+        assert_eq!(ptrs.2, reused.y.data.as_ptr());
+        assert_eq!(ptrs.3, reused.mask.data.as_ptr());
+        assert_eq!(nodes_cap, reused.nodes.capacity());
+
+        // (b) bit-identical to a fresh assembly of the same nodes
+        let fresh = asm.assemble(&ds, &small);
+        assert_eq!(reused.nodes, fresh.nodes);
+        assert_eq!(reused.a.data, fresh.a.data);
+        assert_eq!(reused.x.data, fresh.x.data);
+        assert_eq!(reused.y.data, fresh.y.data);
+        assert_eq!(reused.mask.data, fresh.mask.data);
+        assert_eq!(reused.n_real, fresh.n_real);
+        assert_eq!(reused.n_train, fresh.n_train);
+        assert_eq!(reused.within_edges, fresh.within_edges);
+    }
+
+    /// Two batches double-buffered through one assembler must not see
+    /// each other's dirty rows.
+    #[test]
+    fn double_buffered_batches_stay_independent() {
+        let ds = small_ds();
+        let mut asm = BatchAssembler::new(ds.n(), 128, NormConfig::ROW);
+        let mut ba = asm.new_batch(&ds);
+        let mut bb = asm.new_batch(&ds);
+        let sets: Vec<Vec<u32>> = vec![
+            (0..100u32).collect(),
+            (100..140u32).collect(),
+            (140..160u32).collect(),
+            (160..260u32).collect(),
+        ];
+        for (k, nodes) in sets.iter().enumerate() {
+            let buf = if k % 2 == 0 { &mut ba } else { &mut bb };
+            asm.assemble_into(&ds, nodes, buf);
+            let fresh = asm.assemble(&ds, nodes);
+            assert_eq!(buf.a.data, fresh.a.data, "set {k}");
+            assert_eq!(buf.x.data, fresh.x.data, "set {k}");
+            assert_eq!(buf.mask.data, fresh.mask.data, "set {k}");
         }
     }
 

@@ -33,16 +33,19 @@ pub fn cluster_forward(
     let classes = meta.classes;
     let mut logits = vec![0f32; ds.n() * classes];
     let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, norm);
+    let mut batch = assembler.new_batch(ds);
     let mut rng = Rng::new(seed);
     let plan = sampler.epoch_plan(&mut rng);
     let mut nodes = Vec::new();
     for ids in &plan {
         sampler.batch_nodes(ids, &mut nodes);
-        let batch = assembler.assemble(ds, &nodes);
-        let mut inputs: Vec<Tensor> = weights.to_vec();
-        inputs.push(batch.a);
-        inputs.push(batch.x);
-        let out = engine.run(fwd_artifact, &inputs)?;
+        assembler.assemble_into(ds, &nodes, &mut batch);
+        // weights + batch tensors go down by reference — no per-batch
+        // clone of the parameter set or the assembled block
+        let mut inputs: Vec<&Tensor> = weights.iter().collect();
+        inputs.push(&batch.a);
+        inputs.push(&batch.x);
+        let out = engine.run_refs(fwd_artifact, &inputs)?;
         let rows = &out[0];
         for (i, &v) in nodes.iter().enumerate() {
             logits[v as usize * classes..(v as usize + 1) * classes]

@@ -6,14 +6,50 @@
 //! CSR SpMM + dense GEMM over the *whole* graph with the weights trained
 //! by the PJRT path.  Also doubles as an independent oracle for the
 //! runtime parity tests (forward artifact vs host inference).
+//!
+//! ## Kernel architecture (see PERF.md)
+//!
+//! The production layer kernel [`spmm_layer_into`] is a cache-blocked
+//! fusion of the two matmuls `Z = (Â·X)·W`:
+//!
+//! - rows are dispatched over the persistent [`crate::util::pool`] in
+//!   contiguous chunks, each chunk writing its disjoint slice of the
+//!   shared output buffer directly (no per-chunk `Vec` + concat copy);
+//! - inside a chunk, rows are processed in blocks of [`ROW_BLOCK`]: the
+//!   propagated rows `P = Â[rows]·X` land in a thread-local scratch,
+//!   then the `P·W` GEMM runs tiled over ([`ROW_BLOCK`] × [`K_PANEL`] ×
+//!   [`COL_TILE`]) so the active weight panel stays L1-resident while
+//!   it is reused across all rows of the block.
+//!
+//! The k-accumulation order is ascending for every output element, so
+//! the tiled kernel is bit-identical to the scalar oracle
+//! [`spmm_layer_naive`] at every thread count — the parity property
+//! tests rely on this.
+
+use std::cell::RefCell;
 
 use crate::graph::{Csr, Dataset};
-use crate::norm::{normalize_sparse, NormConfig};
+use crate::norm::{NormCache, NormConfig};
 use crate::runtime::Tensor;
-use crate::util::pool::{default_threads, parallel_chunks};
+use crate::util::pool::{self, default_threads};
+
+/// Rows of Â propagated and multiplied per tile.
+pub const ROW_BLOCK: usize = 64;
+/// Columns of P (rows of W) per GEMM panel.
+pub const K_PANEL: usize = 128;
+/// Columns of W per GEMM tile (K_PANEL × COL_TILE × 4 B ≈ 32 KB ≈ L1).
+pub const COL_TILE: usize = 64;
+
+thread_local! {
+    /// Per-worker propagation scratch (ROW_BLOCK × f), reused across
+    /// layers and calls — the steady state allocates nothing.
+    static PROP_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// y[n,g] = relu?(Â · x[n,f] · w[f,g]) for one layer, where Â is the
 /// normalized sparse adjacency (vals aligned to g.cols + self loops).
+/// Allocating wrapper over [`spmm_layer_into`].
+#[allow(clippy::too_many_arguments)]
 pub fn spmm_layer(
     g: &Csr,
     vals: &[f32],
@@ -24,92 +60,272 @@ pub fn spmm_layer(
     relu: bool,
     threads: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; g.n() * w.dims[1]];
+    spmm_layer_into(g, vals, self_loop, x, f, w, relu, threads, &mut out);
+    out
+}
+
+/// Fused tiled SpMM·GEMM layer writing into a caller-provided buffer
+/// (`out.len() == n * w.dims[1]`; fully overwritten).  `threads` caps
+/// the chunk count; the chunk layout (and therefore the result, bit for
+/// bit) is independent of how many workers actually run.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_layer_into(
+    g: &Csr,
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &Tensor,
+    relu: bool,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = g.n();
+    let (wf, wg) = (w.dims[0], w.dims[1]);
+    assert_eq!(wf, f, "weight in-dim mismatch");
+    assert_eq!(out.len(), n * wg, "output buffer mismatch");
+    debug_assert_eq!(x.len(), n * f);
+
+    pool::global().run_rows_with(n, threads.max(1), wg, out, |_ci, rows, out_rows| {
+        PROP_SCRATCH.with(|cell| {
+            let mut prop = cell.borrow_mut();
+            if prop.len() < ROW_BLOCK * f {
+                prop.resize(ROW_BLOCK * f, 0.0);
+            }
+            spmm_block(g, vals, self_loop, x, f, &w.data, wg, relu, rows, out_rows, &mut prop);
+        });
+    });
+}
+
+/// One row-chunk of the fused kernel: propagate a ROW_BLOCK of rows,
+/// then run the cache-tiled GEMM for that block, repeat.
+#[allow(clippy::too_many_arguments)]
+fn spmm_block(
+    g: &Csr,
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &[f32],
+    wg: usize,
+    relu: bool,
+    rows: std::ops::Range<usize>,
+    out_rows: &mut [f32],
+    prop: &mut [f32],
+) {
+    debug_assert_eq!(out_rows.len(), rows.len() * wg);
+    let mut rb = rows.start;
+    while rb < rows.end {
+        let nb = ROW_BLOCK.min(rows.end - rb);
+
+        // ---- P[nb, f] = Â[rb..rb+nb, :] · X -------------------------
+        for ri in 0..nb {
+            let v = rb + ri;
+            let pr = &mut prop[ri * f..(ri + 1) * f];
+            let sl = self_loop[v];
+            let xv = &x[v * f..(v + 1) * f];
+            for j in 0..f {
+                pr[j] = sl * xv[j];
+            }
+            let off = g.offsets[v];
+            for (idx, &u) in g.neighbors(v).iter().enumerate() {
+                let a = vals[off + idx];
+                let xu = &x[u as usize * f..(u as usize + 1) * f];
+                for j in 0..f {
+                    pr[j] += a * xu[j];
+                }
+            }
+        }
+
+        // ---- Z[nb, wg] = P · W, tiled so the active W panel
+        // (K_PANEL × COL_TILE) stays hot across all nb rows ------------
+        let ob = (rb - rows.start) * wg;
+        let out_block = &mut out_rows[ob..ob + nb * wg];
+        out_block.fill(0.0);
+        let mut kp = 0;
+        while kp < f {
+            let kn = K_PANEL.min(f - kp);
+            let mut ct = 0;
+            while ct < wg {
+                let cn = COL_TILE.min(wg - ct);
+                for ri in 0..nb {
+                    let pr = &prop[ri * f + kp..ri * f + kp + kn];
+                    let or = &mut out_block[ri * wg + ct..ri * wg + ct + cn];
+                    for (k, &p) in pr.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let wo = (kp + k) * wg + ct;
+                        let wr = &w[wo..wo + cn];
+                        for c in 0..cn {
+                            or[c] += p * wr[c];
+                        }
+                    }
+                }
+                ct += cn;
+            }
+            kp += kn;
+        }
+
+        if relu {
+            out_block.iter_mut().for_each(|z| {
+                if *z < 0.0 {
+                    *z = 0.0;
+                }
+            });
+        }
+        rb += nb;
+    }
+}
+
+/// The original scalar single-thread layer — kept verbatim as the
+/// parity oracle for the tiled kernel (property tests + table6 bench).
+pub fn spmm_layer_naive(
+    g: &Csr,
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &Tensor,
+    relu: bool,
+) -> Vec<f32> {
     let n = g.n();
     let (wf, wg) = (w.dims[0], w.dims[1]);
     assert_eq!(wf, f, "weight in-dim mismatch");
     debug_assert_eq!(x.len(), n * f);
-
-    // P = Â X (row-parallel), then Z = P W fused per row block.
-    let chunks = parallel_chunks(n, threads, |_, range| {
-        let mut out = vec![0f32; range.len() * wg];
-        let mut prop = vec![0f32; f];
-        for (ri, v) in range.clone().enumerate() {
-            // prop = sum_u Â[v,u] x[u] + self_loop[v] * x[v]
-            prop.iter_mut().for_each(|p| *p = 0.0);
-            let sl = self_loop[v];
-            let xv = &x[v * f..(v + 1) * f];
+    let mut out = vec![0f32; n * wg];
+    let mut prop = vec![0f32; f];
+    for v in 0..n {
+        let sl = self_loop[v];
+        let xv = &x[v * f..(v + 1) * f];
+        for j in 0..f {
+            prop[j] = sl * xv[j];
+        }
+        for (idx, &u) in g.neighbors(v).iter().enumerate() {
+            let a = vals[g.offsets[v] + idx];
+            let xu = &x[u as usize * f..(u as usize + 1) * f];
             for j in 0..f {
-                prop[j] = sl * xv[j];
-            }
-            for (idx, &u) in g.neighbors(v).iter().enumerate() {
-                let a = vals[g.offsets[v] + idx];
-                let xu = &x[u as usize * f..(u as usize + 1) * f];
-                for j in 0..f {
-                    prop[j] += a * xu[j];
-                }
-            }
-            // z = prop @ W
-            let row = &mut out[ri * wg..(ri + 1) * wg];
-            for j in 0..f {
-                let p = prop[j];
-                if p == 0.0 {
-                    continue;
-                }
-                let wrow = &w.data[j * wg..(j + 1) * wg];
-                for k in 0..wg {
-                    row[k] += p * wrow[k];
-                }
-            }
-            if relu {
-                row.iter_mut().for_each(|z| {
-                    if *z < 0.0 {
-                        *z = 0.0;
-                    }
-                });
+                prop[j] += a * xu[j];
             }
         }
-        out
-    });
-    let mut out = Vec::with_capacity(n * wg);
-    for c in chunks {
-        out.extend_from_slice(&c);
+        let row = &mut out[v * wg..(v + 1) * wg];
+        for j in 0..f {
+            let p = prop[j];
+            if p == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[j * wg..(j + 1) * wg];
+            for k in 0..wg {
+                row[k] += p * wrow[k];
+            }
+        }
+        if relu {
+            row.iter_mut().for_each(|z| {
+                if *z < 0.0 {
+                    *z = 0.0;
+                }
+            });
+        }
     }
     out
 }
 
+/// P = Â·X only (no weight GEMM), pooled.  Used by the perf probes to
+/// attribute layer time between the SpMM and GEMM phases.
+pub fn propagate_into(
+    g: &Csr,
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = g.n();
+    assert_eq!(out.len(), n * f, "propagate output mismatch");
+    pool::global().run_rows_with(n, threads.max(1), f, out, |_ci, rows, out_rows| {
+        for (ri, v) in rows.clone().enumerate() {
+            let pr = &mut out_rows[ri * f..(ri + 1) * f];
+            let sl = self_loop[v];
+            let xv = &x[v * f..(v + 1) * f];
+            for j in 0..f {
+                pr[j] = sl * xv[j];
+            }
+            let off = g.offsets[v];
+            for (idx, &u) in g.neighbors(v).iter().enumerate() {
+                let a = vals[off + idx];
+                let xu = &x[u as usize * f..(u as usize + 1) * f];
+                for j in 0..f {
+                    pr[j] += a * xu[j];
+                }
+            }
+        }
+    });
+}
+
 /// Full L-layer forward over the entire graph; returns (n, classes)
-/// logits.  `weights` in layer order.
+/// logits.  `weights` in layer order.  Convenience wrapper that pays
+/// one normalization; evaluation loops should hold a [`NormCache`] and
+/// call [`full_forward_cached`].
 pub fn full_forward(
     ds: &Dataset,
     weights: &[Tensor],
     norm: NormConfig,
     residual: bool,
 ) -> Vec<f32> {
+    let mut cache = NormCache::new();
+    full_forward_cached(ds, weights, norm, residual, &mut cache)
+}
+
+/// [`full_forward`] against a caller-owned normalization cache: the
+/// O(nnz) `normalize_sparse` runs at most once per (dataset, config)
+/// across all evaluations of a training run.  Layer activations
+/// ping-pong between two max-width buffers — no per-layer allocation.
+pub fn full_forward_cached(
+    ds: &Dataset,
+    weights: &[Tensor],
+    norm: NormConfig,
+    residual: bool,
+    cache: &mut NormCache,
+) -> Vec<f32> {
     let threads = default_threads();
-    let (vals, self_loop) = normalize_sparse(&ds.graph, norm);
-    let mut h = ds.features.clone();
+    let adj = cache.get_or_compute(&ds.graph, norm);
+    let n = ds.n();
+    let max_w = weights
+        .iter()
+        .map(|w| w.dims[1])
+        .chain([ds.f_in])
+        .max()
+        .expect("at least one layer");
+    let mut cur = vec![0f32; n * max_w];
+    cur[..n * ds.f_in].copy_from_slice(&ds.features);
+    let mut nxt = vec![0f32; n * max_w];
     let mut f = ds.f_in;
     let last = weights.len() - 1;
     for (l, w) in weights.iter().enumerate() {
-        let z = spmm_layer(
+        let g_dim = w.dims[1];
+        spmm_layer_into(
             &ds.graph,
-            &vals,
-            &self_loop,
-            &h,
+            &adj.vals,
+            &adj.self_loop,
+            &cur[..n * f],
             f,
             w,
             l != last,
             threads,
+            &mut nxt[..n * g_dim],
         );
-        let g_dim = w.dims[1];
-        h = if residual && l != last && g_dim == f {
-            z.iter().zip(&h).map(|(a, b)| a + b).collect()
-        } else {
-            z
-        };
+        if residual && l != last && g_dim == f {
+            for i in 0..n * f {
+                nxt[i] += cur[i];
+            }
+        }
+        std::mem::swap(&mut cur, &mut nxt);
         f = g_dim;
     }
-    h
+    cur.truncate(n * f);
+    cur
 }
 
 /// Gather logits rows for a node subset.
@@ -125,6 +341,7 @@ pub fn gather_rows(logits: &[f32], classes: usize, nodes: &[u32]) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::graph::{Labels, Split, Task};
+    use crate::norm::normalize_sparse;
 
     fn tiny_ds() -> Dataset {
         // path 0-1-2, f_in=2, 2 classes
@@ -230,5 +447,55 @@ mod tests {
         let a = spmm_layer(&ds.graph, &vals, &sl, &ds.features, 2, &w, true, 1);
         let b = spmm_layer(&ds.graph, &vals, &sl, &ds.features, 2, &w, true, 4);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiled_matches_naive_bitwise() {
+        // deterministic medium case crossing the tile boundaries
+        let n = 150;
+        let f = K_PANEL + 37; // force a partial second k-panel
+        let wg = COL_TILE + 9; // force a partial second col tile
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32 - 1).map(|v| (v, v + 1)).chain([(0, (n - 1) as u32)]).collect();
+        let g = Csr::from_edges(n, &edges);
+        let (vals, sl) = normalize_sparse(&g, NormConfig::PAPER_DEFAULT);
+        let x: Vec<f32> = (0..n * f).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.01).collect();
+        let w = Tensor::new(
+            vec![f, wg],
+            (0..f * wg).map(|i| ((i * 13 % 97) as f32 - 48.0) * 0.02).collect(),
+        );
+        let oracle = spmm_layer_naive(&g, &vals, &sl, &x, f, &w, true);
+        for threads in [1usize, 2, 5, 16] {
+            let got = spmm_layer(&g, &vals, &sl, &x, f, &w, true, threads);
+            assert_eq!(got, oracle, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn propagate_matches_layer_with_identity_weight() {
+        let ds = tiny_ds();
+        let (vals, sl) = normalize_sparse(&ds.graph, NormConfig::ROW);
+        let eye = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let via_layer = spmm_layer(&ds.graph, &vals, &sl, &ds.features, 2, &eye, false, 2);
+        let mut p = vec![0f32; ds.n() * 2];
+        propagate_into(&ds.graph, &vals, &sl, &ds.features, 2, 2, &mut p);
+        for (a, b) in p.iter().zip(&via_layer) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cached_forward_matches_uncached() {
+        let ds = tiny_ds();
+        let w0 = Tensor::new(vec![2, 4], (0..8).map(|i| 0.1 * i as f32 - 0.3).collect());
+        let w1 = Tensor::new(vec![4, 2], (0..8).map(|i| 0.2 - 0.05 * i as f32).collect());
+        let weights = vec![w0, w1];
+        let mut cache = NormCache::new();
+        let a = full_forward_cached(&ds, &weights, NormConfig::ROW, false, &mut cache);
+        let b = full_forward_cached(&ds, &weights, NormConfig::ROW, false, &mut cache);
+        let c = full_forward(&ds, &weights, NormConfig::ROW, false);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(cache.computes(), 1);
     }
 }

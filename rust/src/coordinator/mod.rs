@@ -16,4 +16,6 @@ pub mod trainer;
 pub use batch::{Batch, BatchAssembler};
 pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
-pub use trainer::{evaluate, train, CurvePoint, TrainOptions, TrainResult, TrainState};
+pub use trainer::{
+    evaluate, evaluate_cached, train, CurvePoint, TrainOptions, TrainResult, TrainState,
+};

@@ -2,17 +2,25 @@
 //! assemble the renormalized union block, run the fused PJRT
 //! `train_step`, keep params/Adam state across steps; periodically
 //! evaluate with exact host inference.
+//!
+//! Hot-loop engineering (PERF.md): batches double-buffer through two
+//! reusable [`Batch`] buffers on a [`pipeline`] — batch `i + 1` is
+//! assembled on a helper thread while PJRT executes batch `i` — and
+//! all full-graph evaluations share one [`NormCache`], so
+//! `normalize_sparse` runs at most once per (dataset, config) per
+//! training run.
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::batch::BatchAssembler;
+use crate::coordinator::batch::{Batch, BatchAssembler};
 use crate::coordinator::schedule::{EarlyStopper, LrSchedule};
-use crate::coordinator::inference::{full_forward, gather_rows};
+use crate::coordinator::inference::{full_forward_cached, gather_rows};
 use crate::coordinator::metrics::micro_f1;
 use crate::coordinator::sampler::ClusterSampler;
 use crate::graph::{Dataset, Split};
-use crate::norm::NormConfig;
+use crate::norm::{NormCache, NormConfig};
 use crate::runtime::{ArtifactMeta, Engine, Tensor};
+use crate::util::pool::pipeline;
 use crate::util::{Rng, Timer};
 
 /// Model parameters + Adam state, fed through the executable each step.
@@ -131,6 +139,7 @@ pub fn train(
     let mut rng = Rng::new(opts.seed ^ 0x5A5A_0000_1111_2222);
     let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
     let eval_nodes = ds.nodes_in_split(opts.eval_split);
+    let mut norm_cache = NormCache::new();
 
     let mut curve = Vec::new();
     let mut train_seconds = 0.0;
@@ -139,6 +148,10 @@ pub fn train(
     let mut within_edges = 0u64;
     let mut batch_nodes = 0u64;
     let mut nodes_buf: Vec<u32> = Vec::new();
+    // double buffer: batch i+1 assembles while PJRT executes batch i;
+    // the two Batch buffers live for the whole run (no per-step allocs)
+    let mut buf_a = assembler.new_batch(ds);
+    let mut buf_b = assembler.new_batch(ds);
 
     let mut stopper = EarlyStopper::new(opts.patience);
     for epoch in 1..=opts.epochs {
@@ -147,30 +160,60 @@ pub fn train(
         let plan = sampler.epoch_plan(&mut rng);
         let mut epoch_loss = 0.0f64;
         let mut epoch_batches = 0usize;
-        for cluster_ids in &plan {
-            if opts.max_steps_per_epoch > 0 && epoch_batches >= opts.max_steps_per_epoch {
-                break;
-            }
-            sampler.batch_nodes(cluster_ids, &mut nodes_buf);
-            let batch = assembler.assemble(ds, &nodes_buf);
-            if batch.n_train == 0 {
-                continue; // nothing to learn from (all val/test nodes)
-            }
-            within_edges += batch.within_edges as u64;
-            batch_nodes += batch.n_real as u64;
-            peak_bytes = peak_bytes.max(batch.bytes() + state.param_bytes());
-
-            let loss = step(engine, artifact, &mut state, lr, &batch)?;
-            epoch_loss += loss as f64;
-            epoch_batches += 1;
-            steps += 1;
+        let mut step_err: Option<anyhow::Error> = None;
+        {
+            let assembler = &mut assembler;
+            let nodes_buf = &mut nodes_buf;
+            let plan = &plan;
+            (buf_a, buf_b) = pipeline(
+                plan.len(),
+                buf_a,
+                buf_b,
+                |i, batch: &mut Batch| {
+                    sampler.batch_nodes(&plan[i], nodes_buf);
+                    assembler.assemble_into(ds, nodes_buf, batch);
+                },
+                |_i, batch: &mut Batch| {
+                    if batch.n_train == 0 {
+                        return true; // nothing to learn from (all val/test)
+                    }
+                    within_edges += batch.within_edges as u64;
+                    batch_nodes += batch.n_real as u64;
+                    peak_bytes = peak_bytes.max(batch.bytes() + state.param_bytes());
+                    match step(engine, artifact, &mut state, lr, batch) {
+                        Ok(loss) => {
+                            epoch_loss += loss as f64;
+                            epoch_batches += 1;
+                            steps += 1;
+                        }
+                        Err(e) => {
+                            step_err = Some(e);
+                            return false;
+                        }
+                    }
+                    // stop after the cap; the in-flight prefetch is the
+                    // only wasted work
+                    !(opts.max_steps_per_epoch > 0
+                        && epoch_batches >= opts.max_steps_per_epoch)
+                },
+            );
+        }
+        if let Some(e) = step_err {
+            return Err(e);
         }
         train_seconds += timer.secs();
 
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
-            let f1 = evaluate(ds, &state.weights, opts.norm, meta.residual, &eval_nodes);
+            let f1 = evaluate_cached(
+                ds,
+                &state.weights,
+                opts.norm,
+                meta.residual,
+                &eval_nodes,
+                &mut norm_cache,
+            );
             curve.push(CurvePoint {
                 epoch,
                 train_seconds,
@@ -237,6 +280,8 @@ pub fn step(
 }
 
 /// Exact host-side evaluation (full-graph inference) → micro-F1.
+/// One-off wrapper paying a fresh normalization; loops that evaluate
+/// repeatedly must hold a [`NormCache`] and call [`evaluate_cached`].
 pub fn evaluate(
     ds: &Dataset,
     weights: &[Tensor],
@@ -244,10 +289,24 @@ pub fn evaluate(
     residual: bool,
     nodes: &[u32],
 ) -> f64 {
+    let mut cache = NormCache::new();
+    evaluate_cached(ds, weights, norm, residual, nodes, &mut cache)
+}
+
+/// [`evaluate`] against a caller-owned normalization cache: repeated
+/// evaluations over one dataset never re-run `normalize_sparse`.
+pub fn evaluate_cached(
+    ds: &Dataset,
+    weights: &[Tensor],
+    norm: NormConfig,
+    residual: bool,
+    nodes: &[u32],
+    cache: &mut NormCache,
+) -> f64 {
     if nodes.is_empty() {
         return 0.0;
     }
-    let logits = full_forward(ds, weights, norm, residual);
+    let logits = full_forward_cached(ds, weights, norm, residual, cache);
     let rows = gather_rows(&logits, ds.num_classes, nodes);
     micro_f1(ds, nodes, &rows, ds.num_classes)
 }
@@ -303,5 +362,33 @@ mod tests {
         let st = TrainState::init(&fake_meta(), 0);
         let one_set = (8 * 16 + 16 * 4) * 4;
         assert_eq!(st.param_bytes(), 3 * one_set);
+    }
+
+    /// The acceptance invariant behind the NormCache: a multi-eval run
+    /// normalizes the full graph exactly once per config.
+    #[test]
+    fn multi_eval_normalizes_once() {
+        let ds = crate::datagen::build(crate::datagen::preset("cora_like").unwrap(), 7);
+        let w0 = Tensor::new(
+            vec![ds.f_in, 8],
+            (0..ds.f_in * 8).map(|i| ((i % 23) as f32 - 11.0) * 0.01).collect(),
+        );
+        let w1 = Tensor::new(
+            vec![8, ds.num_classes],
+            (0..8 * ds.num_classes).map(|i| ((i % 17) as f32 - 8.0) * 0.02).collect(),
+        );
+        let weights = vec![w0, w1];
+        let nodes = ds.nodes_in_split(Split::Val);
+        let mut cache = NormCache::new();
+        let first = evaluate_cached(
+            &ds, &weights, NormConfig::PAPER_DEFAULT, false, &nodes, &mut cache,
+        );
+        for _ in 0..4 {
+            let again = evaluate_cached(
+                &ds, &weights, NormConfig::PAPER_DEFAULT, false, &nodes, &mut cache,
+            );
+            assert_eq!(first, again);
+        }
+        assert_eq!(cache.computes(), 1, "normalize_sparse must run once per config");
     }
 }

@@ -8,5 +8,6 @@ pub mod rng;
 pub mod stats;
 
 pub use json::Json;
+pub use pool::{pipeline, WorkerPool};
 pub use rng::Rng;
 pub use stats::{bench, entropy, Summary, Timer};

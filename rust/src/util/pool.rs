@@ -1,15 +1,365 @@
-//! Scoped fork-join helpers over std::thread (no tokio offline).
+//! Host thread pool: a **persistent** worker pool for the hot paths
+//! (exact inference SpMM·GEMM, bench workload generation) plus a
+//! double-buffered producer/consumer [`pipeline`] the trainer uses to
+//! overlap batch assembly with PJRT execution.
 //!
-//! The coordinator uses this for batch-assembly prefetch and the bench
-//! harness for parallel workload generation.  `std::thread::scope` keeps
-//! lifetimes simple — no 'static bounds on closures.
+//! The original implementation spawned a fresh `std::thread::scope` per
+//! call; on the L3 hot loop that is ~20-60 µs of thread create/join per
+//! dispatch.  The pool keeps workers parked on a condvar and hands them
+//! chunk ranges of a single active job, so a dispatch is one mutex
+//! round-trip per chunk.  The spawn-per-call version survives as
+//! [`scoped_chunks`] — it is the comparison baseline for the dispatch
+//! probe in `examples/perf_probe.rs` and an independent oracle for the
+//! pool property tests.
+//!
+//! Chunk layout is a pure function of `(n, n_chunks)` — never of worker
+//! count or scheduling — so results written into disjoint output ranges
+//! are deterministic and identical at every pool width.
+//!
+//! Constraint: dispatches must not nest — a chunk closure must not call
+//! back into `run_chunks*` on the same pool (the pool runs one job at a
+//! time, so the inner dispatch would wait on the outer job forever).
+//! Concurrent dispatch from *different* threads is fine: jobs serialize,
+//! and an idle submitter may even help drain the other's chunks.
+
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Type-erased job shared with the workers.
+///
+/// The raw closure pointer is only dereferenced between job
+/// installation and the final chunk completion; `run_chunks_with` does
+/// not return (and therefore the closure's stack frame stays alive)
+/// until `pending` hits zero, so workers never touch a dangling
+/// pointer.
+struct Job {
+    f: *const (dyn Fn(usize, Range<usize>) + Sync),
+    id: u64,
+    n: usize,
+    chunk: usize,
+    n_chunks: usize,
+    /// next chunk index to claim.
+    next: usize,
+    /// chunks not yet completed.
+    pending: usize,
+    /// a chunk closure panicked (re-raised on the submitting thread).
+    panicked: bool,
+}
+
+// Safety: the pointee is `Sync` (concurrent calls are the point) and
+// the completion protocol above bounds its lifetime.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    next_id: u64,
+    /// ids of completed jobs that had a panicking chunk; each is
+    /// drained by its own submitter, which re-raises.
+    panicked: Vec<u64>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// signalled when a job is installed (workers wait here).
+    work: Condvar,
+    /// signalled when a job completes (submitters wait here).
+    done: Condvar,
+}
+
+/// The single source of truth for the chunk decomposition — every
+/// execution path (worker, helping submitter, serial fallback) derives
+/// its ranges from this, so they can never diverge.
+#[inline]
+fn chunk_range(i: usize, chunk: usize, n: usize) -> Range<usize> {
+    (i * chunk).min(n)..((i + 1) * chunk).min(n)
+}
+
+/// (closure, chunk index, item range) of a claimed chunk.
+type Claimed = (*const (dyn Fn(usize, Range<usize>) + Sync), usize, Range<usize>);
+
+fn claim(job: &mut Job) -> Option<Claimed> {
+    if job.next < job.n_chunks {
+        let i = job.next;
+        job.next += 1;
+        Some((job.f, i, chunk_range(i, job.chunk, job.n)))
+    } else {
+        None
+    }
+}
+
+/// Execute a claimed chunk outside the lock, then report it complete.
+/// A panicking closure is caught so the job still finishes (keeping
+/// the erased closure pointer valid for the other chunks and the pool
+/// functional); the panic is flagged on the job and re-raised by the
+/// submitting thread after completion.
+fn run_claimed(shared: &Shared, claimed: Claimed) -> std::sync::MutexGuard<'_, State> {
+    let (f, i, range) = claimed;
+    let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // Safety: see `Job` — the completion protocol keeps the closure
+        // alive until every chunk (including this one) reports in below.
+        unsafe { (*f)(i, range) };
+    }))
+    .is_err();
+    let mut guard = shared.state.lock().unwrap();
+    let j = guard.job.as_mut().expect("job cleared with chunks in flight");
+    if panicked {
+        j.panicked = true;
+    }
+    j.pending -= 1;
+    if j.pending == 0 {
+        let done = guard.job.take().expect("job vanished");
+        if done.panicked {
+            guard.panicked.push(done.id);
+        }
+        shared.done.notify_all();
+    }
+    guard
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut guard = shared.state.lock().unwrap();
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        match guard.job.as_mut().and_then(claim) {
+            Some(claimed) => {
+                drop(guard);
+                guard = run_claimed(shared, claimed);
+            }
+            None => {
+                guard = shared.work.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// Persistent fork-join pool.  Workers are spawned once and parked
+/// between jobs; the submitting thread participates in every job, so a
+/// pool of width `t` runs `t`-wide with `t - 1` spawned threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                next_id: 0,
+                panicked: Vec::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("cgcn-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads }
+    }
+
+    /// Parallel width (spawned workers + the submitting thread).
+    pub fn width(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk_index, item_range)` over `n` items split into
+    /// pool-width chunks.  Blocks until every chunk has completed.
+    pub fn run_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        self.run_chunks_with(n, self.threads, f);
+    }
+
+    /// Like [`WorkerPool::run_chunks`] but with an explicit chunk count
+    /// (chunk layout is `(n, n_chunks)`-determined, so callers that need
+    /// a fixed decomposition — e.g. `parallel_chunks` — stay
+    /// deterministic regardless of pool width).
+    pub fn run_chunks_with<F>(&self, n: usize, n_chunks: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let n_chunks = n_chunks.max(1).min(n);
+        if n_chunks == 1 || self.threads == 1 {
+            // serial fast path still honours the requested decomposition
+            let chunk = n.div_ceil(n_chunks);
+            for i in 0..n.div_ceil(chunk) {
+                f(i, chunk_range(i, chunk, n));
+            }
+            return;
+        }
+        let chunk = n.div_ceil(n_chunks);
+        let n_chunks = n.div_ceil(chunk);
+
+        let obj: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+        // Safety: lifetime erasure only; this function does not return
+        // until every chunk has run, so the pointer never dangles.
+        let ptr: *const (dyn Fn(usize, Range<usize>) + Sync) =
+            unsafe { std::mem::transmute(obj) };
+
+        let my_id;
+        {
+            let mut guard = self.shared.state.lock().unwrap();
+            while guard.job.is_some() {
+                guard = self.shared.done.wait(guard).unwrap();
+            }
+            my_id = guard.next_id;
+            guard.next_id = guard.next_id.wrapping_add(1);
+            guard.job = Some(Job {
+                f: ptr,
+                id: my_id,
+                n,
+                chunk,
+                n_chunks,
+                next: 0,
+                pending: n_chunks,
+                panicked: false,
+            });
+        }
+        self.shared.work.notify_all();
+
+        // The submitting thread works too (it may also help a
+        // concurrent submitter's job to completion, which is equally
+        // bounded by that submitter's blocking wait).
+        let mut guard = self.shared.state.lock().unwrap();
+        loop {
+            match guard.job.as_mut().and_then(claim) {
+                Some(claimed) => {
+                    drop(guard);
+                    guard = run_claimed(&self.shared, claimed);
+                }
+                None => break,
+            }
+        }
+        while matches!(&guard.job, Some(j) if j.id == my_id) {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+        // re-raise a chunk panic (ours, not a helped job's) now that
+        // the protocol is complete and the closure is out of use
+        if let Some(pos) = guard.panicked.iter().position(|&id| id == my_id) {
+            guard.panicked.swap_remove(pos);
+            drop(guard);
+            panic!("WorkerPool: a chunk closure panicked during this dispatch");
+        }
+    }
+
+    /// Row-sliced variant writing into a caller-provided buffer: `out`
+    /// is viewed as `rows` rows of `stride` elements; each chunk gets
+    /// `f(chunk_index, row_range, &mut out[rows of that range])`.  The
+    /// per-chunk slices are disjoint, so no copies or concatenation.
+    pub fn run_rows<T, F>(&self, rows: usize, stride: usize, out: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>, &mut [T]) + Sync,
+    {
+        self.run_rows_with(rows, self.threads, stride, out, f);
+    }
+
+    /// [`WorkerPool::run_rows`] with an explicit chunk count.
+    pub fn run_rows_with<T, F>(
+        &self,
+        rows: usize,
+        n_chunks: usize,
+        stride: usize,
+        out: &mut [T],
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(usize, Range<usize>, &mut [T]) + Sync,
+    {
+        assert_eq!(out.len(), rows * stride, "run_rows: out/rows/stride mismatch");
+        let base = SendPtr(out.as_mut_ptr());
+        self.run_chunks_with(rows, n_chunks, |i, r| {
+            // Safety: chunk ranges are disjoint, so the row slices are
+            // non-overlapping; `out` outlives the (blocking) dispatch.
+            let slice = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r.start * stride), r.len() * stride)
+            };
+            f(i, r, slice);
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // &mut self proves no run_chunks is in flight (they borrow &self),
+        // so workers are idle and exit at the next wakeup.
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+// Safety: used only to smuggle a base pointer into Sync closures that
+// write disjoint ranges (see `run_rows_with`).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// The process-wide pool (width = available parallelism), created on
+/// first use and kept for the process lifetime.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_threads()))
+}
 
 /// Run `f(chunk_index, item_range)` over `n` items split into at most
 /// `threads` contiguous chunks; returns per-chunk results in order.
+/// Same API/decomposition as the original spawn-per-call helper, now
+/// executed on the persistent global pool.
 pub fn parallel_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = n.div_ceil(threads);
+    let n_chunks = n.div_ceil(chunk);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n_chunks);
+    out.resize_with(n_chunks, || None);
+    {
+        let slots = SendPtr(out.as_mut_ptr());
+        global().run_chunks_with(n, n_chunks, |i, r| {
+            // Safety: chunk i writes slot i exactly once; slots disjoint.
+            unsafe { *slots.0.add(i) = Some(f(i, r)) };
+        });
+    }
+    out.into_iter()
+        .map(|o| o.expect("pool skipped a chunk"))
+        .collect()
+}
+
+/// Spawn-per-call fork-join over `std::thread::scope` — the pre-pool
+/// implementation, kept as the dispatch-overhead baseline
+/// (`examples/perf_probe.rs`) and as an independent oracle in the pool
+/// property tests.
+pub fn scoped_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
     let chunk = n.div_ceil(threads);
@@ -38,9 +388,68 @@ pub fn default_threads() -> usize {
         .unwrap_or(4)
 }
 
+/// Double-buffered producer/consumer pipeline over exactly two reusable
+/// buffers: `produce(i, &mut T)` runs on a helper thread one item ahead
+/// of `consume(i, &mut T)` on the calling thread (items are consumed in
+/// production order).  Used by the trainer to assemble batch `i + 1`
+/// while PJRT executes batch `i`.  `consume` returning `false` stops
+/// the pipeline early.  Returns the two buffers for reuse by the next
+/// epoch — no per-item allocation.
+pub fn pipeline<T, P, C>(n: usize, a: T, b: T, mut produce: P, mut consume: C) -> (T, T)
+where
+    T: Send,
+    P: FnMut(usize, &mut T) + Send,
+    C: FnMut(usize, &mut T) -> bool,
+{
+    if n == 0 {
+        return (a, b);
+    }
+    use std::sync::mpsc::channel;
+    std::thread::scope(|s| {
+        let (free_tx, free_rx) = channel::<T>();
+        let (ready_tx, ready_rx) = channel::<T>();
+        free_tx.send(a).expect("fresh channel");
+        free_tx.send(b).expect("fresh channel");
+        let producer = s.spawn(move || {
+            for i in 0..n {
+                let Ok(mut buf) = free_rx.recv() else {
+                    return free_rx; // consumer stopped early
+                };
+                produce(i, &mut buf);
+                if ready_tx.send(buf).is_err() {
+                    return free_rx;
+                }
+            }
+            free_rx
+        });
+        let mut recovered: Vec<T> = Vec::with_capacity(2);
+        for i in 0..n {
+            let Ok(mut buf) = ready_rx.recv() else { break };
+            if consume(i, &mut buf) {
+                let _ = free_tx.send(buf);
+            } else {
+                recovered.push(buf);
+                break;
+            }
+        }
+        drop(free_tx);
+        let free_rx = producer.join().expect("pipeline producer panicked");
+        while let Ok(buf) = free_rx.try_recv() {
+            recovered.push(buf);
+        }
+        while let Ok(buf) = ready_rx.try_recv() {
+            recovered.push(buf);
+        }
+        let b_out = recovered.pop().expect("pipeline lost a buffer");
+        let a_out = recovered.pop().expect("pipeline lost a buffer");
+        (a_out, b_out)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
     #[test]
     fn covers_all_items() {
@@ -64,5 +473,152 @@ mod tests {
     fn ordered_results() {
         let results = parallel_chunks(64, 4, |i, _| i);
         assert_eq!(results, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn matches_spawn_per_call_decomposition() {
+        for n in [0usize, 1, 5, 64, 100, 1000] {
+            for threads in [1usize, 2, 3, 7, 16] {
+                let pooled = parallel_chunks(n, threads, |i, r| (i, r.start, r.end));
+                let spawned = scoped_chunks(n, threads, |i, r| (i, r.start, r.end));
+                assert_eq!(pooled, spawned, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_covers_each_item_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let n = 1000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        pool.run_chunks_with(n, 13, |_, r| {
+            for j in r {
+                hits[j].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run_chunks(64, |_, r| {
+                total.fetch_add(r.len(), Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 64);
+    }
+
+    #[test]
+    fn run_rows_writes_disjoint_slices() {
+        let pool = WorkerPool::new(4);
+        let rows = 37;
+        let stride = 5;
+        let mut out = vec![u32::MAX; rows * stride];
+        pool.run_rows_with(rows, 6, stride, &mut out, |_, range, slice| {
+            assert_eq!(slice.len(), range.len() * stride);
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = (range.start * stride + k) as u32;
+            }
+        });
+        let expect: Vec<u32> = (0..(rows * stride) as u32).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let pool = WorkerPool::new(4);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..50 {
+                    pool.run_chunks(100, |_, r| {
+                        a.fetch_add(r.len(), Ordering::Relaxed);
+                    });
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..50 {
+                    pool.run_chunks(100, |_, r| {
+                        b.fetch_add(r.len(), Ordering::Relaxed);
+                    });
+                }
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 5000);
+        assert_eq!(b.load(Ordering::Relaxed), 5000);
+    }
+
+    #[test]
+    fn panicking_chunk_fails_dispatch_but_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks_with(8, 8, |i, _| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "submitter must re-raise the chunk panic");
+        // the pool is not wedged: later dispatches complete normally
+        let total = AtomicUsize::new(0);
+        pool.run_chunks(100, |_, r| {
+            total.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn global_pool_is_persistent() {
+        let p1 = global() as *const WorkerPool;
+        global().run_chunks(10, |_, _| {});
+        let p2 = global() as *const WorkerPool;
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn pipeline_consumes_in_order_and_returns_buffers() {
+        let (a, b) = pipeline(
+            7,
+            Vec::<usize>::new(),
+            Vec::<usize>::new(),
+            |i, buf| {
+                buf.clear();
+                buf.push(i);
+            },
+            |i, buf| {
+                assert_eq!(buf, &vec![i]);
+                true
+            },
+        );
+        // both buffers came back with their capacity intact
+        assert!(a.capacity() >= 1 && b.capacity() >= 1);
+    }
+
+    #[test]
+    fn pipeline_early_stop_recovers_both_buffers() {
+        let mut seen = 0usize;
+        let (a, b) = pipeline(
+            100,
+            vec![0u8; 8],
+            vec![0u8; 8],
+            |i, buf| buf[0] = i as u8,
+            |_, _| {
+                seen += 1;
+                seen < 3
+            },
+        );
+        assert_eq!(seen, 3);
+        assert_eq!(a.len(), 8);
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn pipeline_zero_items() {
+        let (a, b) = pipeline(0, 1u32, 2u32, |_, _| {}, |_, _| true);
+        assert_eq!((a, b), (1, 2));
     }
 }

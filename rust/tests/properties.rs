@@ -2,11 +2,14 @@
 //! state invariants) using the in-tree `testing` harness (offline
 //! stand-in for proptest — failures print a reproducible seed+size).
 
+use cluster_gcn::coordinator::inference::{spmm_layer, spmm_layer_naive};
 use cluster_gcn::coordinator::{BatchAssembler, ClusterSampler};
 use cluster_gcn::graph::{
     induced_csr, within_edges, Csr, Dataset, Labels, Split, SubgraphScratch, Task,
 };
-use cluster_gcn::norm::{build_dense_block, NormConfig};
+use cluster_gcn::norm::{build_dense_block, normalize_sparse, NormConfig};
+use cluster_gcn::runtime::Tensor;
+use cluster_gcn::util::pool::{self, parallel_chunks, scoped_chunks};
 use cluster_gcn::partition::{
     balance, edge_cut, parts_to_clusters, MultilevelPartitioner, Partitioner,
     RandomPartitioner,
@@ -255,6 +258,115 @@ fn prop_batch_assembly_invariants() {
             let s: f32 = row.iter().sum();
             if (s - 1.0).abs() > 1e-6 {
                 return Err("label row not one-hot".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------------------
+// host kernel / thread pool invariants
+// --------------------------------------------------------------------------
+
+/// Tiled fused SpMM·GEMM ≡ the scalar oracle for arbitrary graphs,
+/// feature widths, output widths, norm configs, and thread counts.
+#[test]
+fn prop_tiled_spmm_matches_naive_oracle() {
+    forall(&cfg(20, 0xE1, 220), "spmm_parity", |rng, size| {
+        let g = gen::graph(rng, size.max(4), 5.0);
+        let n = g.n();
+        let f = 1 + rng.usize_below(140); // crosses the K_PANEL=128 boundary
+        let wg = 1 + rng.usize_below(70); // crosses the COL_TILE=64 boundary
+        let norm = if rng.bool_with(0.5) { NormConfig::PAPER_DEFAULT } else { NormConfig::ROW };
+        let (vals, sl) = normalize_sparse(&g, norm);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let w = Tensor::new(vec![f, wg], (0..f * wg).map(|_| rng.f32() - 0.5).collect());
+        let relu = rng.bool_with(0.5);
+        let oracle = spmm_layer_naive(&g, &vals, &sl, &x, f, &w, relu);
+        for threads in [1usize, 2, pool::default_threads().max(3)] {
+            let got = spmm_layer(&g, &vals, &sl, &x, f, &w, relu, threads);
+            for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!(
+                        "threads={threads} n={n} f={f} wg={wg} idx={i}: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The pooled dispatcher hands every item to exactly one chunk.
+#[test]
+fn prop_pooled_run_chunks_covers_each_item_exactly_once() {
+    use std::sync::atomic::{AtomicU32, Ordering};
+    forall(&cfg(24, 0xE2, 3000), "run_chunks_cover", |rng, size| {
+        let n = rng.usize_below(size.max(2));
+        let chunks = 1 + rng.usize_below(12);
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        pool::global().run_chunks_with(n, chunks, |_, r| {
+            for j in r {
+                hits[j].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (j, h) in hits.iter().enumerate() {
+            let c = h.load(Ordering::Relaxed);
+            if c != 1 {
+                return Err(format!("item {j} visited {c} times (n={n}, chunks={chunks})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pooled `parallel_chunks` produces the same ordered decomposition and
+/// results as the spawn-per-call oracle, at every (n, threads).
+#[test]
+fn prop_pooled_chunks_deterministic_ordering() {
+    forall(&cfg(24, 0xE3, 2000), "chunks_ordering", |rng, size| {
+        let n = rng.usize_below(size.max(2));
+        let threads = 1 + rng.usize_below(12);
+        let pooled = parallel_chunks(n, threads, |i, r| (i, r.start, r.end));
+        let oracle = scoped_chunks(n, threads, |i, r| (i, r.start, r.end));
+        if pooled != oracle {
+            return Err(format!(
+                "n={n} threads={threads}: pooled {pooled:?} != oracle {oracle:?}"
+            ));
+        }
+        // re-running yields the identical decomposition (determinism)
+        let again = parallel_chunks(n, threads, |i, r| (i, r.start, r.end));
+        if pooled != again {
+            return Err(format!("n={n} threads={threads}: non-deterministic"));
+        }
+        Ok(())
+    });
+}
+
+/// Reused-batch assembly is indistinguishable from fresh assembly under
+/// arbitrary batch sequences (the dirty-row clearing never leaks).
+#[test]
+fn prop_assemble_into_matches_fresh() {
+    forall(&cfg(16, 0xE4, 100), "assemble_into", |rng, size| {
+        let ds = random_dataset(rng, size.max(10));
+        let b_max = ds.n().next_multiple_of(16);
+        let mut asm = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+        let mut reused = asm.new_batch(&ds);
+        for round in 0..4 {
+            let take = 1 + rng.usize_below(ds.n());
+            let mut nodes: Vec<u32> = (0..ds.n() as u32).collect();
+            rng.shuffle(&mut nodes);
+            nodes.truncate(take);
+            asm.assemble_into(&ds, &nodes, &mut reused);
+            let fresh = asm.assemble(&ds, &nodes);
+            if reused.a.data != fresh.a.data {
+                return Err(format!("round {round}: A differs after reuse"));
+            }
+            if reused.x.data != fresh.x.data || reused.y.data != fresh.y.data {
+                return Err(format!("round {round}: X/Y differ after reuse"));
+            }
+            if reused.mask.data != fresh.mask.data || reused.n_train != fresh.n_train {
+                return Err(format!("round {round}: mask differs after reuse"));
             }
         }
         Ok(())
