@@ -222,7 +222,7 @@ fn pjrt_probe(
     let mut rng = Rng::new(7);
     let mut asm = BatchAssembler::new(ds.n(), meta.b_max, NormConfig::PAPER_DEFAULT);
     let mut batch = asm.new_batch(ds);
-    let mut state = TrainState::init(&meta, 0);
+    let mut state = TrainState::init(&cluster_gcn::runtime::ModelSpec::from(&meta), 0);
 
     let mut assembly_s = 0.0;
     let mut step_s = 0.0;

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI gate: style + lints + the tier-1 verify from ROADMAP.md.
+# CI gate: style + lints + docs + the tier-1 verify from ROADMAP.md.
 # Run from anywhere inside the repo; requires the rust toolchain.
 set -euo pipefail
 
@@ -10,6 +10,9 @@ cargo fmt --check
 
 echo "== cargo clippy (all targets, -D warnings) =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== cargo doc --no-deps (-D warnings; session/backend deny missing_docs) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release

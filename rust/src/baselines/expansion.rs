@@ -5,7 +5,7 @@
 //!
 //! The exploding receptive field is the point: `expand` reports the
 //! per-hop frontier sizes (the embedding-computation counters behind
-//! Table 1 / Table 9), and the batch only fits the executable's `b_max`
+//! Table 1 / Table 9), and the batch only fits the model's `b_max`
 //! for shallow networks or tiny targets — exactly the paper's argument.
 
 use crate::graph::Csr;
@@ -74,28 +74,49 @@ pub fn embeddings_computed(union: usize, layers: usize) -> usize {
 }
 
 /// Train with vanilla neighborhood-expansion SGD through a plain
-/// `train`-kind artifact.  Targets per batch are sized so the full
-/// L-hop expansion usually fits `b_max`; overflowing unions are capped
-/// (and counted), which *underestimates* vanilla SGD's true cost —
-/// i.e. the comparison is conservative in the baseline's favor.
+/// train-kind model on any backend.  Thin wrapper over
+/// [`train_expansion_observed`] with no observer attached.
 pub fn train_expansion(
-    engine: &mut crate::runtime::Engine,
+    backend: &mut dyn crate::runtime::Backend,
     ds: &crate::graph::Dataset,
-    artifact: &str,
+    model: &str,
     targets_per_batch: usize,
     opts: &crate::coordinator::trainer::TrainOptions,
 ) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
-    use crate::coordinator::trainer::{evaluate_cached, step, CurvePoint, TrainResult, TrainState};
+    train_expansion_observed(
+        backend,
+        ds,
+        model,
+        targets_per_batch,
+        opts,
+        &mut crate::session::NullObserver,
+    )
+}
+
+/// [`train_expansion`] with an observer.  Targets per batch are sized
+/// so the full L-hop expansion usually fits `b_max`; overflowing unions
+/// are capped (and counted), which *underestimates* vanilla SGD's true
+/// cost — i.e. the comparison is conservative in the baseline's favor.
+pub fn train_expansion_observed(
+    backend: &mut dyn crate::runtime::Backend,
+    ds: &crate::graph::Dataset,
+    model: &str,
+    targets_per_batch: usize,
+    opts: &crate::coordinator::trainer::TrainOptions,
+    obs: &mut dyn crate::session::Observer,
+) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
     use crate::coordinator::batch::BatchAssembler;
+    use crate::coordinator::trainer::{evaluate_cached, CurvePoint, TrainResult, TrainState};
     use crate::graph::Split;
     use crate::norm::NormCache;
+    use crate::session::Event;
     use crate::util::Timer;
 
-    let meta = engine.meta(artifact)?;
-    engine.ensure_compiled(artifact)?;
-    let mut state = TrainState::init(&meta, opts.seed);
+    let spec = backend.model_spec(model)?;
+    backend.prepare(model)?;
+    let mut state = TrainState::init(&spec, opts.seed);
     let mut rng = Rng::new(opts.seed ^ 0xE0A5_1011_2233_4455);
-    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
     let mut batch = assembler.new_batch(ds);
     let mut norm_cache = NormCache::new();
     let train_nodes = ds.nodes_in_split(Split::Train);
@@ -116,7 +137,7 @@ pub fn train_expansion(
             if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
                 break;
             }
-            let exp = expand(&ds.graph, targets, meta.layers, meta.b_max);
+            let exp = expand(&ds.graph, targets, spec.layers, spec.b_max);
             if exp.truncated {
                 truncated_batches += 1;
             }
@@ -129,19 +150,24 @@ pub fn train_expansion(
             peak_bytes = peak_bytes.max(
                 batch.bytes()
                     + state.param_bytes()
-                    + exp.nodes.len() * meta.f_hid * 4 * meta.layers,
+                    + exp.nodes.len() * spec.f_hid * 4 * spec.layers,
             );
-            let loss = step(engine, artifact, &mut state, opts.lr, &batch)?;
+            let loss = backend.train_step(model, &mut state, opts.lr, &batch)?;
             epoch_loss += loss as f64;
             nb += 1;
             steps_done += 1;
         }
         train_seconds += timer.secs();
+        obs.on_event(&Event::EpochEnd {
+            epoch,
+            train_seconds,
+            mean_loss: epoch_loss / nb.max(1) as f64,
+        });
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
             let f1 = evaluate_cached(
-                ds, &state.weights, opts.norm, meta.residual, &eval_nodes, &mut norm_cache,
+                ds, &state.weights, opts.norm, spec.residual, &eval_nodes, &mut norm_cache,
             );
             curve.push(CurvePoint {
                 epoch,
@@ -149,6 +175,7 @@ pub fn train_expansion(
                 train_loss: epoch_loss / nb.max(1) as f64,
                 eval_f1: f1,
             });
+            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
         }
     }
     if truncated_batches > 0 {

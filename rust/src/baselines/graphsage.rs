@@ -4,7 +4,7 @@
 //!
 //! A batch is built by sampling receptive fields top-down
 //! (R^L = targets, R^{l-1} = R^l ∪ sample_{S_l}(R^l)), then the union
-//! runs through the same dense-block executable with the *sampled* edge
+//! runs through the same dense-block train step with the *sampled* edge
 //! list (the adjacency renormalizes over sampled neighbors, which is
 //! what the mean aggregator does).  Loss is masked to the targets.
 
@@ -12,12 +12,13 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::BatchAssembler;
 use crate::coordinator::trainer::{
-    evaluate_cached, step, CurvePoint, TrainOptions, TrainResult, TrainState,
+    evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState,
 };
 use crate::graph::{Dataset, Split};
 use crate::norm::NormCache;
+use crate::runtime::Backend;
+use crate::session::{Event, NullObserver, Observer};
 use crate::util::{Rng, Timer};
-use crate::runtime::Engine;
 
 #[derive(Clone, Debug)]
 pub struct SageParams {
@@ -113,27 +114,40 @@ pub fn sample_field(
     SampledField { nodes, edges, frontier_sizes, truncated }
 }
 
-/// Train with GraphSAGE batching through the given `train`-kind
-/// artifact (typically the `*_sage_*` configs with enlarged b_max).
+/// Train with GraphSAGE batching through the given train-kind model
+/// (typically the `*_sage_*` configs with enlarged b_max) on any
+/// backend.  Thin wrapper over [`train_graphsage_observed`].
 pub fn train_graphsage(
-    engine: &mut Engine,
+    backend: &mut dyn Backend,
     ds: &Dataset,
-    artifact: &str,
+    model: &str,
     params: &SageParams,
     opts: &TrainOptions,
 ) -> Result<TrainResult> {
-    let meta = engine.meta(artifact)?;
-    if params.samples.len() != meta.layers {
+    train_graphsage_observed(backend, ds, model, params, opts, &mut NullObserver)
+}
+
+/// [`train_graphsage`] with an observer.
+pub fn train_graphsage_observed(
+    backend: &mut dyn Backend,
+    ds: &Dataset,
+    model: &str,
+    params: &SageParams,
+    opts: &TrainOptions,
+    obs: &mut dyn Observer,
+) -> Result<TrainResult> {
+    let spec = backend.model_spec(model)?;
+    if params.samples.len() != spec.layers {
         return Err(anyhow!(
-            "sage samples {:?} must match artifact depth {}",
+            "sage samples {:?} must match model depth {}",
             params.samples,
-            meta.layers
+            spec.layers
         ));
     }
-    engine.ensure_compiled(artifact)?;
-    let mut state = TrainState::init(&meta, opts.seed);
+    backend.prepare(model)?;
+    let mut state = TrainState::init(&spec, opts.seed);
     let mut rng = Rng::new(opts.seed ^ 0x5A6E_0000_3333_4444);
-    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
     let mut batch = assembler.new_batch(ds);
     let mut norm_cache = NormCache::new();
     let train_nodes = ds.nodes_in_split(Split::Train);
@@ -155,7 +169,7 @@ pub fn train_graphsage(
             if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
                 break;
             }
-            let field = sample_field(ds, targets, params, meta.b_max, &mut rng);
+            let field = sample_field(ds, targets, params, spec.b_max, &mut rng);
             assembler.assemble_with_edges_into(ds, &field.nodes, &field.edges, &mut batch);
             // loss only on the targets (they are first in local order)
             batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
@@ -168,19 +182,24 @@ pub fn train_graphsage(
                 batch.bytes()
                     + state.param_bytes()
                     // per-layer activations over the whole union
-                    + field.nodes.len() * meta.f_hid * 4 * meta.layers,
+                    + field.nodes.len() * spec.f_hid * 4 * spec.layers,
             );
-            let loss = step(engine, artifact, &mut state, opts.lr, &batch)?;
+            let loss = backend.train_step(model, &mut state, opts.lr, &batch)?;
             epoch_loss += loss as f64;
             nb += 1;
             steps_done += 1;
         }
         train_seconds += timer.secs();
+        obs.on_event(&Event::EpochEnd {
+            epoch,
+            train_seconds,
+            mean_loss: epoch_loss / nb.max(1) as f64,
+        });
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
         if do_eval {
             let f1 = evaluate_cached(
-                ds, &state.weights, opts.norm, meta.residual, &eval_nodes, &mut norm_cache,
+                ds, &state.weights, opts.norm, spec.residual, &eval_nodes, &mut norm_cache,
             );
             curve.push(CurvePoint {
                 epoch,
@@ -188,6 +207,7 @@ pub fn train_graphsage(
                 train_loss: epoch_loss / nb.max(1) as f64,
                 eval_f1: f1,
             });
+            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
         }
     }
     Ok(TrainResult {

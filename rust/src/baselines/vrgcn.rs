@@ -7,25 +7,29 @@
 //!        + Σ_{u∈N(v)} Â_vu·H_u
 //!
 //! with S(v) the r sampled neighbors and H the *historical* activations
-//! of the previous layer.  Mapping onto the AOT `vrgcn` executable
-//! (`model.vrgcn_train_step`): the first two terms form the dense
-//! in-batch block `A_in` (self loop + scaled sampled edges whose other
-//! end is in the batch), everything else is folded into the
-//! host-precomputed `Hc_l`; sampled neighbors *outside* the batch also
-//! contribute through `Hc` (their X−H term vanishes — less variance
-//! reduction, still unbiased).  Layer 0 history is the exact feature
-//! matrix, reproducing the AX precompute of §6.2.
+//! of the previous layer.  Mapping onto the backend's `vrgcn_step`
+//! (PJRT `model.vrgcn_train_step` or the host implementation): the
+//! first two terms form the dense in-batch block `A_in` (self loop +
+//! scaled sampled edges whose other end is in the batch), everything
+//! else is folded into the host-precomputed `Hc_l`; sampled neighbors
+//! *outside* the batch also contribute through `Hc` (their X−H term
+//! vanishes — less variance reduction, still unbiased).  Layer 0
+//! history is the exact feature matrix, reproducing the AX precompute
+//! of §6.2.
 //!
 //! The O(N·L·F) history store is real memory here — the source of the
 //! paper's Table 5/8 contrast — and receptive-field targets shrink with
 //! depth, reproducing Table 9's superlinear depth scaling.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::coordinator::trainer::{evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState};
+use crate::coordinator::trainer::{
+    evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState,
+};
 use crate::graph::{Dataset, Split};
 use crate::norm::NormCache;
-use crate::runtime::{Engine, Kind, Tensor};
+use crate::runtime::{Backend, Tensor, VrgcnBatch};
+use crate::session::{Event, NullObserver, Observer};
 use crate::util::{Rng, Timer};
 
 #[derive(Clone, Debug)]
@@ -72,31 +76,41 @@ impl History {
     }
 }
 
-/// Train VR-GCN through a `vrgcn`-kind artifact.
+/// Train VR-GCN through a vrgcn-kind model on any backend.  Thin
+/// wrapper over [`train_vrgcn_observed`] with no observer attached.
 pub fn train_vrgcn(
-    engine: &mut Engine,
+    backend: &mut dyn Backend,
     ds: &Dataset,
-    artifact: &str,
+    model: &str,
     params: &VrgcnParams,
     opts: &TrainOptions,
 ) -> Result<TrainResult> {
-    let meta = engine.meta(artifact)?;
-    if meta.kind != Kind::Vrgcn {
-        return Err(anyhow!("artifact {artifact} is not vrgcn-kind"));
-    }
-    engine.ensure_compiled(artifact)?;
-    let l = meta.layers;
-    let b_max = meta.b_max;
+    train_vrgcn_observed(backend, ds, model, params, opts, &mut NullObserver)
+}
+
+/// [`train_vrgcn`] with an observer.
+pub fn train_vrgcn_observed(
+    backend: &mut dyn Backend,
+    ds: &Dataset,
+    model: &str,
+    params: &VrgcnParams,
+    opts: &TrainOptions,
+    obs: &mut dyn Observer,
+) -> Result<TrainResult> {
+    let spec = backend.model_spec(model)?;
+    backend.prepare(model)?;
+    let l = spec.layers;
+    let b_max = spec.b_max;
     let n = ds.n();
     let f_in = ds.f_in;
-    let f_hid = meta.f_hid;
+    let f_hid = spec.f_hid;
     let classes = ds.num_classes;
 
     // depth-aware target size: receptive field ~ batch * (1+r)^(L-1)
     let growth = (1 + params.r).pow(l.saturating_sub(1) as u32) as usize;
     let targets_per_batch = (b_max / growth.max(1)).clamp(16, params.batch);
 
-    let mut state = TrainState::init(&meta, opts.seed);
+    let mut state = TrainState::init(&spec, opts.seed);
     let mut history = History::new(n, f_hid, l - 1);
     // one normalization for the whole run, shared with every eval
     let mut norm_cache = NormCache::new();
@@ -198,7 +212,7 @@ pub fn train_vrgcn(
             }
 
             // ---- Hc_l = Â·H_l (full) − scaled-sampled in-batch Â·H_l ---
-            let dims = meta.layer_in_dims();
+            let dims = spec.layer_in_dims();
             let mut hcs: Vec<Tensor> = Vec::with_capacity(l);
             for (layer, &fd) in dims.iter().enumerate() {
                 let mut hc = Tensor::zeros(vec![b_max, fd]);
@@ -255,36 +269,11 @@ pub fn train_vrgcn(
                 mask.data[i] = 1.0;
             }
 
-            // ---- execute ------------------------------------------------
-            state.step += 1;
-            let mut inputs = Vec::with_capacity(3 * l + 3 + l + 3);
-            inputs.extend(state.weights.iter().cloned());
-            inputs.extend(state.m.iter().cloned());
-            inputs.extend(state.v.iter().cloned());
-            inputs.push(Tensor::scalar(state.step as f32));
-            inputs.push(Tensor::scalar(opts.lr));
-            inputs.push(a_in);
-            inputs.extend(hcs);
-            inputs.push(x);
-            inputs.push(y);
-            inputs.push(mask);
-
-            let batch_bytes: usize = inputs.iter().map(|t| t.size_bytes()).sum();
+            // ---- execute on the backend -------------------------------
+            let vb = VrgcnBatch { a_in, hcs, x, y, mask, n_real: b_real };
             peak_bytes = peak_bytes
-                .max(batch_bytes + state.param_bytes() + history.bytes());
-
-            let mut out = engine.run(artifact, &inputs)?;
-            // outputs: W, m, v (3L), loss, hiddens (L-1)
-            let hiddens: Vec<Tensor> = out.split_off(3 * l + 1);
-            let loss = out.pop().unwrap().data[0];
-            if !loss.is_finite() {
-                return Err(anyhow!("vrgcn non-finite loss at step {}", state.step));
-            }
-            let vs = out.split_off(2 * l);
-            let ms = out.split_off(l);
-            state.weights = out;
-            state.m = ms;
-            state.v = vs;
+                .max(vb.bytes() + state.param_bytes() + history.bytes());
+            let (loss, hiddens) = backend.vrgcn_step(model, &mut state, opts.lr, &vb)?;
 
             // ---- history refresh ---------------------------------------
             for (layer, h) in hiddens.iter().enumerate() {
@@ -303,6 +292,11 @@ pub fn train_vrgcn(
             steps_done += 1;
         }
         train_seconds += timer.secs();
+        obs.on_event(&Event::EpochEnd {
+            epoch,
+            train_seconds,
+            mean_loss: epoch_loss / nb.max(1) as f64,
+        });
 
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
@@ -316,6 +310,7 @@ pub fn train_vrgcn(
                 train_loss: epoch_loss / nb.max(1) as f64,
                 eval_f1: f1,
             });
+            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
         }
     }
 

@@ -1,29 +1,29 @@
-//! `cluster-gcn` command-line interface: dataset generation, graph
-//! partitioning, training (cluster-gcn + baselines), and inspection.
+//! `cluster-gcn` command-line interface — a thin shell over
+//! [`crate::session::Session`]: dataset generation, graph partitioning,
+//! training (Cluster-GCN + all baselines, on either backend),
+//! checkpoint evaluation, and artifact inspection.
 //!
-//! ```text
-//! cluster-gcn datagen   --preset ppi_like [--seed 42] [--cache data/]
-//! cluster-gcn partition --preset ppi_like [--parts 50] [--algo multilevel|random]
-//! cluster-gcn train     --preset ppi_like [--layers 2] [--epochs 40]
-//!                       [--method cluster|graphsage|vrgcn] [--q 1] [--parts 50]
-//!                       [--norm sym|row|row+id|row+l1] [--lr 0.01] [--seed 0]
-//!                       [--artifacts artifacts/]
-//! cluster-gcn inspect   [--artifacts artifacts/]
-//! ```
+//! The usage block below is included verbatim from `usage.txt` — the
+//! same file [`USAGE`] is built from and `main` prints for `--help`, so
+//! the docs and the runtime help cannot drift:
+//!
+#![doc = concat!("```text\n", include_str!("usage.txt"), "```")]
 
 pub mod args;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{train, ClusterSampler, TrainOptions};
+use crate::baselines::VrgcnParams;
 use crate::datagen::{build_cached, preset, PRESETS};
 use crate::norm::NormConfig;
-use crate::partition::{
-    parts_to_clusters, MultilevelPartitioner, Partitioner, RandomPartitioner,
-};
-use crate::runtime::Engine;
-use crate::util::{Rng, Timer};
+use crate::runtime::{Backend, Engine, HostBackend, ManifestMissing};
+use crate::session::{Method, Session, StderrObserver, TrainConfig};
+use crate::util::Timer;
 use args::Args;
+
+/// The `--help` text; single source of truth shared with the module
+/// docs via `include_str!("usage.txt")`.
+pub const USAGE: &str = include_str!("usage.txt");
 
 pub fn parse_norm(s: &str) -> Result<NormConfig> {
     Ok(match s {
@@ -50,21 +50,6 @@ pub fn main() -> Result<()> {
         other => Err(anyhow!("unknown command {other}\n{USAGE}")),
     }
 }
-
-const USAGE: &str = "\
-cluster-gcn — Cluster-GCN (KDD'19) three-layer reproduction
-
-USAGE:
-  cluster-gcn datagen   --preset NAME [--seed N] [--cache DIR]
-  cluster-gcn partition --preset NAME [--parts K] [--algo multilevel|random] [--seed N]
-  cluster-gcn train     --preset NAME [--layers L] [--epochs N] [--method cluster|graphsage|vrgcn]
-                        [--q Q] [--parts P] [--norm sym|row|row+id|row+l1]
-                        [--lr F] [--seed N] [--artifacts DIR] [--cache DIR] [--eval-every K]
-  cluster-gcn eval      --preset NAME --checkpoint FILE [--norm ...] [--split val|test]
-  cluster-gcn inspect   [--artifacts DIR]
-
-Presets: cora_like pubmed_like ppi_like reddit_like amazon_like amazon2m_like
-";
 
 fn load_ds(a: &Args) -> Result<crate::graph::Dataset> {
     let name = a
@@ -107,6 +92,9 @@ fn cmd_datagen(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_partition(argv: &[String]) -> Result<()> {
+    use crate::partition::{MultilevelPartitioner, Partitioner, RandomPartitioner};
+    use crate::util::Rng;
+
     let a = Args::parse(argv, &["preset", "seed", "cache", "parts", "algo"])?;
     let ds = load_ds(&a)?;
     let k = a.usize_or(
@@ -138,39 +126,64 @@ fn cmd_partition(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the execution backend the `--backend` flag names.  A PJRT
+/// request with no artifacts present gets a pointed suggestion instead
+/// of a raw path error.
+fn make_backend(a: &Args) -> Result<Box<dyn Backend>> {
+    let kind = a.str_or("backend", "pjrt");
+    match kind.as_str() {
+        "host" => Ok(Box::new(HostBackend::new())),
+        "pjrt" => {
+            let dir = a.str_or("artifacts", "artifacts");
+            match Engine::new(std::path::Path::new(&dir)) {
+                Ok(engine) => Ok(Box::new(engine)),
+                Err(e) if e.downcast_ref::<ManifestMissing>().is_some() => Err(anyhow!(
+                    "{e}\nhint: build the AOT artifacts with `make artifacts`, \
+                     or train artifact-free with `--backend host`"
+                )),
+                Err(e) => Err(e),
+            }
+        }
+        other => bail!("unknown backend {other} (pjrt|host)"),
+    }
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let a = Args::parse(
         argv,
         &[
             "preset", "seed", "cache", "layers", "epochs", "method", "q",
             "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
-            "lr-decay", "lr-decay-every", "patience", "save",
+            "lr-decay", "lr-decay-every", "patience", "save", "backend",
+            "batch", "algo",
         ],
     )?;
     let ds = load_ds(&a)?;
     let p = preset(&ds.name).unwrap();
     let layers = a.usize_or("layers", 2)?;
-    let method = a.str_or("method", "cluster");
-    let artifacts = a.str_or("artifacts", "artifacts");
-    let mut engine = Engine::new(std::path::Path::new(&artifacts))?;
 
-    let short = ds.name.trim_end_matches("_like");
-    let artifact = match method.as_str() {
-        "cluster" => match a.get("hidden") {
-            Some("512") if short == "reddit" => format!("reddit_h512_L{layers}"),
-            _ => format!("{short}_L{layers}"),
-        },
-        "graphsage" => format!("{short}_sage_L{layers}"),
-        "vrgcn" => format!("{short}_vrgcn_L{layers}"),
-        other => bail!("unknown method {other}"),
+    let method_name = a.str_or("method", "cluster");
+    let method = match method_name.as_str() {
+        "cluster" => Method::Cluster { q: a.usize_or("q", p.default_q)? },
+        "expansion" => Method::Expansion { batch: a.usize_or("batch", 32)? },
+        "graphsage" => Method::graphsage(layers, a.usize_or("batch", 128)?),
+        "vrgcn" => Method::VrGcn(VrgcnParams {
+            batch: a.usize_or("batch", VrgcnParams::default().batch)?,
+            ..VrgcnParams::default()
+        }),
+        other => bail!("unknown method {other} (cluster|expansion|graphsage|vrgcn)"),
     };
+    let backend = make_backend(&a)?;
 
-    let opts = TrainOptions {
+    let hidden = a.usize_or("hidden", 0)?;
+    let cfg = TrainConfig {
+        layers,
+        hidden: if hidden == 0 { None } else { Some(hidden) },
+        b_max: None,
         lr: a.f64_or("lr", 0.01)? as f32,
         epochs: a.usize_or("epochs", 40)?,
         eval_every: a.usize_or("eval-every", 5)?,
         seed: a.u64_or("seed", 0)?,
-        norm: parse_norm(&a.str_or("norm", "sym"))?,
         eval_split: crate::graph::Split::Val,
         max_steps_per_epoch: 0,
         schedule: match a.get("lr-decay") {
@@ -183,49 +196,43 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         patience: a.usize_or("patience", 0)?,
     };
 
-    let t = Timer::start();
-    let result = match method.as_str() {
-        "cluster" => {
-            let parts = a.usize_or("parts", p.default_partitions)?;
-            let q = a.usize_or("q", p.default_q)?;
-            let mut rng = Rng::new(opts.seed ^ 0xBEEF);
-            let pt = Timer::start();
-            let part =
-                MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng);
-            eprintln!("partitioned into {parts} parts in {:.2}s", pt.secs());
-            let sampler = ClusterSampler::new(parts_to_clusters(&part, parts), q);
-            train(&mut engine, &ds, &sampler, &artifact, &opts)?
-        }
-        "graphsage" => {
-            let params = crate::baselines::SageParams::for_depth(layers, 128);
-            crate::baselines::train_graphsage(&mut engine, &ds, &artifact, &params, &opts)?
-        }
-        "vrgcn" => {
-            let params = crate::baselines::VrgcnParams::default();
-            crate::baselines::train_vrgcn(&mut engine, &ds, &artifact, &params, &opts)?
-        }
-        _ => unreachable!(),
-    };
-
-    if let Some(path) = a.get("save") {
-        crate::coordinator::checkpoint::save(
-            &result.state,
-            &artifact,
-            std::path::Path::new(path),
-        )?;
-        eprintln!("checkpoint saved to {path}");
+    let mut obs = StderrObserver;
+    let mut session = Session::new(&ds)
+        .method(method)
+        .config(cfg)
+        .norm(parse_norm(&a.str_or("norm", "sym"))?)
+        .backend(backend)
+        .observer(&mut obs);
+    if let Some(parts) = a.get("parts") {
+        session = session.partition(
+            parts
+                .parse()
+                .map_err(|_| anyhow!("--parts expects an integer, got {parts:?}"))?,
+        );
     }
-    println!("method        : {method} ({artifact})");
-    println!("epochs        : {}", opts.epochs);
-    println!("steps         : {}", result.steps);
+    match a.str_or("algo", "multilevel").as_str() {
+        "multilevel" => {}
+        "random" => session = session.partition_random(),
+        other => bail!("unknown algo {other} (multilevel|random)"),
+    }
+    if let Some(path) = a.get("save") {
+        session = session.save(path);
+    }
+
+    let t = Timer::start();
+    let out = session.run()?;
+    println!("method        : {method_name} ({})", out.model);
+    println!("backend       : {}", out.backend);
+    println!("epochs        : {}", out.result.curve.last().map(|c| c.epoch).unwrap_or(0));
+    println!("steps         : {}", out.result.steps);
     println!(
         "train time    : {:.2}s (wall {:.2}s)",
-        result.train_seconds,
+        out.result.train_seconds,
         t.secs()
     );
-    println!("peak memory   : {:.1} MB", result.peak_bytes as f64 / 1e6);
+    println!("peak memory   : {:.1} MB", out.result.peak_bytes as f64 / 1e6);
     println!("curve (epoch, train_s, loss, val_f1):");
-    for pt in &result.curve {
+    for pt in &out.result.curve {
         println!(
             "  {:4}  {:8.2}  {:.4}  {:.4}",
             pt.epoch, pt.train_seconds, pt.train_loss, pt.eval_f1
@@ -243,7 +250,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let ckpt = a
         .get("checkpoint")
         .ok_or_else(|| anyhow!("--checkpoint required"))?;
-    let (state, artifact) =
+    let (state, model) =
         crate::coordinator::checkpoint::load(std::path::Path::new(ckpt))?;
     let norm = parse_norm(&a.str_or("norm", "sym"))?;
     let split = match a.str_or("split", "test").as_str() {
@@ -254,7 +261,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let nodes = ds.nodes_in_split(split);
     let t = Timer::start();
     let f1 = crate::coordinator::evaluate(&ds, &state.weights, norm, false, &nodes);
-    println!("checkpoint    : {ckpt} (trained via {artifact}, step {})", state.step);
+    println!("checkpoint    : {ckpt} (trained via {model}, step {})", state.step);
     println!("split         : {split:?} ({} nodes)", nodes.len());
     println!("micro-F1      : {f1:.4}  ({:.2}s exact host inference)", t.secs());
     Ok(())
@@ -298,5 +305,25 @@ mod tests {
         assert_eq!(parse_norm("sym").unwrap(), NormConfig::PAPER_DEFAULT);
         assert_eq!(parse_norm("row+l1").unwrap(), NormConfig::ROW_LAMBDA1);
         assert!(parse_norm("bogus").is_err());
+    }
+
+    /// `USAGE` (and therefore the module doc, which includes the same
+    /// file) must mention every subcommand `main` dispatches and the
+    /// backend selector.
+    #[test]
+    fn usage_covers_every_subcommand() {
+        for sub in ["datagen", "partition", "train", "eval", "inspect"] {
+            assert!(
+                USAGE.contains(&format!("cluster-gcn {sub}")),
+                "usage.txt missing subcommand {sub}"
+            );
+        }
+        assert!(USAGE.contains("--backend pjrt|host"));
+        for m in ["cluster", "expansion", "graphsage", "vrgcn"] {
+            assert!(USAGE.contains(m), "usage.txt missing method {m}");
+        }
+        for p in crate::datagen::PRESETS {
+            assert!(USAGE.contains(p.name), "usage.txt missing preset {}", p.name);
+        }
     }
 }

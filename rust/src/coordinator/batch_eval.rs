@@ -1,7 +1,8 @@
-//! Cluster-wise inference through the PJRT `forward` artifacts: the
-//! paper-style evaluation path where prediction, like training, runs on
-//! block-diagonal cluster batches (between-batch links are dropped —
-//! the Δ approximation of eq. (4) applied at eval time).
+//! Cluster-wise inference through a backend's `forward` (the PJRT
+//! `forward` artifacts or the host kernels): the paper-style evaluation
+//! path where prediction, like training, runs on block-diagonal cluster
+//! batches (between-batch links are dropped — the Δ approximation of
+//! eq. (4) applied at eval time).
 //!
 //! `coordinator::inference` is the *exact* full-graph evaluator; this
 //! module is the accelerated approximate one.  The integration suite
@@ -14,25 +15,25 @@ use crate::coordinator::batch::BatchAssembler;
 use crate::coordinator::sampler::ClusterSampler;
 use crate::graph::Dataset;
 use crate::norm::NormConfig;
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{Backend, Tensor};
 use crate::util::Rng;
 
-/// Run the forward artifact over every cluster batch; returns dense
+/// Run the forward model over every cluster batch; returns dense
 /// (n, classes) logits assembled from the per-batch outputs.
 pub fn cluster_forward(
-    engine: &mut Engine,
+    backend: &mut dyn Backend,
     ds: &Dataset,
     sampler: &ClusterSampler,
-    fwd_artifact: &str,
+    fwd_model: &str,
     weights: &[Tensor],
     norm: NormConfig,
     seed: u64,
 ) -> Result<Vec<f32>> {
-    let meta = engine.meta(fwd_artifact)?;
-    engine.ensure_compiled(fwd_artifact)?;
-    let classes = meta.classes;
+    let spec = backend.model_spec(fwd_model)?;
+    backend.prepare(fwd_model)?;
+    let classes = spec.classes;
     let mut logits = vec![0f32; ds.n() * classes];
-    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, norm);
+    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, norm);
     let mut batch = assembler.new_batch(ds);
     let mut rng = Rng::new(seed);
     let plan = sampler.epoch_plan(&mut rng);
@@ -40,13 +41,7 @@ pub fn cluster_forward(
     for ids in &plan {
         sampler.batch_nodes(ids, &mut nodes);
         assembler.assemble_into(ds, &nodes, &mut batch);
-        // weights + batch tensors go down by reference — no per-batch
-        // clone of the parameter set or the assembled block
-        let mut inputs: Vec<&Tensor> = weights.iter().collect();
-        inputs.push(&batch.a);
-        inputs.push(&batch.x);
-        let out = engine.run_refs(fwd_artifact, &inputs)?;
-        let rows = &out[0];
+        let rows = backend.forward(fwd_model, weights, &batch)?;
         for (i, &v) in nodes.iter().enumerate() {
             logits[v as usize * classes..(v as usize + 1) * classes]
                 .copy_from_slice(&rows.data[i * classes..(i + 1) * classes]);
@@ -55,18 +50,19 @@ pub fn cluster_forward(
     Ok(logits)
 }
 
-/// Micro-F1 over `nodes` using cluster-wise PJRT inference.
+/// Micro-F1 over `nodes` using cluster-wise batched inference.
+#[allow(clippy::too_many_arguments)]
 pub fn cluster_evaluate(
-    engine: &mut Engine,
+    backend: &mut dyn Backend,
     ds: &Dataset,
     sampler: &ClusterSampler,
-    fwd_artifact: &str,
+    fwd_model: &str,
     weights: &[Tensor],
     norm: NormConfig,
     nodes: &[u32],
     seed: u64,
 ) -> Result<f64> {
-    let logits = cluster_forward(engine, ds, sampler, fwd_artifact, weights, norm, seed)?;
+    let logits = cluster_forward(backend, ds, sampler, fwd_model, weights, norm, seed)?;
     let rows = crate::coordinator::inference::gather_rows(&logits, ds.num_classes, nodes);
     Ok(crate::coordinator::metrics::micro_f1(
         ds,

@@ -113,25 +113,11 @@ pub fn load(path: &Path) -> std::io::Result<(TrainState, String)> {
 mod tests {
     use super::*;
     use crate::graph::Task;
-    use crate::runtime::artifacts::{ArtifactMeta, Kind};
+    use crate::runtime::ModelSpec;
 
     fn state() -> TrainState {
-        let meta = ArtifactMeta {
-            name: "x".into(),
-            file: "/dev/null".into(),
-            kind: Kind::Train,
-            task: Task::Multiclass,
-            layers: 3,
-            f_in: 6,
-            f_hid: 10,
-            classes: 4,
-            b_max: 128,
-            residual: false,
-            weight_shapes: vec![(6, 10), (10, 10), (10, 4)],
-            vmem_bytes_est: 0,
-            mxu_utilization_est: 0.0,
-        };
-        let mut s = TrainState::init(&meta, 9);
+        let spec = ModelSpec::gcn(Task::Multiclass, 3, 6, 10, 4, 128);
+        let mut s = TrainState::init(&spec, 9);
         s.step = 77;
         s
     }

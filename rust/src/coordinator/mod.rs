@@ -1,7 +1,8 @@
 //! The Cluster-GCN coordinator (the paper's system contribution at L3):
 //! cluster-batch sampling, batch assembly + renormalization, the fused
-//! PJRT training loop, exact host evaluation, metrics, and memory
-//! accounting.
+//! backend-generic training loop, exact host evaluation, metrics, and
+//! memory accounting.  The user-facing entry point is
+//! [`crate::session::Session`]; the loops here are what it drives.
 
 pub mod batch;
 pub mod batch_eval;
@@ -17,5 +18,6 @@ pub use batch::{Batch, BatchAssembler};
 pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
 pub use trainer::{
-    evaluate, evaluate_cached, train, CurvePoint, TrainOptions, TrainResult, TrainState,
+    evaluate, evaluate_cached, train, train_observed, CurvePoint, TrainOptions,
+    TrainResult, TrainState,
 };

@@ -1,29 +1,35 @@
 //! The Cluster-GCN training loop (Algorithm 1): sample q clusters,
-//! assemble the renormalized union block, run the fused PJRT
-//! `train_step`, keep params/Adam state across steps; periodically
-//! evaluate with exact host inference.
+//! assemble the renormalized union block, run the fused `train_step` on
+//! the active [`Backend`], keep params/Adam state across steps;
+//! periodically evaluate with exact host inference.
+//!
+//! The loop is backend-generic: the same code drives the PJRT engine
+//! (AOT artifacts) and the artifact-free [`crate::runtime::HostBackend`].
+//! [`crate::session::Session`] is the primary entry point; the free
+//! functions here are the engine room it (and the benches) call into.
 //!
 //! Hot-loop engineering (PERF.md): batches double-buffer through two
 //! reusable [`Batch`] buffers on a [`pipeline`] — batch `i + 1` is
-//! assembled on a helper thread while PJRT executes batch `i` — and
-//! all full-graph evaluations share one [`NormCache`], so
+//! assembled on a helper thread while the backend executes batch `i` —
+//! and all full-graph evaluations share one [`NormCache`], so
 //! `normalize_sparse` runs at most once per (dataset, config) per
 //! training run.
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::{Batch, BatchAssembler};
-use crate::coordinator::schedule::{EarlyStopper, LrSchedule};
 use crate::coordinator::inference::{full_forward_cached, gather_rows};
 use crate::coordinator::metrics::micro_f1;
 use crate::coordinator::sampler::ClusterSampler;
+use crate::coordinator::schedule::{EarlyStopper, LrSchedule};
 use crate::graph::{Dataset, Split};
 use crate::norm::{NormCache, NormConfig};
-use crate::runtime::{ArtifactMeta, Engine, Tensor};
+use crate::runtime::{Backend, ModelSpec, Tensor};
+use crate::session::{Event, NullObserver, Observer};
 use crate::util::pool::pipeline;
 use crate::util::{Rng, Timer};
 
-/// Model parameters + Adam state, fed through the executable each step.
+/// Model parameters + Adam state, fed through the backend each step.
 #[derive(Clone)]
 pub struct TrainState {
     pub weights: Vec<Tensor>,
@@ -33,15 +39,17 @@ pub struct TrainState {
 }
 
 impl TrainState {
-    /// Glorot-uniform init (matches `model.init_weights` in spirit; the
-    /// exact stream differs — reproducibility is per-side, keyed by
-    /// seed).
-    pub fn init(meta: &ArtifactMeta, seed: u64) -> TrainState {
+    /// Glorot-uniform init from a typed [`ModelSpec`] (matches
+    /// `model.init_weights` in spirit; the exact stream differs —
+    /// reproducibility is per-side, keyed by seed).  Backend-neutral:
+    /// callers holding an `ArtifactMeta` convert via
+    /// `ModelSpec::from(&meta)`.
+    pub fn init(spec: &ModelSpec, seed: u64) -> TrainState {
         let mut rng = Rng::new(seed ^ 0x1717_C6CA_11AD_0001);
         let mut weights = Vec::new();
         let mut m = Vec::new();
         let mut v = Vec::new();
-        for &(fi, fo) in &meta.weight_shapes {
+        for &(fi, fo) in &spec.weight_shapes {
             let bound = (6.0 / (fi + fo) as f64).sqrt() as f32;
             let data: Vec<f32> = (0..fi * fo)
                 .map(|_| (rng.f32() * 2.0 - 1.0) * bound)
@@ -116,28 +124,43 @@ pub struct TrainResult {
     pub avg_within_edges_per_node: f64,
 }
 
-/// Run Cluster-GCN training; the sampler supplies cluster batches.
+/// Run Cluster-GCN training on any backend; the sampler supplies
+/// cluster batches.  Thin wrapper over [`train_observed`] with no
+/// observer attached.
 pub fn train(
-    engine: &mut Engine,
+    backend: &mut dyn Backend,
     ds: &Dataset,
     sampler: &ClusterSampler,
-    artifact: &str,
+    model: &str,
     opts: &TrainOptions,
 ) -> Result<TrainResult> {
-    let meta = engine.meta(artifact)?;
-    if sampler.max_batch_nodes() > meta.b_max {
+    train_observed(backend, ds, sampler, model, opts, &mut NullObserver)
+}
+
+/// [`train`] with an [`Observer`] receiving epoch/eval/early-stop
+/// events as they happen.
+pub fn train_observed(
+    backend: &mut dyn Backend,
+    ds: &Dataset,
+    sampler: &ClusterSampler,
+    model: &str,
+    opts: &TrainOptions,
+    obs: &mut dyn Observer,
+) -> Result<TrainResult> {
+    let spec = backend.model_spec(model)?;
+    if sampler.max_batch_nodes() > spec.b_max {
         return Err(anyhow!(
-            "sampler can produce {} nodes but artifact {} has b_max={}",
+            "sampler can produce {} nodes but model {} has b_max={}",
             sampler.max_batch_nodes(),
-            artifact,
-            meta.b_max
+            model,
+            spec.b_max
         ));
     }
-    engine.ensure_compiled(artifact)?;
+    backend.prepare(model)?;
 
-    let mut state = TrainState::init(&meta, opts.seed);
+    let mut state = TrainState::init(&spec, opts.seed);
     let mut rng = Rng::new(opts.seed ^ 0x5A5A_0000_1111_2222);
-    let mut assembler = BatchAssembler::new(ds.n(), meta.b_max, opts.norm);
+    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
     let eval_nodes = ds.nodes_in_split(opts.eval_split);
     let mut norm_cache = NormCache::new();
 
@@ -148,8 +171,9 @@ pub fn train(
     let mut within_edges = 0u64;
     let mut batch_nodes = 0u64;
     let mut nodes_buf: Vec<u32> = Vec::new();
-    // double buffer: batch i+1 assembles while PJRT executes batch i;
-    // the two Batch buffers live for the whole run (no per-step allocs)
+    // double buffer: batch i+1 assembles while the backend executes
+    // batch i; the two Batch buffers live for the whole run (no
+    // per-step allocs)
     let mut buf_a = assembler.new_batch(ds);
     let mut buf_b = assembler.new_batch(ds);
 
@@ -180,7 +204,7 @@ pub fn train(
                     within_edges += batch.within_edges as u64;
                     batch_nodes += batch.n_real as u64;
                     peak_bytes = peak_bytes.max(batch.bytes() + state.param_bytes());
-                    match step(engine, artifact, &mut state, lr, batch) {
+                    match backend.train_step(model, &mut state, lr, batch) {
                         Ok(loss) => {
                             epoch_loss += loss as f64;
                             epoch_batches += 1;
@@ -202,6 +226,11 @@ pub fn train(
             return Err(e);
         }
         train_seconds += timer.secs();
+        obs.on_event(&Event::EpochEnd {
+            epoch,
+            train_seconds,
+            mean_loss: epoch_loss / epoch_batches.max(1) as f64,
+        });
 
         let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
             || epoch == opts.epochs;
@@ -210,7 +239,7 @@ pub fn train(
                 ds,
                 &state.weights,
                 opts.norm,
-                meta.residual,
+                spec.residual,
                 &eval_nodes,
                 &mut norm_cache,
             );
@@ -220,7 +249,9 @@ pub fn train(
                 train_loss: epoch_loss / epoch_batches.max(1) as f64,
                 eval_f1: f1,
             });
+            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
             if stopper.update(f1) {
+                obs.on_event(&Event::EarlyStop { epoch, best: stopper.best() });
                 break; // early stop: no improvement for `patience` evals
             }
         }
@@ -237,46 +268,16 @@ pub fn train(
 }
 
 /// One fused train step over an assembled batch; updates `state`
-/// in-place and returns the batch loss.
+/// in-place and returns the batch loss.  Thin delegate to
+/// [`Backend::train_step`], kept for probes and one-off callers.
 pub fn step(
-    engine: &mut Engine,
-    artifact: &str,
+    backend: &mut dyn Backend,
+    model: &str,
     state: &mut TrainState,
     lr: f32,
     batch: &crate::coordinator::batch::Batch,
 ) -> Result<f32> {
-    state.step += 1;
-    let l = state.weights.len();
-    let step_t = Tensor::scalar(state.step as f32);
-    let lr_t = Tensor::scalar(lr);
-    let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * l + 6);
-    inputs.extend(state.weights.iter());
-    inputs.extend(state.m.iter());
-    inputs.extend(state.v.iter());
-    inputs.push(&step_t);
-    inputs.push(&lr_t);
-    inputs.push(&batch.a);
-    inputs.push(&batch.x);
-    inputs.push(&batch.y);
-    inputs.push(&batch.mask);
-
-    let mut out = engine.run_refs(artifact, &inputs)?;
-    let loss = out
-        .pop()
-        .ok_or_else(|| anyhow!("empty output"))?
-        .data
-        .first()
-        .copied()
-        .ok_or_else(|| anyhow!("empty loss"))?;
-    if !loss.is_finite() {
-        return Err(anyhow!("non-finite loss at step {}", state.step));
-    }
-    let vs: Vec<Tensor> = out.split_off(2 * l);
-    let ms: Vec<Tensor> = out.split_off(l);
-    state.weights = out;
-    state.m = ms;
-    state.v = vs;
-    Ok(loss)
+    backend.train_step(model, state, lr, batch)
 }
 
 /// Exact host-side evaluation (full-graph inference) → micro-F1.
@@ -314,30 +315,15 @@ pub fn evaluate_cached(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::Kind;
     use crate::graph::Task;
 
-    fn fake_meta() -> ArtifactMeta {
-        ArtifactMeta {
-            name: "x".into(),
-            file: "/dev/null".into(),
-            kind: Kind::Train,
-            task: Task::Multiclass,
-            layers: 2,
-            f_in: 8,
-            f_hid: 16,
-            classes: 4,
-            b_max: 128,
-            residual: false,
-            weight_shapes: vec![(8, 16), (16, 4)],
-            vmem_bytes_est: 0,
-            mxu_utilization_est: 0.0,
-        }
+    fn fake_spec() -> ModelSpec {
+        ModelSpec::gcn(Task::Multiclass, 2, 8, 16, 4, 128)
     }
 
     #[test]
     fn init_shapes_and_range() {
-        let st = TrainState::init(&fake_meta(), 3);
+        let st = TrainState::init(&fake_spec(), 3);
         assert_eq!(st.weights.len(), 2);
         assert_eq!(st.weights[0].dims, vec![8, 16]);
         assert_eq!(st.m[1].dims, vec![16, 4]);
@@ -350,16 +336,16 @@ mod tests {
 
     #[test]
     fn init_deterministic_per_seed() {
-        let a = TrainState::init(&fake_meta(), 1);
-        let b = TrainState::init(&fake_meta(), 1);
-        let c = TrainState::init(&fake_meta(), 2);
+        let a = TrainState::init(&fake_spec(), 1);
+        let b = TrainState::init(&fake_spec(), 1);
+        let c = TrainState::init(&fake_spec(), 2);
         assert_eq!(a.weights[0].data, b.weights[0].data);
         assert_ne!(a.weights[0].data, c.weights[0].data);
     }
 
     #[test]
     fn param_bytes_counts_adam() {
-        let st = TrainState::init(&fake_meta(), 0);
+        let st = TrainState::init(&fake_spec(), 0);
         let one_set = (8 * 16 + 16 * 4) * 4;
         assert_eq!(st.param_bytes(), 3 * one_set);
     }

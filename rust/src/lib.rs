@@ -14,7 +14,11 @@
 //! - **Pallas (python/compile/kernels)** — the fused blocked `Â·X·W`
 //!   GCN-layer kernel the model is built from.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index,
+//! Training runs through one experiment surface — [`session::Session`]
+//! — over pluggable [`runtime::Backend`]s: the PJRT engine (AOT
+//! artifacts) or the artifact-free [`runtime::HostBackend`].  See
+//! ARCHITECTURE.md for the Session → Method → Backend layering,
+//! DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod baselines;
@@ -26,5 +30,6 @@ pub mod graph;
 pub mod norm;
 pub mod partition;
 pub mod runtime;
+pub mod session;
 pub mod testing;
 pub mod util;

@@ -18,6 +18,29 @@ pub enum Kind {
     Vrgcn,
 }
 
+/// Typed error for "the artifact directory has no manifest at all" —
+/// as opposed to a malformed manifest or a missing entry.  Callers
+/// (the CLI in particular) downcast to this to suggest the
+/// artifact-free `--backend host` path instead of dumping a raw IO
+/// error.
+#[derive(Clone, Debug)]
+pub struct ManifestMissing {
+    /// Directory that was searched for `manifest.json`.
+    pub dir: PathBuf,
+}
+
+impl std::fmt::Display for ManifestMissing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "no artifact manifest at {} (expected manifest.json; run `make artifacts`)",
+            self.dir.display()
+        )
+    }
+}
+
+impl std::error::Error for ManifestMissing {}
+
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
     pub name: String,
@@ -78,6 +101,9 @@ pub struct Registry {
 impl Registry {
     pub fn load(dir: &Path) -> Result<Registry> {
         let man_path = dir.join("manifest.json");
+        if !man_path.is_file() {
+            return Err(anyhow::Error::new(ManifestMissing { dir: dir.to_path_buf() }));
+        }
         let text = std::fs::read_to_string(&man_path).with_context(|| {
             format!(
                 "reading {man_path:?} — run `make artifacts` first"
@@ -226,5 +252,27 @@ mod tests {
         let dir = tmpdir("nodir2");
         std::fs::remove_dir_all(&dir).ok();
         assert!(Registry::load(&dir).is_err());
+    }
+
+    /// The "no manifest at all" case is a typed, downcastable error —
+    /// the CLI keys its `--backend host` suggestion off it.
+    #[test]
+    fn missing_manifest_is_downcastable() {
+        let dir = tmpdir("nodir3");
+        std::fs::remove_dir_all(&dir).ok();
+        let err = Registry::load(&dir).unwrap_err();
+        let mm = err
+            .downcast_ref::<ManifestMissing>()
+            .expect("should be ManifestMissing");
+        assert_eq!(mm.dir, dir);
+        assert!(mm.to_string().contains("manifest.json"));
+
+        // a *malformed* manifest is NOT ManifestMissing
+        let dir2 = tmpdir("badjson");
+        std::fs::create_dir_all(&dir2).unwrap();
+        std::fs::write(dir2.join("manifest.json"), "{not json").unwrap();
+        let err2 = Registry::load(&dir2).unwrap_err();
+        assert!(err2.downcast_ref::<ManifestMissing>().is_none());
+        std::fs::remove_dir_all(&dir2).ok();
     }
 }

@@ -1,0 +1,353 @@
+//! The execution-backend abstraction: one trait every training loop and
+//! the [`crate::session::Session`] API talk to, with two implementations
+//! — the PJRT [`Engine`] (AOT artifacts, this module) and the pure-host
+//! [`super::HostBackend`] (no artifacts at all, `runtime::host`).
+//!
+//! The trait carries exactly the operations the four training methods
+//! need: resolve a [`ModelSpec`] for a model id, prepare (compile/cache)
+//! it, run one fused `train_step` over an assembled [`Batch`], run a
+//! batch `forward`, and run one VR-GCN control-variate step over a
+//! [`VrgcnBatch`].  Everything else — sampling, assembly, normalization,
+//! evaluation, scheduling — is backend-independent host code.
+#![deny(missing_docs)]
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::Batch;
+use crate::coordinator::trainer::TrainState;
+use crate::graph::Task;
+use crate::runtime::artifacts::{ArtifactMeta, Kind};
+use crate::runtime::exec::{Engine, Tensor};
+
+/// Typed architecture of one trainable model — the backend-neutral
+/// replacement for reading shapes out of an [`ArtifactMeta`].  A spec is
+/// all [`TrainState::init`] and the training loops need, so a model can
+/// exist without any artifact directory behind it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Loss/metric family (softmax multiclass vs sigmoid multilabel).
+    pub task: Task,
+    /// Number of GCN layers `L`.
+    pub layers: usize,
+    /// Input feature width.
+    pub f_in: usize,
+    /// Hidden width of layers `1..L-1`.
+    pub f_hid: usize,
+    /// Output classes.
+    pub classes: usize,
+    /// Padded batch size every batch tensor is shaped to.
+    pub b_max: usize,
+    /// Residual connections between equal-width hidden layers (eq. (8)).
+    pub residual: bool,
+    /// `(f_in, f_out)` of each layer's weight matrix.
+    pub weight_shapes: Vec<(usize, usize)>,
+}
+
+impl ModelSpec {
+    /// Standard L-layer GCN spec: `f_in -> f_hid^(L-1) -> classes`, no
+    /// residual (the paper's default architecture).
+    pub fn gcn(
+        task: Task,
+        layers: usize,
+        f_in: usize,
+        f_hid: usize,
+        classes: usize,
+        b_max: usize,
+    ) -> ModelSpec {
+        assert!(layers >= 1, "a model needs at least one layer");
+        let mut dims = Vec::with_capacity(layers + 1);
+        dims.push(f_in);
+        for _ in 1..layers {
+            dims.push(f_hid);
+        }
+        dims.push(classes);
+        let weight_shapes = (0..layers).map(|i| (dims[i], dims[i + 1])).collect();
+        ModelSpec { task, layers, f_in, f_hid, classes, b_max, residual: false, weight_shapes }
+    }
+
+    /// Same spec with residual connections enabled.
+    pub fn with_residual(mut self) -> ModelSpec {
+        self.residual = true;
+        self
+    }
+
+    /// Per-layer activation input dims (the VR-GCN `Hc` shapes).
+    pub fn layer_in_dims(&self) -> Vec<usize> {
+        self.weight_shapes.iter().map(|&(fi, _)| fi).collect()
+    }
+
+    /// Total parameter element count (one weight set; Adam state is 2x).
+    pub fn param_elements(&self) -> usize {
+        self.weight_shapes.iter().map(|&(a, b)| a * b).sum()
+    }
+}
+
+impl From<&ArtifactMeta> for ModelSpec {
+    fn from(m: &ArtifactMeta) -> ModelSpec {
+        ModelSpec {
+            task: m.task,
+            layers: m.layers,
+            f_in: m.f_in,
+            f_hid: m.f_hid,
+            classes: m.classes,
+            b_max: m.b_max,
+            residual: m.residual,
+            weight_shapes: m.weight_shapes.clone(),
+        }
+    }
+}
+
+/// Inputs of one VR-GCN control-variate step (Chen et al., ICML'18), as
+/// assembled by `baselines::vrgcn`: the scaled in-batch sampled
+/// adjacency plus the host-precomputed historical contributions.
+pub struct VrgcnBatch {
+    /// `(b_max, b_max)` in-batch block: self loops + scaled sampled
+    /// edges whose other end is in the batch.
+    pub a_in: Tensor,
+    /// Per-layer historical contribution `Hc_l = Â·H_l` minus the
+    /// sampled in-batch part, `(b_max, f_l)` each, `L` entries.
+    pub hcs: Vec<Tensor>,
+    /// `(b_max, f_in)` features.
+    pub x: Tensor,
+    /// `(b_max, classes)` labels.
+    pub y: Tensor,
+    /// `(b_max,)` loss mask over the target nodes.
+    pub mask: Tensor,
+    /// Number of real (non-padding) nodes.
+    pub n_real: usize,
+}
+
+impl VrgcnBatch {
+    /// Host bytes of the batch tensors (Table 5 memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.a_in.size_bytes()
+            + self.hcs.iter().map(|t| t.size_bytes()).sum::<usize>()
+            + self.x.size_bytes()
+            + self.y.size_bytes()
+            + self.mask.size_bytes()
+    }
+}
+
+/// An execution backend: where `train_step`/`forward` actually run.
+///
+/// Implementations:
+///
+/// - [`Engine`] — the PJRT path; model ids are AOT artifact names and
+///   specs come from `artifacts/manifest.json`.
+/// - [`super::HostBackend`] — pure host; model ids are whatever the
+///   caller registered via [`Backend::register_model`], and the math
+///   runs on the tiled SpMM·GEMM kernels of `coordinator::inference`
+///   plus a host Adam step.  No artifacts directory is needed.
+///
+/// Contract shared by all implementations: `train_step` and
+/// `vrgcn_step` increment `state.step`, update weights + Adam moments
+/// in place, and return the batch loss (erroring on a non-finite loss);
+/// `forward` returns `(b_max, classes)` logits with zeroed padding
+/// rows.
+pub trait Backend {
+    /// Short backend identifier (`"pjrt"` | `"host"`), used in logs and
+    /// the CLI summary.
+    fn name(&self) -> &'static str;
+
+    /// Resolve the spec for a model id.  Errors if the backend does not
+    /// know the model (unknown artifact / never registered).
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec>;
+
+    /// Prepare the model for execution (compile the artifact, warm
+    /// caches).  Idempotent; the default does nothing.
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        let _ = model;
+        Ok(())
+    }
+
+    /// Register a spec under a model id for backends that synthesize
+    /// models instead of loading artifacts.  Returns `true` if the
+    /// backend accepted the registration (the PJRT engine ignores it —
+    /// its manifest is the source of truth — and returns `false`).
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        let _ = (model, spec);
+        false
+    }
+
+    /// One fused train step (forward + masked loss + backward + Adam)
+    /// over an assembled batch; updates `state` in place and returns
+    /// the batch loss.
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32>;
+
+    /// Batch forward: `(b_max, classes)` logits over the batch block.
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor>;
+
+    /// One VR-GCN control-variate step; returns the batch loss and the
+    /// `L-1` hidden activations `(b_max, f_hid)` used to refresh the
+    /// history store.
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)>;
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        Ok(ModelSpec::from(&self.meta(model)?))
+    }
+
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        self.ensure_compiled(model)
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        state.step += 1;
+        let l = state.weights.len();
+        let step_t = Tensor::scalar(state.step as f32);
+        let lr_t = Tensor::scalar(lr);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * l + 6);
+        inputs.extend(state.weights.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.push(&batch.a);
+        inputs.push(&batch.x);
+        inputs.push(&batch.y);
+        inputs.push(&batch.mask);
+
+        let mut out = self.run_refs(model, &inputs)?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| anyhow!("empty output"))?
+            .data
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty loss"))?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}", state.step));
+        }
+        let vs: Vec<Tensor> = out.split_off(2 * l);
+        let ms: Vec<Tensor> = out.split_off(l);
+        state.weights = out;
+        state.m = ms;
+        state.v = vs;
+        Ok(loss)
+    }
+
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        let meta = self.meta(model)?;
+        if meta.kind != Kind::Forward {
+            return Err(anyhow!("artifact {model} is not forward-kind"));
+        }
+        let mut inputs: Vec<&Tensor> = weights.iter().collect();
+        inputs.push(&batch.a);
+        inputs.push(&batch.x);
+        let mut out = self.run_refs(model, &inputs)?;
+        out.pop().ok_or_else(|| anyhow!("forward artifact returned no output"))
+    }
+
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let meta = self.meta(model)?;
+        if meta.kind != Kind::Vrgcn {
+            return Err(anyhow!("artifact {model} is not vrgcn-kind"));
+        }
+        let l = meta.layers;
+        state.step += 1;
+        let step_t = Tensor::scalar(state.step as f32);
+        let lr_t = Tensor::scalar(lr);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(3 * l + 2 + 1 + l + 3);
+        inputs.extend(state.weights.iter());
+        inputs.extend(state.m.iter());
+        inputs.extend(state.v.iter());
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.push(&batch.a_in);
+        inputs.extend(batch.hcs.iter());
+        inputs.push(&batch.x);
+        inputs.push(&batch.y);
+        inputs.push(&batch.mask);
+
+        let mut out = self.run_refs(model, &inputs)?;
+        // outputs: W, m, v (3L), loss, hiddens (L-1)
+        let hiddens: Vec<Tensor> = out.split_off(3 * l + 1);
+        let loss = out
+            .pop()
+            .ok_or_else(|| anyhow!("empty output"))?
+            .data
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty loss"))?;
+        if !loss.is_finite() {
+            return Err(anyhow!("vrgcn non-finite loss at step {}", state.step));
+        }
+        let vs = out.split_off(2 * l);
+        let ms = out.split_off(l);
+        state.weights = out;
+        state.m = ms;
+        state.v = vs;
+        Ok((loss, hiddens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcn_spec_shapes() {
+        let s = ModelSpec::gcn(Task::Multiclass, 3, 8, 16, 4, 128);
+        assert_eq!(s.weight_shapes, vec![(8, 16), (16, 16), (16, 4)]);
+        assert_eq!(s.layer_in_dims(), vec![8, 16, 16]);
+        assert_eq!(s.param_elements(), 8 * 16 + 16 * 16 + 16 * 4);
+        assert!(!s.residual);
+        assert!(s.with_residual().residual);
+    }
+
+    #[test]
+    fn single_layer_spec() {
+        let s = ModelSpec::gcn(Task::Multilabel, 1, 6, 99, 3, 32);
+        assert_eq!(s.weight_shapes, vec![(6, 3)]);
+    }
+
+    #[test]
+    fn spec_from_meta_roundtrips_shapes() {
+        let meta = ArtifactMeta {
+            name: "x".into(),
+            file: "/dev/null".into(),
+            kind: Kind::Train,
+            task: Task::Multiclass,
+            layers: 2,
+            f_in: 8,
+            f_hid: 16,
+            classes: 4,
+            b_max: 128,
+            residual: true,
+            weight_shapes: vec![(8, 16), (16, 4)],
+            vmem_bytes_est: 0,
+            mxu_utilization_est: 0.0,
+        };
+        let spec = ModelSpec::from(&meta);
+        assert_eq!(spec, ModelSpec::gcn(Task::Multiclass, 2, 8, 16, 4, 128).with_residual());
+    }
+}

@@ -1,0 +1,833 @@
+//! [`HostBackend`]: the artifact-free execution backend.  The full
+//! training pipeline — forward, masked loss, backward, Adam — runs on
+//! the host, built from the same tiled SpMM·GEMM kernels the exact
+//! evaluator uses (`coordinator::inference`), so `cluster-gcn train
+//! --backend host` works with no `artifacts/` directory and no python
+//! step at all.
+//!
+//! Parity contract: [`HostBackend::forward`] over a full-graph batch
+//! (all nodes in natural order) is **bit-identical** to
+//! [`crate::coordinator::inference::full_forward_cached`] at every pool
+//! width — the batch renormalization computes the same f32 values as
+//! `normalize_sparse`, the block is re-extracted into CSR form, and the
+//! layer loop mirrors the evaluator's ping-pong exactly.  The property
+//! suite pins this.
+//!
+//! The backward pass is the standard GCN chain: with `P_l = Â·H_l`,
+//! `Z_l = P_l·W_l`, `H_{l+1} = relu(Z_l) (+ H_l)`,
+//!
+//! ```text
+//!   dW_l = P_l^T · dZ_l
+//!   dH_l = Â^T · (dZ_l · W_l^T)  (+ dH_{l+1} through the residual)
+//! ```
+//!
+//! and the Adam step matches `python/compile/model.py` (β1 = 0.9,
+//! β2 = 0.999, ε = 1e-8, bias-corrected).  Unit tests check every
+//! analytic gradient against central finite differences.
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::Batch;
+use crate::coordinator::inference::{propagate_into, spmm_layer_into};
+use crate::coordinator::trainer::TrainState;
+use crate::graph::{Csr, Task};
+use crate::runtime::backend::{Backend, ModelSpec, VrgcnBatch};
+use crate::runtime::exec::Tensor;
+use crate::util::pool::default_threads;
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Pure-host execution backend over registered [`ModelSpec`]s.
+///
+/// Models are declared with [`Backend::register_model`] (the
+/// [`crate::session::Session`] does this automatically); there is no
+/// artifact directory, manifest, or compile step.
+pub struct HostBackend {
+    models: BTreeMap<String, ModelSpec>,
+    threads: usize,
+}
+
+impl Default for HostBackend {
+    fn default() -> HostBackend {
+        HostBackend::new()
+    }
+}
+
+impl HostBackend {
+    /// Backend over the default pool width.
+    pub fn new() -> HostBackend {
+        HostBackend::with_threads(default_threads())
+    }
+
+    /// Backend with an explicit kernel thread cap (results are
+    /// bit-identical at every width; see `coordinator::inference`).
+    pub fn with_threads(threads: usize) -> HostBackend {
+        HostBackend { models: BTreeMap::new(), threads: threads.max(1) }
+    }
+
+    /// Registered model ids, in sorted order.
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.models.keys().map(|s| s.as_str())
+    }
+
+    fn spec(&self, model: &str) -> Result<&ModelSpec> {
+        self.models.get(model).ok_or_else(|| {
+            anyhow!(
+                "model '{model}' not registered with the host backend \
+                 ({} known)",
+                self.models.len()
+            )
+        })
+    }
+}
+
+/// Sparse view of one dense batch block: CSR structure + normalized
+/// values + per-node self-loop, shaped exactly like the full-graph
+/// normalization so the tiled kernels apply unchanged.
+struct BlockAdj {
+    csr: Csr,
+    vals: Vec<f32>,
+    self_loop: Vec<f32>,
+}
+
+/// Re-extract the `n_real × n_real` prefix of the dense batch block
+/// into CSR form.  Normalized entries are strictly positive, so exact
+/// zeros are structural (absent edges) and can be dropped.
+fn extract_block(a: &Tensor, n: usize) -> BlockAdj {
+    let b = a.dims[0];
+    debug_assert!(n <= b);
+    let mut offsets = vec![0usize; n + 1];
+    let mut cols: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut self_loop = vec![0f32; n];
+    for u in 0..n {
+        let row = &a.data[u * b..u * b + n];
+        for (v, &av) in row.iter().enumerate() {
+            if v == u {
+                self_loop[u] = av;
+            } else if av != 0.0 {
+                cols.push(v as u32);
+                vals.push(av);
+            }
+        }
+        offsets[u + 1] = cols.len();
+    }
+    let nnz = cols.len();
+    let csr = Csr { offsets, cols, weights: vec![1; nnz], node_weights: vec![1; n] };
+    BlockAdj { csr, vals, self_loop }
+}
+
+/// `z[n,g] = p[n,f] · w[f,g]` (dense, zero-skipping on `p`).
+fn gemm(p: &[f32], n: usize, f: usize, w: &[f32], g: usize, z: &mut [f32]) {
+    debug_assert_eq!(p.len(), n * f);
+    debug_assert_eq!(w.len(), f * g);
+    debug_assert_eq!(z.len(), n * g);
+    z.fill(0.0);
+    for i in 0..n {
+        let pr = &p[i * f..(i + 1) * f];
+        let zr = &mut z[i * g..(i + 1) * g];
+        for (k, &pv) in pr.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * g..(k + 1) * g];
+            for (zv, &wv) in zr.iter_mut().zip(wr) {
+                *zv += pv * wv;
+            }
+        }
+    }
+}
+
+/// `gw[f,g] += p[n,f]^T · dz[n,g]` (caller zeroes `gw`).
+fn gemm_at_b(p: &[f32], dz: &[f32], n: usize, f: usize, g: usize, gw: &mut [f32]) {
+    debug_assert_eq!(gw.len(), f * g);
+    for i in 0..n {
+        let pr = &p[i * f..(i + 1) * f];
+        let dr = &dz[i * g..(i + 1) * g];
+        for (k, &pv) in pr.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let gr = &mut gw[k * g..(k + 1) * g];
+            for (gv, &dv) in gr.iter_mut().zip(dr) {
+                *gv += pv * dv;
+            }
+        }
+    }
+}
+
+/// `m[n,f] = dz[n,g] · w[f,g]^T`.
+fn gemm_a_bt(dz: &[f32], w: &[f32], n: usize, g: usize, f: usize, m: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * f);
+    for i in 0..n {
+        let dr = &dz[i * g..(i + 1) * g];
+        let mr = &mut m[i * f..(i + 1) * f];
+        for (k, mv) in mr.iter_mut().enumerate() {
+            let wr = &w[k * g..(k + 1) * g];
+            let mut acc = 0f32;
+            for (&dv, &wv) in dr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *mv = acc;
+        }
+    }
+}
+
+/// `out[n,f] += Â^T · m[n,f]` over the sparse block (caller zeroes
+/// `out`): scatter each stored entry `Â[u,v]` into row `v`, plus the
+/// diagonal self-loops.
+fn scatter_adj_t(blk: &BlockAdj, m: &[f32], f: usize, out: &mut [f32]) {
+    let n = blk.csr.n();
+    debug_assert_eq!(m.len(), n * f);
+    debug_assert_eq!(out.len(), n * f);
+    for u in 0..n {
+        let sl = blk.self_loop[u];
+        for j in 0..f {
+            out[u * f + j] += sl * m[u * f + j];
+        }
+        let off = blk.csr.offsets[u];
+        for (idx, &v) in blk.csr.neighbors(u).iter().enumerate() {
+            let a = blk.vals[off + idx];
+            let v = v as usize;
+            for j in 0..f {
+                out[v * f + j] += a * m[u * f + j];
+            }
+        }
+    }
+}
+
+/// Masked mean loss (eq. (2)/(7), matching `model.masked_loss`) and its
+/// gradient w.r.t. the logits.  Rows `0..n`, mask/label rows taken from
+/// the padded batch tensors.
+fn loss_and_dlogits(
+    task: Task,
+    logits: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    n: usize,
+    classes: usize,
+) -> (f32, Vec<f32>) {
+    let c = classes;
+    let msum: f32 = mask[..n].iter().sum();
+    let denom = msum.max(1.0);
+    let mut dz = vec![0f32; n * c];
+    let mut loss = 0f32;
+    match task {
+        Task::Multiclass => {
+            for i in 0..n {
+                let mi = mask[i];
+                if mi == 0.0 {
+                    continue;
+                }
+                let row = &logits[i * c..(i + 1) * c];
+                let yrow = &y[i * c..(i + 1) * c];
+                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut se = 0f32;
+                for &v in row {
+                    se += (v - mx).exp();
+                }
+                let lse = se.ln();
+                let sum_y: f32 = yrow.iter().sum();
+                let mut per = 0f32;
+                for j in 0..c {
+                    per -= yrow[j] * (row[j] - mx - lse);
+                    let p = (row[j] - mx).exp() / se;
+                    dz[i * c + j] = mi / denom * (p * sum_y - yrow[j]);
+                }
+                loss += per * mi;
+            }
+        }
+        Task::Multilabel => {
+            let scale = 1.0 / c as f32;
+            for i in 0..n {
+                let mi = mask[i];
+                if mi == 0.0 {
+                    continue;
+                }
+                let row = &logits[i * c..(i + 1) * c];
+                let yrow = &y[i * c..(i + 1) * c];
+                let mut per = 0f32;
+                for j in 0..c {
+                    let zv = row[j];
+                    let yv = yrow[j];
+                    per += zv.max(0.0) - zv * yv + (-zv.abs()).exp().ln_1p();
+                    let sig = 1.0 / (1.0 + (-zv).exp());
+                    dz[i * c + j] = mi * scale / denom * (sig - yv);
+                }
+                loss += per * scale * mi;
+            }
+        }
+    }
+    (loss / denom, dz)
+}
+
+/// One bias-corrected Adam update over a flat parameter group.
+fn adam_update(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], t: f32, lr: f32) {
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for i in 0..w.len() {
+        let gi = g[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        w[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+/// Forward over the sparse block, storing the per-layer propagations
+/// `P_l` and pre-activations `Z_l` the backward pass needs.  Returns
+/// `(ps, zs)`; the logits are the last `zs` entry.
+fn forward_store(
+    blk: &BlockAdj,
+    weights: &[Tensor],
+    x: &[f32],
+    f_in: usize,
+    residual: bool,
+    threads: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let n = blk.csr.n();
+    let l = weights.len();
+    let mut ps: Vec<Vec<f32>> = Vec::with_capacity(l);
+    let mut zs: Vec<Vec<f32>> = Vec::with_capacity(l);
+    let mut h: Vec<f32> = x[..n * f_in].to_vec();
+    let mut f = f_in;
+    for (li, w) in weights.iter().enumerate() {
+        debug_assert_eq!(w.dims[0], f, "weight in-dim mismatch at layer {li}");
+        let g_dim = w.dims[1];
+        let last = li == l - 1;
+        let mut p = vec![0f32; n * f];
+        propagate_into(&blk.csr, &blk.vals, &blk.self_loop, &h, f, threads, &mut p);
+        let mut z = vec![0f32; n * g_dim];
+        gemm(&p, n, f, &w.data, g_dim, &mut z);
+        let mut h_next: Vec<f32> = if last {
+            z.clone()
+        } else {
+            z.iter().map(|&v| v.max(0.0)).collect()
+        };
+        if residual && !last && g_dim == f {
+            for (hv, &prev) in h_next.iter_mut().zip(&h) {
+                *hv += prev;
+            }
+        }
+        ps.push(p);
+        zs.push(z);
+        h = h_next;
+        f = g_dim;
+    }
+    (ps, zs)
+}
+
+/// Loss only — the finite-difference oracle for the gradient tests.
+#[cfg(test)]
+fn host_loss(spec: &ModelSpec, weights: &[Tensor], batch: &Batch, threads: usize) -> f32 {
+    let n = batch.n_real;
+    let blk = extract_block(&batch.a, n);
+    let (_, zs) = forward_store(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
+    let logits = zs.last().expect("at least one layer");
+    loss_and_dlogits(spec.task, logits, &batch.y.data, &batch.mask.data, n, spec.classes).0
+}
+
+/// Full forward + backward: loss and per-layer weight gradients.
+fn host_grads(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &Batch,
+    threads: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let n = batch.n_real;
+    if n == 0 {
+        return Err(anyhow!("empty batch (n_real = 0)"));
+    }
+    let l = weights.len();
+    let blk = extract_block(&batch.a, n);
+    let (ps, zs) = forward_store(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
+    let logits = &zs[l - 1];
+    let (loss, dlogits) =
+        loss_and_dlogits(spec.task, logits, &batch.y.data, &batch.mask.data, n, spec.classes);
+
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); l];
+    // dh = dL/dH_{li+1} while processing layer li (top-down).
+    let mut dh = dlogits;
+    for li in (0..l).rev() {
+        let w = &weights[li];
+        let (fi, go) = (w.dims[0], w.dims[1]);
+        let last = li == l - 1;
+        // dz = dh ⊙ σ'(z); the last layer has no activation.
+        let dz: Vec<f32> = if last {
+            dh.clone()
+        } else {
+            dh.iter()
+                .zip(&zs[li])
+                .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
+                .collect()
+        };
+        let mut gw = vec![0f32; fi * go];
+        gemm_at_b(&ps[li], &dz, n, fi, go, &mut gw);
+        if li > 0 {
+            let mut mbuf = vec![0f32; n * fi];
+            gemm_a_bt(&dz, &w.data, n, go, fi, &mut mbuf);
+            let mut dh_new = vec![0f32; n * fi];
+            scatter_adj_t(&blk, &mbuf, fi, &mut dh_new);
+            if spec.residual && !last && go == fi {
+                for (o, &d) in dh_new.iter_mut().zip(&dh) {
+                    *o += d;
+                }
+            }
+            dh = dh_new;
+        }
+        grads[li] = gw;
+    }
+    Ok((loss, grads))
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        Ok(self.spec(model)?.clone())
+    }
+
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        self.spec(model).map(|_| ())
+    }
+
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        self.models.insert(model.to_string(), spec);
+        true
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        let spec = self.spec(model)?.clone();
+        state.step += 1;
+        let (loss, grads) = host_grads(&spec, &state.weights, batch, self.threads)?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}", state.step));
+        }
+        let t = state.step as f32;
+        for li in 0..state.weights.len() {
+            adam_update(
+                &mut state.weights[li].data,
+                &grads[li],
+                &mut state.m[li].data,
+                &mut state.v[li].data,
+                t,
+                lr,
+            );
+        }
+        Ok(loss)
+    }
+
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        let spec = self.spec(model)?.clone();
+        let b = batch.a.dims[0];
+        let classes = spec.classes;
+        let n = batch.n_real;
+        let mut out = vec![0f32; b * classes];
+        if n > 0 {
+            let blk = extract_block(&batch.a, n);
+            // Mirror `full_forward_cached` exactly: two max-width
+            // ping-pong buffers, relu on every layer but the last —
+            // this is what makes the full-graph batch bit-identical to
+            // the exact evaluator.
+            let max_w = weights
+                .iter()
+                .map(|w| w.dims[1])
+                .chain([spec.f_in])
+                .max()
+                .ok_or_else(|| anyhow!("model has no layers"))?;
+            let mut cur = vec![0f32; n * max_w];
+            cur[..n * spec.f_in].copy_from_slice(&batch.x.data[..n * spec.f_in]);
+            let mut nxt = vec![0f32; n * max_w];
+            let mut f = spec.f_in;
+            let last = weights.len() - 1;
+            for (l, w) in weights.iter().enumerate() {
+                let g_dim = w.dims[1];
+                spmm_layer_into(
+                    &blk.csr,
+                    &blk.vals,
+                    &blk.self_loop,
+                    &cur[..n * f],
+                    f,
+                    w,
+                    l != last,
+                    self.threads,
+                    &mut nxt[..n * g_dim],
+                );
+                if spec.residual && l != last && g_dim == f {
+                    for i in 0..n * f {
+                        nxt[i] += cur[i];
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+                f = g_dim;
+            }
+            if f != classes {
+                return Err(anyhow!("final layer width {f} != classes {classes}"));
+            }
+            out[..n * classes].copy_from_slice(&cur[..n * classes]);
+        }
+        Ok(Tensor::new(vec![b, classes], out))
+    }
+
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let spec = self.spec(model)?.clone();
+        state.step += 1;
+        let n = batch.n_real;
+        if n == 0 {
+            return Err(anyhow!("empty vrgcn batch (n_real = 0)"));
+        }
+        let l = spec.layers;
+        let b = batch.a_in.dims[0];
+        let dims = spec.layer_in_dims();
+
+        // ---- forward: P_l = A_in·H_l + Hc_l; Z_l = P_l·W_l ------------
+        let mut ps: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(l);
+        let mut hiddens: Vec<Tensor> = Vec::with_capacity(l.saturating_sub(1));
+        let mut h: Vec<f32> = batch.x.data[..n * spec.f_in].to_vec();
+        for li in 0..l {
+            let f = dims[li];
+            let w = &state.weights[li];
+            let g_dim = w.dims[1];
+            let last = li == l - 1;
+            let hc = &batch.hcs[li].data;
+            let mut p = vec![0f32; n * f];
+            for i in 0..n {
+                p[i * f..(i + 1) * f].copy_from_slice(&hc[i * f..(i + 1) * f]);
+                let arow = &batch.a_in.data[i * b..i * b + n];
+                for (j, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let hr = &h[j * f..(j + 1) * f];
+                    for k in 0..f {
+                        p[i * f + k] += a * hr[k];
+                    }
+                }
+            }
+            let mut z = vec![0f32; n * g_dim];
+            gemm(&p, n, f, &w.data, g_dim, &mut z);
+            let h_next: Vec<f32> = if last {
+                z.clone()
+            } else {
+                z.iter().map(|&v| v.max(0.0)).collect()
+            };
+            if !last {
+                // padded (b, f_hid) hidden for the history refresh
+                let mut hid = vec![0f32; b * g_dim];
+                hid[..n * g_dim].copy_from_slice(&h_next);
+                hiddens.push(Tensor::new(vec![b, g_dim], hid));
+            }
+            ps.push(p);
+            zs.push(z);
+            h = h_next;
+        }
+
+        let logits = &zs[l - 1];
+        let (loss, dlogits) = loss_and_dlogits(
+            spec.task,
+            logits,
+            &batch.y.data,
+            &batch.mask.data,
+            n,
+            spec.classes,
+        );
+        if !loss.is_finite() {
+            return Err(anyhow!("vrgcn non-finite loss at step {}", state.step));
+        }
+
+        // ---- backward (Hc is stop-gradient, exactly like the AOT model)
+        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); l];
+        let mut dh = dlogits;
+        for li in (0..l).rev() {
+            let w = &state.weights[li];
+            let (fi, go) = (w.dims[0], w.dims[1]);
+            let last = li == l - 1;
+            let dz: Vec<f32> = if last {
+                dh.clone()
+            } else {
+                dh.iter()
+                    .zip(&zs[li])
+                    .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
+                    .collect()
+            };
+            let mut gw = vec![0f32; fi * go];
+            gemm_at_b(&ps[li], &dz, n, fi, go, &mut gw);
+            if li > 0 {
+                let mut mbuf = vec![0f32; n * fi];
+                gemm_a_bt(&dz, &w.data, n, go, fi, &mut mbuf);
+                // dh[j] += A_in[i,j] · mbuf[i]  (dense transpose scatter)
+                let mut dh_new = vec![0f32; n * fi];
+                for i in 0..n {
+                    let arow = &batch.a_in.data[i * b..i * b + n];
+                    let mr = &mbuf[i * fi..(i + 1) * fi];
+                    for (j, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        for k in 0..fi {
+                            dh_new[j * fi + k] += a * mr[k];
+                        }
+                    }
+                }
+                dh = dh_new;
+            }
+            grads[li] = gw;
+        }
+
+        let t = state.step as f32;
+        for li in 0..l {
+            adam_update(
+                &mut state.weights[li].data,
+                &grads[li],
+                &mut state.m[li].data,
+                &mut state.v[li].data,
+                t,
+                lr,
+            );
+        }
+        Ok((loss, hiddens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::BatchAssembler;
+    use crate::coordinator::inference::full_forward;
+    use crate::graph::{Dataset, Labels, Split};
+    use crate::norm::NormConfig;
+    use crate::util::Rng;
+
+    fn tiny_ds(task: Task) -> Dataset {
+        // ring of 6 nodes, f_in = 3, 2 classes
+        let n = 6;
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32).map(|v| (v, (v + 1) % n as u32)).collect();
+        let mut rng = Rng::new(11);
+        let features: Vec<f32> = (0..n * 3).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let labels = match task {
+            Task::Multiclass => Labels::Multiclass(vec![0, 1, 0, 1, 0, 1]),
+            Task::Multilabel => {
+                let mut l = Labels::multilabel_new(n, 2);
+                for v in 0..n {
+                    l.set_label(v, v % 2);
+                    if v % 3 == 0 {
+                        l.set_label(v, 0);
+                    }
+                }
+                l
+            }
+        };
+        Dataset {
+            name: "host_tiny".into(),
+            task,
+            graph: Csr::from_edges(n, &edges),
+            f_in: 3,
+            num_classes: 2,
+            features,
+            labels,
+            split: vec![
+                Split::Train,
+                Split::Train,
+                Split::Val,
+                Split::Train,
+                Split::Train,
+                Split::Test,
+            ],
+        }
+    }
+
+    fn rand_weights(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        spec.weight_shapes
+            .iter()
+            .map(|&(fi, fo)| {
+                Tensor::new(
+                    vec![fi, fo],
+                    (0..fi * fo).map(|_| rng.f32() - 0.5).collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn full_batch(ds: &Dataset, b_max: usize, norm: NormConfig) -> Batch {
+        let mut asm = BatchAssembler::new(ds.n(), b_max, norm);
+        let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+        asm.assemble(ds, &nodes)
+    }
+
+    /// Central finite differences over every weight entry.
+    fn check_grads(task: Task, residual: bool, tol: f32) {
+        let ds = tiny_ds(task);
+        // square layers so the residual variant is exercised for real
+        let mut spec = ModelSpec::gcn(task, 3, 3, 3, 2, 8);
+        if residual {
+            spec = spec.with_residual();
+        }
+        let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+        let weights = rand_weights(&spec, 21);
+        let (_, grads) = host_grads(&spec, &weights, &batch, 2).unwrap();
+        let eps = 2e-3f32;
+        for li in 0..spec.layers {
+            for e in 0..weights[li].data.len() {
+                let mut wp = weights.clone();
+                wp[li].data[e] += eps;
+                let lp = host_loss(&spec, &wp, &batch, 2);
+                let mut wm = weights.clone();
+                wm[li].data[e] -= eps;
+                let lm = host_loss(&spec, &wm, &batch, 2);
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = grads[li][e];
+                assert!(
+                    (num - ana).abs() <= tol + 0.1 * num.abs().max(ana.abs()),
+                    "layer {li} entry {e}: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grads_match_finite_differences_multiclass() {
+        check_grads(Task::Multiclass, false, 5e-3);
+    }
+
+    #[test]
+    fn grads_match_finite_differences_multilabel() {
+        check_grads(Task::Multilabel, false, 5e-3);
+    }
+
+    #[test]
+    fn grads_match_finite_differences_residual() {
+        check_grads(Task::Multiclass, true, 5e-3);
+    }
+
+    #[test]
+    fn adam_single_step_known_values() {
+        let mut w = vec![1.0f32];
+        let g = vec![0.5f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        adam_update(&mut w, &g, &mut m, &mut v, 1.0, 0.1);
+        // m = 0.05, v = 0.00025; bias-corrected mhat = 0.5, vhat = 0.25
+        assert!((m[0] - 0.05).abs() < 1e-7);
+        assert!((v[0] - 0.00025).abs() < 1e-9);
+        // w -= 0.1 * 0.5 / (0.5 + eps) ≈ 1 - 0.1
+        assert!((w[0] - 0.9).abs() < 1e-5, "w = {}", w[0]);
+    }
+
+    #[test]
+    fn forward_matches_exact_evaluator_bitwise() {
+        let ds = tiny_ds(Task::Multiclass);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 5, 2, 8);
+        let weights = rand_weights(&spec, 3);
+        let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+        let expect = full_forward(&ds, &weights, NormConfig::PAPER_DEFAULT, false);
+        for threads in [1usize, 2, 7] {
+            let mut hb = HostBackend::with_threads(threads);
+            hb.register_model("m", spec.clone());
+            let got = hb.forward("m", &weights, &batch).unwrap();
+            assert_eq!(got.dims, vec![8, 2]);
+            assert_eq!(
+                &got.data[..ds.n() * 2],
+                &expect[..],
+                "threads = {threads}"
+            );
+            // padding rows are zero
+            assert!(got.data[ds.n() * 2..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn train_step_learns_on_tiny_graph() {
+        let ds = tiny_ds(Task::Multiclass);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 8, 2, 8);
+        let mut hb = HostBackend::new();
+        hb.register_model("m", spec.clone());
+        let mut state = TrainState::init(&spec, 7);
+        let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+        let first = hb.train_step("m", &mut state, 0.05, &batch).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = hb.train_step("m", &mut state, 0.05, &batch).unwrap();
+        }
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+        assert_eq!(state.step, 31);
+    }
+
+    #[test]
+    fn vrgcn_step_runs_and_returns_hiddens() {
+        let ds = tiny_ds(Task::Multiclass);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
+        let mut hb = HostBackend::new();
+        hb.register_model("m", spec.clone());
+        let mut state = TrainState::init(&spec, 5);
+        let n = ds.n();
+        let b = 8;
+        // dense block with plain row-normalized entries as A_in, zero Hc
+        let mut a_in = Tensor::zeros(vec![b, b]);
+        for v in 0..n {
+            let deg = ds.graph.degree(v) as f32 + 1.0;
+            a_in.data[v * b + v] = 1.0 / deg;
+            for &u in ds.graph.neighbors(v) {
+                a_in.data[v * b + u as usize] = 1.0 / deg;
+            }
+        }
+        let mut x = Tensor::zeros(vec![b, 3]);
+        x.data[..n * 3].copy_from_slice(&ds.features);
+        let mut y = Tensor::zeros(vec![b, 2]);
+        let mut mask = Tensor::zeros(vec![b]);
+        for v in 0..n {
+            ds.labels.write_row(v, 2, &mut y.data[v * 2..(v + 1) * 2]);
+            mask.data[v] = 1.0;
+        }
+        let vb = VrgcnBatch {
+            a_in,
+            hcs: vec![Tensor::zeros(vec![b, 3]), Tensor::zeros(vec![b, 4])],
+            x,
+            y,
+            mask,
+            n_real: n,
+        };
+        let (first, hiddens) = hb.vrgcn_step("m", &mut state, 0.05, &vb).unwrap();
+        assert!(first.is_finite());
+        assert_eq!(hiddens.len(), 1);
+        assert_eq!(hiddens[0].dims, vec![b, 4]);
+        let mut last = first;
+        for _ in 0..25 {
+            last = hb.vrgcn_step("m", &mut state, 0.05, &vb).unwrap().0;
+        }
+        assert!(last < first, "vrgcn loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let mut hb = HostBackend::new();
+        assert!(hb.model_spec("nope").is_err());
+        assert!(hb.prepare("nope").is_err());
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
+        assert!(hb.register_model("yes", spec));
+        assert!(hb.prepare("yes").is_ok());
+        assert_eq!(hb.models().collect::<Vec<_>>(), vec!["yes"]);
+    }
+}

@@ -1,9 +1,16 @@
-//! PJRT runtime: artifact registry + execution engine.  Loads the HLO
-//! text artifacts produced once by `python/compile/aot.py` and runs them
-//! on the PJRT CPU client — python is never on the training path.
+//! Execution runtime: the [`Backend`] abstraction plus its two
+//! implementations — the PJRT [`Engine`] (loads the HLO text artifacts
+//! produced once by `python/compile/aot.py` and runs them on the PJRT
+//! CPU client; python is never on the training path) and the
+//! artifact-free [`HostBackend`] (the full pipeline on the host
+//! kernels).
 
 pub mod artifacts;
+pub mod backend;
 pub mod exec;
+pub mod host;
 
-pub use artifacts::{ArtifactMeta, Kind, Registry};
+pub use artifacts::{ArtifactMeta, Kind, ManifestMissing, Registry};
+pub use backend::{Backend, ModelSpec, VrgcnBatch};
 pub use exec::{Engine, Tensor};
+pub use host::HostBackend;

@@ -1,0 +1,440 @@
+//! The single experiment surface: a [`Session`] names a dataset, a
+//! training [`Method`], a [`crate::runtime::Backend`], and a typed
+//! [`TrainConfig`], then [`Session::run`] wires the partitioner, the
+//! sampler, batch assembly, and the right training loop together —
+//! one entry point for Cluster-GCN and every baseline the paper
+//! compares against, on either the PJRT engine or the artifact-free
+//! host backend.
+//!
+//! ```no_run
+//! use cluster_gcn::session::{Method, Session};
+//!
+//! let ds = cluster_gcn::datagen::build(
+//!     cluster_gcn::datagen::preset("cora_like").unwrap(), 42);
+//! let out = Session::new(&ds)
+//!     .partition(10)
+//!     .method(Method::Cluster { q: 1 })
+//!     .epochs(10)
+//!     .run()
+//!     .unwrap();
+//! println!("{} via {}: f1 {:.4}", out.model, out.backend,
+//!          out.result.curve.last().unwrap().eval_f1);
+//! ```
+//!
+//! Layering: `Session` (what experiment) → [`Method`] (which training
+//! algorithm + its sampling scheme) → [`crate::runtime::Backend`]
+//! (where `train_step`/`forward` execute).  An [`Observer`] attached to
+//! the session receives metric/checkpoint/early-stop [`Event`]s as the
+//! run progresses.
+#![deny(missing_docs)]
+
+pub mod observer;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::{
+    train_expansion_observed, train_graphsage_observed, train_vrgcn_observed,
+    SageParams, VrgcnParams,
+};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::{train_observed, TrainOptions, TrainResult};
+use crate::coordinator::{checkpoint, ClusterSampler};
+use crate::datagen::preset;
+use crate::graph::{Dataset, Split};
+use crate::norm::NormConfig;
+use crate::partition::{
+    parts_to_clusters, MultilevelPartitioner, Partitioner, RandomPartitioner,
+};
+use crate::runtime::{Backend, HostBackend, ModelSpec};
+use crate::util::Rng;
+
+pub use observer::{Event, NullObserver, Observer, RecordingObserver, StderrObserver};
+
+/// Which training algorithm a session runs (Table 1 / Fig. 6 rows).
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// Cluster-GCN (Algorithm 1): q clusters per batch, between-cluster
+    /// links restored and renormalized (§3.2/§6.2).
+    Cluster {
+        /// clusters per batch.
+        q: usize,
+    },
+    /// Vanilla neighborhood-expansion SGD (§3): full L-hop receptive
+    /// fields, loss on the targets.
+    Expansion {
+        /// target nodes per batch.
+        batch: usize,
+    },
+    /// GraphSAGE-style fixed-size neighbor sampling.
+    GraphSage(SageParams),
+    /// VR-GCN control-variate sampling with historical activations.
+    VrGcn(VrgcnParams),
+}
+
+impl Method {
+    /// GraphSAGE with the paper's default fan-outs sized for `layers`.
+    pub fn graphsage(layers: usize, batch: usize) -> Method {
+        Method::GraphSage(SageParams::for_depth(layers, batch))
+    }
+}
+
+/// Typed training configuration — the session-level replacement for
+/// threading architecture knobs through artifact names and ad-hoc
+/// arguments.  Everything model-shaped lives here; everything
+/// graph-shaped (partitions, normalization) is set on the [`Session`]
+/// builder directly.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// GCN depth L.
+    pub layers: usize,
+    /// hidden width override (None = the preset's `f_hid`, or 128 for
+    /// datasets without a preset).
+    pub hidden: Option<usize>,
+    /// padded batch size override (None = preset `b_max`, grown to fit
+    /// the sampler when needed on the host backend).
+    pub b_max: Option<usize>,
+    /// Adam learning rate (the paper uses 0.01 for every method).
+    pub lr: f32,
+    /// training epochs.
+    pub epochs: usize,
+    /// evaluate every k epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// experiment seed (weights, sampling, partitioning).
+    pub seed: u64,
+    /// split evaluated for the convergence curve.
+    pub eval_split: Split,
+    /// cap steps per epoch (0 = no cap).
+    pub max_steps_per_epoch: usize,
+    /// learning-rate schedule over epochs.
+    pub schedule: LrSchedule,
+    /// early-stop patience in evals (0 = disabled).
+    pub patience: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            layers: 2,
+            hidden: None,
+            b_max: None,
+            lr: 0.01,
+            epochs: 40,
+            eval_every: 5,
+            seed: 0,
+            eval_split: Split::Val,
+            max_steps_per_epoch: 0,
+            schedule: LrSchedule::Constant,
+            patience: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    fn to_options(&self, norm: NormConfig) -> TrainOptions {
+        TrainOptions {
+            lr: self.lr,
+            epochs: self.epochs,
+            eval_every: self.eval_every,
+            seed: self.seed,
+            norm,
+            eval_split: self.eval_split,
+            max_steps_per_epoch: self.max_steps_per_epoch,
+            schedule: self.schedule,
+            patience: self.patience,
+        }
+    }
+}
+
+/// What [`Session::run`] returns: the training result plus the resolved
+/// model identity.
+pub struct SessionResult {
+    /// model id the backend trained (artifact name on PJRT).
+    pub model: String,
+    /// backend that executed the run (`"pjrt"` | `"host"`).
+    pub backend: String,
+    /// the spec the run was shaped by (authoritative, from the backend).
+    pub spec: ModelSpec,
+    /// curve, final state, timing, and memory accounting.
+    pub result: TrainResult,
+}
+
+enum BackendSlot<'a> {
+    Owned(Box<dyn Backend>),
+    Borrowed(&'a mut dyn Backend),
+}
+
+/// Builder for one training run; see the module docs for the layering.
+///
+/// Defaults: Cluster-GCN with the dataset preset's partition count and
+/// q, symmetric normalization, the artifact-free [`HostBackend`], and
+/// the default [`TrainConfig`].
+pub struct Session<'a> {
+    ds: &'a Dataset,
+    method: Method,
+    cfg: TrainConfig,
+    norm: NormConfig,
+    parts: Option<usize>,
+    random_partition: bool,
+    backend: BackendSlot<'a>,
+    observer: Option<&'a mut dyn Observer>,
+    save: Option<PathBuf>,
+}
+
+impl<'a> Session<'a> {
+    /// Start building a run over `ds`.
+    pub fn new(ds: &'a Dataset) -> Session<'a> {
+        let q = preset(&ds.name).map(|p| p.default_q).unwrap_or(1);
+        Session {
+            ds,
+            method: Method::Cluster { q },
+            cfg: TrainConfig::default(),
+            norm: NormConfig::PAPER_DEFAULT,
+            parts: None,
+            random_partition: false,
+            backend: BackendSlot::Owned(Box::new(HostBackend::new())),
+            observer: None,
+            save: None,
+        }
+    }
+
+    /// Number of graph partitions (Cluster-GCN only; default = the
+    /// preset's `default_partitions`, or 10).
+    pub fn partition(mut self, parts: usize) -> Self {
+        self.parts = Some(parts);
+        self
+    }
+
+    /// Use random partitioning instead of the multilevel partitioner
+    /// (the Table 2 ablation).
+    pub fn partition_random(mut self) -> Self {
+        self.random_partition = true;
+        self
+    }
+
+    /// Adjacency normalization (§6.2 / Table 11 variants).
+    pub fn norm(mut self, norm: NormConfig) -> Self {
+        self.norm = norm;
+        self
+    }
+
+    /// Training algorithm (default: Cluster-GCN with the preset's q).
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Replace the whole training configuration.
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// GCN depth.
+    pub fn layers(mut self, layers: usize) -> Self {
+        self.cfg.layers = layers;
+        self
+    }
+
+    /// Training epochs.
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.cfg.epochs = epochs;
+        self
+    }
+
+    /// Adam learning rate.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    /// Experiment seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Execute on an owned backend (e.g. a freshly opened PJRT engine).
+    pub fn backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = BackendSlot::Owned(backend);
+        self
+    }
+
+    /// Execute on a caller-owned backend (kept alive for inspection or
+    /// reuse across sessions).
+    pub fn backend_mut(mut self, backend: &'a mut dyn Backend) -> Self {
+        self.backend = BackendSlot::Borrowed(backend);
+        self
+    }
+
+    /// Attach an observer receiving [`Event`]s during the run.
+    pub fn observer(mut self, obs: &'a mut dyn Observer) -> Self {
+        self.observer = Some(obs);
+        self
+    }
+
+    /// Save a checkpoint of the final state to `path` after training.
+    pub fn save(mut self, path: impl Into<PathBuf>) -> Self {
+        self.save = Some(path.into());
+        self
+    }
+
+    /// Resolve the model id this session will ask the backend for.
+    /// Artifact names stay the historical scheme
+    /// (`{short}[_sage|_vrgcn][_h{H}]_L{layers}`), so PJRT sessions keep
+    /// finding their AOT artifacts; the host backend registers a fresh
+    /// spec under the same id.
+    pub fn model_name(&self) -> String {
+        let short = self.ds.name.trim_end_matches("_like");
+        let layers = self.cfg.layers;
+        let kind = match &self.method {
+            Method::Cluster { .. } => "",
+            Method::Expansion { .. } | Method::GraphSage(_) => "_sage",
+            Method::VrGcn(_) => "_vrgcn",
+        };
+        let hid = match self.cfg.hidden {
+            Some(h) if preset(&self.ds.name).map(|p| p.f_hid) != Some(h) => {
+                format!("_h{h}")
+            }
+            _ => String::new(),
+        };
+        format!("{short}{kind}{hid}_L{layers}")
+    }
+
+    /// Run the session: partition (if clustering), register/resolve the
+    /// model on the backend, train, optionally checkpoint.
+    pub fn run(self) -> Result<SessionResult> {
+        let model = self.model_name();
+        let Session {
+            ds,
+            method,
+            cfg,
+            norm,
+            parts,
+            random_partition,
+            mut backend,
+            observer,
+            save,
+        } = self;
+        if cfg.layers == 0 {
+            return Err(anyhow!("a model needs at least one layer"));
+        }
+        let p = preset(&ds.name);
+        let opts = cfg.to_options(norm);
+
+        // ---- partition + sampler (Cluster-GCN only) -------------------
+        let sampler = if let Method::Cluster { q } = &method {
+            let parts = parts
+                .or(p.map(|p| p.default_partitions))
+                .unwrap_or(10)
+                .clamp(1, ds.n().max(1));
+            let q = (*q).clamp(1, parts);
+            let mut rng = Rng::new(opts.seed ^ 0xBEEF);
+            let part = if random_partition {
+                RandomPartitioner.partition(&ds.graph, parts, &mut rng)
+            } else {
+                MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng)
+            };
+            Some(ClusterSampler::new(parts_to_clusters(&part, parts), q))
+        } else {
+            None
+        };
+
+        // ---- spec registration (host backends synthesize models) ------
+        let f_hid = cfg.hidden.or(p.map(|p| p.f_hid)).unwrap_or(128);
+        let base_bmax = cfg.b_max.or(p.map(|p| p.b_max)).unwrap_or(512);
+        let need = sampler.as_ref().map(|s| s.max_batch_nodes()).unwrap_or(0);
+        let b_max = base_bmax.max(need).next_multiple_of(8);
+        let spec = ModelSpec::gcn(ds.task, cfg.layers, ds.f_in, f_hid, ds.num_classes, b_max);
+        let backend: &mut dyn Backend = match &mut backend {
+            BackendSlot::Owned(b) => b.as_mut(),
+            BackendSlot::Borrowed(b) => &mut **b,
+        };
+        backend.register_model(&model, spec);
+        let spec = backend.model_spec(&model)?;
+
+        // ---- observer + dispatch --------------------------------------
+        let mut null = NullObserver;
+        let obs: &mut dyn Observer = match observer {
+            Some(o) => o,
+            None => &mut null,
+        };
+        let result = match method {
+            Method::Cluster { .. } => {
+                let sampler = sampler.expect("cluster method always builds a sampler");
+                train_observed(backend, ds, &sampler, &model, &opts, obs)?
+            }
+            Method::Expansion { batch } => {
+                train_expansion_observed(backend, ds, &model, batch.max(1), &opts, obs)?
+            }
+            Method::GraphSage(params) => {
+                train_graphsage_observed(backend, ds, &model, &params, &opts, obs)?
+            }
+            Method::VrGcn(params) => {
+                train_vrgcn_observed(backend, ds, &model, &params, &opts, obs)?
+            }
+        };
+
+        if let Some(path) = &save {
+            checkpoint::save(&result.state, &model, path)?;
+            obs.on_event(&Event::CheckpointSaved { path });
+        }
+
+        Ok(SessionResult {
+            model,
+            backend: backend.name().to_string(),
+            spec,
+            result,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, Labels, Task};
+
+    fn mini_ds(name: &str) -> Dataset {
+        Dataset {
+            name: name.into(),
+            task: Task::Multiclass,
+            graph: Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]),
+            f_in: 2,
+            num_classes: 2,
+            features: vec![0.0; 8],
+            labels: Labels::Multiclass(vec![0, 1, 0, 1]),
+            split: vec![Split::Train; 4],
+        }
+    }
+
+    #[test]
+    fn model_names_follow_artifact_scheme() {
+        let ds = mini_ds("cora_like");
+        let s = Session::new(&ds).method(Method::Cluster { q: 1 });
+        assert_eq!(s.model_name(), "cora_L2");
+        let s = Session::new(&ds).method(Method::graphsage(3, 64)).layers(3);
+        assert_eq!(s.model_name(), "cora_sage_L3");
+        let s = Session::new(&ds).method(Method::VrGcn(VrgcnParams::default()));
+        assert_eq!(s.model_name(), "cora_vrgcn_L2");
+        let s = Session::new(&ds).method(Method::Expansion { batch: 8 });
+        assert_eq!(s.model_name(), "cora_sage_L2");
+    }
+
+    #[test]
+    fn hidden_override_lands_in_the_name() {
+        let ds = mini_ds("reddit_like");
+        let cfg = TrainConfig { hidden: Some(512), ..TrainConfig::default() };
+        let s = Session::new(&ds).config(cfg);
+        assert_eq!(s.model_name(), "reddit_h512_L2");
+    }
+
+    #[test]
+    fn unknown_dataset_defaults_are_sane() {
+        let ds = mini_ds("custom_graph");
+        let s = Session::new(&ds);
+        assert_eq!(s.model_name(), "custom_graph_L2");
+        // default method is cluster with q = 1 for presetless datasets
+        assert!(matches!(s.method, Method::Cluster { q: 1 }));
+    }
+}

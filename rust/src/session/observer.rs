@@ -1,0 +1,129 @@
+//! Training-run observation: a callback trait the training loops feed
+//! with metric/checkpoint/early-stop events as they happen, so callers
+//! can stream progress, log, or implement custom stopping logic without
+//! touching the loops themselves.
+#![deny(missing_docs)]
+
+use std::path::Path;
+
+use crate::coordinator::trainer::CurvePoint;
+
+/// One training-run event, borrowed from the loop that emitted it.
+#[derive(Debug)]
+pub enum Event<'a> {
+    /// An epoch finished (every epoch, whether or not it evaluated).
+    EpochEnd {
+        /// 1-based epoch number.
+        epoch: usize,
+        /// cumulative training seconds so far (eval time excluded).
+        train_seconds: f64,
+        /// mean train loss over the epoch's batches.
+        mean_loss: f64,
+    },
+    /// An evaluation ran; `point` is the curve entry just recorded.
+    Eval {
+        /// the convergence-curve point (epoch, time, loss, F1).
+        point: &'a CurvePoint,
+    },
+    /// Early stopping fired; the run ends after this event.
+    EarlyStop {
+        /// epoch at which training stopped.
+        epoch: usize,
+        /// best eval metric seen before stopping.
+        best: f64,
+    },
+    /// A checkpoint was written (emitted by the session, after the
+    /// training loop returns).
+    CheckpointSaved {
+        /// destination file.
+        path: &'a Path,
+    },
+}
+
+/// Receiver of [`Event`]s.  Implementations must be cheap — they run
+/// inline on the training thread.
+pub trait Observer {
+    /// Handle one event.
+    fn on_event(&mut self, event: &Event<'_>);
+}
+
+/// The do-nothing observer (default when none is attached).
+pub struct NullObserver;
+
+impl Observer for NullObserver {
+    fn on_event(&mut self, _event: &Event<'_>) {}
+}
+
+/// Streams eval/early-stop/checkpoint events to stderr — what the CLI
+/// attaches so long runs show live progress.
+#[derive(Default)]
+pub struct StderrObserver;
+
+impl Observer for StderrObserver {
+    fn on_event(&mut self, event: &Event<'_>) {
+        match event {
+            Event::Eval { point } => eprintln!(
+                "epoch {:4}  train_s {:8.2}  loss {:.4}  f1 {:.4}",
+                point.epoch, point.train_seconds, point.train_loss, point.eval_f1
+            ),
+            Event::EarlyStop { epoch, best } => {
+                eprintln!("early stop at epoch {epoch} (best f1 {best:.4})")
+            }
+            Event::CheckpointSaved { path } => {
+                eprintln!("checkpoint saved to {}", path.display())
+            }
+            Event::EpochEnd { .. } => {}
+        }
+    }
+}
+
+/// Records every event kind — useful in tests and notebooks.
+#[derive(Default)]
+pub struct RecordingObserver {
+    /// `(epoch, mean_loss)` per completed epoch.
+    pub epochs: Vec<(usize, f64)>,
+    /// cloned curve points in arrival order.
+    pub evals: Vec<CurvePoint>,
+    /// `(epoch, best)` if early stopping fired.
+    pub early_stop: Option<(usize, f64)>,
+    /// checkpoint paths written.
+    pub checkpoints: Vec<std::path::PathBuf>,
+}
+
+impl Observer for RecordingObserver {
+    fn on_event(&mut self, event: &Event<'_>) {
+        match event {
+            Event::EpochEnd { epoch, mean_loss, .. } => {
+                self.epochs.push((*epoch, *mean_loss))
+            }
+            Event::Eval { point } => self.evals.push((*point).clone()),
+            Event::EarlyStop { epoch, best } => {
+                self.early_stop = Some((*epoch, *best))
+            }
+            Event::CheckpointSaved { path } => {
+                self.checkpoints.push(path.to_path_buf())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_observer_collects() {
+        let mut r = RecordingObserver::default();
+        r.on_event(&Event::EpochEnd { epoch: 1, train_seconds: 0.5, mean_loss: 2.0 });
+        let pt = CurvePoint { epoch: 1, train_seconds: 0.5, train_loss: 2.0, eval_f1: 0.3 };
+        r.on_event(&Event::Eval { point: &pt });
+        r.on_event(&Event::EarlyStop { epoch: 1, best: 0.3 });
+        r.on_event(&Event::CheckpointSaved { path: Path::new("/tmp/x.ckpt") });
+        assert_eq!(r.epochs, vec![(1, 2.0)]);
+        assert_eq!(r.evals.len(), 1);
+        assert_eq!(r.early_stop, Some((1, 0.3)));
+        assert_eq!(r.checkpoints.len(), 1);
+        // the null observer accepts anything silently
+        NullObserver.on_event(&Event::Eval { point: &pt });
+    }
+}

@@ -11,7 +11,7 @@ use cluster_gcn::coordinator::{
 use cluster_gcn::datagen::{build, preset};
 use cluster_gcn::norm::NormConfig;
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
-use cluster_gcn::runtime::{Engine, Tensor};
+use cluster_gcn::runtime::{Engine, ModelSpec, Tensor};
 use cluster_gcn::util::Rng;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -93,7 +93,7 @@ fn forward_artifact_matches_host_oracle() {
     let nodes: Vec<u32> = (0..400u32).collect();
     let batch = asm.assemble(&ds, &nodes);
 
-    let state = TrainState::init(&meta, 5);
+    let state = TrainState::init(&ModelSpec::from(&meta), 5);
     let mut inputs: Vec<Tensor> = state.weights.clone();
     inputs.push(batch.a.clone());
     inputs.push(batch.x.clone());
@@ -227,7 +227,7 @@ fn cluster_forward_matches_host_oracle_per_batch() {
     let mut rng = Rng::new(5);
     let part = MultilevelPartitioner::default().partition(&ds.graph, 50, &mut rng);
     let sampler = ClusterSampler::new(parts_to_clusters(&part, 50), 1);
-    let state = TrainState::init(&meta, 1);
+    let state = TrainState::init(&ModelSpec::from(&meta), 1);
 
     let logits = cluster_gcn::coordinator::batch_eval::cluster_forward(
         &mut engine,

@@ -2,7 +2,7 @@
 //! state invariants) using the in-tree `testing` harness (offline
 //! stand-in for proptest — failures print a reproducible seed+size).
 
-use cluster_gcn::coordinator::inference::{spmm_layer, spmm_layer_naive};
+use cluster_gcn::coordinator::inference::{full_forward, spmm_layer, spmm_layer_naive};
 use cluster_gcn::coordinator::{BatchAssembler, ClusterSampler};
 use cluster_gcn::graph::{
     induced_csr, within_edges, Csr, Dataset, Labels, Split, SubgraphScratch, Task,
@@ -338,6 +338,65 @@ fn prop_pooled_chunks_deterministic_ordering() {
         let again = parallel_chunks(n, threads, |i, r| (i, r.start, r.end));
         if pooled != again {
             return Err(format!("n={n} threads={threads}: non-deterministic"));
+        }
+        Ok(())
+    });
+}
+
+/// `HostBackend::forward` over the full-graph batch is **bit-identical**
+/// to the exact evaluator `full_forward_cached` at every pool width:
+/// the batch renormalization reproduces `normalize_sparse`'s values and
+/// the extracted block runs through the same tiled kernel.  (Reuses the
+/// PR-1 kernel-parity harness.)
+#[test]
+fn prop_host_backend_forward_matches_full_forward() {
+    use cluster_gcn::runtime::{Backend, HostBackend, ModelSpec};
+
+    forall(&cfg(12, 0xF1, 100), "host_forward_parity", |rng, size| {
+        let ds = random_dataset(rng, size.max(8));
+        let n = ds.n();
+        let b_max = n.next_multiple_of(8);
+        let f_hid = 1 + rng.usize_below(24);
+        let layers = 2 + rng.usize_below(2);
+        let spec = ModelSpec::gcn(ds.task, layers, ds.f_in, f_hid, ds.num_classes, b_max);
+        let weights: Vec<Tensor> = spec
+            .weight_shapes
+            .iter()
+            .map(|&(fi, fo)| {
+                Tensor::new(vec![fi, fo], (0..fi * fo).map(|_| rng.f32() - 0.5).collect())
+            })
+            .collect();
+        let norm = match rng.usize_below(3) {
+            0 => NormConfig::PAPER_DEFAULT,
+            1 => NormConfig::ROW,
+            _ => NormConfig::ROW_LAMBDA1,
+        };
+        let mut asm = BatchAssembler::new(n, b_max, norm);
+        let nodes: Vec<u32> = (0..n as u32).collect();
+        let batch = asm.assemble(&ds, &nodes);
+        let expect = full_forward(&ds, &weights, norm, false);
+        for threads in [1usize, 2, 5, pool::default_threads().max(3)] {
+            let mut hb = HostBackend::with_threads(threads);
+            hb.register_model("m", spec.clone());
+            let got = hb.forward("m", &weights, &batch).map_err(|e| e.to_string())?;
+            if got.dims != vec![b_max, ds.num_classes] {
+                return Err(format!("bad dims {:?}", got.dims));
+            }
+            for (i, (&a, &b)) in got.data[..n * ds.num_classes]
+                .iter()
+                .zip(&expect)
+                .enumerate()
+            {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "threads={threads} n={n} layers={layers} idx={i}: \
+                         {a:?} != {b:?} (not bit-identical)"
+                    ));
+                }
+            }
+            if got.data[n * ds.num_classes..].iter().any(|&v| v != 0.0) {
+                return Err("padding rows not zero".into());
+            }
         }
         Ok(())
     });

@@ -1,0 +1,182 @@
+//! End-to-end tests of the unified `Session` API on the artifact-free
+//! `HostBackend`: every training [`Method`] runs through the same entry
+//! point, with **no** `artifacts/` directory and no PJRT involvement —
+//! runnable in any CI box.
+
+use cluster_gcn::baselines::VrgcnParams;
+use cluster_gcn::datagen::features::{gen_features, gen_labels, LabelModel};
+use cluster_gcn::datagen::{generate, SbmSpec};
+use cluster_gcn::graph::{Dataset, Split, Task};
+use cluster_gcn::session::{Method, RecordingObserver, Session, TrainConfig};
+use cluster_gcn::util::Rng;
+
+/// A tiny SBM dataset with strong community→label→feature coupling, so
+/// two Adam epochs visibly reduce the loss.
+fn tiny_sbm(seed: u64) -> Dataset {
+    let n = 240;
+    let communities = 8;
+    let classes = 4;
+    let f_in = 16;
+    let mut rng = Rng::new(seed);
+    let sbm = generate(
+        &SbmSpec {
+            n,
+            communities,
+            avg_deg: 8.0,
+            intra_frac: 0.9,
+            size_skew: 0.5,
+        },
+        &mut rng,
+    );
+    let labels = gen_labels(
+        &LabelModel {
+            task: Task::Multiclass,
+            classes,
+            noise: 0.05,
+            active_per_community: 0,
+        },
+        &sbm.community,
+        communities,
+        &mut rng,
+    );
+    let features = gen_features(
+        &labels,
+        &sbm.community,
+        communities,
+        classes,
+        f_in,
+        0.3,
+        &mut rng,
+    );
+    let split = (0..n)
+        .map(|i| match i % 10 {
+            0..=6 => Split::Train,
+            7..=8 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+    let ds = Dataset {
+        name: "tiny_sbm".into(),
+        task: Task::Multiclass,
+        graph: sbm.graph,
+        f_in,
+        num_classes: classes,
+        features,
+        labels,
+        split,
+    };
+    ds.validate().unwrap();
+    ds
+}
+
+fn two_epoch_cfg() -> TrainConfig {
+    TrainConfig {
+        layers: 2,
+        hidden: Some(32),
+        b_max: Some(256),
+        lr: 0.05,
+        epochs: 2,
+        eval_every: 1,
+        seed: 3,
+        ..TrainConfig::default()
+    }
+}
+
+/// The acceptance loop: 2 epochs of each `Method` through one `Session`
+/// entry point on `HostBackend`, loss decreasing and F1 finite.
+#[test]
+fn every_method_trains_on_host_backend() {
+    let ds = tiny_sbm(42);
+    let methods: Vec<(&str, Method)> = vec![
+        ("cluster", Method::Cluster { q: 1 }),
+        ("expansion", Method::Expansion { batch: 16 }),
+        ("graphsage", Method::graphsage(2, 16)),
+        ("vrgcn", Method::VrGcn(VrgcnParams { r: 2, batch: 32 })),
+    ];
+    for (name, method) in methods {
+        let out = Session::new(&ds)
+            .method(method)
+            .partition(6)
+            .config(two_epoch_cfg())
+            .run()
+            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+        assert_eq!(out.backend, "host", "{name}");
+        let first = out.result.curve.first().unwrap();
+        let last = out.result.curve.last().unwrap();
+        assert_eq!(last.epoch, 2, "{name} should run 2 epochs");
+        assert!(
+            last.train_loss < first.train_loss,
+            "{name}: loss did not decrease ({} -> {})",
+            first.train_loss,
+            last.train_loss
+        );
+        assert!(
+            last.eval_f1.is_finite(),
+            "{name}: micro-F1 not finite ({})",
+            last.eval_f1
+        );
+        assert!(out.result.steps > 0, "{name}: no steps ran");
+    }
+}
+
+/// Observer events stream from the loop: one EpochEnd per epoch, one
+/// Eval per eval, and CheckpointSaved when a save path is set.
+#[test]
+fn session_emits_observer_events_and_checkpoints() {
+    let ds = tiny_sbm(7);
+    let mut obs = RecordingObserver::default();
+    let ckpt = std::env::temp_dir().join(format!(
+        "cgcn_session_{}_ckpt.bin",
+        std::process::id()
+    ));
+    let out = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(two_epoch_cfg())
+        .observer(&mut obs)
+        .save(&ckpt)
+        .run()
+        .unwrap();
+    assert_eq!(obs.epochs.len(), 2);
+    assert_eq!(obs.evals.len(), 2);
+    assert_eq!(obs.checkpoints, vec![ckpt.clone()]);
+    assert!(obs.early_stop.is_none());
+
+    // the checkpoint round-trips and records the session's model id
+    let (state, model) = cluster_gcn::coordinator::checkpoint::load(&ckpt).unwrap();
+    assert_eq!(model, out.model);
+    assert_eq!(state.step, out.result.state.step);
+    std::fs::remove_file(&ckpt).ok();
+}
+
+/// A borrowed backend survives the session, so callers can inspect the
+/// registered model afterwards (and reuse the backend).
+#[test]
+fn borrowed_host_backend_is_reusable() {
+    use cluster_gcn::runtime::{Backend, HostBackend};
+
+    let ds = tiny_sbm(9);
+    let mut hb = HostBackend::new();
+    let out = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(4)
+        .config(two_epoch_cfg())
+        .backend_mut(&mut hb)
+        .run()
+        .unwrap();
+    // the session registered its model on our backend
+    let spec = hb.model_spec(&out.model).unwrap();
+    assert_eq!(spec, out.spec);
+    assert_eq!(spec.f_in, ds.f_in);
+    assert_eq!(spec.f_hid, 32);
+    assert_eq!(spec.classes, ds.num_classes);
+    // and a second session can reuse it
+    let again = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(4)
+        .config(two_epoch_cfg())
+        .backend_mut(&mut hb)
+        .run()
+        .unwrap();
+    assert_eq!(again.model, out.model);
+}
