@@ -7,11 +7,17 @@
 //! 1. **host kernels** — full-graph forward: naive scalar oracle vs the
 //!    tiled fused SpMM·GEMM at 1 thread vs on the persistent pool, plus
 //!    the normalize / spmm / gemm phase split.
-//! 2. **dispatch** — persistent-pool `run_chunks` vs spawn-per-call
+//! 2. **backward** — the host train step on a real cluster batch: the
+//!    pre-engine scalar backward vs the pooled engine end to end, plus
+//!    per-kernel phase timings (gemm_at_b, scatter vs Âᵀ gather,
+//!    gemm_a_bt, adam).  Also writes the cumulative snapshot
+//!    `bench_results/BENCH_backward.json` so the perf trajectory is
+//!    tracked from PR 3 on.
+//! 3. **dispatch** — persistent-pool `run_chunks` vs spawn-per-call
 //!    `scoped_chunks` dispatch overhead.
-//! 3. **assembly** — per-step batch assembly: allocate-per-step vs the
+//! 4. **assembly** — per-step batch assembly: allocate-per-step vs the
 //!    reused zero-allocation `assemble_into` path.
-//! 4. **PJRT loop** — the original per-step phase breakdown (assembly /
+//! 5. **PJRT loop** — the original per-step phase breakdown (assembly /
 //!    literal / execute / sync); skipped with a note when no compiled
 //!    artifacts are available.
 //!
@@ -132,6 +138,177 @@ fn host_kernel_probe(ds: &Dataset, layers: usize, iters: usize) {
             ("speedup_pooled_vs_naive", Json::num(naive.mean / pooled.mean)),
         ]),
     );
+}
+
+/// Backward-phase probe: the pooled backward engine vs the retained
+/// pre-engine scalar backward, end to end and per kernel, over one real
+/// cluster batch.  Emits JSONL rows plus the `BENCH_backward.json`
+/// snapshot the ROADMAP tracks.
+fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: usize) {
+    use cluster_gcn::norm::NormConfig;
+    use cluster_gcn::runtime::backward::{
+        adam_update, adam_update_pooled, gemm_a_bt, gemm_a_bt_pooled, gemm_at_b,
+        gemm_at_b_pooled, scatter_adj_t, AdjT,
+    };
+    use cluster_gcn::runtime::host::host_grads_scalar;
+    use cluster_gcn::runtime::{Backend, HostBackend, ModelSpec};
+
+    let threads = pool::default_threads();
+    let hidden = 128usize;
+    let mut rng = Rng::new(13);
+    let plan = sampler.epoch_plan(&mut rng);
+    let mut nodes = Vec::new();
+    sampler.batch_nodes(&plan[0], &mut nodes);
+    let mut asm = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+    let batch = asm.assemble(ds, &nodes);
+    let n = batch.n_real;
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, hidden, ds.num_classes, b_max);
+    let weights = probe_weights(ds, 2, hidden, 11);
+
+    // ---- end-to-end train step: scalar baseline vs pooled engine ----
+    let mut state_s = TrainState::init(&spec, 1);
+    let step_scalar = bench(1, iters, || {
+        let (_loss, grads) = host_grads_scalar(&spec, &weights, &batch, threads).unwrap();
+        state_s.step += 1;
+        let t = state_s.step as f32;
+        for li in 0..state_s.weights.len() {
+            adam_update(
+                &mut state_s.weights[li].data,
+                &grads[li],
+                &mut state_s.m[li].data,
+                &mut state_s.v[li].data,
+                t,
+                0.01,
+            );
+        }
+    });
+    let mut step_at = |w: usize| {
+        let mut hb = HostBackend::with_threads(w);
+        hb.register_model("m", spec.clone());
+        let mut st = TrainState::init(&spec, 2);
+        hb.train_step("m", &mut st, 0.01, &batch).unwrap(); // warm workspace
+        bench(1, iters, || {
+            hb.train_step("m", &mut st, 0.01, &batch).unwrap();
+        })
+    };
+    let step_pooled1 = step_at(1);
+    let step_pooled = step_at(threads);
+
+    // ---- per-kernel phase timings over layer-0 shapes ----------------
+    let (f, g) = (ds.f_in, hidden);
+    let mut krng = Rng::new(7);
+    let p: Vec<f32> = (0..n * f).map(|_| krng.f32() - 0.5).collect();
+    let dz: Vec<f32> = (0..n * g).map(|_| krng.f32() - 0.5).collect();
+    let w: Vec<f32> = (0..f * g).map(|_| krng.f32() - 0.5).collect();
+    let mut gw = vec![0f32; f * g];
+    let atb_scalar = bench(1, iters, || {
+        gw.fill(0.0);
+        gemm_at_b(&p, &dz, n, f, g, &mut gw);
+    });
+    let atb_pooled = bench(1, iters, || {
+        gemm_at_b_pooled(&p, &dz, n, f, g, threads, &mut gw);
+    });
+    let mut mbuf = vec![0f32; n * f];
+    let abt_scalar = bench(1, iters, || {
+        gemm_a_bt(&dz, &w, n, g, f, &mut mbuf);
+    });
+    let abt_pooled = bench(1, iters, || {
+        gemm_a_bt_pooled(&dz, &w, n, g, f, threads, &mut mbuf);
+    });
+    let blk = &batch.block;
+    let m: Vec<f32> = (0..n * g).map(|_| krng.f32() - 0.5).collect();
+    let mut dh = vec![0f32; n * g];
+    let scatter = bench(1, iters, || {
+        dh.fill(0.0);
+        scatter_adj_t(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop, &m, g, &mut dh);
+    });
+    let mut adj_t = AdjT::new();
+    let gather = bench(1, iters, || {
+        adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+        adj_t.gather_into_pooled(&m, g, threads, &mut dh);
+    });
+    // adam: serial per-layer loop vs one pooled pass over the arena
+    let mut spans = Vec::new();
+    let mut arena = Vec::new();
+    for &(a, b) in &spec.weight_shapes {
+        spans.push((arena.len(), a * b));
+        arena.extend((0..a * b).map(|_| krng.f32() - 0.5));
+    }
+    let mut st_a = TrainState::init(&spec, 3);
+    let adam_scalar = bench(1, iters, || {
+        for (li, &(off, len)) in spans.iter().enumerate() {
+            adam_update(
+                &mut st_a.weights[li].data,
+                &arena[off..off + len],
+                &mut st_a.m[li].data,
+                &mut st_a.v[li].data,
+                2.0,
+                0.01,
+            );
+        }
+    });
+    let mut st_b = TrainState::init(&spec, 3);
+    let adam_pooled = bench(1, iters, || {
+        adam_update_pooled(
+            &mut st_b.weights,
+            &mut st_b.m,
+            &mut st_b.v,
+            &arena,
+            &spans,
+            2.0,
+            0.01,
+            threads,
+        );
+    });
+
+    let ms = |s: f64| s * 1e3;
+    println!("== backward engine: train step on one cluster batch ({n} nodes, hidden {hidden}) ==");
+    println!("step scalar (pre-PR) {:9.2} ms", ms(step_scalar.mean));
+    println!(
+        "step pooled 1t       {:9.2} ms   ({:.2}x vs scalar)",
+        ms(step_pooled1.mean),
+        step_scalar.mean / step_pooled1.mean
+    );
+    println!(
+        "step pooled pool({threads})  {:9.2} ms   ({:.2}x vs scalar)",
+        ms(step_pooled.mean),
+        step_scalar.mean / step_pooled.mean
+    );
+    println!(
+        "phases: gemm_at_b {:.2} -> {:.2} ms | adj_t {:.2} -> {:.2} ms | \
+         gemm_a_bt {:.2} -> {:.2} ms | adam {:.3} -> {:.3} ms",
+        ms(atb_scalar.mean),
+        ms(atb_pooled.mean),
+        ms(scatter.mean),
+        ms(gather.mean),
+        ms(abt_scalar.mean),
+        ms(abt_pooled.mean),
+        ms(adam_scalar.mean),
+        ms(adam_pooled.mean),
+    );
+
+    let row = Json::obj(vec![
+        ("kind", Json::str("host_backward")),
+        ("batch_nodes", Json::num(n as f64)),
+        ("hidden", Json::num(hidden as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("step_scalar_ms", Json::num(ms(step_scalar.mean))),
+        ("step_pooled_1t_ms", Json::num(ms(step_pooled1.mean))),
+        ("step_pooled_ms", Json::num(ms(step_pooled.mean))),
+        ("speedup_pooled_vs_scalar", Json::num(step_scalar.mean / step_pooled.mean)),
+        ("gemm_at_b_scalar_ms", Json::num(ms(atb_scalar.mean))),
+        ("gemm_at_b_pooled_ms", Json::num(ms(atb_pooled.mean))),
+        ("scatter_adj_t_ms", Json::num(ms(scatter.mean))),
+        ("adj_t_gather_ms", Json::num(ms(gather.mean))),
+        ("gemm_a_bt_scalar_ms", Json::num(ms(abt_scalar.mean))),
+        ("gemm_a_bt_pooled_ms", Json::num(ms(abt_pooled.mean))),
+        ("adam_scalar_ms", Json::num(ms(adam_scalar.mean))),
+        ("adam_pooled_ms", Json::num(ms(adam_pooled.mean))),
+    ]);
+    bs::dump_row("perf_probe", row.clone());
+    // one-object snapshot tracked across PRs (overwritten per run)
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write("bench_results/BENCH_backward.json", row.to_string());
 }
 
 fn dispatch_probe() {
@@ -297,6 +474,7 @@ fn main() -> anyhow::Result<()> {
     );
     let sampler =
         ClusterSampler::new(parts_to_clusters(&part, p.default_partitions), p.default_q);
+    backward_probe(&ds, &sampler, p.b_max, iters);
     assembly_probe(&ds, &sampler, p.b_max, steps.max(20));
 
     let short = preset_name.trim_end_matches("_like");

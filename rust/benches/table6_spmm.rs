@@ -221,5 +221,80 @@ fn main() -> anyhow::Result<()> {
     table.print();
     println!("(paper's point: the sparse-op realization dominates the layer cost;");
     println!(" the gap widens with hidden size — compare the 128 vs 512 rows)");
+
+    // ---- backward phases over the same batch: the pre-engine scalar
+    // kernels vs the pooled backward engine (PR 3) --------------------
+    use cluster_gcn::runtime::backward::{
+        gemm_a_bt, gemm_a_bt_pooled, gemm_at_b, gemm_at_b_pooled, scatter_adj_t, AdjT,
+    };
+    println!();
+    println!("== backward phases (same batch, f_in {} -> hidden) ==", ds.f_in);
+    let mut btable = bs::Table::new(&[
+        "hidden",
+        "gemm_at_b ms",
+        "pooled ms",
+        "scatter ms",
+        "adj_t gather ms",
+        "gemm_a_bt ms",
+        "pooled ms",
+    ]);
+    let blk = &batch.block;
+    let n_real = batch.n_real;
+    let f = ds.f_in;
+    for hidden in [128usize, 512] {
+        let mut rng = Rng::new(seed ^ hidden as u64);
+        let p: Vec<f32> = (0..n_real * f).map(|_| rng.f32() - 0.5).collect();
+        let dz: Vec<f32> = (0..n_real * hidden).map(|_| rng.f32() - 0.5).collect();
+        let w: Vec<f32> = (0..f * hidden).map(|_| rng.f32() - 0.5).collect();
+        let mut gw = vec![0f32; f * hidden];
+        let s_atb = bench(2, iters, || {
+            gw.fill(0.0);
+            gemm_at_b(&p, &dz, n_real, f, hidden, &mut gw);
+        });
+        let s_atb_p = bench(2, iters, || {
+            gemm_at_b_pooled(&p, &dz, n_real, f, hidden, pool_threads, &mut gw);
+        });
+        let m: Vec<f32> = (0..n_real * hidden).map(|_| rng.f32() - 0.5).collect();
+        let mut dh = vec![0f32; n_real * hidden];
+        let s_scatter = bench(2, iters, || {
+            dh.fill(0.0);
+            scatter_adj_t(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop, &m, hidden, &mut dh);
+        });
+        let mut adj_t = AdjT::new();
+        let s_gather = bench(2, iters, || {
+            adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+            adj_t.gather_into_pooled(&m, hidden, pool_threads, &mut dh);
+        });
+        let mut mbuf = vec![0f32; n_real * f];
+        let s_abt = bench(2, iters, || {
+            gemm_a_bt(&dz, &w, n_real, hidden, f, &mut mbuf);
+        });
+        let s_abt_p = bench(2, iters, || {
+            gemm_a_bt_pooled(&dz, &w, n_real, hidden, f, pool_threads, &mut mbuf);
+        });
+        btable.row(&[
+            hidden.to_string(),
+            format!("{:.2}", s_atb.mean * 1e3),
+            format!("{:.2}", s_atb_p.mean * 1e3),
+            format!("{:.2}", s_scatter.mean * 1e3),
+            format!("{:.2}", s_gather.mean * 1e3),
+            format!("{:.2}", s_abt.mean * 1e3),
+            format!("{:.2}", s_abt_p.mean * 1e3),
+        ]);
+        bs::dump_row(
+            "table6",
+            Json::obj(vec![
+                ("kind", Json::str("backward")),
+                ("hidden", Json::num(hidden as f64)),
+                ("gemm_at_b_ms", Json::num(s_atb.mean * 1e3)),
+                ("gemm_at_b_pooled_ms", Json::num(s_atb_p.mean * 1e3)),
+                ("scatter_ms", Json::num(s_scatter.mean * 1e3)),
+                ("adj_t_gather_ms", Json::num(s_gather.mean * 1e3)),
+                ("gemm_a_bt_ms", Json::num(s_abt.mean * 1e3)),
+                ("gemm_a_bt_pooled_ms", Json::num(s_abt_p.mean * 1e3)),
+            ]),
+        );
+    }
+    btable.print();
     Ok(())
 }

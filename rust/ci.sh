@@ -18,4 +18,11 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+echo "== backward parity (pool widths 1/2/8 inside each test) + FD gradients, release =="
+cargo test --release -q backward
+cargo test --release -q grads_match
+
+echo "== backward bench smoke (release perf_probe on cora_like) =="
+CGCN_ITERS=1 cargo run --release --example perf_probe -- cora_like 2 20
+
 echo "CI gate passed."

@@ -11,10 +11,64 @@
 //! the assembler.  Steady-state assembly performs no heap allocation.
 //! The owning `assemble`/`assemble_with_edges` wrappers allocate a
 //! fresh `Batch` per call and remain for one-off callers and tests.
+//!
+//! Batches are **sparse-native**: alongside the padded dense tensors
+//! the PJRT executables consume, every assembly also fills a CSR
+//! [`SparseBlock`] view of the same normalized adjacency block.  The
+//! host backend trains and infers directly on that CSR (no
+//! densify→re-sparsify round trip per step); both views value their
+//! entries through `norm::block_edge_val`/`block_diag_val`, so they are
+//! bit-identical by construction.
 
 use crate::graph::{Dataset, Split, SubgraphScratch};
-use crate::norm::{build_dense_block_prezeroed, NormConfig};
+use crate::norm::{
+    block_diag_val, block_edge_val, build_dense_block_prezeroed, NormConfig,
+};
 use crate::runtime::Tensor;
+
+/// CSR view of one batch's normalized adjacency block: off-diagonal
+/// entries in row-major order with ascending column ids, plus the
+/// per-node diagonal (self-loop) value, shaped exactly like the
+/// full-graph `normalize_sparse` output so the tiled kernels apply
+/// unchanged.  Rebuilt in place by every assembly (buffers keep their
+/// allocations); entry values are bit-identical to the dense block's.
+#[derive(Clone, Debug, Default)]
+pub struct SparseBlock {
+    /// Row offsets into `cols`/`vals`, length `n_real + 1`.
+    pub offsets: Vec<usize>,
+    /// Local column ids, ascending within each row.
+    pub cols: Vec<u32>,
+    /// Normalized off-diagonal values aligned with `cols`.
+    pub vals: Vec<f32>,
+    /// Per-node diagonal values (incl. diagonal enhancement), length
+    /// `n_real`.
+    pub self_loop: Vec<f32>,
+}
+
+impl SparseBlock {
+    /// Empty block (filled by the first assembly).
+    pub fn new() -> SparseBlock {
+        SparseBlock::default()
+    }
+
+    /// Number of real rows.
+    pub fn n(&self) -> usize {
+        self.self_loop.len()
+    }
+
+    /// Stored off-diagonal entries.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Host bytes of the CSR buffers.
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.cols.len() * 4
+            + self.vals.len() * 4
+            + self.self_loop.len() * 4
+    }
+}
 
 /// Assembled batch, ready to feed the train/eval executable.
 pub struct Batch {
@@ -34,6 +88,9 @@ pub struct Batch {
     pub within_edges: usize,
     /// labeled nodes in the batch.
     pub n_train: usize,
+    /// CSR view of the same normalized block (host-backend fast path);
+    /// entries are bit-identical to the `n_real × n_real` prefix of `a`.
+    pub block: SparseBlock,
     /// rows of a/x/y (and mask entries) possibly non-zero from the last
     /// assembly into this batch — the only region the next
     /// `assemble_into` needs to clear.  Invariant: callers mutating a
@@ -53,6 +110,7 @@ impl Batch {
             n_real: 0,
             within_edges: 0,
             n_train: 0,
+            block: SparseBlock::new(),
             dirty_rows: 0,
         }
     }
@@ -64,8 +122,13 @@ pub struct BatchAssembler {
     scratch: SubgraphScratch,
     edges: Vec<(u32, u32)>,
     /// degree scratch for `build_dense_block_prezeroed`, reused across
-    /// batches instead of a fresh Vec per call.
+    /// batches instead of a fresh Vec per call.  After each dense build
+    /// it holds the per-node normalization *scales*, which the sparse
+    /// block build reuses.
     deg: Vec<f32>,
+    /// per-row write cursor for the CSR counting sort, reused across
+    /// batches.
+    cursor: Vec<usize>,
 }
 
 impl BatchAssembler {
@@ -76,6 +139,7 @@ impl BatchAssembler {
             scratch: SubgraphScratch::new(n_graph),
             edges: Vec::new(),
             deg: Vec::new(),
+            cursor: Vec::new(),
         }
     }
 
@@ -143,6 +207,9 @@ impl BatchAssembler {
         // previously-dirtied rows, not the full b_max² block.
         batch.a.data[..prev * b].fill(0.0);
         build_dense_block_prezeroed(n_real, edges, b, self.norm, &mut self.deg, &mut batch.a.data);
+        // CSR view of the same block, valued from the scales `deg` now
+        // holds — bit-identical to the dense entries just written.
+        self.build_sparse_block(n_real, edges, &mut batch.block);
 
         for (i, &v) in nodes.iter().enumerate() {
             let v = v as usize;
@@ -175,6 +242,68 @@ impl BatchAssembler {
         batch.n_train = n_train;
         batch.dirty_rows = n_real;
     }
+
+    /// Rebuild `blk` as the CSR view of the current block: counting
+    /// sort of `edges` by row, columns sorted ascending within each
+    /// row, entries valued from the normalization scales left in
+    /// `self.deg` by the dense build.  Self-loop pairs (`u == u`) are
+    /// skipped — the diagonal lives in `self_loop`, like the full-graph
+    /// `normalize_sparse` layout.  All buffers are reused; steady-state
+    /// assembly allocates nothing.
+    ///
+    /// Contract: `edges` contains no duplicate pairs — the dense block
+    /// tolerates duplicates by overwriting, the CSR would double-count
+    /// them and silently diverge from the dense view.  Enforced with a
+    /// release-mode assert after the per-row sort (O(nnz), trivial next
+    /// to the sort itself).
+    fn build_sparse_block(&mut self, n_real: usize, edges: &[(u32, u32)], blk: &mut SparseBlock) {
+        blk.offsets.clear();
+        blk.offsets.resize(n_real + 1, 0);
+        for &(u, v) in edges {
+            if u != v {
+                blk.offsets[u as usize + 1] += 1;
+            }
+        }
+        for i in 0..n_real {
+            blk.offsets[i + 1] += blk.offsets[i];
+        }
+        let nnz = blk.offsets[n_real];
+
+        blk.cols.clear();
+        blk.cols.resize(nnz, 0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&blk.offsets[..n_real]);
+        for &(u, v) in edges {
+            if u != v {
+                let c = &mut self.cursor[u as usize];
+                blk.cols[*c] = v;
+                *c += 1;
+            }
+        }
+        for i in 0..n_real {
+            blk.cols[blk.offsets[i]..blk.offsets[i + 1]].sort_unstable();
+        }
+
+        blk.vals.clear();
+        blk.vals.reserve(nnz);
+        for u in 0..n_real {
+            let su = self.deg[u];
+            let row = &blk.cols[blk.offsets[u]..blk.offsets[u + 1]];
+            assert!(
+                row.windows(2).all(|w| w[0] < w[1]),
+                "duplicate edge in batch row {u}: the CSR block would \
+                 double-count what the dense block overwrites"
+            );
+            for &v in row {
+                blk.vals.push(block_edge_val(self.norm, su, self.deg[v as usize]));
+            }
+        }
+        blk.self_loop.clear();
+        blk.self_loop.reserve(n_real);
+        for i in 0..n_real {
+            blk.self_loop.push(block_diag_val(self.norm, self.deg[i]));
+        }
+    }
 }
 
 impl Batch {
@@ -189,10 +318,11 @@ impl Batch {
         }
     }
 
-    /// Host bytes of the batch tensors (memory accounting, Table 5).
+    /// Host bytes of the batch tensors + the CSR block view (memory
+    /// accounting, Table 5).
     pub fn bytes(&self) -> usize {
         self.a.size_bytes() + self.x.size_bytes() + self.y.size_bytes()
-            + self.mask.size_bytes()
+            + self.mask.size_bytes() + self.block.bytes()
     }
 }
 
@@ -279,15 +409,26 @@ mod tests {
             reused.y.data.as_ptr(),
             reused.mask.data.as_ptr(),
         );
+        let blk_caps = (
+            reused.block.offsets.capacity(),
+            reused.block.cols.capacity(),
+            reused.block.vals.capacity(),
+            reused.block.self_loop.capacity(),
+        );
         let nodes_cap = reused.nodes.capacity();
         asm.assemble_into(&ds, &small, &mut reused);
 
-        // (a) no reallocation of any batch tensor or the node list
+        // (a) no reallocation of any batch tensor, the node list, or
+        // the sparse-block buffers (the smaller batch fits them all)
         assert_eq!(ptrs.0, reused.a.data.as_ptr());
         assert_eq!(ptrs.1, reused.x.data.as_ptr());
         assert_eq!(ptrs.2, reused.y.data.as_ptr());
         assert_eq!(ptrs.3, reused.mask.data.as_ptr());
         assert_eq!(nodes_cap, reused.nodes.capacity());
+        assert_eq!(blk_caps.0, reused.block.offsets.capacity());
+        assert_eq!(blk_caps.1, reused.block.cols.capacity());
+        assert_eq!(blk_caps.2, reused.block.vals.capacity());
+        assert_eq!(blk_caps.3, reused.block.self_loop.capacity());
 
         // (b) bit-identical to a fresh assembly of the same nodes
         let fresh = asm.assemble(&ds, &small);
@@ -299,6 +440,54 @@ mod tests {
         assert_eq!(reused.n_real, fresh.n_real);
         assert_eq!(reused.n_train, fresh.n_train);
         assert_eq!(reused.within_edges, fresh.within_edges);
+        assert_eq!(reused.block.offsets, fresh.block.offsets);
+        assert_eq!(reused.block.cols, fresh.block.cols);
+        assert_eq!(reused.block.vals, fresh.block.vals);
+        assert_eq!(reused.block.self_loop, fresh.block.self_loop);
+    }
+
+    /// The sparse-native contract: the CSR block is exactly the
+    /// `n_real × n_real` prefix of the dense tensor — same structure
+    /// (every non-zero off-diagonal entry, ascending columns) and
+    /// bit-identical values, across norm configs.
+    #[test]
+    fn sparse_block_matches_dense_prefix_bitwise() {
+        let ds = small_ds();
+        for norm in [NormConfig::PAPER_DEFAULT, NormConfig::ROW, NormConfig::ROW_LAMBDA1] {
+            let mut asm = BatchAssembler::new(ds.n(), 256, norm);
+            let nodes: Vec<u32> = (40..240u32).collect();
+            let b = asm.assemble(&ds, &nodes);
+            let n = b.n_real;
+            let blk = &b.block;
+            assert_eq!(blk.n(), n);
+            assert_eq!(blk.offsets.len(), n + 1);
+            let bm = 256;
+            let mut seen = 0usize;
+            for u in 0..n {
+                let row = &blk.cols[blk.offsets[u]..blk.offsets[u + 1]];
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "row {u} not ascending");
+                for (idx, &v) in row.iter().enumerate() {
+                    let dense = b.a.data[u * bm + v as usize];
+                    let sparse = blk.vals[blk.offsets[u] + idx];
+                    assert_eq!(sparse.to_bits(), dense.to_bits(), "({u},{v})");
+                    assert_ne!(v as usize, u, "diagonal stored as edge");
+                    seen += 1;
+                }
+                assert_eq!(
+                    blk.self_loop[u].to_bits(),
+                    b.a.data[u * bm + u].to_bits(),
+                    "diag {u}"
+                );
+                // no dense non-zero is missing from the CSR row
+                let dense_nnz = b.a.data[u * bm..u * bm + n]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(v, &av)| v != u && av != 0.0)
+                    .count();
+                assert_eq!(dense_nnz, row.len(), "row {u} structure");
+            }
+            assert_eq!(seen, blk.nnz());
+        }
     }
 
     /// Two batches double-buffered through one assembler must not see

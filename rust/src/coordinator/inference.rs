@@ -24,7 +24,14 @@
 //! The k-accumulation order is ascending for every output element, so
 //! the tiled kernel is bit-identical to the scalar oracle
 //! [`spmm_layer_naive`] at every thread count — the parity property
-//! tests rely on this.
+//! tests rely on this.  Inner loops run through the `[f32; 8]`-chunked
+//! `util::simd` helpers (element-independent, so still bit-identical).
+//!
+//! Every kernel also has a `*_raw_into` variant over raw
+//! `offsets`/`cols` slices, so batch blocks
+//! (`coordinator::batch::SparseBlock`) and full graphs ([`Csr`]) run
+//! through the same code path — the host backend and the backward
+//! engine (`runtime::backward`) build on these.
 
 use std::cell::RefCell;
 
@@ -32,6 +39,7 @@ use crate::graph::{Csr, Dataset};
 use crate::norm::{NormCache, NormConfig};
 use crate::runtime::Tensor;
 use crate::util::pool::{self, default_threads};
+use crate::util::simd::axpy;
 
 /// Rows of Â propagated and multiplied per tile.
 pub const ROW_BLOCK: usize = 64;
@@ -81,10 +89,31 @@ pub fn spmm_layer_into(
     threads: usize,
     out: &mut [f32],
 ) {
-    let n = g.n();
+    spmm_layer_raw_into(&g.offsets, &g.cols, vals, self_loop, x, f, w, relu, threads, out);
+}
+
+/// [`spmm_layer_into`] over a raw CSR view (`offsets`/`cols` slices
+/// instead of a [`Csr`]) — the entry the host backend uses to run batch
+/// blocks (`coordinator::batch::SparseBlock`) through the exact same
+/// kernel as full-graph evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_layer_raw_into(
+    offsets: &[usize],
+    cols: &[u32],
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &Tensor,
+    relu: bool,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = offsets.len() - 1;
     let (wf, wg) = (w.dims[0], w.dims[1]);
     assert_eq!(wf, f, "weight in-dim mismatch");
     assert_eq!(out.len(), n * wg, "output buffer mismatch");
+    debug_assert_eq!(self_loop.len(), n);
     debug_assert_eq!(x.len(), n * f);
 
     pool::global().run_rows_with(n, threads.max(1), wg, out, |_ci, rows, out_rows| {
@@ -93,7 +122,10 @@ pub fn spmm_layer_into(
             if prop.len() < ROW_BLOCK * f {
                 prop.resize(ROW_BLOCK * f, 0.0);
             }
-            spmm_block(g, vals, self_loop, x, f, &w.data, wg, relu, rows, out_rows, &mut prop);
+            spmm_block(
+                offsets, cols, vals, self_loop, x, f, &w.data, wg, relu, rows, out_rows,
+                &mut prop,
+            );
         });
     });
 }
@@ -102,7 +134,8 @@ pub fn spmm_layer_into(
 /// then run the cache-tiled GEMM for that block, repeat.
 #[allow(clippy::too_many_arguments)]
 fn spmm_block(
-    g: &Csr,
+    offsets: &[usize],
+    cols: &[u32],
     vals: &[f32],
     self_loop: &[f32],
     x: &[f32],
@@ -128,13 +161,11 @@ fn spmm_block(
             for j in 0..f {
                 pr[j] = sl * xv[j];
             }
-            let off = g.offsets[v];
-            for (idx, &u) in g.neighbors(v).iter().enumerate() {
+            let off = offsets[v];
+            for (idx, &u) in cols[off..offsets[v + 1]].iter().enumerate() {
                 let a = vals[off + idx];
                 let xu = &x[u as usize * f..(u as usize + 1) * f];
-                for j in 0..f {
-                    pr[j] += a * xu[j];
-                }
+                axpy(pr, xu, a);
             }
         }
 
@@ -157,10 +188,7 @@ fn spmm_block(
                             continue;
                         }
                         let wo = (kp + k) * wg + ct;
-                        let wr = &w[wo..wo + cn];
-                        for c in 0..cn {
-                            or[c] += p * wr[c];
-                        }
+                        axpy(or, &w[wo..wo + cn], p);
                     }
                 }
                 ct += cn;
@@ -242,8 +270,25 @@ pub fn propagate_into(
     threads: usize,
     out: &mut [f32],
 ) {
-    let n = g.n();
+    propagate_raw_into(&g.offsets, &g.cols, vals, self_loop, x, f, threads, out);
+}
+
+/// [`propagate_into`] over a raw CSR view — shared with the host
+/// backward engine, which stores the per-layer propagations `P_l`.
+#[allow(clippy::too_many_arguments)]
+pub fn propagate_raw_into(
+    offsets: &[usize],
+    cols: &[u32],
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = offsets.len() - 1;
     assert_eq!(out.len(), n * f, "propagate output mismatch");
+    debug_assert_eq!(self_loop.len(), n);
     pool::global().run_rows_with(n, threads.max(1), f, out, |_ci, rows, out_rows| {
         for (ri, v) in rows.clone().enumerate() {
             let pr = &mut out_rows[ri * f..(ri + 1) * f];
@@ -252,13 +297,11 @@ pub fn propagate_into(
             for j in 0..f {
                 pr[j] = sl * xv[j];
             }
-            let off = g.offsets[v];
-            for (idx, &u) in g.neighbors(v).iter().enumerate() {
+            let off = offsets[v];
+            for (idx, &u) in cols[off..offsets[v + 1]].iter().enumerate() {
                 let a = vals[off + idx];
                 let xu = &x[u as usize * f..(u as usize + 1) * f];
-                for j in 0..f {
-                    pr[j] += a * xu[j];
-                }
+                axpy(pr, xu, a);
             }
         }
     });

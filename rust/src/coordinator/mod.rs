@@ -14,7 +14,7 @@ pub mod sampler;
 pub mod schedule;
 pub mod trainer;
 
-pub use batch::{Batch, BatchAssembler};
+pub use batch::{Batch, BatchAssembler, SparseBlock};
 pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
 pub use trainer::{

@@ -13,7 +13,11 @@
 //! assembled on a helper thread while the backend executes batch `i` —
 //! and all full-graph evaluations share one [`NormCache`], so
 //! `normalize_sparse` runs at most once per (dataset, config) per
-//! training run.
+//! training run.  Every assembled batch is sparse-native: it carries a
+//! CSR `SparseBlock` view of its normalized block alongside the dense
+//! tensors, which the host backend's pooled backward engine
+//! (`runtime::backward`) consumes directly — the PJRT engine keeps the
+//! dense view.
 
 use anyhow::{anyhow, Result};
 

@@ -83,6 +83,57 @@ pub fn build_dense_block(
     build_dense_block_prezeroed(n_local, edges, b_max, cfg, &mut deg, out);
 }
 
+/// Normalized off-diagonal entry `Â[u,v]` from the per-node scales
+/// (`su`/`sv` = 1/√d̃ for `Sym`, 1/d̃ for `RowNorm`).  Single source of
+/// truth for both block realizations: the dense builder below and the
+/// CSR `SparseBlock` the batch assembler carries compute every entry
+/// through this helper, so the two views are **bit-identical** (the
+/// host backend's parity contracts rely on it).
+#[inline]
+pub fn block_edge_val(cfg: NormConfig, su: f32, sv: f32) -> f32 {
+    match cfg.kind {
+        NormKind::Sym => su * sv,
+        NormKind::RowNorm => su,
+    }
+}
+
+/// Diagonal (self-loop) entry for node `i` with scale `si`, including
+/// the diagonal enhancement.  See [`block_edge_val`] for the bitwise
+/// dense/sparse contract.
+#[inline]
+pub fn block_diag_val(cfg: NormConfig, si: f32) -> f32 {
+    let d = match cfg.kind {
+        NormKind::Sym => si * si,
+        NormKind::RowNorm => si,
+    };
+    match cfg.enhance {
+        DiagEnhance::None => d,
+        DiagEnhance::AddIdentity => d + 1.0,
+        DiagEnhance::AddLambdaDiag(lambda) => d * (1.0 + lambda),
+    }
+}
+
+/// Fold raw degrees (incl. self loop) into per-node normalization
+/// scales in place: 1/√d̃ for `Sym`, 1/d̃ for `RowNorm`.  `deg` is
+/// caller-owned scratch; the batch assembler reuses the folded scales
+/// to value its sparse block without recomputing them.
+pub fn fold_degree_scales(
+    n_local: usize,
+    edges: &[(u32, u32)],
+    cfg: NormConfig,
+    deg: &mut Vec<f32>,
+) {
+    deg.clear();
+    deg.resize(n_local, 1.0);
+    for &(u, _) in edges {
+        deg[u as usize] += 1.0;
+    }
+    match cfg.kind {
+        NormKind::Sym => deg.iter_mut().for_each(|d| *d = 1.0 / d.sqrt()),
+        NormKind::RowNorm => deg.iter_mut().for_each(|d| *d = 1.0 / *d),
+    }
+}
+
 /// Allocation-free core of [`build_dense_block`]: writes only the
 /// normalized entries (edges + diagonal), assuming rows `0..n_local` of
 /// `out` are already zero.  `deg` is caller-owned scratch reused across
@@ -99,49 +150,16 @@ pub fn build_dense_block_prezeroed(
     assert!(n_local <= b_max);
     assert_eq!(out.len(), b_max * b_max);
 
-    // degrees including self loop, then folded in place into the
+    // degrees including self loop, folded in place into the
     // normalization scale (no second scratch vector)
-    deg.clear();
-    deg.resize(n_local, 1.0);
-    for &(u, _) in edges {
-        deg[u as usize] += 1.0;
-    }
-    match cfg.kind {
-        NormKind::Sym => deg.iter_mut().for_each(|d| *d = 1.0 / d.sqrt()),
-        NormKind::RowNorm => deg.iter_mut().for_each(|d| *d = 1.0 / *d),
-    }
+    fold_degree_scales(n_local, edges, cfg, deg);
 
-    match cfg.kind {
-        NormKind::Sym => {
-            for &(u, v) in edges {
-                out[u as usize * b_max + v as usize] = deg[u as usize] * deg[v as usize];
-            }
-            for i in 0..n_local {
-                out[i * b_max + i] = deg[i] * deg[i];
-            }
-        }
-        NormKind::RowNorm => {
-            for &(u, v) in edges {
-                out[u as usize * b_max + v as usize] = deg[u as usize];
-            }
-            for i in 0..n_local {
-                out[i * b_max + i] = deg[i];
-            }
-        }
+    for &(u, v) in edges {
+        out[u as usize * b_max + v as usize] =
+            block_edge_val(cfg, deg[u as usize], deg[v as usize]);
     }
-
-    match cfg.enhance {
-        DiagEnhance::None => {}
-        DiagEnhance::AddIdentity => {
-            for i in 0..n_local {
-                out[i * b_max + i] += 1.0;
-            }
-        }
-        DiagEnhance::AddLambdaDiag(lambda) => {
-            for i in 0..n_local {
-                out[i * b_max + i] *= 1.0 + lambda;
-            }
-        }
+    for i in 0..n_local {
+        out[i * b_max + i] = block_diag_val(cfg, deg[i]);
     }
 }
 

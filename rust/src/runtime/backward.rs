@@ -1,0 +1,864 @@
+//! The host backward-pass engine: pooled, cache-tiled gradient kernels
+//! — a first-class peer of the forward SpMM·GEMM engine in
+//! `coordinator::inference`.
+//!
+//! One GCN train step needs four gradient-side contractions (see
+//! `runtime::host` for the chain rule):
+//!
+//! ```text
+//!   Z  = P · W            forward GEMM          -> gemm_pooled
+//!   dW = P^T · dZ         Aᵀ·B accumulation     -> gemm_at_b_pooled
+//!   M  = dZ · W^T         B·Aᵀ projection       -> gemm_a_bt_pooled
+//!   dH = Â^T · M          transpose SpMM        -> AdjT::gather_into_pooled
+//! ```
+//!
+//! plus the Adam update, batched across layers into one pooled pass
+//! over a flat gradient arena ([`adam_update_pooled`]).
+//!
+//! Engineering rules (the same ones as the forward kernel, PERF.md):
+//!
+//! - Everything dispatches over the persistent `util::pool`; the chunk
+//!   layout is a pure function of the problem size and the requested
+//!   chunk count, never of worker scheduling, so results are
+//!   deterministic and identical at every pool width.
+//! - Inner loops run through the `[f32; 8]`-chunked `util::simd`
+//!   helpers so the compiler autovectorizes them.
+//! - The scalar single-thread originals are **kept** ([`gemm`],
+//!   [`gemm_at_b`], [`gemm_a_bt`], [`scatter_adj_t`], [`adam_update`])
+//!   as property-test oracles and as the pre-engine baseline for the
+//!   backward benches.
+//!
+//! Parity contracts (pinned by unit + property tests):
+//!
+//! - [`gemm_pooled`], [`gemm_at_b_pooled`], [`AdjT::gather_into_pooled`]
+//!   and [`adam_update_pooled`] accumulate each output element in the
+//!   exact order of their scalar oracle, so they are **bit-identical**
+//!   to it at every chunk count.
+//! - [`gemm_a_bt_pooled`] reduces dot products through `simd::dot`'s
+//!   8-lane accumulators — deterministic, but reassociated, so its
+//!   parity bound is a small tolerance rather than bit equality.
+//!
+//! The transpose structure the dH step needs is materialized once per
+//! batch ([`AdjT::build`]) into reused buffers: `Â` is stored row-major
+//! (a *scatter* along Âᵀ), and a parallel scatter would race on output
+//! rows; the counting-sort transpose turns it into a race-free row
+//! gather whose per-row accumulation order matches the scalar scatter
+//! oracle exactly.
+#![deny(missing_docs)]
+
+use crate::coordinator::inference::{COL_TILE, K_PANEL, ROW_BLOCK};
+use crate::runtime::exec::Tensor;
+use crate::util::pool;
+use crate::util::simd::{axpy, dot};
+
+/// Adam β1 (first-moment decay), matching `python/compile/model.py`.
+pub const ADAM_B1: f32 = 0.9;
+/// Adam β2 (second-moment decay).
+pub const ADAM_B2: f32 = 0.999;
+/// Adam ε.
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Rows of the `gw` accumulator processed per cache block in
+/// [`gemm_at_b_pooled`] (reuses the forward tile geometry: the active
+/// `K_BLOCK × g` gradient panel stays cache-resident while every batch
+/// row streams through it).
+pub const K_BLOCK: usize = 64;
+
+// ---------------------------------------------------------------------------
+// scalar oracles (the pre-engine kernels, kept verbatim)
+// ---------------------------------------------------------------------------
+
+/// `z[n,g] = p[n,f] · w[f,g]` (dense, zero-skipping on `p`).  Scalar
+/// oracle for [`gemm_pooled`].
+pub fn gemm(p: &[f32], n: usize, f: usize, w: &[f32], g: usize, z: &mut [f32]) {
+    debug_assert_eq!(p.len(), n * f);
+    debug_assert_eq!(w.len(), f * g);
+    debug_assert_eq!(z.len(), n * g);
+    z.fill(0.0);
+    for i in 0..n {
+        let pr = &p[i * f..(i + 1) * f];
+        let zr = &mut z[i * g..(i + 1) * g];
+        for (k, &pv) in pr.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * g..(k + 1) * g];
+            for (zv, &wv) in zr.iter_mut().zip(wr) {
+                *zv += pv * wv;
+            }
+        }
+    }
+}
+
+/// `gw[f,g] += p[n,f]^T · dz[n,g]` (caller zeroes `gw`).  Scalar oracle
+/// for [`gemm_at_b_pooled`].
+pub fn gemm_at_b(p: &[f32], dz: &[f32], n: usize, f: usize, g: usize, gw: &mut [f32]) {
+    debug_assert_eq!(gw.len(), f * g);
+    for i in 0..n {
+        let pr = &p[i * f..(i + 1) * f];
+        let dr = &dz[i * g..(i + 1) * g];
+        for (k, &pv) in pr.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let gr = &mut gw[k * g..(k + 1) * g];
+            for (gv, &dv) in gr.iter_mut().zip(dr) {
+                *gv += pv * dv;
+            }
+        }
+    }
+}
+
+/// `m[n,f] = dz[n,g] · w[f,g]^T`.  Scalar oracle for
+/// [`gemm_a_bt_pooled`].
+pub fn gemm_a_bt(dz: &[f32], w: &[f32], n: usize, g: usize, f: usize, m: &mut [f32]) {
+    debug_assert_eq!(m.len(), n * f);
+    for i in 0..n {
+        let dr = &dz[i * g..(i + 1) * g];
+        let mr = &mut m[i * f..(i + 1) * f];
+        for (k, mv) in mr.iter_mut().enumerate() {
+            let wr = &w[k * g..(k + 1) * g];
+            let mut acc = 0f32;
+            for (&dv, &wv) in dr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *mv = acc;
+        }
+    }
+}
+
+/// `out[n,f] += Â^T · m[n,f]` over a sparse block in the
+/// `SparseBlock`/`normalize_sparse` layout (off-diagonal CSR + separate
+/// per-node self-loop); caller zeroes `out`.  Scatter each stored entry
+/// `Â[u,v]` into row `v`, with the self-loop interleaved at `u == v`.
+/// Scalar oracle for the [`AdjT`] transpose gather.
+pub fn scatter_adj_t(
+    offsets: &[usize],
+    cols: &[u32],
+    vals: &[f32],
+    self_loop: &[f32],
+    m: &[f32],
+    f: usize,
+    out: &mut [f32],
+) {
+    let n = offsets.len() - 1;
+    debug_assert_eq!(self_loop.len(), n);
+    debug_assert_eq!(m.len(), n * f);
+    debug_assert_eq!(out.len(), n * f);
+    for u in 0..n {
+        let sl = self_loop[u];
+        for j in 0..f {
+            out[u * f + j] += sl * m[u * f + j];
+        }
+        let off = offsets[u];
+        for (idx, &v) in cols[off..offsets[u + 1]].iter().enumerate() {
+            let a = vals[off + idx];
+            let v = v as usize;
+            for j in 0..f {
+                out[v * f + j] += a * m[u * f + j];
+            }
+        }
+    }
+}
+
+/// One bias-corrected Adam update over a flat parameter group.  Scalar
+/// oracle for [`adam_update_pooled`] (which is bit-identical — the
+/// update is element-wise).
+pub fn adam_update(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], t: f32, lr: f32) {
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    adam_slice(w, g, m, v, bc1, bc2, lr);
+}
+
+/// The element-wise Adam core shared by the scalar and pooled paths —
+/// one definition, so the two can never drift numerically.
+#[inline]
+fn adam_slice(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], bc1: f32, bc2: f32, lr: f32) {
+    for i in 0..w.len() {
+        let gi = g[i];
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        w[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pooled, tiled kernels
+// ---------------------------------------------------------------------------
+
+/// Pooled, cache-tiled `z[n,g] = p[n,f] · w[f,g]` (fully overwrites
+/// `z`).  Rows fan out over the pool; within a chunk the GEMM runs in
+/// the forward kernel's `ROW_BLOCK × K_PANEL × COL_TILE` tiling.  The
+/// k-accumulation is ascending for every output element, so the result
+/// is **bit-identical** to [`gemm`] at every chunk count.
+pub fn gemm_pooled(
+    p: &[f32],
+    n: usize,
+    f: usize,
+    w: &[f32],
+    g: usize,
+    threads: usize,
+    z: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), n * f);
+    debug_assert_eq!(w.len(), f * g);
+    assert_eq!(z.len(), n * g, "gemm output mismatch");
+    pool::global().run_rows_with(n, threads.max(1), g, z, |_ci, rows, out_rows| {
+        let mut rb = rows.start;
+        while rb < rows.end {
+            let nb = ROW_BLOCK.min(rows.end - rb);
+            let ob = (rb - rows.start) * g;
+            let out_block = &mut out_rows[ob..ob + nb * g];
+            out_block.fill(0.0);
+            let mut kp = 0;
+            while kp < f {
+                let kn = K_PANEL.min(f - kp);
+                let mut ct = 0;
+                while ct < g {
+                    let cn = COL_TILE.min(g - ct);
+                    for ri in 0..nb {
+                        let row = (rb + ri) * f;
+                        let pr = &p[row + kp..row + kp + kn];
+                        let or = &mut out_block[ri * g + ct..ri * g + ct + cn];
+                        for (k, &pv) in pr.iter().enumerate() {
+                            if pv == 0.0 {
+                                continue;
+                            }
+                            let wo = (kp + k) * g + ct;
+                            axpy(or, &w[wo..wo + cn], pv);
+                        }
+                    }
+                    ct += cn;
+                }
+                kp += kn;
+            }
+            rb += nb;
+        }
+    });
+}
+
+/// Pooled, tiled `gw[f,g] = p[n,f]^T · dz[n,g]` (fully overwrites
+/// `gw`).  The *output* rows (the `f` dimension) fan out over the pool
+/// — every chunk owns a disjoint slice of the gradient, so there is no
+/// reduction step and no per-worker partial buffer; inside a chunk the
+/// accumulator is walked in `K_BLOCK`-row panels that stay
+/// cache-resident while all `n` batch rows stream through.  Per
+/// element the accumulation runs over `i` ascending with the same
+/// zero-skip as the oracle, so the result is **bit-identical** to
+/// [`gemm_at_b`] at every chunk count.
+pub fn gemm_at_b_pooled(
+    p: &[f32],
+    dz: &[f32],
+    n: usize,
+    f: usize,
+    g: usize,
+    threads: usize,
+    gw: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), n * f);
+    debug_assert_eq!(dz.len(), n * g);
+    assert_eq!(gw.len(), f * g, "gradient buffer mismatch");
+    if n == 0 {
+        gw.fill(0.0);
+        return;
+    }
+    pool::global().run_rows_with(f, threads.max(1), g, gw, |_ci, krange, gw_rows| {
+        gw_rows.fill(0.0);
+        let mut kb = krange.start;
+        while kb < krange.end {
+            let kn = K_BLOCK.min(krange.end - kb);
+            for i in 0..n {
+                let pr = &p[i * f + kb..i * f + kb + kn];
+                let dzr = &dz[i * g..(i + 1) * g];
+                for (k, &pv) in pr.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let go = (kb - krange.start + k) * g;
+                    axpy(&mut gw_rows[go..go + g], dzr, pv);
+                }
+            }
+            kb += kn;
+        }
+    });
+}
+
+/// Pooled `m[n,f] = dz[n,g] · w[f,g]^T` (fully overwrites `m`).  Rows
+/// fan out over the pool; each output element is a [`dot`] over
+/// contiguous `dz`/`w` rows.  Deterministic at every chunk count, but
+/// the 8-lane reduction reassociates the sum — parity vs [`gemm_a_bt`]
+/// is tolerance-based, not bitwise.
+pub fn gemm_a_bt_pooled(
+    dz: &[f32],
+    w: &[f32],
+    n: usize,
+    g: usize,
+    f: usize,
+    threads: usize,
+    m: &mut [f32],
+) {
+    debug_assert_eq!(dz.len(), n * g);
+    debug_assert_eq!(w.len(), f * g);
+    assert_eq!(m.len(), n * f, "projection buffer mismatch");
+    pool::global().run_rows_with(n, threads.max(1), f, m, |_ci, rows, out_rows| {
+        for (ri, i) in rows.clone().enumerate() {
+            let dr = &dz[i * g..(i + 1) * g];
+            let mr = &mut out_rows[ri * f..(ri + 1) * f];
+            for (k, mv) in mr.iter_mut().enumerate() {
+                *mv = dot(dr, &w[k * g..(k + 1) * g]);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Âᵀ as a reusable gather structure
+// ---------------------------------------------------------------------------
+
+/// `Âᵀ` of one batch block in CSR form, rebuilt per batch into reused
+/// buffers (zero steady-state allocation).  Row `v` lists the source
+/// rows `u` (ascending) whose entry `Â[u,v]` contributes to `dH[v]`,
+/// turning the backward transpose-SpMM into a race-free pooled row
+/// gather.  The ascending-`u` order (with the diagonal interleaved at
+/// `u == v`) reproduces the scalar [`scatter_adj_t`] accumulation order
+/// exactly, so the gather is **bit-identical** to it.
+#[derive(Default)]
+pub struct AdjT {
+    offsets: Vec<usize>,
+    src: Vec<u32>,
+    vals: Vec<f32>,
+    cursor: Vec<usize>,
+}
+
+impl AdjT {
+    /// Empty structure; sized by the first [`AdjT::build`].
+    pub fn new() -> AdjT {
+        AdjT::default()
+    }
+
+    /// Rows of the built transpose.
+    pub fn n(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Build from a block in the `SparseBlock` layout (off-diagonal CSR
+    /// + separate per-node self-loop); the diagonal is injected as a
+    /// regular entry at its sorted position.
+    pub fn build(
+        &mut self,
+        offsets: &[usize],
+        cols: &[u32],
+        vals: &[f32],
+        self_loop: &[f32],
+    ) {
+        self.build_core(offsets, cols, vals, Some(self_loop));
+    }
+
+    /// Build from a CSR whose entries already carry the diagonal inline
+    /// (the VR-GCN `A_in` view).
+    pub fn build_inline(&mut self, offsets: &[usize], cols: &[u32], vals: &[f32]) {
+        self.build_core(offsets, cols, vals, None);
+    }
+
+    fn build_core(
+        &mut self,
+        offsets: &[usize],
+        cols: &[u32],
+        vals: &[f32],
+        self_loop: Option<&[f32]>,
+    ) {
+        let n = offsets.len() - 1;
+        let diag = usize::from(self_loop.is_some());
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        for i in 0..n {
+            self.offsets[i + 1] = diag;
+        }
+        for &v in &cols[..offsets[n]] {
+            self.offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            self.offsets[i + 1] += self.offsets[i];
+        }
+        let nnz = self.offsets[n];
+        self.src.clear();
+        self.src.resize(nnz, 0);
+        self.vals.clear();
+        self.vals.resize(nnz, 0.0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.offsets[..n]);
+        for u in 0..n {
+            if let Some(sl) = self_loop {
+                let c = self.cursor[u];
+                self.src[c] = u as u32;
+                self.vals[c] = sl[u];
+                self.cursor[u] += 1;
+            }
+            let off = offsets[u];
+            for (idx, &v) in cols[off..offsets[u + 1]].iter().enumerate() {
+                let c = &mut self.cursor[v as usize];
+                self.src[*c] = u as u32;
+                self.vals[*c] = vals[off + idx];
+                *c += 1;
+            }
+        }
+    }
+
+    /// Pooled row gather `out[v,:] = Σ_u Âᵀ[v,u] · m[u,:]` (fully
+    /// overwrites `out`).  Bit-identical to the scalar scatter oracle
+    /// at every chunk count (see the type docs).
+    pub fn gather_into_pooled(&self, m: &[f32], f: usize, threads: usize, out: &mut [f32]) {
+        let n = self.n();
+        debug_assert_eq!(m.len(), n * f);
+        assert_eq!(out.len(), n * f, "gather output mismatch");
+        pool::global().run_rows_with(n, threads.max(1), f, out, |_ci, rows, out_rows| {
+            for (ri, v) in rows.clone().enumerate() {
+                let or = &mut out_rows[ri * f..(ri + 1) * f];
+                or.fill(0.0);
+                let off = self.offsets[v];
+                for (idx, &u) in self.src[off..self.offsets[v + 1]].iter().enumerate() {
+                    let a = self.vals[off + idx];
+                    let u = u as usize;
+                    axpy(or, &m[u * f..(u + 1) * f], a);
+                }
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched Adam over a flat gradient arena
+// ---------------------------------------------------------------------------
+
+/// Per-layer raw parameter pointers smuggled into the pooled Adam
+/// closure.  Safety: chunks of the flat index space are disjoint, so no
+/// element is touched by two workers; the pointee tensors outlive the
+/// (blocking) dispatch.
+struct ParamPtrs(Vec<(usize, usize, *mut f32, *mut f32, *mut f32)>);
+unsafe impl Send for ParamPtrs {}
+unsafe impl Sync for ParamPtrs {}
+
+/// One bias-corrected Adam step over **all** layers at once: the flat
+/// gradient arena `grads` (layer `li` occupying `spans[li] = (offset,
+/// len)`) drives a single pooled pass over the concatenated parameter
+/// space, instead of one serial loop per layer.  Element-wise
+/// **bit-identical** to per-layer [`adam_update`] at every chunk count
+/// (both run the same private `adam_slice` core).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_pooled(
+    weights: &mut [Tensor],
+    m: &mut [Tensor],
+    v: &mut [Tensor],
+    grads: &[f32],
+    spans: &[(usize, usize)],
+    t: f32,
+    lr: f32,
+    threads: usize,
+) {
+    assert_eq!(weights.len(), spans.len(), "span/layer mismatch");
+    assert_eq!(m.len(), spans.len());
+    assert_eq!(v.len(), spans.len());
+    let mut ptrs = Vec::with_capacity(spans.len());
+    let mut total = 0usize;
+    // Real (release-mode) asserts: these are the memory-safety
+    // invariants of the unchecked pointer writes below, and the checks
+    // are O(layers) per step — free next to the update itself.
+    for li in 0..spans.len() {
+        let (start, len) = spans[li];
+        assert_eq!(weights[li].data.len(), len, "layer {li} span mismatch");
+        assert_eq!(m[li].data.len(), len, "layer {li} moment-m span mismatch");
+        assert_eq!(v[li].data.len(), len, "layer {li} moment-v span mismatch");
+        assert_eq!(start, total, "spans must be contiguous and ascending");
+        ptrs.push((
+            start,
+            len,
+            weights[li].data.as_mut_ptr(),
+            m[li].data.as_mut_ptr(),
+            v[li].data.as_mut_ptr(),
+        ));
+        total += len;
+    }
+    assert!(grads.len() >= total, "gradient arena shorter than the parameter space");
+    let ptrs = ParamPtrs(ptrs);
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    pool::global().run_chunks_with(total, threads.max(1), |_ci, r| {
+        for &(start, len, wp, mp, vp) in &ptrs.0 {
+            let lo = r.start.max(start);
+            let hi = r.end.min(start + len);
+            if lo >= hi {
+                continue;
+            }
+            let off = lo - start;
+            let cnt = hi - lo;
+            // Safety: see `ParamPtrs` — disjoint chunk ranges over the
+            // flat index space map to disjoint tensor elements.
+            let (w, mm, vv) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(wp.add(off), cnt),
+                    std::slice::from_raw_parts_mut(mp.add(off), cnt),
+                    std::slice::from_raw_parts_mut(vp.add(off), cnt),
+                )
+            };
+            adam_slice(w, &grads[lo..hi], mm, vv, bc1, bc2, lr);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// reusable per-backend workspace
+// ---------------------------------------------------------------------------
+
+/// Every per-step buffer of the host train path, hoisted out of the hot
+/// loop: forward stores (`P_l`, `Z_l`, hidden ping-pong), backward
+/// scratch (`dz`, `mbuf`, `dh`/`dh_new`), the flat gradient arena with
+/// its per-layer spans, the [`AdjT`] transpose, and the VR-GCN sparse
+/// view of `A_in`.  Buffers only ever grow ([`BackwardWorkspace::prepare`]),
+/// so steady-state training performs **no** heap allocation in the
+/// backward path.
+#[derive(Default)]
+pub struct BackwardWorkspace {
+    /// Per-layer propagations `P_l = Â·H_l` (`n × f_l`).
+    pub(crate) ps: Vec<Vec<f32>>,
+    /// Per-layer pre-activations `Z_l = P_l·W_l` (`n × f_{l+1}`).
+    pub(crate) zs: Vec<Vec<f32>>,
+    /// Forward hidden ping buffer (`n × max_width`).
+    pub(crate) cur: Vec<f32>,
+    /// Forward hidden pong buffer.
+    pub(crate) nxt: Vec<f32>,
+    /// Upstream gradient dL/dH (ping).
+    pub(crate) dh: Vec<f32>,
+    /// Downstream gradient buffer (pong).
+    pub(crate) dh_new: Vec<f32>,
+    /// Pre-activation gradient dL/dZ.
+    pub(crate) dz: Vec<f32>,
+    /// `dZ · Wᵀ` projection scratch.
+    pub(crate) mbuf: Vec<f32>,
+    /// Flat per-layer gradient arena (layer `li` at `spans[li]`).
+    pub(crate) grads: Vec<f32>,
+    /// Per-layer `(offset, len)` into `grads`, contiguous ascending.
+    pub(crate) spans: Vec<(usize, usize)>,
+    /// Transpose of the current batch block.
+    pub(crate) adj_t: AdjT,
+    /// VR-GCN sparse view of `A_in`: row offsets.
+    pub(crate) vr_offsets: Vec<usize>,
+    /// VR-GCN sparse view of `A_in`: column ids (diagonal inline).
+    pub(crate) vr_cols: Vec<u32>,
+    /// VR-GCN sparse view of `A_in`: entry values.
+    pub(crate) vr_vals: Vec<f32>,
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
+impl BackwardWorkspace {
+    /// Empty workspace; sized on first use.
+    pub fn new() -> BackwardWorkspace {
+        BackwardWorkspace::default()
+    }
+
+    /// Size every buffer for the given layer weights over an `n`-row
+    /// batch, and (re)build the gradient spans.  Buffers never shrink,
+    /// so after the first step at the run's peak shape this allocates
+    /// nothing.
+    pub fn prepare(&mut self, weights: &[Tensor], n: usize) {
+        let l = weights.len();
+        if self.ps.len() < l {
+            self.ps.resize_with(l, Vec::new);
+            self.zs.resize_with(l, Vec::new);
+        }
+        let mut max_w = weights.first().map(|w| w.dims[0]).unwrap_or(0);
+        let mut off = 0usize;
+        self.spans.clear();
+        for (li, w) in weights.iter().enumerate() {
+            let (fi, fo) = (w.dims[0], w.dims[1]);
+            max_w = max_w.max(fo);
+            grow(&mut self.ps[li], n * fi);
+            grow(&mut self.zs[li], n * fo);
+            self.spans.push((off, fi * fo));
+            off += fi * fo;
+        }
+        grow(&mut self.grads, off);
+        let nb = n * max_w;
+        grow(&mut self.cur, nb);
+        grow(&mut self.nxt, nb);
+        grow(&mut self.dh, nb);
+        grow(&mut self.dh_new, nb);
+        grow(&mut self.dz, nb);
+        grow(&mut self.mbuf, nb);
+    }
+
+    /// Per-layer gradient slices (diagnostics/tests; training consumes
+    /// the arena directly through [`adam_update_pooled`]).
+    pub fn grad_layers(&self) -> Vec<&[f32]> {
+        self.spans.iter().map(|&(off, len)| &self.grads[off..off + len]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, zero_frac: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.f64() < zero_frac {
+                    0.0
+                } else {
+                    rng.f32() * 2.0 - 1.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gemm_pooled_matches_scalar_bitwise() {
+        let mut rng = Rng::new(31);
+        for &(n, f, g) in &[(1usize, 1usize, 1usize), (7, 5, 3), (70, 140, 66), (129, 32, 65)] {
+            let p = rand_vec(&mut rng, n * f, 0.3);
+            let w = rand_vec(&mut rng, f * g, 0.0);
+            let mut oracle = vec![0f32; n * g];
+            gemm(&p, n, f, &w, g, &mut oracle);
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![f32::NAN; n * g];
+                gemm_pooled(&p, n, f, &w, g, threads, &mut got);
+                for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} f={f} g={g} t={threads} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_at_b_pooled_matches_scalar_bitwise() {
+        let mut rng = Rng::new(32);
+        for &(n, f, g) in &[(1usize, 1usize, 1usize), (9, 7, 4), (80, 130, 33), (64, 64, 65)] {
+            let p = rand_vec(&mut rng, n * f, 0.4);
+            let dz = rand_vec(&mut rng, n * g, 0.2);
+            let mut oracle = vec![0f32; f * g];
+            gemm_at_b(&p, &dz, n, f, g, &mut oracle);
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![f32::NAN; f * g];
+                gemm_at_b_pooled(&p, &dz, n, f, g, threads, &mut got);
+                for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} f={f} g={g} t={threads} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_a_bt_pooled_close_to_scalar() {
+        let mut rng = Rng::new(33);
+        for &(n, f, g) in &[(1usize, 3usize, 2usize), (20, 17, 40), (50, 64, 130)] {
+            let dz = rand_vec(&mut rng, n * g, 0.2);
+            let w = rand_vec(&mut rng, f * g, 0.0);
+            let mut oracle = vec![0f32; n * f];
+            gemm_a_bt(&dz, &w, n, g, f, &mut oracle);
+            let mut ref1 = None;
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![f32::NAN; n * f];
+                gemm_a_bt_pooled(&dz, &w, n, g, f, threads, &mut got);
+                for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                        "n={n} f={f} g={g} t={threads} i={i}: {a} vs {b}"
+                    );
+                }
+                // chunk-count independence is still exact
+                match ref1.take() {
+                    None => ref1 = Some(got),
+                    Some(r) => {
+                        assert!(
+                            got.iter().zip(r.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "width-dependent result"
+                        );
+                        ref1 = Some(r);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adj_t_gather_matches_scatter_oracle_bitwise() {
+        let mut rng = Rng::new(34);
+        // random sparse block in the SparseBlock layout
+        let n = 37;
+        let f = 9;
+        let mut offsets = vec![0usize; n + 1];
+        let mut cols: Vec<u32> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        for u in 0..n {
+            for v in 0..n {
+                if u != v && rng.f64() < 0.15 {
+                    cols.push(v as u32);
+                    vals.push(rng.f32() + 0.1);
+                }
+            }
+            offsets[u + 1] = cols.len();
+        }
+        let self_loop: Vec<f32> = (0..n).map(|_| rng.f32() + 0.1).collect();
+        let m = rand_vec(&mut rng, n * f, 0.1);
+
+        let mut oracle = vec![0f32; n * f];
+        scatter_adj_t(&offsets, &cols, &vals, &self_loop, &m, f, &mut oracle);
+
+        let mut adj_t = AdjT::new();
+        adj_t.build(&offsets, &cols, &vals, &self_loop);
+        assert_eq!(adj_t.n(), n);
+        for threads in [1usize, 2, 8] {
+            let mut got = vec![f32::NAN; n * f];
+            adj_t.gather_into_pooled(&m, f, threads, &mut got);
+            for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn adj_t_inline_matches_dense_transpose() {
+        let mut rng = Rng::new(35);
+        let n = 21;
+        let f = 5;
+        let b = 24; // padded dense row stride
+        let mut dense = vec![0f32; b * b];
+        for u in 0..n {
+            dense[u * b + u] = rng.f32() + 0.2;
+            for v in 0..n {
+                if u != v && rng.f64() < 0.2 {
+                    dense[u * b + v] = rng.f32() + 0.1;
+                }
+            }
+        }
+        // sparse rows (diag inline, ascending cols)
+        let mut offsets = vec![0usize; n + 1];
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for u in 0..n {
+            for v in 0..n {
+                let av = dense[u * b + v];
+                if av != 0.0 {
+                    cols.push(v as u32);
+                    vals.push(av);
+                }
+            }
+            offsets[u + 1] = cols.len();
+        }
+        let m = rand_vec(&mut rng, n * f, 0.0);
+        // dense scatter reference: out[v] += a[u][v] * m[u]
+        let mut expect = vec![0f32; n * f];
+        for u in 0..n {
+            for v in 0..n {
+                let a = dense[u * b + v];
+                if a != 0.0 {
+                    for j in 0..f {
+                        expect[v * f + j] += a * m[u * f + j];
+                    }
+                }
+            }
+        }
+        let mut adj_t = AdjT::new();
+        adj_t.build_inline(&offsets, &cols, &vals);
+        let mut got = vec![f32::NAN; n * f];
+        adj_t.gather_into_pooled(&m, f, 4, &mut got);
+        for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn adam_single_step_known_values() {
+        let mut w = vec![1.0f32];
+        let g = vec![0.5f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        adam_update(&mut w, &g, &mut m, &mut v, 1.0, 0.1);
+        // m = 0.05, v = 0.00025; bias-corrected mhat = 0.5, vhat = 0.25
+        assert!((m[0] - 0.05).abs() < 1e-7);
+        assert!((v[0] - 0.00025).abs() < 1e-9);
+        // w -= 0.1 * 0.5 / (0.5 + eps) ≈ 1 - 0.1
+        assert!((w[0] - 0.9).abs() < 1e-5, "w = {}", w[0]);
+    }
+
+    #[test]
+    fn pooled_adam_matches_per_layer_scalar_bitwise() {
+        let shapes = [(7usize, 13usize), (13, 13), (13, 3)];
+        let mut rng = Rng::new(36);
+        let mk = |rng: &mut Rng| -> Vec<Tensor> {
+            shapes
+                .iter()
+                .map(|&(a, b)| Tensor::new(vec![a, b], rand_vec(rng, a * b, 0.0)))
+                .collect()
+        };
+        let w0 = mk(&mut rng);
+        let m0 = mk(&mut rng);
+        let v0: Vec<Tensor> = mk(&mut rng)
+            .into_iter()
+            .map(|t| Tensor::new(t.dims.clone(), t.data.iter().map(|x| x.abs()).collect()))
+            .collect();
+        let mut spans = Vec::new();
+        let mut grads = Vec::new();
+        for &(a, b) in &shapes {
+            spans.push((grads.len(), a * b));
+            grads.extend(rand_vec(&mut rng, a * b, 0.0));
+        }
+        for t in [1.0f32, 7.0] {
+            // scalar per-layer reference
+            let (mut we, mut me, mut ve) = (w0.clone(), m0.clone(), v0.clone());
+            for (li, &(off, len)) in spans.iter().enumerate() {
+                adam_update(
+                    &mut we[li].data,
+                    &grads[off..off + len],
+                    &mut me[li].data,
+                    &mut ve[li].data,
+                    t,
+                    0.03,
+                );
+            }
+            for threads in [1usize, 2, 8] {
+                let (mut wg, mut mg, mut vg) = (w0.clone(), m0.clone(), v0.clone());
+                adam_update_pooled(&mut wg, &mut mg, &mut vg, &grads, &spans, t, 0.03, threads);
+                for li in 0..shapes.len() {
+                    for i in 0..wg[li].data.len() {
+                        assert_eq!(
+                            wg[li].data[i].to_bits(),
+                            we[li].data[i].to_bits(),
+                            "w layer {li} i={i} t={t} threads={threads}"
+                        );
+                        assert_eq!(mg[li].data[i].to_bits(), me[li].data[i].to_bits());
+                        assert_eq!(vg[li].data[i].to_bits(), ve[li].data[i].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_prepare_is_idempotent_and_never_shrinks() {
+        let w = vec![
+            Tensor::zeros(vec![6, 16]),
+            Tensor::zeros(vec![16, 4]),
+        ];
+        let mut ws = BackwardWorkspace::new();
+        ws.prepare(&w, 50);
+        assert_eq!(ws.spans, vec![(0, 96), (96, 64)]);
+        assert_eq!(ws.ps[0].len(), 50 * 6);
+        assert_eq!(ws.zs[1].len(), 50 * 4);
+        assert!(ws.cur.len() >= 50 * 16);
+        let caps = (ws.grads.capacity(), ws.cur.capacity(), ws.ps[0].capacity());
+        ws.prepare(&w, 30); // smaller batch: no shrink, no realloc
+        assert_eq!(caps.0, ws.grads.capacity());
+        assert_eq!(caps.1, ws.cur.capacity());
+        assert_eq!(caps.2, ws.ps[0].capacity());
+        assert!(ws.ps[0].len() >= 30 * 6);
+        assert_eq!(ws.grad_layers().len(), 2);
+        assert_eq!(ws.grad_layers()[1].len(), 64);
+    }
+}

@@ -1,17 +1,28 @@
 //! [`HostBackend`]: the artifact-free execution backend.  The full
 //! training pipeline — forward, masked loss, backward, Adam — runs on
 //! the host, built from the same tiled SpMM·GEMM kernels the exact
-//! evaluator uses (`coordinator::inference`), so `cluster-gcn train
-//! --backend host` works with no `artifacts/` directory and no python
-//! step at all.
+//! evaluator uses (`coordinator::inference`) plus the pooled backward
+//! engine (`runtime::backward`), so `cluster-gcn train --backend host`
+//! works with no `artifacts/` directory and no python step at all.
+//!
+//! Batches are consumed **sparse-natively**: every assembled
+//! [`Batch`] carries a CSR [`crate::coordinator::batch::SparseBlock`]
+//! view of its normalized adjacency block (bit-identical to the dense
+//! tensor the PJRT path feeds its executables), so neither `train_step`
+//! nor `forward` ever re-derives the block from the dense `b_max²`
+//! tensor.  All per-step scratch — per-layer `P_l`/`Z_l` stores, the
+//! `dz`/`mbuf`/`dh` buffers, the flat gradient arena, and the `Âᵀ`
+//! transpose — lives in one reusable
+//! [`crate::runtime::backward::BackwardWorkspace`]; steady-state
+//! training allocates nothing on the backward path.
 //!
 //! Parity contract: [`HostBackend::forward`] over a full-graph batch
 //! (all nodes in natural order) is **bit-identical** to
 //! [`crate::coordinator::inference::full_forward_cached`] at every pool
 //! width — the batch renormalization computes the same f32 values as
-//! `normalize_sparse`, the block is re-extracted into CSR form, and the
-//! layer loop mirrors the evaluator's ping-pong exactly.  The property
-//! suite pins this.
+//! `normalize_sparse`, the carried CSR block reproduces the dense
+//! entries bit for bit, and the layer loop mirrors the evaluator's
+//! ping-pong exactly.  The property suite pins this.
 //!
 //! The backward pass is the standard GCN chain: with `P_l = Â·H_l`,
 //! `Z_l = P_l·W_l`, `H_{l+1} = relu(Z_l) (+ H_l)`,
@@ -21,9 +32,15 @@
 //!   dH_l = Â^T · (dZ_l · W_l^T)  (+ dH_{l+1} through the residual)
 //! ```
 //!
-//! and the Adam step matches `python/compile/model.py` (β1 = 0.9,
-//! β2 = 0.999, ε = 1e-8, bias-corrected).  Unit tests check every
-//! analytic gradient against central finite differences.
+//! executed on the pooled kernels (`gemm_at_b_pooled`, `AdjT` gather,
+//! `gemm_a_bt_pooled`), with the Adam update batched across layers into
+//! one pooled pass over the flat arena — β1 = 0.9, β2 = 0.999,
+//! ε = 1e-8, bias-corrected, matching `python/compile/model.py`.  The
+//! pre-engine scalar backward survives verbatim as
+//! [`host_grads_scalar`]: the parity oracle for the pooled engine and
+//! the baseline the backward benches measure speedup against.  Unit
+//! tests check every analytic gradient (cluster and VR-GCN paths)
+//! against central finite differences.
 #![deny(missing_docs)]
 
 use std::collections::BTreeMap;
@@ -31,16 +48,17 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::Batch;
-use crate::coordinator::inference::{propagate_into, spmm_layer_into};
+use crate::coordinator::inference::{propagate_raw_into, spmm_layer_raw_into};
 use crate::coordinator::trainer::TrainState;
-use crate::graph::{Csr, Task};
+use crate::graph::Task;
 use crate::runtime::backend::{Backend, ModelSpec, VrgcnBatch};
+use crate::runtime::backward::{
+    adam_update_pooled, gemm, gemm_a_bt, gemm_at_b, gemm_a_bt_pooled, gemm_at_b_pooled,
+    gemm_pooled, scatter_adj_t, BackwardWorkspace,
+};
 use crate::runtime::exec::Tensor;
-use crate::util::pool::default_threads;
-
-const ADAM_B1: f32 = 0.9;
-const ADAM_B2: f32 = 0.999;
-const ADAM_EPS: f32 = 1e-8;
+use crate::util::pool::{self, default_threads};
+use crate::util::simd::axpy;
 
 /// Pure-host execution backend over registered [`ModelSpec`]s.
 ///
@@ -50,6 +68,7 @@ const ADAM_EPS: f32 = 1e-8;
 pub struct HostBackend {
     models: BTreeMap<String, ModelSpec>,
     threads: usize,
+    ws: BackwardWorkspace,
 }
 
 impl Default for HostBackend {
@@ -65,9 +84,14 @@ impl HostBackend {
     }
 
     /// Backend with an explicit kernel thread cap (results are
-    /// bit-identical at every width; see `coordinator::inference`).
+    /// bit-identical at every width; see `coordinator::inference` and
+    /// `runtime::backward`).
     pub fn with_threads(threads: usize) -> HostBackend {
-        HostBackend { models: BTreeMap::new(), threads: threads.max(1) }
+        HostBackend {
+            models: BTreeMap::new(),
+            threads: threads.max(1),
+            ws: BackwardWorkspace::new(),
+        }
     }
 
     /// Registered model ids, in sorted order.
@@ -84,13 +108,35 @@ impl HostBackend {
             )
         })
     }
+
+    /// Loss + per-layer weight gradients over `batch` on the pooled
+    /// backward engine — the diagnostics entry behind the
+    /// finite-difference and parity suites.  Training itself keeps
+    /// gradients in the flat workspace arena and never materializes
+    /// these per-layer `Vec`s.
+    pub fn loss_and_grads(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let spec = self.spec(model)?.clone();
+        let loss = host_grads_pooled(&spec, weights, batch, self.threads, &mut self.ws)?;
+        let grads = self.ws.grad_layers().iter().map(|s| s.to_vec()).collect();
+        Ok((loss, grads))
+    }
 }
 
-/// Sparse view of one dense batch block: CSR structure + normalized
-/// values + per-node self-loop, shaped exactly like the full-graph
-/// normalization so the tiled kernels apply unchanged.
+/// Sparse view of one dense batch block (oracle-side only): CSR
+/// structure + normalized values + per-node self-loop, shaped exactly
+/// like the full-graph normalization.  The production path consumes the
+/// assembler-built `SparseBlock` instead; this re-extraction survives
+/// for [`host_grads_scalar`], which deliberately derives its block from
+/// the dense tensor so it stays independent of the sparse-native path
+/// it oracles.
 struct BlockAdj {
-    csr: Csr,
+    offsets: Vec<usize>,
+    cols: Vec<u32>,
     vals: Vec<f32>,
     self_loop: Vec<f32>,
 }
@@ -117,105 +163,55 @@ fn extract_block(a: &Tensor, n: usize) -> BlockAdj {
         }
         offsets[u + 1] = cols.len();
     }
-    let nnz = cols.len();
-    let csr = Csr { offsets, cols, weights: vec![1; nnz], node_weights: vec![1; n] };
-    BlockAdj { csr, vals, self_loop }
+    BlockAdj { offsets, cols, vals, self_loop }
 }
 
-/// `z[n,g] = p[n,f] · w[f,g]` (dense, zero-skipping on `p`).
-fn gemm(p: &[f32], n: usize, f: usize, w: &[f32], g: usize, z: &mut [f32]) {
-    debug_assert_eq!(p.len(), n * f);
-    debug_assert_eq!(w.len(), f * g);
-    debug_assert_eq!(z.len(), n * g);
-    z.fill(0.0);
-    for i in 0..n {
-        let pr = &p[i * f..(i + 1) * f];
-        let zr = &mut z[i * g..(i + 1) * g];
-        for (k, &pv) in pr.iter().enumerate() {
-            if pv == 0.0 {
-                continue;
-            }
-            let wr = &w[k * g..(k + 1) * g];
-            for (zv, &wv) in zr.iter_mut().zip(wr) {
-                *zv += pv * wv;
-            }
-        }
-    }
-}
-
-/// `gw[f,g] += p[n,f]^T · dz[n,g]` (caller zeroes `gw`).
-fn gemm_at_b(p: &[f32], dz: &[f32], n: usize, f: usize, g: usize, gw: &mut [f32]) {
-    debug_assert_eq!(gw.len(), f * g);
-    for i in 0..n {
-        let pr = &p[i * f..(i + 1) * f];
-        let dr = &dz[i * g..(i + 1) * g];
-        for (k, &pv) in pr.iter().enumerate() {
-            if pv == 0.0 {
-                continue;
-            }
-            let gr = &mut gw[k * g..(k + 1) * g];
-            for (gv, &dv) in gr.iter_mut().zip(dr) {
-                *gv += pv * dv;
-            }
-        }
-    }
-}
-
-/// `m[n,f] = dz[n,g] · w[f,g]^T`.
-fn gemm_a_bt(dz: &[f32], w: &[f32], n: usize, g: usize, f: usize, m: &mut [f32]) {
-    debug_assert_eq!(m.len(), n * f);
-    for i in 0..n {
-        let dr = &dz[i * g..(i + 1) * g];
-        let mr = &mut m[i * f..(i + 1) * f];
-        for (k, mv) in mr.iter_mut().enumerate() {
-            let wr = &w[k * g..(k + 1) * g];
-            let mut acc = 0f32;
-            for (&dv, &wv) in dr.iter().zip(wr) {
-                acc += dv * wv;
-            }
-            *mv = acc;
-        }
-    }
-}
-
-/// `out[n,f] += Â^T · m[n,f]` over the sparse block (caller zeroes
-/// `out`): scatter each stored entry `Â[u,v]` into row `v`, plus the
-/// diagonal self-loops.
-fn scatter_adj_t(blk: &BlockAdj, m: &[f32], f: usize, out: &mut [f32]) {
-    let n = blk.csr.n();
-    debug_assert_eq!(m.len(), n * f);
-    debug_assert_eq!(out.len(), n * f);
+/// Sparse row extraction of the `n × n` prefix of a padded dense block
+/// (row stride `b`), diagonal **inline** — the VR-GCN `A_in` view,
+/// derived once per step and shared between its forward and backward
+/// (the old path re-walked the dense rows in both).
+fn extract_dense_rows(
+    a: &[f32],
+    n: usize,
+    b: usize,
+    offsets: &mut Vec<usize>,
+    cols: &mut Vec<u32>,
+    vals: &mut Vec<f32>,
+) {
+    offsets.clear();
+    offsets.resize(n + 1, 0);
+    cols.clear();
+    vals.clear();
     for u in 0..n {
-        let sl = blk.self_loop[u];
-        for j in 0..f {
-            out[u * f + j] += sl * m[u * f + j];
-        }
-        let off = blk.csr.offsets[u];
-        for (idx, &v) in blk.csr.neighbors(u).iter().enumerate() {
-            let a = blk.vals[off + idx];
-            let v = v as usize;
-            for j in 0..f {
-                out[v * f + j] += a * m[u * f + j];
+        let row = &a[u * b..u * b + n];
+        for (v, &av) in row.iter().enumerate() {
+            if av != 0.0 {
+                cols.push(v as u32);
+                vals.push(av);
             }
         }
+        offsets[u + 1] = cols.len();
     }
 }
 
 /// Masked mean loss (eq. (2)/(7), matching `model.masked_loss`) and its
-/// gradient w.r.t. the logits.  Rows `0..n`, mask/label rows taken from
-/// the padded batch tensors.
-fn loss_and_dlogits(
+/// gradient w.r.t. the logits, written into `dz[..n * classes]` (zeroed
+/// first, so masked-out rows contribute nothing).  Rows `0..n`,
+/// mask/label rows taken from the padded batch tensors.
+#[allow(clippy::too_many_arguments)]
+fn loss_and_dlogits_into(
     task: Task,
     logits: &[f32],
     y: &[f32],
     mask: &[f32],
     n: usize,
     classes: usize,
-) -> (f32, Vec<f32>) {
+    dz: &mut [f32],
+) -> f32 {
     let c = classes;
     let msum: f32 = mask[..n].iter().sum();
     let denom = msum.max(1.0);
-    let mut dz = vec![0f32; n * c];
+    dz[..n * c].fill(0.0);
     let mut loss = 0f32;
     match task {
         Task::Multiclass => {
@@ -263,27 +259,264 @@ fn loss_and_dlogits(
             }
         }
     }
-    (loss / denom, dz)
+    loss / denom
 }
 
-/// One bias-corrected Adam update over a flat parameter group.
-fn adam_update(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], t: f32, lr: f32) {
-    let bc1 = 1.0 - ADAM_B1.powf(t);
-    let bc2 = 1.0 - ADAM_B2.powf(t);
-    for i in 0..w.len() {
-        let gi = g[i];
-        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
-        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
-        let mhat = m[i] / bc1;
-        let vhat = v[i] / bc2;
-        w[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+/// Pooled forward + backward over the batch's carried sparse block:
+/// loss returned, per-layer weight gradients left in the workspace's
+/// flat arena (`ws.spans` indexes them).  Zero steady-state
+/// allocation; every kernel is deterministic and width-independent.
+fn host_grads_pooled(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &Batch,
+    threads: usize,
+    ws: &mut BackwardWorkspace,
+) -> Result<f32> {
+    let n = batch.n_real;
+    if n == 0 {
+        return Err(anyhow!("empty batch (n_real = 0)"));
+    }
+    let blk = &batch.block;
+    if blk.n() != n {
+        return Err(anyhow!(
+            "batch carries no sparse block for its {n} rows \
+             (assemble it through BatchAssembler)"
+        ));
+    }
+    let l = weights.len();
+    ws.prepare(weights, n);
+
+    // ---- forward, storing P_l and Z_l for the backward --------------
+    ws.cur[..n * spec.f_in].copy_from_slice(&batch.x.data[..n * spec.f_in]);
+    let mut f = spec.f_in;
+    for (li, w) in weights.iter().enumerate() {
+        debug_assert_eq!(w.dims[0], f, "weight in-dim mismatch at layer {li}");
+        let g_dim = w.dims[1];
+        let last = li == l - 1;
+        propagate_raw_into(
+            &blk.offsets,
+            &blk.cols,
+            &blk.vals,
+            &blk.self_loop,
+            &ws.cur[..n * f],
+            f,
+            threads,
+            &mut ws.ps[li][..n * f],
+        );
+        gemm_pooled(
+            &ws.ps[li][..n * f],
+            n,
+            f,
+            &w.data,
+            g_dim,
+            threads,
+            &mut ws.zs[li][..n * g_dim],
+        );
+        let residual_from = if spec.residual { Some(f) } else { None };
+        activate_layer(ws, li, n, g_dim, last, residual_from);
+        f = g_dim;
+    }
+
+    // ---- masked loss + dL/dlogits into the dh ping buffer -----------
+    let loss = {
+        let logits = &ws.zs[l - 1];
+        loss_and_dlogits_into(
+            spec.task,
+            &logits[..n * spec.classes],
+            &batch.y.data,
+            &batch.mask.data,
+            n,
+            spec.classes,
+            &mut ws.dh,
+        )
+    };
+
+    // ---- backward sweep on the pooled engine ------------------------
+    if l > 1 {
+        ws.adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+    }
+    backward_sweep(weights, n, spec.residual, threads, ws);
+    Ok(loss)
+}
+
+/// The layer activation shared by both forward paths: `nxt =
+/// relu(Z_li)` (plain copy on the last layer), optional residual add
+/// from the incoming hidden when the widths match
+/// (`residual_from = Some(f_in_of_layer)`), then the `cur`/`nxt`
+/// ping-pong swap — after the call `ws.cur` holds `H_{li+1}`.  One
+/// definition, so the cluster and VR-GCN forwards cannot drift.
+fn activate_layer(
+    ws: &mut BackwardWorkspace,
+    li: usize,
+    n: usize,
+    g_dim: usize,
+    last: bool,
+    residual_from: Option<usize>,
+) {
+    {
+        let z = &ws.zs[li];
+        let nxt = &mut ws.nxt;
+        if last {
+            nxt[..n * g_dim].copy_from_slice(&z[..n * g_dim]);
+        } else {
+            for i in 0..n * g_dim {
+                nxt[i] = z[i].max(0.0);
+            }
+        }
+        if let Some(f) = residual_from {
+            if !last && g_dim == f {
+                let cur = &ws.cur;
+                for i in 0..n * f {
+                    nxt[i] += cur[i];
+                }
+            }
+        }
+    }
+    std::mem::swap(&mut ws.cur, &mut ws.nxt);
+}
+
+/// The shared backward sweep (cluster and VR-GCN paths): consumes
+/// `ws.dh` (dL/dlogits), the forward's `ws.ps`/`ws.zs`, and `ws.adj_t`
+/// (built by the caller when `l > 1`); leaves layer `li`'s `dW` at
+/// `ws.spans[li]` in the flat arena.
+fn backward_sweep(
+    weights: &[Tensor],
+    n: usize,
+    residual: bool,
+    threads: usize,
+    ws: &mut BackwardWorkspace,
+) {
+    let l = weights.len();
+    for li in (0..l).rev() {
+        let w = &weights[li];
+        let (fi, go) = (w.dims[0], w.dims[1]);
+        let last = li == l - 1;
+        // dz = dh ⊙ σ'(z); the last layer has no activation.
+        {
+            let dz = &mut ws.dz;
+            if last {
+                dz[..n * go].copy_from_slice(&ws.dh[..n * go]);
+            } else {
+                let z = &ws.zs[li];
+                let dh = &ws.dh;
+                for i in 0..n * go {
+                    dz[i] = if z[i] > 0.0 { dh[i] } else { 0.0 };
+                }
+            }
+        }
+        let (off, len) = ws.spans[li];
+        gemm_at_b_pooled(
+            &ws.ps[li][..n * fi],
+            &ws.dz[..n * go],
+            n,
+            fi,
+            go,
+            threads,
+            &mut ws.grads[off..off + len],
+        );
+        if li > 0 {
+            gemm_a_bt_pooled(
+                &ws.dz[..n * go],
+                &w.data,
+                n,
+                go,
+                fi,
+                threads,
+                &mut ws.mbuf[..n * fi],
+            );
+            ws.adj_t.gather_into_pooled(&ws.mbuf[..n * fi], fi, threads, &mut ws.dh_new[..n * fi]);
+            if residual && !last && go == fi {
+                let dh = &ws.dh;
+                let dh_new = &mut ws.dh_new;
+                for i in 0..n * fi {
+                    dh_new[i] += dh[i];
+                }
+            }
+            std::mem::swap(&mut ws.dh, &mut ws.dh_new);
+        }
     }
 }
 
-/// Forward over the sparse block, storing the per-layer propagations
-/// `P_l` and pre-activations `Z_l` the backward pass needs.  Returns
-/// `(ps, zs)`; the logits are the last `zs` entry.
-fn forward_store(
+/// The **pre-engine** scalar backward, kept verbatim: derives its block
+/// from the dense batch tensor via `extract_block` (so it stays
+/// independent of the sparse-native path), runs the forward on the
+/// pooled propagate + scalar GEMM it always used, and the backward on
+/// the scalar `gemm_at_b`/`gemm_a_bt`/`scatter_adj_t` oracles.  Serves
+/// as the parity oracle for the pooled engine in the property suite and
+/// as the baseline the backward benches measure speedup against.
+pub fn host_grads_scalar(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &Batch,
+    threads: usize,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let n = batch.n_real;
+    if n == 0 {
+        return Err(anyhow!("empty batch (n_real = 0)"));
+    }
+    let l = weights.len();
+    let blk = extract_block(&batch.a, n);
+    let (ps, zs) =
+        forward_store_scalar(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
+    let logits = &zs[l - 1];
+    let mut dlogits = vec![0f32; n * spec.classes];
+    let loss = loss_and_dlogits_into(
+        spec.task,
+        logits,
+        &batch.y.data,
+        &batch.mask.data,
+        n,
+        spec.classes,
+        &mut dlogits,
+    );
+
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); l];
+    // dh = dL/dH_{li+1} while processing layer li (top-down).
+    let mut dh = dlogits;
+    for li in (0..l).rev() {
+        let w = &weights[li];
+        let (fi, go) = (w.dims[0], w.dims[1]);
+        let last = li == l - 1;
+        let dz: Vec<f32> = if last {
+            dh.clone()
+        } else {
+            dh.iter()
+                .zip(&zs[li])
+                .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
+                .collect()
+        };
+        let mut gw = vec![0f32; fi * go];
+        gemm_at_b(&ps[li], &dz, n, fi, go, &mut gw);
+        if li > 0 {
+            let mut mbuf = vec![0f32; n * fi];
+            gemm_a_bt(&dz, &w.data, n, go, fi, &mut mbuf);
+            let mut dh_new = vec![0f32; n * fi];
+            scatter_adj_t(
+                &blk.offsets,
+                &blk.cols,
+                &blk.vals,
+                &blk.self_loop,
+                &mbuf,
+                fi,
+                &mut dh_new,
+            );
+            if spec.residual && !last && go == fi {
+                for (o, &d) in dh_new.iter_mut().zip(&dh) {
+                    *o += d;
+                }
+            }
+            dh = dh_new;
+        }
+        grads[li] = gw;
+    }
+    Ok((loss, grads))
+}
+
+/// Scalar-oracle forward over an extracted block, storing the per-layer
+/// propagations `P_l` and pre-activations `Z_l`.  Returns `(ps, zs)`;
+/// the logits are the last `zs` entry.
+fn forward_store_scalar(
     blk: &BlockAdj,
     weights: &[Tensor],
     x: &[f32],
@@ -291,7 +524,7 @@ fn forward_store(
     residual: bool,
     threads: usize,
 ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-    let n = blk.csr.n();
+    let n = blk.self_loop.len();
     let l = weights.len();
     let mut ps: Vec<Vec<f32>> = Vec::with_capacity(l);
     let mut zs: Vec<Vec<f32>> = Vec::with_capacity(l);
@@ -302,7 +535,9 @@ fn forward_store(
         let g_dim = w.dims[1];
         let last = li == l - 1;
         let mut p = vec![0f32; n * f];
-        propagate_into(&blk.csr, &blk.vals, &blk.self_loop, &h, f, threads, &mut p);
+        propagate_raw_into(
+            &blk.offsets, &blk.cols, &blk.vals, &blk.self_loop, &h, f, threads, &mut p,
+        );
         let mut z = vec![0f32; n * g_dim];
         gemm(&p, n, f, &w.data, g_dim, &mut z);
         let mut h_next: Vec<f32> = if last {
@@ -328,62 +563,171 @@ fn forward_store(
 fn host_loss(spec: &ModelSpec, weights: &[Tensor], batch: &Batch, threads: usize) -> f32 {
     let n = batch.n_real;
     let blk = extract_block(&batch.a, n);
-    let (_, zs) = forward_store(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
+    let (_, zs) =
+        forward_store_scalar(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
     let logits = zs.last().expect("at least one layer");
-    loss_and_dlogits(spec.task, logits, &batch.y.data, &batch.mask.data, n, spec.classes).0
+    let mut dz = vec![0f32; n * spec.classes];
+    loss_and_dlogits_into(
+        spec.task,
+        logits,
+        &batch.y.data,
+        &batch.mask.data,
+        n,
+        spec.classes,
+        &mut dz,
+    )
 }
 
-/// Full forward + backward: loss and per-layer weight gradients.
-fn host_grads(
+/// Pooled VR-GCN forward + backward (Hc is stop-gradient, exactly like
+/// the AOT model): loss and the `L-1` hidden activations returned,
+/// gradients left in the workspace arena.  The sparse view of `A_in`
+/// is extracted **once** and shared by the forward gather, the
+/// transpose build, and nothing else — the old path re-walked the dense
+/// rows in both phases.
+fn vrgcn_grads(
     spec: &ModelSpec,
     weights: &[Tensor],
-    batch: &Batch,
+    batch: &VrgcnBatch,
     threads: usize,
-) -> Result<(f32, Vec<Vec<f32>>)> {
+    ws: &mut BackwardWorkspace,
+) -> Result<(f32, Vec<Tensor>)> {
     let n = batch.n_real;
     if n == 0 {
-        return Err(anyhow!("empty batch (n_real = 0)"));
+        return Err(anyhow!("empty vrgcn batch (n_real = 0)"));
     }
-    let l = weights.len();
-    let blk = extract_block(&batch.a, n);
-    let (ps, zs) = forward_store(&blk, weights, &batch.x.data, spec.f_in, spec.residual, threads);
-    let logits = &zs[l - 1];
-    let (loss, dlogits) =
-        loss_and_dlogits(spec.task, logits, &batch.y.data, &batch.mask.data, n, spec.classes);
+    let l = spec.layers;
+    let b = batch.a_in.dims[0];
+    let dims = spec.layer_in_dims();
+    ws.prepare(weights, n);
+    extract_dense_rows(
+        &batch.a_in.data,
+        n,
+        b,
+        &mut ws.vr_offsets,
+        &mut ws.vr_cols,
+        &mut ws.vr_vals,
+    );
 
-    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); l];
-    // dh = dL/dH_{li+1} while processing layer li (top-down).
-    let mut dh = dlogits;
-    for li in (0..l).rev() {
+    // ---- forward: P_l = A_in·H_l + Hc_l; Z_l = P_l·W_l --------------
+    let mut hiddens: Vec<Tensor> = Vec::with_capacity(l.saturating_sub(1));
+    ws.cur[..n * spec.f_in].copy_from_slice(&batch.x.data[..n * spec.f_in]);
+    for li in 0..l {
+        let f = dims[li];
         let w = &weights[li];
-        let (fi, go) = (w.dims[0], w.dims[1]);
+        let g_dim = w.dims[1];
         let last = li == l - 1;
-        // dz = dh ⊙ σ'(z); the last layer has no activation.
-        let dz: Vec<f32> = if last {
-            dh.clone()
-        } else {
-            dh.iter()
-                .zip(&zs[li])
-                .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
-                .collect()
-        };
-        let mut gw = vec![0f32; fi * go];
-        gemm_at_b(&ps[li], &dz, n, fi, go, &mut gw);
-        if li > 0 {
-            let mut mbuf = vec![0f32; n * fi];
-            gemm_a_bt(&dz, &w.data, n, go, fi, &mut mbuf);
-            let mut dh_new = vec![0f32; n * fi];
-            scatter_adj_t(&blk, &mbuf, fi, &mut dh_new);
-            if spec.residual && !last && go == fi {
-                for (o, &d) in dh_new.iter_mut().zip(&dh) {
-                    *o += d;
+        let hc = &batch.hcs[li].data;
+        {
+            let offs = &ws.vr_offsets;
+            let cls = &ws.vr_cols;
+            let vls = &ws.vr_vals;
+            let h = &ws.cur;
+            let p = &mut ws.ps[li];
+            let gather_row = |_ci: usize, rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
+                for (ri, i) in rows.clone().enumerate() {
+                    let pr = &mut out_rows[ri * f..(ri + 1) * f];
+                    pr.copy_from_slice(&hc[i * f..(i + 1) * f]);
+                    let off = offs[i];
+                    for (idx, &j) in cls[off..offs[i + 1]].iter().enumerate() {
+                        let a = vls[off + idx];
+                        let j = j as usize;
+                        axpy(pr, &h[j * f..(j + 1) * f], a);
+                    }
+                }
+            };
+            pool::global().run_rows_with(n, threads.max(1), f, &mut p[..n * f], gather_row);
+        }
+        gemm_pooled(
+            &ws.ps[li][..n * f],
+            n,
+            f,
+            &w.data,
+            g_dim,
+            threads,
+            &mut ws.zs[li][..n * g_dim],
+        );
+        activate_layer(ws, li, n, g_dim, last, None);
+        if !last {
+            // padded (b, f_hid) hidden for the history refresh — after
+            // the activation swap, `ws.cur` holds H_{li+1}
+            let mut hid = vec![0f32; b * g_dim];
+            hid[..n * g_dim].copy_from_slice(&ws.cur[..n * g_dim]);
+            hiddens.push(Tensor::new(vec![b, g_dim], hid));
+        }
+    }
+
+    let loss = {
+        let logits = &ws.zs[l - 1];
+        loss_and_dlogits_into(
+            spec.task,
+            &logits[..n * spec.classes],
+            &batch.y.data,
+            &batch.mask.data,
+            n,
+            spec.classes,
+            &mut ws.dh,
+        )
+    };
+
+    // ---- backward on the shared sweep (A_inᵀ, diagonal inline) ------
+    if l > 1 {
+        ws.adj_t.build_inline(&ws.vr_offsets, &ws.vr_cols, &ws.vr_vals);
+    }
+    backward_sweep(weights, n, false, threads, ws);
+    Ok((loss, hiddens))
+}
+
+/// Loss only — the finite-difference oracle for the VR-GCN gradient
+/// test: a straight scalar re-implementation over the dense `A_in`,
+/// independent of the sparse extraction and the pooled kernels.
+#[cfg(test)]
+fn vrgcn_loss(spec: &ModelSpec, weights: &[Tensor], batch: &VrgcnBatch) -> f32 {
+    let n = batch.n_real;
+    let l = spec.layers;
+    let b = batch.a_in.dims[0];
+    let dims = spec.layer_in_dims();
+    let mut h: Vec<f32> = batch.x.data[..n * spec.f_in].to_vec();
+    let mut logits: Vec<f32> = Vec::new();
+    for li in 0..l {
+        let f = dims[li];
+        let w = &weights[li];
+        let g_dim = w.dims[1];
+        let last = li == l - 1;
+        let hc = &batch.hcs[li].data;
+        let mut p = vec![0f32; n * f];
+        for i in 0..n {
+            p[i * f..(i + 1) * f].copy_from_slice(&hc[i * f..(i + 1) * f]);
+            let arow = &batch.a_in.data[i * b..i * b + n];
+            for (j, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                for k in 0..f {
+                    p[i * f + k] += a * h[j * f + k];
                 }
             }
-            dh = dh_new;
         }
-        grads[li] = gw;
+        let mut z = vec![0f32; n * g_dim];
+        gemm(&p, n, f, &w.data, g_dim, &mut z);
+        h = if last {
+            z.clone()
+        } else {
+            z.iter().map(|&v| v.max(0.0)).collect()
+        };
+        if last {
+            logits = z;
+        }
     }
-    Ok((loss, grads))
+    let mut dz = vec![0f32; n * spec.classes];
+    loss_and_dlogits_into(
+        spec.task,
+        &logits,
+        &batch.y.data,
+        &batch.mask.data,
+        n,
+        spec.classes,
+        &mut dz,
+    )
 }
 
 impl Backend for HostBackend {
@@ -413,21 +757,20 @@ impl Backend for HostBackend {
     ) -> Result<f32> {
         let spec = self.spec(model)?.clone();
         state.step += 1;
-        let (loss, grads) = host_grads(&spec, &state.weights, batch, self.threads)?;
+        let loss = host_grads_pooled(&spec, &state.weights, batch, self.threads, &mut self.ws)?;
         if !loss.is_finite() {
             return Err(anyhow!("non-finite loss at step {}", state.step));
         }
-        let t = state.step as f32;
-        for li in 0..state.weights.len() {
-            adam_update(
-                &mut state.weights[li].data,
-                &grads[li],
-                &mut state.m[li].data,
-                &mut state.v[li].data,
-                t,
-                lr,
-            );
-        }
+        adam_update_pooled(
+            &mut state.weights,
+            &mut state.m,
+            &mut state.v,
+            &self.ws.grads,
+            &self.ws.spans,
+            state.step as f32,
+            lr,
+            self.threads,
+        );
         Ok(loss)
     }
 
@@ -438,7 +781,13 @@ impl Backend for HostBackend {
         let n = batch.n_real;
         let mut out = vec![0f32; b * classes];
         if n > 0 {
-            let blk = extract_block(&batch.a, n);
+            let blk = &batch.block;
+            if blk.n() != n {
+                return Err(anyhow!(
+                    "batch carries no sparse block for its {n} rows \
+                     (assemble it through BatchAssembler)"
+                ));
+            }
             // Mirror `full_forward_cached` exactly: two max-width
             // ping-pong buffers, relu on every layer but the last —
             // this is what makes the full-graph batch bit-identical to
@@ -456,8 +805,9 @@ impl Backend for HostBackend {
             let last = weights.len() - 1;
             for (l, w) in weights.iter().enumerate() {
                 let g_dim = w.dims[1];
-                spmm_layer_into(
-                    &blk.csr,
+                spmm_layer_raw_into(
+                    &blk.offsets,
+                    &blk.cols,
                     &blk.vals,
                     &blk.self_loop,
                     &cur[..n * f],
@@ -492,120 +842,21 @@ impl Backend for HostBackend {
     ) -> Result<(f32, Vec<Tensor>)> {
         let spec = self.spec(model)?.clone();
         state.step += 1;
-        let n = batch.n_real;
-        if n == 0 {
-            return Err(anyhow!("empty vrgcn batch (n_real = 0)"));
-        }
-        let l = spec.layers;
-        let b = batch.a_in.dims[0];
-        let dims = spec.layer_in_dims();
-
-        // ---- forward: P_l = A_in·H_l + Hc_l; Z_l = P_l·W_l ------------
-        let mut ps: Vec<Vec<f32>> = Vec::with_capacity(l);
-        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(l);
-        let mut hiddens: Vec<Tensor> = Vec::with_capacity(l.saturating_sub(1));
-        let mut h: Vec<f32> = batch.x.data[..n * spec.f_in].to_vec();
-        for li in 0..l {
-            let f = dims[li];
-            let w = &state.weights[li];
-            let g_dim = w.dims[1];
-            let last = li == l - 1;
-            let hc = &batch.hcs[li].data;
-            let mut p = vec![0f32; n * f];
-            for i in 0..n {
-                p[i * f..(i + 1) * f].copy_from_slice(&hc[i * f..(i + 1) * f]);
-                let arow = &batch.a_in.data[i * b..i * b + n];
-                for (j, &a) in arow.iter().enumerate() {
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let hr = &h[j * f..(j + 1) * f];
-                    for k in 0..f {
-                        p[i * f + k] += a * hr[k];
-                    }
-                }
-            }
-            let mut z = vec![0f32; n * g_dim];
-            gemm(&p, n, f, &w.data, g_dim, &mut z);
-            let h_next: Vec<f32> = if last {
-                z.clone()
-            } else {
-                z.iter().map(|&v| v.max(0.0)).collect()
-            };
-            if !last {
-                // padded (b, f_hid) hidden for the history refresh
-                let mut hid = vec![0f32; b * g_dim];
-                hid[..n * g_dim].copy_from_slice(&h_next);
-                hiddens.push(Tensor::new(vec![b, g_dim], hid));
-            }
-            ps.push(p);
-            zs.push(z);
-            h = h_next;
-        }
-
-        let logits = &zs[l - 1];
-        let (loss, dlogits) = loss_and_dlogits(
-            spec.task,
-            logits,
-            &batch.y.data,
-            &batch.mask.data,
-            n,
-            spec.classes,
-        );
+        let (loss, hiddens) =
+            vrgcn_grads(&spec, &state.weights, batch, self.threads, &mut self.ws)?;
         if !loss.is_finite() {
             return Err(anyhow!("vrgcn non-finite loss at step {}", state.step));
         }
-
-        // ---- backward (Hc is stop-gradient, exactly like the AOT model)
-        let mut grads: Vec<Vec<f32>> = vec![Vec::new(); l];
-        let mut dh = dlogits;
-        for li in (0..l).rev() {
-            let w = &state.weights[li];
-            let (fi, go) = (w.dims[0], w.dims[1]);
-            let last = li == l - 1;
-            let dz: Vec<f32> = if last {
-                dh.clone()
-            } else {
-                dh.iter()
-                    .zip(&zs[li])
-                    .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
-                    .collect()
-            };
-            let mut gw = vec![0f32; fi * go];
-            gemm_at_b(&ps[li], &dz, n, fi, go, &mut gw);
-            if li > 0 {
-                let mut mbuf = vec![0f32; n * fi];
-                gemm_a_bt(&dz, &w.data, n, go, fi, &mut mbuf);
-                // dh[j] += A_in[i,j] · mbuf[i]  (dense transpose scatter)
-                let mut dh_new = vec![0f32; n * fi];
-                for i in 0..n {
-                    let arow = &batch.a_in.data[i * b..i * b + n];
-                    let mr = &mbuf[i * fi..(i + 1) * fi];
-                    for (j, &a) in arow.iter().enumerate() {
-                        if a == 0.0 {
-                            continue;
-                        }
-                        for k in 0..fi {
-                            dh_new[j * fi + k] += a * mr[k];
-                        }
-                    }
-                }
-                dh = dh_new;
-            }
-            grads[li] = gw;
-        }
-
-        let t = state.step as f32;
-        for li in 0..l {
-            adam_update(
-                &mut state.weights[li].data,
-                &grads[li],
-                &mut state.m[li].data,
-                &mut state.v[li].data,
-                t,
-                lr,
-            );
-        }
+        adam_update_pooled(
+            &mut state.weights,
+            &mut state.m,
+            &mut state.v,
+            &self.ws.grads,
+            &self.ws.spans,
+            state.step as f32,
+            lr,
+            self.threads,
+        );
         Ok((loss, hiddens))
     }
 }
@@ -615,7 +866,7 @@ mod tests {
     use super::*;
     use crate::coordinator::batch::BatchAssembler;
     use crate::coordinator::inference::full_forward;
-    use crate::graph::{Dataset, Labels, Split};
+    use crate::graph::{Csr, Dataset, Labels, Split};
     use crate::norm::NormConfig;
     use crate::util::Rng;
 
@@ -677,7 +928,8 @@ mod tests {
         asm.assemble(ds, &nodes)
     }
 
-    /// Central finite differences over every weight entry.
+    /// Central finite differences over every weight entry, checked
+    /// against the **pooled** engine (the production path).
     fn check_grads(task: Task, residual: bool, tol: f32) {
         let ds = tiny_ds(task);
         // square layers so the residual variant is exercised for real
@@ -687,7 +939,9 @@ mod tests {
         }
         let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
         let weights = rand_weights(&spec, 21);
-        let (_, grads) = host_grads(&spec, &weights, &batch, 2).unwrap();
+        let mut ws = BackwardWorkspace::new();
+        host_grads_pooled(&spec, &weights, &batch, 2, &mut ws).unwrap();
+        let grads: Vec<Vec<f32>> = ws.grad_layers().iter().map(|s| s.to_vec()).collect();
         let eps = 2e-3f32;
         for li in 0..spec.layers {
             for e in 0..weights[li].data.len() {
@@ -722,18 +976,33 @@ mod tests {
         check_grads(Task::Multiclass, true, 5e-3);
     }
 
+    /// The pooled engine agrees with the retained scalar backward (the
+    /// dense-derived oracle) at several pool widths — loss bitwise,
+    /// gradients within the dot-reassociation tolerance.
     #[test]
-    fn adam_single_step_known_values() {
-        let mut w = vec![1.0f32];
-        let g = vec![0.5f32];
-        let mut m = vec![0.0f32];
-        let mut v = vec![0.0f32];
-        adam_update(&mut w, &g, &mut m, &mut v, 1.0, 0.1);
-        // m = 0.05, v = 0.00025; bias-corrected mhat = 0.5, vhat = 0.25
-        assert!((m[0] - 0.05).abs() < 1e-7);
-        assert!((v[0] - 0.00025).abs() < 1e-9);
-        // w -= 0.1 * 0.5 / (0.5 + eps) ≈ 1 - 0.1
-        assert!((w[0] - 0.9).abs() < 1e-5, "w = {}", w[0]);
+    fn pooled_grads_match_scalar_oracle() {
+        for task in [Task::Multiclass, Task::Multilabel] {
+            let ds = tiny_ds(task);
+            let spec = ModelSpec::gcn(task, 3, 3, 5, 2, 8);
+            let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+            let weights = rand_weights(&spec, 9);
+            let (loss_s, grads_s) = host_grads_scalar(&spec, &weights, &batch, 2).unwrap();
+            for threads in [1usize, 2, 8] {
+                let mut ws = BackwardWorkspace::new();
+                let loss_p =
+                    host_grads_pooled(&spec, &weights, &batch, threads, &mut ws).unwrap();
+                assert_eq!(loss_p.to_bits(), loss_s.to_bits(), "loss t={threads}");
+                for (li, gs) in grads_s.iter().enumerate() {
+                    let gp = ws.grad_layers()[li].to_vec();
+                    for (e, (a, b)) in gp.iter().zip(gs).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-5 + 1e-4 * b.abs(),
+                            "layer {li} entry {e} t={threads}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -775,16 +1044,38 @@ mod tests {
         assert_eq!(state.step, 31);
     }
 
+    /// The zero-allocation contract: after the first step sized every
+    /// workspace buffer, further steps reuse them in place.
     #[test]
-    fn vrgcn_step_runs_and_returns_hiddens() {
+    fn train_steps_reuse_workspace_allocations() {
         let ds = tiny_ds(Task::Multiclass);
-        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 8, 2, 8);
         let mut hb = HostBackend::new();
         hb.register_model("m", spec.clone());
-        let mut state = TrainState::init(&spec, 5);
+        let mut state = TrainState::init(&spec, 7);
+        let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+        hb.train_step("m", &mut state, 0.05, &batch).unwrap();
+        let ptrs = (
+            hb.ws.grads.as_ptr(),
+            hb.ws.dz.as_ptr(),
+            hb.ws.mbuf.as_ptr(),
+            hb.ws.ps[0].as_ptr(),
+            hb.ws.zs[1].as_ptr(),
+        );
+        for _ in 0..3 {
+            hb.train_step("m", &mut state, 0.05, &batch).unwrap();
+        }
+        assert_eq!(ptrs.0, hb.ws.grads.as_ptr());
+        assert_eq!(ptrs.1, hb.ws.dz.as_ptr());
+        assert_eq!(ptrs.2, hb.ws.mbuf.as_ptr());
+        assert_eq!(ptrs.3, hb.ws.ps[0].as_ptr());
+        assert_eq!(ptrs.4, hb.ws.zs[1].as_ptr());
+    }
+
+    fn tiny_vrgcn_batch(ds: &Dataset, b: usize, seed: u64) -> VrgcnBatch {
         let n = ds.n();
-        let b = 8;
-        // dense block with plain row-normalized entries as A_in, zero Hc
+        // dense block with plain row-normalized entries as A_in, plus
+        // non-zero Hc rows so the stop-gradient path is exercised
         let mut a_in = Tensor::zeros(vec![b, b]);
         for v in 0..n {
             let deg = ds.graph.degree(v) as f32 + 1.0;
@@ -792,6 +1083,15 @@ mod tests {
             for &u in ds.graph.neighbors(v) {
                 a_in.data[v * b + u as usize] = 1.0 / deg;
             }
+        }
+        let mut rng = Rng::new(seed);
+        let mut hcs = Vec::new();
+        for fd in [3usize, 4] {
+            let mut hc = Tensor::zeros(vec![b, fd]);
+            for x in hc.data[..n * fd].iter_mut() {
+                *x = (rng.f32() - 0.5) * 0.3;
+            }
+            hcs.push(hc);
         }
         let mut x = Tensor::zeros(vec![b, 3]);
         x.data[..n * 3].copy_from_slice(&ds.features);
@@ -801,14 +1101,18 @@ mod tests {
             ds.labels.write_row(v, 2, &mut y.data[v * 2..(v + 1) * 2]);
             mask.data[v] = 1.0;
         }
-        let vb = VrgcnBatch {
-            a_in,
-            hcs: vec![Tensor::zeros(vec![b, 3]), Tensor::zeros(vec![b, 4])],
-            x,
-            y,
-            mask,
-            n_real: n,
-        };
+        VrgcnBatch { a_in, hcs, x, y, mask, n_real: n }
+    }
+
+    #[test]
+    fn vrgcn_step_runs_and_returns_hiddens() {
+        let ds = tiny_ds(Task::Multiclass);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
+        let mut hb = HostBackend::new();
+        hb.register_model("m", spec.clone());
+        let mut state = TrainState::init(&spec, 5);
+        let b = 8;
+        let vb = tiny_vrgcn_batch(&ds, b, 99);
         let (first, hiddens) = hb.vrgcn_step("m", &mut state, 0.05, &vb).unwrap();
         assert!(first.is_finite());
         assert_eq!(hiddens.len(), 1);
@@ -818,6 +1122,38 @@ mod tests {
             last = hb.vrgcn_step("m", &mut state, 0.05, &vb).unwrap().0;
         }
         assert!(last < first, "vrgcn loss did not drop: {first} -> {last}");
+    }
+
+    /// Central finite differences over the VR-GCN step's weights,
+    /// against a scalar dense-`A_in` loss oracle — covers the shared
+    /// backward sweep with the inline-diagonal transpose.
+    #[test]
+    fn vrgcn_grads_match_finite_differences() {
+        let ds = tiny_ds(Task::Multiclass);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
+        let weights = rand_weights(&spec, 17);
+        let vb = tiny_vrgcn_batch(&ds, 8, 23);
+        let mut ws = BackwardWorkspace::new();
+        vrgcn_grads(&spec, &weights, &vb, 2, &mut ws).unwrap();
+        let grads: Vec<Vec<f32>> = ws.grad_layers().iter().map(|s| s.to_vec()).collect();
+        let eps = 2e-3f32;
+        let tol = 5e-3f32;
+        for li in 0..spec.layers {
+            for e in 0..weights[li].data.len() {
+                let mut wp = weights.clone();
+                wp[li].data[e] += eps;
+                let lp = vrgcn_loss(&spec, &wp, &vb);
+                let mut wm = weights.clone();
+                wm[li].data[e] -= eps;
+                let lm = vrgcn_loss(&spec, &wm, &vb);
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = grads[li][e];
+                assert!(
+                    (num - ana).abs() <= tol + 0.1 * num.abs().max(ana.abs()),
+                    "layer {li} entry {e}: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -2,15 +2,17 @@
 //! implementations — the PJRT [`Engine`] (loads the HLO text artifacts
 //! produced once by `python/compile/aot.py` and runs them on the PJRT
 //! CPU client; python is never on the training path) and the
-//! artifact-free [`HostBackend`] (the full pipeline on the host
-//! kernels).
+//! artifact-free [`HostBackend`] (forward on the tiled SpMM·GEMM
+//! kernels, gradients + Adam on the pooled [`backward`] engine).
 
 pub mod artifacts;
 pub mod backend;
+pub mod backward;
 pub mod exec;
 pub mod host;
 
 pub use artifacts::{ArtifactMeta, Kind, ManifestMissing, Registry};
 pub use backend::{Backend, ModelSpec, VrgcnBatch};
+pub use backward::BackwardWorkspace;
 pub use exec::{Engine, Tensor};
 pub use host::HostBackend;

@@ -5,6 +5,7 @@
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use json::Json;

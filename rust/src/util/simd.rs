@@ -1,0 +1,104 @@
+//! Contiguous f32-lane inner loops shared by the forward GEMM tile and
+//! the backward kernels (`runtime::backward`).
+//!
+//! There are no std::simd / intrinsics in the offline toolchain, so the
+//! kernels lean on autovectorization instead: the two primitives here
+//! expose the innermost loops in fixed-width `[f32; 8]` chunk form, the
+//! shape LLVM reliably turns into packed vector code.
+//!
+//! Numeric contracts:
+//!
+//! - [`axpy`] computes every output element independently
+//!   (`y[i] += a * x[i]`), so chunking does not change any result bit —
+//!   kernels built on it stay bit-identical to their scalar oracles.
+//! - [`dot`] accumulates into 8 independent lanes and reduces them in a
+//!   fixed order, so it is deterministic at every call site, but it
+//!   *reassociates* the sum relative to a strictly sequential scalar
+//!   accumulation — parity tests against scalar oracles use a small
+//!   tolerance instead of bit equality.
+
+/// `y[i] += a * x[i]` over the common prefix, in `[f32; 8]` chunks.
+///
+/// `x` and `y` must be the same length (debug-asserted); each element is
+/// updated independently, so the result is bit-identical to the naive
+/// scalar loop.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        for l in 0..8 {
+            yy[l] += a * xx[l];
+        }
+    }
+    for (yv, &xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yv += a * xv;
+    }
+}
+
+/// Dot product with 8 parallel lane accumulators and a fixed-order
+/// horizontal reduction.  Deterministic, but reassociated relative to a
+/// sequential scalar sum (see module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (aa, bb) in (&mut ac).zip(&mut bc) {
+        for l in 0..8 {
+            lanes[l] += aa[l] * bb[l];
+        }
+    }
+    let mut tail = 0f32;
+    for (&av, &bv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += av * bv;
+    }
+    let even = (lanes[0] + lanes[2]) + (lanes[4] + lanes[6]);
+    let odd = (lanes[1] + lanes[3]) + (lanes[5] + lanes[7]);
+    (even + odd) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 16, 33] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 0.37).collect();
+            let mut y: Vec<f32> = (0..n).map(|i| (i as f32) * 0.11 - 1.0).collect();
+            let mut expect = y.clone();
+            let a = 0.73f32;
+            for (e, &xv) in expect.iter_mut().zip(&x) {
+                *e += a * xv;
+            }
+            axpy(&mut y, &x, a);
+            for (got, want) in y.iter().zip(&expect) {
+                assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_close_to_scalar() {
+        for n in [0usize, 1, 5, 8, 13, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.1).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 3 % 13) as f32 - 6.0) * 0.2).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!(
+                (got - scalar).abs() <= 1e-5 * scalar.abs().max(1.0),
+                "n={n}: {got} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_deterministic() {
+        let a: Vec<f32> = (0..97).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..97).map(|i| (i as f32).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+    }
+}

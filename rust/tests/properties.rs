@@ -402,6 +402,223 @@ fn prop_host_backend_forward_matches_full_forward() {
     });
 }
 
+// --------------------------------------------------------------------------
+// backward-engine invariants (runtime::backward)
+// --------------------------------------------------------------------------
+
+/// The pooled/tiled backward GEMM kernels vs their retained scalar
+/// oracles at pool widths 1/2/8: `gemm_pooled` and `gemm_at_b_pooled`
+/// are bit-identical (per-element accumulation order preserved);
+/// `gemm_a_bt_pooled` is within the 8-lane dot reassociation tolerance
+/// and still exactly width-independent.
+#[test]
+fn prop_backward_gemms_match_scalar_oracles() {
+    use cluster_gcn::runtime::backward::{
+        gemm, gemm_a_bt, gemm_a_bt_pooled, gemm_at_b, gemm_at_b_pooled, gemm_pooled,
+    };
+    forall(&cfg(18, 0xE5, 120), "backward_gemms", |rng, size| {
+        let n = 1 + rng.usize_below(size.max(2));
+        let f = 1 + rng.usize_below(140); // crosses K_PANEL/K_BLOCK boundaries
+        let g = 1 + rng.usize_below(70); // crosses COL_TILE
+        let p: Vec<f32> = (0..n * f)
+            .map(|_| if rng.bool_with(0.3) { 0.0 } else { rng.f32() - 0.5 })
+            .collect();
+        let dz: Vec<f32> = (0..n * g)
+            .map(|_| if rng.bool_with(0.2) { 0.0 } else { rng.f32() - 0.5 })
+            .collect();
+        let w: Vec<f32> = (0..f * g).map(|_| rng.f32() - 0.5).collect();
+
+        let mut z_oracle = vec![0f32; n * g];
+        gemm(&p, n, f, &w, g, &mut z_oracle);
+        let mut gw_oracle = vec![0f32; f * g];
+        gemm_at_b(&p, &dz, n, f, g, &mut gw_oracle);
+        let mut m_oracle = vec![0f32; n * f];
+        gemm_a_bt(&dz, &w, n, g, f, &mut m_oracle);
+
+        let mut m_first: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 8] {
+            let mut z = vec![f32::NAN; n * g];
+            gemm_pooled(&p, n, f, &w, g, threads, &mut z);
+            for (i, (a, b)) in z.iter().zip(&z_oracle).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("gemm t={threads} n={n} f={f} g={g} i={i}: {a} vs {b}"));
+                }
+            }
+            let mut gw = vec![f32::NAN; f * g];
+            gemm_at_b_pooled(&p, &dz, n, f, g, threads, &mut gw);
+            for (i, (a, b)) in gw.iter().zip(&gw_oracle).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "gemm_at_b t={threads} n={n} f={f} g={g} i={i}: {a} vs {b}"
+                    ));
+                }
+            }
+            let mut m = vec![f32::NAN; n * f];
+            gemm_a_bt_pooled(&dz, &w, n, g, f, threads, &mut m);
+            for (i, (a, b)) in m.iter().zip(&m_oracle).enumerate() {
+                if (a - b).abs() > 1e-5 + 1e-4 * b.abs() {
+                    return Err(format!(
+                        "gemm_a_bt t={threads} n={n} f={f} g={g} i={i}: {a} vs {b}"
+                    ));
+                }
+            }
+            match m_first.take() {
+                None => m_first = Some(m),
+                Some(r) => {
+                    if m.iter().zip(&r).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err(format!("gemm_a_bt width-dependent at t={threads}"));
+                    }
+                    m_first = Some(r);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The `Âᵀ` transpose gather is bit-identical to the scalar scatter
+/// oracle over real assembled batch blocks, at pool widths 1/2/8.
+#[test]
+fn prop_adj_t_gather_matches_scatter_oracle() {
+    use cluster_gcn::runtime::backward::{scatter_adj_t, AdjT};
+    forall(&cfg(16, 0xE6, 90), "adj_t_gather", |rng, size| {
+        let ds = random_dataset(rng, size.max(8));
+        let b_max = ds.n().next_multiple_of(8);
+        let norm = if rng.bool_with(0.5) { NormConfig::PAPER_DEFAULT } else { NormConfig::ROW };
+        let mut asm = BatchAssembler::new(ds.n(), b_max, norm);
+        let take = 1 + rng.usize_below(ds.n());
+        let mut nodes: Vec<u32> = (0..ds.n() as u32).collect();
+        rng.shuffle(&mut nodes);
+        nodes.truncate(take);
+        let batch = asm.assemble(&ds, &nodes);
+        let blk = &batch.block;
+        let n = blk.n();
+        let f = 1 + rng.usize_below(20);
+        let m: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+
+        let mut oracle = vec![0f32; n * f];
+        scatter_adj_t(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop, &m, f, &mut oracle);
+        let mut adj_t = AdjT::new();
+        adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+        for threads in [1usize, 2, 8] {
+            let mut got = vec![f32::NAN; n * f];
+            adj_t.gather_into_pooled(&m, f, threads, &mut got);
+            for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("t={threads} n={n} f={f} i={i}: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The sparse-native batch contract: the assembler-built CSR block is
+/// structurally and bitwise identical to re-extracting the dense
+/// `n_real × n_real` prefix (the old densify→re-sparsify round trip),
+/// under arbitrary node subsets and norm configs.
+#[test]
+fn prop_sparse_block_matches_dense_extract() {
+    forall(&cfg(20, 0xE7, 100), "sparse_block", |rng, size| {
+        let ds = random_dataset(rng, size.max(8));
+        let b_max = ds.n().next_multiple_of(8);
+        let norm = match rng.usize_below(3) {
+            0 => NormConfig::PAPER_DEFAULT,
+            1 => NormConfig::ROW,
+            _ => NormConfig::ROW_LAMBDA1,
+        };
+        let mut asm = BatchAssembler::new(ds.n(), b_max, norm);
+        let take = 1 + rng.usize_below(ds.n());
+        let mut nodes: Vec<u32> = (0..ds.n() as u32).collect();
+        rng.shuffle(&mut nodes);
+        nodes.truncate(take);
+        let batch = asm.assemble(&ds, &nodes);
+        let blk = &batch.block;
+        let n = batch.n_real;
+        if blk.n() != n {
+            return Err(format!("block rows {} != n_real {n}", blk.n()));
+        }
+        for u in 0..n {
+            let row = &blk.cols[blk.offsets[u]..blk.offsets[u + 1]];
+            if !row.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("row {u} columns not strictly ascending"));
+            }
+            let mut nnz_dense = 0;
+            for v in 0..n {
+                let dense = batch.a.data[u * b_max + v];
+                if v == u {
+                    if blk.self_loop[u].to_bits() != dense.to_bits() {
+                        return Err(format!("diag {u}: {} vs {dense}", blk.self_loop[u]));
+                    }
+                } else if dense != 0.0 {
+                    nnz_dense += 1;
+                    let Ok(pos) = row.binary_search(&(v as u32)) else {
+                        return Err(format!("dense edge ({u},{v}) missing from CSR"));
+                    };
+                    let sparse = blk.vals[blk.offsets[u] + pos];
+                    if sparse.to_bits() != dense.to_bits() {
+                        return Err(format!("({u},{v}): {sparse} vs {dense}"));
+                    }
+                }
+            }
+            if nnz_dense != row.len() {
+                return Err(format!("row {u}: {} CSR entries vs {nnz_dense} dense", row.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end backward parity: the pooled engine (carried sparse block,
+/// tiled kernels, flat arena) vs the retained scalar oracle
+/// (dense-extracted block, scalar kernels) — loss bitwise, gradients
+/// within the dot-reassociation tolerance, at pool widths 1/2/8.
+#[test]
+fn prop_host_backward_matches_scalar_oracle() {
+    use cluster_gcn::runtime::host::host_grads_scalar;
+    use cluster_gcn::runtime::{HostBackend, ModelSpec};
+    forall(&cfg(10, 0xE8, 80), "host_backward_parity", |rng, size| {
+        let ds = random_dataset(rng, size.max(8));
+        let n = ds.n();
+        let b_max = n.next_multiple_of(8);
+        let f_hid = 1 + rng.usize_below(24);
+        let layers = 2 + rng.usize_below(2);
+        let spec = ModelSpec::gcn(ds.task, layers, ds.f_in, f_hid, ds.num_classes, b_max);
+        let weights: Vec<Tensor> = spec
+            .weight_shapes
+            .iter()
+            .map(|&(fi, fo)| {
+                Tensor::new(vec![fi, fo], (0..fi * fo).map(|_| rng.f32() - 0.5).collect())
+            })
+            .collect();
+        let norm = if rng.bool_with(0.5) { NormConfig::PAPER_DEFAULT } else { NormConfig::ROW };
+        let mut asm = BatchAssembler::new(n, b_max, norm);
+        let nodes: Vec<u32> = (0..n as u32).collect();
+        let batch = asm.assemble(&ds, &nodes);
+        let (loss_s, grads_s) =
+            host_grads_scalar(&spec, &weights, &batch, 2).map_err(|e| e.to_string())?;
+        for threads in [1usize, 2, 8] {
+            let mut hb = HostBackend::with_threads(threads);
+            hb.register_model("m", spec.clone());
+            let (loss_p, grads_p) =
+                hb.loss_and_grads("m", &weights, &batch).map_err(|e| e.to_string())?;
+            if loss_p.to_bits() != loss_s.to_bits() {
+                return Err(format!("loss t={threads}: {loss_p} vs {loss_s}"));
+            }
+            for (li, (gp, gs)) in grads_p.iter().zip(&grads_s).enumerate() {
+                for (e, (a, b)) in gp.iter().zip(gs).enumerate() {
+                    if (a - b).abs() > 1e-5 + 1e-4 * b.abs() {
+                        return Err(format!(
+                            "t={threads} layer {li} entry {e}: {a} vs {b}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Reused-batch assembly is indistinguishable from fresh assembly under
 /// arbitrary batch sequences (the dirty-row clearing never leaks).
 #[test]
