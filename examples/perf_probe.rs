@@ -17,7 +17,10 @@
 //!    `scoped_chunks` dispatch overhead.
 //! 4. **assembly** — per-step batch assembly: allocate-per-step vs the
 //!    reused zero-allocation `assemble_into` path.
-//! 5. **PJRT loop** — the original per-step phase breakdown (assembly /
+//! 5. **sharded scaling** — data-parallel throughput (batches/s) of
+//!    `ShardedBackend` at shards ∈ {1, 2, 4}; writes
+//!    `bench_results/BENCH_sharded.json`.
+//! 6. **PJRT loop** — the original per-step phase breakdown (assembly /
 //!    literal / execute / sync); skipped with a note when no compiled
 //!    artifacts are available.
 //!
@@ -311,6 +314,84 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
     let _ = std::fs::write("bench_results/BENCH_backward.json", row.to_string());
 }
 
+/// Sharded-scaling probe: cluster batches pulled through
+/// `Backend::step_from` on a `ShardedBackend` at shards ∈ {1, 2, 4} —
+/// batches/s is the data-parallel throughput (a sharded step consumes
+/// one batch per replica).  Writes the cumulative snapshot
+/// `bench_results/BENCH_sharded.json`.
+fn sharded_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, steps: usize) {
+    use cluster_gcn::coordinator::source::{BatchSource, ClusterSource};
+    use cluster_gcn::coordinator::trainer::TrainState;
+    use cluster_gcn::runtime::{Backend, ModelSpec, ShardedBackend};
+
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, 128, ds.num_classes, b_max);
+    let steps = steps.max(8);
+    let mut rates: Vec<(usize, f64)> = Vec::new();
+    println!("== sharded scaling ({steps} cluster batches, b_max {b_max}) ==");
+    for shards in [1usize, 2, 4] {
+        let mut backend = ShardedBackend::host(shards);
+        backend.register_model("m", spec.clone());
+        let mut src = ClusterSource::new(
+            ds,
+            sampler.clone(),
+            &spec,
+            NormConfig::PAPER_DEFAULT,
+            7,
+        )
+        .expect("probe sampler fits b_max");
+        let mut state = TrainState::init(&spec, 1);
+        let mut scratch = src.new_batch();
+        // warm: one step sizes every replica workspace
+        src.begin_epoch(1);
+        backend
+            .step_from("m", &mut state, 0.01, &mut src, 0, &mut scratch)
+            .expect("warm step");
+
+        let t = Timer::start();
+        let mut consumed = 0usize;
+        let mut epoch = 1usize;
+        'run: loop {
+            epoch += 1;
+            let n = src.begin_epoch(epoch);
+            let mut i = 0usize;
+            while i < n {
+                if consumed >= steps {
+                    break 'run;
+                }
+                let out = backend
+                    .step_from("m", &mut state, 0.01, &mut src, i, &mut scratch)
+                    .expect("sharded step");
+                i += out.consumed;
+                consumed += out.consumed;
+            }
+        }
+        let rate = consumed as f64 / t.secs();
+        println!(
+            "shards {shards}   {rate:9.1} batches/s{}",
+            match rates.first() {
+                Some(&(_, base)) => format!("   ({:.2}x vs shards 1)", rate / base),
+                None => String::new(),
+            }
+        );
+        rates.push((shards, rate));
+    }
+
+    let base = rates[0].1;
+    let mut pairs: Vec<(String, Json)> = vec![
+        ("kind".into(), Json::str("sharded_scaling")),
+        ("batches".into(), Json::num(steps as f64)),
+        ("b_max".into(), Json::num(b_max as f64)),
+    ];
+    for &(shards, rate) in &rates {
+        pairs.push((format!("shards_{shards}_batches_per_s"), Json::num(rate)));
+        pairs.push((format!("shards_{shards}_speedup"), Json::num(rate / base)));
+    }
+    let row = Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
+    bs::dump_row("perf_probe", row.clone());
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write("bench_results/BENCH_sharded.json", row.to_string());
+}
+
 fn dispatch_probe() {
     let threads = pool::default_threads();
     let reps = 300;
@@ -476,6 +557,7 @@ fn main() -> anyhow::Result<()> {
         ClusterSampler::new(parts_to_clusters(&part, p.default_partitions), p.default_q);
     backward_probe(&ds, &sampler, p.b_max, iters);
     assembly_probe(&ds, &sampler, p.b_max, steps.max(20));
+    sharded_probe(&ds, &sampler, p.b_max, steps.min(48));
 
     let short = preset_name.trim_end_matches("_like");
     let artifact = format!("{short}_L{layers}");

@@ -18,9 +18,16 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+echo "== cargo build --examples =="
+cargo build --examples
+
 echo "== backward parity (pool widths 1/2/8 inside each test) + FD gradients, release =="
 cargo test --release -q backward
 cargo test --release -q grads_match
+
+echo "== shards parity gate (shards=1 bit-identical to HostBackend on a tiny SBM) =="
+cargo test --release -q --test driver sharded
+cargo test --release -q --test driver prefetch
 
 echo "== backward bench smoke (release perf_probe on cora_like) =="
 CGCN_ITERS=1 cargo run --release --example perf_probe -- cora_like 2 20

@@ -73,6 +73,113 @@ pub fn embeddings_computed(union: usize, layers: usize) -> usize {
     union * layers
 }
 
+/// [`crate::coordinator::source::BatchSource`] for vanilla
+/// neighborhood-expansion SGD: per epoch, the shuffled training nodes
+/// sliced into target batches; per batch, the full L-hop expansion
+/// (capped at `b_max`, which *underestimates* vanilla SGD's true cost —
+/// the comparison is conservative in the baseline's favor) assembled
+/// with the loss masked to the targets.
+pub struct ExpansionSource<'a> {
+    ds: &'a crate::graph::Dataset,
+    assembler: crate::coordinator::batch::BatchAssembler,
+    layers: usize,
+    f_hid: usize,
+    targets_per_batch: usize,
+    seed: u64,
+    train_nodes: Vec<u32>,
+    batches: Vec<Vec<u32>>,
+    truncated: u64,
+    max_batch_bytes: usize,
+}
+
+impl<'a> ExpansionSource<'a> {
+    /// Source over `ds` shaped by `spec`, `targets_per_batch` targets
+    /// per step.
+    pub fn new(
+        ds: &'a crate::graph::Dataset,
+        spec: &crate::runtime::ModelSpec,
+        targets_per_batch: usize,
+        norm: crate::norm::NormConfig,
+        seed: u64,
+    ) -> ExpansionSource<'a> {
+        ExpansionSource {
+            ds,
+            assembler: crate::coordinator::batch::BatchAssembler::new(
+                ds.n(),
+                spec.b_max,
+                norm,
+            ),
+            layers: spec.layers,
+            f_hid: spec.f_hid,
+            targets_per_batch: targets_per_batch.max(1),
+            seed,
+            train_nodes: ds.nodes_in_split(crate::graph::Split::Train),
+            batches: Vec::new(),
+            truncated: 0,
+            max_batch_bytes: 0,
+        }
+    }
+}
+
+impl crate::coordinator::source::BatchSource for ExpansionSource<'_> {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.assembler.b_max, self.ds.f_in, self.ds.num_classes)
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> usize {
+        let mut rng = crate::coordinator::source::epoch_rng(
+            self.seed,
+            0xE0A5_1011_2233_4455,
+            epoch,
+        );
+        self.batches =
+            target_batches(&self.train_nodes, self.targets_per_batch, &mut rng);
+        self.batches.len()
+    }
+
+    fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    fn assemble(&mut self, i: usize, into: &mut crate::coordinator::batch::Batch) {
+        let targets = &self.batches[i];
+        let exp = expand(&self.ds.graph, targets, self.layers, self.assembler.b_max);
+        if exp.truncated {
+            self.truncated += 1;
+        }
+        self.assembler.assemble_into(self.ds, &exp.nodes, into);
+        // loss only on the targets (first in local order)
+        let n_targets = targets.len().min(exp.nodes.len());
+        into.mask.data.iter_mut().for_each(|m| *m = 0.0);
+        for m in into.mask.data.iter_mut().take(n_targets) {
+            *m = 1.0;
+        }
+        into.n_train = n_targets;
+        self.max_batch_bytes = self.max_batch_bytes.max(
+            into.bytes() + exp.nodes.len() * self.f_hid * 4 * self.layers,
+        );
+    }
+
+    fn stats(&self) -> crate::coordinator::source::SourceStats {
+        crate::coordinator::source::SourceStats {
+            max_batch_bytes: self.max_batch_bytes,
+            utilization: 0.0,
+        }
+    }
+}
+
+impl Drop for ExpansionSource<'_> {
+    fn drop(&mut self) {
+        if self.truncated > 0 {
+            eprintln!(
+                "[expansion] {} batches hit the b_max cap \
+                 (vanilla SGD cost underestimated)",
+                self.truncated
+            );
+        }
+    }
+}
+
 /// Train with vanilla neighborhood-expansion SGD through a plain
 /// train-kind model on any backend.  Thin wrapper over
 /// [`train_expansion_observed`] with no observer attached.
@@ -93,10 +200,9 @@ pub fn train_expansion(
     )
 }
 
-/// [`train_expansion`] with an observer.  Targets per batch are sized
-/// so the full L-hop expansion usually fits `b_max`; overflowing unions
-/// are capped (and counted), which *underestimates* vanilla SGD's true
-/// cost — i.e. the comparison is conservative in the baseline's favor.
+/// [`train_expansion`] with an observer.  Pre-driver compatibility
+/// entry: builds a [`crate::session::Driver`] over an
+/// [`ExpansionSource`] and drains it.
 pub fn train_expansion_observed(
     backend: &mut dyn crate::runtime::Backend,
     ds: &crate::graph::Dataset,
@@ -105,93 +211,23 @@ pub fn train_expansion_observed(
     opts: &crate::coordinator::trainer::TrainOptions,
     obs: &mut dyn crate::session::Observer,
 ) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
-    use crate::coordinator::batch::BatchAssembler;
-    use crate::coordinator::trainer::{evaluate_cached, CurvePoint, TrainResult, TrainState};
-    use crate::graph::Split;
-    use crate::norm::NormCache;
-    use crate::session::Event;
-    use crate::util::Timer;
+    use crate::session::driver::{BackendSlot, Driver, DriverSource};
+    use crate::session::TrainConfig;
 
     let spec = backend.model_spec(model)?;
-    backend.prepare(model)?;
-    let mut state = TrainState::init(&spec, opts.seed);
-    let mut rng = Rng::new(opts.seed ^ 0xE0A5_1011_2233_4455);
-    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
-    let mut batch = assembler.new_batch(ds);
-    let mut norm_cache = NormCache::new();
-    let train_nodes = ds.nodes_in_split(Split::Train);
-    let eval_nodes = ds.nodes_in_split(opts.eval_split);
-
-    let mut curve = Vec::new();
-    let mut train_seconds = 0.0;
-    let mut steps_done = 0u64;
-    let mut peak_bytes = 0usize;
-    let mut truncated_batches = 0u64;
-
-    for epoch in 1..=opts.epochs {
-        let timer = Timer::start();
-        let batches = target_batches(&train_nodes, targets_per_batch, &mut rng);
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for targets in &batches {
-            if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
-                break;
-            }
-            let exp = expand(&ds.graph, targets, spec.layers, spec.b_max);
-            if exp.truncated {
-                truncated_batches += 1;
-            }
-            assembler.assemble_into(ds, &exp.nodes, &mut batch);
-            // loss only on the targets (first in local order)
-            batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
-            for i in 0..targets.len().min(exp.nodes.len()) {
-                batch.mask.data[i] = 1.0;
-            }
-            peak_bytes = peak_bytes.max(
-                batch.bytes()
-                    + state.param_bytes()
-                    + exp.nodes.len() * spec.f_hid * 4 * spec.layers,
-            );
-            let loss = backend.train_step(model, &mut state, opts.lr, &batch)?;
-            epoch_loss += loss as f64;
-            nb += 1;
-            steps_done += 1;
-        }
-        train_seconds += timer.secs();
-        obs.on_event(&Event::EpochEnd {
-            epoch,
-            train_seconds,
-            mean_loss: epoch_loss / nb.max(1) as f64,
-        });
-        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
-            || epoch == opts.epochs;
-        if do_eval {
-            let f1 = evaluate_cached(
-                ds, &state.weights, opts.norm, spec.residual, &eval_nodes, &mut norm_cache,
-            );
-            curve.push(CurvePoint {
-                epoch,
-                train_seconds,
-                train_loss: epoch_loss / nb.max(1) as f64,
-                eval_f1: f1,
-            });
-            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
-        }
-    }
-    if truncated_batches > 0 {
-        eprintln!(
-            "[expansion] {truncated_batches} batches hit the b_max cap \
-             (vanilla SGD cost underestimated)"
-        );
-    }
-    Ok(TrainResult {
-        state,
-        curve,
-        train_seconds,
-        steps: steps_done,
-        peak_bytes,
-        avg_within_edges_per_node: 0.0,
-    })
+    let cfg = TrainConfig::from(opts);
+    let source = ExpansionSource::new(ds, &spec, targets_per_batch, cfg.norm, cfg.seed);
+    let mut backend = crate::runtime::PrefetchBackend::new(backend);
+    let mut driver = Driver::from_parts(
+        BackendSlot::Borrowed(&mut backend),
+        ds,
+        model.to_string(),
+        cfg,
+        DriverSource::Batched(Box::new(source)),
+        None,
+    )?;
+    driver.drive(obs)?;
+    driver.into_result()
 }
 
 #[cfg(test)]

@@ -11,14 +11,12 @@
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::BatchAssembler;
-use crate::coordinator::trainer::{
-    evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState,
-};
+use crate::coordinator::source::BatchSource;
+use crate::coordinator::trainer::{TrainOptions, TrainResult};
 use crate::graph::{Dataset, Split};
-use crate::norm::NormCache;
 use crate::runtime::Backend;
-use crate::session::{Event, NullObserver, Observer};
-use crate::util::{Rng, Timer};
+use crate::session::{NullObserver, Observer};
+use crate::util::Rng;
 
 #[derive(Clone, Debug)]
 pub struct SageParams {
@@ -114,6 +112,110 @@ pub fn sample_field(
     SampledField { nodes, edges, frontier_sizes, truncated }
 }
 
+/// [`BatchSource`] for GraphSAGE: per epoch, shuffled target batches;
+/// per batch, a sampled receptive field assembled over the *sampled*
+/// edge list with the loss masked to the targets.  Sampling draws from
+/// the source's per-epoch RNG in batch order, so the stream is
+/// identical whether batches are assembled inline or one step ahead by
+/// a prefetching backend.
+pub struct SageSource<'a> {
+    ds: &'a Dataset,
+    assembler: BatchAssembler,
+    params: SageParams,
+    layers: usize,
+    f_hid: usize,
+    seed: u64,
+    rng: Rng,
+    train_nodes: Vec<u32>,
+    batches: Vec<Vec<u32>>,
+    union_total: u64,
+    batches_total: u64,
+    max_batch_bytes: usize,
+}
+
+impl<'a> SageSource<'a> {
+    /// Source over `ds` shaped by `spec`; errors when the per-layer
+    /// sample counts do not match the model depth.
+    pub fn new(
+        ds: &'a Dataset,
+        spec: &crate::runtime::ModelSpec,
+        params: SageParams,
+        norm: crate::norm::NormConfig,
+        seed: u64,
+    ) -> Result<SageSource<'a>> {
+        if params.samples.len() != spec.layers {
+            return Err(anyhow!(
+                "sage samples {:?} must match model depth {}",
+                params.samples,
+                spec.layers
+            ));
+        }
+        Ok(SageSource {
+            ds,
+            assembler: BatchAssembler::new(ds.n(), spec.b_max, norm),
+            params,
+            layers: spec.layers,
+            f_hid: spec.f_hid,
+            seed,
+            rng: Rng::new(seed),
+            train_nodes: ds.nodes_in_split(Split::Train),
+            batches: Vec::new(),
+            union_total: 0,
+            batches_total: 0,
+            max_batch_bytes: 0,
+        })
+    }
+}
+
+impl BatchSource for SageSource<'_> {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.assembler.b_max, self.ds.f_in, self.ds.num_classes)
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> usize {
+        self.rng = crate::coordinator::source::epoch_rng(
+            self.seed,
+            0x5A6E_0000_3333_4444,
+            epoch,
+        );
+        self.batches =
+            super::expansion::target_batches(&self.train_nodes, self.params.batch, &mut self.rng);
+        self.batches.len()
+    }
+
+    fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    fn assemble(&mut self, i: usize, into: &mut crate::coordinator::batch::Batch) {
+        let targets = &self.batches[i];
+        let field =
+            sample_field(self.ds, targets, &self.params, self.assembler.b_max, &mut self.rng);
+        self.assembler.assemble_with_edges_into(self.ds, &field.nodes, &field.edges, into);
+        // loss only on the targets (they are first in local order)
+        let n_targets = targets.len().min(field.nodes.len());
+        into.mask.data.iter_mut().for_each(|m| *m = 0.0);
+        for m in into.mask.data.iter_mut().take(n_targets) {
+            *m = 1.0;
+        }
+        into.n_train = n_targets;
+        self.union_total += field.nodes.len() as u64;
+        self.batches_total += 1;
+        self.max_batch_bytes = self.max_batch_bytes.max(
+            // per-layer activations over the whole union
+            into.bytes() + field.nodes.len() * self.f_hid * 4 * self.layers,
+        );
+    }
+
+    fn stats(&self) -> crate::coordinator::source::SourceStats {
+        crate::coordinator::source::SourceStats {
+            max_batch_bytes: self.max_batch_bytes,
+            // for sage this reports avg sampled-union size per batch
+            utilization: self.union_total as f64 / self.batches_total.max(1) as f64,
+        }
+    }
+}
+
 /// Train with GraphSAGE batching through the given train-kind model
 /// (typically the `*_sage_*` configs with enlarged b_max) on any
 /// backend.  Thin wrapper over [`train_graphsage_observed`].
@@ -127,7 +229,9 @@ pub fn train_graphsage(
     train_graphsage_observed(backend, ds, model, params, opts, &mut NullObserver)
 }
 
-/// [`train_graphsage`] with an observer.
+/// [`train_graphsage`] with an observer.  Pre-driver compatibility
+/// entry: builds a [`crate::session::Driver`] over a [`SageSource`] and
+/// drains it.
 pub fn train_graphsage_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
@@ -136,89 +240,23 @@ pub fn train_graphsage_observed(
     opts: &TrainOptions,
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
+    use crate::session::driver::{BackendSlot, Driver, DriverSource};
+    use crate::session::TrainConfig;
+
     let spec = backend.model_spec(model)?;
-    if params.samples.len() != spec.layers {
-        return Err(anyhow!(
-            "sage samples {:?} must match model depth {}",
-            params.samples,
-            spec.layers
-        ));
-    }
-    backend.prepare(model)?;
-    let mut state = TrainState::init(&spec, opts.seed);
-    let mut rng = Rng::new(opts.seed ^ 0x5A6E_0000_3333_4444);
-    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
-    let mut batch = assembler.new_batch(ds);
-    let mut norm_cache = NormCache::new();
-    let train_nodes = ds.nodes_in_split(Split::Train);
-    let eval_nodes = ds.nodes_in_split(opts.eval_split);
-
-    let mut curve = Vec::new();
-    let mut train_seconds = 0.0;
-    let mut steps_done = 0u64;
-    let mut peak_bytes = 0usize;
-    let mut union_total = 0u64;
-    let mut batches_total = 0u64;
-
-    for epoch in 1..=opts.epochs {
-        let timer = Timer::start();
-        let batches = super::expansion::target_batches(&train_nodes, params.batch, &mut rng);
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for targets in &batches {
-            if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
-                break;
-            }
-            let field = sample_field(ds, targets, params, spec.b_max, &mut rng);
-            assembler.assemble_with_edges_into(ds, &field.nodes, &field.edges, &mut batch);
-            // loss only on the targets (they are first in local order)
-            batch.mask.data.iter_mut().for_each(|m| *m = 0.0);
-            for i in 0..targets.len() {
-                batch.mask.data[i] = 1.0;
-            }
-            union_total += field.nodes.len() as u64;
-            batches_total += 1;
-            peak_bytes = peak_bytes.max(
-                batch.bytes()
-                    + state.param_bytes()
-                    // per-layer activations over the whole union
-                    + field.nodes.len() * spec.f_hid * 4 * spec.layers,
-            );
-            let loss = backend.train_step(model, &mut state, opts.lr, &batch)?;
-            epoch_loss += loss as f64;
-            nb += 1;
-            steps_done += 1;
-        }
-        train_seconds += timer.secs();
-        obs.on_event(&Event::EpochEnd {
-            epoch,
-            train_seconds,
-            mean_loss: epoch_loss / nb.max(1) as f64,
-        });
-        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
-            || epoch == opts.epochs;
-        if do_eval {
-            let f1 = evaluate_cached(
-                ds, &state.weights, opts.norm, spec.residual, &eval_nodes, &mut norm_cache,
-            );
-            curve.push(CurvePoint {
-                epoch,
-                train_seconds,
-                train_loss: epoch_loss / nb.max(1) as f64,
-                eval_f1: f1,
-            });
-            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
-        }
-    }
-    Ok(TrainResult {
-        state,
-        curve,
-        train_seconds,
-        steps: steps_done,
-        peak_bytes,
-        // for sage this reports avg sampled-union size per batch
-        avg_within_edges_per_node: union_total as f64 / batches_total.max(1) as f64,
-    })
+    let cfg = TrainConfig::from(opts);
+    let source = SageSource::new(ds, &spec, params.clone(), cfg.norm, cfg.seed)?;
+    let mut backend = crate::runtime::PrefetchBackend::new(backend);
+    let mut driver = Driver::from_parts(
+        BackendSlot::Borrowed(&mut backend),
+        ds,
+        model.to_string(),
+        cfg,
+        DriverSource::Batched(Box::new(source)),
+        None,
+    )?;
+    driver.drive(obs)?;
+    driver.into_result()
 }
 
 #[cfg(test)]

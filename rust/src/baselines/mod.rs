@@ -9,6 +9,6 @@ pub mod expansion;
 pub mod graphsage;
 pub mod vrgcn;
 
-pub use expansion::{train_expansion, train_expansion_observed};
-pub use graphsage::{train_graphsage, train_graphsage_observed, SageParams};
-pub use vrgcn::{train_vrgcn, train_vrgcn_observed, VrgcnParams};
+pub use expansion::{train_expansion, train_expansion_observed, ExpansionSource};
+pub use graphsage::{train_graphsage, train_graphsage_observed, SageParams, SageSource};
+pub use vrgcn::{train_vrgcn, train_vrgcn_observed, VrgcnParams, VrgcnSource};

@@ -23,14 +23,13 @@
 
 use anyhow::Result;
 
-use crate::coordinator::trainer::{
-    evaluate_cached, CurvePoint, TrainOptions, TrainResult, TrainState,
-};
+use crate::coordinator::source::{epoch_rng, SourceStats};
+use crate::coordinator::trainer::{TrainOptions, TrainResult};
 use crate::graph::{Dataset, Split};
-use crate::norm::NormCache;
-use crate::runtime::{Backend, Tensor, VrgcnBatch};
-use crate::session::{Event, NullObserver, Observer};
-use crate::util::{Rng, Timer};
+use crate::norm::{NormCache, NormConfig};
+use crate::runtime::{Backend, ModelSpec, Tensor, VrgcnBatch};
+use crate::session::{NullObserver, Observer};
+use crate::util::Rng;
 
 #[derive(Clone, Debug)]
 pub struct VrgcnParams {
@@ -76,6 +75,275 @@ impl History {
     }
 }
 
+/// VR-GCN's batch producer: per epoch, shuffled target batches; per
+/// step, the sampled receptive union, the scaled in-batch `A_in`, and
+/// the historical contributions `Hc_l` assembled into a [`VrgcnBatch`].
+/// Unlike the [`crate::coordinator::source::BatchSource`] methods, this
+/// source is **stateful across steps** — assembly reads the history its
+/// own steps refresh — so the [`crate::session::Driver`] runs it inline
+/// (no lookahead, no sharding) and calls [`VrgcnSource::refresh`] with
+/// each step's returned hidden activations.
+pub struct VrgcnSource<'a> {
+    ds: &'a Dataset,
+    params: VrgcnParams,
+    layers: usize,
+    b_max: usize,
+    f_in: usize,
+    f_hid: usize,
+    classes: usize,
+    norm: NormConfig,
+    seed: u64,
+    targets_per_batch: usize,
+    layer_dims: Vec<usize>,
+    history: History,
+    train_nodes: Vec<u32>,
+    rng: Rng,
+    batches: Vec<Vec<u32>>,
+    // reusable per-step buffers
+    local_of: Vec<u32>,
+    sampled: Vec<Vec<u32>>,
+    nodes: Vec<u32>,
+    vb: Option<VrgcnBatch>,
+    max_bytes: usize,
+}
+
+impl<'a> VrgcnSource<'a> {
+    /// Source over `ds` shaped by `spec`, targets sized depth-aware so
+    /// the sampled receptive field fits `b_max` (receptive field ~
+    /// batch · (1+r)^(L-1), reproducing Table 9's scaling).
+    pub fn new(
+        ds: &'a Dataset,
+        spec: &ModelSpec,
+        params: VrgcnParams,
+        norm: NormConfig,
+        seed: u64,
+    ) -> VrgcnSource<'a> {
+        let l = spec.layers;
+        let growth = (1 + params.r).pow(l.saturating_sub(1) as u32) as usize;
+        let targets_per_batch = (spec.b_max / growth.max(1)).clamp(16, params.batch);
+        VrgcnSource {
+            ds,
+            layers: l,
+            b_max: spec.b_max,
+            f_in: ds.f_in,
+            f_hid: spec.f_hid,
+            classes: ds.num_classes,
+            norm,
+            seed,
+            targets_per_batch,
+            layer_dims: spec.layer_in_dims(),
+            history: History::new(ds.n(), spec.f_hid, l - 1),
+            train_nodes: ds.nodes_in_split(Split::Train),
+            rng: Rng::new(seed),
+            batches: Vec::new(),
+            local_of: vec![u32::MAX; ds.n()],
+            sampled: Vec::new(),
+            nodes: Vec::new(),
+            vb: None,
+            max_bytes: 0,
+            params,
+        }
+    }
+
+    /// Start epoch `epoch` (1-based); returns the batch count.  The
+    /// target-batch stream is a pure function of `(seed, epoch)`.
+    pub fn begin_epoch(&mut self, epoch: usize) -> usize {
+        self.rng = epoch_rng(self.seed, 0x7766_5544_3322_1100, epoch);
+        self.batches = super::expansion::target_batches(
+            &self.train_nodes,
+            self.targets_per_batch,
+            &mut self.rng,
+        );
+        self.batches.len()
+    }
+
+    /// Batches in the current epoch's plan.
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// True when the current epoch has no batches.
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+
+    /// Assemble batch `i` of the current epoch: the sampled receptive
+    /// union, `A_in`, the `Hc_l` contributions (through `cache`'s
+    /// normalized adjacency, computed once per run), features, labels,
+    /// and the target mask.  The returned batch stays valid until the
+    /// next `assemble`.
+    pub fn assemble(&mut self, i: usize, cache: &mut NormCache) -> &VrgcnBatch {
+        // clear the previous batch's local-id map
+        for &v in &self.nodes {
+            self.local_of[v as usize] = u32::MAX;
+        }
+        self.nodes.clear();
+
+        let ds = self.ds;
+        let (l, b_max) = (self.layers, self.b_max);
+        let targets = &self.batches[i];
+        let adj_idx = cache.ensure(&ds.graph, self.norm);
+        let adj = cache.get(adj_idx);
+        let (avals, aself) = (&adj.vals, &adj.self_loop);
+
+        // ---- receptive union: targets + r-sampled per hop -------------
+        let local_of = &mut self.local_of;
+        let nodes = &mut self.nodes;
+        for &t in targets {
+            if local_of[t as usize] == u32::MAX {
+                local_of[t as usize] = nodes.len() as u32;
+                nodes.push(t);
+            }
+        }
+        let mut frontier = nodes.clone();
+        'expand: for _hop in 1..l {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                let nbrs = ds.graph.neighbors(v as usize);
+                if nbrs.is_empty() {
+                    continue;
+                }
+                for _ in 0..self.params.r {
+                    let u = nbrs[self.rng.usize_below(nbrs.len())];
+                    if local_of[u as usize] == u32::MAX {
+                        if nodes.len() >= b_max {
+                            break 'expand;
+                        }
+                        local_of[u as usize] = nodes.len() as u32;
+                        nodes.push(u);
+                        next.push(u);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        let b_real = nodes.len();
+
+        // ---- per-node neighbor samples (shared across layers) ---------
+        self.sampled.clear();
+        for &v in nodes.iter() {
+            let nbrs = ds.graph.neighbors(v as usize);
+            let mut s: Vec<u32> = Vec::with_capacity(self.params.r);
+            if nbrs.len() <= self.params.r {
+                s.extend_from_slice(nbrs);
+            } else {
+                for idx in self.rng.sample_distinct(nbrs.len(), self.params.r) {
+                    s.push(nbrs[idx]);
+                }
+            }
+            self.sampled.push(s);
+        }
+
+        // ---- A_in: self loops + scaled sampled in-batch edges ----------
+        let mut a_in = Tensor::zeros(vec![b_max, b_max]);
+        for (li, &v) in nodes.iter().enumerate() {
+            let v = v as usize;
+            a_in.data[li * b_max + li] = aself[v];
+            let deg = ds.graph.degree(v);
+            let s = &self.sampled[li];
+            if s.is_empty() {
+                continue;
+            }
+            let scale = deg as f32 / s.len() as f32;
+            for &u in s {
+                let lu = local_of[u as usize];
+                if lu != u32::MAX {
+                    // Â_vu looked up via the sorted adjacency
+                    let pos = ds.graph.neighbors(v)
+                        .binary_search(&u)
+                        .expect("sampled neighbor");
+                    a_in.data[li * b_max + lu as usize] +=
+                        scale * avals[ds.graph.offsets[v] + pos];
+                }
+            }
+        }
+
+        // ---- Hc_l = Â·H_l (full) − scaled-sampled in-batch Â·H_l ------
+        let mut hcs: Vec<Tensor> = Vec::with_capacity(l);
+        for (layer, &fd) in self.layer_dims.iter().enumerate() {
+            let mut hc = Tensor::zeros(vec![b_max, fd]);
+            let history = &self.history;
+            let hist_row = |u: usize| -> &[f32] {
+                if layer == 0 {
+                    ds.feature_row(u)
+                } else {
+                    history.row(layer - 1, u)
+                }
+            };
+            for (li, &v) in nodes.iter().enumerate() {
+                let v = v as usize;
+                let out = &mut hc.data[li * fd..(li + 1) * fd];
+                for (pos, &u) in ds.graph.neighbors(v).iter().enumerate() {
+                    let a = avals[ds.graph.offsets[v] + pos];
+                    let h = hist_row(u as usize);
+                    for j in 0..fd {
+                        out[j] += a * h[j];
+                    }
+                }
+                // subtract the sampled in-batch part (it is covered by
+                // A_in against *current* X)
+                let s = &self.sampled[li];
+                if s.is_empty() {
+                    continue;
+                }
+                let scale = ds.graph.degree(v) as f32 / s.len() as f32;
+                for &u in s {
+                    if local_of[u as usize] != u32::MAX {
+                        let pos = ds.graph.neighbors(v)
+                            .binary_search(&u)
+                            .unwrap();
+                        let a = scale * avals[ds.graph.offsets[v] + pos];
+                        let h = hist_row(u as usize);
+                        for j in 0..fd {
+                            out[j] -= a * h[j];
+                        }
+                    }
+                }
+            }
+            hcs.push(hc);
+        }
+
+        // ---- X, Y, mask (targets only) --------------------------------
+        let (f_in, classes) = (self.f_in, self.classes);
+        let mut x = Tensor::zeros(vec![b_max, f_in]);
+        let mut y = Tensor::zeros(vec![b_max, classes]);
+        let mut mask = Tensor::zeros(vec![b_max]);
+        for (li, &v) in nodes.iter().enumerate() {
+            let v = v as usize;
+            x.data[li * f_in..(li + 1) * f_in].copy_from_slice(ds.feature_row(v));
+            ds.labels.write_row(v, classes, &mut y.data[li * classes..(li + 1) * classes]);
+        }
+        for m in mask.data.iter_mut().take(targets.len().min(b_real)) {
+            *m = 1.0;
+        }
+
+        let vb = VrgcnBatch { a_in, hcs, x, y, mask, n_real: b_real };
+        self.max_bytes = self.max_bytes.max(vb.bytes() + self.history.bytes());
+        self.vb = Some(vb);
+        self.vb.as_ref().expect("batch just stored")
+    }
+
+    /// Refresh the history store with the hidden activations the step
+    /// just returned (rows indexed by the current batch's union).
+    pub fn refresh(&mut self, hiddens: &[Tensor]) {
+        for (layer, h) in hiddens.iter().enumerate() {
+            for (li, &v) in self.nodes.iter().enumerate() {
+                self.history.set_row(
+                    layer,
+                    v as usize,
+                    &h.data[li * self.f_hid..(li + 1) * self.f_hid],
+                );
+            }
+        }
+    }
+
+    /// Accounting for the driver's result packaging (batch + history
+    /// bytes; the driver adds the parameter/optimizer bytes).
+    pub fn stats(&self) -> SourceStats {
+        SourceStats { max_batch_bytes: self.max_bytes, utilization: 0.0 }
+    }
+}
+
 /// Train VR-GCN through a vrgcn-kind model on any backend.  Thin
 /// wrapper over [`train_vrgcn_observed`] with no observer attached.
 pub fn train_vrgcn(
@@ -88,7 +356,9 @@ pub fn train_vrgcn(
     train_vrgcn_observed(backend, ds, model, params, opts, &mut NullObserver)
 }
 
-/// [`train_vrgcn`] with an observer.
+/// [`train_vrgcn`] with an observer.  Pre-driver compatibility entry:
+/// builds a [`crate::session::Driver`] over a [`VrgcnSource`] and
+/// drains it.
 pub fn train_vrgcn_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
@@ -97,231 +367,22 @@ pub fn train_vrgcn_observed(
     opts: &TrainOptions,
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
+    use crate::session::driver::{BackendSlot, Driver, DriverSource};
+    use crate::session::TrainConfig;
+
     let spec = backend.model_spec(model)?;
-    backend.prepare(model)?;
-    let l = spec.layers;
-    let b_max = spec.b_max;
-    let n = ds.n();
-    let f_in = ds.f_in;
-    let f_hid = spec.f_hid;
-    let classes = ds.num_classes;
-
-    // depth-aware target size: receptive field ~ batch * (1+r)^(L-1)
-    let growth = (1 + params.r).pow(l.saturating_sub(1) as u32) as usize;
-    let targets_per_batch = (b_max / growth.max(1)).clamp(16, params.batch);
-
-    let mut state = TrainState::init(&spec, opts.seed);
-    let mut history = History::new(n, f_hid, l - 1);
-    // one normalization for the whole run, shared with every eval
-    let mut norm_cache = NormCache::new();
-    let adj_idx = norm_cache.ensure(&ds.graph, opts.norm);
-    let mut rng = Rng::new(opts.seed ^ 0x7766_5544_3322_1100);
-    let train_nodes = ds.nodes_in_split(Split::Train);
-    let eval_nodes = ds.nodes_in_split(opts.eval_split);
-
-    let mut curve = Vec::new();
-    let mut train_seconds = 0.0;
-    let mut steps_done = 0u64;
-    let mut peak_bytes = 0usize;
-
-    // reusable buffers
-    let mut local_of = vec![u32::MAX; n];
-    let mut sampled: Vec<Vec<u32>> = Vec::new();
-
-    for epoch in 1..=opts.epochs {
-        let timer = Timer::start();
-        let batches =
-            super::expansion::target_batches(&train_nodes, targets_per_batch, &mut rng);
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for targets in &batches {
-            if opts.max_steps_per_epoch > 0 && nb >= opts.max_steps_per_epoch {
-                break;
-            }
-            let adj = norm_cache.get(adj_idx);
-            let (avals, aself) = (&adj.vals, &adj.self_loop);
-            // ---- receptive union: targets + r-sampled per hop ---------
-            let mut nodes: Vec<u32> = Vec::new();
-            for &t in targets {
-                if local_of[t as usize] == u32::MAX {
-                    local_of[t as usize] = nodes.len() as u32;
-                    nodes.push(t);
-                }
-            }
-            let mut frontier = nodes.clone();
-            'expand: for _hop in 1..l {
-                let mut next = Vec::new();
-                for &v in &frontier {
-                    let nbrs = ds.graph.neighbors(v as usize);
-                    if nbrs.is_empty() {
-                        continue;
-                    }
-                    for _ in 0..params.r {
-                        let u = nbrs[rng.usize_below(nbrs.len())];
-                        if local_of[u as usize] == u32::MAX {
-                            if nodes.len() >= b_max {
-                                break 'expand;
-                            }
-                            local_of[u as usize] = nodes.len() as u32;
-                            nodes.push(u);
-                            next.push(u);
-                        }
-                    }
-                }
-                frontier = next;
-            }
-            let b_real = nodes.len();
-
-            // ---- per-node neighbor samples (shared across layers) -----
-            sampled.clear();
-            for &v in &nodes {
-                let nbrs = ds.graph.neighbors(v as usize);
-                let mut s: Vec<u32> = Vec::with_capacity(params.r);
-                if nbrs.len() <= params.r {
-                    s.extend_from_slice(nbrs);
-                } else {
-                    for idx in rng.sample_distinct(nbrs.len(), params.r) {
-                        s.push(nbrs[idx]);
-                    }
-                }
-                sampled.push(s);
-            }
-
-            // ---- A_in: self loops + scaled sampled in-batch edges ------
-            let mut a_in = Tensor::zeros(vec![b_max, b_max]);
-            for (li, &v) in nodes.iter().enumerate() {
-                let v = v as usize;
-                a_in.data[li * b_max + li] = aself[v];
-                let deg = ds.graph.degree(v);
-                let s = &sampled[li];
-                if s.is_empty() {
-                    continue;
-                }
-                let scale = deg as f32 / s.len() as f32;
-                for &u in s {
-                    let lu = local_of[u as usize];
-                    if lu != u32::MAX {
-                        // Â_vu looked up via the sorted adjacency
-                        let pos = ds.graph.neighbors(v)
-                            .binary_search(&u)
-                            .expect("sampled neighbor");
-                        a_in.data[li * b_max + lu as usize] +=
-                            scale * avals[ds.graph.offsets[v] + pos];
-                    }
-                }
-            }
-
-            // ---- Hc_l = Â·H_l (full) − scaled-sampled in-batch Â·H_l ---
-            let dims = spec.layer_in_dims();
-            let mut hcs: Vec<Tensor> = Vec::with_capacity(l);
-            for (layer, &fd) in dims.iter().enumerate() {
-                let mut hc = Tensor::zeros(vec![b_max, fd]);
-                let hist_row = |u: usize| -> &[f32] {
-                    if layer == 0 {
-                        ds.feature_row(u)
-                    } else {
-                        history.row(layer - 1, u)
-                    }
-                };
-                for (li, &v) in nodes.iter().enumerate() {
-                    let v = v as usize;
-                    let out = &mut hc.data[li * fd..(li + 1) * fd];
-                    for (pos, &u) in ds.graph.neighbors(v).iter().enumerate() {
-                        let a = avals[ds.graph.offsets[v] + pos];
-                        let h = hist_row(u as usize);
-                        for j in 0..fd {
-                            out[j] += a * h[j];
-                        }
-                    }
-                    // subtract the sampled in-batch part (it is covered
-                    // by A_in against *current* X)
-                    let s = &sampled[li];
-                    if s.is_empty() {
-                        continue;
-                    }
-                    let scale = ds.graph.degree(v) as f32 / s.len() as f32;
-                    for &u in s {
-                        if local_of[u as usize] != u32::MAX {
-                            let pos = ds.graph.neighbors(v)
-                                .binary_search(&u)
-                                .unwrap();
-                            let a = scale * avals[ds.graph.offsets[v] + pos];
-                            let h = hist_row(u as usize);
-                            for j in 0..fd {
-                                out[j] -= a * h[j];
-                            }
-                        }
-                    }
-                }
-                hcs.push(hc);
-            }
-
-            // ---- X, Y, mask (targets only) -----------------------------
-            let mut x = Tensor::zeros(vec![b_max, f_in]);
-            let mut y = Tensor::zeros(vec![b_max, classes]);
-            let mut mask = Tensor::zeros(vec![b_max]);
-            for (li, &v) in nodes.iter().enumerate() {
-                let v = v as usize;
-                x.data[li * f_in..(li + 1) * f_in].copy_from_slice(ds.feature_row(v));
-                ds.labels.write_row(v, classes, &mut y.data[li * classes..(li + 1) * classes]);
-            }
-            for i in 0..targets.len().min(b_real) {
-                mask.data[i] = 1.0;
-            }
-
-            // ---- execute on the backend -------------------------------
-            let vb = VrgcnBatch { a_in, hcs, x, y, mask, n_real: b_real };
-            peak_bytes = peak_bytes
-                .max(vb.bytes() + state.param_bytes() + history.bytes());
-            let (loss, hiddens) = backend.vrgcn_step(model, &mut state, opts.lr, &vb)?;
-
-            // ---- history refresh ---------------------------------------
-            for (layer, h) in hiddens.iter().enumerate() {
-                for (li, &v) in nodes.iter().enumerate() {
-                    history.set_row(layer, v as usize,
-                                    &h.data[li * f_hid..(li + 1) * f_hid]);
-                }
-            }
-
-            // reset local map
-            for &v in &nodes {
-                local_of[v as usize] = u32::MAX;
-            }
-            epoch_loss += loss as f64;
-            nb += 1;
-            steps_done += 1;
-        }
-        train_seconds += timer.secs();
-        obs.on_event(&Event::EpochEnd {
-            epoch,
-            train_seconds,
-            mean_loss: epoch_loss / nb.max(1) as f64,
-        });
-
-        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
-            || epoch == opts.epochs;
-        if do_eval {
-            let f1 = evaluate_cached(
-                ds, &state.weights, opts.norm, false, &eval_nodes, &mut norm_cache,
-            );
-            curve.push(CurvePoint {
-                epoch,
-                train_seconds,
-                train_loss: epoch_loss / nb.max(1) as f64,
-                eval_f1: f1,
-            });
-            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
-        }
-    }
-
-    Ok(TrainResult {
-        state,
-        curve,
-        train_seconds,
-        steps: steps_done,
-        peak_bytes,
-        avg_within_edges_per_node: 0.0,
-    })
+    let cfg = TrainConfig::from(opts);
+    let source = VrgcnSource::new(ds, &spec, params.clone(), cfg.norm, cfg.seed);
+    let mut driver = Driver::from_parts(
+        BackendSlot::Borrowed(backend),
+        ds,
+        model.to_string(),
+        cfg,
+        DriverSource::Vrgcn(source),
+        None,
+    )?;
+    driver.drive(obs)?;
+    driver.into_result()
 }
 
 #[cfg(test)]

@@ -16,8 +16,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::baselines::VrgcnParams;
 use crate::datagen::{build_cached, preset, PRESETS};
 use crate::norm::NormConfig;
-use crate::runtime::{Backend, Engine, HostBackend, ManifestMissing};
-use crate::session::{Method, Session, StderrObserver, TrainConfig};
+use crate::runtime::{Backend, Engine, HostBackend, ManifestMissing, ShardedBackend};
+use crate::session::{EvalStrategy, Method, Session, StderrObserver, TrainConfig};
 use crate::util::Timer;
 use args::Args;
 
@@ -155,7 +155,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "preset", "seed", "cache", "layers", "epochs", "method", "q",
             "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
             "lr-decay", "lr-decay-every", "patience", "save", "backend",
-            "batch", "algo",
+            "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
+            "eval-parts",
         ],
     )?;
     let ds = load_ds(&a)?;
@@ -173,7 +174,52 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }),
         other => bail!("unknown method {other} (cluster|expansion|graphsage|vrgcn)"),
     };
-    let backend = make_backend(&a)?;
+
+    // ---- backend (base or combinator stack) ---------------------------
+    let backend_kind = a.str_or("backend", "pjrt");
+    let shards = a.usize_or("shards", 1)?;
+    let backend: Box<dyn Backend> = if shards > 1 {
+        if backend_kind != "host" {
+            bail!(
+                "--shards {shards} needs --backend host: the PJRT step is \
+                 fused and cannot expose the per-batch gradients a \
+                 data-parallel all-reduce averages"
+            );
+        }
+        if a.flag("prefetch") {
+            eprintln!(
+                "note: --prefetch is a pass-through on a sharded backend \
+                 (it pulls its replicas' batches itself)"
+            );
+        }
+        Box::new(ShardedBackend::host(shards))
+    } else {
+        make_backend(&a)?
+    };
+    // assembly/execute overlap is on by default (the session wraps the
+    // backend in a PrefetchBackend); --no-prefetch forces serial,
+    // --prefetch is the explicit default for scripts
+    let prefetch = !a.flag("no-prefetch") || a.flag("prefetch");
+
+    let eval = match a.str_or("eval", "exact").as_str() {
+        "exact" => EvalStrategy::ExactFullGraph,
+        "clustered" => {
+            if backend_kind == "pjrt" && shards <= 1 {
+                bail!(
+                    "--eval clustered needs --backend host: clustered eval \
+                     runs batched forward passes through the training model \
+                     id, and PJRT train artifacts expose no forward entry"
+                );
+            }
+            EvalStrategy::Clustered {
+                parts: a.usize_or(
+                    "eval-parts",
+                    a.usize_or("parts", p.default_partitions)?,
+                )?,
+            }
+        }
+        other => bail!("unknown eval strategy {other} (exact|clustered)"),
+    };
 
     let hidden = a.usize_or("hidden", 0)?;
     let cfg = TrainConfig {
@@ -194,14 +240,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             None => crate::coordinator::LrSchedule::Constant,
         },
         patience: a.usize_or("patience", 0)?,
+        norm: parse_norm(&a.str_or("norm", "sym"))?,
+        eval,
+        start_epoch: 0,
     };
 
     let mut obs = StderrObserver;
     let mut session = Session::new(&ds)
         .method(method)
         .config(cfg)
-        .norm(parse_norm(&a.str_or("norm", "sym"))?)
         .backend(backend)
+        .prefetch(prefetch)
         .observer(&mut obs);
     if let Some(parts) = a.get("parts") {
         session = session.partition(
@@ -222,7 +271,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let t = Timer::start();
     let out = session.run()?;
     println!("method        : {method_name} ({})", out.model);
-    println!("backend       : {}", out.backend);
+    println!("backend       : {}{}", out.backend, if shards > 1 {
+        format!(" ({shards} shards)")
+    } else {
+        String::new()
+    });
     println!("epochs        : {}", out.result.curve.last().map(|c| c.epoch).unwrap_or(0));
     println!("steps         : {}", out.result.steps);
     println!(
@@ -319,6 +372,9 @@ mod tests {
             );
         }
         assert!(USAGE.contains("--backend pjrt|host"));
+        for flag in ["--shards", "--prefetch", "--eval exact|clustered", "--eval-parts"] {
+            assert!(USAGE.contains(flag), "usage.txt missing flag {flag}");
+        }
         for m in ["cluster", "expansion", "graphsage", "vrgcn"] {
             assert!(USAGE.contains(m), "usage.txt missing method {m}");
         }

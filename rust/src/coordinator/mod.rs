@@ -1,8 +1,11 @@
 //! The Cluster-GCN coordinator (the paper's system contribution at L3):
-//! cluster-batch sampling, batch assembly + renormalization, the fused
-//! backend-generic training loop, exact host evaluation, metrics, and
-//! memory accounting.  The user-facing entry point is
-//! [`crate::session::Session`]; the loops here are what it drives.
+//! cluster-batch sampling, batch assembly + renormalization, the
+//! [`BatchSource`] pull abstraction the training [`Driver`] consumes,
+//! exact host evaluation, metrics, and memory accounting.  The
+//! user-facing entry point is [`crate::session::Session`]; the driver
+//! ([`crate::session::Driver`]) is the loop it hands you.
+//!
+//! [`Driver`]: crate::session::Driver
 
 pub mod batch;
 pub mod batch_eval;
@@ -12,11 +15,13 @@ pub mod memory;
 pub mod metrics;
 pub mod sampler;
 pub mod schedule;
+pub mod source;
 pub mod trainer;
 
 pub use batch::{Batch, BatchAssembler, SparseBlock};
 pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
+pub use source::{BatchSource, ClusterSource, SourceStats};
 pub use trainer::{
     evaluate, evaluate_cached, train, train_observed, CurvePoint, TrainOptions,
     TrainResult, TrainState,

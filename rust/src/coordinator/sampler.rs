@@ -5,6 +5,7 @@
 
 use crate::util::Rng;
 
+#[derive(Clone)]
 pub struct ClusterSampler {
     /// cluster node lists V_1..V_p (global node ids).
     pub clusters: Vec<Vec<u32>>,

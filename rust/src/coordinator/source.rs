@@ -1,0 +1,244 @@
+//! [`BatchSource`]: the pull side of the training loop.  A source owns
+//! everything batch-shaped about one training method — the epoch plan,
+//! the node sampling, the [`BatchAssembler`] and its reusable scratch —
+//! and exposes it as *assemble batch `i` of this epoch into this
+//! buffer*.  The [`crate::session::Driver`] pulls steps through
+//! [`crate::runtime::Backend::step_from`], which is where the backend
+//! combinators hook in: [`crate::runtime::PrefetchBackend`] assembles
+//! batch `i + 1` on a helper thread while batch `i` executes, and
+//! [`crate::runtime::ShardedBackend`] pulls one batch per replica for a
+//! data-parallel step — every [`BatchSource`]-backed method gets both
+//! for free.
+//!
+//! Sources are `Send` so a combinator may drive `assemble` from a
+//! scoped helper thread; assembly for index `i` is only ever in flight
+//! on one thread at a time (the call contract below).
+#![deny(missing_docs)]
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::{Batch, BatchAssembler};
+use crate::coordinator::sampler::ClusterSampler;
+use crate::graph::Dataset;
+use crate::norm::NormConfig;
+use crate::runtime::ModelSpec;
+use crate::util::Rng;
+
+/// Accumulated per-run accounting a source collects while assembling,
+/// read once by the driver when packaging the
+/// [`crate::coordinator::trainer::TrainResult`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SourceStats {
+    /// Largest `batch bytes (+ method-specific activation estimate)`
+    /// seen — the batch half of the Table 5 peak-memory accounting (the
+    /// driver adds the parameter/optimizer bytes).
+    pub max_batch_bytes: usize,
+    /// Method-specific utilization ratio reported as
+    /// `TrainResult::avg_within_edges_per_node`: within-batch directed
+    /// edges per batch node for Cluster-GCN, mean sampled-union size
+    /// per batch for GraphSAGE, 0 for the others.
+    pub utilization: f64,
+}
+
+/// Per-epoch RNG derivation shared by every source: the stream is a
+/// pure function of `(seed, salt, epoch)`, never of how many batches
+/// earlier epochs consumed.  This is what makes a checkpoint
+/// save→resume through the driver replay the *same* epoch streams as
+/// an uninterrupted run.
+pub fn epoch_rng(seed: u64, salt: u64, epoch: usize) -> Rng {
+    Rng::new(seed ^ salt ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A per-epoch stream of assembled [`Batch`]es — the training loop's
+/// pull side, implemented by Cluster-GCN ([`ClusterSource`]) and the
+/// batch-based baselines (`baselines::{ExpansionSource, SageSource}`).
+///
+/// Call contract (upheld by the driver and the backend combinators):
+/// [`BatchSource::begin_epoch`] once per epoch, then
+/// [`BatchSource::assemble`] for indices `0..len()`, each index at most
+/// once, in ascending order — though a combinator may run index `i + 1`
+/// on a helper thread while batch `i` executes (which is why the trait
+/// is `Send`).  A future source whose assembly depends on the
+/// *results* of earlier steps must return `false` from
+/// [`BatchSource::prefetchable`] to disable lookahead (no current
+/// source needs it: the step-coupled method, VR-GCN, bypasses
+/// `BatchSource` entirely and runs inline in the driver).
+pub trait BatchSource: Send {
+    /// `(b_max, f_in, classes)` shaping every batch this source
+    /// assembles — what combinator-owned buffers are sized from.
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// A fresh zeroed buffer shaped by [`BatchSource::shape`].
+    fn new_batch(&self) -> Batch {
+        let (b, f, c) = self.shape();
+        Batch::new(b, f, c)
+    }
+
+    /// Start epoch `epoch` (1-based): draw the epoch plan and return
+    /// the number of batches it holds.  The plan stream is derived via
+    /// [`epoch_rng`], so it is a pure function of `(seed, epoch)`.
+    fn begin_epoch(&mut self, epoch: usize) -> usize;
+
+    /// Batches in the current epoch's plan.
+    fn len(&self) -> usize;
+
+    /// True when the current epoch has no batches.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether assembling batch `i + 1` before batch `i`'s step has
+    /// completed preserves semantics.  `true` for sources whose
+    /// assembly depends only on the epoch plan and their own RNG.
+    fn prefetchable(&self) -> bool {
+        true
+    }
+
+    /// Assemble batch `i` of the current epoch into `into` (a buffer
+    /// from [`BatchSource::new_batch`], reused across steps).
+    fn assemble(&mut self, i: usize, into: &mut Batch);
+
+    /// Accounting accumulated so far (see [`SourceStats`]).
+    fn stats(&self) -> SourceStats;
+}
+
+/// Cluster-GCN's source (Algorithm 1 line 3): per epoch, a shuffled
+/// without-replacement plan of q-cluster batches from the
+/// [`ClusterSampler`]; per batch, the concatenated cluster union
+/// assembled with between-cluster links restored and renormalized.
+pub struct ClusterSource<'a> {
+    ds: &'a Dataset,
+    sampler: ClusterSampler,
+    assembler: BatchAssembler,
+    seed: u64,
+    plan: Vec<Vec<u32>>,
+    nodes: Vec<u32>,
+    within_edges: u64,
+    batch_nodes: u64,
+    max_batch_bytes: usize,
+}
+
+impl<'a> ClusterSource<'a> {
+    /// Source over `ds` with an owned sampler; errors when the largest
+    /// possible batch cannot fit the model's padded batch size.
+    pub fn new(
+        ds: &'a Dataset,
+        sampler: ClusterSampler,
+        spec: &ModelSpec,
+        norm: NormConfig,
+        seed: u64,
+    ) -> Result<ClusterSource<'a>> {
+        if sampler.max_batch_nodes() > spec.b_max {
+            return Err(anyhow!(
+                "sampler can produce {} nodes but the model has b_max={}",
+                sampler.max_batch_nodes(),
+                spec.b_max
+            ));
+        }
+        Ok(ClusterSource {
+            ds,
+            sampler,
+            assembler: BatchAssembler::new(ds.n(), spec.b_max, norm),
+            seed,
+            plan: Vec::new(),
+            nodes: Vec::new(),
+            within_edges: 0,
+            batch_nodes: 0,
+            max_batch_bytes: 0,
+        })
+    }
+}
+
+impl BatchSource for ClusterSource<'_> {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.assembler.b_max, self.ds.f_in, self.ds.num_classes)
+    }
+
+    fn begin_epoch(&mut self, epoch: usize) -> usize {
+        let mut rng = epoch_rng(self.seed, 0x5A5A_0000_1111_2222, epoch);
+        self.plan = self.sampler.epoch_plan(&mut rng);
+        self.plan.len()
+    }
+
+    fn len(&self) -> usize {
+        self.plan.len()
+    }
+
+    fn assemble(&mut self, i: usize, into: &mut Batch) {
+        self.sampler.batch_nodes(&self.plan[i], &mut self.nodes);
+        self.assembler.assemble_into(self.ds, &self.nodes, into);
+        if into.n_train > 0 {
+            self.within_edges += into.within_edges as u64;
+            self.batch_nodes += into.n_real as u64;
+            self.max_batch_bytes = self.max_batch_bytes.max(into.bytes());
+        }
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            max_batch_bytes: self.max_batch_bytes,
+            utilization: self.within_edges as f64 / self.batch_nodes.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norm::NormConfig;
+    use crate::partition::{parts_to_clusters, Partitioner, RandomPartitioner};
+
+    fn source(seed: u64) -> (Dataset, ModelSpec) {
+        let ds = crate::datagen::build(crate::datagen::preset("cora_like").unwrap(), seed);
+        let spec = crate::runtime::ModelSpec::gcn(
+            ds.task,
+            2,
+            ds.f_in,
+            16,
+            ds.num_classes,
+            ds.n().next_multiple_of(8),
+        );
+        (ds, spec)
+    }
+
+    #[test]
+    fn epoch_plans_are_replayable_per_epoch() {
+        let (ds, spec) = source(3);
+        let mut rng = Rng::new(9);
+        let part = RandomPartitioner.partition(&ds.graph, 8, &mut rng);
+        let sampler = ClusterSampler::new(parts_to_clusters(&part, 8), 2);
+        let mk = || {
+            ClusterSource::new(&ds, sampler.clone(), &spec, NormConfig::PAPER_DEFAULT, 7).unwrap()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        // same (seed, epoch) -> same plan, independent of what epoch the
+        // other source ran before
+        a.begin_epoch(1);
+        a.begin_epoch(4);
+        b.begin_epoch(4);
+        assert_eq!(a.plan, b.plan);
+        // batches assemble identically
+        let n = a.len();
+        assert!(n > 0);
+        let mut ba = a.new_batch();
+        let mut bb = b.new_batch();
+        for i in 0..n {
+            a.assemble(i, &mut ba);
+            b.assemble(i, &mut bb);
+            assert_eq!(ba.nodes, bb.nodes, "batch {i}");
+            assert_eq!(ba.a.data, bb.a.data, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_sampler_is_rejected() {
+        let (ds, _) = source(1);
+        let clusters = vec![(0..ds.n() as u32).collect::<Vec<_>>()];
+        let sampler = ClusterSampler::new(clusters, 1);
+        let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, 16, ds.num_classes, 8);
+        assert!(
+            ClusterSource::new(&ds, sampler, &spec, NormConfig::PAPER_DEFAULT, 0).is_err()
+        );
+    }
+}

@@ -1,37 +1,37 @@
-//! The Cluster-GCN training loop (Algorithm 1): sample q clusters,
-//! assemble the renormalized union block, run the fused `train_step` on
-//! the active [`Backend`], keep params/Adam state across steps;
-//! periodically evaluate with exact host inference.
+//! Cluster-GCN training state + the pre-driver compatibility surface.
 //!
-//! The loop is backend-generic: the same code drives the PJRT engine
-//! (AOT artifacts) and the artifact-free [`crate::runtime::HostBackend`].
-//! [`crate::session::Session`] is the primary entry point; the free
-//! functions here are the engine room it (and the benches) call into.
+//! The epoch loop that used to live here (Algorithm 1: sample q
+//! clusters, assemble the renormalized union block, fused `train_step`,
+//! periodic exact eval) is now the pull-based
+//! [`crate::session::Driver`]: batch production is a
+//! [`crate::coordinator::source::ClusterSource`], execution pulls
+//! through [`Backend::step_from`] (where the sharded/prefetch
+//! combinators overlap and fan out), and the loop itself is a state
+//! machine the caller advances.  This module keeps what the loop
+//! *produced* and what older callers still use:
 //!
-//! Hot-loop engineering (PERF.md): batches double-buffer through two
-//! reusable [`Batch`] buffers on a [`pipeline`] — batch `i + 1` is
-//! assembled on a helper thread while the backend executes batch `i` —
-//! and all full-graph evaluations share one [`NormCache`], so
-//! `normalize_sparse` runs at most once per (dataset, config) per
-//! training run.  Every assembled batch is sparse-native: it carries a
-//! CSR `SparseBlock` view of its normalized block alongside the dense
-//! tensors, which the host backend's pooled backward engine
-//! (`runtime::backward`) consumes directly — the PJRT engine keeps the
-//! dense view.
+//! - [`TrainState`] / [`TrainResult`] / [`CurvePoint`] — the model
+//!   state and run accounting types,
+//! - [`TrainOptions`] — the legacy loop-level config, kept one release
+//!   as a `From` shim into [`crate::session::TrainConfig`] so benches
+//!   and examples compile unchanged,
+//! - [`train`] / [`train_observed`] / [`step`] — thin wrappers that
+//!   build a driver and drain it,
+//! - [`evaluate`] / [`evaluate_cached`] — the exact host evaluator.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::coordinator::batch::{Batch, BatchAssembler};
+use crate::coordinator::sampler::ClusterSampler;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::source::ClusterSource;
 use crate::coordinator::inference::{full_forward_cached, gather_rows};
 use crate::coordinator::metrics::micro_f1;
-use crate::coordinator::sampler::ClusterSampler;
-use crate::coordinator::schedule::{EarlyStopper, LrSchedule};
 use crate::graph::{Dataset, Split};
 use crate::norm::{NormCache, NormConfig};
-use crate::runtime::{Backend, ModelSpec, Tensor};
-use crate::session::{Event, NullObserver, Observer};
-use crate::util::pool::pipeline;
-use crate::util::{Rng, Timer};
+use crate::runtime::{Backend, ModelSpec, PrefetchBackend, Tensor};
+use crate::session::driver::{BackendSlot, Driver, DriverSource};
+use crate::session::{NullObserver, Observer, TrainConfig};
+use crate::util::Rng;
 
 /// Model parameters + Adam state, fed through the backend each step.
 #[derive(Clone)]
@@ -70,6 +70,11 @@ impl TrainState {
     }
 }
 
+/// Legacy loop-level training configuration, superseded by the unified
+/// [`TrainConfig`] (which adds the model shape, the adjacency
+/// normalization, and the [`crate::session::EvalStrategy`]).  Kept for
+/// one release so pre-driver callers (benches, examples) compile
+/// unchanged; convert with the `From` impls in either direction.
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
     pub lr: f32,
@@ -101,6 +106,42 @@ impl Default for TrainOptions {
             max_steps_per_epoch: 0,
             schedule: LrSchedule::Constant,
             patience: 0,
+        }
+    }
+}
+
+impl From<&TrainOptions> for TrainConfig {
+    /// Shim for pre-driver callers: model-shape fields take their
+    /// defaults (the driver reads shapes from the backend's
+    /// [`ModelSpec`], so they are inert on this path).
+    fn from(o: &TrainOptions) -> TrainConfig {
+        TrainConfig {
+            lr: o.lr,
+            epochs: o.epochs,
+            eval_every: o.eval_every,
+            seed: o.seed,
+            norm: o.norm,
+            eval_split: o.eval_split,
+            max_steps_per_epoch: o.max_steps_per_epoch,
+            schedule: o.schedule,
+            patience: o.patience,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+impl From<&TrainConfig> for TrainOptions {
+    fn from(c: &TrainConfig) -> TrainOptions {
+        TrainOptions {
+            lr: c.lr,
+            epochs: c.epochs,
+            eval_every: c.eval_every,
+            seed: c.seed,
+            norm: c.norm,
+            eval_split: c.eval_split,
+            max_steps_per_epoch: c.max_steps_per_epoch,
+            schedule: c.schedule,
+            patience: c.patience,
         }
     }
 }
@@ -141,8 +182,11 @@ pub fn train(
     train_observed(backend, ds, sampler, model, opts, &mut NullObserver)
 }
 
-/// [`train`] with an [`Observer`] receiving epoch/eval/early-stop
-/// events as they happen.
+/// [`train`] with an [`Observer`] receiving the full [`crate::session::Event`]
+/// stream.  Pre-driver compatibility entry: builds a
+/// [`Driver`] over a [`ClusterSource`] and drains it; the caller's
+/// backend is wrapped in a [`PrefetchBackend`] so this path keeps the
+/// assembly/execute overlap the old loop had.
 pub fn train_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
@@ -152,123 +196,19 @@ pub fn train_observed(
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
     let spec = backend.model_spec(model)?;
-    if sampler.max_batch_nodes() > spec.b_max {
-        return Err(anyhow!(
-            "sampler can produce {} nodes but model {} has b_max={}",
-            sampler.max_batch_nodes(),
-            model,
-            spec.b_max
-        ));
-    }
-    backend.prepare(model)?;
-
-    let mut state = TrainState::init(&spec, opts.seed);
-    let mut rng = Rng::new(opts.seed ^ 0x5A5A_0000_1111_2222);
-    let mut assembler = BatchAssembler::new(ds.n(), spec.b_max, opts.norm);
-    let eval_nodes = ds.nodes_in_split(opts.eval_split);
-    let mut norm_cache = NormCache::new();
-
-    let mut curve = Vec::new();
-    let mut train_seconds = 0.0;
-    let mut steps = 0u64;
-    let mut peak_bytes = 0usize;
-    let mut within_edges = 0u64;
-    let mut batch_nodes = 0u64;
-    let mut nodes_buf: Vec<u32> = Vec::new();
-    // double buffer: batch i+1 assembles while the backend executes
-    // batch i; the two Batch buffers live for the whole run (no
-    // per-step allocs)
-    let mut buf_a = assembler.new_batch(ds);
-    let mut buf_b = assembler.new_batch(ds);
-
-    let mut stopper = EarlyStopper::new(opts.patience);
-    for epoch in 1..=opts.epochs {
-        let lr = opts.schedule.lr_at(opts.lr, epoch, opts.epochs);
-        let timer = Timer::start();
-        let plan = sampler.epoch_plan(&mut rng);
-        let mut epoch_loss = 0.0f64;
-        let mut epoch_batches = 0usize;
-        let mut step_err: Option<anyhow::Error> = None;
-        {
-            let assembler = &mut assembler;
-            let nodes_buf = &mut nodes_buf;
-            let plan = &plan;
-            (buf_a, buf_b) = pipeline(
-                plan.len(),
-                buf_a,
-                buf_b,
-                |i, batch: &mut Batch| {
-                    sampler.batch_nodes(&plan[i], nodes_buf);
-                    assembler.assemble_into(ds, nodes_buf, batch);
-                },
-                |_i, batch: &mut Batch| {
-                    if batch.n_train == 0 {
-                        return true; // nothing to learn from (all val/test)
-                    }
-                    within_edges += batch.within_edges as u64;
-                    batch_nodes += batch.n_real as u64;
-                    peak_bytes = peak_bytes.max(batch.bytes() + state.param_bytes());
-                    match backend.train_step(model, &mut state, lr, batch) {
-                        Ok(loss) => {
-                            epoch_loss += loss as f64;
-                            epoch_batches += 1;
-                            steps += 1;
-                        }
-                        Err(e) => {
-                            step_err = Some(e);
-                            return false;
-                        }
-                    }
-                    // stop after the cap; the in-flight prefetch is the
-                    // only wasted work
-                    !(opts.max_steps_per_epoch > 0
-                        && epoch_batches >= opts.max_steps_per_epoch)
-                },
-            );
-        }
-        if let Some(e) = step_err {
-            return Err(e);
-        }
-        train_seconds += timer.secs();
-        obs.on_event(&Event::EpochEnd {
-            epoch,
-            train_seconds,
-            mean_loss: epoch_loss / epoch_batches.max(1) as f64,
-        });
-
-        let do_eval = (opts.eval_every > 0 && epoch % opts.eval_every == 0)
-            || epoch == opts.epochs;
-        if do_eval {
-            let f1 = evaluate_cached(
-                ds,
-                &state.weights,
-                opts.norm,
-                spec.residual,
-                &eval_nodes,
-                &mut norm_cache,
-            );
-            curve.push(CurvePoint {
-                epoch,
-                train_seconds,
-                train_loss: epoch_loss / epoch_batches.max(1) as f64,
-                eval_f1: f1,
-            });
-            obs.on_event(&Event::Eval { point: curve.last().unwrap() });
-            if stopper.update(f1) {
-                obs.on_event(&Event::EarlyStop { epoch, best: stopper.best() });
-                break; // early stop: no improvement for `patience` evals
-            }
-        }
-    }
-
-    Ok(TrainResult {
-        state,
-        curve,
-        train_seconds,
-        steps,
-        peak_bytes,
-        avg_within_edges_per_node: within_edges as f64 / batch_nodes.max(1) as f64,
-    })
+    let cfg = TrainConfig::from(opts);
+    let source = ClusterSource::new(ds, sampler.clone(), &spec, cfg.norm, cfg.seed)?;
+    let mut backend = PrefetchBackend::new(backend);
+    let mut driver = Driver::from_parts(
+        BackendSlot::Borrowed(&mut backend),
+        ds,
+        model.to_string(),
+        cfg,
+        DriverSource::Batched(Box::new(source)),
+        None,
+    )?;
+    driver.drive(obs)?;
+    driver.into_result()
 }
 
 /// One fused train step over an assembled batch; updates `state`
@@ -352,6 +292,31 @@ mod tests {
         let st = TrainState::init(&fake_spec(), 0);
         let one_set = (8 * 16 + 16 * 4) * 4;
         assert_eq!(st.param_bytes(), 3 * one_set);
+    }
+
+    #[test]
+    fn options_config_roundtrip_preserves_loop_fields() {
+        let o = TrainOptions {
+            lr: 0.05,
+            epochs: 7,
+            eval_every: 3,
+            seed: 11,
+            norm: NormConfig::ROW,
+            eval_split: Split::Test,
+            max_steps_per_epoch: 4,
+            schedule: LrSchedule::StepDecay { every: 2, factor: 0.5 },
+            patience: 9,
+        };
+        let c = TrainConfig::from(&o);
+        assert_eq!(c.lr, 0.05);
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.norm, NormConfig::ROW);
+        assert_eq!(c.patience, 9);
+        let back = TrainOptions::from(&c);
+        assert_eq!(back.eval_every, 3);
+        assert_eq!(back.seed, 11);
+        assert_eq!(back.eval_split, Split::Test);
+        assert_eq!(back.max_steps_per_epoch, 4);
     }
 
     /// The acceptance invariant behind the NormCache: a multi-eval run

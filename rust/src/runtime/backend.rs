@@ -14,10 +14,24 @@
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::Batch;
+use crate::coordinator::source::BatchSource;
 use crate::coordinator::trainer::TrainState;
 use crate::graph::Task;
 use crate::runtime::artifacts::{ArtifactMeta, Kind};
 use crate::runtime::exec::{Engine, Tensor};
+
+/// What one [`Backend::step_from`] call did: how many of the epoch's
+/// batches it pulled from the source, and the resulting optimization
+/// loss (`None` when every pulled batch had nothing to learn from —
+/// no train-split node — and the optimizer state was left untouched).
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Mean loss over the batches that contributed gradients, or
+    /// `None` when the step was skipped entirely.
+    pub loss: Option<f32>,
+    /// Batches consumed from the source (`>= 1`).
+    pub consumed: usize,
+}
 
 /// Typed architecture of one trainable model — the backend-neutral
 /// replacement for reading shapes out of an [`ArtifactMeta`].  A spec is
@@ -193,6 +207,234 @@ pub trait Backend {
         lr: f32,
         batch: &VrgcnBatch,
     ) -> Result<(f32, Vec<Tensor>)>;
+
+    // ---- pull-side surface (driver + combinators) -------------------
+
+    /// How many of an epoch's batches one [`Backend::step_from`] call
+    /// consumes — the data-parallel width (1 for plain backends,
+    /// replica count for [`super::ShardedBackend`]).
+    fn batches_per_step(&self) -> usize {
+        1
+    }
+
+    /// Epoch boundary notification from the driver.  Combinators use it
+    /// to invalidate cross-step lookahead state (a prefetched batch
+    /// from the previous epoch's plan); plain backends ignore it.
+    fn epoch_begin(&mut self) {}
+
+    /// Execute one optimization step by pulling batches starting at
+    /// index `first` from `source` (see the [`BatchSource`] call
+    /// contract).  `scratch` is a driver-owned reusable buffer shaped
+    /// by the source; combinators that keep their own buffers ignore
+    /// it.  The default pulls exactly one batch and delegates to
+    /// [`Backend::train_step`], skipping batches with no training
+    /// nodes.
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        source.assemble(first, scratch);
+        if scratch.n_train == 0 {
+            return Ok(StepOutcome { loss: None, consumed: 1 });
+        }
+        let loss = self.train_step(model, state, lr, scratch)?;
+        Ok(StepOutcome { loss: Some(loss), consumed: 1 })
+    }
+
+    /// Loss + per-layer weight gradients over one batch **without**
+    /// touching optimizer state — the data-parallel primitive
+    /// [`super::ShardedBackend`] fans out to its replicas.  `grads` is
+    /// a caller-owned reusable buffer (resized to one `Vec` per layer).
+    /// Backends whose step is fused and cannot expose gradients (the
+    /// PJRT engine) return an error.
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        let _ = (model, weights, batch, grads);
+        Err(anyhow!(
+            "backend '{}' cannot expose per-batch gradients (fused step); \
+             sharded training needs the host backend",
+            self.name()
+        ))
+    }
+
+    /// Apply externally accumulated per-layer gradients with one
+    /// bias-corrected Adam step (increments `state.step`) — the reduce
+    /// side of a data-parallel step.  Backends without a host optimizer
+    /// return an error.
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        let _ = (model, state, lr, grads);
+        Err(anyhow!(
+            "backend '{}' cannot apply external gradients (fused step); \
+             sharded training needs the host backend",
+            self.name()
+        ))
+    }
+}
+
+/// Mutable references forward every method (including the pull-side
+/// surface, so combinator overrides survive the indirection) — this is
+/// what lets the compat training entries wrap a caller's
+/// `&mut dyn Backend` in a `PrefetchBackend` without taking ownership.
+impl<B: Backend + ?Sized> Backend for &mut B {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        (**self).model_spec(model)
+    }
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        (**self).prepare(model)
+    }
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        (**self).register_model(model, spec)
+    }
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        (**self).train_step(model, state, lr, batch)
+    }
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        (**self).forward(model, weights, batch)
+    }
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        (**self).vrgcn_step(model, state, lr, batch)
+    }
+    fn batches_per_step(&self) -> usize {
+        (**self).batches_per_step()
+    }
+    fn epoch_begin(&mut self) {
+        (**self).epoch_begin()
+    }
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        (**self).step_from(model, state, lr, source, first, scratch)
+    }
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        (**self).grad_step(model, weights, batch, grads)
+    }
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        (**self).apply_grads(model, state, lr, grads)
+    }
+}
+
+/// Boxed backends forward every method (including the pull-side
+/// surface, so combinator overrides survive the indirection) — this is
+/// what lets the session stack `PrefetchBackend<Box<dyn Backend>>` over
+/// whatever backend the caller supplied.
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        (**self).model_spec(model)
+    }
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        (**self).prepare(model)
+    }
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        (**self).register_model(model, spec)
+    }
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        (**self).train_step(model, state, lr, batch)
+    }
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        (**self).forward(model, weights, batch)
+    }
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        (**self).vrgcn_step(model, state, lr, batch)
+    }
+    fn batches_per_step(&self) -> usize {
+        (**self).batches_per_step()
+    }
+    fn epoch_begin(&mut self) {
+        (**self).epoch_begin()
+    }
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        (**self).step_from(model, state, lr, source, first, scratch)
+    }
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        (**self).grad_step(model, weights, batch, grads)
+    }
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        (**self).apply_grads(model, state, lr, grads)
+    }
 }
 
 impl Backend for Engine {

@@ -859,6 +859,80 @@ impl Backend for HostBackend {
         );
         Ok((loss, hiddens))
     }
+
+    /// The data-parallel primitive: the same pooled forward + backward
+    /// as [`Backend::train_step`], but gradients are copied out into
+    /// the caller's reusable per-layer buffers and **no** optimizer
+    /// state is touched.  Every pooled kernel on this path accumulates
+    /// in a chunk-layout-independent order, so the gradients (and the
+    /// loss) are bit-identical at every thread width — which is what
+    /// makes a one-replica [`super::ShardedBackend`] reproduce
+    /// `train_step` exactly.
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        let spec = self.spec(model)?.clone();
+        let loss = host_grads_pooled(&spec, weights, batch, self.threads, &mut self.ws)?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss in grad_step"));
+        }
+        let layers = self.ws.grad_layers();
+        grads.resize(layers.len(), Vec::new());
+        for (dst, src) in grads.iter_mut().zip(layers) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        Ok(loss)
+    }
+
+    /// One bias-corrected Adam step over externally accumulated
+    /// per-layer gradients.  Runs the same pooled element-wise Adam
+    /// core as `train_step`'s arena pass (one pooled dispatch per
+    /// layer), so a step through `grad_step` + `apply_grads` is
+    /// bit-identical to the fused `train_step`.
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        self.spec(model)?;
+        if grads.len() != state.weights.len() {
+            return Err(anyhow!(
+                "apply_grads: {} gradient layers for a {}-layer state",
+                grads.len(),
+                state.weights.len()
+            ));
+        }
+        state.step += 1;
+        let t = state.step as f32;
+        for li in 0..state.weights.len() {
+            let len = grads[li].len();
+            if state.weights[li].data.len() != len {
+                return Err(anyhow!(
+                    "apply_grads: layer {li} gradient has {len} elements, \
+                     weights have {}",
+                    state.weights[li].data.len()
+                ));
+            }
+            adam_update_pooled(
+                &mut state.weights[li..li + 1],
+                &mut state.m[li..li + 1],
+                &mut state.v[li..li + 1],
+                &grads[li],
+                &[(0, len)],
+                t,
+                lr,
+                self.threads,
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,18 +1,26 @@
-//! Execution runtime: the [`Backend`] abstraction plus its two
+//! Execution runtime: the [`Backend`] abstraction, its two base
 //! implementations — the PJRT [`Engine`] (loads the HLO text artifacts
 //! produced once by `python/compile/aot.py` and runs them on the PJRT
 //! CPU client; python is never on the training path) and the
 //! artifact-free [`HostBackend`] (forward on the tiled SpMM·GEMM
-//! kernels, gradients + Adam on the pooled [`backward`] engine).
+//! kernels, gradients + Adam on the pooled [`backward`] engine) — and
+//! the composable combinators layered on top: [`ShardedBackend`]
+//! (data-parallel gradient averaging across replicas) and
+//! [`PrefetchBackend`] (batch assembly double-buffered against
+//! execution).
 
 pub mod artifacts;
 pub mod backend;
 pub mod backward;
 pub mod exec;
 pub mod host;
+pub mod prefetch;
+pub mod sharded;
 
 pub use artifacts::{ArtifactMeta, Kind, ManifestMissing, Registry};
-pub use backend::{Backend, ModelSpec, VrgcnBatch};
+pub use backend::{Backend, ModelSpec, StepOutcome, VrgcnBatch};
 pub use backward::BackwardWorkspace;
 pub use exec::{Engine, Tensor};
 pub use host::HostBackend;
+pub use prefetch::PrefetchBackend;
+pub use sharded::ShardedBackend;

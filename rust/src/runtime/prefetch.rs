@@ -1,0 +1,218 @@
+//! [`PrefetchBackend`]: the assembly-overlap [`Backend`] combinator.
+//! The PR-1 trainer pipelined batch assembly against PJRT execution
+//! with an ad-hoc double buffer private to the cluster loop; this
+//! combinator moves that overlap behind the trait, where every
+//! [`BatchSource`]-backed method (Cluster, Expansion, GraphSage) gets
+//! it for free:
+//!
+//! ```text
+//!   step_from(i):   helper thread ── source.assemble(i + 1) ──► back buffer
+//!                   this thread   ── inner.train_step(front = batch i)
+//!                   join, swap front/back
+//! ```
+//!
+//! Each call overlaps the *next* batch's assembly with the *current*
+//! batch's execution; across calls the freshly assembled batch is
+//! carried in the front buffer, so steady state assembles each batch
+//! exactly once and executes with zero assembly on the critical path.
+//! Numerically nothing changes: batches are assembled in the same
+//! order, by the same source, with the same RNG stream — a prefetched
+//! cluster run is bit-identical to the serial one (pinned by
+//! `tests/driver.rs`).
+//!
+//! Lookahead is disabled (pass-through to the inner backend) when the
+//! source declares itself non-prefetchable
+//! ([`BatchSource::prefetchable`], the opt-out for future sources whose
+//! assembly depends on step results — VR-GCN itself bypasses
+//! `BatchSource` entirely and runs inline in the driver) or when the
+//! inner backend consumes more than one batch per step (a sharded
+//! inner pulls its own replicas' batches).  The cross-epoch carry is
+//! invalidated by [`Backend::epoch_begin`].
+//!
+//! The wrapper is a *scheduler*, not an execution identity:
+//! [`Backend::name`] forwards the inner backend's name, and the
+//! session wraps every owned backend in one by default
+//! (`Session::prefetch(false)` opts out) — the PR-1 trainer's overlap
+//! is the default again, now for every method.
+#![deny(missing_docs)]
+
+use anyhow::Result;
+
+use crate::coordinator::batch::Batch;
+use crate::coordinator::source::BatchSource;
+use crate::coordinator::trainer::TrainState;
+use crate::runtime::backend::{Backend, ModelSpec, StepOutcome, VrgcnBatch};
+use crate::runtime::exec::Tensor;
+
+/// Double-buffered assembly-overlap combinator; see the module docs.
+pub struct PrefetchBackend<B> {
+    inner: B,
+    front: Option<Batch>,
+    back: Option<Batch>,
+    /// Batch index currently assembled in `front`, if any.
+    have: Option<usize>,
+}
+
+impl<B: Backend> PrefetchBackend<B> {
+    /// Wrap `inner`; buffers are lazily shaped from the first source.
+    pub fn new(inner: B) -> PrefetchBackend<B> {
+        PrefetchBackend { inner, front: None, back: None, have: None }
+    }
+
+    /// The wrapped backend (for inspection after a run).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    fn ensure_bufs(&mut self, source: &dyn BatchSource) {
+        let (b, f, c) = source.shape();
+        let fits = |bt: &Batch| {
+            bt.a.dims == [b, b] && bt.x.dims == [b, f] && bt.y.dims == [b, c]
+        };
+        if !self.front.as_ref().is_some_and(fits) {
+            self.front = Some(source.new_batch());
+            self.have = None;
+        }
+        if !self.back.as_ref().is_some_and(fits) {
+            self.back = Some(source.new_batch());
+        }
+    }
+}
+
+impl<B: Backend> Backend for PrefetchBackend<B> {
+    fn name(&self) -> &'static str {
+        // a scheduling wrapper, not an execution identity — reports
+        // where the math actually runs
+        self.inner.name()
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        self.inner.model_spec(model)
+    }
+
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        self.inner.prepare(model)
+    }
+
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        self.inner.register_model(model, spec)
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        self.inner.train_step(model, state, lr, batch)
+    }
+
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        self.inner.forward(model, weights, batch)
+    }
+
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        self.inner.vrgcn_step(model, state, lr, batch)
+    }
+
+    fn batches_per_step(&self) -> usize {
+        self.inner.batches_per_step()
+    }
+
+    fn epoch_begin(&mut self) {
+        // a batch carried over from the previous epoch's plan is stale
+        self.have = None;
+        self.inner.epoch_begin();
+    }
+
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        if self.inner.batches_per_step() != 1 || !source.prefetchable() {
+            self.have = None;
+            return self.inner.step_from(model, state, lr, source, first, scratch);
+        }
+        self.ensure_bufs(source);
+        let inner = &mut self.inner;
+        let front = self.front.as_mut().expect("front buffer just ensured");
+        let back = self.back.as_mut().expect("back buffer just ensured");
+        if self.have != Some(first) {
+            // cold start (first step of an epoch, or lookahead was
+            // invalidated): assemble inline
+            source.assemble(first, front);
+        }
+        let next = first + 1;
+        let lookahead = next < source.len();
+        let loss = std::thread::scope(|s| {
+            let handle = lookahead.then(|| s.spawn(|| source.assemble(next, back)));
+            let r = if front.n_train == 0 {
+                Ok(None)
+            } else {
+                inner.train_step(model, state, lr, front).map(Some)
+            };
+            if let Some(h) = handle {
+                if let Err(p) = h.join() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+            r
+        })?;
+        if lookahead {
+            std::mem::swap(&mut self.front, &mut self.back);
+            self.have = Some(next);
+        } else {
+            self.have = None;
+        }
+        Ok(StepOutcome { loss, consumed: 1 })
+    }
+
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        self.inner.grad_step(model, weights, batch, grads)
+    }
+
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        self.inner.apply_grads(model, state, lr, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Task;
+    use crate::runtime::HostBackend;
+
+    #[test]
+    fn forwards_registry_to_inner() {
+        let mut pb = PrefetchBackend::new(HostBackend::new());
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 4, 8, 2, 16);
+        assert!(pb.register_model("m", spec.clone()));
+        assert_eq!(pb.model_spec("m").unwrap(), spec);
+        assert_eq!(pb.batches_per_step(), 1);
+        assert_eq!(pb.inner().models().count(), 1);
+    }
+}

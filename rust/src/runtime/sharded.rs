@@ -1,0 +1,275 @@
+//! [`ShardedBackend`]: the data-parallel [`Backend`] combinator.
+//! Cluster partitions are a natural unit of data parallelism (each
+//! batch is an almost-self-contained subgraph), so a sharded step pulls
+//! one cluster batch per replica, computes gradients on every replica
+//! concurrently, all-reduce-averages them, and applies **one** shared
+//! bias-corrected Adam step on the chief backend:
+//!
+//! ```text
+//!   step_from(first):  source ── batch first+0 ──► replica 0 ─ grads ─┐
+//!                      source ── batch first+1 ──► replica 1 ─ grads ─┼─ avg ─► chief Adam
+//!                      source ── batch first+k ──► replica k ─ grads ─┘
+//! ```
+//!
+//! Replicas run on scoped OS threads with their kernel width pinned to
+//! 1 (the pooled kernels are bit-identical at every width, so this
+//! changes nothing numerically and keeps replica gradient work off the
+//! shared pool, which runs one job at a time).  Determinism: gradients
+//! are summed in replica order and scaled once, so a sharded run is a
+//! pure function of `(seed, shards)`.
+//!
+//! Parity contract (pinned by `tests/driver.rs`): with **one** replica
+//! the sum has a single term and the scale is skipped, so every step is
+//! **bit-identical** to `HostBackend::train_step` — same loss bits,
+//! same weight/moment bits.  With N replicas the per-step batch size
+//! grows N-fold and the loss curve is statistically equivalent, not
+//! bitwise.
+#![deny(missing_docs)]
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batch::Batch;
+use crate::coordinator::source::BatchSource;
+use crate::coordinator::trainer::TrainState;
+use crate::runtime::backend::{Backend, ModelSpec, StepOutcome, VrgcnBatch};
+use crate::runtime::exec::Tensor;
+use crate::runtime::host::HostBackend;
+use crate::util::simd::axpy;
+
+/// Data-parallel combinator over `N` replica backends plus a chief
+/// (spec registry, optimizer, forward/eval path).  See the module docs
+/// for the step anatomy and the parity contract.
+pub struct ShardedBackend<B> {
+    chief: B,
+    replicas: Vec<B>,
+    bufs: Vec<Batch>,
+    grads: Vec<Vec<Vec<f32>>>,
+    avg: Vec<Vec<f32>>,
+}
+
+impl ShardedBackend<HostBackend> {
+    /// `shards` host replicas (kernel width 1 each) behind a
+    /// default-width host chief — the configuration `--shards N`
+    /// builds.
+    pub fn host(shards: usize) -> ShardedBackend<HostBackend> {
+        assert!(shards >= 1, "a sharded backend needs at least one replica");
+        ShardedBackend::new(
+            HostBackend::new(),
+            (0..shards).map(|_| HostBackend::with_threads(1)).collect(),
+        )
+    }
+}
+
+impl<B: Backend + Send> ShardedBackend<B> {
+    /// Combinator over explicit chief + replica backends (every one
+    /// must support [`Backend::grad_step`]; the chief must support
+    /// [`Backend::apply_grads`]).
+    pub fn new(chief: B, replicas: Vec<B>) -> ShardedBackend<B> {
+        assert!(!replicas.is_empty(), "a sharded backend needs at least one replica");
+        let shards = replicas.len();
+        ShardedBackend {
+            chief,
+            replicas,
+            bufs: Vec::new(),
+            grads: vec![Vec::new(); shards],
+            avg: Vec::new(),
+        }
+    }
+
+    /// Replica count (batches consumed per optimization step).
+    pub fn shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn ensure_bufs(&mut self, source: &dyn BatchSource) {
+        let (b, f, c) = source.shape();
+        let fits = |bt: &Batch| {
+            bt.a.dims == [b, b] && bt.x.dims == [b, f] && bt.y.dims == [b, c]
+        };
+        if self.bufs.len() != self.replicas.len() || !self.bufs.iter().all(fits) {
+            self.bufs = (0..self.replicas.len()).map(|_| source.new_batch()).collect();
+        }
+    }
+}
+
+impl<B: Backend + Send> Backend for ShardedBackend<B> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        self.chief.model_spec(model)
+    }
+
+    fn prepare(&mut self, model: &str) -> Result<()> {
+        self.chief.prepare(model)?;
+        for r in &mut self.replicas {
+            r.prepare(model)?;
+        }
+        Ok(())
+    }
+
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        let ok = self.chief.register_model(model, spec.clone());
+        for r in &mut self.replicas {
+            r.register_model(model, spec.clone());
+        }
+        ok
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        // One-batch data-parallel step through the same replica
+        // grad_step + chief apply_grads chain as step_from, so every
+        // entry point (including a prefetch wrapper around a one-shard
+        // backend) exercises the replica path — bit-identical to the
+        // chief's fused step by the parity contract.
+        let rep = &mut self.replicas[0];
+        let gb = &mut self.grads[0];
+        let loss = rep.grad_step(model, &state.weights, batch, gb)?;
+        self.chief.apply_grads(model, state, lr, &self.grads[0])?;
+        Ok(loss)
+    }
+
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        self.chief.forward(model, weights, batch)
+    }
+
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        self.chief.vrgcn_step(model, state, lr, batch)
+    }
+
+    fn batches_per_step(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn epoch_begin(&mut self) {
+        self.chief.epoch_begin();
+        for r in &mut self.replicas {
+            r.epoch_begin();
+        }
+    }
+
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        _scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        let k = self.replicas.len().min(source.len().saturating_sub(first));
+        if k == 0 {
+            return Err(anyhow!("step_from past the end of the epoch plan"));
+        }
+        self.ensure_bufs(source);
+        for (j, buf) in self.bufs.iter_mut().enumerate().take(k) {
+            source.assemble(first + j, buf);
+        }
+
+        // ---- fan out: one grad computation per replica thread -------
+        let weights: &[Tensor] = &state.weights;
+        let losses: Vec<Option<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter_mut()
+                .zip(self.bufs.iter())
+                .zip(self.grads.iter_mut())
+                .take(k)
+                .map(|((rep, buf), gb)| {
+                    s.spawn(move || -> Result<Option<f32>> {
+                        if buf.n_train == 0 {
+                            return Ok(None);
+                        }
+                        rep.grad_step(model, weights, buf, gb).map(Some)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(p) => std::panic::resume_unwind(p),
+                })
+                .collect::<Result<Vec<_>>>()
+        })?;
+
+        let active: Vec<usize> =
+            (0..k).filter(|&j| losses[j].is_some()).collect();
+        if active.is_empty() {
+            return Ok(StepOutcome { loss: None, consumed: k });
+        }
+
+        // ---- all-reduce: sum in replica order, scale once ------------
+        let layers = self.grads[active[0]].len();
+        self.avg.resize(layers, Vec::new());
+        for li in 0..layers {
+            let len = self.grads[active[0]][li].len();
+            let dst = &mut self.avg[li];
+            dst.clear();
+            dst.extend_from_slice(&self.grads[active[0]][li]);
+            debug_assert_eq!(dst.len(), len);
+            for &j in &active[1..] {
+                axpy(dst, &self.grads[j][li], 1.0);
+            }
+            if active.len() > 1 {
+                // skipped for one shard: dst == the single replica's
+                // gradient, bit for bit (the shards=1 parity contract)
+                let scale = 1.0 / active.len() as f32;
+                for v in dst.iter_mut() {
+                    *v *= scale;
+                }
+            }
+        }
+        self.chief.apply_grads(model, state, lr, &self.avg)?;
+
+        let loss_sum: f32 = active.iter().map(|&j| losses[j].unwrap()).sum();
+        let loss = if active.len() > 1 {
+            loss_sum / active.len() as f32
+        } else {
+            loss_sum
+        };
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite sharded loss at step {}", state.step));
+        }
+        Ok(StepOutcome { loss: Some(loss), consumed: k })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Task;
+
+    #[test]
+    fn registration_reaches_every_replica() {
+        let mut sb = ShardedBackend::host(3);
+        let spec = ModelSpec::gcn(Task::Multiclass, 2, 4, 8, 2, 16);
+        assert!(sb.register_model("m", spec.clone()));
+        assert_eq!(sb.shards(), 3);
+        assert_eq!(sb.batches_per_step(), 3);
+        assert!(sb.prepare("m").is_ok());
+        assert_eq!(sb.model_spec("m").unwrap(), spec);
+        for r in &mut sb.replicas {
+            assert_eq!(r.model_spec("m").unwrap(), spec);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one replica")]
+    fn zero_shards_rejected() {
+        let _ = ShardedBackend::host(0);
+    }
+}

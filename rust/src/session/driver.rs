@@ -1,0 +1,487 @@
+//! [`Driver`]: the pull-based training loop.  Where the old
+//! `Session::run()` *owned* a closed epoch loop, the driver is a
+//! resumable state machine the **caller** advances: each
+//! [`Driver::next_event`] (or iterator step) moves the run forward by
+//! exactly one visible transition and yields the typed [`Event`] for it
+//! — so CLIs, examples, benches, and tests can interleave their own
+//! logic (inspection, custom stopping, UI) between steps without
+//! forking the trainer.
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             ▼                                                │
+//!   NextEpoch ──► Step ──► StepRun ──► … ──► EpochEnd ──► MaybeEval
+//!       │          │StepStart   │StepEnd        │EpochEnd   │Eval? EarlyStop?
+//!       │          └────◄───────┘                            │
+//!       └(epochs done / early stop)──► Finish ──► Exhausted
+//!                                        │Done
+//! ```
+//!
+//! One `next_event` call performs at most one unit of work: `StepRun`
+//! assembles + executes one optimization step (through
+//! [`Backend::step_from`], where the sharded/prefetch combinators hook
+//! in), `MaybeEval` runs at most one evaluation.  Time is accumulated
+//! around the work units only, so caller time between pulls never
+//! pollutes `train_seconds`.
+//!
+//! `Session::run()` survives as a thin convenience — build the driver,
+//! drain it into the attached observer, package the result.
+#![deny(missing_docs)]
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::vrgcn::VrgcnSource;
+use crate::coordinator::batch::Batch;
+use crate::coordinator::batch_eval::cluster_evaluate;
+use crate::coordinator::sampler::ClusterSampler;
+use crate::coordinator::schedule::EarlyStopper;
+use crate::coordinator::source::{BatchSource, SourceStats};
+use crate::coordinator::trainer::{evaluate_cached, CurvePoint, TrainResult, TrainState};
+use crate::graph::Dataset;
+use crate::norm::NormCache;
+use crate::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
+use crate::runtime::{Backend, ModelSpec, StepOutcome};
+use crate::session::{Event, Observer, TrainConfig};
+use crate::util::{Rng, Timer};
+
+/// How the convergence curve's F1 is computed at each evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalStrategy {
+    /// Exact full-graph host inference (the default; what every curve
+    /// so far used).
+    ExactFullGraph,
+    /// The paper's cheap approximate eval: cluster-wise batched
+    /// inference over `parts` partitions (between-batch links dropped —
+    /// the Δ approximation of eq. (4) at eval time), routed through
+    /// `batch_eval::cluster_evaluate` on the session's backend.
+    Clustered {
+        /// Partitions of the eval-time clustering (one cluster per
+        /// batch); must be large enough for every cluster to fit the
+        /// model's `b_max`.
+        parts: usize,
+    },
+}
+
+/// Owned-or-borrowed execution backend of one run.
+pub(crate) enum BackendSlot<'a> {
+    /// The driver owns the backend (built by the session or CLI).
+    Owned(Box<dyn Backend>),
+    /// Caller-owned backend, kept alive for inspection or reuse.
+    Borrowed(&'a mut dyn Backend),
+}
+
+impl BackendSlot<'_> {
+    fn get(&mut self) -> &mut dyn Backend {
+        match self {
+            BackendSlot::Owned(b) => b.as_mut(),
+            BackendSlot::Borrowed(b) => &mut **b,
+        }
+    }
+}
+
+/// The per-method batch production half of a run.
+pub(crate) enum DriverSource<'a> {
+    /// [`BatchSource`]-backed methods (Cluster, Expansion, GraphSage):
+    /// steps pull through [`Backend::step_from`].
+    Batched(Box<dyn BatchSource + 'a>),
+    /// VR-GCN: assembly reads the history its own steps refresh, so the
+    /// driver runs its step inline (no lookahead, no sharding).
+    Vrgcn(VrgcnSource<'a>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    NextEpoch,
+    Step,
+    StepRun,
+    EpochEnd,
+    MaybeEval,
+    Finish,
+    Exhausted,
+}
+
+/// The resumable training state machine; see the module docs for the
+/// transition diagram and `tests/driver.rs` for the pinned event
+/// ordering.  Build one with [`crate::session::Session::driver`], pull
+/// events with [`Driver::next_event`] or by iterating
+/// (`Item = Result<Event>`), and package the run with
+/// [`Driver::into_result`].
+pub struct Driver<'a> {
+    ds: &'a Dataset,
+    model: String,
+    spec: ModelSpec,
+    cfg: TrainConfig,
+    backend: BackendSlot<'a>,
+    source: DriverSource<'a>,
+    scratch: Option<Batch>,
+    eval_nodes: Vec<u32>,
+
+    // ---- state-machine position ----
+    phase: Phase,
+    epoch: usize,
+    lr: f32,
+    plan_len: usize,
+    cursor: usize,
+    step_ix: usize,
+    exec_steps: usize,
+    epoch_loss: f64,
+    last_mean: f64,
+    stopped: bool,
+    queued: VecDeque<Event>,
+
+    // ---- run accumulators ----
+    state: TrainState,
+    curve: Vec<CurvePoint>,
+    train_seconds: f64,
+    steps: u64,
+    stopper: EarlyStopper,
+    norm_cache: NormCache,
+    eval_sampler: Option<ClusterSampler>,
+}
+
+impl<'a> Driver<'a> {
+    pub(crate) fn from_parts(
+        mut backend: BackendSlot<'a>,
+        ds: &'a Dataset,
+        model: String,
+        cfg: TrainConfig,
+        source: DriverSource<'a>,
+        initial: Option<TrainState>,
+    ) -> Result<Driver<'a>> {
+        let spec = backend.get().model_spec(&model)?;
+        backend.get().prepare(&model)?;
+        let state = match initial {
+            Some(st) => {
+                for (li, (w, &shape)) in
+                    st.weights.iter().zip(&spec.weight_shapes).enumerate()
+                {
+                    if w.dims != [shape.0, shape.1] {
+                        return Err(anyhow!(
+                            "resume state layer {li} has shape {:?}, model {model} \
+                             expects {:?}",
+                            w.dims,
+                            shape
+                        ));
+                    }
+                }
+                st
+            }
+            None => TrainState::init(&spec, cfg.seed),
+        };
+        let scratch = match &source {
+            DriverSource::Batched(src) => Some(src.new_batch()),
+            DriverSource::Vrgcn(_) => None,
+        };
+        let eval_nodes = ds.nodes_in_split(cfg.eval_split);
+        // Clustered eval is validated here, not at the first eval —
+        // a part count whose clusters overflow b_max must fail before
+        // epochs of training are spent, not after.
+        let eval_sampler = match cfg.eval {
+            EvalStrategy::Clustered { parts } => {
+                let parts = parts.clamp(1, ds.n().max(1));
+                let mut rng = Rng::new(cfg.seed ^ 0xE7A1_C105_7E2E_D001);
+                let part =
+                    MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng);
+                let sampler = ClusterSampler::new(parts_to_clusters(&part, parts), 1);
+                if sampler.max_batch_nodes() > spec.b_max {
+                    return Err(anyhow!(
+                        "clustered eval with {parts} parts produces batches of up \
+                         to {} nodes but model {model} has b_max={}; raise the \
+                         eval part count",
+                        sampler.max_batch_nodes(),
+                        spec.b_max
+                    ));
+                }
+                Some(sampler)
+            }
+            EvalStrategy::ExactFullGraph => None,
+        };
+        let stopper = EarlyStopper::new(cfg.patience);
+        let epoch = cfg.start_epoch;
+        Ok(Driver {
+            ds,
+            model,
+            spec,
+            cfg,
+            backend,
+            source,
+            scratch,
+            eval_nodes,
+            phase: Phase::NextEpoch,
+            epoch,
+            lr: 0.0,
+            plan_len: 0,
+            cursor: 0,
+            step_ix: 0,
+            exec_steps: 0,
+            epoch_loss: 0.0,
+            last_mean: 0.0,
+            stopped: false,
+            queued: VecDeque::new(),
+            state,
+            curve: Vec::new(),
+            train_seconds: 0.0,
+            steps: 0,
+            stopper,
+            norm_cache: NormCache::new(),
+            eval_sampler,
+        })
+    }
+
+    /// The model id this run trains.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// The resolved architecture (authoritative, from the backend).
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Name of the executing backend (`"host"`, `"pjrt"`, `"sharded"`;
+    /// a prefetch wrapper forwards its inner backend's name).
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            BackendSlot::Owned(b) => b.name(),
+            BackendSlot::Borrowed(b) => b.name(),
+        }
+    }
+
+    /// The live training state (weights + Adam moments + step counter)
+    /// — inspectable between any two events.
+    pub fn state(&self) -> &TrainState {
+        &self.state
+    }
+
+    /// Convergence curve recorded so far.
+    pub fn curve(&self) -> &[CurvePoint] {
+        &self.curve
+    }
+
+    /// Advance the state machine to its next visible transition and
+    /// yield the event for it; `Ok(None)` once [`Event::Done`] has been
+    /// delivered.  Errors from the backend or evaluator abort the run.
+    pub fn next_event(&mut self) -> Result<Option<Event>> {
+        if let Some(ev) = self.queued.pop_front() {
+            return Ok(Some(ev));
+        }
+        loop {
+            match self.phase {
+                Phase::NextEpoch => {
+                    if self.epoch >= self.cfg.epochs || self.stopped {
+                        self.phase = Phase::Finish;
+                        continue;
+                    }
+                    self.epoch += 1;
+                    self.lr =
+                        self.cfg.schedule.lr_at(self.cfg.lr, self.epoch, self.cfg.epochs);
+                    let t = Timer::start();
+                    self.backend.get().epoch_begin();
+                    self.plan_len = match &mut self.source {
+                        DriverSource::Batched(src) => src.begin_epoch(self.epoch),
+                        DriverSource::Vrgcn(src) => src.begin_epoch(self.epoch),
+                    };
+                    self.train_seconds += t.secs();
+                    self.cursor = 0;
+                    self.step_ix = 0;
+                    self.exec_steps = 0;
+                    self.epoch_loss = 0.0;
+                    self.phase = Phase::Step;
+                }
+                Phase::Step => {
+                    let capped = self.cfg.max_steps_per_epoch > 0
+                        && self.exec_steps >= self.cfg.max_steps_per_epoch;
+                    if self.cursor >= self.plan_len || capped {
+                        self.phase = Phase::EpochEnd;
+                        continue;
+                    }
+                    self.phase = Phase::StepRun;
+                    return Ok(Some(Event::StepStart {
+                        epoch: self.epoch,
+                        step: self.step_ix,
+                    }));
+                }
+                Phase::StepRun => {
+                    let t = Timer::start();
+                    let outcome = self.run_step()?;
+                    self.train_seconds += t.secs();
+                    self.cursor += outcome.consumed;
+                    let ev = Event::StepEnd {
+                        epoch: self.epoch,
+                        step: self.step_ix,
+                        loss: outcome.loss,
+                        batches: outcome.consumed,
+                    };
+                    self.step_ix += 1;
+                    if let Some(l) = outcome.loss {
+                        self.exec_steps += 1;
+                        self.steps += 1;
+                        self.epoch_loss += l as f64;
+                    }
+                    self.phase = Phase::Step;
+                    return Ok(Some(ev));
+                }
+                Phase::EpochEnd => {
+                    self.last_mean = self.epoch_loss / self.exec_steps.max(1) as f64;
+                    self.phase = Phase::MaybeEval;
+                    return Ok(Some(Event::EpochEnd {
+                        epoch: self.epoch,
+                        train_seconds: self.train_seconds,
+                        mean_loss: self.last_mean,
+                    }));
+                }
+                Phase::MaybeEval => {
+                    let last = self.epoch == self.cfg.epochs;
+                    let due = self.cfg.eval_every > 0
+                        && self.epoch % self.cfg.eval_every == 0;
+                    self.phase = Phase::NextEpoch;
+                    if due || last {
+                        let f1 = self.run_eval()?;
+                        let point = CurvePoint {
+                            epoch: self.epoch,
+                            train_seconds: self.train_seconds,
+                            train_loss: self.last_mean,
+                            eval_f1: f1,
+                        };
+                        self.curve.push(point.clone());
+                        if self.stopper.update(f1) {
+                            self.stopped = true;
+                            self.queued.push_back(Event::EarlyStop {
+                                epoch: self.epoch,
+                                best: self.stopper.best(),
+                            });
+                        }
+                        return Ok(Some(Event::Eval { point }));
+                    }
+                }
+                Phase::Finish => {
+                    self.phase = Phase::Exhausted;
+                    return Ok(Some(Event::Done {
+                        epochs: self.epoch,
+                        steps: self.steps,
+                    }));
+                }
+                Phase::Exhausted => return Ok(None),
+            }
+        }
+    }
+
+    /// Execute one optimization step (the `StepRun` transition body).
+    fn run_step(&mut self) -> Result<StepOutcome> {
+        let backend = match &mut self.backend {
+            BackendSlot::Owned(b) => b.as_mut(),
+            BackendSlot::Borrowed(b) => &mut **b,
+        };
+        match &mut self.source {
+            DriverSource::Batched(src) => {
+                let scratch =
+                    self.scratch.as_mut().expect("batched driver owns a scratch batch");
+                backend.step_from(
+                    &self.model,
+                    &mut self.state,
+                    self.lr,
+                    src.as_mut(),
+                    self.cursor,
+                    scratch,
+                )
+            }
+            DriverSource::Vrgcn(src) => {
+                let vb = src.assemble(self.cursor, &mut self.norm_cache);
+                let (loss, hiddens) =
+                    backend.vrgcn_step(&self.model, &mut self.state, self.lr, vb)?;
+                src.refresh(&hiddens);
+                Ok(StepOutcome { loss: Some(loss), consumed: 1 })
+            }
+        }
+    }
+
+    /// Run one evaluation per the configured [`EvalStrategy`].
+    fn run_eval(&mut self) -> Result<f64> {
+        if self.eval_nodes.is_empty() {
+            return Ok(0.0);
+        }
+        // VR-GCN's training step has no residual path, so its exact
+        // eval must not apply one either, whatever the spec flag says
+        // (the pre-driver loop pinned this to false).
+        let residual = match &self.source {
+            DriverSource::Vrgcn(_) => false,
+            DriverSource::Batched(_) => self.spec.residual,
+        };
+        match self.cfg.eval {
+            EvalStrategy::ExactFullGraph => Ok(evaluate_cached(
+                self.ds,
+                &self.state.weights,
+                self.cfg.norm,
+                residual,
+                &self.eval_nodes,
+                &mut self.norm_cache,
+            )),
+            EvalStrategy::Clustered { .. } => {
+                let sampler = self
+                    .eval_sampler
+                    .as_ref()
+                    .expect("clustered eval sampler built at construction");
+                let backend = match &mut self.backend {
+                    BackendSlot::Owned(b) => b.as_mut(),
+                    BackendSlot::Borrowed(b) => &mut **b,
+                };
+                cluster_evaluate(
+                    backend,
+                    self.ds,
+                    sampler,
+                    &self.model,
+                    &self.state.weights,
+                    self.cfg.norm,
+                    &self.eval_nodes,
+                    self.cfg.seed,
+                )
+            }
+        }
+    }
+
+    /// Drain every remaining event into `obs` (the push-style
+    /// convenience `Session::run` uses).
+    pub fn drive(&mut self, obs: &mut dyn Observer) -> Result<()> {
+        while let Some(ev) = self.next_event()? {
+            obs.on_event(&ev);
+        }
+        Ok(())
+    }
+
+    /// Package the run (drains any remaining events first, so calling
+    /// this on a half-driven driver completes the run silently).
+    pub fn into_result(mut self) -> Result<TrainResult> {
+        while self.next_event()?.is_some() {}
+        let stats: SourceStats = match &self.source {
+            DriverSource::Batched(src) => src.stats(),
+            DriverSource::Vrgcn(src) => src.stats(),
+        };
+        let peak_bytes = stats.max_batch_bytes + self.state.param_bytes();
+        Ok(TrainResult {
+            state: self.state,
+            curve: self.curve,
+            train_seconds: self.train_seconds,
+            steps: self.steps,
+            peak_bytes,
+            avg_within_edges_per_node: stats.utilization,
+        })
+    }
+}
+
+impl Iterator for Driver<'_> {
+    type Item = Result<Event>;
+
+    fn next(&mut self) -> Option<Result<Event>> {
+        match self.next_event() {
+            Ok(Some(ev)) => Some(Ok(ev)),
+            Ok(None) => None,
+            Err(e) => {
+                self.phase = Phase::Exhausted;
+                self.queued.clear();
+                Some(Err(e))
+            }
+        }
+    }
+}

@@ -1,10 +1,12 @@
 //! The single experiment surface: a [`Session`] names a dataset, a
 //! training [`Method`], a [`crate::runtime::Backend`], and a typed
-//! [`TrainConfig`], then [`Session::run`] wires the partitioner, the
-//! sampler, batch assembly, and the right training loop together —
-//! one entry point for Cluster-GCN and every baseline the paper
-//! compares against, on either the PJRT engine or the artifact-free
-//! host backend.
+//! [`TrainConfig`], then either runs to completion ([`Session::run`])
+//! or hands the caller a pull-based [`Driver`] ([`Session::driver`])
+//! that yields typed [`Event`]s step by step — one entry point for
+//! Cluster-GCN and every baseline the paper compares against, on the
+//! PJRT engine, the artifact-free host backend, or any combinator
+//! stacked on top ([`crate::runtime::ShardedBackend`],
+//! [`crate::runtime::PrefetchBackend`]).
 //!
 //! ```no_run
 //! use cluster_gcn::session::{Method, Session};
@@ -21,25 +23,44 @@
 //!          out.result.curve.last().unwrap().eval_f1);
 //! ```
 //!
+//! Pull-based driving (the same run, caller-owned loop):
+//!
+//! ```no_run
+//! use cluster_gcn::session::{Event, Session};
+//!
+//! let ds = cluster_gcn::datagen::build(
+//!     cluster_gcn::datagen::preset("cora_like").unwrap(), 42);
+//! let mut driver = Session::new(&ds).epochs(10).driver().unwrap();
+//! while let Some(ev) = driver.next_event().unwrap() {
+//!     if let Event::Eval { point } = ev {
+//!         println!("epoch {} f1 {:.4}", point.epoch, point.eval_f1);
+//!     }
+//! }
+//! let result = driver.into_result().unwrap();
+//! println!("trained {} steps", result.steps);
+//! ```
+//!
 //! Layering: `Session` (what experiment) → [`Method`] (which training
-//! algorithm + its sampling scheme) → [`crate::runtime::Backend`]
-//! (where `train_step`/`forward` execute).  An [`Observer`] attached to
-//! the session receives metric/checkpoint/early-stop [`Event`]s as the
-//! run progresses.
+//! algorithm + its sampling scheme) → [`Driver`] (the pull-based loop)
+//! → [`crate::runtime::Backend`] (where `train_step`/`forward`
+//! execute).  An [`Observer`] attached to the session receives every
+//! [`Event`] as [`Session::run`] drains the driver.
 #![deny(missing_docs)]
 
+pub mod driver;
 pub mod observer;
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use crate::baselines::{
-    train_expansion_observed, train_graphsage_observed, train_vrgcn_observed,
-    SageParams, VrgcnParams,
-};
+use crate::baselines::expansion::ExpansionSource;
+use crate::baselines::graphsage::SageSource;
+use crate::baselines::vrgcn::VrgcnSource;
+use crate::baselines::{SageParams, VrgcnParams};
 use crate::coordinator::schedule::LrSchedule;
-use crate::coordinator::trainer::{train_observed, TrainOptions, TrainResult};
+use crate::coordinator::source::ClusterSource;
+use crate::coordinator::trainer::{TrainResult, TrainState};
 use crate::coordinator::{checkpoint, ClusterSampler};
 use crate::datagen::preset;
 use crate::graph::{Dataset, Split};
@@ -47,9 +68,11 @@ use crate::norm::NormConfig;
 use crate::partition::{
     parts_to_clusters, MultilevelPartitioner, Partitioner, RandomPartitioner,
 };
-use crate::runtime::{Backend, HostBackend, ModelSpec};
+use crate::runtime::{Backend, HostBackend, ModelSpec, PrefetchBackend};
 use crate::util::Rng;
 
+use driver::{BackendSlot, DriverSource};
+pub use driver::{Driver, EvalStrategy};
 pub use observer::{Event, NullObserver, Observer, RecordingObserver, StderrObserver};
 
 /// Which training algorithm a session runs (Table 1 / Fig. 6 rows).
@@ -80,11 +103,11 @@ impl Method {
     }
 }
 
-/// Typed training configuration — the session-level replacement for
-/// threading architecture knobs through artifact names and ad-hoc
-/// arguments.  Everything model-shaped lives here; everything
-/// graph-shaped (partitions, normalization) is set on the [`Session`]
-/// builder directly.
+/// The one typed training configuration, flowing Session → [`Driver`] →
+/// [`crate::runtime::Backend`].  Everything the run needs lives here —
+/// model shape, optimization, scheduling, adjacency normalization, and
+/// the [`EvalStrategy`]; the loop-level `TrainOptions` survives only as
+/// a `From` shim for the pre-driver free functions.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     /// GCN depth L.
@@ -111,6 +134,17 @@ pub struct TrainConfig {
     pub schedule: LrSchedule,
     /// early-stop patience in evals (0 = disabled).
     pub patience: usize,
+    /// adjacency normalization (§6.2 / Table 11 variants).
+    pub norm: NormConfig,
+    /// how the curve's F1 is computed (exact full-graph vs the paper's
+    /// clustered approximate eval).
+    pub eval: EvalStrategy,
+    /// first epoch already completed (0 = fresh run); the driver runs
+    /// epochs `start_epoch + 1 ..= epochs`.  Pair with
+    /// [`Session::initial_state`] to resume from a checkpoint: epoch
+    /// streams are pure functions of `(seed, epoch)`, so a resumed run
+    /// replays exactly what the uninterrupted run would have done.
+    pub start_epoch: usize,
 }
 
 impl Default for TrainConfig {
@@ -127,22 +161,9 @@ impl Default for TrainConfig {
             max_steps_per_epoch: 0,
             schedule: LrSchedule::Constant,
             patience: 0,
-        }
-    }
-}
-
-impl TrainConfig {
-    fn to_options(&self, norm: NormConfig) -> TrainOptions {
-        TrainOptions {
-            lr: self.lr,
-            epochs: self.epochs,
-            eval_every: self.eval_every,
-            seed: self.seed,
-            norm,
-            eval_split: self.eval_split,
-            max_steps_per_epoch: self.max_steps_per_epoch,
-            schedule: self.schedule,
-            patience: self.patience,
+            norm: NormConfig::PAPER_DEFAULT,
+            eval: EvalStrategy::ExactFullGraph,
+            start_epoch: 0,
         }
     }
 }
@@ -152,7 +173,8 @@ impl TrainConfig {
 pub struct SessionResult {
     /// model id the backend trained (artifact name on PJRT).
     pub model: String,
-    /// backend that executed the run (`"pjrt"` | `"host"`).
+    /// backend that executed the run (`"pjrt"` | `"host"` |
+    /// `"sharded"`; a prefetch wrapper reports its inner backend).
     pub backend: String,
     /// the spec the run was shaped by (authoritative, from the backend).
     pub spec: ModelSpec,
@@ -160,26 +182,22 @@ pub struct SessionResult {
     pub result: TrainResult,
 }
 
-enum BackendSlot<'a> {
-    Owned(Box<dyn Backend>),
-    Borrowed(&'a mut dyn Backend),
-}
-
 /// Builder for one training run; see the module docs for the layering.
 ///
 /// Defaults: Cluster-GCN with the dataset preset's partition count and
-/// q, symmetric normalization, the artifact-free [`HostBackend`], and
-/// the default [`TrainConfig`].
+/// q, symmetric normalization, exact full-graph eval, the artifact-free
+/// [`HostBackend`], and the default [`TrainConfig`].
 pub struct Session<'a> {
     ds: &'a Dataset,
     method: Method,
     cfg: TrainConfig,
-    norm: NormConfig,
     parts: Option<usize>,
     random_partition: bool,
     backend: BackendSlot<'a>,
     observer: Option<&'a mut dyn Observer>,
     save: Option<PathBuf>,
+    initial: Option<TrainState>,
+    prefetch: bool,
 }
 
 impl<'a> Session<'a> {
@@ -190,13 +208,25 @@ impl<'a> Session<'a> {
             ds,
             method: Method::Cluster { q },
             cfg: TrainConfig::default(),
-            norm: NormConfig::PAPER_DEFAULT,
             parts: None,
             random_partition: false,
             backend: BackendSlot::Owned(Box::new(HostBackend::new())),
             observer: None,
             save: None,
+            initial: None,
+            prefetch: true,
         }
+    }
+
+    /// Overlap batch assembly with execution by wrapping the (owned)
+    /// backend in a [`crate::runtime::PrefetchBackend`] — **on by
+    /// default**, preserving the pre-driver trainer's pipelining for
+    /// every method.  Pass `false` for a strictly serial
+    /// assemble-then-execute loop (borrowed backends are never wrapped;
+    /// wrap them yourself to opt in).
+    pub fn prefetch(mut self, enabled: bool) -> Self {
+        self.prefetch = enabled;
+        self
     }
 
     /// Number of graph partitions (Cluster-GCN only; default = the
@@ -215,7 +245,14 @@ impl<'a> Session<'a> {
 
     /// Adjacency normalization (§6.2 / Table 11 variants).
     pub fn norm(mut self, norm: NormConfig) -> Self {
-        self.norm = norm;
+        self.cfg.norm = norm;
+        self
+    }
+
+    /// Evaluation strategy for the convergence curve (default: exact
+    /// full-graph inference).
+    pub fn eval(mut self, eval: EvalStrategy) -> Self {
+        self.cfg.eval = eval;
         self
     }
 
@@ -255,7 +292,9 @@ impl<'a> Session<'a> {
         self
     }
 
-    /// Execute on an owned backend (e.g. a freshly opened PJRT engine).
+    /// Execute on an owned backend (e.g. a freshly opened PJRT engine,
+    /// or a combinator stack like
+    /// `Box::new(ShardedBackend::host(4))`).
     pub fn backend(mut self, backend: Box<dyn Backend>) -> Self {
         self.backend = BackendSlot::Owned(backend);
         self
@@ -268,15 +307,28 @@ impl<'a> Session<'a> {
         self
     }
 
-    /// Attach an observer receiving [`Event`]s during the run.
+    /// Attach an observer receiving [`Event`]s during [`Session::run`]
+    /// (ignored when the caller drives a [`Driver`] directly — the
+    /// events are already in the caller's hands).
     pub fn observer(mut self, obs: &'a mut dyn Observer) -> Self {
         self.observer = Some(obs);
         self
     }
 
-    /// Save a checkpoint of the final state to `path` after training.
+    /// Save a checkpoint of the final state to `path` after training
+    /// ([`Session::run`] only; manual drivers checkpoint via
+    /// [`crate::coordinator::checkpoint`] whenever they choose).
     pub fn save(mut self, path: impl Into<PathBuf>) -> Self {
         self.save = Some(path.into());
+        self
+    }
+
+    /// Start from an existing [`TrainState`] (e.g. a loaded checkpoint)
+    /// instead of a fresh Glorot init.  Set
+    /// [`TrainConfig::start_epoch`] to the epoch the state was saved at
+    /// for a resume that bit-exactly replays the uninterrupted run.
+    pub fn initial_state(mut self, state: TrainState) -> Self {
+        self.initial = Some(state);
         self
     }
 
@@ -302,26 +354,45 @@ impl<'a> Session<'a> {
         format!("{short}{kind}{hid}_L{layers}")
     }
 
-    /// Run the session: partition (if clustering), register/resolve the
-    /// model on the backend, train, optionally checkpoint.
-    pub fn run(self) -> Result<SessionResult> {
+    /// Build the pull-based [`Driver`] for this session: partition (if
+    /// clustering), register/resolve the model on the backend, wire the
+    /// method's batch source — then hand the loop to the caller.
+    pub fn driver(self) -> Result<Driver<'a>> {
+        self.into_driver_parts().map(|(d, _, _)| d)
+    }
+
+    fn into_driver_parts(
+        self,
+    ) -> Result<(Driver<'a>, Option<&'a mut dyn Observer>, Option<PathBuf>)> {
         let model = self.model_name();
         let Session {
             ds,
             method,
             cfg,
-            norm,
             parts,
             random_partition,
             mut backend,
             observer,
             save,
+            initial,
+            prefetch,
         } = self;
         if cfg.layers == 0 {
             return Err(anyhow!("a model needs at least one layer"));
         }
+        // default-on assembly/execute overlap: every owned backend runs
+        // behind a PrefetchBackend (a pure scheduling wrapper — name
+        // and numerics are the inner backend's; pass-through when the
+        // inner consumes >1 batch per step)
+        if prefetch {
+            backend = match backend {
+                BackendSlot::Owned(b) => {
+                    BackendSlot::Owned(Box::new(PrefetchBackend::new(b)))
+                }
+                borrowed => borrowed,
+            };
+        }
         let p = preset(&ds.name);
-        let opts = cfg.to_options(norm);
 
         // ---- partition + sampler (Cluster-GCN only) -------------------
         let sampler = if let Method::Cluster { q } = &method {
@@ -330,7 +401,7 @@ impl<'a> Session<'a> {
                 .unwrap_or(10)
                 .clamp(1, ds.n().max(1));
             let q = (*q).clamp(1, parts);
-            let mut rng = Rng::new(opts.seed ^ 0xBEEF);
+            let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
             let part = if random_partition {
                 RandomPartitioner.partition(&ds.graph, parts, &mut rng)
             } else {
@@ -347,46 +418,68 @@ impl<'a> Session<'a> {
         let need = sampler.as_ref().map(|s| s.max_batch_nodes()).unwrap_or(0);
         let b_max = base_bmax.max(need).next_multiple_of(8);
         let spec = ModelSpec::gcn(ds.task, cfg.layers, ds.f_in, f_hid, ds.num_classes, b_max);
-        let backend: &mut dyn Backend = match &mut backend {
-            BackendSlot::Owned(b) => b.as_mut(),
-            BackendSlot::Borrowed(b) => &mut **b,
+        let spec = {
+            let be: &mut dyn Backend = match &mut backend {
+                BackendSlot::Owned(b) => b.as_mut(),
+                BackendSlot::Borrowed(b) => &mut **b,
+            };
+            be.register_model(&model, spec);
+            // authoritative: PJRT ignores registration (its manifest is
+            // the source of truth), so sources must be shaped by what
+            // the backend actually resolves
+            be.model_spec(&model)?
         };
-        backend.register_model(&model, spec);
-        let spec = backend.model_spec(&model)?;
 
-        // ---- observer + dispatch --------------------------------------
+        // ---- per-method batch source ----------------------------------
+        let source = match method {
+            Method::Cluster { .. } => {
+                let sampler = sampler.expect("cluster method always builds a sampler");
+                DriverSource::Batched(Box::new(ClusterSource::new(
+                    ds, sampler, &spec, cfg.norm, cfg.seed,
+                )?))
+            }
+            Method::Expansion { batch } => DriverSource::Batched(Box::new(
+                ExpansionSource::new(ds, &spec, batch.max(1), cfg.norm, cfg.seed),
+            )),
+            Method::GraphSage(params) => DriverSource::Batched(Box::new(
+                SageSource::new(ds, &spec, params, cfg.norm, cfg.seed)?,
+            )),
+            Method::VrGcn(params) => {
+                DriverSource::Vrgcn(VrgcnSource::new(ds, &spec, params, cfg.norm, cfg.seed))
+            }
+        };
+
+        let driver = Driver::from_parts(backend, ds, model, cfg, source, initial)?;
+        Ok((driver, observer, save))
+    }
+
+    /// Run the session to completion: build the [`Driver`], drain every
+    /// event into the attached observer, optionally checkpoint (the
+    /// checkpoint is written — and [`Event::CheckpointSaved`] emitted —
+    /// just before [`Event::Done`], which stays the final event).
+    /// Equivalent to driving the loop by hand — this is now a
+    /// convenience, not the loop's owner.
+    pub fn run(self) -> Result<SessionResult> {
+        let (mut driver, observer, mut save) = self.into_driver_parts()?;
         let mut null = NullObserver;
         let obs: &mut dyn Observer = match observer {
             Some(o) => o,
             None => &mut null,
         };
-        let result = match method {
-            Method::Cluster { .. } => {
-                let sampler = sampler.expect("cluster method always builds a sampler");
-                train_observed(backend, ds, &sampler, &model, &opts, obs)?
+        while let Some(ev) = driver.next_event()? {
+            if matches!(ev, Event::Done { .. }) {
+                if let Some(path) = save.take() {
+                    checkpoint::save(driver.state(), driver.model(), &path)?;
+                    obs.on_event(&Event::CheckpointSaved { path });
+                }
             }
-            Method::Expansion { batch } => {
-                train_expansion_observed(backend, ds, &model, batch.max(1), &opts, obs)?
-            }
-            Method::GraphSage(params) => {
-                train_graphsage_observed(backend, ds, &model, &params, &opts, obs)?
-            }
-            Method::VrGcn(params) => {
-                train_vrgcn_observed(backend, ds, &model, &params, &opts, obs)?
-            }
-        };
-
-        if let Some(path) = &save {
-            checkpoint::save(&result.state, &model, path)?;
-            obs.on_event(&Event::CheckpointSaved { path });
+            obs.on_event(&ev);
         }
-
-        Ok(SessionResult {
-            model,
-            backend: backend.name().to_string(),
-            spec,
-            result,
-        })
+        let model = driver.model().to_string();
+        let backend = driver.backend_name().to_string();
+        let spec = driver.spec().clone();
+        let result = driver.into_result()?;
+        Ok(SessionResult { model, backend, spec, result })
     }
 }
 
@@ -436,5 +529,7 @@ mod tests {
         assert_eq!(s.model_name(), "custom_graph_L2");
         // default method is cluster with q = 1 for presetless datasets
         assert!(matches!(s.method, Method::Cluster { q: 1 }));
+        // default eval strategy is the exact evaluator
+        assert_eq!(s.cfg.eval, EvalStrategy::ExactFullGraph);
     }
 }

@@ -1,42 +1,77 @@
-//! Training-run observation: a callback trait the training loops feed
-//! with metric/checkpoint/early-stop events as they happen, so callers
-//! can stream progress, log, or implement custom stopping logic without
-//! touching the loops themselves.
+//! Training-run observation: the typed [`Event`] stream a
+//! [`super::Driver`] yields (and [`super::Session::run`] forwards to an
+//! attached [`Observer`]), so callers can stream progress, log, collect
+//! curves, or implement custom stopping logic without owning the loop.
 #![deny(missing_docs)]
 
-use std::path::Path;
+use std::path::PathBuf;
 
 use crate::coordinator::trainer::CurvePoint;
 
-/// One training-run event, borrowed from the loop that emitted it.
-#[derive(Debug)]
-pub enum Event<'a> {
+/// One training-run event, yielded in order by the driver.
+///
+/// Ordering contract (pinned by `tests/driver.rs`): per epoch, a
+/// [`Event::StepStart`]/[`Event::StepEnd`] pair per optimization step
+/// in step order, then exactly one [`Event::EpochEnd`], then
+/// [`Event::Eval`] when that epoch evaluates, then [`Event::EarlyStop`]
+/// if patience fired; the final event of every run is [`Event::Done`].
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// An optimization step is about to run (the driver yields this
+    /// *before* assembling/executing, so a caller may inspect state or
+    /// stop between steps).
+    StepStart {
+        /// 1-based epoch number.
+        epoch: usize,
+        /// 0-based optimization-step index within the epoch.
+        step: usize,
+    },
+    /// An optimization step finished.
+    StepEnd {
+        /// 1-based epoch number.
+        epoch: usize,
+        /// 0-based optimization-step index within the epoch.
+        step: usize,
+        /// Mean loss over the step's contributing batches; `None` when
+        /// every pulled batch had no training node (state untouched).
+        loss: Option<f32>,
+        /// Batches consumed from the epoch plan by this step (> 1 on a
+        /// sharded backend).
+        batches: usize,
+    },
     /// An epoch finished (every epoch, whether or not it evaluated).
     EpochEnd {
         /// 1-based epoch number.
         epoch: usize,
         /// cumulative training seconds so far (eval time excluded).
         train_seconds: f64,
-        /// mean train loss over the epoch's batches.
+        /// mean train loss over the epoch's executed steps.
         mean_loss: f64,
     },
     /// An evaluation ran; `point` is the curve entry just recorded.
     Eval {
         /// the convergence-curve point (epoch, time, loss, F1).
-        point: &'a CurvePoint,
+        point: CurvePoint,
     },
-    /// Early stopping fired; the run ends after this event.
+    /// Early stopping fired; [`Event::Done`] follows immediately.
     EarlyStop {
         /// epoch at which training stopped.
         epoch: usize,
         /// best eval metric seen before stopping.
         best: f64,
     },
-    /// A checkpoint was written (emitted by the session, after the
-    /// training loop returns).
+    /// A checkpoint was written (emitted by [`super::Session::run`]
+    /// just before [`Event::Done`], which stays the final event).
     CheckpointSaved {
         /// destination file.
-        path: &'a Path,
+        path: PathBuf,
+    },
+    /// The run completed; no further events follow.
+    Done {
+        /// last epoch that ran (0 when the run had no epochs).
+        epochs: usize,
+        /// total optimization steps executed.
+        steps: u64,
     },
 }
 
@@ -44,23 +79,24 @@ pub enum Event<'a> {
 /// inline on the training thread.
 pub trait Observer {
     /// Handle one event.
-    fn on_event(&mut self, event: &Event<'_>);
+    fn on_event(&mut self, event: &Event);
 }
 
 /// The do-nothing observer (default when none is attached).
 pub struct NullObserver;
 
 impl Observer for NullObserver {
-    fn on_event(&mut self, _event: &Event<'_>) {}
+    fn on_event(&mut self, _event: &Event) {}
 }
 
 /// Streams eval/early-stop/checkpoint events to stderr — what the CLI
-/// attaches so long runs show live progress.
+/// attaches so long runs show live progress.  Per-step events are
+/// ignored (too chatty for a terminal).
 #[derive(Default)]
 pub struct StderrObserver;
 
 impl Observer for StderrObserver {
-    fn on_event(&mut self, event: &Event<'_>) {
+    fn on_event(&mut self, event: &Event) {
         match event {
             Event::Eval { point } => eprintln!(
                 "epoch {:4}  train_s {:8.2}  loss {:.4}  f1 {:.4}",
@@ -72,7 +108,10 @@ impl Observer for StderrObserver {
             Event::CheckpointSaved { path } => {
                 eprintln!("checkpoint saved to {}", path.display())
             }
-            Event::EpochEnd { .. } => {}
+            Event::StepStart { .. }
+            | Event::StepEnd { .. }
+            | Event::EpochEnd { .. }
+            | Event::Done { .. } => {}
         }
     }
 }
@@ -80,6 +119,8 @@ impl Observer for StderrObserver {
 /// Records every event kind — useful in tests and notebooks.
 #[derive(Default)]
 pub struct RecordingObserver {
+    /// `(epoch, step, loss)` per completed optimization step.
+    pub steps: Vec<(usize, usize, Option<f32>)>,
     /// `(epoch, mean_loss)` per completed epoch.
     pub epochs: Vec<(usize, f64)>,
     /// cloned curve points in arrival order.
@@ -87,22 +128,29 @@ pub struct RecordingObserver {
     /// `(epoch, best)` if early stopping fired.
     pub early_stop: Option<(usize, f64)>,
     /// checkpoint paths written.
-    pub checkpoints: Vec<std::path::PathBuf>,
+    pub checkpoints: Vec<PathBuf>,
+    /// `(last_epoch, total_steps)` once the run completed.
+    pub done: Option<(usize, u64)>,
 }
 
 impl Observer for RecordingObserver {
-    fn on_event(&mut self, event: &Event<'_>) {
+    fn on_event(&mut self, event: &Event) {
         match event {
+            Event::StepStart { .. } => {}
+            Event::StepEnd { epoch, step, loss, .. } => {
+                self.steps.push((*epoch, *step, *loss))
+            }
             Event::EpochEnd { epoch, mean_loss, .. } => {
                 self.epochs.push((*epoch, *mean_loss))
             }
-            Event::Eval { point } => self.evals.push((*point).clone()),
+            Event::Eval { point } => self.evals.push(point.clone()),
             Event::EarlyStop { epoch, best } => {
                 self.early_stop = Some((*epoch, *best))
             }
             Event::CheckpointSaved { path } => {
-                self.checkpoints.push(path.to_path_buf())
+                self.checkpoints.push(path.clone())
             }
+            Event::Done { epochs, steps } => self.done = Some((*epochs, *steps)),
         }
     }
 }
@@ -114,16 +162,21 @@ mod tests {
     #[test]
     fn recording_observer_collects() {
         let mut r = RecordingObserver::default();
+        r.on_event(&Event::StepStart { epoch: 1, step: 0 });
+        r.on_event(&Event::StepEnd { epoch: 1, step: 0, loss: Some(2.5), batches: 1 });
         r.on_event(&Event::EpochEnd { epoch: 1, train_seconds: 0.5, mean_loss: 2.0 });
         let pt = CurvePoint { epoch: 1, train_seconds: 0.5, train_loss: 2.0, eval_f1: 0.3 };
-        r.on_event(&Event::Eval { point: &pt });
+        r.on_event(&Event::Eval { point: pt.clone() });
         r.on_event(&Event::EarlyStop { epoch: 1, best: 0.3 });
-        r.on_event(&Event::CheckpointSaved { path: Path::new("/tmp/x.ckpt") });
+        r.on_event(&Event::CheckpointSaved { path: PathBuf::from("/tmp/x.ckpt") });
+        r.on_event(&Event::Done { epochs: 1, steps: 1 });
+        assert_eq!(r.steps, vec![(1, 0, Some(2.5))]);
         assert_eq!(r.epochs, vec![(1, 2.0)]);
         assert_eq!(r.evals.len(), 1);
         assert_eq!(r.early_stop, Some((1, 0.3)));
         assert_eq!(r.checkpoints.len(), 1);
+        assert_eq!(r.done, Some((1, 1)));
         // the null observer accepts anything silently
-        NullObserver.on_event(&Event::Eval { point: &pt });
+        NullObserver.on_event(&Event::Eval { point: pt });
     }
 }

@@ -141,6 +141,10 @@ fn session_emits_observer_events_and_checkpoints() {
     assert_eq!(obs.evals.len(), 2);
     assert_eq!(obs.checkpoints, vec![ckpt.clone()]);
     assert!(obs.early_stop.is_none());
+    // the driver also streams per-step events and a final Done
+    assert!(!obs.steps.is_empty());
+    assert!(obs.steps.iter().all(|(e, _, _)| *e == 1 || *e == 2));
+    assert_eq!(obs.done.map(|(e, _)| e), Some(2));
 
     // the checkpoint round-trips and records the session's model id
     let (state, model) = cluster_gcn::coordinator::checkpoint::load(&ckpt).unwrap();
