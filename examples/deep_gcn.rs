@@ -8,7 +8,8 @@
 //! cargo run --release --example deep_gcn [-- --layers 6 --epochs 10]
 //! ```
 
-use cluster_gcn::coordinator::{train, ClusterSampler, TrainOptions};
+use cluster_gcn::coordinator::{train, ClusterSampler};
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::datagen::{build_cached, preset};
 use cluster_gcn::norm::NormConfig;
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
@@ -46,12 +47,12 @@ fn main() -> anyhow::Result<()> {
         let assignment =
             MultilevelPartitioner::default().partition(&ds.graph, 50, &mut rng);
         let sampler = ClusterSampler::new(parts_to_clusters(&assignment, 50), 1);
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: (epochs / 5).max(1),
             seed,
             norm,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         match train(&mut engine, &ds, &sampler, &artifact, &opts) {
             Ok(r) => {

@@ -11,7 +11,8 @@
 //! ```
 
 use cluster_gcn::baselines::{train_vrgcn, VrgcnParams};
-use cluster_gcn::coordinator::{train, ClusterSampler, TrainOptions};
+use cluster_gcn::coordinator::{train, ClusterSampler};
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::datagen::{build_cached, preset};
 use cluster_gcn::graph::Split;
 use cluster_gcn::partition::{
@@ -58,12 +59,12 @@ fn main() -> anyhow::Result<()> {
     // --- 3. training (Algorithm 1, lines 2-6) -----------------------------
     let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
     let sampler = ClusterSampler::new(parts_to_clusters(&assignment, parts), q);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs,
         eval_every: (epochs / 5).max(1),
         seed,
         eval_split: Split::Val,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     println!("[train] {} batches/epoch (q={q}), artifact reddit_L2", sampler.batches_per_epoch());
     let result = train(&mut engine, &ds, &sampler, "reddit_L2", &opts)?;
@@ -77,7 +78,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 4. baseline comparison point (VR-GCN) ----------------------------
     let vr_epochs = (epochs / 3).max(1);
-    let vr_opts = TrainOptions { epochs: vr_epochs, eval_every: 0, ..opts.clone() };
+    let vr_opts = TrainConfig { epochs: vr_epochs, eval_every: 0, ..opts.clone() };
     let vr = train_vrgcn(
         &mut engine, &ds, "reddit_vrgcn_L2", &VrgcnParams::default(), &vr_opts,
     )?;

@@ -264,8 +264,18 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
         );
     });
 
+    // sparse-aware dW: fraction of 8-wide dz column blocks the relu
+    // killed batch-wide (skipped entirely by the masked kernel)
+    let (atb_blocks, atb_skipped) = cluster_gcn::runtime::backward::at_b_skip_stats();
+    let skip_rate = atb_skipped as f64 / (atb_blocks.max(1)) as f64;
+
     let ms = |s: f64| s * 1e3;
     println!("== backward engine: train step on one cluster batch ({n} nodes, hidden {hidden}) ==");
+    println!(
+        "gemm_at_b sparse-aware skip rate: {:.1}% of column blocks \
+         ({atb_skipped}/{atb_blocks})",
+        100.0 * skip_rate
+    );
     println!("step scalar (pre-PR) {:9.2} ms", ms(step_scalar.mean));
     println!(
         "step pooled 1t       {:9.2} ms   ({:.2}x vs scalar)",
@@ -307,6 +317,7 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
         ("gemm_a_bt_pooled_ms", Json::num(ms(abt_pooled.mean))),
         ("adam_scalar_ms", Json::num(ms(adam_scalar.mean))),
         ("adam_pooled_ms", Json::num(ms(adam_pooled.mean))),
+        ("at_b_skip_rate", Json::num(skip_rate)),
     ]);
     bs::dump_row("perf_probe", row.clone());
     // one-object snapshot tracked across PRs (overwritten per run)

@@ -9,7 +9,8 @@
 //! clusters → train a 2-layer GCN with the fused PJRT train_step →
 //! evaluate test micro-F1 with exact host inference.
 
-use cluster_gcn::coordinator::{train, ClusterSampler, TrainOptions};
+use cluster_gcn::coordinator::{train, ClusterSampler};
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::datagen::{build, preset};
 use cluster_gcn::graph::Split;
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
@@ -35,11 +36,11 @@ fn main() -> anyhow::Result<()> {
     // 3. train: one cluster per batch (Algorithm 1), fused Adam step
     let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
     let sampler = ClusterSampler::new(clusters, /*q=*/ 1);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 30,
         eval_every: 10,
         eval_split: Split::Val,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     let result = train(&mut engine, &ds, &sampler, "cora_L2", &opts)?;
     for pt in &result.curve {

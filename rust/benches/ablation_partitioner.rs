@@ -7,7 +7,8 @@
 //! validation F1 after the same training budget on ppi_like.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, ClusterSampler, TrainOptions};
+use cluster_gcn::coordinator::{train, ClusterSampler};
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::partition::{
     metrics::stats, parts_to_clusters, LocalSearchPartitioner,
     MultilevelPartitioner, Partitioner, RandomPartitioner,
@@ -40,11 +41,11 @@ fn main() -> anyhow::Result<()> {
         let cl_s = t.secs();
         let st = stats(&ds.graph, &part, k);
         let sampler = ClusterSampler::new(parts_to_clusters(&part, k), p.default_q);
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0,
             seed,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let r = train(&mut engine, &ds, &sampler, "ppi_L2", &opts)?;
         let f1 = r.curve.last().unwrap().eval_f1;

@@ -5,7 +5,8 @@
 //! ablation maps the whole curve.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::coordinator::train;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::util::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -25,11 +26,11 @@ fn main() -> anyhow::Result<()> {
             println!("q={q}: skipped (batch exceeds {artifact} b_max)");
             continue;
         }
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0,
             seed,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let r = train(&mut engine, &ds, &sampler, artifact, &opts)?;
         let f1 = r.curve.last().unwrap().eval_f1;

@@ -5,7 +5,8 @@
 //! because between-cluster links return and batch variance drops.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::coordinator::train;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::util::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -18,11 +19,11 @@ fn main() -> anyhow::Result<()> {
     let mut curves = Vec::new();
     for (label, parts, q) in [("1 cluster (300)", 300, 1), ("5 clusters (1500)", 1500, 5)] {
         let sampler = bs::cluster_sampler(&ds, parts, q, seed);
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 2,
             seed,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let r = train(&mut engine, &ds, &sampler, "reddit_small_L2", &opts)?;
         curves.push((label, r.curve));

@@ -8,7 +8,7 @@
 //! (CGCN_EPOCHS raises them).
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::util::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -30,11 +30,11 @@ fn main() -> anyhow::Result<()> {
                     continue;
                 }
                 let e = if method == "graphsage" { sage_epochs } else { epochs };
-                let opts = TrainOptions {
+                let opts = TrainConfig {
                     epochs: e,
                     eval_every: (e / 3).max(1),
                     seed,
-                    ..TrainOptions::default()
+                    ..TrainConfig::default()
                 };
                 match bs::run_method(&mut engine, &ds, method, layers, &opts) {
                     Ok(r) => {

@@ -7,7 +7,8 @@
 //! check deep > shallow on both.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::coordinator::train;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::graph::Split;
 use cluster_gcn::norm::NormConfig;
 use cluster_gcn::util::Json;
@@ -31,13 +32,13 @@ fn main() -> anyhow::Result<()> {
         let ds = bs::dataset(preset)?;
         let p = bs::preset_of(&ds);
         let sampler = bs::cluster_sampler(&ds, p.default_partitions, p.default_q, seed);
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0,
             seed,
             norm,
             eval_split: Split::Test,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let r = train(&mut engine, &ds, &sampler, artifact, &opts)?;
         let f1 = r.curve.last().unwrap().eval_f1;

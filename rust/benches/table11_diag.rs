@@ -12,7 +12,8 @@
 //! experiment's convergence curve at 8 layers — we print both.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::coordinator::train;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::norm::NormConfig;
 use cluster_gcn::util::Json;
 
@@ -49,12 +50,12 @@ fn main() -> anyhow::Result<()> {
         for layers in min_layers..=max_layers {
             let sampler =
                 bs::cluster_sampler(&ds, p.default_partitions, p.default_q, seed);
-            let opts = TrainOptions {
+            let opts = TrainConfig {
                 epochs,
                 eval_every: (epochs / 5).max(1),
                 seed,
                 norm,
-                ..TrainOptions::default()
+                ..TrainConfig::default()
             };
             let artifact = format!("ppi_L{layers}");
             match train(&mut engine, &ds, &sampler, &artifact, &opts) {

@@ -7,7 +7,8 @@
 //! multilabel data) on the synthetic stand-ins.
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::{train, TrainOptions};
+use cluster_gcn::coordinator::train;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::graph::Split;
 use cluster_gcn::util::Json;
 
@@ -39,12 +40,12 @@ fn main() -> anyhow::Result<()> {
         } else {
             bs::dataset(preset)?
         };
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0, // final eval only
             seed,
             eval_split: Split::Test,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let mut f1 = [0.0f64; 2];
         for (i, random) in [(0usize, false), (1usize, true)] {

@@ -12,7 +12,7 @@ use cluster_gcn::bench_support as bs;
 use cluster_gcn::coordinator::memory::{
     cluster_gcn_bytes, graphsage_bytes, vrgcn_bytes, Dims,
 };
-use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::util::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -37,13 +37,13 @@ fn main() -> anyhow::Result<()> {
         let ds = bs::dataset(preset_name)?;
         let p = bs::preset_of(&ds);
         for layers in [2usize, 3, 4] {
-            let opts = TrainOptions {
+            let opts = TrainConfig {
                 epochs,
                 eval_every: 0,
                 seed,
                 // a few steps reach peak state; no need for a full pass
                 max_steps_per_epoch: bs::env_usize("CGCN_MEM_STEPS", 3),
-                ..TrainOptions::default()
+                ..TrainConfig::default()
             };
             // measured runs --------------------------------------------
             let measure = |engine: &mut cluster_gcn::runtime::Engine,

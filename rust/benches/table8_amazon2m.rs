@@ -10,7 +10,7 @@
 
 use cluster_gcn::bench_support as bs;
 use cluster_gcn::coordinator::memory::{vrgcn_bytes, Dims};
-use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::graph::Split;
 use cluster_gcn::util::Json;
 
@@ -36,12 +36,12 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     for layers in [2usize, 3, 4] {
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0,
             seed,
             eval_split: Split::Test,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         // --- cluster ---------------------------------------------------
         let c = bs::run_method(&mut engine, &ds, "cluster", layers, &opts)?;
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         let (vt, vm, vf) = if oom {
             (None, None, None)
         } else {
-            let vr_opts = TrainOptions {
+            let vr_opts = TrainConfig {
                 epochs: bs::env_usize("CGCN_VRGCN_EPOCHS", 1),
                 ..opts.clone()
             };

@@ -8,7 +8,7 @@
 //! check the growth *shapes* (cluster ~linear, vrgcn ~exponential).
 
 use cluster_gcn::bench_support as bs;
-use cluster_gcn::coordinator::TrainOptions;
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::util::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -27,11 +27,11 @@ fn main() -> anyhow::Result<()> {
     let mut vrgcn_times = Vec::new();
 
     for layers in 2..=max_layers {
-        let opts = TrainOptions {
+        let opts = TrainConfig {
             epochs,
             eval_every: 0,
             seed,
-            ..TrainOptions::default()
+            ..TrainConfig::default()
         };
         let c = bs::run_method(&mut engine, &ds, "cluster", layers, &opts)?;
         let v = bs::run_method(&mut engine, &ds, "vrgcn", layers, &opts)?;

@@ -29,6 +29,28 @@ echo "== shards parity gate (shards=1 bit-identical to HostBackend on a tiny SBM
 cargo test --release -q --test driver sharded
 cargo test --release -q --test driver prefetch
 
+echo "== VR-GCN resume-parity gate (interrupt -> checkpoint -> resume, bitwise) =="
+cargo test --release -q --test driver vrgcn_resume
+cargo test --release -q vrgcn_sparse
+
+echo "== golden-trace regression suite (bitwise loss/F1 trajectories, all methods) =="
+GOLDEN="rust/tests/golden/trajectories.json"
+[ -f "$GOLDEN" ] || GOLDEN="tests/golden/trajectories.json"
+FRESH_GOLDEN=0
+[ -f "$GOLDEN" ] || FRESH_GOLDEN=1
+cargo test --release -q --test golden
+if [ "$FRESH_GOLDEN" = 1 ]; then
+  # first run recorded the goldens; re-run the match so the compare
+  # path executes against the just-recorded file (non-vacuous gate),
+  # and insist the file now exists so it can be committed
+  cargo test --release -q --test golden trajectories_match
+  [ -f rust/tests/golden/trajectories.json ] || [ -f tests/golden/trajectories.json ] || {
+    echo "golden suite did not record trajectories.json" >&2; exit 1;
+  }
+  echo "NOTE: golden trajectories were recorded on this run — commit"
+  echo "      rust/tests/golden/trajectories.json to pin future refactors."
+fi
+
 echo "== backward bench smoke (release perf_probe on cora_like) =="
 CGCN_ITERS=1 cargo run --release --example perf_probe -- cora_like 2 20
 

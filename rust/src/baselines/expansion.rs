@@ -188,34 +188,34 @@ pub fn train_expansion(
     ds: &crate::graph::Dataset,
     model: &str,
     targets_per_batch: usize,
-    opts: &crate::coordinator::trainer::TrainOptions,
+    cfg: &crate::session::TrainConfig,
 ) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
     train_expansion_observed(
         backend,
         ds,
         model,
         targets_per_batch,
-        opts,
+        cfg,
         &mut crate::session::NullObserver,
     )
 }
 
 /// [`train_expansion`] with an observer.  Pre-driver compatibility
 /// entry: builds a [`crate::session::Driver`] over an
-/// [`ExpansionSource`] and drains it.
+/// [`ExpansionSource`] and drains it.  The config's model-shape fields
+/// are inert here — the driver reads shapes from the backend's spec.
 pub fn train_expansion_observed(
     backend: &mut dyn crate::runtime::Backend,
     ds: &crate::graph::Dataset,
     model: &str,
     targets_per_batch: usize,
-    opts: &crate::coordinator::trainer::TrainOptions,
+    cfg: &crate::session::TrainConfig,
     obs: &mut dyn crate::session::Observer,
 ) -> anyhow::Result<crate::coordinator::trainer::TrainResult> {
     use crate::session::driver::{BackendSlot, Driver, DriverSource};
-    use crate::session::TrainConfig;
 
     let spec = backend.model_spec(model)?;
-    let cfg = TrainConfig::from(opts);
+    let cfg = cfg.clone();
     let source = ExpansionSource::new(ds, &spec, targets_per_batch, cfg.norm, cfg.seed);
     let mut backend = crate::runtime::PrefetchBackend::new(backend);
     let mut driver = Driver::from_parts(

@@ -12,10 +12,10 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::BatchAssembler;
 use crate::coordinator::source::BatchSource;
-use crate::coordinator::trainer::{TrainOptions, TrainResult};
+use crate::coordinator::trainer::TrainResult;
 use crate::graph::{Dataset, Split};
 use crate::runtime::Backend;
-use crate::session::{NullObserver, Observer};
+use crate::session::{NullObserver, Observer, TrainConfig};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -224,27 +224,27 @@ pub fn train_graphsage(
     ds: &Dataset,
     model: &str,
     params: &SageParams,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
 ) -> Result<TrainResult> {
-    train_graphsage_observed(backend, ds, model, params, opts, &mut NullObserver)
+    train_graphsage_observed(backend, ds, model, params, cfg, &mut NullObserver)
 }
 
 /// [`train_graphsage`] with an observer.  Pre-driver compatibility
 /// entry: builds a [`crate::session::Driver`] over a [`SageSource`] and
-/// drains it.
+/// drains it.  The config's model-shape fields are inert here — the
+/// driver reads shapes from the backend's spec.
 pub fn train_graphsage_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
     model: &str,
     params: &SageParams,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
     use crate::session::driver::{BackendSlot, Driver, DriverSource};
-    use crate::session::TrainConfig;
 
     let spec = backend.model_spec(model)?;
-    let cfg = TrainConfig::from(opts);
+    let cfg = cfg.clone();
     let source = SageSource::new(ds, &spec, params.clone(), cfg.norm, cfg.seed)?;
     let mut backend = crate::runtime::PrefetchBackend::new(backend);
     let mut driver = Driver::from_parts(

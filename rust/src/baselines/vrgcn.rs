@@ -21,14 +21,15 @@
 //! paper's Table 5/8 contrast — and receptive-field targets shrink with
 //! depth, reproducing Table 9's superlinear depth scaling.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::coordinator::checkpoint::HistorySection;
 use crate::coordinator::source::{epoch_rng, SourceStats};
-use crate::coordinator::trainer::{TrainOptions, TrainResult};
+use crate::coordinator::trainer::TrainResult;
 use crate::graph::{Dataset, Split};
 use crate::norm::{NormCache, NormConfig};
-use crate::runtime::{Backend, ModelSpec, Tensor, VrgcnBatch};
-use crate::session::{NullObserver, Observer};
+use crate::runtime::{Backend, ModelSpec, Tensor, VrgcnAdj, VrgcnBatch};
+use crate::session::{NullObserver, Observer, TrainConfig};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -51,6 +52,7 @@ pub struct History {
     /// [layer][node * f_hid + j]
     layers: Vec<Vec<f32>>,
     pub f_hid: usize,
+    n: usize,
 }
 
 impl History {
@@ -58,6 +60,7 @@ impl History {
         History {
             layers: vec![vec![0f32; n * f_hid]; hidden_layers],
             f_hid,
+            n,
         }
     }
 
@@ -72,6 +75,41 @@ impl History {
     fn set_row(&mut self, layer: usize, v: usize, data: &[f32]) {
         self.layers[layer][v * self.f_hid..(v + 1) * self.f_hid]
             .copy_from_slice(data);
+    }
+
+    /// Snapshot for a versioned (`CGCNCKP2`) checkpoint — the store the
+    /// estimator's fidelity lives on, so an interrupted run can resume
+    /// as a bitwise replay.
+    pub fn section(&self) -> HistorySection {
+        HistorySection {
+            f_hid: self.f_hid,
+            n: self.n,
+            layers: self.layers.clone(),
+        }
+    }
+
+    /// Restore from a checkpointed section; errors on any shape
+    /// mismatch with this run's model/dataset.
+    pub fn restore(&mut self, sec: &HistorySection) -> Result<()> {
+        if sec.f_hid != self.f_hid || sec.n != self.n || sec.layers.len() != self.layers.len() {
+            return Err(anyhow!(
+                "history section is {} layers × {} nodes × {} hidden, this run \
+                 needs {} × {} × {}",
+                sec.layers.len(),
+                sec.n,
+                sec.f_hid,
+                self.layers.len(),
+                self.n,
+                self.f_hid
+            ));
+        }
+        for (dst, src) in self.layers.iter_mut().zip(&sec.layers) {
+            if dst.len() != src.len() {
+                return Err(anyhow!("history layer length mismatch"));
+            }
+            dst.copy_from_slice(src);
+        }
+        Ok(())
     }
 }
 
@@ -103,7 +141,15 @@ pub struct VrgcnSource<'a> {
     local_of: Vec<u32>,
     sampled: Vec<Vec<u32>>,
     nodes: Vec<u32>,
+    /// the one reused batch: tensors and CSR buffers keep their
+    /// allocations across steps (no dense `b_max²` block anywhere).
     vb: Option<VrgcnBatch>,
+    /// per-row accumulator of the CSR `A_in` build (`b_max` long).
+    acc: Vec<f32>,
+    /// columns touched by the current row's build.
+    touched: Vec<u32>,
+    /// rows of the reused batch tensors the previous assembly wrote.
+    dirty: usize,
     max_bytes: usize,
 }
 
@@ -140,9 +186,25 @@ impl<'a> VrgcnSource<'a> {
             sampled: Vec::new(),
             nodes: Vec::new(),
             vb: None,
+            acc: Vec::new(),
+            touched: Vec::new(),
+            dirty: 0,
             max_bytes: 0,
             params,
         }
+    }
+
+    /// Snapshot the history store for a versioned checkpoint (see
+    /// [`crate::coordinator::checkpoint`]).
+    pub fn history_section(&self) -> HistorySection {
+        self.history.section()
+    }
+
+    /// Restore a checkpointed history store before the first epoch, so
+    /// a resumed run replays the interrupted one bit for bit.  Errors on
+    /// shape mismatch with this run's model/dataset.
+    pub fn restore_history(&mut self, sec: &HistorySection) -> Result<()> {
+        self.history.restore(sec)
     }
 
     /// Start epoch `epoch` (1-based); returns the batch count.  The
@@ -168,10 +230,13 @@ impl<'a> VrgcnSource<'a> {
     }
 
     /// Assemble batch `i` of the current epoch: the sampled receptive
-    /// union, `A_in`, the `Hc_l` contributions (through `cache`'s
+    /// union, the **CSR** `A_in` (diagonal inline — no dense `b_max²`
+    /// block is ever built), the `Hc_l` contributions (through `cache`'s
     /// normalized adjacency, computed once per run), features, labels,
-    /// and the target mask.  The returned batch stays valid until the
-    /// next `assemble`.
+    /// and the target mask.  Everything is written into one reused
+    /// [`VrgcnBatch`], clearing only the rows the previous step dirtied
+    /// — steady-state assembly allocates nothing.  The returned batch
+    /// stays valid until the next `assemble`.
     pub fn assemble(&mut self, i: usize, cache: &mut NormCache) -> &VrgcnBatch {
         // clear the previous batch's local-id map
         for &v in &self.nodes {
@@ -234,34 +299,80 @@ impl<'a> VrgcnSource<'a> {
             self.sampled.push(s);
         }
 
-        // ---- A_in: self loops + scaled sampled in-batch edges ----------
-        let mut a_in = Tensor::zeros(vec![b_max, b_max]);
-        for (li, &v) in nodes.iter().enumerate() {
-            let v = v as usize;
-            a_in.data[li * b_max + li] = aself[v];
-            let deg = ds.graph.degree(v);
-            let s = &self.sampled[li];
-            if s.is_empty() {
-                continue;
+        // ---- reused batch shell (allocated once, first assemble) ------
+        let mut vb = match self.vb.take() {
+            Some(vb) => vb,
+            None => VrgcnBatch {
+                a_in: VrgcnAdj::new(),
+                hcs: self
+                    .layer_dims
+                    .iter()
+                    .map(|&fd| Tensor::zeros(vec![b_max, fd]))
+                    .collect(),
+                x: Tensor::zeros(vec![b_max, self.f_in]),
+                y: Tensor::zeros(vec![b_max, self.classes]),
+                mask: Tensor::zeros(vec![b_max]),
+                n_real: 0,
+            },
+        };
+        let prev = self.dirty;
+        let clear = prev.max(b_real);
+
+        // ---- A_in: self loops + scaled sampled in-batch edges, built
+        // directly in CSR form (diagonal inline, columns ascending) ----
+        {
+            let a_in = &mut vb.a_in;
+            a_in.offsets.clear();
+            a_in.offsets.push(0);
+            a_in.cols.clear();
+            a_in.vals.clear();
+            if self.acc.len() < b_max {
+                self.acc.resize(b_max, 0.0);
             }
-            let scale = deg as f32 / s.len() as f32;
-            for &u in s {
-                let lu = local_of[u as usize];
-                if lu != u32::MAX {
-                    // Â_vu looked up via the sorted adjacency
-                    let pos = ds.graph.neighbors(v)
-                        .binary_search(&u)
-                        .expect("sampled neighbor");
-                    a_in.data[li * b_max + lu as usize] +=
-                        scale * avals[ds.graph.offsets[v] + pos];
+            let acc = &mut self.acc;
+            let touched = &mut self.touched;
+            for (li, &v) in nodes.iter().enumerate() {
+                let v = v as usize;
+                touched.clear();
+                acc[li] = aself[v];
+                touched.push(li as u32);
+                let s = &self.sampled[li];
+                if !s.is_empty() {
+                    let scale = ds.graph.degree(v) as f32 / s.len() as f32;
+                    for &u in s {
+                        let lu = local_of[u as usize];
+                        if lu == u32::MAX {
+                            continue;
+                        }
+                        // Â_vu looked up via the sorted adjacency
+                        let pos = ds.graph.neighbors(v)
+                            .binary_search(&u)
+                            .expect("sampled neighbor");
+                        let add = scale * avals[ds.graph.offsets[v] + pos];
+                        if add == 0.0 {
+                            continue;
+                        }
+                        let lu_i = lu as usize;
+                        if acc[lu_i] == 0.0 {
+                            touched.push(lu);
+                        }
+                        acc[lu_i] += add;
+                    }
                 }
+                touched.sort_unstable();
+                for &c in touched.iter() {
+                    a_in.cols.push(c);
+                    a_in.vals.push(acc[c as usize]);
+                    acc[c as usize] = 0.0;
+                }
+                a_in.offsets.push(a_in.cols.len());
             }
         }
 
         // ---- Hc_l = Â·H_l (full) − scaled-sampled in-batch Â·H_l ------
-        let mut hcs: Vec<Tensor> = Vec::with_capacity(l);
-        for (layer, &fd) in self.layer_dims.iter().enumerate() {
-            let mut hc = Tensor::zeros(vec![b_max, fd]);
+        for (layer, hc) in vb.hcs.iter_mut().enumerate() {
+            let fd = self.layer_dims[layer];
+            hc.data[..clear * fd].fill(0.0);
             let history = &self.history;
             let hist_row = |u: usize| -> &[f32] {
                 if layer == 0 {
@@ -300,24 +411,27 @@ impl<'a> VrgcnSource<'a> {
                     }
                 }
             }
-            hcs.push(hc);
         }
 
-        // ---- X, Y, mask (targets only) --------------------------------
+        // ---- X, Y, mask (targets only); only stale rows cleared -------
         let (f_in, classes) = (self.f_in, self.classes);
-        let mut x = Tensor::zeros(vec![b_max, f_in]);
-        let mut y = Tensor::zeros(vec![b_max, classes]);
-        let mut mask = Tensor::zeros(vec![b_max]);
+        if prev > b_real {
+            vb.x.data[b_real * f_in..prev * f_in].fill(0.0);
+            vb.y.data[b_real * classes..prev * classes].fill(0.0);
+        }
         for (li, &v) in nodes.iter().enumerate() {
             let v = v as usize;
-            x.data[li * f_in..(li + 1) * f_in].copy_from_slice(ds.feature_row(v));
-            ds.labels.write_row(v, classes, &mut y.data[li * classes..(li + 1) * classes]);
+            vb.x.data[li * f_in..(li + 1) * f_in].copy_from_slice(ds.feature_row(v));
+            ds.labels
+                .write_row(v, classes, &mut vb.y.data[li * classes..(li + 1) * classes]);
         }
-        for m in mask.data.iter_mut().take(targets.len().min(b_real)) {
+        vb.mask.data[..prev].fill(0.0);
+        for m in vb.mask.data.iter_mut().take(targets.len().min(b_real)) {
             *m = 1.0;
         }
 
-        let vb = VrgcnBatch { a_in, hcs, x, y, mask, n_real: b_real };
+        vb.n_real = b_real;
+        self.dirty = b_real;
         self.max_bytes = self.max_bytes.max(vb.bytes() + self.history.bytes());
         self.vb = Some(vb);
         self.vb.as_ref().expect("batch just stored")
@@ -351,27 +465,27 @@ pub fn train_vrgcn(
     ds: &Dataset,
     model: &str,
     params: &VrgcnParams,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
 ) -> Result<TrainResult> {
-    train_vrgcn_observed(backend, ds, model, params, opts, &mut NullObserver)
+    train_vrgcn_observed(backend, ds, model, params, cfg, &mut NullObserver)
 }
 
 /// [`train_vrgcn`] with an observer.  Pre-driver compatibility entry:
 /// builds a [`crate::session::Driver`] over a [`VrgcnSource`] and
-/// drains it.
+/// drains it.  The config's model-shape fields are inert here — the
+/// driver reads shapes from the backend's [`ModelSpec`].
 pub fn train_vrgcn_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
     model: &str,
     params: &VrgcnParams,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
     use crate::session::driver::{BackendSlot, Driver, DriverSource};
-    use crate::session::TrainConfig;
 
     let spec = backend.model_spec(model)?;
-    let cfg = TrainConfig::from(opts);
+    let cfg = cfg.clone();
     let source = VrgcnSource::new(ds, &spec, params.clone(), cfg.norm, cfg.seed);
     let mut driver = Driver::from_parts(
         BackendSlot::Borrowed(backend),
@@ -398,6 +512,101 @@ mod tests {
         assert_eq!(h.row(1, 3), &[5., 6., 7., 8.]);
         assert_eq!(h.row(0, 2), &[0.0; 4]);
         assert_eq!(h.bytes(), 2 * 10 * 4 * 4);
+    }
+
+    /// The sparse-native assembly contract: (a) the reused batch keeps
+    /// its tensor allocations across steps (no dense `b_max²` block is
+    /// ever built — the adjacency is CSR end to end), (b) every row
+    /// carries its inline diagonal with strictly ascending columns and
+    /// no stored zeros, (c) dirty-row clearing leaves the padding
+    /// region exactly zero (the PJRT executable reads the full padded
+    /// tensors), and (d) assembly is a pure function of the
+    /// `(seed, epoch)` stream — a second source replays it exactly.
+    #[test]
+    fn assemble_reuses_buffers_and_matches_fresh_source() {
+        use crate::norm::NormConfig;
+
+        let ds = crate::datagen::build(crate::datagen::preset("cora_like").unwrap(), 5);
+        let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, 16, ds.num_classes, 256);
+        let params = VrgcnParams { r: 2, batch: 48 };
+        let norm = NormConfig::PAPER_DEFAULT;
+        let mut src = VrgcnSource::new(&ds, &spec, params.clone(), norm, 9);
+        let mut fresh = VrgcnSource::new(&ds, &spec, params, norm, 9);
+        let mut cache = NormCache::new();
+        let mut cache2 = NormCache::new();
+        let n_b = src.begin_epoch(1);
+        assert_eq!(fresh.begin_epoch(1), n_b);
+        assert!(n_b >= 2, "need several batches to exercise reuse");
+
+        let mut ptrs = None;
+        for i in 0..n_b.min(4) {
+            let va = src.assemble(i, &mut cache);
+            assert!(va.n_real > 0);
+            assert_eq!(va.a_in.n(), va.n_real);
+            for u in 0..va.n_real {
+                let row = &va.a_in.cols[va.a_in.offsets[u]..va.a_in.offsets[u + 1]];
+                assert!(
+                    row.windows(2).all(|w| w[0] < w[1]),
+                    "batch {i} row {u}: columns not strictly ascending"
+                );
+                assert!(
+                    row.binary_search(&(u as u32)).is_ok(),
+                    "batch {i} row {u}: inline diagonal missing"
+                );
+            }
+            assert!(
+                va.a_in.vals.iter().all(|&v| v != 0.0),
+                "batch {i}: stored zero entry"
+            );
+            // padding rows stay exactly zero across reuse
+            let nr = va.n_real;
+            assert!(
+                va.x.data[nr * ds.f_in..].iter().all(|&v| v == 0.0),
+                "batch {i}: stale x padding"
+            );
+            assert!(
+                va.y.data[nr * ds.num_classes..].iter().all(|&v| v == 0.0),
+                "batch {i}: stale y padding"
+            );
+            assert!(
+                va.mask.data[nr..].iter().all(|&v| v == 0.0),
+                "batch {i}: stale mask padding"
+            );
+            for (l, hc) in va.hcs.iter().enumerate() {
+                let fd = hc.dims[1];
+                assert!(
+                    hc.data[nr * fd..].iter().all(|&v| v == 0.0),
+                    "batch {i}: stale hc padding in layer {l}"
+                );
+            }
+            match ptrs {
+                None => {
+                    ptrs = Some((
+                        va.x.data.as_ptr(),
+                        va.y.data.as_ptr(),
+                        va.mask.data.as_ptr(),
+                        va.hcs[0].data.as_ptr(),
+                    ))
+                }
+                Some(p) => {
+                    assert_eq!(p.0, va.x.data.as_ptr(), "x reallocated at batch {i}");
+                    assert_eq!(p.1, va.y.data.as_ptr(), "y reallocated at batch {i}");
+                    assert_eq!(p.2, va.mask.data.as_ptr(), "mask reallocated at batch {i}");
+                    assert_eq!(p.3, va.hcs[0].data.as_ptr(), "hc reallocated at batch {i}");
+                }
+            }
+            let vf = fresh.assemble(i, &mut cache2);
+            assert_eq!(va.n_real, vf.n_real, "batch {i}");
+            assert_eq!(va.a_in.offsets, vf.a_in.offsets, "batch {i}");
+            assert_eq!(va.a_in.cols, vf.a_in.cols, "batch {i}");
+            assert_eq!(va.a_in.vals, vf.a_in.vals, "batch {i}");
+            assert_eq!(va.x.data, vf.x.data, "batch {i}");
+            assert_eq!(va.y.data, vf.y.data, "batch {i}");
+            assert_eq!(va.mask.data, vf.mask.data, "batch {i}");
+            for (l, (a, b)) in va.hcs.iter().zip(&vf.hcs).enumerate() {
+                assert_eq!(a.data, b.data, "batch {i} hc layer {l}");
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,8 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::baselines::{train_graphsage, train_vrgcn, SageParams, VrgcnParams};
-use crate::coordinator::{train, ClusterSampler, TrainOptions, TrainResult};
+use crate::coordinator::{train, ClusterSampler, TrainResult};
+use crate::session::TrainConfig;
 use crate::datagen::{build_cached, preset, Preset};
 use crate::graph::Dataset;
 use crate::partition::{
@@ -74,23 +75,23 @@ pub fn run_method(
     ds: &Dataset,
     method: &str,
     layers: usize,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
 ) -> Result<TrainResult> {
     let p = preset_of(ds);
     let short = ds.name.trim_end_matches("_like");
     match method {
         "cluster" => {
             let sampler =
-                cluster_sampler(ds, p.default_partitions, p.default_q, opts.seed);
-            train(engine, ds, &sampler, &format!("{short}_L{layers}"), opts)
+                cluster_sampler(ds, p.default_partitions, p.default_q, cfg.seed);
+            train(engine, ds, &sampler, &format!("{short}_L{layers}"), cfg)
         }
         "graphsage" => {
             let params = SageParams::for_depth(layers, 256);
-            train_graphsage(engine, ds, &format!("{short}_sage_L{layers}"), &params, opts)
+            train_graphsage(engine, ds, &format!("{short}_sage_L{layers}"), &params, cfg)
         }
         "vrgcn" => {
             let params = VrgcnParams::default();
-            train_vrgcn(engine, ds, &format!("{short}_vrgcn_L{layers}"), &params, opts)
+            train_vrgcn(engine, ds, &format!("{short}_vrgcn_L{layers}"), &params, cfg)
         }
         other => anyhow::bail!("unknown method {other}"),
     }

@@ -156,7 +156,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
             "lr-decay", "lr-decay-every", "patience", "save", "backend",
             "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
-            "eval-parts",
+            "eval-parts", "resume",
         ],
     )?;
     let ds = load_ds(&a)?;
@@ -221,6 +221,24 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         other => bail!("unknown eval strategy {other} (exact|clustered)"),
     };
 
+    // ---- resume from a checkpoint (weights + recorded epoch; v2 files
+    // additionally restore the VR-GCN history so the resumed run is a
+    // bitwise replay of the uninterrupted one) -------------------------
+    let resumed = match a.get("resume") {
+        Some(path) => {
+            let ck = crate::coordinator::checkpoint::load_full(std::path::Path::new(path))?;
+            eprintln!(
+                "resuming from {path} (model {}, step {}, epoch {}{})",
+                ck.artifact,
+                ck.state.step,
+                ck.epoch,
+                if ck.history.is_some() { ", with VR-GCN history" } else { "" }
+            );
+            Some(ck)
+        }
+        None => None,
+    };
+
     let hidden = a.usize_or("hidden", 0)?;
     let cfg = TrainConfig {
         layers,
@@ -242,8 +260,16 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         patience: a.usize_or("patience", 0)?,
         norm: parse_norm(&a.str_or("norm", "sym"))?,
         eval,
-        start_epoch: 0,
+        start_epoch: resumed.as_ref().map(|ck| ck.epoch).unwrap_or(0),
     };
+    if resumed.is_some() && cfg.start_epoch >= cfg.epochs {
+        bail!(
+            "checkpoint was saved at epoch {} but --epochs is {}; raise \
+             --epochs to continue training",
+            cfg.start_epoch,
+            cfg.epochs
+        );
+    }
 
     let mut obs = StderrObserver;
     let mut session = Session::new(&ds)
@@ -252,6 +278,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .backend(backend)
         .prefetch(prefetch)
         .observer(&mut obs);
+    if let Some(ck) = resumed {
+        session = session.initial_state(ck.state);
+        if let Some(h) = ck.history {
+            session = session.initial_history(h);
+        }
+    }
     if let Some(parts) = a.get("parts") {
         session = session.partition(
             parts

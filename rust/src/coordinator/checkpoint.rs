@@ -1,10 +1,24 @@
 //! Checkpointing: persist/restore `TrainState` (weights + Adam moments
 //! + step counter) so trained models survive the process — the paper's
 //! workflow of "cluster once, train, reuse" extends to "train once,
-//! evaluate anywhere" (CLI `train --save` / `eval`).
+//! evaluate anywhere" (CLI `train --save` / `eval` / `train --resume`).
 //!
-//! Format: magic + version, artifact name, per-tensor (dims, f32 data),
-//! little-endian.
+//! Two on-disk versions, both little-endian:
+//!
+//! | magic      | layout                                                        |
+//! |------------|---------------------------------------------------------------|
+//! | `CGCNCKP1` | name, step, per-tensor (dims, f32 data) × 3L                  |
+//! | `CGCNCKP2` | the v1 body, then `epoch`, then a VR-GCN history section      |
+//!
+//! The v2 trailer is `epoch u64`, `hist_layers u64`, `n u64`,
+//! `f_hid u64`, then `hist_layers` raw `n·f_hid` f32 blocks — the
+//! historical-activation store VR-GCN's control-variate estimator lives
+//! on.  Saving it is what makes `Session::initial_state` +
+//! `TrainConfig::start_epoch` (+ `Session::initial_history`) replay an
+//! interrupted VR-GCN run **bit-exactly**; v1 files keep loading
+//! unchanged.  Errors are typed ([`CheckpointError`]): a v2 file whose
+//! history section is cut short fails with
+//! [`CheckpointError::TruncatedHistory`], not a generic IO error.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -13,7 +27,79 @@ use std::path::Path;
 use crate::coordinator::trainer::TrainState;
 use crate::runtime::Tensor;
 
-const MAGIC: &[u8; 8] = b"CGCNCKP1";
+const MAGIC_V1: &[u8; 8] = b"CGCNCKP1";
+const MAGIC_V2: &[u8; 8] = b"CGCNCKP2";
+/// Sanity cap on the history layer count (a real model has `L - 1`).
+const MAX_HISTORY_LAYERS: u64 = 64;
+
+/// Typed checkpoint failure.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying file IO failed (open/read/write/flush).
+    Io(std::io::Error),
+    /// The file is not a recognizable checkpoint, or its structural
+    /// invariants do not hold.
+    Corrupt(&'static str),
+    /// A `CGCNCKP2` trailer (epoch + history section) is cut short —
+    /// the store the VR-GCN estimator depends on is incomplete, so the
+    /// file must not be resumed from.
+    TruncatedHistory,
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CheckpointError::Corrupt(m) => write!(f, "corrupt checkpoint: {m}"),
+            CheckpointError::TruncatedHistory => {
+                write!(f, "checkpoint history section is truncated")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> CheckpointError {
+        CheckpointError::Io(e)
+    }
+}
+
+type Result<T> = std::result::Result<T, CheckpointError>;
+
+/// Serialized VR-GCN historical-activation store (layers `1..L-1`;
+/// layer 0 is the exact feature matrix and is never stored).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistorySection {
+    /// Hidden width of every stored layer.
+    pub f_hid: usize,
+    /// Nodes per layer.
+    pub n: usize,
+    /// `[layer][node * f_hid + j]`, each `n * f_hid` long.
+    pub layers: Vec<Vec<f32>>,
+}
+
+/// A fully parsed checkpoint file (either version).
+pub struct Checkpoint {
+    /// Restored training state.
+    pub state: TrainState,
+    /// Model/artifact id recorded at save time.
+    pub artifact: String,
+    /// Epoch the state was saved at (v2; `0` for v1 files, which do not
+    /// record it).
+    pub epoch: usize,
+    /// VR-GCN history store (v2 with a non-empty section; `None`
+    /// otherwise).
+    pub history: Option<HistorySection>,
+}
 
 fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -25,75 +111,74 @@ fn r_u64(r: &mut impl Read) -> std::io::Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn w_tensor(w: &mut impl Write, t: &Tensor) -> std::io::Result<()> {
-    w_u64(w, t.dims.len() as u64)?;
-    for &d in &t.dims {
-        w_u64(w, d as u64)?;
-    }
-    let mut buf = Vec::with_capacity(t.data.len() * 4);
-    for &x in &t.data {
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
     w.write_all(&buf)
 }
 
-fn r_tensor(r: &mut impl Read) -> std::io::Result<Tensor> {
+fn r_f32s(r: &mut impl Read, len: usize) -> std::io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn w_tensor(w: &mut impl Write, t: &Tensor) -> std::io::Result<()> {
+    w_u64(w, t.dims.len() as u64)?;
+    for &d in &t.dims {
+        w_u64(w, d as u64)?;
+    }
+    w_f32s(w, &t.data)
+}
+
+fn r_tensor(r: &mut impl Read) -> Result<Tensor> {
     let rank = r_u64(r)? as usize;
     if rank > 8 {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "implausible tensor rank",
-        ));
+        return Err(CheckpointError::Corrupt("implausible tensor rank"));
     }
     let mut dims = Vec::with_capacity(rank);
     for _ in 0..rank {
         dims.push(r_u64(r)? as usize);
     }
     let len: usize = dims.iter().product();
-    let mut buf = vec![0u8; len * 4];
-    r.read_exact(&mut buf)?;
-    let data = buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    Ok(Tensor::new(dims, data))
+    Ok(Tensor::new(dims, r_f32s(r, len)?))
 }
 
-pub fn save(state: &TrainState, artifact: &str, path: &Path) -> std::io::Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w_u64(&mut w, artifact.len() as u64)?;
+/// The version-shared body: name, step, 3L tensors.
+fn w_body(w: &mut impl Write, state: &TrainState, artifact: &str) -> std::io::Result<()> {
+    w_u64(w, artifact.len() as u64)?;
     w.write_all(artifact.as_bytes())?;
-    w_u64(&mut w, state.step)?;
-    w_u64(&mut w, state.weights.len() as u64)?;
+    w_u64(w, state.step)?;
+    w_u64(w, state.weights.len() as u64)?;
     for group in [&state.weights, &state.m, &state.v] {
         for t in group {
-            w_tensor(&mut w, t)?;
+            w_tensor(w, t)?;
         }
     }
-    w.flush()
+    Ok(())
 }
 
-/// Returns (state, artifact name recorded at save time).
-pub fn load(path: &Path) -> std::io::Result<(TrainState, String)> {
-    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(bad("not a cluster-gcn checkpoint"));
+fn r_body(r: &mut impl Read) -> Result<(TrainState, String)> {
+    let name_len = r_u64(r)? as usize;
+    if name_len > 4096 {
+        return Err(CheckpointError::Corrupt("implausible name length"));
     }
-    let name_len = r_u64(&mut r)? as usize;
     let mut name = vec![0u8; name_len];
     r.read_exact(&mut name)?;
-    let artifact = String::from_utf8(name).map_err(|_| bad("bad name"))?;
-    let step = r_u64(&mut r)?;
-    let layers = r_u64(&mut r)? as usize;
+    let artifact = String::from_utf8(name)
+        .map_err(|_| CheckpointError::Corrupt("artifact name is not utf-8"))?;
+    let step = r_u64(r)?;
+    let layers = r_u64(r)? as usize;
     let mut groups: Vec<Vec<Tensor>> = Vec::with_capacity(3);
     for _ in 0..3 {
         let mut g = Vec::with_capacity(layers);
         for _ in 0..layers {
-            g.push(r_tensor(&mut r)?);
+            g.push(r_tensor(r)?);
         }
         groups.push(g);
     }
@@ -103,10 +188,112 @@ pub fn load(path: &Path) -> std::io::Result<(TrainState, String)> {
     // invariants
     for (w_, m_) in weights.iter().zip(&m) {
         if w_.dims != m_.dims {
-            return Err(bad("weight/moment shape mismatch"));
+            return Err(CheckpointError::Corrupt("weight/moment shape mismatch"));
         }
     }
     Ok((TrainState { weights, m, v, step }, artifact))
+}
+
+/// Write a `CGCNCKP1` checkpoint (no epoch, no history) — the format
+/// every pre-v2 file uses and non-VR-GCN runs keep writing.
+pub fn save(state: &TrainState, artifact: &str, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC_V1)?;
+    w_body(&mut w, state, artifact)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a `CGCNCKP2` checkpoint: the v1 body plus the saved-at epoch
+/// and (for VR-GCN runs) the historical-activation store.
+pub fn save_v2(
+    state: &TrainState,
+    artifact: &str,
+    epoch: usize,
+    history: Option<&HistorySection>,
+    path: &Path,
+) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC_V2)?;
+    w_body(&mut w, state, artifact)?;
+    w_u64(&mut w, epoch as u64)?;
+    match history {
+        Some(h) => {
+            for layer in &h.layers {
+                if layer.len() != h.n * h.f_hid {
+                    return Err(CheckpointError::Corrupt(
+                        "history layer length != n * f_hid",
+                    ));
+                }
+            }
+            w_u64(&mut w, h.layers.len() as u64)?;
+            w_u64(&mut w, h.n as u64)?;
+            w_u64(&mut w, h.f_hid as u64)?;
+            for layer in &h.layers {
+                w_f32s(&mut w, layer)?;
+            }
+        }
+        None => {
+            w_u64(&mut w, 0)?;
+            w_u64(&mut w, 0)?;
+            w_u64(&mut w, 0)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Map an EOF inside the v2 trailer to the typed truncation error.
+fn truncated(e: std::io::Error) -> CheckpointError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        CheckpointError::TruncatedHistory
+    } else {
+        CheckpointError::Io(e)
+    }
+}
+
+/// Load either checkpoint version in full.
+pub fn load_full(path: &Path) -> Result<Checkpoint> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    let v2 = match &magic {
+        m if m == MAGIC_V1 => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(CheckpointError::Corrupt("not a cluster-gcn checkpoint")),
+    };
+    let (state, artifact) = r_body(&mut r)?;
+    if !v2 {
+        return Ok(Checkpoint { state, artifact, epoch: 0, history: None });
+    }
+    let epoch = r_u64(&mut r).map_err(truncated)? as usize;
+    let hist_layers = r_u64(&mut r).map_err(truncated)?;
+    let n = r_u64(&mut r).map_err(truncated)? as usize;
+    let f_hid = r_u64(&mut r).map_err(truncated)? as usize;
+    if hist_layers > MAX_HISTORY_LAYERS {
+        return Err(CheckpointError::Corrupt("implausible history layer count"));
+    }
+    let history = if hist_layers == 0 {
+        None
+    } else {
+        let len = n
+            .checked_mul(f_hid)
+            .filter(|&l| l.checked_mul(4).is_some())
+            .ok_or(CheckpointError::Corrupt("history dims overflow"))?;
+        let mut layers = Vec::with_capacity(hist_layers as usize);
+        for _ in 0..hist_layers {
+            layers.push(r_f32s(&mut r, len).map_err(truncated)?);
+        }
+        Some(HistorySection { f_hid, n, layers })
+    };
+    Ok(Checkpoint { state, artifact, epoch, history })
+}
+
+/// Returns (state, artifact name recorded at save time) — the
+/// compatibility surface; reads both versions and drops the v2 trailer.
+pub fn load(path: &Path) -> Result<(TrainState, String)> {
+    let ck = load_full(path)?;
+    Ok((ck.state, ck.artifact))
 }
 
 #[cfg(test)]
@@ -120,6 +307,17 @@ mod tests {
         let mut s = TrainState::init(&spec, 9);
         s.step = 77;
         s
+    }
+
+    fn history() -> HistorySection {
+        HistorySection {
+            f_hid: 3,
+            n: 5,
+            layers: vec![
+                (0..15).map(|i| i as f32 * 0.5).collect(),
+                (0..15).map(|i| -(i as f32)).collect(),
+            ],
+        }
     }
 
     fn tmp(tag: &str) -> std::path::PathBuf {
@@ -147,10 +345,38 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrips_epoch_and_history() {
+        let s = state();
+        let h = history();
+        let p = tmp("v2");
+        save_v2(&s, "ppi_vrgcn_L3", 17, Some(&h), &p).unwrap();
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.artifact, "ppi_vrgcn_L3");
+        assert_eq!(ck.epoch, 17);
+        assert_eq!(ck.history.as_ref(), Some(&h));
+        // the compat loader reads the same file
+        let (s2, art) = load(&p).unwrap();
+        assert_eq!(art, "ppi_vrgcn_L3");
+        assert_eq!(s2.step, s.step);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v2_without_history_loads_none() {
+        let s = state();
+        let p = tmp("v2n");
+        save_v2(&s, "cora_L2", 3, None, &p).unwrap();
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.epoch, 3);
+        assert!(ck.history.is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
         let p = tmp("bad");
         std::fs::write(&p, b"definitely not a checkpoint").unwrap();
-        assert!(load(&p).is_err());
+        assert!(matches!(load(&p), Err(CheckpointError::Corrupt(_))));
         std::fs::remove_file(&p).ok();
     }
 
@@ -162,6 +388,30 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// The typed error contract: cutting a v2 file anywhere inside its
+    /// trailer (epoch, history header, or history payload) is reported
+    /// as `TruncatedHistory`, not a generic IO error.
+    #[test]
+    fn truncated_history_is_typed() {
+        let s = state();
+        let h = history();
+        let p = tmp("trunc_hist");
+        save_v2(&s, "m", 5, Some(&h), &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let trailer = 8 * 4 + h.layers.len() * h.n * h.f_hid * 4;
+        for cut in [1usize, 7, 13, trailer - 1] {
+            std::fs::write(&p, &full[..full.len() - cut]).unwrap();
+            match load_full(&p) {
+                Err(CheckpointError::TruncatedHistory) => {}
+                other => panic!(
+                    "cut {cut}: expected TruncatedHistory, got {:?}",
+                    other.err().map(|e| e.to_string())
+                ),
+            }
+        }
         std::fs::remove_file(&p).ok();
     }
 }

@@ -23,6 +23,5 @@ pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
 pub use source::{BatchSource, ClusterSource, SourceStats};
 pub use trainer::{
-    evaluate, evaluate_cached, train, train_observed, CurvePoint, TrainOptions,
-    TrainResult, TrainState,
+    evaluate, evaluate_cached, train, train_observed, CurvePoint, TrainResult, TrainState,
 };

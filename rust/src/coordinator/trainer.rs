@@ -12,21 +12,19 @@
 //!
 //! - [`TrainState`] / [`TrainResult`] / [`CurvePoint`] — the model
 //!   state and run accounting types,
-//! - [`TrainOptions`] — the legacy loop-level config, kept one release
-//!   as a `From` shim into [`crate::session::TrainConfig`] so benches
-//!   and examples compile unchanged,
-//! - [`train`] / [`train_observed`] / [`step`] — thin wrappers that
-//!   build a driver and drain it,
+//! - [`train`] / [`train_observed`] / [`step`] — thin wrappers over the
+//!   unified [`crate::session::TrainConfig`] that build a driver and
+//!   drain it (the legacy `TrainOptions` shim served its one-release
+//!   deprecation window in PR 4 and is gone),
 //! - [`evaluate`] / [`evaluate_cached`] — the exact host evaluator.
 
 use anyhow::Result;
 
 use crate::coordinator::sampler::ClusterSampler;
-use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::source::ClusterSource;
 use crate::coordinator::inference::{full_forward_cached, gather_rows};
 use crate::coordinator::metrics::micro_f1;
-use crate::graph::{Dataset, Split};
+use crate::graph::Dataset;
 use crate::norm::{NormCache, NormConfig};
 use crate::runtime::{Backend, ModelSpec, PrefetchBackend, Tensor};
 use crate::session::driver::{BackendSlot, Driver, DriverSource};
@@ -70,82 +68,6 @@ impl TrainState {
     }
 }
 
-/// Legacy loop-level training configuration, superseded by the unified
-/// [`TrainConfig`] (which adds the model shape, the adjacency
-/// normalization, and the [`crate::session::EvalStrategy`]).  Kept for
-/// one release so pre-driver callers (benches, examples) compile
-/// unchanged; convert with the `From` impls in either direction.
-#[derive(Clone, Debug)]
-pub struct TrainOptions {
-    pub lr: f32,
-    pub epochs: usize,
-    /// evaluate every k epochs (0 = only at the end).
-    pub eval_every: usize,
-    pub seed: u64,
-    pub norm: NormConfig,
-    /// evaluate on this split for the convergence curve.
-    pub eval_split: Split,
-    /// cap steps per epoch (0 = no cap); memory/timing benches use a
-    /// few steps to reach peak state without a full pass.
-    pub max_steps_per_epoch: usize,
-    /// learning-rate schedule over epochs (lr is a runtime input).
-    pub schedule: LrSchedule,
-    /// early-stop patience in evals (0 = disabled).
-    pub patience: usize,
-}
-
-impl Default for TrainOptions {
-    fn default() -> Self {
-        TrainOptions {
-            lr: 0.01, // the paper: Adam, lr 0.01, for every method
-            epochs: 40,
-            eval_every: 5,
-            seed: 0,
-            norm: NormConfig::PAPER_DEFAULT,
-            eval_split: Split::Val,
-            max_steps_per_epoch: 0,
-            schedule: LrSchedule::Constant,
-            patience: 0,
-        }
-    }
-}
-
-impl From<&TrainOptions> for TrainConfig {
-    /// Shim for pre-driver callers: model-shape fields take their
-    /// defaults (the driver reads shapes from the backend's
-    /// [`ModelSpec`], so they are inert on this path).
-    fn from(o: &TrainOptions) -> TrainConfig {
-        TrainConfig {
-            lr: o.lr,
-            epochs: o.epochs,
-            eval_every: o.eval_every,
-            seed: o.seed,
-            norm: o.norm,
-            eval_split: o.eval_split,
-            max_steps_per_epoch: o.max_steps_per_epoch,
-            schedule: o.schedule,
-            patience: o.patience,
-            ..TrainConfig::default()
-        }
-    }
-}
-
-impl From<&TrainConfig> for TrainOptions {
-    fn from(c: &TrainConfig) -> TrainOptions {
-        TrainOptions {
-            lr: c.lr,
-            epochs: c.epochs,
-            eval_every: c.eval_every,
-            seed: c.seed,
-            norm: c.norm,
-            eval_split: c.eval_split,
-            max_steps_per_epoch: c.max_steps_per_epoch,
-            schedule: c.schedule,
-            patience: c.patience,
-        }
-    }
-}
-
 #[derive(Clone, Debug)]
 pub struct CurvePoint {
     pub epoch: usize,
@@ -177,26 +99,28 @@ pub fn train(
     ds: &Dataset,
     sampler: &ClusterSampler,
     model: &str,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
 ) -> Result<TrainResult> {
-    train_observed(backend, ds, sampler, model, opts, &mut NullObserver)
+    train_observed(backend, ds, sampler, model, cfg, &mut NullObserver)
 }
 
 /// [`train`] with an [`Observer`] receiving the full [`crate::session::Event`]
 /// stream.  Pre-driver compatibility entry: builds a
 /// [`Driver`] over a [`ClusterSource`] and drains it; the caller's
 /// backend is wrapped in a [`PrefetchBackend`] so this path keeps the
-/// assembly/execute overlap the old loop had.
+/// assembly/execute overlap the old loop had.  The config's
+/// model-shape fields are inert here — the driver reads shapes from
+/// the backend's [`ModelSpec`].
 pub fn train_observed(
     backend: &mut dyn Backend,
     ds: &Dataset,
     sampler: &ClusterSampler,
     model: &str,
-    opts: &TrainOptions,
+    cfg: &TrainConfig,
     obs: &mut dyn Observer,
 ) -> Result<TrainResult> {
     let spec = backend.model_spec(model)?;
-    let cfg = TrainConfig::from(opts);
+    let cfg = cfg.clone();
     let source = ClusterSource::new(ds, sampler.clone(), &spec, cfg.norm, cfg.seed)?;
     let mut backend = PrefetchBackend::new(backend);
     let mut driver = Driver::from_parts(
@@ -259,7 +183,7 @@ pub fn evaluate_cached(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::Task;
+    use crate::graph::{Split, Task};
 
     fn fake_spec() -> ModelSpec {
         ModelSpec::gcn(Task::Multiclass, 2, 8, 16, 4, 128)
@@ -292,31 +216,6 @@ mod tests {
         let st = TrainState::init(&fake_spec(), 0);
         let one_set = (8 * 16 + 16 * 4) * 4;
         assert_eq!(st.param_bytes(), 3 * one_set);
-    }
-
-    #[test]
-    fn options_config_roundtrip_preserves_loop_fields() {
-        let o = TrainOptions {
-            lr: 0.05,
-            epochs: 7,
-            eval_every: 3,
-            seed: 11,
-            norm: NormConfig::ROW,
-            eval_split: Split::Test,
-            max_steps_per_epoch: 4,
-            schedule: LrSchedule::StepDecay { every: 2, factor: 0.5 },
-            patience: 9,
-        };
-        let c = TrainConfig::from(&o);
-        assert_eq!(c.lr, 0.05);
-        assert_eq!(c.epochs, 7);
-        assert_eq!(c.norm, NormConfig::ROW);
-        assert_eq!(c.patience, 9);
-        let back = TrainOptions::from(&c);
-        assert_eq!(back.eval_every, 3);
-        assert_eq!(back.seed, 11);
-        assert_eq!(back.eval_split, Split::Test);
-        assert_eq!(back.max_steps_per_epoch, 4);
     }
 
     /// The acceptance invariant behind the NormCache: a multi-eval run

@@ -64,6 +64,11 @@ pub const ADAM_EPS: f32 = 1e-8;
 /// row streams through it).
 pub const K_BLOCK: usize = 64;
 
+/// Column-block width of the sparse-aware `dW` kernel
+/// ([`gemm_at_b_masked_pooled`]) — one `[f32; 8]` simd lane, so a
+/// retained block is exactly one `axpy` chunk.
+pub const AT_B_COL_BLOCK: usize = 8;
+
 // ---------------------------------------------------------------------------
 // scalar oracles (the pre-engine kernels, kept verbatim)
 // ---------------------------------------------------------------------------
@@ -314,6 +319,113 @@ pub fn gemm_a_bt_pooled(
 }
 
 // ---------------------------------------------------------------------------
+// sparse-aware dW: skip relu-killed column blocks
+// ---------------------------------------------------------------------------
+
+/// Process-wide counters behind [`at_b_skip_stats`].
+static AT_B_BLOCKS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+static AT_B_SKIPPED: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// `(column blocks scanned, blocks found all-zero)` across every
+/// [`dz_col_block_mask`] call so far in this process — the skip rate of
+/// the sparse-aware `dW` kernel (see PERF.md §Backward engine).
+pub fn at_b_skip_stats() -> (u64, u64) {
+    (
+        AT_B_BLOCKS.load(std::sync::atomic::Ordering::Relaxed),
+        AT_B_SKIPPED.load(std::sync::atomic::Ordering::Relaxed),
+    )
+}
+
+/// Scan `dz` (`n × g`, row-major) for [`AT_B_COL_BLOCK`]-wide column
+/// blocks that are zero in **every** row — the units relu kills across
+/// the whole batch, whose `dW` columns are therefore exactly zero.
+/// `mask[b] = true` marks a *live* block.  Returns
+/// `(blocks, skipped)`; the scan early-exits once every block is live.
+pub fn dz_col_block_mask(dz: &[f32], n: usize, g: usize, mask: &mut Vec<bool>) -> (usize, usize) {
+    debug_assert_eq!(dz.len(), n * g);
+    let blocks = g.div_ceil(AT_B_COL_BLOCK).max(1);
+    mask.clear();
+    mask.resize(blocks, false);
+    let mut live = 0usize;
+    'rows: for i in 0..n {
+        let row = &dz[i * g..(i + 1) * g];
+        for (b, m) in mask.iter_mut().enumerate() {
+            if *m {
+                continue;
+            }
+            let lo = b * AT_B_COL_BLOCK;
+            let hi = (lo + AT_B_COL_BLOCK).min(g);
+            if row[lo..hi].iter().any(|&v| v != 0.0) {
+                *m = true;
+                live += 1;
+                if live == blocks {
+                    break 'rows;
+                }
+            }
+        }
+    }
+    AT_B_BLOCKS.fetch_add(blocks as u64, std::sync::atomic::Ordering::Relaxed);
+    AT_B_SKIPPED.fetch_add((blocks - live) as u64, std::sync::atomic::Ordering::Relaxed);
+    (blocks, blocks - live)
+}
+
+/// Sparse-aware `gw[f,g] = p[n,f]^T · dz[n,g]`: identical tiling and
+/// per-element accumulation order as [`gemm_at_b_pooled`], but
+/// [`AT_B_COL_BLOCK`]-wide column blocks whose `col_live` flag is false
+/// (all-zero `dz` columns, from [`dz_col_block_mask`]) are skipped
+/// entirely.  **Bit-identical** to the unmasked kernel (and therefore
+/// to the scalar [`gemm_at_b`] oracle) at every chunk count: a skipped
+/// block only ever contributed `pv · 0.0` terms, and adding `±0.0` to a
+/// `+0.0` accumulator leaves `+0.0` under IEEE round-to-nearest —
+/// exactly what the zero-filled output already holds.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_at_b_masked_pooled(
+    p: &[f32],
+    dz: &[f32],
+    n: usize,
+    f: usize,
+    g: usize,
+    col_live: &[bool],
+    threads: usize,
+    gw: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), n * f);
+    debug_assert_eq!(dz.len(), n * g);
+    debug_assert_eq!(col_live.len(), g.div_ceil(AT_B_COL_BLOCK).max(1));
+    assert_eq!(gw.len(), f * g, "gradient buffer mismatch");
+    if n == 0 {
+        gw.fill(0.0);
+        return;
+    }
+    pool::global().run_rows_with(f, threads.max(1), g, gw, |_ci, krange, gw_rows| {
+        gw_rows.fill(0.0);
+        let mut kb = krange.start;
+        while kb < krange.end {
+            let kn = K_BLOCK.min(krange.end - kb);
+            for i in 0..n {
+                let pr = &p[i * f + kb..i * f + kb + kn];
+                let dzr = &dz[i * g..(i + 1) * g];
+                for (k, &pv) in pr.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let go = (kb - krange.start + k) * g;
+                    for (b, &alive) in col_live.iter().enumerate() {
+                        if !alive {
+                            continue;
+                        }
+                        let lo = b * AT_B_COL_BLOCK;
+                        let hi = (lo + AT_B_COL_BLOCK).min(g);
+                        axpy(&mut gw_rows[go + lo..go + hi], &dzr[lo..hi], pv);
+                    }
+                }
+            }
+            kb += kn;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Âᵀ as a reusable gather structure
 // ---------------------------------------------------------------------------
 
@@ -514,10 +626,10 @@ pub fn adam_update_pooled(
 /// Every per-step buffer of the host train path, hoisted out of the hot
 /// loop: forward stores (`P_l`, `Z_l`, hidden ping-pong), backward
 /// scratch (`dz`, `mbuf`, `dh`/`dh_new`), the flat gradient arena with
-/// its per-layer spans, the [`AdjT`] transpose, and the VR-GCN sparse
-/// view of `A_in`.  Buffers only ever grow ([`BackwardWorkspace::prepare`]),
-/// so steady-state training performs **no** heap allocation in the
-/// backward path.
+/// its per-layer spans, the [`AdjT`] transpose, and the column-block
+/// mask of the sparse-aware `dW` kernel.  Buffers only ever grow
+/// ([`BackwardWorkspace::prepare`]), so steady-state training performs
+/// **no** heap allocation in the backward path.
 #[derive(Default)]
 pub struct BackwardWorkspace {
     /// Per-layer propagations `P_l = Â·H_l` (`n × f_l`).
@@ -542,12 +654,8 @@ pub struct BackwardWorkspace {
     pub(crate) spans: Vec<(usize, usize)>,
     /// Transpose of the current batch block.
     pub(crate) adj_t: AdjT,
-    /// VR-GCN sparse view of `A_in`: row offsets.
-    pub(crate) vr_offsets: Vec<usize>,
-    /// VR-GCN sparse view of `A_in`: column ids (diagonal inline).
-    pub(crate) vr_cols: Vec<u32>,
-    /// VR-GCN sparse view of `A_in`: entry values.
-    pub(crate) vr_vals: Vec<f32>,
+    /// Live-column-block mask for [`gemm_at_b_masked_pooled`].
+    pub(crate) col_mask: Vec<bool>,
 }
 
 fn grow(buf: &mut Vec<f32>, len: usize) {
@@ -646,6 +754,50 @@ mod tests {
             for threads in [1usize, 2, 8] {
                 let mut got = vec![f32::NAN; f * g];
                 gemm_at_b_pooled(&p, &dz, n, f, g, threads, &mut got);
+                for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} f={f} g={g} t={threads} i={i}");
+                }
+            }
+        }
+    }
+
+    /// The sparse-aware dW kernel with a mask from `dz_col_block_mask`
+    /// is bit-identical to the scalar oracle on dz matrices whose relu
+    /// killed whole column blocks — at pool widths 1/2/8, across block
+    /// boundaries.
+    #[test]
+    fn gemm_at_b_masked_matches_scalar_bitwise() {
+        let mut rng = Rng::new(41);
+        for &(n, f, g) in &[(1usize, 1usize, 1usize), (9, 7, 8), (40, 70, 33), (64, 33, 65)] {
+            let p = rand_vec(&mut rng, n * f, 0.4);
+            let mut dz = rand_vec(&mut rng, n * g, 0.2);
+            // kill whole column blocks (the all-rows-relu-dead case)
+            let blocks = g.div_ceil(AT_B_COL_BLOCK).max(1);
+            for b in 0..blocks {
+                if rng.bool_with(0.5) {
+                    let lo = b * AT_B_COL_BLOCK;
+                    let hi = (lo + AT_B_COL_BLOCK).min(g);
+                    for i in 0..n {
+                        dz[i * g + lo..i * g + hi].fill(0.0);
+                    }
+                }
+            }
+            let mut mask = Vec::new();
+            let (total, skipped) = dz_col_block_mask(&dz, n, g, &mut mask);
+            assert_eq!(total, blocks);
+            assert_eq!(skipped, mask.iter().filter(|&&m| !m).count());
+            // a live flag must mean a non-zero column exists in the block
+            for (b, &alive) in mask.iter().enumerate() {
+                let lo = b * AT_B_COL_BLOCK;
+                let hi = (lo + AT_B_COL_BLOCK).min(g);
+                let any = (0..n).any(|i| dz[i * g + lo..i * g + hi].iter().any(|&v| v != 0.0));
+                assert_eq!(alive, any, "block {b} mask wrong");
+            }
+            let mut oracle = vec![0f32; f * g];
+            gemm_at_b(&p, &dz, n, f, g, &mut oracle);
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![f32::NAN; f * g];
+                gemm_at_b_masked_pooled(&p, &dz, n, f, g, &mask, threads, &mut got);
                 for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
                     assert_eq!(a.to_bits(), b.to_bits(), "n={n} f={f} g={g} t={threads} i={i}");
                 }

@@ -53,8 +53,8 @@ use crate::coordinator::trainer::TrainState;
 use crate::graph::Task;
 use crate::runtime::backend::{Backend, ModelSpec, VrgcnBatch};
 use crate::runtime::backward::{
-    adam_update_pooled, gemm, gemm_a_bt, gemm_at_b, gemm_a_bt_pooled, gemm_at_b_pooled,
-    gemm_pooled, scatter_adj_t, BackwardWorkspace,
+    adam_update_pooled, dz_col_block_mask, gemm, gemm_a_bt, gemm_a_bt_pooled, gemm_at_b,
+    gemm_at_b_masked_pooled, gemm_at_b_pooled, gemm_pooled, scatter_adj_t, BackwardWorkspace,
 };
 use crate::runtime::exec::Tensor;
 use crate::util::pool::{self, default_threads};
@@ -125,6 +125,23 @@ impl HostBackend {
         let grads = self.ws.grad_layers().iter().map(|s| s.to_vec()).collect();
         Ok((loss, grads))
     }
+
+    /// Loss, hidden activations, and per-layer weight gradients of one
+    /// VR-GCN step on the sparse-native path **without** touching
+    /// optimizer state — the diagnostics entry the sparse-vs-dense
+    /// parity and finite-difference suites compare against
+    /// [`vrgcn_grads_dense`].
+    pub fn vrgcn_loss_and_grads(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>, Vec<Vec<f32>>)> {
+        let spec = self.spec(model)?.clone();
+        let (loss, hiddens) = vrgcn_grads(&spec, weights, batch, self.threads, &mut self.ws)?;
+        let grads = self.ws.grad_layers().iter().map(|s| s.to_vec()).collect();
+        Ok((loss, hiddens, grads))
+    }
 }
 
 /// Sparse view of one dense batch block (oracle-side only): CSR
@@ -167,9 +184,12 @@ fn extract_block(a: &Tensor, n: usize) -> BlockAdj {
 }
 
 /// Sparse row extraction of the `n × n` prefix of a padded dense block
-/// (row stride `b`), diagonal **inline** — the VR-GCN `A_in` view,
-/// derived once per step and shared between its forward and backward
-/// (the old path re-walked the dense rows in both).
+/// (row stride `b`), diagonal **inline** — the VR-GCN `A_in` layout.
+/// Oracle-side only since the batch carries its CSR natively: the
+/// production step never densifies, and this re-extraction survives for
+/// [`vrgcn_grads_dense`], which deliberately derives its view from the
+/// dense realization so it stays independent of the sparse-native path
+/// it checks.
 fn extract_dense_rows(
     a: &[f32],
     n: usize,
@@ -379,7 +399,11 @@ fn activate_layer(
 /// The shared backward sweep (cluster and VR-GCN paths): consumes
 /// `ws.dh` (dL/dlogits), the forward's `ws.ps`/`ws.zs`, and `ws.adj_t`
 /// (built by the caller when `l > 1`); leaves layer `li`'s `dW` at
-/// `ws.spans[li]` in the flat arena.
+/// `ws.spans[li]` in the flat arena.  On relu layers the `dW`
+/// contraction is **sparse-aware**: `dz` column blocks the relu killed
+/// across the whole batch are masked out of the kernel entirely
+/// (bit-identical to the unmasked run — see
+/// [`crate::runtime::backward::gemm_at_b_masked_pooled`]).
 fn backward_sweep(
     weights: &[Tensor],
     n: usize,
@@ -406,15 +430,33 @@ fn backward_sweep(
             }
         }
         let (off, len) = ws.spans[li];
-        gemm_at_b_pooled(
-            &ws.ps[li][..n * fi],
-            &ws.dz[..n * go],
-            n,
-            fi,
-            go,
-            threads,
-            &mut ws.grads[off..off + len],
-        );
+        let skipped = if last {
+            0
+        } else {
+            dz_col_block_mask(&ws.dz[..n * go], n, go, &mut ws.col_mask).1
+        };
+        if skipped > 0 {
+            gemm_at_b_masked_pooled(
+                &ws.ps[li][..n * fi],
+                &ws.dz[..n * go],
+                n,
+                fi,
+                go,
+                &ws.col_mask,
+                threads,
+                &mut ws.grads[off..off + len],
+            );
+        } else {
+            gemm_at_b_pooled(
+                &ws.ps[li][..n * fi],
+                &ws.dz[..n * go],
+                n,
+                fi,
+                go,
+                threads,
+                &mut ws.grads[off..off + len],
+            );
+        }
         if li > 0 {
             gemm_a_bt_pooled(
                 &ws.dz[..n * go],
@@ -578,16 +620,21 @@ fn host_loss(spec: &ModelSpec, weights: &[Tensor], batch: &Batch, threads: usize
     )
 }
 
-/// Pooled VR-GCN forward + backward (Hc is stop-gradient, exactly like
-/// the AOT model): loss and the `L-1` hidden activations returned,
-/// gradients left in the workspace arena.  The sparse view of `A_in`
-/// is extracted **once** and shared by the forward gather, the
-/// transpose build, and nothing else — the old path re-walked the dense
-/// rows in both phases.
-fn vrgcn_grads(
+/// Pooled VR-GCN forward + backward over an explicit CSR view of
+/// `A_in` (diagonal inline): loss and the `L-1` hidden activations
+/// returned, gradients left in the workspace arena.  Shared core of the
+/// sparse-native production path ([`vrgcn_grads`], which passes the
+/// batch's carried [`crate::runtime::VrgcnAdj`] buffers straight
+/// through) and the retained dense parity oracle
+/// ([`vrgcn_grads_dense`], which densifies and re-extracts first).
+#[allow(clippy::too_many_arguments)]
+fn vrgcn_grads_with(
     spec: &ModelSpec,
     weights: &[Tensor],
     batch: &VrgcnBatch,
+    offs: &[usize],
+    cls: &[u32],
+    vls: &[f32],
     threads: usize,
     ws: &mut BackwardWorkspace,
 ) -> Result<(f32, Vec<Tensor>)> {
@@ -595,18 +642,16 @@ fn vrgcn_grads(
     if n == 0 {
         return Err(anyhow!("empty vrgcn batch (n_real = 0)"));
     }
+    if offs.len() != n + 1 {
+        return Err(anyhow!(
+            "vrgcn batch carries a {}-row A_in for its {n} real rows",
+            offs.len().saturating_sub(1)
+        ));
+    }
     let l = spec.layers;
-    let b = batch.a_in.dims[0];
+    let b = batch.x.dims[0];
     let dims = spec.layer_in_dims();
     ws.prepare(weights, n);
-    extract_dense_rows(
-        &batch.a_in.data,
-        n,
-        b,
-        &mut ws.vr_offsets,
-        &mut ws.vr_cols,
-        &mut ws.vr_vals,
-    );
 
     // ---- forward: P_l = A_in·H_l + Hc_l; Z_l = P_l·W_l --------------
     let mut hiddens: Vec<Tensor> = Vec::with_capacity(l.saturating_sub(1));
@@ -618,9 +663,6 @@ fn vrgcn_grads(
         let last = li == l - 1;
         let hc = &batch.hcs[li].data;
         {
-            let offs = &ws.vr_offsets;
-            let cls = &ws.vr_cols;
-            let vls = &ws.vr_vals;
             let h = &ws.cur;
             let p = &mut ws.ps[li];
             let gather_row = |_ci: usize, rows: std::ops::Range<usize>, out_rows: &mut [f32]| {
@@ -671,20 +713,62 @@ fn vrgcn_grads(
 
     // ---- backward on the shared sweep (A_inᵀ, diagonal inline) ------
     if l > 1 {
-        ws.adj_t.build_inline(&ws.vr_offsets, &ws.vr_cols, &ws.vr_vals);
+        ws.adj_t.build_inline(offs, cls, vls);
     }
     backward_sweep(weights, n, false, threads, ws);
     Ok((loss, hiddens))
 }
 
+/// The sparse-native VR-GCN step body: consumes the batch's carried
+/// [`crate::runtime::VrgcnAdj`] directly — no dense `b_max²` block is
+/// ever materialized on this path.
+fn vrgcn_grads(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &VrgcnBatch,
+    threads: usize,
+    ws: &mut BackwardWorkspace,
+) -> Result<(f32, Vec<Tensor>)> {
+    let adj = &batch.a_in;
+    vrgcn_grads_with(spec, weights, batch, &adj.offsets, &adj.cols, &adj.vals, threads, ws)
+}
+
+/// The **dense parity oracle** for the sparse-native VR-GCN step: the
+/// pre-PR-5 round trip, kept deliberately — realize the carried CSR as
+/// the padded dense block ([`crate::runtime::VrgcnAdj::to_dense`]),
+/// re-extract its rows into a fresh CSR (`extract_dense_rows`), and
+/// run the same pooled core.  The extraction reproduces the carried
+/// buffers entry for entry (ascending columns, non-zero values), so
+/// loss, hidden activations, and gradients are **bit-identical** to the
+/// sparse path — pinned by the unit and property suites.
+pub fn vrgcn_grads_dense(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &VrgcnBatch,
+    threads: usize,
+) -> Result<(f32, Vec<Tensor>, Vec<Vec<f32>>)> {
+    let b = batch.x.dims[0];
+    let dense = batch.a_in.to_dense(b);
+    let mut offs = Vec::new();
+    let mut cls = Vec::new();
+    let mut vls = Vec::new();
+    extract_dense_rows(&dense.data, batch.n_real, b, &mut offs, &mut cls, &mut vls);
+    let mut ws = BackwardWorkspace::new();
+    let (loss, hiddens) =
+        vrgcn_grads_with(spec, weights, batch, &offs, &cls, &vls, threads, &mut ws)?;
+    let grads = ws.grad_layers().iter().map(|s| s.to_vec()).collect();
+    Ok((loss, hiddens, grads))
+}
+
 /// Loss only — the finite-difference oracle for the VR-GCN gradient
-/// test: a straight scalar re-implementation over the dense `A_in`,
-/// independent of the sparse extraction and the pooled kernels.
+/// test: a straight scalar re-implementation over the **densified**
+/// `A_in`, independent of the CSR walk and the pooled kernels.
 #[cfg(test)]
 fn vrgcn_loss(spec: &ModelSpec, weights: &[Tensor], batch: &VrgcnBatch) -> f32 {
     let n = batch.n_real;
     let l = spec.layers;
-    let b = batch.a_in.dims[0];
+    let b = batch.x.dims[0];
+    let a_dense = batch.a_in.to_dense(b);
     let dims = spec.layer_in_dims();
     let mut h: Vec<f32> = batch.x.data[..n * spec.f_in].to_vec();
     let mut logits: Vec<f32> = Vec::new();
@@ -697,7 +781,7 @@ fn vrgcn_loss(spec: &ModelSpec, weights: &[Tensor], batch: &VrgcnBatch) -> f32 {
         let mut p = vec![0f32; n * f];
         for i in 0..n {
             p[i * f..(i + 1) * f].copy_from_slice(&hc[i * f..(i + 1) * f]);
-            let arow = &batch.a_in.data[i * b..i * b + n];
+            let arow = &a_dense.data[i * b..i * b + n];
             for (j, &a) in arow.iter().enumerate() {
                 if a == 0.0 {
                     continue;
@@ -1146,21 +1230,31 @@ mod tests {
         assert_eq!(ptrs.4, hb.ws.zs[1].as_ptr());
     }
 
-    fn tiny_vrgcn_batch(ds: &Dataset, b: usize, seed: u64) -> VrgcnBatch {
+    /// Build a VR-GCN batch over the whole tiny graph; `hc_dims` are
+    /// the per-layer `Hc` widths (the spec's `layer_in_dims`).
+    fn tiny_vrgcn_batch(ds: &Dataset, b: usize, seed: u64, hc_dims: &[usize]) -> VrgcnBatch {
+        use crate::runtime::VrgcnAdj;
+
         let n = ds.n();
-        // dense block with plain row-normalized entries as A_in, plus
+        // row-normalized entries as A_in (CSR, diagonal inline), plus
         // non-zero Hc rows so the stop-gradient path is exercised
-        let mut a_in = Tensor::zeros(vec![b, b]);
+        let mut a_in = VrgcnAdj::new();
+        a_in.offsets.push(0);
         for v in 0..n {
             let deg = ds.graph.degree(v) as f32 + 1.0;
-            a_in.data[v * b + v] = 1.0 / deg;
-            for &u in ds.graph.neighbors(v) {
-                a_in.data[v * b + u as usize] = 1.0 / deg;
+            let mut row: Vec<u32> = ds.graph.neighbors(v).to_vec();
+            row.push(v as u32);
+            row.sort_unstable();
+            row.dedup();
+            for c in row {
+                a_in.cols.push(c);
+                a_in.vals.push(1.0 / deg);
             }
+            a_in.offsets.push(a_in.cols.len());
         }
         let mut rng = Rng::new(seed);
         let mut hcs = Vec::new();
-        for fd in [3usize, 4] {
+        for &fd in hc_dims {
             let mut hc = Tensor::zeros(vec![b, fd]);
             for x in hc.data[..n * fd].iter_mut() {
                 *x = (rng.f32() - 0.5) * 0.3;
@@ -1186,7 +1280,7 @@ mod tests {
         hb.register_model("m", spec.clone());
         let mut state = TrainState::init(&spec, 5);
         let b = 8;
-        let vb = tiny_vrgcn_batch(&ds, b, 99);
+        let vb = tiny_vrgcn_batch(&ds, b, 99, &spec.layer_in_dims());
         let (first, hiddens) = hb.vrgcn_step("m", &mut state, 0.05, &vb).unwrap();
         assert!(first.is_finite());
         assert_eq!(hiddens.len(), 1);
@@ -1206,7 +1300,7 @@ mod tests {
         let ds = tiny_ds(Task::Multiclass);
         let spec = ModelSpec::gcn(Task::Multiclass, 2, 3, 4, 2, 8);
         let weights = rand_weights(&spec, 17);
-        let vb = tiny_vrgcn_batch(&ds, 8, 23);
+        let vb = tiny_vrgcn_batch(&ds, 8, 23, &spec.layer_in_dims());
         let mut ws = BackwardWorkspace::new();
         vrgcn_grads(&spec, &weights, &vb, 2, &mut ws).unwrap();
         let grads: Vec<Vec<f32>> = ws.grad_layers().iter().map(|s| s.to_vec()).collect();
@@ -1226,6 +1320,41 @@ mod tests {
                     (num - ana).abs() <= tol + 0.1 * num.abs().max(ana.abs()),
                     "layer {li} entry {e}: numeric {num} vs analytic {ana}"
                 );
+            }
+        }
+    }
+
+    /// The sparse-native VR-GCN step vs the retained dense oracle
+    /// (densify → re-extract → same core): loss, hidden activations,
+    /// and gradients **bitwise** equal at several pool widths — the
+    /// acceptance contract of the sparse-native path.
+    #[test]
+    fn vrgcn_sparse_step_matches_dense_oracle_bitwise() {
+        for task in [Task::Multiclass, Task::Multilabel] {
+            let ds = tiny_ds(task);
+            let spec = ModelSpec::gcn(task, 3, 3, 4, 2, 8);
+            let weights = rand_weights(&spec, 31);
+            let vb = tiny_vrgcn_batch(&ds, 8, 57, &spec.layer_in_dims());
+            for threads in [1usize, 2, 8] {
+                let mut hb = HostBackend::with_threads(threads);
+                hb.register_model("m", spec.clone());
+                let (loss_s, hid_s, grads_s) =
+                    hb.vrgcn_loss_and_grads("m", &weights, &vb).unwrap();
+                let (loss_d, hid_d, grads_d) =
+                    vrgcn_grads_dense(&spec, &weights, &vb, threads).unwrap();
+                assert_eq!(loss_s.to_bits(), loss_d.to_bits(), "loss t={threads}");
+                assert_eq!(hid_s.len(), hid_d.len());
+                for (li, (a, b)) in hid_s.iter().zip(&hid_d).enumerate() {
+                    assert_eq!(a.dims, b.dims, "hidden {li} dims t={threads}");
+                    for (e, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(), "hidden {li} e={e} t={threads}");
+                    }
+                }
+                for (li, (ga, gb)) in grads_s.iter().zip(&grads_d).enumerate() {
+                    for (e, (x, y)) in ga.iter().zip(gb).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(), "grad {li} e={e} t={threads}");
+                    }
+                }
             }
         }
     }

@@ -18,7 +18,7 @@ pub mod prefetch;
 pub mod sharded;
 
 pub use artifacts::{ArtifactMeta, Kind, ManifestMissing, Registry};
-pub use backend::{Backend, ModelSpec, StepOutcome, VrgcnBatch};
+pub use backend::{Backend, ModelSpec, StepOutcome, VrgcnAdj, VrgcnBatch};
 pub use backward::BackwardWorkspace;
 pub use exec::{Engine, Tensor};
 pub use host::HostBackend;

@@ -255,6 +255,23 @@ impl<'a> Driver<'a> {
         &self.state
     }
 
+    /// The 1-based epoch the run has reached so far (equals
+    /// `cfg.start_epoch` before the first epoch begins) — what a
+    /// checkpoint taken between events records as its resume point.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Snapshot of the VR-GCN historical-activation store, for a
+    /// versioned (`CGCNCKP2`) checkpoint — `None` for every
+    /// [`BatchSource`]-backed method, whose resume needs no history.
+    pub fn history_section(&self) -> Option<crate::coordinator::checkpoint::HistorySection> {
+        match &self.source {
+            DriverSource::Vrgcn(src) => Some(src.history_section()),
+            DriverSource::Batched(_) => None,
+        }
+    }
+
     /// Convergence curve recorded so far.
     pub fn curve(&self) -> &[CurvePoint] {
         &self.curve

@@ -106,8 +106,10 @@ impl Method {
 /// The one typed training configuration, flowing Session → [`Driver`] →
 /// [`crate::runtime::Backend`].  Everything the run needs lives here —
 /// model shape, optimization, scheduling, adjacency normalization, and
-/// the [`EvalStrategy`]; the loop-level `TrainOptions` survives only as
-/// a `From` shim for the pre-driver free functions.
+/// the [`EvalStrategy`].  This is also what the pre-driver free
+/// functions (`coordinator::train`, the baseline `train_*` entries)
+/// take directly — the legacy `TrainOptions` shim was removed after its
+/// one-release deprecation window.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     /// GCN depth L.
@@ -197,6 +199,7 @@ pub struct Session<'a> {
     observer: Option<&'a mut dyn Observer>,
     save: Option<PathBuf>,
     initial: Option<TrainState>,
+    initial_history: Option<checkpoint::HistorySection>,
     prefetch: bool,
 }
 
@@ -214,6 +217,7 @@ impl<'a> Session<'a> {
             observer: None,
             save: None,
             initial: None,
+            initial_history: None,
             prefetch: true,
         }
     }
@@ -332,6 +336,19 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// Restore a VR-GCN historical-activation store from a versioned
+    /// (`CGCNCKP2`) checkpoint before the first epoch.  VR-GCN's
+    /// estimator reads the history its own steps refresh, so a resume
+    /// is only a **bitwise** replay of the uninterrupted run when the
+    /// history comes back with the weights — pair this with
+    /// [`Session::initial_state`] and [`TrainConfig::start_epoch`].
+    /// Errors at driver construction if the section's shape does not
+    /// match the run, or if the method is not [`Method::VrGcn`].
+    pub fn initial_history(mut self, history: checkpoint::HistorySection) -> Self {
+        self.initial_history = Some(history);
+        self
+    }
+
     /// Resolve the model id this session will ask the backend for.
     /// Artifact names stay the historical scheme
     /// (`{short}[_sage|_vrgcn][_h{H}]_L{layers}`), so PJRT sessions keep
@@ -375,6 +392,7 @@ impl<'a> Session<'a> {
             observer,
             save,
             initial,
+            initial_history,
             prefetch,
         } = self;
         if cfg.layers == 0 {
@@ -445,9 +463,19 @@ impl<'a> Session<'a> {
                 SageSource::new(ds, &spec, params, cfg.norm, cfg.seed)?,
             )),
             Method::VrGcn(params) => {
-                DriverSource::Vrgcn(VrgcnSource::new(ds, &spec, params, cfg.norm, cfg.seed))
+                let mut source = VrgcnSource::new(ds, &spec, params, cfg.norm, cfg.seed);
+                if let Some(h) = &initial_history {
+                    source.restore_history(h)?;
+                }
+                DriverSource::Vrgcn(source)
             }
         };
+        if initial_history.is_some() && !matches!(source, DriverSource::Vrgcn(_)) {
+            return Err(anyhow!(
+                "initial_history is a VR-GCN resume input, but this session's \
+                 method ({model}) keeps no history store"
+            ));
+        }
 
         let driver = Driver::from_parts(backend, ds, model, cfg, source, initial)?;
         Ok((driver, observer, save))
@@ -457,8 +485,12 @@ impl<'a> Session<'a> {
     /// event into the attached observer, optionally checkpoint (the
     /// checkpoint is written — and [`Event::CheckpointSaved`] emitted —
     /// just before [`Event::Done`], which stays the final event).
-    /// Equivalent to driving the loop by hand — this is now a
-    /// convenience, not the loop's owner.
+    /// Every session checkpoint is the versioned `CGCNCKP2` format, so
+    /// it records the epoch it was saved at (what `--resume` continues
+    /// from); VR-GCN runs additionally carry their historical-activation
+    /// store, making their resume a bitwise replay too.  Equivalent to
+    /// driving the loop by hand — this is now a convenience, not the
+    /// loop's owner.
     pub fn run(self) -> Result<SessionResult> {
         let (mut driver, observer, mut save) = self.into_driver_parts()?;
         let mut null = NullObserver;
@@ -469,7 +501,14 @@ impl<'a> Session<'a> {
         while let Some(ev) = driver.next_event()? {
             if matches!(ev, Event::Done { .. }) {
                 if let Some(path) = save.take() {
-                    checkpoint::save(driver.state(), driver.model(), &path)?;
+                    let history = driver.history_section();
+                    checkpoint::save_v2(
+                        driver.state(),
+                        driver.model(),
+                        driver.epoch(),
+                        history.as_ref(),
+                        &path,
+                    )?;
                     obs.on_event(&Event::CheckpointSaved { path });
                 }
             }

@@ -212,6 +212,77 @@ fn checkpoint_resume_replays_uninterrupted_run() {
     assert_eq!(state_bits(&resumed.result.state), state_bits(&resumed2.result.state));
 }
 
+/// The PR-5 resume gate: a VR-GCN run interrupted at an epoch boundary
+/// resumes to a **bitwise**-identical final state vs the uninterrupted
+/// run — and the history section in the `CGCNCKP2` checkpoint is
+/// load-bearing: VR-GCN's estimator reads the activations its earlier
+/// epochs stored, so resuming *without* the history diverges.
+#[test]
+fn vrgcn_resume_replays_uninterrupted_run_bitwise() {
+    let ds = tiny_sbm(19);
+    let method = || Method::VrGcn(VrgcnParams { r: 2, batch: 32 });
+    let run = |c: TrainConfig,
+               init: Option<cluster_gcn::coordinator::TrainState>,
+               hist: Option<checkpoint::HistorySection>,
+               save: Option<&std::path::Path>| {
+        let mut s = Session::new(&ds).method(method()).config(c);
+        if let Some(st) = init {
+            s = s.initial_state(st);
+        }
+        if let Some(h) = hist {
+            s = s.initial_history(h);
+        }
+        if let Some(p) = save {
+            s = s.save(p);
+        }
+        s.run().unwrap()
+    };
+
+    let full = run(cfg(4, 11), None, None, None);
+
+    // interrupted run: 2 epochs, checkpointed through the session (the
+    // CGCNCKP2 path: epoch + history section)
+    let ckpt = std::env::temp_dir().join(format!(
+        "cgcn_vrgcn_resume_{}.bin",
+        std::process::id()
+    ));
+    let part = run(cfg(2, 11), None, None, Some(ckpt.as_path()));
+    let ck = checkpoint::load_full(&ckpt).unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(ck.artifact, part.model);
+    assert_eq!(ck.epoch, 2, "v2 checkpoint must record the saved-at epoch");
+    let history = ck.history.expect("vrgcn session checkpoint must carry history");
+    assert!(!history.layers.is_empty());
+
+    // resume with state + history + start_epoch: bitwise replay
+    let resumed = run(
+        TrainConfig { start_epoch: ck.epoch, ..cfg(4, 11) },
+        Some(ck.state.clone()),
+        Some(history.clone()),
+        None,
+    );
+    assert_eq!(full.result.state.step, resumed.result.state.step);
+    assert_eq!(
+        state_bits(&full.result.state),
+        state_bits(&resumed.result.state),
+        "resumed vrgcn run must replay the uninterrupted run bit for bit"
+    );
+
+    // resume WITHOUT the history: the estimator falls back to a zeroed
+    // store, so the replay must diverge — the section is load-bearing
+    let amnesiac = run(
+        TrainConfig { start_epoch: ck.epoch, ..cfg(4, 11) },
+        Some(ck.state),
+        None,
+        None,
+    );
+    assert_ne!(
+        state_bits(&full.result.state),
+        state_bits(&amnesiac.result.state),
+        "dropping the history section must change the replay"
+    );
+}
+
 /// shards=1 ≡ HostBackend, bit for bit, at every step — property-style
 /// over seeds × partition counts.  The two drivers run in lockstep;
 /// every StepEnd must carry the same loss bits and leave the same

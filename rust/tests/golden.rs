@@ -1,0 +1,204 @@
+//! Golden-trace regression suite: per-epoch loss/F1 trajectories for
+//! all four training methods at a fixed seed on the host backend,
+//! pinned **bitwise** (tolerance 0) against checked-in golden values —
+//! so a kernel refactor that silently shifts numerics fails here even
+//! when every parity oracle it touched moved with it.
+//!
+//! The pin is legitimate because every host kernel is deterministic and
+//! pool-width-independent by contract (see ARCHITECTURE.md §Parity
+//! contracts): the trajectory is a pure function of `(dataset seed,
+//! config seed)`, so the same bits reproduce on any machine.
+//!
+//! Blessing: goldens live in `tests/golden/trajectories.json`.  When
+//! the file is absent the suite records the current trajectories and
+//! passes (first run on a fresh checkout); set `CGCN_BLESS=1` to
+//! re-record after an *intentional* numeric change, and commit the
+//! result.
+
+use cluster_gcn::baselines::VrgcnParams;
+use cluster_gcn::datagen::features::{gen_features, gen_labels, LabelModel};
+use cluster_gcn::datagen::{generate, SbmSpec};
+use cluster_gcn::graph::{Dataset, Split, Task};
+use cluster_gcn::session::{Method, Session, TrainConfig};
+use cluster_gcn::util::{Json, Rng};
+
+/// Same construction as `tests/driver.rs` / `tests/session_host.rs`.
+fn tiny_sbm(seed: u64) -> Dataset {
+    let n = 240;
+    let communities = 8;
+    let classes = 4;
+    let f_in = 16;
+    let mut rng = Rng::new(seed);
+    let sbm = generate(
+        &SbmSpec { n, communities, avg_deg: 8.0, intra_frac: 0.9, size_skew: 0.5 },
+        &mut rng,
+    );
+    let labels = gen_labels(
+        &LabelModel { task: Task::Multiclass, classes, noise: 0.05, active_per_community: 0 },
+        &sbm.community,
+        communities,
+        &mut rng,
+    );
+    let features =
+        gen_features(&labels, &sbm.community, communities, classes, f_in, 0.3, &mut rng);
+    let split = (0..n)
+        .map(|i| match i % 10 {
+            0..=6 => Split::Train,
+            7..=8 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+    let ds = Dataset {
+        name: "tiny_sbm".into(),
+        task: Task::Multiclass,
+        graph: sbm.graph,
+        f_in,
+        num_classes: classes,
+        features,
+        labels,
+        split,
+    };
+    ds.validate().unwrap();
+    ds
+}
+
+const GOLDEN_SEED: u64 = 1905;
+const GOLDEN_EPOCHS: usize = 3;
+
+fn methods() -> Vec<(&'static str, Method)> {
+    vec![
+        ("cluster", Method::Cluster { q: 1 }),
+        ("expansion", Method::Expansion { batch: 16 }),
+        ("graphsage", Method::graphsage(2, 16)),
+        ("vrgcn", Method::VrGcn(VrgcnParams { r: 2, batch: 32 })),
+    ]
+}
+
+/// One curve point, bit-exact: `(epoch, train_loss bits, eval_f1 bits)`.
+type Point = (usize, u64, u64);
+
+fn trajectory(ds: &Dataset, method: Method) -> Vec<Point> {
+    let cfg = TrainConfig {
+        layers: 2,
+        hidden: Some(32),
+        b_max: Some(256),
+        lr: 0.05,
+        epochs: GOLDEN_EPOCHS,
+        eval_every: 1,
+        seed: GOLDEN_SEED,
+        ..TrainConfig::default()
+    };
+    let out = Session::new(ds)
+        .method(method)
+        .partition(6)
+        .config(cfg)
+        .run()
+        .unwrap();
+    out.result
+        .curve
+        .iter()
+        .map(|pt| (pt.epoch, pt.train_loss.to_bits(), pt.eval_f1.to_bits()))
+        .collect()
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("trajectories.json")
+}
+
+fn to_json(all: &[(&str, Vec<Point>)]) -> Json {
+    Json::obj(
+        all.iter()
+            .map(|(name, pts)| {
+                let arr = pts
+                    .iter()
+                    .map(|&(e, lb, fb)| {
+                        Json::obj(vec![
+                            ("epoch", Json::num(e as f64)),
+                            // f64 bit patterns exceed 2^53: keep them as
+                            // hex strings so the JSON round trip is exact
+                            ("loss_bits", Json::str(&format!("{lb:016x}"))),
+                            ("f1_bits", Json::str(&format!("{fb:016x}"))),
+                        ])
+                    })
+                    .collect();
+                (*name, Json::Arr(arr))
+            })
+            .collect(),
+    )
+}
+
+fn from_json(j: &Json, name: &str) -> Option<Vec<Point>> {
+    let arr = j.get(name)?.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for p in arr {
+        let epoch = p.get("epoch")?.as_usize()?;
+        let lb = u64::from_str_radix(p.get("loss_bits")?.as_str()?, 16).ok()?;
+        let fb = u64::from_str_radix(p.get("f1_bits")?.as_str()?, 16).ok()?;
+        out.push((epoch, lb, fb));
+    }
+    Some(out)
+}
+
+/// In-process determinism (no stored values needed): the same session
+/// twice yields the same trajectory, bit for bit — the property that
+/// makes a bitwise golden pin sound in the first place.
+#[test]
+fn trajectories_are_bitwise_deterministic_in_process() {
+    let ds = tiny_sbm(GOLDEN_SEED);
+    for (name, method) in methods() {
+        let a = trajectory(&ds, method.clone());
+        let b = trajectory(&ds, method);
+        assert_eq!(a, b, "{name}: trajectory not deterministic");
+        assert_eq!(a.len(), GOLDEN_EPOCHS, "{name}: expected one eval per epoch");
+    }
+}
+
+/// The golden pin: trajectories match `tests/golden/trajectories.json`
+/// with tolerance 0 (host backend).  Auto-blesses when the file is
+/// absent or `CGCN_BLESS=1`.
+#[test]
+fn trajectories_match_checked_in_goldens() {
+    let ds = tiny_sbm(GOLDEN_SEED);
+    let current: Vec<(&str, Vec<Point>)> = methods()
+        .into_iter()
+        .map(|(name, method)| (name, trajectory(&ds, method)))
+        .collect();
+
+    let path = golden_path();
+    let bless = std::env::var("CGCN_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, to_json(&current).to_string()).unwrap();
+        eprintln!(
+            "golden: {} trajectories for {} methods at seed {GOLDEN_SEED} \
+             (commit {})",
+            if bless { "re-blessed" } else { "recorded" },
+            current.len(),
+            path.display()
+        );
+        return;
+    }
+
+    let stored = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .unwrap_or_else(|e| panic!("unparsable golden file {}: {e}", path.display()));
+    for (name, pts) in &current {
+        let want = from_json(&stored, name).unwrap_or_else(|| {
+            panic!(
+                "golden file {} has no usable entry for '{name}' — \
+                 re-bless with CGCN_BLESS=1 and commit",
+                path.display()
+            )
+        });
+        assert_eq!(
+            *pts, want,
+            "{name}: trajectory drifted from the checked-in golden \
+             (tolerance 0 on the host backend).  If the numeric change is \
+             intentional, re-run with CGCN_BLESS=1 and commit the new \
+             {}",
+            path.display()
+        );
+    }
+}

@@ -6,8 +6,9 @@
 #![allow(unused_imports)]
 
 use cluster_gcn::coordinator::{
-    evaluate, train, BatchAssembler, ClusterSampler, TrainOptions, TrainState,
+    evaluate, train, BatchAssembler, ClusterSampler, TrainState,
 };
+use cluster_gcn::session::TrainConfig;
 use cluster_gcn::datagen::{build, preset};
 use cluster_gcn::norm::NormConfig;
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
@@ -121,11 +122,11 @@ fn train_step_decreases_loss_and_learns() {
     let clusters = parts_to_clusters(&part, 10);
     let sampler = ClusterSampler::new(clusters, 1);
 
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 12,
         eval_every: 6,
         seed: 1,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     let result = train(&mut engine, &ds, &sampler, "cora_L2", &opts).unwrap();
 
@@ -148,12 +149,12 @@ fn vrgcn_baseline_trains() {
         return;
     };
     let ds = build(preset("ppi_like").unwrap(), 6);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 1,
         eval_every: 1,
         seed: 3,
         max_steps_per_epoch: 100,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     let r = cluster_gcn::baselines::train_vrgcn(
         &mut engine,
@@ -179,12 +180,12 @@ fn graphsage_baseline_trains() {
         return;
     };
     let ds = build(preset("ppi_like").unwrap(), 6);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 1,
         eval_every: 1,
         seed: 3,
         max_steps_per_epoch: 5,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     let r = cluster_gcn::baselines::train_graphsage(
         &mut engine,
@@ -267,12 +268,12 @@ fn expansion_trainer_runs() {
         return;
     };
     let ds = build(preset("ppi_like").unwrap(), 8);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 1,
         eval_every: 1,
         seed: 2,
         max_steps_per_epoch: 5,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     // vanilla SGD through the wider sage artifact (expansion needs room)
     let r = cluster_gcn::baselines::expansion::train_expansion(
@@ -296,12 +297,12 @@ fn early_stopping_halts_training() {
     let mut rng = Rng::new(1);
     let part = MultilevelPartitioner::default().partition(&ds.graph, 10, &mut rng);
     let sampler = ClusterSampler::new(parts_to_clusters(&part, 10), 1);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 100,
         eval_every: 1,
         seed: 1,
         patience: 2,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
     let r = train(&mut engine, &ds, &sampler, "cora_L2", &opts).unwrap();
     let last_epoch = r.curve.last().unwrap().epoch;
@@ -319,12 +320,12 @@ fn random_vs_cluster_partition_quality_table2_shape() {
         return;
     };
     let ds = build(preset("cora_like").unwrap(), 3);
-    let opts = TrainOptions {
+    let opts = TrainConfig {
         epochs: 10,
         eval_every: 10,
         seed: 2,
         eval_split: cluster_gcn::graph::Split::Test,
-        ..TrainOptions::default()
+        ..TrainConfig::default()
     };
 
     let mut f1s = Vec::new();

@@ -653,6 +653,141 @@ fn prop_assemble_into_matches_fresh() {
 // serialization invariants
 // --------------------------------------------------------------------------
 
+/// Checkpoint save→load→save is **bytewise**-stable for both on-disk
+/// versions: the v1 (`CGCNCKP1`) body and the v2 (`CGCNCKP2`) body +
+/// epoch + history section reproduce themselves exactly through a load,
+/// across random model shapes, steps, and history contents.
+#[test]
+fn prop_checkpoint_roundtrip_is_bytewise_stable() {
+    use cluster_gcn::coordinator::checkpoint::{
+        load_full, save, save_v2, HistorySection,
+    };
+    use cluster_gcn::coordinator::TrainState;
+    use cluster_gcn::runtime::ModelSpec;
+
+    forall(&cfg(12, 0xD3, 24), "ckpt_roundtrip", |rng, size| {
+        let layers = 1 + rng.usize_below(3);
+        let f_in = 1 + rng.usize_below(size.max(2));
+        let f_hid = 1 + rng.usize_below(size.max(2));
+        let classes = 1 + rng.usize_below(5);
+        let spec = ModelSpec::gcn(
+            cluster_gcn::graph::Task::Multiclass,
+            layers,
+            f_in,
+            f_hid,
+            classes,
+            64,
+        );
+        let mut state = TrainState::init(&spec, rng.next_u64());
+        state.step = rng.next_u64() % 10_000;
+        let n = 1 + rng.usize_below(9);
+        let hist = HistorySection {
+            f_hid,
+            n,
+            layers: (0..layers.saturating_sub(1))
+                .map(|_| (0..n * f_hid).map(|_| rng.f32() - 0.5).collect())
+                .collect(),
+        };
+        let epoch = rng.usize_below(50);
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cgcn_prop_ckpt_{}_{}.bin",
+            std::process::id(),
+            rng.next_u64()
+        ));
+
+        // v1
+        save(&state, "prop_model", &path).map_err(|e| e.to_string())?;
+        let b1 = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let ck = load_full(&path).map_err(|e| e.to_string())?;
+        if ck.epoch != 0 || ck.history.is_some() {
+            std::fs::remove_file(&path).ok();
+            return Err("v1 load invented a trailer".into());
+        }
+        save(&ck.state, &ck.artifact, &path).map_err(|e| e.to_string())?;
+        let b1b = std::fs::read(&path).map_err(|e| e.to_string())?;
+        if b1 != b1b {
+            std::fs::remove_file(&path).ok();
+            return Err("v1 save→load→save not bytewise stable".into());
+        }
+
+        // v2 (with history when the model has hidden layers)
+        let h_opt = if hist.layers.is_empty() { None } else { Some(&hist) };
+        save_v2(&state, "prop_model", epoch, h_opt, &path).map_err(|e| e.to_string())?;
+        let b2 = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let ck = load_full(&path).map_err(|e| e.to_string())?;
+        if ck.epoch != epoch {
+            std::fs::remove_file(&path).ok();
+            return Err(format!("v2 epoch {} != {}", ck.epoch, epoch));
+        }
+        if ck.history.as_ref() != h_opt {
+            std::fs::remove_file(&path).ok();
+            return Err("v2 history did not roundtrip".into());
+        }
+        save_v2(&ck.state, &ck.artifact, ck.epoch, ck.history.as_ref(), &path)
+            .map_err(|e| e.to_string())?;
+        let b2b = std::fs::read(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if b2 != b2b {
+            return Err("v2 save→load→save not bytewise stable".into());
+        }
+        Ok(())
+    });
+}
+
+/// A `CGCNCKP2` file cut anywhere inside its trailer (epoch, history
+/// header, or history payload) fails with the **typed**
+/// `TruncatedHistory` error — never a silent partial load.
+#[test]
+fn prop_truncated_history_section_is_typed() {
+    use cluster_gcn::coordinator::checkpoint::{
+        load_full, save_v2, CheckpointError, HistorySection,
+    };
+    use cluster_gcn::coordinator::TrainState;
+    use cluster_gcn::runtime::ModelSpec;
+
+    forall(&cfg(12, 0xD4, 16), "ckpt_truncation", |rng, size| {
+        let f_hid = 1 + rng.usize_below(size.max(2));
+        let n = 1 + rng.usize_below(size.max(2));
+        let hist_layers = 1 + rng.usize_below(3);
+        let spec = ModelSpec::gcn(
+            cluster_gcn::graph::Task::Multiclass,
+            2,
+            3,
+            f_hid,
+            2,
+            16,
+        );
+        let state = TrainState::init(&spec, rng.next_u64());
+        let hist = HistorySection {
+            f_hid,
+            n,
+            layers: (0..hist_layers)
+                .map(|_| (0..n * f_hid).map(|_| rng.f32()).collect())
+                .collect(),
+        };
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cgcn_prop_trunc_{}_{}.bin",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        save_v2(&state, "m", 7, Some(&hist), &path).map_err(|e| e.to_string())?;
+        let full = std::fs::read(&path).map_err(|e| e.to_string())?;
+        let trailer = 8 * 4 + hist_layers * n * f_hid * 4;
+        // cut a random number of bytes strictly inside the trailer
+        let cut = 1 + rng.usize_below(trailer);
+        std::fs::write(&path, &full[..full.len() - cut]).map_err(|e| e.to_string())?;
+        let res = load_full(&path);
+        std::fs::remove_file(&path).ok();
+        match res {
+            Err(CheckpointError::TruncatedHistory) => Ok(()),
+            Err(other) => Err(format!("cut {cut}: wrong error kind: {other}")),
+            Ok(_) => Err(format!("cut {cut}: truncated file loaded")),
+        }
+    });
+}
+
 #[test]
 fn prop_dataset_io_roundtrip() {
     forall(&cfg(10, 0xD1, 80), "dataset_io", |rng, size| {

@@ -150,6 +150,11 @@ fn session_emits_observer_events_and_checkpoints() {
     let (state, model) = cluster_gcn::coordinator::checkpoint::load(&ckpt).unwrap();
     assert_eq!(model, out.model);
     assert_eq!(state.step, out.result.state.step);
+    // every session save is v2: the epoch rides along (what --resume
+    // continues from), with an empty history for non-VR-GCN methods
+    let ck = cluster_gcn::coordinator::checkpoint::load_full(&ckpt).unwrap();
+    assert_eq!(ck.epoch, 2, "session checkpoint must record its epoch");
+    assert!(ck.history.is_none(), "cluster method stores no history");
     std::fs::remove_file(&ckpt).ok();
 }
 
