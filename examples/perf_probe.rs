@@ -10,7 +10,9 @@
 //! 2. **backward** — the host train step on a real cluster batch: the
 //!    pre-engine scalar backward vs the pooled engine end to end, plus
 //!    per-kernel phase timings (gemm_at_b, scatter vs Âᵀ gather,
-//!    gemm_a_bt, adam).  Also writes the cumulative snapshot
+//!    gemm_a_bt, adam), the detected SIMD backend, and per-backend
+//!    ns/op for the `util::simd` primitives (axpy / dot / gemm_tile).
+//!    Also writes the cumulative snapshot
 //!    `bench_results/BENCH_backward.json` so the perf trajectory is
 //!    tracked from PR 3 on.
 //! 3. **dispatch** — persistent-pool `run_chunks` vs spawn-per-call
@@ -41,6 +43,7 @@ use cluster_gcn::norm::{normalize_sparse, NormCache, NormConfig};
 use cluster_gcn::partition::{parts_to_clusters, MultilevelPartitioner, Partitioner};
 use cluster_gcn::runtime::{Engine, Tensor};
 use cluster_gcn::util::pool::{self, scoped_chunks};
+use cluster_gcn::util::simd;
 use cluster_gcn::util::{bench, Json, Rng, Timer};
 
 /// Deterministic pseudo-random layer weights (Glorot-ish scale).
@@ -269,6 +272,64 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
     let (atb_blocks, atb_skipped) = cluster_gcn::runtime::backward::at_b_skip_stats();
     let skip_rate = atb_skipped as f64 / (atb_blocks.max(1)) as f64;
 
+    // ---- SIMD primitives: every detected backend vs portable ---------
+    // In-process A/B through `BackendHandle`s (the global dispatch table
+    // resolved once at pool startup; `CGCN_SIMD` only affects that).
+    let active = simd::active_backend();
+    let handles = simd::available_backends();
+    println!(
+        "simd backend: {active} (candidates: {})",
+        handles.iter().map(|h| h.name()).collect::<Vec<_>>().join(", ")
+    );
+    let vn = 1024usize; // axpy/dot at a hidden-layer row width
+    let xv: Vec<f32> = (0..vn).map(|_| krng.f32() - 0.5).collect();
+    let mut yv: Vec<f32> = (0..vn).map(|_| krng.f32() - 0.5).collect();
+    // one ROW_BLOCK × K_PANEL × COL_TILE panel — the shape the tiled
+    // GEMM drivers feed the micro-kernel
+    let (tr, tk, tc) = (64usize, 128usize, 64usize);
+    let pt: Vec<f32> = (0..tr * tk).map(|_| krng.f32() - 0.5).collect();
+    let wt: Vec<f32> = (0..tk * tc).map(|_| krng.f32() - 0.5).collect();
+    let mut ot = vec![0f32; tr * tc];
+    let mut simd_pairs: Vec<(String, Json)> =
+        vec![("simd_backend".to_string(), Json::str(active))];
+    let mut gemm_ns_portable = f64::NAN;
+    const INNER: usize = 256; // amortize the per-sample timer readout
+    for &h in &handles {
+        let axpy_s = bench(1, iters.max(3), || {
+            for _ in 0..INNER {
+                h.axpy(&mut yv, &xv, 1e-5);
+            }
+        });
+        let dot_s = bench(1, iters.max(3), || {
+            for _ in 0..INNER {
+                std::hint::black_box(h.dot(&yv, &xv));
+            }
+        });
+        let gemm_s = bench(1, iters.max(3), || {
+            ot.fill(0.0);
+            h.gemm_tile(&mut ot, tc, &pt, tk, 1, &wt, tc, tr, tk, tc);
+        });
+        let axpy_ns = axpy_s.mean * 1e9 / INNER as f64;
+        let dot_ns = dot_s.mean * 1e9 / INNER as f64;
+        let gemm_ns = gemm_s.mean * 1e9;
+        if h.name() == "portable" {
+            gemm_ns_portable = gemm_ns;
+        }
+        let speedup = gemm_ns_portable / gemm_ns;
+        println!(
+            "simd {:<8} axpy({vn}) {axpy_ns:8.1} ns | dot({vn}) {dot_ns:8.1} ns | \
+             gemm_tile({tr}x{tk}x{tc}) {gemm_ns:10.1} ns ({speedup:.2}x vs portable)",
+            h.name()
+        );
+        for (prim, v) in [("axpy", axpy_ns), ("dot", dot_ns), ("gemm_tile", gemm_ns)] {
+            simd_pairs.push((format!("{prim}_ns_{}", h.name()), Json::num(v)));
+        }
+        if h.name() != "portable" {
+            simd_pairs
+                .push((format!("gemm_tile_speedup_{}", h.name()), Json::num(speedup)));
+        }
+    }
+
     let ms = |s: f64| s * 1e3;
     println!("== backward engine: train step on one cluster batch ({n} nodes, hidden {hidden}) ==");
     println!(
@@ -300,25 +361,30 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
         ms(adam_pooled.mean),
     );
 
-    let row = Json::obj(vec![
-        ("kind", Json::str("host_backward")),
-        ("batch_nodes", Json::num(n as f64)),
-        ("hidden", Json::num(hidden as f64)),
-        ("threads", Json::num(threads as f64)),
-        ("step_scalar_ms", Json::num(ms(step_scalar.mean))),
-        ("step_pooled_1t_ms", Json::num(ms(step_pooled1.mean))),
-        ("step_pooled_ms", Json::num(ms(step_pooled.mean))),
-        ("speedup_pooled_vs_scalar", Json::num(step_scalar.mean / step_pooled.mean)),
-        ("gemm_at_b_scalar_ms", Json::num(ms(atb_scalar.mean))),
-        ("gemm_at_b_pooled_ms", Json::num(ms(atb_pooled.mean))),
-        ("scatter_adj_t_ms", Json::num(ms(scatter.mean))),
-        ("adj_t_gather_ms", Json::num(ms(gather.mean))),
-        ("gemm_a_bt_scalar_ms", Json::num(ms(abt_scalar.mean))),
-        ("gemm_a_bt_pooled_ms", Json::num(ms(abt_pooled.mean))),
-        ("adam_scalar_ms", Json::num(ms(adam_scalar.mean))),
-        ("adam_pooled_ms", Json::num(ms(adam_pooled.mean))),
-        ("at_b_skip_rate", Json::num(skip_rate)),
-    ]);
+    let mut pairs: Vec<(String, Json)> = vec![
+        ("kind".to_string(), Json::str("host_backward")),
+        ("batch_nodes".to_string(), Json::num(n as f64)),
+        ("hidden".to_string(), Json::num(hidden as f64)),
+        ("threads".to_string(), Json::num(threads as f64)),
+        ("step_scalar_ms".to_string(), Json::num(ms(step_scalar.mean))),
+        ("step_pooled_1t_ms".to_string(), Json::num(ms(step_pooled1.mean))),
+        ("step_pooled_ms".to_string(), Json::num(ms(step_pooled.mean))),
+        (
+            "speedup_pooled_vs_scalar".to_string(),
+            Json::num(step_scalar.mean / step_pooled.mean),
+        ),
+        ("gemm_at_b_scalar_ms".to_string(), Json::num(ms(atb_scalar.mean))),
+        ("gemm_at_b_pooled_ms".to_string(), Json::num(ms(atb_pooled.mean))),
+        ("scatter_adj_t_ms".to_string(), Json::num(ms(scatter.mean))),
+        ("adj_t_gather_ms".to_string(), Json::num(ms(gather.mean))),
+        ("gemm_a_bt_scalar_ms".to_string(), Json::num(ms(abt_scalar.mean))),
+        ("gemm_a_bt_pooled_ms".to_string(), Json::num(ms(abt_pooled.mean))),
+        ("adam_scalar_ms".to_string(), Json::num(ms(adam_scalar.mean))),
+        ("adam_pooled_ms".to_string(), Json::num(ms(adam_pooled.mean))),
+        ("at_b_skip_rate".to_string(), Json::num(skip_rate)),
+    ];
+    pairs.extend(simd_pairs);
+    let row = Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
     bs::dump_row("perf_probe", row.clone());
     // one-object snapshot tracked across PRs (overwritten per run)
     let _ = std::fs::create_dir_all("bench_results");

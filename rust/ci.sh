@@ -1,6 +1,17 @@
 #!/usr/bin/env bash
 # CI gate: style + lints + docs + the tier-1 verify from ROADMAP.md.
 # Run from anywhere inside the repo; requires the rust toolchain.
+#
+# Two tiers:
+#   fast (default)  — everything below except the CGCN_DEEP block; the
+#                     SIMD additions are the forced-portable FD-gradient
+#                     run and, on x86_64 with CGCN_SIMD unset, the
+#                     "dispatch must not be silently portable" gate.
+#   deep (CGCN_DEEP=1) — additionally re-runs the full test suite and
+#                     the golden trajectories under CGCN_SIMD=portable
+#                     (proves goldens are backend-independent), raises
+#                     the simd_parity random-case count, and runs a
+#                     larger-preset perf_probe.
 set -euo pipefail
 
 cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
@@ -24,6 +35,16 @@ cargo build --examples
 echo "== backward parity (pool widths 1/2/8 inside each test) + FD gradients, release =="
 cargo test --release -q backward
 cargo test --release -q grads_match
+
+echo "== SIMD gates: forced-portable FD gradients + dispatch sanity =="
+# the dispatched backend already ran above; this pins the portable
+# fallback's numerics through the same finite-difference harness
+CGCN_SIMD=portable cargo test --release -q grads_match
+cargo test --release -q --test simd_parity
+if [ "$(uname -m)" = "x86_64" ] && [ -z "${CGCN_SIMD:-}" ]; then
+  # an AVX2-capable host must not silently dispatch to portable
+  cargo test --release -q --test simd_parity -- --ignored
+fi
 
 echo "== shards parity gate (shards=1 bit-identical to HostBackend on a tiny SBM) =="
 cargo test --release -q --test driver sharded
@@ -53,5 +74,20 @@ fi
 
 echo "== backward bench smoke (release perf_probe on cora_like) =="
 CGCN_ITERS=1 cargo run --release --example perf_probe -- cora_like 2 20
+
+if [ "${CGCN_DEEP:-0}" = 1 ]; then
+  echo "== deep tier: full suite + goldens forced portable =="
+  # golden trajectories (and everything else) must be bit-identical
+  # under the portable fallback — the numeric contract that lets the
+  # SIMD backends evolve without re-blessing traces
+  CGCN_SIMD=portable cargo test --release -q
+  CGCN_SIMD=portable cargo test --release -q --test golden
+
+  echo "== deep tier: high-case-count SIMD parity sweep =="
+  CGCN_DEEP=1 cargo test --release -q --test simd_parity
+
+  echo "== deep tier: perf_probe on the larger preset =="
+  CGCN_ITERS=3 cargo run --release --example perf_probe -- ppi_like 3 30
+fi
 
 echo "CI gate passed."

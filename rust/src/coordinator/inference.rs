@@ -39,7 +39,7 @@ use crate::graph::{Csr, Dataset};
 use crate::norm::{NormCache, NormConfig};
 use crate::runtime::Tensor;
 use crate::util::pool::{self, default_threads};
-use crate::util::simd::axpy;
+use crate::util::simd::{self, axpy};
 
 /// Rows of Â propagated and multiplied per tile.
 pub const ROW_BLOCK: usize = 64;
@@ -170,7 +170,8 @@ fn spmm_block(
         }
 
         // ---- Z[nb, wg] = P · W, tiled so the active W panel
-        // (K_PANEL × COL_TILE) stays hot across all nb rows ------------
+        // (K_PANEL × COL_TILE) stays hot across all nb rows; each tile
+        // runs on the dispatched register-blocked micro-kernel ---------
         let ob = (rb - rows.start) * wg;
         let out_block = &mut out_rows[ob..ob + nb * wg];
         out_block.fill(0.0);
@@ -180,17 +181,18 @@ fn spmm_block(
             let mut ct = 0;
             while ct < wg {
                 let cn = COL_TILE.min(wg - ct);
-                for ri in 0..nb {
-                    let pr = &prop[ri * f + kp..ri * f + kp + kn];
-                    let or = &mut out_block[ri * wg + ct..ri * wg + ct + cn];
-                    for (k, &p) in pr.iter().enumerate() {
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let wo = (kp + k) * wg + ct;
-                        axpy(or, &w[wo..wo + cn], p);
-                    }
-                }
+                simd::gemm_tile(
+                    &mut out_block[ct..],
+                    wg,
+                    &prop[kp..],
+                    f,
+                    1,
+                    &w[kp * wg + ct..],
+                    wg,
+                    nb,
+                    kn,
+                    cn,
+                );
                 ct += cn;
             }
             kp += kn;

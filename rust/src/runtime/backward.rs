@@ -21,8 +21,10 @@
 //!   layout is a pure function of the problem size and the requested
 //!   chunk count, never of worker scheduling, so results are
 //!   deterministic and identical at every pool width.
-//! - Inner loops run through the `[f32; 8]`-chunked `util::simd`
-//!   helpers so the compiler autovectorizes them.
+//! - Inner loops run through the runtime-dispatched `util::simd`
+//!   kernels (explicit AVX2/NEON with a portable chunked-lane
+//!   fallback); the GEMM tiles call the register-blocked
+//!   `simd::gemm_tile` micro-kernel.
 //! - The scalar single-thread originals are **kept** ([`gemm`],
 //!   [`gemm_at_b`], [`gemm_a_bt`], [`scatter_adj_t`], [`adam_update`])
 //!   as property-test oracles and as the pre-engine baseline for the
@@ -49,7 +51,7 @@
 use crate::coordinator::inference::{COL_TILE, K_PANEL, ROW_BLOCK};
 use crate::runtime::exec::Tensor;
 use crate::util::pool;
-use crate::util::simd::{axpy, dot};
+use crate::util::simd::{self, axpy, dot};
 
 /// Adam β1 (first-moment decay), matching `python/compile/model.py`.
 pub const ADAM_B1: f32 = 0.9;
@@ -223,18 +225,18 @@ pub fn gemm_pooled(
                 let mut ct = 0;
                 while ct < g {
                     let cn = COL_TILE.min(g - ct);
-                    for ri in 0..nb {
-                        let row = (rb + ri) * f;
-                        let pr = &p[row + kp..row + kp + kn];
-                        let or = &mut out_block[ri * g + ct..ri * g + ct + cn];
-                        for (k, &pv) in pr.iter().enumerate() {
-                            if pv == 0.0 {
-                                continue;
-                            }
-                            let wo = (kp + k) * g + ct;
-                            axpy(or, &w[wo..wo + cn], pv);
-                        }
-                    }
+                    simd::gemm_tile(
+                        &mut out_block[ct..],
+                        g,
+                        &p[rb * f + kp..],
+                        f,
+                        1,
+                        &w[kp * g + ct..],
+                        g,
+                        nb,
+                        kn,
+                        cn,
+                    );
                     ct += cn;
                 }
                 kp += kn;
@@ -274,17 +276,23 @@ pub fn gemm_at_b_pooled(
         let mut kb = krange.start;
         while kb < krange.end {
             let kn = K_BLOCK.min(krange.end - kb);
-            for i in 0..n {
-                let pr = &p[i * f + kb..i * f + kb + kn];
-                let dzr = &dz[i * g..(i + 1) * g];
-                for (k, &pv) in pr.iter().enumerate() {
-                    if pv == 0.0 {
-                        continue;
-                    }
-                    let go = (kb - krange.start + k) * g;
-                    axpy(&mut gw_rows[go..go + g], dzr, pv);
-                }
-            }
+            // rows = the kn gradient rows of this panel, contraction
+            // over the n batch rows: p is read k-strided (`pks = f`) as
+            // p[i*f + kb + k], so no transpose is materialized and the
+            // per-element accumulation stays ascending-i with the
+            // oracle's zero-skip.
+            simd::gemm_tile(
+                &mut gw_rows[(kb - krange.start) * g..],
+                g,
+                &p[kb..],
+                1,
+                f,
+                dz,
+                g,
+                kn,
+                n,
+                g,
+            );
             kb += kn;
         }
     });
@@ -402,23 +410,29 @@ pub fn gemm_at_b_masked_pooled(
         let mut kb = krange.start;
         while kb < krange.end {
             let kn = K_BLOCK.min(krange.end - kb);
-            for i in 0..n {
-                let pr = &p[i * f + kb..i * f + kb + kn];
-                let dzr = &dz[i * g..(i + 1) * g];
-                for (k, &pv) in pr.iter().enumerate() {
-                    if pv == 0.0 {
-                        continue;
-                    }
-                    let go = (kb - krange.start + k) * g;
-                    for (b, &alive) in col_live.iter().enumerate() {
-                        if !alive {
-                            continue;
-                        }
-                        let lo = b * AT_B_COL_BLOCK;
-                        let hi = (lo + AT_B_COL_BLOCK).min(g);
-                        axpy(&mut gw_rows[go + lo..go + hi], &dzr[lo..hi], pv);
-                    }
+            // One k-strided micro-kernel call per live column block
+            // (AT_B_COL_BLOCK = 8 matches the kernel's column
+            // blocking); per output element the accumulation order is
+            // unchanged (ascending i, zero-skip), so hoisting the block
+            // loop outside the i loop keeps bit-identity.
+            for (b, &alive) in col_live.iter().enumerate() {
+                if !alive {
+                    continue;
                 }
+                let lo = b * AT_B_COL_BLOCK;
+                let hi = (lo + AT_B_COL_BLOCK).min(g);
+                simd::gemm_tile(
+                    &mut gw_rows[(kb - krange.start) * g + lo..],
+                    g,
+                    &p[kb..],
+                    1,
+                    f,
+                    &dz[lo..],
+                    g,
+                    kn,
+                    n,
+                    hi - lo,
+                );
             }
             kb += kn;
         }

@@ -54,7 +54,8 @@ use crate::graph::Task;
 use crate::runtime::backend::{Backend, ModelSpec, VrgcnBatch};
 use crate::runtime::backward::{
     adam_update_pooled, dz_col_block_mask, gemm, gemm_a_bt, gemm_a_bt_pooled, gemm_at_b,
-    gemm_at_b_masked_pooled, gemm_at_b_pooled, gemm_pooled, scatter_adj_t, BackwardWorkspace,
+    gemm_at_b_masked_pooled, gemm_at_b_pooled, gemm_pooled, scatter_adj_t, AdjT,
+    BackwardWorkspace,
 };
 use crate::runtime::exec::Tensor;
 use crate::util::pool::{self, default_threads};
@@ -307,7 +308,61 @@ fn host_grads_pooled(
     let l = weights.len();
     ws.prepare(weights, n);
 
-    // ---- forward, storing P_l and Z_l for the backward --------------
+    // ---- forward + loss, overlapped with the Âᵀ transpose build -----
+    // The backward needs `ws.adj_t` only when l > 1, and its serial
+    // counting-sort build was the last single-thread seam in the step:
+    // run it on `pipeline`'s producer thread while the pooled forward
+    // dispatches from this thread.  The build output is a pure function
+    // of the block (no shared float state with the forward), so the
+    // overlap cannot change any bit of the step — pinned by
+    // `overlapped_step_matches_serial_bitwise`.
+    let loss = if l > 1 {
+        let adj_t = std::mem::take(&mut ws.adj_t);
+        let mut loss = None;
+        let (spare, built) = pool::pipeline(
+            2,
+            AdjT::new(),
+            adj_t,
+            |i, buf: &mut AdjT| {
+                // item 0 is a no-op spare so the build (item 1) runs
+                // concurrently with consume(0) = the forward below.
+                if i == 1 {
+                    buf.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+                }
+            },
+            |i, _| {
+                if i == 0 {
+                    loss = Some(forward_and_loss(spec, weights, batch, threads, ws));
+                }
+                true
+            },
+        );
+        drop(spare); // empty AdjT — no allocation to keep
+        ws.adj_t = built;
+        loss.expect("pipeline consumed item 0")
+    } else {
+        forward_and_loss(spec, weights, batch, threads, ws)
+    };
+
+    // ---- backward sweep on the pooled engine ------------------------
+    backward_sweep(weights, n, spec.residual, threads, ws);
+    Ok(loss)
+}
+
+/// The forward pass (storing `P_l` and `Z_l` for the backward) plus the
+/// masked loss + `dL/dlogits` into the `dh` ping buffer.  Split out of
+/// [`host_grads_pooled`] so it can run as the consumer half of the
+/// transpose-build overlap; `ws.adj_t` is never touched here.
+fn forward_and_loss(
+    spec: &ModelSpec,
+    weights: &[Tensor],
+    batch: &Batch,
+    threads: usize,
+    ws: &mut BackwardWorkspace,
+) -> f32 {
+    let n = batch.n_real;
+    let blk = &batch.block;
+    let l = weights.len();
     ws.cur[..n * spec.f_in].copy_from_slice(&batch.x.data[..n * spec.f_in]);
     let mut f = spec.f_in;
     for (li, w) in weights.iter().enumerate() {
@@ -338,26 +393,16 @@ fn host_grads_pooled(
         f = g_dim;
     }
 
-    // ---- masked loss + dL/dlogits into the dh ping buffer -----------
-    let loss = {
-        let logits = &ws.zs[l - 1];
-        loss_and_dlogits_into(
-            spec.task,
-            &logits[..n * spec.classes],
-            &batch.y.data,
-            &batch.mask.data,
-            n,
-            spec.classes,
-            &mut ws.dh,
-        )
-    };
-
-    // ---- backward sweep on the pooled engine ------------------------
-    if l > 1 {
-        ws.adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
-    }
-    backward_sweep(weights, n, spec.residual, threads, ws);
-    Ok(loss)
+    let logits = &ws.zs[l - 1];
+    loss_and_dlogits_into(
+        spec.task,
+        &logits[..n * spec.classes],
+        &batch.y.data,
+        &batch.mask.data,
+        n,
+        spec.classes,
+        &mut ws.dh,
+    )
 }
 
 /// The layer activation shared by both forward paths: `nxt =
@@ -1158,6 +1203,49 @@ mod tests {
                             "layer {li} entry {e} t={threads}: {a} vs {b}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    /// The transpose-build/forward overlap inside [`host_grads_pooled`]
+    /// must not change a single bit of the step: same loss and same
+    /// gradients as running the identical pieces strictly serially
+    /// (forward+loss, then the Âᵀ build, then the backward sweep).
+    #[test]
+    fn overlapped_step_matches_serial_bitwise() {
+        for residual in [false, true] {
+            let ds = tiny_ds(Task::Multiclass);
+            let mut spec = ModelSpec::gcn(Task::Multiclass, 3, 3, 3, 2, 8);
+            if residual {
+                spec = spec.with_residual();
+            }
+            let batch = full_batch(&ds, 8, NormConfig::PAPER_DEFAULT);
+            let weights = rand_weights(&spec, 33);
+
+            let mut ws = BackwardWorkspace::new();
+            let loss =
+                host_grads_pooled(&spec, &weights, &batch, 2, &mut ws).unwrap();
+            let grads: Vec<Vec<f32>> =
+                ws.grad_layers().iter().map(|s| s.to_vec()).collect();
+
+            let mut ws2 = BackwardWorkspace::new();
+            ws2.prepare(&weights, batch.n_real);
+            let loss2 = forward_and_loss(&spec, &weights, &batch, 2, &mut ws2);
+            let blk = &batch.block;
+            ws2.adj_t.build(&blk.offsets, &blk.cols, &blk.vals, &blk.self_loop);
+            backward_sweep(&weights, batch.n_real, spec.residual, 2, &mut ws2);
+            let grads2: Vec<Vec<f32>> =
+                ws2.grad_layers().iter().map(|s| s.to_vec()).collect();
+
+            assert_eq!(loss.to_bits(), loss2.to_bits(), "residual={residual}");
+            for (li, (a, b)) in grads.iter().zip(&grads2).enumerate() {
+                for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "layer {li} entry {e} residual={residual}"
+                    );
                 }
             }
         }

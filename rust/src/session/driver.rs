@@ -240,6 +240,12 @@ impl<'a> Driver<'a> {
         &self.spec
     }
 
+    /// The configuration this run was built from (what
+    /// [`super::Session::run`] consults for checkpoint cadence).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
     /// Name of the executing backend (`"host"`, `"pjrt"`, `"sharded"`;
     /// a prefetch wrapper forwards its inner backend's name).
     pub fn backend_name(&self) -> &'static str {

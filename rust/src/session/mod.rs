@@ -147,6 +147,12 @@ pub struct TrainConfig {
     /// streams are pure functions of `(seed, epoch)`, so a resumed run
     /// replays exactly what the uninterrupted run would have done.
     pub start_epoch: usize,
+    /// save a versioned (`CGCNCKP2`) checkpoint every k epochs when the
+    /// session has a save path (0 = final-only).  Each periodic save
+    /// overwrites the same path and emits [`Event::CheckpointSaved`];
+    /// resuming from an intermediate checkpoint replays the
+    /// uninterrupted run bitwise (see `start_epoch`).
+    pub checkpoint_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -166,6 +172,7 @@ impl Default for TrainConfig {
             norm: NormConfig::PAPER_DEFAULT,
             eval: EvalStrategy::ExactFullGraph,
             start_epoch: 0,
+            checkpoint_every: 0,
         }
     }
 }
@@ -482,37 +489,65 @@ impl<'a> Session<'a> {
     }
 
     /// Run the session to completion: build the [`Driver`], drain every
-    /// event into the attached observer, optionally checkpoint (the
-    /// checkpoint is written — and [`Event::CheckpointSaved`] emitted —
-    /// just before [`Event::Done`], which stays the final event).
-    /// Every session checkpoint is the versioned `CGCNCKP2` format, so
-    /// it records the epoch it was saved at (what `--resume` continues
-    /// from); VR-GCN runs additionally carry their historical-activation
-    /// store, making their resume a bitwise replay too.  Equivalent to
-    /// driving the loop by hand — this is now a convenience, not the
-    /// loop's owner.
+    /// event into the attached observer, optionally checkpoint.  With a
+    /// save path, the final checkpoint is written — and
+    /// [`Event::CheckpointSaved`] emitted — just before [`Event::Done`],
+    /// which stays the final event; with
+    /// [`TrainConfig::checkpoint_every`] = k > 0, the same path is
+    /// additionally overwritten right after every k-th
+    /// [`Event::EpochEnd`] (the final save is skipped when a periodic
+    /// save already captured the last epoch).  Every session checkpoint
+    /// is the versioned `CGCNCKP2` format, so it records the epoch it
+    /// was saved at (what `--resume` continues from); VR-GCN runs
+    /// additionally carry their historical-activation store, making
+    /// their resume a bitwise replay too.  Equivalent to driving the
+    /// loop by hand — this is now a convenience, not the loop's owner.
     pub fn run(self) -> Result<SessionResult> {
-        let (mut driver, observer, mut save) = self.into_driver_parts()?;
+        let (mut driver, observer, save) = self.into_driver_parts()?;
         let mut null = NullObserver;
         let obs: &mut dyn Observer = match observer {
             Some(o) => o,
             None => &mut null,
         };
+        let every = driver.config().checkpoint_every;
+        let mut saved_at: Option<usize> = None;
         while let Some(ev) = driver.next_event()? {
             if matches!(ev, Event::Done { .. }) {
-                if let Some(path) = save.take() {
+                if let Some(path) = &save {
+                    // skip when a periodic save already captured this
+                    // exact epoch (no state change since EpochEnd)
+                    if saved_at != Some(driver.epoch()) {
+                        let history = driver.history_section();
+                        checkpoint::save_v2(
+                            driver.state(),
+                            driver.model(),
+                            driver.epoch(),
+                            history.as_ref(),
+                            path,
+                        )?;
+                        obs.on_event(&Event::CheckpointSaved { path: path.clone() });
+                    }
+                }
+            }
+            let epoch_end = match &ev {
+                Event::EpochEnd { epoch, .. } => Some(*epoch),
+                _ => None,
+            };
+            obs.on_event(&ev);
+            if let (Some(epoch), Some(path)) = (epoch_end, &save) {
+                if every > 0 && epoch % every == 0 {
                     let history = driver.history_section();
                     checkpoint::save_v2(
                         driver.state(),
                         driver.model(),
-                        driver.epoch(),
+                        epoch,
                         history.as_ref(),
-                        &path,
+                        path,
                     )?;
-                    obs.on_event(&Event::CheckpointSaved { path });
+                    saved_at = Some(epoch);
+                    obs.on_event(&Event::CheckpointSaved { path: path.clone() });
                 }
             }
-            obs.on_event(&ev);
         }
         let model = driver.model().to_string();
         let backend = driver.backend_name().to_string();

@@ -60,8 +60,11 @@ pub enum Event {
         /// best eval metric seen before stopping.
         best: f64,
     },
-    /// A checkpoint was written (emitted by [`super::Session::run`]
-    /// just before [`Event::Done`], which stays the final event).
+    /// A checkpoint was written (emitted by [`super::Session::run`]:
+    /// with `TrainConfig::checkpoint_every` = k > 0, right after every
+    /// k-th [`Event::EpochEnd`]; always just before [`Event::Done`] for
+    /// the final state unless a periodic save already captured that
+    /// epoch.  [`Event::Done`] stays the final event).
     CheckpointSaved {
         /// destination file.
         path: PathBuf,

@@ -1,6 +1,7 @@
 //! Shared substrates: deterministic PRNG, minimal JSON, stats/benching,
-//! and a tiny thread pool (tokio/rand/serde/criterion are unavailable in
-//! the offline build — DESIGN.md §7).
+//! a tiny thread pool, and the runtime-dispatched SIMD kernels
+//! (tokio/rand/serde/criterion are unavailable in the offline build —
+//! DESIGN.md §7).
 
 pub mod json;
 pub mod pool;

@@ -320,7 +320,13 @@ unsafe impl<T> Sync for SendPtr<T> {}
 /// first use and kept for the process lifetime.
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(|| WorkerPool::new(default_threads()))
+    POOL.get_or_init(|| {
+        // Resolve the SIMD dispatch table alongside pool startup so the
+        // one-time feature detection + env read never lands inside a
+        // timed kernel (kernels would otherwise resolve it lazily).
+        crate::util::simd::init();
+        WorkerPool::new(default_threads())
+    })
 }
 
 /// Run `f(chunk_index, item_range)` over `n` items split into at most

@@ -1,0 +1,130 @@
+//! One-time runtime backend selection: a function-pointer [`Table`] per
+//! backend, detected candidates, and the process-wide active table
+//! cached in a [`OnceLock`].
+//!
+//! Selection rules (documented in PERF.md "SIMD backends & dispatch"):
+//!
+//! - `CGCN_SIMD=<name>` forces a backend by name; an unknown or
+//!   unsupported name falls back to `portable` (never a panic — a
+//!   trace recorded on an AVX-512 box must still replay on a laptop).
+//! - With no override, the **last bit-stable candidate** wins: portable
+//!   → avx2 on an AVX2 x86 host → neon on aarch64.  The default never
+//!   auto-selects FMA: the golden-trace suite asserts bitwise equality
+//!   across backends, and fused multiply-adds change result bits.
+//!   `CGCN_SIMD=fma` is an explicit opt-in with tolerance-only
+//!   contracts.
+//! - The table is resolved once per process (first use or
+//!   [`super::init`]) and cannot change afterwards; per-backend A/B
+//!   within one process goes through [`super::BackendHandle`] instead
+//!   of the env override.
+
+use std::sync::OnceLock;
+
+use super::portable;
+
+/// Function-pointer table for one backend.  All entries share the
+/// portable kernels' signatures and bounds contracts; `bit_stable`
+/// records whether every kernel is bit-identical to portable (false
+/// only for fused/reordered paths like FMA).
+pub struct Table {
+    /// Backend name as accepted by `CGCN_SIMD` and reported by
+    /// [`super::active_backend`].
+    pub name: &'static str,
+    /// Whether every kernel in this table is bit-identical to the
+    /// portable oracle (FMA fuses rounding, so it is not).
+    pub bit_stable: bool,
+    /// `y[i] += a * x[i]` (equal lengths, caller-checked).
+    pub axpy: fn(&mut [f32], &[f32], f32),
+    /// 8-lane dot product (equal lengths, caller-checked).
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// Accumulating GEMM tile; see [`portable::gemm_tile`] for the
+    /// layout parameters.
+    pub gemm_tile: fn(&mut [f32], usize, &[f32], usize, usize, &[f32], usize, usize, usize, usize),
+}
+
+/// The always-available fallback and parity oracle.
+pub static PORTABLE: Table = Table {
+    name: "portable",
+    bit_stable: true,
+    axpy: portable::axpy,
+    dot: portable::dot,
+    gemm_tile: portable::gemm_tile,
+};
+
+/// All backends usable on this host, detection-ordered: `portable`
+/// first, then specialized tables from least to most aggressive.  The
+/// default pick is the last **bit-stable** entry.
+pub fn candidates() -> Vec<&'static Table> {
+    #[allow(unused_mut)]
+    let mut tables: Vec<&'static Table> = vec![&PORTABLE];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            tables.push(&super::x86::AVX2);
+            if std::arch::is_x86_feature_detected!("fma") {
+                tables.push(&super::x86::FMA);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is a mandatory feature of aarch64 — no detection needed.
+        tables.push(&super::neon::NEON);
+    }
+    tables
+}
+
+/// Resolve the table for an optional forced name: exact match among
+/// detected candidates, else the default (last bit-stable candidate).
+fn select(force: Option<&str>) -> &'static Table {
+    let tables = candidates();
+    if let Some(name) = force {
+        if let Some(t) = tables.iter().find(|t| t.name == name) {
+            return t;
+        }
+        return &PORTABLE;
+    }
+    tables
+        .iter()
+        .rev()
+        .find(|t| t.bit_stable)
+        .copied()
+        .unwrap_or(&PORTABLE)
+}
+
+/// The process-wide active table; `CGCN_SIMD` is read exactly once, on
+/// the first call (normally pool startup via [`super::init`]).
+pub fn active() -> &'static Table {
+    static ACTIVE: OnceLock<&'static Table> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let force = std::env::var("CGCN_SIMD").ok();
+        select(force.as_deref())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_is_always_a_candidate() {
+        let names: Vec<&str> = candidates().iter().map(|t| t.name).collect();
+        assert_eq!(names[0], "portable");
+    }
+
+    #[test]
+    fn forced_unknown_name_falls_back_to_portable() {
+        assert_eq!(select(Some("avx512-unicorn")).name, "portable");
+        assert_eq!(select(Some("portable")).name, "portable");
+    }
+
+    #[test]
+    fn default_selection_is_bit_stable() {
+        assert!(select(None).bit_stable, "default must never pick FMA");
+    }
+
+    #[test]
+    fn active_is_stable_across_calls() {
+        assert!(std::ptr::eq(active(), active()));
+    }
+}

@@ -1,0 +1,349 @@
+//! Runtime-dispatched f32 inner-loop kernels shared by the forward
+//! GEMM tile (`coordinator::inference`) and the backward kernels
+//! (`runtime::backward`).
+//!
+//! Three primitives — [`axpy`], [`dot`], and the register-blocked
+//! accumulating [`gemm_tile`] — each backed by per-architecture
+//! implementations selected **once per process**:
+//!
+//! | backend    | arch      | selected when                  | bit-identical to portable |
+//! |------------|-----------|--------------------------------|---------------------------|
+//! | `portable` | any       | fallback / `CGCN_SIMD=portable`| (is the oracle)           |
+//! | `avx2`     | x86_64    | AVX2 detected (default)        | yes                       |
+//! | `fma`      | x86_64    | `CGCN_SIMD=fma` only           | no (fused rounding)       |
+//! | `neon`     | aarch64   | always (mandatory feature)     | yes                       |
+//!
+//! The default pick is the most aggressive **bit-stable** backend, so
+//! golden traces recorded under any default configuration replay
+//! bitwise everywhere; `CGCN_SIMD=fma` opts into fused multiply-adds
+//! with tolerance-only contracts.  The `CGCN_SIMD` env var is read
+//! exactly once (first kernel call, or [`init`] from pool startup) —
+//! per-backend A/B inside one process goes through [`BackendHandle`]
+//! instead (see `tests/simd_parity.rs` and `examples/perf_probe.rs`).
+//!
+//! Numeric contracts (pinned by the parity suite):
+//!
+//! - [`axpy`] and [`gemm_tile`] compute each output element with
+//!   ascending-index mul-then-add accumulation, so every bit-stable
+//!   backend is bit-identical to the scalar oracles.
+//! - [`dot`] accumulates 8 independent lanes reduced in a fixed order:
+//!   deterministic at every call site and bit-identical across
+//!   bit-stable backends, but *reassociated* relative to a sequential
+//!   scalar sum — scalar-oracle parity uses a small tolerance.
+#![deny(missing_docs)]
+
+mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+pub mod portable;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use dispatch::Table;
+
+/// `y[i] += a * x[i]` over the common prefix via the active backend.
+///
+/// `x` and `y` must be the same length (debug-asserted); each element
+/// is updated independently, so the result is bit-identical to the
+/// naive scalar loop on every bit-stable backend.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    (dispatch::active().axpy)(y, x, a)
+}
+
+/// Dot product via the active backend: 8 lane accumulators reduced in
+/// a fixed order.  Deterministic, but reassociated relative to a
+/// sequential scalar sum (see module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    (dispatch::active().dot)(a, b)
+}
+
+/// Accumulating GEMM tile via the active backend:
+/// `out[r][c] += Σ_k p(r, k) · w[k][c]` for `r < rows`, `c < cols`,
+/// `k < kn`, where `out` has row stride `ldo`, `w` has row stride
+/// `ldw`, and `p` is read as `p[r * ldp + k * pks]` — the k-stride
+/// `pks` lets the same kernel compute `P·W` (`ldp = f`, `pks = 1`) and
+/// `Pᵀ·W` (`ldp = 1`, `pks = f`) without materializing a transpose.
+///
+/// Accumulation per output element is ascending-k with a `p == 0.0`
+/// skip (which also preserves signed zeros in `out`), matching the
+/// scalar tile loops this replaced — bit-identical on every bit-stable
+/// backend.
+///
+/// Panics if any slice is too short for the requested shape.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tile(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    if rows == 0 || kn == 0 || cols == 0 {
+        return;
+    }
+    assert_gemm_bounds(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols);
+    (dispatch::active().gemm_tile)(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assert_gemm_bounds(
+    out: &[f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    // Highest index touched in each operand (rows/kn/cols > 0 here).
+    assert!(
+        out.len() >= (rows - 1) * ldo + cols,
+        "gemm_tile: out too short ({} < {})",
+        out.len(),
+        (rows - 1) * ldo + cols
+    );
+    assert!(
+        p.len() >= (rows - 1) * ldp + (kn - 1) * pks + 1,
+        "gemm_tile: p too short ({} < {})",
+        p.len(),
+        (rows - 1) * ldp + (kn - 1) * pks + 1
+    );
+    assert!(
+        w.len() >= (kn - 1) * ldw + cols,
+        "gemm_tile: w too short ({} < {})",
+        w.len(),
+        (kn - 1) * ldw + cols
+    );
+}
+
+/// Name of the backend the process dispatches to (`portable`, `avx2`,
+/// `fma`, or `neon`).  Resolves the dispatch table if not yet resolved.
+pub fn active_backend() -> &'static str {
+    dispatch::active().name
+}
+
+/// Force dispatch-table resolution now (reads `CGCN_SIMD` once).
+/// Called from `util::pool::global()` startup so the selection cost and
+/// the env read never land inside a timed kernel.
+pub fn init() {
+    let _ = dispatch::active();
+}
+
+/// A handle on one detected backend, for in-process A/B comparison
+/// (parity suites, per-backend benchmarks) — the global dispatch table
+/// resolves once per process and cannot be switched afterwards, so
+/// comparing backends goes through handles instead of `CGCN_SIMD`.
+#[derive(Clone, Copy)]
+pub struct BackendHandle(&'static Table);
+
+impl BackendHandle {
+    /// Backend name (`portable`, `avx2`, `fma`, `neon`).
+    pub fn name(self) -> &'static str {
+        self.0.name
+    }
+
+    /// Whether every kernel is bit-identical to the portable oracle.
+    pub fn bit_stable(self) -> bool {
+        self.0.bit_stable
+    }
+
+    /// This backend's [`axpy`].
+    pub fn axpy(self, y: &mut [f32], x: &[f32], a: f32) {
+        debug_assert_eq!(y.len(), x.len());
+        (self.0.axpy)(y, x, a)
+    }
+
+    /// This backend's [`dot`].
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        (self.0.dot)(a, b)
+    }
+
+    /// This backend's [`gemm_tile`] (same bounds panics).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_tile(
+        self,
+        out: &mut [f32],
+        ldo: usize,
+        p: &[f32],
+        ldp: usize,
+        pks: usize,
+        w: &[f32],
+        ldw: usize,
+        rows: usize,
+        kn: usize,
+        cols: usize,
+    ) {
+        if rows == 0 || kn == 0 || cols == 0 {
+            return;
+        }
+        assert_gemm_bounds(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols);
+        (self.0.gemm_tile)(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols)
+    }
+}
+
+/// Handles on every backend usable on this host, detection-ordered
+/// (`portable` always first).
+pub fn available_backends() -> Vec<BackendHandle> {
+    dispatch::candidates().into_iter().map(BackendHandle).collect()
+}
+
+/// Handle on one detected backend by name, if usable on this host.
+pub fn backend(name: &str) -> Option<BackendHandle> {
+    dispatch::candidates()
+        .into_iter()
+        .find(|t| t.name == name)
+        .map(BackendHandle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 16, 33] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 0.37).collect();
+            let mut y: Vec<f32> = (0..n).map(|i| (i as f32) * 0.11 - 1.0).collect();
+            let mut expect = y.clone();
+            let a = 0.73f32;
+            for (e, &xv) in expect.iter_mut().zip(&x) {
+                *e += a * xv;
+            }
+            axpy(&mut y, &x, a);
+            for (got, want) in y.iter().zip(&expect) {
+                assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_close_to_scalar() {
+        for n in [0usize, 1, 5, 8, 13, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.1).collect();
+            let b: Vec<f32> = (0..n).map(|i| ((i * 3 % 13) as f32 - 6.0) * 0.2).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!(
+                (got - scalar).abs() <= 1e-5 * scalar.abs().max(1.0),
+                "n={n}: {got} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_deterministic() {
+        let a: Vec<f32> = (0..97).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..97).map(|i| (i as f32).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+    }
+
+    /// The dispatched gemm_tile must match the naive ascending-k scalar
+    /// loop bitwise — the active backend is always bit-stable unless
+    /// the test runner forced `CGCN_SIMD=fma`, in which case skip.
+    #[test]
+    fn gemm_tile_matches_naive_bitwise() {
+        if active_backend() == "fma" {
+            return;
+        }
+        // shapes straddling the 8×8 blocking in every dimension
+        for &(rows, kn, cols) in
+            &[(1usize, 1usize, 1usize), (8, 8, 8), (9, 5, 17), (16, 3, 8), (7, 9, 23), (20, 16, 40)]
+        {
+            let ldo = cols + 3;
+            let ldp = kn + 1;
+            let ldw = cols + 2;
+            let p: Vec<f32> = (0..rows * ldp)
+                .map(|i| if i % 5 == 0 { 0.0 } else { (i as f32).sin() })
+                .collect();
+            let w: Vec<f32> = (0..kn * ldw).map(|i| (i as f32 * 0.31).cos()).collect();
+            let base: Vec<f32> = (0..rows * ldo).map(|i| (i as f32) * 0.01 - 0.6).collect();
+            let mut got = base.clone();
+            gemm_tile(&mut got, ldo, &p, ldp, 1, &w, ldw, rows, kn, cols);
+            let mut want = base.clone();
+            for r in 0..rows {
+                for k in 0..kn {
+                    let pv = p[r * ldp + k];
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    for c in 0..cols {
+                        want[r * ldo + c] += pv * w[k * ldw + c];
+                    }
+                }
+            }
+            for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), e.to_bits(), "({rows},{kn},{cols}) idx {i}");
+            }
+        }
+    }
+
+    /// The pks stride computes Pᵀ·W bitwise-equal to materializing the
+    /// transpose and using pks = 1.
+    #[test]
+    fn gemm_tile_k_stride_matches_transposed() {
+        let (n, f, g) = (13usize, 9usize, 17usize);
+        // p is n×f row-major; compute out = pᵀ·w  (f×g) two ways.
+        let p: Vec<f32> = (0..n * f)
+            .map(|i| if i % 4 == 0 { 0.0 } else { (i as f32 * 0.7).sin() })
+            .collect();
+        let w: Vec<f32> = (0..n * g).map(|i| (i as f32 * 0.13).cos()).collect();
+        let mut strided = vec![0.1f32; f * g];
+        let direct_base = strided.clone();
+        // rows = f, contraction over the n dimension: p[r + k*f]
+        gemm_tile(&mut strided, g, &p, 1, f, &w, g, f, n, g);
+        let mut pt = vec![0f32; f * n];
+        for i in 0..n {
+            for j in 0..f {
+                pt[j * n + i] = p[i * f + j];
+            }
+        }
+        let mut direct = direct_base;
+        gemm_tile(&mut direct, g, &pt, n, 1, &w, g, f, n, g);
+        for (a, b) in strided.iter().zip(&direct) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn gemm_tile_zero_dims_are_noops() {
+        let mut out = [1.0f32, 2.0];
+        gemm_tile(&mut out, 2, &[], 0, 1, &[], 0, 0, 0, 0);
+        gemm_tile(&mut out, 2, &[1.0], 1, 1, &[1.0, 1.0], 2, 1, 1, 0);
+        assert_eq!(out, [1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out too short")]
+    fn gemm_tile_bounds_checked() {
+        let mut out = [0f32; 3];
+        gemm_tile(&mut out, 2, &[1.0, 1.0], 1, 1, &[1.0, 1.0], 2, 2, 1, 2);
+    }
+
+    #[test]
+    fn handles_cover_portable_and_active() {
+        let names: Vec<&str> = available_backends().iter().map(|h| h.name()).collect();
+        assert!(names.contains(&"portable"));
+        assert!(
+            names.contains(&active_backend()),
+            "active {} not in {names:?}",
+            active_backend()
+        );
+        let h = backend("portable").unwrap();
+        assert!(h.bit_stable());
+        assert!(backend("no-such-backend").is_none());
+    }
+}

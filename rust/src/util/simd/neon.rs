@@ -1,0 +1,153 @@
+//! NEON kernels for aarch64 (`core::arch::aarch64`).
+//!
+//! Compiles on aarch64 but is **not exercised by CI** (the CI hosts are
+//! x86_64); the parity suite will cover it the first time the tests run
+//! on an ARM box.  NEON is a mandatory aarch64 feature, so
+//! `candidates()` includes this table unconditionally there.
+//!
+//! Numeric contract: bit-identical to portable.  Every multiply-add is
+//! an explicit `vmulq_f32` + `vaddq_f32` pair — deliberately *not*
+//! `vfmaq_f32`/`vmlaq_f32`, which may fuse — and `dot` emulates
+//! portable's 8-lane accumulator structure with two 4-lane registers
+//! advanced 8 elements per iteration, reduced in portable's exact
+//! order.
+
+#![cfg(target_arch = "aarch64")]
+
+use super::dispatch::Table;
+
+/// NEON: bit-identical to portable (non-fused multiply-adds).
+pub static NEON: Table = Table {
+    name: "neon",
+    bit_stable: true,
+    axpy: axpy_neon_safe,
+    dot: dot_neon_safe,
+    gemm_tile: gemm_tile_neon_safe,
+};
+
+fn axpy_neon_safe(y: &mut [f32], x: &[f32], a: f32) {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { axpy_neon(y, x, a) }
+}
+
+fn dot_neon_safe(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { dot_neon(a, b) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tile_neon_safe(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    // SAFETY: NEON is a mandatory aarch64 feature; slice bounds are
+    // asserted by the public wrapper in `super`.
+    unsafe { gemm_tile_neon(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols) }
+}
+
+/// # Safety
+/// Requires NEON (always present on aarch64). `y.len() == x.len()`.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(y: &mut [f32], x: &[f32], a: f32) {
+    unsafe {
+        use core::arch::aarch64::*;
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let yv = vld1q_f32(yp.add(i));
+            let xv = vld1q_f32(xp.add(i));
+            // explicit mul + add (never vfmaq): portable rounding.
+            vst1q_f32(yp.add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Requires NEON (always present on aarch64). `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    unsafe {
+        use core::arch::aarch64::*;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // Two 4-lane accumulators advanced 8 elements per iteration =
+        // portable's 8 independent lanes (acc0 holds lanes 0..4, acc1
+        // lanes 4..8), updated in the same vertical order.
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i))));
+            acc1 = vaddq_f32(
+                acc1,
+                vmulq_f32(vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4))),
+            );
+            i += 8;
+        }
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut tail = 0f32;
+        while i < n {
+            tail += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        // Portable's exact reduction order.
+        let even = (lanes[0] + lanes[2]) + (lanes[4] + lanes[6]);
+        let odd = (lanes[1] + lanes[3]) + (lanes[5] + lanes[7]);
+        (even + odd) + tail
+    }
+}
+
+/// Row/k loop over [`axpy_neon`] — ascending-k accumulation with the
+/// portable zero-skip, so bit-identical to portable.
+///
+/// # Safety
+/// Requires NEON (always present on aarch64).  Slice bounds per the
+/// public wrapper's asserts.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_tile_neon(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    unsafe {
+        for r in 0..rows {
+            let or = &mut out[r * ldo..r * ldo + cols];
+            for k in 0..kn {
+                let pv = p[r * ldp + k * pks];
+                if pv == 0.0 {
+                    continue;
+                }
+                axpy_neon(or, &w[k * ldw..k * ldw + cols], pv);
+            }
+        }
+    }
+}

@@ -1,12 +1,11 @@
-//! Contiguous f32-lane inner loops shared by the forward GEMM tile and
-//! the backward kernels (`runtime::backward`).
+//! Portable chunked-lane kernels: the dispatch fallback on every
+//! architecture and the **parity oracle** every specialized backend is
+//! tested against (`tests/simd_parity.rs`).
 //!
-//! There are no std::simd / intrinsics in the offline toolchain, so the
-//! kernels lean on autovectorization instead: the two primitives here
-//! expose the innermost loops in fixed-width `[f32; 8]` chunk form, the
-//! shape LLVM reliably turns into packed vector code.
-//!
-//! Numeric contracts:
+//! These are the original autovectorization-shaped loops: fixed-width
+//! `[f32; 8]` chunks, the form LLVM reliably turns into packed vector
+//! code even without explicit intrinsics.  They define the numeric
+//! contracts of the whole module:
 //!
 //! - [`axpy`] computes every output element independently
 //!   (`y[i] += a * x[i]`), so chunking does not change any result bit —
@@ -16,6 +15,9 @@
 //!   *reassociates* the sum relative to a strictly sequential scalar
 //!   accumulation — parity tests against scalar oracles use a small
 //!   tolerance instead of bit equality.
+//! - [`gemm_tile`] accumulates each output element over `k` in
+//!   ascending order with a zero-skip, exactly like the scalar tile
+//!   loops it replaced, so it is bit-identical to them.
 
 /// `y[i] += a * x[i]` over the common prefix, in `[f32; 8]` chunks.
 ///
@@ -60,45 +62,39 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     (even + odd) + tail
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn axpy_matches_scalar_bitwise() {
-        for n in [0usize, 1, 7, 8, 9, 16, 33] {
-            let x: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 0.37).collect();
-            let mut y: Vec<f32> = (0..n).map(|i| (i as f32) * 0.11 - 1.0).collect();
-            let mut expect = y.clone();
-            let a = 0.73f32;
-            for (e, &xv) in expect.iter_mut().zip(&x) {
-                *e += a * xv;
+/// Accumulating GEMM tile: `out[r][c] += Σ_k p(r, k) · w[k][c]`.
+///
+/// `out` has row stride `ldo`, `w` has row stride `ldw`, and `p` is
+/// accessed as `p[r * ldp + k * pks]` — the extra k-stride `pks` lets
+/// one kernel serve both `P·W` (`pks = 1`, `ldp = f`) and `Pᵀ·W`
+/// (`pks = f`, `ldp = 1`) without materializing a transpose.
+///
+/// Per output element the accumulation runs over `k` ascending with a
+/// `p == 0.0` skip, matching the scalar tile loops this replaced, so
+/// the result is bit-identical to them (the skip also preserves signed
+/// zeros: `-0.0 + 0.0` would flush the sign).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tile(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    for r in 0..rows {
+        let or = &mut out[r * ldo..r * ldo + cols];
+        for k in 0..kn {
+            let pv = p[r * ldp + k * pks];
+            if pv == 0.0 {
+                continue;
             }
-            axpy(&mut y, &x, a);
-            for (got, want) in y.iter().zip(&expect) {
-                assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
-            }
+            axpy(or, &w[k * ldw..k * ldw + cols], pv);
         }
-    }
-
-    #[test]
-    fn dot_close_to_scalar() {
-        for n in [0usize, 1, 5, 8, 13, 64, 100] {
-            let a: Vec<f32> = (0..n).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.1).collect();
-            let b: Vec<f32> = (0..n).map(|i| ((i * 3 % 13) as f32 - 6.0) * 0.2).collect();
-            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-            let got = dot(&a, &b);
-            assert!(
-                (got - scalar).abs() <= 1e-5 * scalar.abs().max(1.0),
-                "n={n}: {got} vs {scalar}"
-            );
-        }
-    }
-
-    #[test]
-    fn dot_deterministic() {
-        let a: Vec<f32> = (0..97).map(|i| (i as f32).sin()).collect();
-        let b: Vec<f32> = (0..97).map(|i| (i as f32).cos()).collect();
-        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
     }
 }

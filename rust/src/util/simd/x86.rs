@@ -1,0 +1,379 @@
+//! Explicit AVX2 / AVX2+FMA kernels (`core::arch::x86_64`).
+//!
+//! Two tables, duplicated rather than macro-generated so the numeric
+//! contract of each is visible in the source:
+//!
+//! - [`AVX2`] — separate multiply + add (`_mm256_mul_ps` then
+//!   `_mm256_add_ps`), every element rounded exactly like the portable
+//!   loops, so `axpy`/`gemm_tile` are **bit-identical** to portable and
+//!   `dot` reproduces portable's 8-lane accumulate + fixed-order
+//!   reduction bit-for-bit.  This is the auto-selected default on AVX2
+//!   hosts (`bit_stable: true`).
+//! - [`FMA`] — `_mm256_fmadd_ps` fuses the multiply-add with a single
+//!   rounding, so results differ from portable in the last ulps.
+//!   Tolerance-only contract; never auto-selected (`CGCN_SIMD=fma`
+//!   opt-in).
+//!
+//! Every kernel is an `unsafe fn` under `#[target_feature]` with a safe
+//! wrapper.  Soundness: the wrappers are reachable only through
+//! [`super::dispatch`] tables that `candidates()` includes *after*
+//! `is_x86_feature_detected!` passes, so the target features are
+//! guaranteed present whenever the wrapped code runs.
+
+#![cfg(target_arch = "x86_64")]
+
+use super::dispatch::Table;
+
+/// AVX2 without fused multiply-add: bit-identical to portable.
+pub static AVX2: Table = Table {
+    name: "avx2",
+    bit_stable: true,
+    axpy: axpy_avx2_safe,
+    dot: dot_avx2_safe,
+    gemm_tile: gemm_tile_avx2_safe,
+};
+
+/// AVX2 with fused multiply-add: fastest, tolerance-only contract.
+pub static FMA: Table = Table {
+    name: "fma",
+    bit_stable: false,
+    axpy: axpy_fma_safe,
+    dot: dot_fma_safe,
+    gemm_tile: gemm_tile_fma_safe,
+};
+
+// ---- safe wrappers (see module docs for the soundness argument) ----
+
+fn axpy_avx2_safe(y: &mut [f32], x: &[f32], a: f32) {
+    // SAFETY: only dispatched after is_x86_feature_detected!("avx2").
+    unsafe { axpy_avx2(y, x, a) }
+}
+
+fn dot_avx2_safe(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: only dispatched after is_x86_feature_detected!("avx2").
+    unsafe { dot_avx2(a, b) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tile_avx2_safe(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    // SAFETY: only dispatched after is_x86_feature_detected!("avx2");
+    // slice bounds are asserted by the public wrapper in `super`.
+    unsafe { gemm_tile_avx2(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols) }
+}
+
+fn axpy_fma_safe(y: &mut [f32], x: &[f32], a: f32) {
+    // SAFETY: only dispatched after is_x86_feature_detected!("fma").
+    unsafe { axpy_fma(y, x, a) }
+}
+
+fn dot_fma_safe(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: only dispatched after is_x86_feature_detected!("fma").
+    unsafe { dot_fma(a, b) }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tile_fma_safe(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    // SAFETY: only dispatched after is_x86_feature_detected!("fma");
+    // slice bounds are asserted by the public wrapper in `super`.
+    unsafe { gemm_tile_fma(out, ldo, p, ldp, pks, w, ldw, rows, kn, cols) }
+}
+
+// ---- AVX2 (non-fused) kernels -------------------------------------
+
+/// # Safety
+/// Requires AVX2. `y.len() == x.len()` (debug-asserted).
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(y: &mut [f32], x: &[f32], a: f32) {
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let xv = _mm256_loadu_ps(xp.add(i));
+            // mul then add, matching portable's `y += a * x` rounding.
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2. `a.len() == b.len()` (debug-asserted).
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        // One YMM accumulator = portable's 8 independent lanes, updated
+        // vertically in the same order.
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += 8;
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0f32;
+        while i < n {
+            tail += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        // Portable's exact reduction order.
+        let even = (lanes[0] + lanes[2]) + (lanes[4] + lanes[6]);
+        let odd = (lanes[1] + lanes[3]) + (lanes[5] + lanes[7]);
+        (even + odd) + tail
+    }
+}
+
+/// Register-blocked 8×8 accumulating GEMM tile (see
+/// [`super::portable::gemm_tile`] for the layout parameters): 8 row
+/// accumulators live in YMM registers across the whole k loop, one
+/// `w`-row load per k shared by 8 broadcasts of `p`.
+///
+/// Per output element the accumulation is ascending-k mul+add with the
+/// same `p == 0.0` skip as portable — bit-identical.
+///
+/// # Safety
+/// Requires AVX2.  Slice bounds per the public wrapper's asserts.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_tile_avx2(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    unsafe {
+        use core::arch::x86_64::*;
+        let op = out.as_mut_ptr();
+        let pp = p.as_ptr();
+        let wp = w.as_ptr();
+        let mut c = 0;
+        while c + 8 <= cols {
+            let mut r = 0;
+            while r + 8 <= rows {
+                let mut acc = [_mm256_setzero_ps(); 8];
+                for rr in 0..8 {
+                    acc[rr] = _mm256_loadu_ps(op.add((r + rr) * ldo + c));
+                }
+                for k in 0..kn {
+                    let wv = _mm256_loadu_ps(wp.add(k * ldw + c));
+                    for rr in 0..8 {
+                        let pv = *pp.add((r + rr) * ldp + k * pks);
+                        if pv != 0.0 {
+                            acc[rr] = _mm256_add_ps(acc[rr], _mm256_mul_ps(_mm256_set1_ps(pv), wv));
+                        }
+                    }
+                }
+                for rr in 0..8 {
+                    _mm256_storeu_ps(op.add((r + rr) * ldo + c), acc[rr]);
+                }
+                r += 8;
+            }
+            while r < rows {
+                let mut acc = _mm256_loadu_ps(op.add(r * ldo + c));
+                for k in 0..kn {
+                    let pv = *pp.add(r * ldp + k * pks);
+                    if pv != 0.0 {
+                        let wv = _mm256_loadu_ps(wp.add(k * ldw + c));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(pv), wv));
+                    }
+                }
+                _mm256_storeu_ps(op.add(r * ldo + c), acc);
+                r += 1;
+            }
+            c += 8;
+        }
+        if c < cols {
+            for r in 0..rows {
+                for k in 0..kn {
+                    let pv = *pp.add(r * ldp + k * pks);
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    for j in c..cols {
+                        *op.add(r * ldo + j) += pv * *wp.add(k * ldw + j);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- AVX2+FMA kernels ---------------------------------------------
+
+/// # Safety
+/// Requires AVX2 and FMA. `y.len() == x.len()` (debug-asserted).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_fma(y: &mut [f32], x: &[f32], a: f32) {
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let xv = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(av, xv, yv));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) = a.mul_add(*xp.add(i), *yp.add(i));
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2 and FMA. `a.len() == b.len()` (debug-asserted).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    unsafe {
+        use core::arch::x86_64::*;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+            i += 8;
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0f32;
+        while i < n {
+            tail = (*ap.add(i)).mul_add(*bp.add(i), tail);
+            i += 1;
+        }
+        let even = (lanes[0] + lanes[2]) + (lanes[4] + lanes[6]);
+        let odd = (lanes[1] + lanes[3]) + (lanes[5] + lanes[7]);
+        (even + odd) + tail
+    }
+}
+
+/// FMA variant of [`gemm_tile_avx2`]: same blocking, fused
+/// multiply-adds (tolerance-only contract).
+///
+/// # Safety
+/// Requires AVX2 and FMA.  Slice bounds per the public wrapper's
+/// asserts.
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_tile_fma(
+    out: &mut [f32],
+    ldo: usize,
+    p: &[f32],
+    ldp: usize,
+    pks: usize,
+    w: &[f32],
+    ldw: usize,
+    rows: usize,
+    kn: usize,
+    cols: usize,
+) {
+    unsafe {
+        use core::arch::x86_64::*;
+        let op = out.as_mut_ptr();
+        let pp = p.as_ptr();
+        let wp = w.as_ptr();
+        let mut c = 0;
+        while c + 8 <= cols {
+            let mut r = 0;
+            while r + 8 <= rows {
+                let mut acc = [_mm256_setzero_ps(); 8];
+                for rr in 0..8 {
+                    acc[rr] = _mm256_loadu_ps(op.add((r + rr) * ldo + c));
+                }
+                for k in 0..kn {
+                    let wv = _mm256_loadu_ps(wp.add(k * ldw + c));
+                    for rr in 0..8 {
+                        let pv = *pp.add((r + rr) * ldp + k * pks);
+                        if pv != 0.0 {
+                            acc[rr] = _mm256_fmadd_ps(_mm256_set1_ps(pv), wv, acc[rr]);
+                        }
+                    }
+                }
+                for rr in 0..8 {
+                    _mm256_storeu_ps(op.add((r + rr) * ldo + c), acc[rr]);
+                }
+                r += 8;
+            }
+            while r < rows {
+                let mut acc = _mm256_loadu_ps(op.add(r * ldo + c));
+                for k in 0..kn {
+                    let pv = *pp.add(r * ldp + k * pks);
+                    if pv != 0.0 {
+                        let wv = _mm256_loadu_ps(wp.add(k * ldw + c));
+                        acc = _mm256_fmadd_ps(_mm256_set1_ps(pv), wv, acc);
+                    }
+                }
+                _mm256_storeu_ps(op.add(r * ldo + c), acc);
+                r += 1;
+            }
+            c += 8;
+        }
+        if c < cols {
+            for r in 0..rows {
+                for k in 0..kn {
+                    let pv = *pp.add(r * ldp + k * pks);
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    for j in c..cols {
+                        *op.add(r * ldo + j) = pv.mul_add(*wp.add(k * ldw + j), *op.add(r * ldo + j));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -212,6 +212,94 @@ fn checkpoint_resume_replays_uninterrupted_run() {
     assert_eq!(state_bits(&resumed.result.state), state_bits(&resumed2.result.state));
 }
 
+/// `TrainConfig::checkpoint_every` writes a v2 checkpoint after every
+/// k-th epoch through the `CheckpointSaved` event path, and resuming
+/// from an **intermediate** periodic checkpoint (captured mid-run by an
+/// observer, before later saves overwrite the path) replays the
+/// uninterrupted run bitwise.  The final-state save is skipped when the
+/// last periodic save already captured the final epoch, so the event
+/// count is exactly `epochs / k`.
+#[test]
+fn periodic_checkpoints_resume_bitwise() {
+    use cluster_gcn::session::Observer;
+
+    /// Copies the checkpoint file aside on the first save, so the test
+    /// can resume from the epoch-2 snapshot even though epoch 4's save
+    /// overwrites the session path.
+    struct CopyFirstCheckpoint {
+        aside: std::path::PathBuf,
+        count: usize,
+    }
+    impl Observer for CopyFirstCheckpoint {
+        fn on_event(&mut self, event: &Event) {
+            if let Event::CheckpointSaved { path } = event {
+                if self.count == 0 {
+                    std::fs::copy(path, &self.aside).unwrap();
+                }
+                self.count += 1;
+            }
+        }
+    }
+
+    let ds = tiny_sbm(23);
+    let full = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(cfg(4, 13))
+        .run()
+        .unwrap();
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "cgcn_periodic_{}.bin",
+        std::process::id()
+    ));
+    let aside = std::env::temp_dir().join(format!(
+        "cgcn_periodic_aside_{}.bin",
+        std::process::id()
+    ));
+    let mut obs = CopyFirstCheckpoint { aside: aside.clone(), count: 0 };
+    let periodic = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(TrainConfig { checkpoint_every: 2, ..cfg(4, 13) })
+        .save(&ckpt)
+        .observer(&mut obs)
+        .run()
+        .unwrap();
+    // saves at epochs 2 and 4; the final-state save dedupes against the
+    // epoch-4 periodic save
+    assert_eq!(obs.count, 2, "one CheckpointSaved per k-th epoch, no duplicate at Done");
+    // periodic checkpointing must not perturb the run itself
+    assert_eq!(state_bits(&full.result.state), state_bits(&periodic.result.state));
+    // the path left behind is the final (epoch 4) state
+    let last = checkpoint::load_full(&ckpt).unwrap();
+    assert_eq!(last.epoch, 4);
+    assert_eq!(
+        state_bits(&full.result.state),
+        state_bits(&last.state),
+        "overwritten session path must hold the final state"
+    );
+    std::fs::remove_file(&ckpt).ok();
+
+    // resume from the intermediate (epoch 2) snapshot: bitwise replay
+    let mid = checkpoint::load_full(&aside).unwrap();
+    std::fs::remove_file(&aside).ok();
+    assert_eq!(mid.epoch, 2, "first periodic save must record epoch 2");
+    let resumed = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(TrainConfig { start_epoch: mid.epoch, ..cfg(4, 13) })
+        .initial_state(mid.state)
+        .run()
+        .unwrap();
+    assert_eq!(full.result.state.step, resumed.result.state.step);
+    assert_eq!(
+        state_bits(&full.result.state),
+        state_bits(&resumed.result.state),
+        "resume from an intermediate periodic checkpoint must replay bitwise"
+    );
+}
+
 /// The PR-5 resume gate: a VR-GCN run interrupted at an epoch boundary
 /// resumes to a **bitwise**-identical final state vs the uninterrupted
 /// run — and the history section in the `CGCNCKP2` checkpoint is
