@@ -1,0 +1,139 @@
+//! Serving latency benchmark: sweep query mixes through the online
+//! serving front and record p50/p99 latency, QPS, and cache behavior.
+//!
+//! Rows (all on the same preset + fresh deterministic weights):
+//!
+//! 1. **uniform / exact** — uniform node popularity against the
+//!    partition-keyed activation cache (warm: everything hits).
+//! 2. **hotset / exact** — power-law-ish hot-set traffic, the regime a
+//!    partition-keyed cache is built for.
+//! 3. **hotset cross / exact** — hot-set anchors with 50% cross-cluster
+//!    batch members, fanning need-sets across partition dependencies.
+//! 4. **uniform / clustered** — the block-renormalized (clusters ∪
+//!    halo) approximation served per flush, no cross-flush cache.
+//!
+//! Writes `bench_results/BENCH_serve_mixes.json` (an object with one
+//! entry per row) and re-parses it as a well-formedness check.  The
+//! CLI `cluster-gcn serve` writes the single-run
+//! `bench_results/BENCH_serve.json` the deep CI tier validates;
+//! this sweep keeps its own file so the two never clobber each other.
+//!
+//! ```bash
+//! cargo run --release --example serve_bench [-- preset queries]
+//! ```
+
+use cluster_gcn::bench_support as bs;
+use cluster_gcn::serve::{generate, run_load, LoadConfig, Mix, ServeConfig, ServeMode};
+use cluster_gcn::session::{Session, TrainConfig};
+use cluster_gcn::util::{Json, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(|s| s.as_str()).unwrap_or("cora_like").to_string();
+    let queries = args
+        .get(1)
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("queries must be an integer"))?
+        .unwrap_or(2000);
+    let seed = bs::env_seed();
+    let clients = bs::env_usize("CGCN_CLIENTS", 4);
+    let ds = bs::dataset(&preset)?;
+
+    println!("== serve_bench: {} ({} queries, {clients} clients) ==", ds.name, queries);
+    let mut table = bs::Table::new(&[
+        "mix", "mode", "p50 us", "p99 us", "qps", "hit rate", "flushes",
+    ]);
+
+    let rows: [(&str, Mix, f64, ServeMode); 4] = [
+        ("uniform", Mix::Uniform, 0.1, ServeMode::ExactCached),
+        ("hotset", Mix::Hotset { hot_frac: 0.05, hot_weight: 0.9 }, 0.1, ServeMode::ExactCached),
+        ("hotset_cross", Mix::Hotset { hot_frac: 0.05, hot_weight: 0.9 }, 0.5, ServeMode::ExactCached),
+        ("clustered", Mix::Uniform, 0.1, ServeMode::Clustered),
+    ];
+
+    let mut report = Vec::new();
+    for (name, mix, cross, mode) in rows {
+        let cfg = TrainConfig { layers: 2, seed, ..TrainConfig::default() };
+        let server = Session::new(&ds)
+            .config(cfg)
+            .into_server(ServeConfig { mode, ..ServeConfig::default() })?;
+        let load = LoadConfig {
+            mix,
+            queries,
+            batch: 4,
+            cross_frac: cross,
+            seed: seed ^ 0x10AD,
+        };
+        let plan = generate(ds.n(), server.owner(), server.clusters(), &load);
+        let t = Timer::start();
+        server.warm();
+        let warm_s = t.secs();
+        server.reset_stats();
+        let r = run_load(&server, &plan, clients)?;
+        let st = server.stats();
+        assert!(
+            r.p99_us >= r.p50_us && r.p50_us > 0.0,
+            "{name}: latency percentile invariant violated"
+        );
+        let hit_rate = if st.hits + st.misses > 0 {
+            st.hits as f64 / (st.hits + st.misses) as f64
+        } else {
+            0.0
+        };
+        table.row(&[
+            name.to_string(),
+            format!("{mode:?}"),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.0}", r.qps),
+            format!("{hit_rate:.3}"),
+            format!("{}", st.flushes),
+        ]);
+        report.push((
+            name,
+            Json::obj(vec![
+                ("mode", Json::str(&format!("{mode:?}"))),
+                ("warm_secs", Json::num(warm_s)),
+                ("p50_us", Json::num(r.p50_us)),
+                ("p99_us", Json::num(r.p99_us)),
+                ("mean_us", Json::num(r.mean_us)),
+                ("qps", Json::num(r.qps)),
+                ("hit_rate", Json::num(hit_rate)),
+                ("cache_hits", Json::num(st.hits as f64)),
+                ("cache_misses", Json::num(st.misses as f64)),
+                ("flushes", Json::num(st.flushes as f64)),
+                ("digest", Json::str(&format!("{:016x}", r.digest))),
+            ]),
+        ));
+    }
+    table.print();
+
+    let json = Json::obj(
+        std::iter::once(("preset", Json::str(&ds.name)))
+            .chain(std::iter::once(("queries", Json::num(queries as f64))))
+            .chain(std::iter::once(("clients", Json::num(clients as f64))))
+            .chain(report.iter().map(|(k, v)| (*k, v.clone())))
+            .collect(),
+    );
+    std::fs::create_dir_all("bench_results")?;
+    let path = "bench_results/BENCH_serve_mixes.json";
+    std::fs::write(path, json.to_string())?;
+
+    // well-formedness: the file must round-trip and carry every row
+    let parsed = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("BENCH_serve_mixes.json does not parse: {e}"))?;
+    for (name, ..) in rows {
+        let row = parsed
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("BENCH_serve_mixes.json missing row {name}"))?;
+        for key in ["p50_us", "p99_us", "qps", "hit_rate"] {
+            anyhow::ensure!(
+                row.get(key).is_some(),
+                "BENCH_serve_mixes.json row {name} missing {key}"
+            );
+        }
+    }
+    println!("wrote {path}");
+    Ok(())
+}

@@ -54,6 +54,12 @@ echo "== VR-GCN resume-parity gate (interrupt -> checkpoint -> resume, bitwise) 
 cargo test --release -q --test driver vrgcn_resume
 cargo test --release -q vrgcn_sparse
 
+echo "== serve gates: cache parity + invalidation + coalescer concurrency =="
+# exact-mode responses bit-identical to the offline forward (cold /
+# warm / post-invalidation), stale entries never served after a weight
+# install, concurrent callers coalesced without cross-talk
+cargo test --release -q --test serve
+
 echo "== golden-trace regression suite (bitwise loss/F1 trajectories, all methods) =="
 GOLDEN="rust/tests/golden/trajectories.json"
 [ -f "$GOLDEN" ] || GOLDEN="tests/golden/trajectories.json"
@@ -88,6 +94,20 @@ if [ "${CGCN_DEEP:-0}" = 1 ]; then
 
   echo "== deep tier: perf_probe on the larger preset =="
   CGCN_ITERS=3 cargo run --release --example perf_probe -- ppi_like 3 30
+
+  echo "== deep tier: serve load-gen smoke + BENCH_serve.json well-formedness =="
+  cargo run --release -- serve --preset cora_like --queries 300 --batch 4 \
+    --mix hotset --clients 4 --seed 42
+  test -f bench_results/BENCH_serve.json || {
+    echo "serve did not write bench_results/BENCH_serve.json" >&2; exit 1;
+  }
+  # key presence; the p99 >= p50 > 0 invariant is asserted inside
+  # cmd_serve before the file is written
+  for key in p50_us p99_us mean_us qps hit_rate cache_hits cache_misses flushes; do
+    grep -q "\"$key\"" bench_results/BENCH_serve.json || {
+      echo "BENCH_serve.json missing key $key" >&2; exit 1;
+    }
+  done
 fi
 
 echo "CI gate passed."

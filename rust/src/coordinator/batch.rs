@@ -318,6 +318,18 @@ impl Batch {
         }
     }
 
+    /// Scatter the batch's global→local node mapping into a
+    /// caller-owned position table: `pos[nodes[i]] = i` for every local
+    /// index `i`.  Entries for nodes outside the batch are left
+    /// untouched, so a serving layer can reuse one `pos` buffer across
+    /// flushes without clearing it (it only reads positions of nodes it
+    /// just wrote).
+    pub fn index_positions(&self, pos: &mut [u32]) {
+        for (i, &v) in self.nodes.iter().enumerate() {
+            pos[v as usize] = i as u32;
+        }
+    }
+
     /// Host bytes of the batch tensors + the CSR block view (memory
     /// accounting, Table 5).
     pub fn bytes(&self) -> usize {

@@ -130,6 +130,58 @@ pub fn spmm_layer_raw_into(
     });
 }
 
+/// [`spmm_layer_raw_into`] restricted to an explicit row subset: output
+/// row `i` is the layer result for graph row `rows[i]`
+/// (`out.len() == rows.len() * w.dims[1]`).  Every output row is a pure
+/// per-row function of the inputs — the same propagate + ascending-k
+/// tiled GEMM as the full kernel — so each row is bit-identical to the
+/// corresponding row of [`spmm_layer_raw_into`] over the whole graph, at
+/// any thread count and for any ordering of `rows`.  This is the
+/// serving-cache entry point (`serve::cache` recomputes only the rows of
+/// invalidated clusters).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_layer_rows_into(
+    offsets: &[usize],
+    cols: &[u32],
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &Tensor,
+    relu: bool,
+    rows: &[u32],
+    threads: usize,
+    out: &mut [f32],
+) {
+    let (wf, wg) = (w.dims[0], w.dims[1]);
+    assert_eq!(wf, f, "weight in-dim mismatch");
+    assert_eq!(out.len(), rows.len() * wg, "output buffer mismatch");
+    debug_assert_eq!(self_loop.len(), offsets.len() - 1);
+
+    pool::global().run_rows_with(rows.len(), threads.max(1), wg, out, |_ci, chunk, out_rows| {
+        PROP_SCRATCH.with(|cell| {
+            let mut prop = cell.borrow_mut();
+            if prop.len() < ROW_BLOCK * f {
+                prop.resize(ROW_BLOCK * f, 0.0);
+            }
+            spmm_block_gather(
+                offsets,
+                cols,
+                vals,
+                self_loop,
+                x,
+                f,
+                &w.data,
+                wg,
+                relu,
+                &rows[chunk],
+                out_rows,
+                &mut prop,
+            );
+        });
+    });
+}
+
 /// One row-chunk of the fused kernel: propagate a ROW_BLOCK of rows,
 /// then run the cache-tiled GEMM for that block, repeat.
 #[allow(clippy::too_many_arguments)]
@@ -174,6 +226,84 @@ fn spmm_block(
         // runs on the dispatched register-blocked micro-kernel ---------
         let ob = (rb - rows.start) * wg;
         let out_block = &mut out_rows[ob..ob + nb * wg];
+        out_block.fill(0.0);
+        let mut kp = 0;
+        while kp < f {
+            let kn = K_PANEL.min(f - kp);
+            let mut ct = 0;
+            while ct < wg {
+                let cn = COL_TILE.min(wg - ct);
+                simd::gemm_tile(
+                    &mut out_block[ct..],
+                    wg,
+                    &prop[kp..],
+                    f,
+                    1,
+                    &w[kp * wg + ct..],
+                    wg,
+                    nb,
+                    kn,
+                    cn,
+                );
+                ct += cn;
+            }
+            kp += kn;
+        }
+
+        if relu {
+            out_block.iter_mut().for_each(|z| {
+                if *z < 0.0 {
+                    *z = 0.0;
+                }
+            });
+        }
+        rb += nb;
+    }
+}
+
+/// [`spmm_block`] with the row ids taken from an explicit list instead
+/// of a contiguous range — same propagate, same tiled GEMM, same
+/// ascending-k order, so each output row is bit-identical to the full
+/// kernel's row for the same graph row.
+#[allow(clippy::too_many_arguments)]
+fn spmm_block_gather(
+    offsets: &[usize],
+    cols: &[u32],
+    vals: &[f32],
+    self_loop: &[f32],
+    x: &[f32],
+    f: usize,
+    w: &[f32],
+    wg: usize,
+    relu: bool,
+    rows: &[u32],
+    out_rows: &mut [f32],
+    prop: &mut [f32],
+) {
+    debug_assert_eq!(out_rows.len(), rows.len() * wg);
+    let mut rb = 0;
+    while rb < rows.len() {
+        let nb = ROW_BLOCK.min(rows.len() - rb);
+
+        // ---- P[nb, f] = Â[rows[rb..rb+nb], :] · X -------------------
+        for ri in 0..nb {
+            let v = rows[rb + ri] as usize;
+            let pr = &mut prop[ri * f..(ri + 1) * f];
+            let sl = self_loop[v];
+            let xv = &x[v * f..(v + 1) * f];
+            for j in 0..f {
+                pr[j] = sl * xv[j];
+            }
+            let off = offsets[v];
+            for (idx, &u) in cols[off..offsets[v + 1]].iter().enumerate() {
+                let a = vals[off + idx];
+                let xu = &x[u as usize * f..(u as usize + 1) * f];
+                axpy(pr, xu, a);
+            }
+        }
+
+        // ---- Z[nb, wg] = P · W, identical tiling to spmm_block ------
+        let out_block = &mut out_rows[rb * wg..(rb + nb) * wg];
         out_block.fill(0.0);
         let mut kp = 0;
         while kp < f {
@@ -513,6 +643,33 @@ mod tests {
         for threads in [1usize, 2, 5, 16] {
             let got = spmm_layer(&g, &vals, &sl, &x, f, &w, true, threads);
             assert_eq!(got, oracle, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn rows_kernel_matches_full_kernel_bitwise() {
+        // same medium case as the tiled-vs-naive test, queried through
+        // an unsorted, duplicated row subset at several thread counts
+        let n = 150;
+        let f = K_PANEL + 37;
+        let wg = COL_TILE + 9;
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32 - 1).map(|v| (v, v + 1)).chain([(0, (n - 1) as u32)]).collect();
+        let g = Csr::from_edges(n, &edges);
+        let (vals, sl) = normalize_sparse(&g, NormConfig::PAPER_DEFAULT);
+        let x: Vec<f32> = (0..n * f).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.01).collect();
+        let w = Tensor::new(
+            vec![f, wg],
+            (0..f * wg).map(|i| ((i * 13 % 97) as f32 - 48.0) * 0.02).collect(),
+        );
+        let full = spmm_layer(&g, &vals, &sl, &x, f, &w, true, 4);
+        let rows: Vec<u32> = vec![149, 0, 77, 3, 3, 148, 64, 65, 1];
+        for threads in [1usize, 2, 8] {
+            let mut got = vec![0f32; rows.len() * wg];
+            spmm_layer_rows_into(
+                &g.offsets, &g.cols, &vals, &sl, &x, f, &w, true, &rows, threads, &mut got,
+            );
+            assert_eq!(got, gather_rows(&full, wg, &rows), "threads={threads}");
         }
     }
 

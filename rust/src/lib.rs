@@ -30,6 +30,7 @@ pub mod graph;
 pub mod norm;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod testing;
 pub mod util;

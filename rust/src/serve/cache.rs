@@ -1,0 +1,404 @@
+//! Partition-keyed layered activation cache — the exact-parity serving
+//! engine.
+//!
+//! ## Keying
+//!
+//! One cache entry is a **(layer, cluster)** pair: the rows of layer
+//! `l`'s activation matrix belonging to one partition's nodes, stored
+//! inside a full-size `n × width_l` buffer per layer (so neighbor reads
+//! across cluster boundaries are plain row indexing).  Entries are
+//! computed over the **full-graph** normalized adjacency
+//! ([`crate::norm::normalize_sparse`], cached in a
+//! [`crate::norm::NormCache`]) through the row-subset kernel
+//! [`spmm_layer_rows_into`] — every output row is the same pure per-row
+//! function the offline
+//! [`crate::coordinator::inference::full_forward_cached`] forward
+//! computes, so served responses are **bit-identical** to rows of the
+//! offline forward in every cache state (cold, warm, post-invalidation;
+//! pinned by `tests/serve.rs`).
+//!
+//! ## Demand-driven fill
+//!
+//! A query walks need-sets top-down: the final layer needs the query
+//! nodes' owner clusters; layer `l-1` additionally needs the
+//! dependencies (owner clusters of all neighbors, plus the cluster
+//! itself — self loops and residual reads) of every cluster *invalid*
+//! at layer `l`.  Entries are then computed bottom-up, so intra-cluster
+//! queries touch exactly `layers` entries and stay warm.
+//!
+//! ## Invalidation
+//!
+//! The cache carries a weight `version`; each entry records the version
+//! it was computed at, and a mismatch is a miss (the overwrite of a
+//! previously valid entry counts as an eviction).
+//! [`ActivationCache::bump_version`] is called by
+//! [`super::Server::install_weights`] — the `apply_grads` /
+//! checkpoint-load integration point — so stale activations are never
+//! served.  A weight *shape* change rebuilds the buffers outright.
+
+use crate::coordinator::inference::spmm_layer_rows_into;
+use crate::graph::Dataset;
+use crate::norm::{NormCache, NormConfig};
+use crate::runtime::Tensor;
+
+/// Cache counters, one increment per (layer, cluster) entry touched.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// entries read while valid at the current weight version.
+    pub hits: u64,
+    /// entries computed (never computed before, or stale).
+    pub misses: u64,
+    /// valid-but-stale entries overwritten by a recompute (the
+    /// weight-version invalidation path; capacity is fixed at
+    /// layers × clusters preallocated buffers, so there are no
+    /// capacity evictions).
+    pub evictions: u64,
+}
+
+/// The partition-keyed activation cache; see the module docs.
+pub struct ActivationCache {
+    norm: NormConfig,
+    residual: bool,
+    threads: usize,
+    /// cluster id → its node ids (a partition of `0..n`).
+    clusters: Vec<Vec<u32>>,
+    /// node id → owning cluster id.
+    owner: Vec<u32>,
+    /// cluster → clusters whose previous-layer rows its computation
+    /// reads (owner clusters of all members' neighbors, plus itself),
+    /// sorted ascending.
+    deps: Vec<Vec<u32>>,
+    /// per-layer output width (`weights[l].dims[1]`); rebuilt when the
+    /// served weight shapes change.
+    widths: Vec<usize>,
+    /// per-layer `n × widths[l]` activation buffers.
+    acts: Vec<Vec<f32>>,
+    /// `entry_version[layer][cluster]`: weight version the entry was
+    /// computed at (0 = never).
+    entry_version: Vec<Vec<u64>>,
+    /// current weight version (starts at 1 so 0 means "never").
+    version: u64,
+    stats: CacheStats,
+    norm_cache: NormCache,
+    /// per-cluster scratch mark for need-set dedup.
+    mark: Vec<bool>,
+    /// packed row scratch for one cluster's kernel output.
+    row_scratch: Vec<f32>,
+}
+
+impl ActivationCache {
+    /// Build a cache over a partition of `ds` (every node in exactly
+    /// one cluster).  `norm`/`residual` must match how the served
+    /// weights were trained; `threads` caps the kernel chunk count
+    /// (chunk layout — and therefore bits — is thread-count
+    /// independent).
+    pub fn new(
+        ds: &Dataset,
+        clusters: Vec<Vec<u32>>,
+        norm: NormConfig,
+        residual: bool,
+        threads: usize,
+    ) -> ActivationCache {
+        let n = ds.n();
+        let k = clusters.len();
+        assert!(k >= 1, "need at least one cluster");
+        let covered: usize = clusters.iter().map(|c| c.len()).sum();
+        assert_eq!(covered, n, "clusters must partition the node set");
+        let mut owner = vec![u32::MAX; n];
+        for (c, nodes) in clusters.iter().enumerate() {
+            for &v in nodes {
+                owner[v as usize] = c as u32;
+            }
+        }
+        debug_assert!(owner.iter().all(|&o| o != u32::MAX));
+
+        let mut mark = vec![false; k];
+        let mut deps = Vec::with_capacity(k);
+        for (c, nodes) in clusters.iter().enumerate() {
+            let mut d = vec![c as u32];
+            mark[c] = true;
+            for &v in nodes {
+                for &u in ds.graph.neighbors(v as usize) {
+                    let o = owner[u as usize] as usize;
+                    if !mark[o] {
+                        mark[o] = true;
+                        d.push(o as u32);
+                    }
+                }
+            }
+            d.sort_unstable();
+            for &x in &d {
+                mark[x as usize] = false;
+            }
+            deps.push(d);
+        }
+
+        ActivationCache {
+            norm,
+            residual,
+            threads: threads.max(1),
+            clusters,
+            owner,
+            deps,
+            widths: Vec::new(),
+            acts: Vec::new(),
+            entry_version: Vec::new(),
+            version: 1,
+            stats: CacheStats::default(),
+            norm_cache: NormCache::new(),
+            mark,
+            row_scratch: Vec::new(),
+        }
+    }
+
+    /// The partition this cache is keyed by.
+    pub fn clusters(&self) -> &[Vec<u32>] {
+        &self.clusters
+    }
+
+    /// node id → owning cluster id.
+    pub fn owner(&self) -> &[u32] {
+        &self.owner
+    }
+
+    /// Invalidate every entry: subsequent queries recompute against the
+    /// weights then passed to [`ActivationCache::rows_into`].  Called
+    /// on every weight install (gradient step, checkpoint load).
+    pub fn bump_version(&mut self) {
+        self.version += 1;
+    }
+
+    /// Snapshot of the hit/miss/evict counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Zero the counters (e.g. after a warm-up pass).
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Allocating wrapper over [`ActivationCache::rows_into`].
+    pub fn rows(&mut self, ds: &Dataset, weights: &[Tensor], nodes: &[u32]) -> Vec<f32> {
+        let classes = weights.last().expect("at least one layer").dims[1];
+        let mut out = vec![0f32; nodes.len() * classes];
+        self.rows_into(ds, weights, nodes, &mut out);
+        out
+    }
+
+    /// Final-layer rows for `nodes` (`out.len() == nodes.len() *
+    /// classes`), computing exactly the invalid (layer, cluster)
+    /// entries the query depends on.  Bit-identical to gathering the
+    /// same rows from
+    /// [`crate::coordinator::inference::full_forward_cached`] under the
+    /// same `(weights, norm, residual)`.
+    pub fn rows_into(
+        &mut self,
+        ds: &Dataset,
+        weights: &[Tensor],
+        nodes: &[u32],
+        out: &mut [f32],
+    ) {
+        assert!(!weights.is_empty(), "at least one layer");
+        self.sync_shapes(ds, weights);
+        let layers = weights.len();
+        let classes = self.widths[layers - 1];
+        assert_eq!(out.len(), nodes.len() * classes, "output buffer mismatch");
+
+        // ---- need-set walk, top-down ------------------------------------
+        // need[l] (1-based layer) = clusters whose layer-l rows the query
+        // reads; sorted for a deterministic compute order.
+        let mut need: Vec<Vec<u32>> = vec![Vec::new(); layers + 1];
+        {
+            let mark = &mut self.mark;
+            for &v in nodes {
+                let c = self.owner[v as usize] as usize;
+                if !mark[c] {
+                    mark[c] = true;
+                    need[layers].push(c as u32);
+                }
+            }
+            need[layers].sort_unstable();
+            for &c in &need[layers] {
+                mark[c as usize] = false;
+            }
+            for l in (2..=layers).rev() {
+                let (lower, upper) = need.split_at_mut(l);
+                let cur = &upper[0];
+                let prev = &mut lower[l - 1];
+                for &c in cur {
+                    if self.entry_version[l - 1][c as usize] != self.version {
+                        for &d in &self.deps[c as usize] {
+                            if !mark[d as usize] {
+                                mark[d as usize] = true;
+                                prev.push(d);
+                            }
+                        }
+                    }
+                }
+                prev.sort_unstable();
+                for &d in prev.iter() {
+                    mark[d as usize] = false;
+                }
+            }
+        }
+
+        // ---- ensure entries, bottom-up ----------------------------------
+        let adj = self.norm_cache.get_or_compute(&ds.graph, self.norm);
+        for l in 1..=layers {
+            let li = l - 1;
+            let w = &weights[li];
+            let out_w = w.dims[1];
+            let in_w = if l == 1 { ds.f_in } else { self.widths[li - 1] };
+            let relu = l != layers;
+            let res = self.residual && relu && out_w == in_w;
+            let (lo, hi) = self.acts.split_at_mut(li);
+            let x: &[f32] = if l == 1 { &ds.features } else { &lo[li - 1] };
+            let y: &mut Vec<f32> = &mut hi[0];
+            for &cu in &need[l] {
+                let c = cu as usize;
+                if self.entry_version[li][c] == self.version {
+                    self.stats.hits += 1;
+                    continue;
+                }
+                if self.entry_version[li][c] != 0 {
+                    self.stats.evictions += 1;
+                }
+                self.stats.misses += 1;
+                let rows = &self.clusters[c];
+                let m = rows.len();
+                if m == 0 {
+                    self.entry_version[li][c] = self.version;
+                    continue;
+                }
+                if self.row_scratch.len() < m * out_w {
+                    self.row_scratch.resize(m * out_w, 0.0);
+                }
+                let scratch = &mut self.row_scratch[..m * out_w];
+                spmm_layer_rows_into(
+                    &ds.graph.offsets,
+                    &ds.graph.cols,
+                    &adj.vals,
+                    &adj.self_loop,
+                    x,
+                    in_w,
+                    w,
+                    relu,
+                    rows,
+                    self.threads,
+                    scratch,
+                );
+                // scatter into the layer buffer; residual mirrors
+                // full_forward_cached (add the layer input, post-relu)
+                for (i, &v) in rows.iter().enumerate() {
+                    let dst = &mut y[v as usize * out_w..(v as usize + 1) * out_w];
+                    dst.copy_from_slice(&scratch[i * out_w..(i + 1) * out_w]);
+                    if res {
+                        let src = &x[v as usize * in_w..(v as usize + 1) * in_w];
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+                self.entry_version[li][c] = self.version;
+            }
+        }
+
+        // ---- gather the response rows -----------------------------------
+        let last = &self.acts[layers - 1];
+        for (i, &v) in nodes.iter().enumerate() {
+            out[i * classes..(i + 1) * classes]
+                .copy_from_slice(&last[v as usize * classes..(v as usize + 1) * classes]);
+        }
+    }
+
+    /// Precompute every (layer, cluster) entry at the current weight
+    /// version — one full-graph layered forward through the cache.
+    pub fn warm(&mut self, ds: &Dataset, weights: &[Tensor]) {
+        let all: Vec<u32> = (0..ds.n() as u32).collect();
+        let _ = self.rows(ds, weights, &all);
+    }
+
+    /// (Re)size the per-layer buffers when the served weight shapes
+    /// change; a shape change discards every entry.
+    fn sync_shapes(&mut self, ds: &Dataset, weights: &[Tensor]) {
+        let widths: Vec<usize> = weights.iter().map(|w| w.dims[1]).collect();
+        if widths == self.widths && self.acts.len() == widths.len() {
+            return;
+        }
+        let n = ds.n();
+        self.acts = widths.iter().map(|&w| vec![0f32; n * w]).collect();
+        self.entry_version = vec![vec![0u64; self.clusters.len()]; widths.len()];
+        self.widths = widths;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::inference::{full_forward_cached, gather_rows};
+    use crate::coordinator::trainer::TrainState;
+    use crate::graph::{Csr, Labels, Split, Task};
+    use crate::runtime::ModelSpec;
+
+    /// 8-node ring, 2 clusters of 4 interleaved so every cluster
+    /// depends on the other.
+    fn ring_ds() -> Dataset {
+        let n = 8;
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32).map(|v| (v, (v + 1) % n as u32)).collect();
+        Dataset {
+            name: "ring".into(),
+            task: Task::Multiclass,
+            graph: Csr::from_edges(n, &edges),
+            f_in: 3,
+            num_classes: 2,
+            features: (0..n * 3).map(|i| (i as f32 * 0.37).sin()).collect(),
+            labels: Labels::Multiclass(vec![0; n]),
+            split: vec![Split::Train; n],
+        }
+    }
+
+    #[test]
+    fn cold_warm_and_invalidated_match_offline_forward_bitwise() {
+        let ds = ring_ds();
+        let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, 5, ds.num_classes, 8);
+        let mut weights = TrainState::init(&spec, 3).weights;
+        let clusters = vec![vec![0, 2, 4, 6], vec![1, 3, 5, 7]];
+        let mut cache =
+            ActivationCache::new(&ds, clusters, NormConfig::PAPER_DEFAULT, false, 2);
+        let mut nc = NormCache::new();
+        let full =
+            full_forward_cached(&ds, &weights, NormConfig::PAPER_DEFAULT, false, &mut nc);
+        let q: Vec<u32> = vec![5, 0, 5];
+        assert_eq!(cache.rows(&ds, &weights, &q), gather_rows(&full, 2, &q)); // cold
+        let m1 = cache.stats().misses;
+        assert!(m1 > 0);
+        assert_eq!(cache.rows(&ds, &weights, &q), gather_rows(&full, 2, &q)); // warm
+        assert_eq!(cache.stats().misses, m1, "warm query must not recompute");
+        assert!(cache.stats().hits > 0);
+
+        // invalidate: new weights must never see stale activations
+        weights[0].data[1] += 0.5;
+        cache.bump_version();
+        let full2 =
+            full_forward_cached(&ds, &weights, NormConfig::PAPER_DEFAULT, false, &mut nc);
+        assert_eq!(cache.rows(&ds, &weights, &q), gather_rows(&full2, 2, &q));
+        assert!(cache.stats().evictions > 0, "stale entries were overwritten");
+    }
+
+    #[test]
+    fn residual_path_matches_offline_forward_bitwise() {
+        let ds = ring_ds();
+        // square 3→3→3→2 stack so the residual branch is exercised
+        let spec = ModelSpec::gcn(ds.task, 3, ds.f_in, 3, ds.num_classes, 8)
+            .with_residual();
+        let weights = TrainState::init(&spec, 9).weights;
+        let clusters = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        let mut cache = ActivationCache::new(&ds, clusters, NormConfig::ROW, true, 1);
+        let mut nc = NormCache::new();
+        let full = full_forward_cached(&ds, &weights, NormConfig::ROW, true, &mut nc);
+        let q: Vec<u32> = (0..8).collect();
+        assert_eq!(cache.rows(&ds, &weights, &q), gather_rows(&full, 2, &q));
+    }
+}

@@ -1,0 +1,204 @@
+//! Leader/follower request coalescing: concurrent callers enqueue
+//! node-set queries into a bounded queue; the first caller to find no
+//! active leader becomes one, drains the *whole* queue as a single
+//! flush, executes it through a caller-supplied closure, distributes
+//! the responses, and keeps draining while work is pending.  Everyone
+//! else just blocks on a per-request response slot.
+//!
+//! This shape (instead of a dedicated worker thread) keeps the executor
+//! a plain closure over the caller's borrows — no `'static` bounds, no
+//! channel of boxed jobs — and makes single-threaded behavior exactly
+//! one flush per query, which is what lets `tests/serve.rs` pin
+//! byte-identical replays.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Coalescer counters (monotonic since construction or
+/// [`Coalescer::reset_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoalesceStats {
+    /// queries submitted via [`Coalescer::run`].
+    pub queries: u64,
+    /// engine flushes executed; `flushes < queries` means coalescing
+    /// actually merged concurrent requests.
+    pub flushes: u64,
+    /// largest number of requests merged into one flush.
+    pub max_flush: usize,
+}
+
+/// One caller's response slot: filled by the flush leader, awaited by
+/// the submitter.
+struct Slot {
+    done: Mutex<Option<Vec<f32>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn fill(&self, resp: Vec<f32>) {
+        *self.done.lock().expect("slot poisoned") = Some(resp);
+        self.cv.notify_one();
+    }
+
+    fn wait(&self) -> Vec<f32> {
+        let mut g = self.done.lock().expect("slot poisoned");
+        loop {
+            if let Some(resp) = g.take() {
+                return resp;
+            }
+            g = self.cv.wait(g).expect("slot poisoned");
+        }
+    }
+}
+
+struct Pending {
+    nodes: Vec<u32>,
+    slot: Arc<Slot>,
+}
+
+struct Queue {
+    pending: Vec<Pending>,
+    /// a leader is currently draining/executing.
+    busy: bool,
+    stats: CoalesceStats,
+}
+
+/// The request coalescer; see the module docs for the leader/follower
+/// protocol.  Shared by reference across caller threads (`&Coalescer`
+/// is all [`Coalescer::run`] needs).
+pub struct Coalescer {
+    q: Mutex<Queue>,
+    /// signalled when the leader drains the queue (bounded-queue
+    /// backpressure: submitters wait here while the queue is full *and*
+    /// a leader is active).
+    space: Condvar,
+    capacity: usize,
+}
+
+impl Coalescer {
+    /// A coalescer whose queue holds at most `capacity` (≥ 1) pending
+    /// requests; submitters beyond that block until the active leader
+    /// drains (when no leader is active the submitter becomes one, so
+    /// the bound never deadlocks).
+    pub fn new(capacity: usize) -> Coalescer {
+        assert!(capacity >= 1, "coalescer capacity must be >= 1");
+        Coalescer {
+            q: Mutex::new(Queue {
+                pending: Vec::new(),
+                busy: false,
+                stats: CoalesceStats::default(),
+            }),
+            space: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Submit one query and block until its response arrives.
+    ///
+    /// `exec` runs each flush: it receives the node lists of every
+    /// request merged into the flush (submission order) and must return
+    /// exactly one response per list.  Only the flush leader's `exec`
+    /// closure runs — a call whose request rides in another caller's
+    /// flush never invokes its own — so `exec` must be the same logic
+    /// for every caller (the [`super::Server`] passes its engine).
+    ///
+    /// Single-threaded use is deterministic by construction: the caller
+    /// is always the leader, every query is its own flush, and the
+    /// response is whatever `exec` returns for it.
+    pub fn run<F>(&self, nodes: Vec<u32>, mut exec: F) -> Vec<f32>
+    where
+        F: FnMut(&[Vec<u32>]) -> Vec<Vec<f32>>,
+    {
+        let slot = Arc::new(Slot::new());
+        let mut q = self.q.lock().expect("coalescer poisoned");
+        while q.pending.len() >= self.capacity && q.busy {
+            q = self.space.wait(q).expect("coalescer poisoned");
+        }
+        q.stats.queries += 1;
+        q.pending.push(Pending { nodes, slot: Arc::clone(&slot) });
+        if !q.busy {
+            // become the leader: drain whole-queue flushes until no
+            // work is pending, then hand leadership back
+            q.busy = true;
+            while !q.pending.is_empty() {
+                let drained = std::mem::take(&mut q.pending);
+                q.stats.flushes += 1;
+                q.stats.max_flush = q.stats.max_flush.max(drained.len());
+                drop(q);
+                self.space.notify_all();
+                let mut lists = Vec::with_capacity(drained.len());
+                let mut slots = Vec::with_capacity(drained.len());
+                for p in drained {
+                    lists.push(p.nodes);
+                    slots.push(p.slot);
+                }
+                let responses = exec(&lists);
+                assert_eq!(
+                    responses.len(),
+                    lists.len(),
+                    "flush executor must return one response per request"
+                );
+                for (s, resp) in slots.iter().zip(responses) {
+                    s.fill(resp);
+                }
+                q = self.q.lock().expect("coalescer poisoned");
+            }
+            q.busy = false;
+            drop(q);
+            self.space.notify_all();
+        } else {
+            drop(q);
+        }
+        slot.wait()
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> CoalesceStats {
+        self.q.lock().expect("coalescer poisoned").stats
+    }
+
+    /// Zero the counters (e.g. after a cache warm-up pass).
+    pub fn reset_stats(&self) {
+        self.q.lock().expect("coalescer poisoned").stats = CoalesceStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_one_flush_per_query() {
+        let co = Coalescer::new(4);
+        for i in 0..5u32 {
+            let resp = co.run(vec![i, i + 1], |lists| {
+                assert_eq!(lists.len(), 1);
+                lists.iter().map(|l| l.iter().map(|&v| v as f32).collect()).collect()
+            });
+            assert_eq!(resp, vec![i as f32, (i + 1) as f32]);
+        }
+        let st = co.stats();
+        assert_eq!(st.queries, 5);
+        assert_eq!(st.flushes, 5);
+        assert_eq!(st.max_flush, 1);
+        co.reset_stats();
+        assert_eq!(co.stats().queries, 0);
+    }
+
+    #[test]
+    fn empty_query_round_trips() {
+        let co = Coalescer::new(1);
+        let resp = co.run(Vec::new(), |lists| lists.iter().map(|_| Vec::new()).collect());
+        assert!(resp.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "one response per request")]
+    fn executor_must_answer_every_request() {
+        let co = Coalescer::new(2);
+        let _ = co.run(vec![1], |_| Vec::new());
+    }
+}

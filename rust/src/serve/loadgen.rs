@@ -1,0 +1,240 @@
+//! Deterministic load generation for the serving benchmarks: query
+//! plans are pure functions of `(graph size, partition, LoadConfig)`
+//! built on [`crate::util::Rng`] streams, so two runs with the same
+//! seed replay the *same* byte-for-byte query sequence — the replay
+//! determinism the serving tests and `BENCH_serve.json` digests pin.
+//!
+//! A plan models the knobs that move cache behavior: node popularity
+//! (uniform vs power-law-ish hot set), batch size, and how often a
+//! batch crosses cluster boundaries (cross-cluster queries fan the
+//! cache's need-sets out through partition dependencies).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::Rng;
+
+use super::server::Server;
+
+/// Node-popularity model for generated queries.
+#[derive(Clone, Copy, Debug)]
+pub enum Mix {
+    /// Every node equally likely.
+    Uniform,
+    /// A fixed random hot set absorbs most of the traffic — the
+    /// skewed-popularity regime where an activation cache shines.
+    Hotset {
+        /// Fraction of nodes in the hot set (clamped to at least one
+        /// node).
+        hot_frac: f64,
+        /// Probability a query's anchor node is drawn from the hot set.
+        hot_weight: f64,
+    },
+}
+
+/// Query-plan shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    /// Popularity model.
+    pub mix: Mix,
+    /// Number of queries in the plan.
+    pub queries: usize,
+    /// Nodes per query (1 = single-node point lookups).
+    pub batch: usize,
+    /// Probability each non-anchor batch member is drawn globally
+    /// instead of from the anchor's own cluster.
+    pub cross_frac: f64,
+    /// Stream seed; same seed ⇒ same plan.
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> LoadConfig {
+        LoadConfig {
+            mix: Mix::Uniform,
+            queries: 1000,
+            batch: 1,
+            cross_frac: 0.1,
+            seed: 42,
+        }
+    }
+}
+
+/// Latency/throughput report from [`run_load`]; times in microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    /// Wall-clock of the whole run (seconds).
+    pub wall_secs: f64,
+    /// Queries per second over the whole run.
+    pub qps: f64,
+    /// Mean per-query latency.
+    pub mean_us: f64,
+    /// Median per-query latency (nearest-rank).
+    pub p50_us: f64,
+    /// 99th-percentile per-query latency (nearest-rank, so always
+    /// ≥ `p50_us`).
+    pub p99_us: f64,
+    /// Order-independent digest over every response's bits — equal
+    /// digests across runs/client-counts pin byte-identical serving.
+    pub digest: u64,
+}
+
+/// Build a deterministic query plan over a graph of `n` nodes
+/// partitioned into `clusters` (with `owner[v]` the owning cluster).
+pub fn generate(
+    n: usize,
+    owner: &[u32],
+    clusters: &[Vec<u32>],
+    cfg: &LoadConfig,
+) -> Vec<Vec<u32>> {
+    assert!(n > 0, "empty graph");
+    assert_eq!(owner.len(), n, "owner table must cover the graph");
+    let mut rng = Rng::new(cfg.seed ^ 0x5EAF_00D5);
+    let hot: Vec<u32> = match cfg.mix {
+        Mix::Uniform => Vec::new(),
+        Mix::Hotset { hot_frac, .. } => {
+            let mut perm: Vec<u32> = (0..n as u32).collect();
+            let mut r = rng.split(1);
+            r.shuffle(&mut perm);
+            let k = ((n as f64 * hot_frac).ceil() as usize).clamp(1, n);
+            perm.truncate(k);
+            perm
+        }
+    };
+    let batch = cfg.batch.max(1);
+    let mut plan = Vec::with_capacity(cfg.queries);
+    for _ in 0..cfg.queries {
+        let anchor = match cfg.mix {
+            Mix::Uniform => rng.usize_below(n) as u32,
+            Mix::Hotset { hot_weight, .. } => {
+                if rng.bool_with(hot_weight) {
+                    hot[rng.usize_below(hot.len())]
+                } else {
+                    rng.usize_below(n) as u32
+                }
+            }
+        };
+        let mut q = Vec::with_capacity(batch);
+        q.push(anchor);
+        let home = &clusters[owner[anchor as usize] as usize];
+        for _ in 1..batch {
+            let v = if !home.is_empty() && !rng.bool_with(cfg.cross_frac) {
+                home[rng.usize_below(home.len())]
+            } else {
+                rng.usize_below(n) as u32
+            };
+            q.push(v);
+        }
+        plan.push(q);
+    }
+    plan
+}
+
+/// Replay a query plan against a server from `clients` concurrent
+/// threads (client `k` takes queries `k, k+clients, …`), timing each
+/// query and folding every response into an order-independent digest.
+pub fn run_load(server: &Server<'_>, queries: &[Vec<u32>], clients: usize) -> Result<LoadReport> {
+    let clients = clients.clamp(1, queries.len().max(1));
+    let start = Instant::now();
+    let mut shards: Vec<(Vec<f64>, u64)> = Vec::with_capacity(clients);
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for k in 0..clients {
+            handles.push(s.spawn(move || -> Result<(Vec<f64>, u64)> {
+                let mut lats = Vec::new();
+                let mut digest = 0u64;
+                for (qi, q) in queries.iter().enumerate().skip(k).step_by(clients) {
+                    let t = Instant::now();
+                    let resp = server.query(q)?;
+                    // floor keeps p50 strictly positive even when a
+                    // warm single-row hit is faster than the clock tick
+                    lats.push((t.elapsed().as_secs_f64() * 1e6).max(1e-3));
+                    digest = digest.wrapping_add(response_digest(qi as u64, &resp));
+                }
+                Ok((lats, digest))
+            }));
+        }
+        for h in handles {
+            shards.push(h.join().expect("load client panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall = start.elapsed().as_secs_f64();
+    let mut lats: Vec<f64> = Vec::new();
+    let mut digest = 0u64;
+    for (l, d) in shards {
+        lats.extend_from_slice(&l);
+        digest = digest.wrapping_add(d);
+    }
+    lats.sort_unstable_by(|a, b| a.partial_cmp(b).expect("latency is never NaN"));
+    let mean = if lats.is_empty() {
+        0.0
+    } else {
+        lats.iter().sum::<f64>() / lats.len() as f64
+    };
+    Ok(LoadReport {
+        wall_secs: wall,
+        qps: lats.len() as f64 / wall.max(1e-9),
+        mean_us: mean,
+        p50_us: pct(&lats, 0.50),
+        p99_us: pct(&lats, 0.99),
+        digest,
+    })
+}
+
+/// Nearest-rank percentile over a sorted slice (monotone in `q`, so
+/// p99 ≥ p50 by construction).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Per-query digest: a salted FNV-style fold over the response bits.
+/// Queries fold in their plan index, so the whole-run digest (a
+/// wrapping sum) is independent of client count and completion order.
+fn response_digest(salt: u64, resp: &[f32]) -> u64 {
+    let mut h = salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &x in resp {
+        h = h.wrapping_mul(0x100_0000_01B3).wrapping_add(x.to_bits() as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_respect_shape() {
+        let clusters = vec![vec![0u32, 1, 2], vec![3, 4], vec![5, 6, 7]];
+        let owner = vec![0u32, 0, 0, 1, 1, 2, 2, 2];
+        let cfg = LoadConfig {
+            mix: Mix::Hotset { hot_frac: 0.25, hot_weight: 0.9 },
+            queries: 64,
+            batch: 3,
+            cross_frac: 0.2,
+            seed: 7,
+        };
+        let a = generate(8, &owner, &clusters, &cfg);
+        let b = generate(8, &owner, &clusters, &cfg);
+        assert_eq!(a, b, "same seed must replay the same plan");
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|q| q.len() == 3 && q.iter().all(|&v| v < 8)));
+        let c = generate(8, &owner, &clusters, &LoadConfig { seed: 8, ..cfg });
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank_and_monotone() {
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(pct(&lats, 0.50), 50.0);
+        assert_eq!(pct(&lats, 0.99), 99.0);
+        assert_eq!(pct(&lats, 1.0), 100.0);
+        assert!(pct(&lats, 0.99) >= pct(&lats, 0.50));
+        assert_eq!(pct(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Online inference serving on the Session/Backend stack (ROADMAP
+//! item 3): the cluster structure that makes Cluster-GCN training
+//! batches dense and reusable is exactly a serving cache key, so this
+//! layer answers single-node / node-batch queries with
+//!
+//! - [`cache::ActivationCache`] — a partition-keyed layered activation
+//!   cache: per-(layer, cluster) entries over the full-graph-normalized
+//!   adjacency, computed demand-driven through the tiled
+//!   [`crate::coordinator::inference::spmm_layer_rows_into`] kernel and
+//!   invalidated by weight version — responses are **bit-identical** to
+//!   rows of the offline
+//!   [`crate::coordinator::inference::full_forward_cached`] forward;
+//! - [`coalesce::Coalescer`] — a leader/follower request coalescer:
+//!   concurrent callers enqueue into a bounded queue, one caller drains
+//!   the whole queue as a single flush, executes it, and distributes
+//!   responses, so k concurrent queries cost one engine pass;
+//! - [`server::Server`] — the synchronous in-process request/response
+//!   front tying the two together (a socket transport is ROADMAP item
+//!   4's job), with a weight-install hook (`apply_grads` /
+//!   checkpoint-load integration point) that makes cache invalidation
+//!   load-bearing;
+//! - [`loadgen`] — a deterministic load generator
+//!   ([`crate::util::Rng`] streams) replaying configurable query mixes
+//!   (uniform, hot-set, intra- vs cross-cluster batches) and reporting
+//!   p50/p99 latency + QPS.
+//!
+//! The CLI `serve` mode (see `cli/usage.txt`) loads a `CGCNCKP2`
+//! checkpoint, warms the cache, runs the load generator, and writes
+//! `bench_results/BENCH_serve.json`.  See ARCHITECTURE.md "Serving
+//! layer" for the cache keying / invalidation contract and PERF.md for
+//! the expected hit-rate vs query-mix model.
+#![deny(missing_docs)]
+
+pub mod cache;
+pub mod coalesce;
+pub mod loadgen;
+pub mod server;
+
+pub use cache::{ActivationCache, CacheStats};
+pub use coalesce::{CoalesceStats, Coalescer};
+pub use loadgen::{generate, run_load, LoadConfig, LoadReport, Mix};
+pub use server::{ServeConfig, ServeMode, Server, ServerStats};

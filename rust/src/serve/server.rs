@@ -1,0 +1,591 @@
+//! The synchronous in-process serving front: glues the
+//! [`Coalescer`] to one of two execution engines behind a weight-install
+//! hook.
+//!
+//! - [`ServeMode::ExactCached`] (default): the partition-keyed
+//!   [`ActivationCache`] over the full-graph normalized adjacency —
+//!   responses are bit-identical to rows of the offline
+//!   [`crate::coordinator::inference::full_forward_cached`] forward,
+//!   in every cache state.
+//! - [`ServeMode::Clustered`]: the Cluster-GCN **training**
+//!   approximation served online — each flush groups queries by owning
+//!   partition, assembles one (clusters ∪ halo) subgraph per group
+//!   through the zero-alloc [`BatchAssembler`] (block-renormalized
+//!   adjacency, so responses are Δ-approximate, not bit-identical —
+//!   except with a single partition, where the block *is* the full
+//!   graph and parity holds bitwise), and double-buffers assembly
+//!   against execution via [`pool::pipeline`] so flush-group `i+1`
+//!   assembles while `i` runs the kernels.
+//!
+//! A socket transport is deliberately out of scope here (ROADMAP item
+//! 4); callers are in-process threads sharing `&Server`.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::inference::spmm_layer_raw_into;
+use crate::coordinator::{Batch, BatchAssembler};
+use crate::graph::Dataset;
+use crate::norm::NormConfig;
+use crate::runtime::Tensor;
+use crate::util::pool;
+
+use super::cache::ActivationCache;
+use super::coalesce::Coalescer;
+
+/// Which execution engine answers flushes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Partition-keyed activation cache over the full-graph
+    /// normalization; bit-identical to the offline forward.
+    ExactCached,
+    /// Per-flush (clusters ∪ halo) subgraph forward with block
+    /// renormalization — the training-time approximation served online.
+    Clustered,
+}
+
+/// Server construction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Execution engine (see [`ServeMode`]).
+    pub mode: ServeMode,
+    /// Bounded coalescer queue depth (≥ 1); submitters beyond it block
+    /// until the active flush drains.
+    pub queue_capacity: usize,
+    /// Kernel thread cap for the engine.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            mode: ServeMode::ExactCached,
+            queue_capacity: 64,
+            threads: pool::default_threads(),
+        }
+    }
+}
+
+/// Combined serving counters: coalescer + (exact-mode) cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    /// queries answered.
+    pub queries: u64,
+    /// engine flushes executed (< queries means coalescing merged
+    /// concurrent requests).
+    pub flushes: u64,
+    /// largest number of requests merged into one flush.
+    pub max_flush: usize,
+    /// cache entry hits (exact mode; 0 in clustered mode).
+    pub hits: u64,
+    /// cache entries computed (exact mode; 0 in clustered mode).
+    pub misses: u64,
+    /// stale cache entries overwritten after invalidation (exact mode).
+    pub evictions: u64,
+}
+
+/// Exact-mode or clustered-mode state, plus the served weights, all
+/// behind one lock so a flush always sees a consistent
+/// (weights, cache-version) pair.
+struct Engine {
+    weights: Vec<Tensor>,
+    exact: Option<ActivationCache>,
+    clustered: Option<Clustered>,
+}
+
+/// The in-process serving front.  Share `&Server` across caller
+/// threads; every public method takes `&self`.
+pub struct Server<'a> {
+    ds: &'a Dataset,
+    mode: ServeMode,
+    classes: usize,
+    clusters: Vec<Vec<u32>>,
+    owner: Vec<u32>,
+    engine: Mutex<Engine>,
+    coalescer: Coalescer,
+}
+
+impl<'a> Server<'a> {
+    /// Build a server over `ds` partitioned into `clusters` (every node
+    /// in exactly one cluster), serving `weights` trained under
+    /// `(norm, residual)`.
+    pub fn new(
+        ds: &'a Dataset,
+        clusters: Vec<Vec<u32>>,
+        weights: Vec<Tensor>,
+        norm: NormConfig,
+        residual: bool,
+        cfg: ServeConfig,
+    ) -> Result<Server<'a>> {
+        if weights.is_empty() {
+            bail!("serving needs at least one layer of weights");
+        }
+        if weights[0].dims[0] != ds.f_in {
+            bail!(
+                "layer 0 expects {} input features, dataset has {}",
+                weights[0].dims[0],
+                ds.f_in
+            );
+        }
+        for l in 1..weights.len() {
+            if weights[l].dims[0] != weights[l - 1].dims[1] {
+                bail!(
+                    "layer {l} in-dim {} != layer {} out-dim {}",
+                    weights[l].dims[0],
+                    l - 1,
+                    weights[l - 1].dims[1]
+                );
+            }
+        }
+        let covered: usize = clusters.iter().map(|c| c.len()).sum();
+        if covered != ds.n() {
+            bail!("clusters cover {covered} nodes, graph has {}", ds.n());
+        }
+        let mut owner = vec![0u32; ds.n()];
+        for (c, nodes) in clusters.iter().enumerate() {
+            for &v in nodes {
+                owner[v as usize] = c as u32;
+            }
+        }
+        let classes = weights.last().unwrap().dims[1];
+        let threads = cfg.threads.max(1);
+        let engine = match cfg.mode {
+            ServeMode::ExactCached => Engine {
+                weights,
+                exact: Some(ActivationCache::new(
+                    ds,
+                    clusters.clone(),
+                    norm,
+                    residual,
+                    threads,
+                )),
+                clustered: None,
+            },
+            ServeMode::Clustered => Engine {
+                weights,
+                exact: None,
+                clustered: Some(Clustered::new(ds, &clusters, norm, residual, threads)),
+            },
+        };
+        Ok(Server {
+            ds,
+            mode: cfg.mode,
+            classes,
+            clusters,
+            owner,
+            engine: Mutex::new(engine),
+            coalescer: Coalescer::new(cfg.queue_capacity.max(1)),
+        })
+    }
+
+    /// Final-layer rows for `nodes`, row-major `nodes.len() × classes`
+    /// (duplicates allowed, any order).  Blocks until the flush carrying
+    /// this request executes; concurrent callers are coalesced.
+    pub fn query(&self, nodes: &[u32]) -> Result<Vec<f32>> {
+        let n = self.ds.n();
+        for &v in nodes {
+            if v as usize >= n {
+                bail!("query node {v} out of range (n = {n})");
+            }
+        }
+        Ok(self
+            .coalescer
+            .run(nodes.to_vec(), |lists| self.execute(lists)))
+    }
+
+    /// Single-node convenience wrapper over [`Server::query`].
+    pub fn query_one(&self, v: u32) -> Result<Vec<f32>> {
+        self.query(&[v])
+    }
+
+    /// Install new weights (the `apply_grads` / checkpoint-load
+    /// integration point).  Shapes must match the served model exactly;
+    /// in exact mode this bumps the cache version so no stale activation
+    /// is ever served.
+    pub fn install_weights(&self, weights: Vec<Tensor>) -> Result<()> {
+        let mut eng = self.engine.lock().expect("engine poisoned");
+        if weights.len() != eng.weights.len() {
+            bail!(
+                "weight install has {} layers, model has {}",
+                weights.len(),
+                eng.weights.len()
+            );
+        }
+        for (l, (nw, ow)) in weights.iter().zip(&eng.weights).enumerate() {
+            if nw.dims != ow.dims {
+                bail!(
+                    "layer {l} shape {:?} != served shape {:?}",
+                    nw.dims,
+                    ow.dims
+                );
+            }
+        }
+        eng.weights = weights;
+        if let Some(cache) = eng.exact.as_mut() {
+            cache.bump_version();
+        }
+        Ok(())
+    }
+
+    /// Load a `CGCNCKP2` checkpoint and install its weights; returns
+    /// the checkpoint's epoch.
+    pub fn load_checkpoint(&self, path: &std::path::Path) -> Result<usize> {
+        let ck = checkpoint::load_full(path)?;
+        self.install_weights(ck.state.weights)
+            .map_err(|e| anyhow!("checkpoint {}: {e}", path.display()))?;
+        Ok(ck.epoch)
+    }
+
+    /// Precompute every cache entry at the current weights (exact mode;
+    /// a no-op in clustered mode, which keeps no cross-flush state).
+    pub fn warm(&self) {
+        let mut guard = self.engine.lock().expect("engine poisoned");
+        let eng = &mut *guard;
+        if let Some(cache) = eng.exact.as_mut() {
+            cache.warm(self.ds, &eng.weights);
+        }
+    }
+
+    /// Snapshot of the combined counters.
+    pub fn stats(&self) -> ServerStats {
+        let co = self.coalescer.stats();
+        let mut st = ServerStats {
+            queries: co.queries,
+            flushes: co.flushes,
+            max_flush: co.max_flush,
+            ..ServerStats::default()
+        };
+        if let Some(cache) = self
+            .engine
+            .lock()
+            .expect("engine poisoned")
+            .exact
+            .as_ref()
+        {
+            let cs = cache.stats();
+            st.hits = cs.hits;
+            st.misses = cs.misses;
+            st.evictions = cs.evictions;
+        }
+        st
+    }
+
+    /// Zero every counter (e.g. after warm-up, before a benchmark run).
+    pub fn reset_stats(&self) {
+        self.coalescer.reset_stats();
+        if let Some(cache) = self
+            .engine
+            .lock()
+            .expect("engine poisoned")
+            .exact
+            .as_mut()
+        {
+            cache.reset_stats();
+        }
+    }
+
+    /// Output width of the served model.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The engine mode this server was built with.
+    pub fn mode(&self) -> ServeMode {
+        self.mode
+    }
+
+    /// The partition the server is keyed by.
+    pub fn clusters(&self) -> &[Vec<u32>] {
+        &self.clusters
+    }
+
+    /// node id → owning cluster id.
+    pub fn owner(&self) -> &[u32] {
+        &self.owner
+    }
+
+    /// Run one flush: every request list in, one response per list out.
+    fn execute(&self, lists: &[Vec<u32>]) -> Vec<Vec<f32>> {
+        let mut guard = self.engine.lock().expect("engine poisoned");
+        let eng = &mut *guard;
+        if let Some(cache) = eng.exact.as_mut() {
+            lists
+                .iter()
+                .map(|l| cache.rows(self.ds, &eng.weights, l))
+                .collect()
+        } else {
+            let cl = eng.clustered.as_mut().expect("engine has exactly one mode");
+            cl.execute(
+                self.ds,
+                &self.clusters,
+                &self.owner,
+                &eng.weights,
+                self.classes,
+                lists,
+            )
+        }
+    }
+}
+
+/// Clustered-mode flush state: a reusable [`BatchAssembler`] plus the
+/// double buffers [`pool::pipeline`] ping-pongs between assembly and
+/// execution.
+struct Clustered {
+    residual: bool,
+    threads: usize,
+    /// cluster → |cluster ∪ neighbors| — the subgraph footprint packing
+    /// uses to group clusters into one flush batch.
+    reach: Vec<usize>,
+    b_max: usize,
+    assembler: BatchAssembler,
+    /// the two pipeline batches (taken during a flush, restored after).
+    bufs: Option<(Batch, Batch)>,
+    /// node → local row index in the batch last scattered; only
+    /// positions of freshly written nodes are read, so it is never
+    /// cleared ([`Batch::index_positions`]).
+    pos: Vec<u32>,
+    /// flush-wide `n × classes` staging rows (owned-cluster rows only).
+    rows: Vec<f32>,
+    /// cluster-level dedup scratch.
+    marked: Vec<bool>,
+    /// forward ping-pong buffers, grown on demand.
+    cur: Vec<f32>,
+    nxt: Vec<f32>,
+}
+
+impl Clustered {
+    fn new(
+        ds: &Dataset,
+        clusters: &[Vec<u32>],
+        norm: NormConfig,
+        residual: bool,
+        threads: usize,
+    ) -> Clustered {
+        let n = ds.n();
+        let mut seen = vec![false; n];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut reach = Vec::with_capacity(clusters.len());
+        for nodes in clusters {
+            let mut count = 0usize;
+            for &v in nodes {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    touched.push(v);
+                    count += 1;
+                }
+                for &u in ds.graph.neighbors(v as usize) {
+                    if !seen[u as usize] {
+                        seen[u as usize] = true;
+                        touched.push(u);
+                        count += 1;
+                    }
+                }
+            }
+            for &v in &touched {
+                seen[v as usize] = false;
+            }
+            touched.clear();
+            reach.push(count);
+        }
+        let b_max = reach
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .max(1)
+            .next_multiple_of(8);
+        let assembler = BatchAssembler::new(n, b_max, norm);
+        Clustered {
+            residual,
+            threads,
+            reach,
+            b_max,
+            assembler,
+            bufs: None,
+            pos: vec![0u32; n],
+            rows: Vec::new(),
+            marked: vec![false; clusters.len()],
+            cur: Vec::new(),
+            nxt: Vec::new(),
+        }
+    }
+
+    fn execute(
+        &mut self,
+        ds: &Dataset,
+        clusters: &[Vec<u32>],
+        owner: &[u32],
+        weights: &[Tensor],
+        classes: usize,
+        lists: &[Vec<u32>],
+    ) -> Vec<Vec<f32>> {
+        // 1. clusters this flush touches, sorted for determinism
+        let mut needed: Vec<u32> = Vec::new();
+        for l in lists {
+            for &v in l {
+                let c = owner[v as usize] as usize;
+                if !self.marked[c] {
+                    self.marked[c] = true;
+                    needed.push(c as u32);
+                }
+            }
+        }
+        needed.sort_unstable();
+        for &c in &needed {
+            self.marked[c as usize] = false;
+        }
+
+        // 2. greedy pack clusters into flush groups under the subgraph
+        //    footprint budget (b_max covers the largest single cluster
+        //    by construction, so every cluster fits somewhere)
+        let mut groups: Vec<Vec<u32>> = Vec::new();
+        let mut size = 0usize;
+        for &c in &needed {
+            let r = self.reach[c as usize];
+            if groups.is_empty() || size + r > self.b_max {
+                groups.push(vec![c]);
+                size = r;
+            } else {
+                groups.last_mut().unwrap().push(c);
+                size += r;
+            }
+        }
+
+        // 3. one (clusters ∪ halo) node set per group
+        let group_nodes: Vec<Vec<u32>> = groups
+            .iter()
+            .map(|g| {
+                let mut nodes: Vec<u32> = Vec::new();
+                for &c in g {
+                    for &v in &clusters[c as usize] {
+                        nodes.push(v);
+                        nodes.extend_from_slice(ds.graph.neighbors(v as usize));
+                    }
+                }
+                nodes.sort_unstable();
+                nodes.dedup();
+                nodes
+            })
+            .collect();
+
+        // 4. double-buffered assemble/execute: group i+1 assembles on
+        //    the pipeline's helper thread while group i runs the kernels
+        if self.rows.len() < ds.n() * classes {
+            self.rows.resize(ds.n() * classes, 0.0);
+        }
+        let (a, b) = match self.bufs.take() {
+            Some(pair) => pair,
+            None => (self.assembler.new_batch(ds), self.assembler.new_batch(ds)),
+        };
+        let assembler = &mut self.assembler;
+        let pos = &mut self.pos;
+        let rows = &mut self.rows;
+        let cur = &mut self.cur;
+        let nxt = &mut self.nxt;
+        let (threads, residual) = (self.threads, self.residual);
+        let bufs = pool::pipeline(
+            group_nodes.len(),
+            a,
+            b,
+            |i, batch| assembler.assemble_into(ds, &group_nodes[i], batch),
+            |i, batch| {
+                forward_scatter(
+                    weights, batch, &groups[i], clusters, pos, rows, cur, nxt, threads,
+                    residual, classes,
+                );
+                true
+            },
+        );
+        self.bufs = Some(bufs);
+
+        // 5. gather each request's rows from the staging buffer
+        lists
+            .iter()
+            .map(|l| {
+                let mut out = vec![0f32; l.len() * classes];
+                for (i, &v) in l.iter().enumerate() {
+                    out[i * classes..(i + 1) * classes].copy_from_slice(
+                        &self.rows[v as usize * classes..(v as usize + 1) * classes],
+                    );
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// Forward one assembled (clusters ∪ halo) batch through the tiled
+/// kernels — mirroring the host backend's inference forward exactly —
+/// then scatter **only the rows of clusters owned by this group** into
+/// the flush staging buffer.  Halo rows are computed with truncated
+/// neighborhoods and must never overwrite a row another group owns.
+#[allow(clippy::too_many_arguments)]
+fn forward_scatter(
+    weights: &[Tensor],
+    batch: &Batch,
+    group: &[u32],
+    clusters: &[Vec<u32>],
+    pos: &mut [u32],
+    out_rows: &mut [f32],
+    cur: &mut Vec<f32>,
+    nxt: &mut Vec<f32>,
+    threads: usize,
+    residual: bool,
+    classes: usize,
+) {
+    let m = batch.n_real;
+    if m == 0 {
+        return;
+    }
+    let blk = &batch.block;
+    debug_assert_eq!(blk.n(), m, "batch must carry its sparse block");
+    let f_in = weights[0].dims[0];
+    let max_w = weights
+        .iter()
+        .map(|w| w.dims[1])
+        .chain([f_in])
+        .max()
+        .expect("at least one layer");
+    if cur.len() < m * max_w {
+        cur.resize(m * max_w, 0.0);
+    }
+    if nxt.len() < m * max_w {
+        nxt.resize(m * max_w, 0.0);
+    }
+    cur[..m * f_in].copy_from_slice(&batch.x.data[..m * f_in]);
+    let mut f = f_in;
+    let last = weights.len() - 1;
+    for (l, w) in weights.iter().enumerate() {
+        let g_dim = w.dims[1];
+        spmm_layer_raw_into(
+            &blk.offsets,
+            &blk.cols,
+            &blk.vals,
+            &blk.self_loop,
+            &cur[..m * f],
+            f,
+            w,
+            l != last,
+            threads,
+            &mut nxt[..m * g_dim],
+        );
+        if residual && l != last && g_dim == f {
+            for i in 0..m * f {
+                nxt[i] += cur[i];
+            }
+        }
+        std::mem::swap(cur, nxt);
+        f = g_dim;
+    }
+    assert_eq!(f, classes, "final layer width must equal classes");
+    batch.index_positions(pos);
+    for &c in group {
+        for &v in &clusters[c as usize] {
+            let i = pos[v as usize] as usize;
+            out_rows[v as usize * classes..(v as usize + 1) * classes]
+                .copy_from_slice(&cur[i * classes..(i + 1) * classes]);
+        }
+    }
+}

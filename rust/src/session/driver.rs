@@ -283,6 +283,24 @@ impl<'a> Driver<'a> {
         &self.curve
     }
 
+    /// Override the base learning rate for epochs that have not started
+    /// yet ([`TrainConfig::schedule`] still shapes the per-epoch rate on
+    /// top of this base).  The application hook for
+    /// [`super::schedule::Directive::SetLr`] — pair it with
+    /// [`crate::coordinator::LrSchedule::Constant`] so the external
+    /// schedule is the only rate policy in play.
+    pub fn set_base_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    /// Request a graceful stop: no further epoch starts, exactly as if
+    /// [`TrainConfig::patience`] had fired ([`Event::Done`] still
+    /// arrives).  The application hook for
+    /// [`super::schedule::Directive::Stop`].
+    pub fn request_stop(&mut self) {
+        self.stopped = true;
+    }
+
     /// Advance the state machine to its next visible transition and
     /// yield the event for it; `Ok(None)` once [`Event::Done`] has been
     /// delivered.  Errors from the backend or evaluator abort the run.

@@ -49,6 +49,7 @@
 
 pub mod driver;
 pub mod observer;
+pub mod schedule;
 
 use std::path::PathBuf;
 
@@ -383,6 +384,54 @@ impl<'a> Session<'a> {
     /// method's batch source — then hand the loop to the caller.
     pub fn driver(self) -> Result<Driver<'a>> {
         self.into_driver_parts().map(|(d, _, _)| d)
+    }
+
+    /// Build an online-serving [`crate::serve::Server`] from this
+    /// session: partition the graph exactly as training would (same
+    /// partitioner, same `seed ^ 0xBEEF` stream, so serving cache keys
+    /// are the training clusters), resolve the model shape from the
+    /// config/preset, and serve either the session's
+    /// [`Session::initial_state`] weights (e.g. a loaded checkpoint) or
+    /// a fresh deterministic init.  The server's exact mode answers
+    /// queries bit-identical to the offline
+    /// [`crate::coordinator::inference::full_forward_cached`] forward.
+    pub fn into_server(self, serve: crate::serve::ServeConfig) -> Result<crate::serve::Server<'a>> {
+        let Session { ds, cfg, parts, random_partition, initial, .. } = self;
+        if cfg.layers == 0 {
+            return Err(anyhow!("a model needs at least one layer"));
+        }
+        let p = preset(&ds.name);
+        let parts_n = parts
+            .or(p.map(|p| p.default_partitions))
+            .unwrap_or(10)
+            .clamp(1, ds.n().max(1));
+        let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+        let part = if random_partition {
+            RandomPartitioner.partition(&ds.graph, parts_n, &mut rng)
+        } else {
+            MultilevelPartitioner::default().partition(&ds.graph, parts_n, &mut rng)
+        };
+        let clusters = parts_to_clusters(&part, parts_n);
+        let f_hid = cfg.hidden.or(p.map(|p| p.f_hid)).unwrap_or(128);
+        // b_max only shapes batch assembly, which serving sizes itself;
+        // the weight shapes it implies are what matter here
+        let spec = ModelSpec::gcn(ds.task, cfg.layers, ds.f_in, f_hid, ds.num_classes, 8);
+        let weights = match initial {
+            Some(st) => {
+                let want = &spec.weight_shapes;
+                let got: Vec<(usize, usize)> =
+                    st.weights.iter().map(|w| (w.dims[0], w.dims[1])).collect();
+                if got != *want {
+                    return Err(anyhow!(
+                        "initial state weight shapes {got:?} do not match the \
+                         session's model {want:?} (layers/hidden/preset mismatch?)"
+                    ));
+                }
+                st.weights
+            }
+            None => TrainState::init(&spec, cfg.seed).weights,
+        };
+        crate::serve::Server::new(ds, clusters, weights, cfg.norm, spec.residual, serve)
     }
 
     fn into_driver_parts(

@@ -1,0 +1,297 @@
+//! Caller-side training schedules: patience-based early stopping and
+//! step/**cosine** learning-rate decay as reusable [`Event`] consumers.
+//!
+//! The [`super::driver::Driver`] already applies the *internal*
+//! [`crate::coordinator::LrSchedule`] and [`TrainConfig::patience`]
+//! policies; this module is the composable alternative for callers
+//! driving the steppable event loop themselves — feed every event to a
+//! [`Schedule`] and apply the [`Directive`]s it emits via
+//! [`super::driver::Driver::set_base_lr`] /
+//! [`super::driver::Driver::request_stop`].  Configure the driver with
+//! [`crate::coordinator::LrSchedule::Constant`] and `patience: 0` so
+//! the external schedule is the only policy in play.
+//!
+//! A schedule is a **pure function of (config, event stream)**: it
+//! reads nothing but the events it is fed and keeps no clock, so
+//! identical streams produce identical directive sequences (pinned by
+//! the unit tests below).
+
+use crate::coordinator::CurvePoint;
+
+use super::observer::Event;
+
+#[allow(unused_imports)] // doc links
+use super::TrainConfig;
+
+/// Learning-rate decay family (applied to [`ScheduleConfig::base_lr`]
+/// as a function of the 1-based epoch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decay {
+    /// No decay.
+    Constant,
+    /// Multiply by `factor` every `every` epochs — mirrors
+    /// [`crate::coordinator::LrSchedule::StepDecay`] exactly, so the
+    /// two implementations are interchangeable.
+    Step {
+        /// Epochs per step (0 disables decay).
+        every: usize,
+        /// Multiplier per step.
+        factor: f32,
+    },
+    /// Cosine annealing from `base_lr` at epoch 1 down to
+    /// `base_lr * min_frac` at [`ScheduleConfig::total_epochs`].
+    Cosine {
+        /// Final learning rate as a fraction of the base.
+        min_frac: f32,
+    },
+}
+
+/// Schedule configuration; the schedule is a pure function of this plus
+/// the event stream.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleConfig {
+    /// Epoch-1 learning rate.
+    pub base_lr: f32,
+    /// Planned run length (the cosine horizon; unused by other decays).
+    pub total_epochs: usize,
+    /// Decay family.
+    pub decay: Decay,
+    /// Early-stop patience: stop after this many consecutive
+    /// [`Event::Eval`]s without a new best `eval_f1` (0 = never stop).
+    pub patience: usize,
+}
+
+/// What the caller should do to the driver in response to an event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Directive {
+    /// Apply via [`super::driver::Driver::set_base_lr`] — the rate for
+    /// the upcoming epoch.
+    SetLr(f32),
+    /// Apply via [`super::driver::Driver::request_stop`].
+    Stop,
+}
+
+/// The learning rate `cfg` prescribes for a 1-based `epoch` — exposed
+/// as a free function so tests can pin the whole curve without
+/// replaying events.
+pub fn lr_for(cfg: &ScheduleConfig, epoch: usize) -> f32 {
+    let e = epoch.max(1);
+    match cfg.decay {
+        Decay::Constant => cfg.base_lr,
+        Decay::Step { every, factor } => {
+            if every == 0 {
+                cfg.base_lr
+            } else {
+                cfg.base_lr * factor.powi(((e - 1) / every) as i32)
+            }
+        }
+        Decay::Cosine { min_frac } => {
+            let t = cfg.total_epochs;
+            if t <= 1 {
+                cfg.base_lr
+            } else {
+                let phase =
+                    std::f32::consts::PI * (e.min(t) - 1) as f32 / (t - 1) as f32;
+                cfg.base_lr * (min_frac + (1.0 - min_frac) * 0.5 * (1.0 + phase.cos()))
+            }
+        }
+    }
+}
+
+/// Stateful consumer over a [`super::driver::Driver`]'s event stream;
+/// see the module docs for wiring.
+pub struct Schedule {
+    cfg: ScheduleConfig,
+    lr: f32,
+    best: f64,
+    since_best: usize,
+    stopped: bool,
+}
+
+impl Schedule {
+    /// A schedule starting at `lr_for(cfg, 1)`.
+    pub fn new(cfg: ScheduleConfig) -> Schedule {
+        Schedule {
+            lr: lr_for(&cfg, 1),
+            cfg,
+            best: f64::NEG_INFINITY,
+            since_best: 0,
+            stopped: false,
+        }
+    }
+
+    /// Feed one event; returns at most one directive to apply.
+    ///
+    /// - [`Event::EpochEnd`] for epoch `e` → [`Directive::SetLr`] with
+    ///   the epoch-`e+1` rate, when it differs from the current one.
+    /// - [`Event::Eval`] → patience bookkeeping on
+    ///   [`CurvePoint::eval_f1`]; emits [`Directive::Stop`] once when
+    ///   patience runs out.
+    /// - Every other event is bookkeeping-free and returns `None`.
+    pub fn observe(&mut self, ev: &Event) -> Option<Directive> {
+        if self.stopped {
+            return None;
+        }
+        match ev {
+            Event::EpochEnd { epoch, .. } => {
+                let next = lr_for(&self.cfg, epoch + 1);
+                if next != self.lr {
+                    self.lr = next;
+                    Some(Directive::SetLr(next))
+                } else {
+                    None
+                }
+            }
+            Event::Eval { point } => self.observe_eval(point),
+            _ => None,
+        }
+    }
+
+    fn observe_eval(&mut self, point: &CurvePoint) -> Option<Directive> {
+        if self.cfg.patience == 0 {
+            return None;
+        }
+        if point.eval_f1 > self.best {
+            self.best = point.eval_f1;
+            self.since_best = 0;
+            None
+        } else {
+            self.since_best += 1;
+            if self.since_best >= self.cfg.patience {
+                self.stopped = true;
+                Some(Directive::Stop)
+            } else {
+                None
+            }
+        }
+    }
+
+    /// The rate currently in effect.
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Whether a [`Directive::Stop`] has been emitted.
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Best `eval_f1` seen so far (`-inf` before the first eval).
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(epoch: usize, f1: f64) -> Event {
+        Event::Eval {
+            point: CurvePoint {
+                epoch,
+                train_seconds: 0.0,
+                train_loss: 1.0,
+                eval_f1: f1,
+            },
+        }
+    }
+
+    fn epoch_end(epoch: usize) -> Event {
+        Event::EpochEnd { epoch, train_seconds: 0.0, mean_loss: 1.0 }
+    }
+
+    fn replay(cfg: ScheduleConfig, stream: &[Event]) -> Vec<Option<Directive>> {
+        let mut s = Schedule::new(cfg);
+        stream.iter().map(|e| s.observe(e)).collect()
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_config_and_event_stream() {
+        let cfg = ScheduleConfig {
+            base_lr: 0.1,
+            total_epochs: 6,
+            decay: Decay::Cosine { min_frac: 0.1 },
+            patience: 2,
+        };
+        let stream: Vec<Event> = (1..=6)
+            .flat_map(|e| {
+                vec![
+                    Event::StepStart { epoch: e, step: 0 },
+                    Event::StepEnd { epoch: e, step: 0, loss: Some(0.5), batches: 1 },
+                    epoch_end(e),
+                    eval(e, 0.8 - 0.05 * e as f64),
+                ]
+            })
+            .collect();
+        let a = replay(cfg, &stream);
+        let b = replay(cfg, &stream);
+        assert_eq!(a, b, "identical streams must produce identical directives");
+        // step events never produce directives
+        for (ev, d) in stream.iter().zip(&a) {
+            if matches!(ev, Event::StepStart { .. } | Event::StepEnd { .. }) {
+                assert_eq!(*d, None);
+            }
+        }
+        // declining f1 with patience 2 stops at the second non-best eval
+        assert_eq!(a[4 * 2 + 3], Some(Directive::Stop));
+        assert!(a[4 * 2 + 3 + 1..].iter().all(|d| d.is_none()), "stop is terminal");
+    }
+
+    #[test]
+    fn cosine_hits_its_endpoints() {
+        let cfg = ScheduleConfig {
+            base_lr: 0.2,
+            total_epochs: 10,
+            decay: Decay::Cosine { min_frac: 0.05 },
+            patience: 0,
+        };
+        assert_eq!(lr_for(&cfg, 1), 0.2);
+        let end = lr_for(&cfg, 10);
+        assert!((end - 0.2 * 0.05).abs() < 1e-6, "end lr {end}");
+        // monotone non-increasing across the horizon
+        for e in 1..10 {
+            assert!(lr_for(&cfg, e + 1) <= lr_for(&cfg, e) + 1e-9);
+        }
+        // past the horizon it clamps at the floor
+        assert_eq!(lr_for(&cfg, 25), end);
+    }
+
+    #[test]
+    fn step_decay_matches_the_internal_lr_schedule() {
+        let cfg = ScheduleConfig {
+            base_lr: 0.08,
+            total_epochs: 12,
+            decay: Decay::Step { every: 3, factor: 0.5 },
+            patience: 0,
+        };
+        let internal = crate::coordinator::LrSchedule::StepDecay { every: 3, factor: 0.5 };
+        for e in 1..=12 {
+            assert_eq!(lr_for(&cfg, e), internal.lr_at(0.08, e, 12), "epoch {e}");
+        }
+        // directives fire exactly at step boundaries
+        let mut s = Schedule::new(cfg);
+        let mut sets = Vec::new();
+        for e in 1..=12 {
+            if let Some(Directive::SetLr(lr)) = s.observe(&epoch_end(e)) {
+                sets.push((e, lr));
+            }
+        }
+        assert_eq!(sets, vec![(3, 0.04), (6, 0.02), (9, 0.01)]);
+    }
+
+    #[test]
+    fn patience_zero_never_stops() {
+        let cfg = ScheduleConfig {
+            base_lr: 0.1,
+            total_epochs: 4,
+            decay: Decay::Constant,
+            patience: 0,
+        };
+        let mut s = Schedule::new(cfg);
+        for e in 1..=50 {
+            assert_eq!(s.observe(&eval(e, -1.0)), None);
+        }
+        assert!(!s.stopped());
+    }
+}

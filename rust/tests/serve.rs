@@ -1,0 +1,291 @@
+//! Serving-layer acceptance suite:
+//!
+//! - **parity**: exact-mode responses are bit-identical to rows of the
+//!   offline `full_forward_cached` forward — cache-cold, cache-warm,
+//!   and after invalidation (the ISSUE's serving-parity property);
+//! - **invalidation is load-bearing**: installing perturbed weights
+//!   mid-serve evicts stale entries and answers match a fresh offline
+//!   forward under the new weights;
+//! - **coalescing**: N concurrent callers each receive their own
+//!   correct row while the flush count stays below the query count,
+//!   and single-threaded replays are byte-identical with exactly one
+//!   flush per query;
+//! - **clustered mode**: with a single partition the block-renormalized
+//!   subgraph *is* the full graph, so clustered serving is bitwise
+//!   exact; with many partitions it replays deterministically;
+//! - **load generator**: plans and digests are pure functions of the
+//!   seed, and warm exact-mode runs serve entirely from cache.
+
+use cluster_gcn::coordinator::inference::{full_forward_cached, gather_rows};
+use cluster_gcn::coordinator::trainer::TrainState;
+use cluster_gcn::datagen::features::{gen_features, gen_labels, LabelModel};
+use cluster_gcn::datagen::{generate as gen_graph, SbmSpec};
+use cluster_gcn::graph::{Dataset, Split, Task};
+use cluster_gcn::norm::{NormCache, NormConfig};
+use cluster_gcn::runtime::ModelSpec;
+use cluster_gcn::serve::{
+    generate, run_load, Coalescer, LoadConfig, Mix, ServeConfig, ServeMode, Server,
+};
+use cluster_gcn::session::{Session, TrainConfig};
+use cluster_gcn::util::Rng;
+
+/// A tiny SBM dataset with strong community→label→feature coupling
+/// (same construction as `tests/driver.rs`).
+fn tiny_sbm(seed: u64) -> Dataset {
+    let n = 240;
+    let communities = 8;
+    let classes = 4;
+    let f_in = 16;
+    let mut rng = Rng::new(seed);
+    let sbm = gen_graph(
+        &SbmSpec { n, communities, avg_deg: 8.0, intra_frac: 0.9, size_skew: 0.5 },
+        &mut rng,
+    );
+    let labels = gen_labels(
+        &LabelModel { task: Task::Multiclass, classes, noise: 0.05, active_per_community: 0 },
+        &sbm.community,
+        communities,
+        &mut rng,
+    );
+    let features =
+        gen_features(&labels, &sbm.community, communities, classes, f_in, 0.3, &mut rng);
+    let split = (0..n)
+        .map(|i| match i % 10 {
+            0..=6 => Split::Train,
+            7..=8 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+    let ds = Dataset {
+        name: "tiny_sbm".into(),
+        task: Task::Multiclass,
+        graph: sbm.graph,
+        f_in,
+        num_classes: classes,
+        features,
+        labels,
+        split,
+    };
+    ds.validate().unwrap();
+    ds
+}
+
+const HIDDEN: usize = 32;
+
+fn serve_cfg(seed: u64) -> TrainConfig {
+    TrainConfig { layers: 2, hidden: Some(HIDDEN), seed, ..TrainConfig::default() }
+}
+
+/// The weights `Session::into_server` serves for `serve_cfg(seed)`
+/// with no initial state — replicated here so tests can run the
+/// offline oracle under the identical parameters.
+fn served_weights(ds: &Dataset, seed: u64) -> Vec<cluster_gcn::runtime::Tensor> {
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, HIDDEN, ds.num_classes, 8);
+    TrainState::init(&spec, seed).weights
+}
+
+fn offline_logits(ds: &Dataset, weights: &[cluster_gcn::runtime::Tensor]) -> Vec<f32> {
+    let mut nc = NormCache::new();
+    full_forward_cached(ds, weights, NormConfig::PAPER_DEFAULT, false, &mut nc)
+}
+
+fn make_server(ds: &Dataset, seed: u64, mode: ServeMode, parts: Option<usize>) -> Server<'_> {
+    let mut session = Session::new(ds).config(serve_cfg(seed));
+    if let Some(p) = parts {
+        session = session.partition(p);
+    }
+    session
+        .into_server(ServeConfig { mode, ..ServeConfig::default() })
+        .unwrap()
+}
+
+#[test]
+fn exact_mode_matches_full_forward_bitwise_cold_and_warm() {
+    let ds = tiny_sbm(11);
+    let server = make_server(&ds, 7, ServeMode::ExactCached, None);
+    let full = offline_logits(&ds, &served_weights(&ds, 7));
+    let classes = ds.num_classes;
+    let plans: Vec<Vec<u32>> = vec![
+        vec![5],
+        vec![0, 17, 200],
+        vec![239, 1, 1], // duplicates allowed
+        (0..40).collect(),
+    ];
+    for q in &plans {
+        assert_eq!(server.query(q).unwrap(), gather_rows(&full, classes, q), "cold {q:?}");
+    }
+    let st1 = server.stats();
+    assert!(st1.misses > 0, "cold pass must compute entries");
+    for q in &plans {
+        assert_eq!(server.query(q).unwrap(), gather_rows(&full, classes, q), "warm {q:?}");
+    }
+    let st2 = server.stats();
+    assert_eq!(st2.misses, st1.misses, "warm pass must not recompute anything");
+    assert!(st2.hits > st1.hits, "warm pass must be served from cache");
+    assert_eq!(st2.evictions, 0, "no invalidation happened");
+}
+
+#[test]
+fn weight_install_invalidates_and_never_serves_stale_rows() {
+    let ds = tiny_sbm(12);
+    let seed = 3;
+    let server = make_server(&ds, seed, ServeMode::ExactCached, None);
+    let q: Vec<u32> = (0..ds.n() as u32).step_by(7).collect();
+    let w1 = served_weights(&ds, seed);
+    assert_eq!(server.query(&q).unwrap(), gather_rows(&offline_logits(&ds, &w1), 4, &q));
+
+    // a "gradient step": perturb and install mid-serve
+    let mut w2 = w1.clone();
+    w2[0].data[3] += 0.25;
+    w2[1].data[0] -= 0.125;
+    server.install_weights(w2.clone()).unwrap();
+    let full2 = offline_logits(&ds, &w2);
+    assert_eq!(
+        server.query(&q).unwrap(),
+        gather_rows(&full2, 4, &q),
+        "post-install responses must reflect the new weights"
+    );
+    assert!(server.stats().evictions > 0, "stale entries must have been evicted");
+
+    // shape-mismatched installs are rejected
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, HIDDEN + 1, ds.num_classes, 8);
+    assert!(server.install_weights(TrainState::init(&spec, 0).weights).is_err());
+}
+
+#[test]
+fn coalescer_merges_concurrent_queries_into_fewer_flushes() {
+    const N: usize = 16;
+    let co = Coalescer::new(64);
+    std::thread::scope(|s| {
+        for t in 0..N as u32 {
+            let co = &co;
+            s.spawn(move || {
+                let resp = co.run(vec![t], |lists| {
+                    // the first flush leader stalls until every thread
+                    // has enqueued, so the remaining N-1 requests are
+                    // provably coalesced into at most one more flush
+                    while co.stats().queries < N as u64 {
+                        std::thread::yield_now();
+                    }
+                    lists
+                        .iter()
+                        .map(|l| l.iter().map(|&v| v as f32 * 2.0).collect())
+                        .collect()
+                });
+                assert_eq!(resp, vec![t as f32 * 2.0], "caller {t} got someone else's row");
+            });
+        }
+    });
+    let st = co.stats();
+    assert_eq!(st.queries, N as u64);
+    assert!(st.flushes <= 2, "expected ≤ 2 flushes, got {}", st.flushes);
+    assert!((st.flushes as usize) < N, "coalescing must merge requests");
+    // ≤ 2 flushes over N requests ⇒ the larger one carried at least N/2
+    assert!(st.max_flush >= N / 2, "a flush must have merged many requests");
+}
+
+#[test]
+fn single_thread_replay_is_byte_identical_with_one_flush_per_query() {
+    let ds = tiny_sbm(13);
+    let plan: Vec<Vec<u32>> = (0..20u32).map(|i| vec![(i * 11) % 240, (i * 7) % 240]).collect();
+    let run = |seed: u64| -> Vec<Vec<f32>> {
+        let server = make_server(&ds, seed, ServeMode::ExactCached, None);
+        let out: Vec<Vec<f32>> = plan.iter().map(|q| server.query(q).unwrap()).collect();
+        let st = server.stats();
+        assert_eq!(st.queries, 20);
+        assert_eq!(st.flushes, 20, "single-threaded: one flush per query");
+        assert_eq!(st.max_flush, 1);
+        out
+    };
+    let (a, b) = (run(5), run(5));
+    for (qa, qb) in a.iter().zip(&b) {
+        let (ba, bb): (Vec<u32>, Vec<u32>) = (
+            qa.iter().map(|x| x.to_bits()).collect(),
+            qb.iter().map(|x| x.to_bits()).collect(),
+        );
+        assert_eq!(ba, bb, "replay must be byte-identical");
+    }
+}
+
+#[test]
+fn concurrent_callers_each_get_their_own_rows() {
+    let ds = tiny_sbm(14);
+    let server = make_server(&ds, 9, ServeMode::ExactCached, None);
+    let full = offline_logits(&ds, &served_weights(&ds, 9));
+    std::thread::scope(|s| {
+        for t in 0..8u32 {
+            let (server, full) = (&server, &full);
+            s.spawn(move || {
+                for i in 0..30u32 {
+                    let v = (t * 31 + i * 13) % 240;
+                    assert_eq!(
+                        server.query_one(v).unwrap(),
+                        gather_rows(full, 4, &[v]),
+                        "thread {t} query {v}"
+                    );
+                }
+            });
+        }
+    });
+    let st = server.stats();
+    assert_eq!(st.queries, 8 * 30);
+    assert!(st.flushes <= st.queries);
+    assert!(server.query(&[240]).is_err(), "out-of-range ids are rejected");
+}
+
+#[test]
+fn clustered_mode_with_one_partition_is_bitwise_exact() {
+    let ds = tiny_sbm(15);
+    let server = make_server(&ds, 21, ServeMode::Clustered, Some(1));
+    let full = offline_logits(&ds, &served_weights(&ds, 21));
+    let all: Vec<u32> = (0..240).collect();
+    // one partition ⇒ the (clusters ∪ halo) block is the full graph and
+    // block renormalization equals the full-graph normalization
+    assert_eq!(server.query(&all).unwrap(), full);
+    assert_eq!(server.query(&[3, 77, 191]).unwrap(), gather_rows(&full, 4, &[3, 77, 191]));
+}
+
+#[test]
+fn clustered_mode_replays_deterministically() {
+    let ds = tiny_sbm(16);
+    let plan: Vec<Vec<u32>> = (0..15u32).map(|i| vec![(i * 37) % 240, (i * 3) % 240]).collect();
+    let run = || -> Vec<Vec<u32>> {
+        let server = make_server(&ds, 4, ServeMode::Clustered, Some(5));
+        plan.iter()
+            .flat_map(|q| server.query(q).unwrap())
+            .map(|x| x.to_bits())
+            .collect()
+    };
+    assert_eq!(run(), run(), "clustered replay must be byte-identical");
+}
+
+#[test]
+fn loadgen_plans_and_digests_are_deterministic_and_warm_runs_all_hit() {
+    let ds = tiny_sbm(17);
+    let server = make_server(&ds, 6, ServeMode::ExactCached, None);
+    let load = LoadConfig {
+        mix: Mix::Hotset { hot_frac: 0.1, hot_weight: 0.9 },
+        queries: 120,
+        batch: 3,
+        cross_frac: 0.25,
+        seed: 99,
+    };
+    let plan = generate(ds.n(), server.owner(), server.clusters(), &load);
+    assert_eq!(plan, generate(ds.n(), server.owner(), server.clusters(), &load));
+
+    server.warm();
+    server.reset_stats();
+    let r1 = run_load(&server, &plan, 1).unwrap();
+    assert!(r1.p50_us > 0.0 && r1.p99_us >= r1.p50_us, "percentile invariant");
+    assert!(r1.qps > 0.0);
+    let st = server.stats();
+    assert_eq!(st.misses, 0, "a warm exact cache serves everything from cache");
+    assert!(st.hits > 0);
+
+    // same plan on a fresh identical server, more clients: identical
+    // bits, so identical digest (the digest is order-independent)
+    let server2 = make_server(&ds, 6, ServeMode::ExactCached, None);
+    server2.warm();
+    let r2 = run_load(&server2, &plan, 4).unwrap();
+    assert_eq!(r1.digest, r2.digest, "digest must be replay- and client-count-invariant");
+}
