@@ -10,8 +10,9 @@
 #   deep (CGCN_DEEP=1) — additionally re-runs the full test suite and
 #                     the golden trajectories under CGCN_SIMD=portable
 #                     (proves goldens are backend-independent), raises
-#                     the simd_parity random-case count, and runs a
-#                     larger-preset perf_probe.
+#                     the simd_parity random-case count, runs a
+#                     larger-preset perf_probe, the seeded end-to-end
+#                     chaos sweep, and the serve overload smoke.
 set -euo pipefail
 
 cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
@@ -60,6 +61,44 @@ echo "== serve gates: cache parity + invalidation + coalescer concurrency =="
 # install, concurrent callers coalesced without cross-talk
 cargo test --release -q --test serve
 
+echo "== robustness gates: failpoint chaos suite (fast tier) =="
+# torn / bit-flipped CGCNCKP3 files fail typed and fall back to the
+# newest intact rotation slot; the session guard replays a fault-free
+# run bitwise after an injected NaN and gives up typed when the budget
+# is spent; the server sheds typed, degrades, and expires deadlines
+# under injected flush stalls (the CGCN_DEEP sweep re-runs this
+# end-to-end across seeds)
+cargo test --release -q --test chaos
+
+echo "== checkpoint-corruption gate (CLI: bit-flip + truncate, fallback load) =="
+CKDIR="$(mktemp -d)"
+trap 'rm -rf "$CKDIR"' EXIT
+cargo run --release -q -- train --preset cora_like --backend host --epochs 2 \
+  --guard --keep 2 --lr-backoff 1.0 --save "$CKDIR/model.ckpt"
+# flip bytes mid-file: the CRC trailer must reject the primary and the
+# CLI must fall back to the newest intact .guard.e<N> rotation slot
+printf 'CORRUPT!' | dd of="$CKDIR/model.ckpt" bs=1 seek=96 conv=notrunc status=none
+cargo run --release -q -- train --preset cora_like --backend host --epochs 3 \
+  --resume "$CKDIR/model.ckpt" 2> "$CKDIR/resume.log" || {
+    cat "$CKDIR/resume.log" >&2
+    echo "resume from a bit-flipped checkpoint must fall back, not die" >&2; exit 1;
+  }
+grep -q "falling back to" "$CKDIR/resume.log" || {
+  cat "$CKDIR/resume.log" >&2
+  echo "expected the corrupt-checkpoint fallback warning" >&2; exit 1;
+}
+# truncate it outright: same contract
+head -c 40 "$CKDIR/model.ckpt" > "$CKDIR/t" && mv "$CKDIR/t" "$CKDIR/model.ckpt"
+cargo run --release -q -- train --preset cora_like --backend host --epochs 3 \
+  --resume "$CKDIR/model.ckpt" 2> "$CKDIR/trunc.log" || {
+    cat "$CKDIR/trunc.log" >&2
+    echo "resume from a truncated checkpoint must fall back, not die" >&2; exit 1;
+  }
+grep -q "falling back to" "$CKDIR/trunc.log" || {
+  cat "$CKDIR/trunc.log" >&2
+  echo "expected the truncated-checkpoint fallback warning" >&2; exit 1;
+}
+
 echo "== golden-trace regression suite (bitwise loss/F1 trajectories, all methods) =="
 GOLDEN="rust/tests/golden/trajectories.json"
 [ -f "$GOLDEN" ] || GOLDEN="tests/golden/trajectories.json"
@@ -103,11 +142,38 @@ if [ "${CGCN_DEEP:-0}" = 1 ]; then
   }
   # key presence; the p99 >= p50 > 0 invariant is asserted inside
   # cmd_serve before the file is written
-  for key in p50_us p99_us mean_us qps hit_rate cache_hits cache_misses flushes; do
+  for key in p50_us p99_us mean_us qps hit_rate cache_hits cache_misses flushes \
+             ok shed timeouts errors flush_panics degraded_flushes; do
     grep -q "\"$key\"" bench_results/BENCH_serve.json || {
       echo "BENCH_serve.json missing key $key" >&2; exit 1;
     }
   done
+
+  echo "== deep tier: seeded chaos sweep (train -> checkpoint -> resume -> serve) =="
+  # per-seed fault schedules; every leg must recover to the golden bits
+  # or fail typed — never panic, hang, or silently diverge
+  CGCN_DEEP=1 cargo test --release -q --test chaos deep_seeded_chaos_sweep \
+    -- --nocapture
+
+  echo "== deep tier: serve overload smoke (shed + degradation counters) =="
+  # a depth-2 shedding queue, 8 clients, and a 5 ms injected stall on
+  # every flush: admission control and the degradation ladder must both
+  # actually engage, and the counters must round-trip through the JSON
+  cargo run --release -- serve --preset cora_like --queries 400 --batch 4 \
+    --clients 8 --seed 7 --queue 2 --shed --degrade-after 1 \
+    --failpoints 'serve.flush.delay=1' \
+    --out bench_results/BENCH_serve_overload.json
+  for key in ok shed timeouts errors flush_panics degraded_flushes; do
+    grep -q "\"$key\"" bench_results/BENCH_serve_overload.json || {
+      echo "BENCH_serve_overload.json missing key $key" >&2; exit 1;
+    }
+  done
+  grep -Eq '"shed": *[1-9]' bench_results/BENCH_serve_overload.json || {
+    echo "overload smoke shed nothing — admission control never engaged" >&2; exit 1;
+  }
+  grep -Eq '"degraded_flushes": *[1-9]' bench_results/BENCH_serve_overload.json || {
+    echo "degradation ladder never engaged under sustained pressure" >&2; exit 1;
+  }
 fi
 
 echo "CI gate passed."

@@ -14,12 +14,14 @@ pub mod args;
 use anyhow::{anyhow, bail, Result};
 
 use crate::baselines::VrgcnParams;
+use crate::coordinator::checkpoint::{self, RotatingCheckpoint};
 use crate::datagen::{build_cached, preset, PRESETS};
 use crate::norm::NormConfig;
 use crate::runtime::{Backend, Engine, HostBackend, ManifestMissing, ShardedBackend};
 use crate::serve::{generate, run_load, LoadConfig, Mix, ServeConfig, ServeMode};
+use crate::session::guard::{rotation_base, run_guarded, GuardConfig};
 use crate::session::{EvalStrategy, Method, Session, StderrObserver, TrainConfig};
-use crate::util::{Json, Timer};
+use crate::util::{failpoint, Json, Timer};
 use args::Args;
 
 /// The `--help` text; single source of truth shared with the module
@@ -41,6 +43,14 @@ pub fn main() -> Result<()> {
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
         print!("{}", USAGE);
         return Ok(());
+    }
+    // chaos-testing hook: CGCN_FAILPOINTS/CGCN_FAIL_SEED activate the
+    // deterministic fault-injection registry for any subcommand; an
+    // explicit --failpoints flag (train/serve) overrides the env spec
+    match failpoint::install_from_env() {
+        Ok(true) => eprintln!("failpoints active (CGCN_FAILPOINTS)"),
+        Ok(false) => {}
+        Err(e) => return Err(anyhow!("bad CGCN_FAILPOINTS: {e}")),
     }
     match argv[0].as_str() {
         "datagen" => cmd_datagen(&argv),
@@ -150,6 +160,28 @@ fn make_backend(a: &Args) -> Result<Box<dyn Backend>> {
     }
 }
 
+/// Install the per-command `--failpoints SPEC` (seeded by
+/// `--fail-seed`), replacing whatever `CGCN_FAILPOINTS` set up.
+fn install_failpoints(a: &Args) -> Result<()> {
+    if let Some(spec) = a.get("failpoints") {
+        let seed = a.u64_or("fail-seed", 0)?;
+        failpoint::install(spec, seed).map_err(|e| anyhow!("bad --failpoints: {e}"))?;
+        eprintln!("failpoints installed: {spec} (seed {seed})");
+    }
+    Ok(())
+}
+
+/// Per-site hit/fire counters, printed after a chaos run so the sweep
+/// can assert its faults actually landed.
+fn print_failpoint_report() {
+    if !failpoint::active() {
+        return;
+    }
+    for r in failpoint::report() {
+        eprintln!("failpoint {:<16} {} hits, {} fires", r.site, r.hits, r.fires);
+    }
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let a = Args::parse(
         argv,
@@ -158,9 +190,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
             "lr-decay", "lr-decay-every", "patience", "save", "backend",
             "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
-            "eval-parts", "resume", "checkpoint-every",
+            "eval-parts", "resume", "checkpoint-every", "guard",
+            "guard-retries", "lr-backoff", "keep", "failpoints", "fail-seed",
         ],
     )?;
+    install_failpoints(&a)?;
     let ds = load_ds(&a)?;
     let p = preset(&ds.name).unwrap();
     let layers = a.usize_or("layers", 2)?;
@@ -178,9 +212,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     };
 
     // ---- backend (base or combinator stack) ---------------------------
+    // built through a factory so the guard can rebuild a fresh backend
+    // for every recovery attempt
     let backend_kind = a.str_or("backend", "pjrt");
     let shards = a.usize_or("shards", 1)?;
-    let backend: Box<dyn Backend> = if shards > 1 {
+    if shards > 1 {
         if backend_kind != "host" {
             bail!(
                 "--shards {shards} needs --backend host: the PJRT step is \
@@ -194,9 +230,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
                  (it pulls its replicas' batches itself)"
             );
         }
-        Box::new(ShardedBackend::host(shards))
-    } else {
-        make_backend(&a)?
+    }
+    let build_backend = || -> Result<Box<dyn Backend>> {
+        if shards > 1 {
+            Ok(Box::new(ShardedBackend::host(shards)))
+        } else {
+            make_backend(&a)
+        }
     };
     // assembly/execute overlap is on by default (the session wraps the
     // backend in a PrefetchBackend); --no-prefetch forces serial,
@@ -223,14 +263,24 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         other => bail!("unknown eval strategy {other} (exact|clustered)"),
     };
 
-    // ---- resume from a checkpoint (weights + recorded epoch; v2 files
-    // additionally restore the VR-GCN history so the resumed run is a
-    // bitwise replay of the uninterrupted one) -------------------------
+    // ---- resume from a checkpoint (weights + recorded epoch; v2/v3
+    // files additionally restore the VR-GCN history so the resumed run
+    // is a bitwise replay of the uninterrupted one).  A torn/corrupt
+    // file falls back to the newest intact rotation sibling
+    // (`<path>.e<epoch>`) instead of refusing to start. ----------------
     let resumed = match a.get("resume") {
         Some(path) => {
-            let ck = crate::coordinator::checkpoint::load_full(std::path::Path::new(path))?;
+            let (ck, loaded) =
+                checkpoint::load_full_or_fallback(std::path::Path::new(path))?;
+            if loaded != std::path::Path::new(path) {
+                eprintln!(
+                    "warning: {path} is torn or corrupt; falling back to {}",
+                    loaded.display()
+                );
+            }
             eprintln!(
-                "resuming from {path} (model {}, step {}, epoch {}{})",
+                "resuming from {} (model {}, step {}, epoch {}{})",
+                loaded.display(),
                 ck.artifact,
                 ck.state.step,
                 ck.epoch,
@@ -274,11 +324,125 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         );
     }
 
+    let parts_n: Option<usize> = match a.get("parts") {
+        Some(p) => Some(
+            p.parse()
+                .map_err(|_| anyhow!("--parts expects an integer, got {p:?}"))?,
+        ),
+        None => None,
+    };
+    let random_algo = match a.str_or("algo", "multilevel").as_str() {
+        "multilevel" => false,
+        "random" => true,
+        other => bail!("unknown algo {other} (multilevel|random)"),
+    };
+
+    // ---- self-healing path: run under the session guard ---------------
+    if a.flag("guard") {
+        let save = a.get("save").map(std::path::PathBuf::from);
+        let base = match &save {
+            Some(p) => rotation_base(p),
+            None => bail!(
+                "--guard needs --save FILE: its rolling last-good \
+                 checkpoints live at <FILE>.guard.e<epoch>"
+            ),
+        };
+        let store = RotatingCheckpoint::new(base, a.usize_or("keep", 3)?);
+        let gcfg = GuardConfig {
+            max_retries: a.usize_or("guard-retries", 3)?,
+            lr_backoff: a.f64_or("lr-backoff", 0.5)? as f32,
+            checkpoint_every: a.usize_or("checkpoint-every", 1)?,
+            ..GuardConfig::default()
+        };
+        let model = Session::new(&ds)
+            .method(method.clone())
+            .config(cfg.clone())
+            .model_name();
+        let mut obs = StderrObserver;
+        let t = Timer::start();
+        let outcome = run_guarded(
+            |ck, lr_scale| {
+                let mut cfg = cfg.clone();
+                cfg.lr *= lr_scale;
+                // resume priority: last-good rollback target, else the
+                // --resume checkpoint, else a fresh init
+                let init = match ck {
+                    Some(c) => Some((c.state.clone(), c.history.clone(), c.epoch)),
+                    None => resumed
+                        .as_ref()
+                        .map(|c| (c.state.clone(), c.history.clone(), c.epoch)),
+                };
+                let mut session = Session::new(&ds)
+                    .method(method.clone())
+                    .prefetch(prefetch);
+                if let Some(p) = parts_n {
+                    session = session.partition(p);
+                }
+                if random_algo {
+                    session = session.partition_random();
+                }
+                if let Some((state, history, epoch)) = init {
+                    cfg.start_epoch = epoch;
+                    session = session.initial_state(state);
+                    if let Some(h) = history {
+                        session = session.initial_history(h);
+                    }
+                }
+                session.config(cfg).backend(build_backend()?).driver()
+            },
+            &gcfg,
+            &store,
+            &mut obs,
+        )
+        .map_err(|e| anyhow!("{e}"))?;
+        // materialize the newest intact rotation slot at --save (it
+        // carries the epoch stamp and any VR-GCN history); fall back to
+        // the bare final state when nothing was rotated
+        if let Some(path) = &save {
+            match store.load_latest() {
+                Ok((ck, _, _)) => checkpoint::save_v3(
+                    &ck.state,
+                    &ck.artifact,
+                    ck.epoch,
+                    ck.history.as_ref(),
+                    path,
+                )?,
+                Err(_) => {
+                    checkpoint::save_v3(&outcome.result.state, &model, cfg.epochs, None, path)?
+                }
+            }
+        }
+        print_failpoint_report();
+        println!("method        : {method_name} ({model}, guarded)");
+        println!(
+            "guard         : {} retries, {} rollbacks, {} ckpt saves, lr scale {}",
+            outcome.retries, outcome.rollbacks, outcome.saves, outcome.lr_scale
+        );
+        println!(
+            "epochs        : {}",
+            outcome.result.curve.last().map(|c| c.epoch).unwrap_or(0)
+        );
+        println!("steps         : {}", outcome.result.steps);
+        println!(
+            "train time    : {:.2}s (wall {:.2}s)",
+            outcome.result.train_seconds,
+            t.secs()
+        );
+        println!("curve (epoch, train_s, loss, val_f1):");
+        for pt in &outcome.result.curve {
+            println!(
+                "  {:4}  {:8.2}  {:.4}  {:.4}",
+                pt.epoch, pt.train_seconds, pt.train_loss, pt.eval_f1
+            );
+        }
+        return Ok(());
+    }
+
     let mut obs = StderrObserver;
     let mut session = Session::new(&ds)
         .method(method)
         .config(cfg)
-        .backend(backend)
+        .backend(build_backend()?)
         .prefetch(prefetch)
         .observer(&mut obs);
     if let Some(ck) = resumed {
@@ -287,17 +451,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             session = session.initial_history(h);
         }
     }
-    if let Some(parts) = a.get("parts") {
-        session = session.partition(
-            parts
-                .parse()
-                .map_err(|_| anyhow!("--parts expects an integer, got {parts:?}"))?,
-        );
+    if let Some(p) = parts_n {
+        session = session.partition(p);
     }
-    match a.str_or("algo", "multilevel").as_str() {
-        "multilevel" => {}
-        "random" => session = session.partition_random(),
-        other => bail!("unknown algo {other} (multilevel|random)"),
+    if random_algo {
+        session = session.partition_random();
     }
     if let Some(path) = a.get("save") {
         session = session.save(path);
@@ -305,6 +463,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 
     let t = Timer::start();
     let out = session.run()?;
+    print_failpoint_report();
     println!("method        : {method_name} ({})", out.model);
     println!("backend       : {}{}", out.backend, if shards > 1 {
         format!(" ({shards} shards)")
@@ -368,8 +527,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "preset", "seed", "cache", "layers", "hidden", "parts", "algo",
             "norm", "checkpoint", "queries", "batch", "mix", "hot-frac",
             "hot-weight", "cross", "clients", "mode", "out", "no-warm",
+            "queue", "shed", "deadline-ms", "degrade-after", "failpoints",
+            "fail-seed",
         ],
     )?;
+    install_failpoints(&a)?;
     let ds = load_ds(&a)?;
     let seed = a.u64_or("seed", 0)?;
     let hidden = a.usize_or("hidden", 0)?;
@@ -401,10 +563,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     match a.get("checkpoint") {
         Some(path) => {
-            let ck = crate::coordinator::checkpoint::load_full(std::path::Path::new(path))?;
+            let (ck, loaded) =
+                checkpoint::load_full_or_fallback(std::path::Path::new(path))?;
+            if loaded != std::path::Path::new(path) {
+                eprintln!(
+                    "warning: {path} is torn or corrupt; serving fallback {}",
+                    loaded.display()
+                );
+            }
             eprintln!(
-                "serving checkpoint {path} (model {}, step {}, epoch {})",
-                ck.artifact, ck.state.step, ck.epoch
+                "serving checkpoint {} (model {}, step {}, epoch {})",
+                loaded.display(),
+                ck.artifact,
+                ck.state.step,
+                ck.epoch
             );
             session = session.initial_state(ck.state);
         }
@@ -413,7 +585,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              (latency/cache behavior is representative, predictions are not)"
         ),
     }
-    let server = session.into_server(ServeConfig { mode, ..ServeConfig::default() })?;
+    let serve_cfg = ServeConfig {
+        mode,
+        queue_capacity: a.usize_or("queue", ServeConfig::default().queue_capacity)?,
+        shed_when_full: a.flag("shed"),
+        deadline_ms: a.u64_or("deadline-ms", 0)?,
+        degrade_after: a.usize_or("degrade-after", 0)?,
+        ..ServeConfig::default()
+    };
+    let server = session.into_server(serve_cfg)?;
 
     let mix_name = a.str_or("mix", "uniform");
     let mix = match mix_name.as_str() {
@@ -449,9 +629,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let st = server.stats();
     // the invariants the deep-tier CI gate relies on hold by
     // construction (nearest-rank percentiles over floored latencies);
-    // fail loudly here rather than shipping a nonsense benchmark file
+    // fail loudly here rather than shipping a nonsense benchmark file.
+    // A fully-shed run has no latencies to bound, so the invariant is
+    // conditional on at least one success.
     assert!(
-        report.p99_us >= report.p50_us && report.p50_us > 0.0,
+        report.ok == 0 || (report.p99_us >= report.p50_us && report.p50_us > 0.0),
         "latency percentiles violated their invariant: p50 {} p99 {}",
         report.p50_us,
         report.p99_us
@@ -482,6 +664,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         ("hit_rate", Json::num(hit_rate)),
         ("flushes", Json::num(st.flushes as f64)),
         ("max_flush", Json::num(st.max_flush as f64)),
+        // overload-safety counters (PR 8): the deep-tier CI smoke
+        // asserts these keys exist and that a pressured run sheds
+        ("ok", Json::num(report.ok as f64)),
+        ("shed", Json::num(report.shed as f64)),
+        ("timeouts", Json::num(report.timeouts as f64)),
+        ("errors", Json::num(report.errors as f64)),
+        ("flush_panics", Json::num(st.flush_panics as f64)),
+        ("degraded_flushes", Json::num(st.degraded_flushes as f64)),
         // u64 digest as hex text: f64 would silently drop low bits
         ("digest", Json::str(&format!("{:016x}", report.digest))),
     ]);
@@ -497,6 +687,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("throughput    : {:.0} qps over {:.2}s", report.qps, report.wall_secs);
     println!("coalescing    : {} flushes for {} queries (max flush {})", st.flushes, st.queries, st.max_flush);
     println!("cache         : {} hits / {} misses / {} evictions (hit rate {:.3})", st.hits, st.misses, st.evictions, hit_rate);
+    println!(
+        "overload      : {} ok / {} shed / {} timeouts / {} errors ({} degraded flushes, {} flush panics)",
+        report.ok, report.shed, report.timeouts, report.errors,
+        st.degraded_flushes, st.flush_panics
+    );
+    print_failpoint_report();
     println!("report        : {out}");
     Ok(())
 }
@@ -553,7 +749,12 @@ mod tests {
             );
         }
         assert!(USAGE.contains("--backend pjrt|host"));
-        for flag in ["--shards", "--prefetch", "--eval exact|clustered", "--eval-parts"] {
+        for flag in [
+            "--shards", "--prefetch", "--eval exact|clustered", "--eval-parts",
+            "--guard", "--guard-retries", "--lr-backoff", "--keep",
+            "--failpoints", "--fail-seed", "--queue", "--shed",
+            "--deadline-ms", "--degrade-after",
+        ] {
             assert!(USAGE.contains(flag), "usage.txt missing flag {flag}");
         }
         for m in ["cluster", "expansion", "graphsage", "vrgcn"] {

@@ -174,6 +174,9 @@ impl BatchAssembler {
     /// Assemble the induced batch over `nodes` into a reused `batch`
     /// (zero steady-state allocation).
     pub fn assemble_into(&mut self, ds: &Dataset, nodes: &[u32], batch: &mut Batch) {
+        // chaos-only latency fault (stalls assembly to stress the
+        // prefetch overlap); one untaken branch when disabled
+        crate::util::failpoint::maybe_delay("batch.assemble", 2);
         crate::graph::induced_edges(&ds.graph, nodes, &mut self.scratch, &mut self.edges);
         let edges = std::mem::take(&mut self.edges);
         self.assemble_with_edges_into(ds, nodes, &edges, batch);

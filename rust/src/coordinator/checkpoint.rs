@@ -3,47 +3,78 @@
 //! workflow of "cluster once, train, reuse" extends to "train once,
 //! evaluate anywhere" (CLI `train --save` / `eval` / `train --resume`).
 //!
-//! Two on-disk versions, both little-endian:
+//! Three on-disk versions, all little-endian:
 //!
 //! | magic      | layout                                                        |
 //! |------------|---------------------------------------------------------------|
 //! | `CGCNCKP1` | name, step, per-tensor (dims, f32 data) × 3L                  |
 //! | `CGCNCKP2` | the v1 body, then `epoch`, then a VR-GCN history section      |
+//! | `CGCNCKP3` | the v2 layout, then a CRC32 trailer over every prior byte     |
 //!
 //! The v2 trailer is `epoch u64`, `hist_layers u64`, `n u64`,
 //! `f_hid u64`, then `hist_layers` raw `n·f_hid` f32 blocks — the
 //! historical-activation store VR-GCN's control-variate estimator lives
 //! on.  Saving it is what makes `Session::initial_state` +
 //! `TrainConfig::start_epoch` (+ `Session::initial_history`) replay an
-//! interrupted VR-GCN run **bit-exactly**; v1 files keep loading
-//! unchanged.  Errors are typed ([`CheckpointError`]): a v2 file whose
-//! history section is cut short fails with
-//! [`CheckpointError::TruncatedHistory`], not a generic IO error.
+//! interrupted VR-GCN run **bit-exactly**; v1/v2 files keep loading
+//! unchanged.  v3 appends `crc u64` (IEEE CRC32 of every byte before
+//! the trailer, zero-extended), so a torn or bit-flipped file is
+//! detected at load time instead of silently resuming garbage.
+//!
+//! **Durability:** every save goes through [`atomic_write`] — the bytes
+//! land in `<path>.tmp`, are fsynced, and only then renamed over the
+//! destination — so a crash mid-save can never corrupt the previous
+//! good checkpoint (the file `--resume` depends on).  On top of that,
+//! [`RotatingCheckpoint`] keeps the last k epoch-stamped copies and
+//! [`RotatingCheckpoint::load_latest`] falls back to the newest file
+//! that still verifies, which is what the self-healing
+//! [`crate::session::guard`] rolls back to.
+//!
+//! Errors are typed ([`CheckpointError`]): a cut v2/v3 trailer fails
+//! with [`CheckpointError::TruncatedHistory`], a checksum mismatch with
+//! [`CheckpointError::ChecksumMismatch`], and the failpoint sites
+//! `ckpt.write` / `ckpt.torn` (see [`crate::util::failpoint`]) surface
+//! as [`CheckpointError::Injected`] so chaos tests can distinguish
+//! injected faults from real ones.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::coordinator::trainer::TrainState;
 use crate::runtime::Tensor;
+use crate::util::failpoint;
 
 const MAGIC_V1: &[u8; 8] = b"CGCNCKP1";
 const MAGIC_V2: &[u8; 8] = b"CGCNCKP2";
+const MAGIC_V3: &[u8; 8] = b"CGCNCKP3";
 /// Sanity cap on the history layer count (a real model has `L - 1`).
 const MAX_HISTORY_LAYERS: u64 = 64;
 
 /// Typed checkpoint failure.
 #[derive(Debug)]
 pub enum CheckpointError {
-    /// Underlying file IO failed (open/read/write/flush).
+    /// Underlying file IO failed (open/read/write/flush/rename).
     Io(std::io::Error),
     /// The file is not a recognizable checkpoint, or its structural
     /// invariants do not hold.
     Corrupt(&'static str),
-    /// A `CGCNCKP2` trailer (epoch + history section) is cut short —
-    /// the store the VR-GCN estimator depends on is incomplete, so the
-    /// file must not be resumed from.
+    /// A `CGCNCKP2`/`CGCNCKP3` trailer (epoch + history section) is cut
+    /// short — the store the VR-GCN estimator depends on is incomplete,
+    /// so the file must not be resumed from.
     TruncatedHistory,
+    /// A `CGCNCKP3` CRC trailer does not match the payload — the file
+    /// was torn or bit-flipped after (or during) the write.
+    ChecksumMismatch,
+    /// A failpoint fired inside checkpoint IO (chaos testing only;
+    /// never produced on a real fault).
+    Injected(crate::util::InjectedFault),
+    /// No intact file remained after scanning a rotation set; carries
+    /// how many candidates were tried and rejected.
+    NoIntactCheckpoint {
+        /// Number of candidate files that failed verification.
+        tried: usize,
+    },
 }
 
 impl std::fmt::Display for CheckpointError {
@@ -54,6 +85,13 @@ impl std::fmt::Display for CheckpointError {
             CheckpointError::TruncatedHistory => {
                 write!(f, "checkpoint history section is truncated")
             }
+            CheckpointError::ChecksumMismatch => {
+                write!(f, "checkpoint checksum mismatch (torn or bit-flipped file)")
+            }
+            CheckpointError::Injected(fp) => write!(f, "checkpoint fault: {fp}"),
+            CheckpointError::NoIntactCheckpoint { tried } => {
+                write!(f, "no intact checkpoint found ({tried} candidates rejected)")
+            }
         }
     }
 }
@@ -62,6 +100,7 @@ impl std::error::Error for CheckpointError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             CheckpointError::Io(e) => Some(e),
+            CheckpointError::Injected(fp) => Some(fp),
             _ => None,
         }
     }
@@ -87,19 +126,86 @@ pub struct HistorySection {
     pub layers: Vec<Vec<f32>>,
 }
 
-/// A fully parsed checkpoint file (either version).
+/// A fully parsed checkpoint file (any version).
 pub struct Checkpoint {
     /// Restored training state.
     pub state: TrainState,
     /// Model/artifact id recorded at save time.
     pub artifact: String,
-    /// Epoch the state was saved at (v2; `0` for v1 files, which do not
-    /// record it).
+    /// Epoch the state was saved at (v2/v3; `0` for v1 files, which do
+    /// not record it).
     pub epoch: usize,
-    /// VR-GCN history store (v2 with a non-empty section; `None`
+    /// VR-GCN history store (v2/v3 with a non-empty section; `None`
     /// otherwise).
     pub history: Option<HistorySection>,
 }
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE), table-driven, streamed through reads/writes
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// Fold `bytes` into a running (finalized-form) CRC32; start from 0.
+fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Reader adapter tallying the CRC of every byte it passes through.
+struct CrcReader<R> {
+    inner: R,
+    crc: u32,
+}
+
+impl<R: Read> Read for CrcReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc = crc32_update(self.crc, &buf[..n]);
+        Ok(n)
+    }
+}
+
+/// Writer adapter tallying the CRC of every byte it passes through.
+struct CrcWriter<W> {
+    inner: W,
+    crc: u32,
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc = crc32_update(self.crc, &buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive (de)serializers
+// ---------------------------------------------------------------------
 
 fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -194,29 +300,13 @@ fn r_body(r: &mut impl Read) -> Result<(TrainState, String)> {
     Ok((TrainState { weights, m, v, step }, artifact))
 }
 
-/// Write a `CGCNCKP1` checkpoint (no epoch, no history) — the format
-/// every pre-v2 file uses and non-VR-GCN runs keep writing.
-pub fn save(state: &TrainState, artifact: &str, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC_V1)?;
-    w_body(&mut w, state, artifact)?;
-    w.flush()?;
-    Ok(())
-}
-
-/// Write a `CGCNCKP2` checkpoint: the v1 body plus the saved-at epoch
-/// and (for VR-GCN runs) the historical-activation store.
-pub fn save_v2(
-    state: &TrainState,
-    artifact: &str,
+/// The v2/v3 trailer body: epoch + history section.
+fn w_trailer(
+    w: &mut impl Write,
     epoch: usize,
     history: Option<&HistorySection>,
-    path: &Path,
 ) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC_V2)?;
-    w_body(&mut w, state, artifact)?;
-    w_u64(&mut w, epoch as u64)?;
+    w_u64(w, epoch as u64)?;
     match history {
         Some(h) => {
             for layer in &h.layers {
@@ -226,24 +316,23 @@ pub fn save_v2(
                     ));
                 }
             }
-            w_u64(&mut w, h.layers.len() as u64)?;
-            w_u64(&mut w, h.n as u64)?;
-            w_u64(&mut w, h.f_hid as u64)?;
+            w_u64(w, h.layers.len() as u64)?;
+            w_u64(w, h.n as u64)?;
+            w_u64(w, h.f_hid as u64)?;
             for layer in &h.layers {
-                w_f32s(&mut w, layer)?;
+                w_f32s(w, layer)?;
             }
         }
         None => {
-            w_u64(&mut w, 0)?;
-            w_u64(&mut w, 0)?;
-            w_u64(&mut w, 0)?;
+            w_u64(w, 0)?;
+            w_u64(w, 0)?;
+            w_u64(w, 0)?;
         }
     }
-    w.flush()?;
     Ok(())
 }
 
-/// Map an EOF inside the v2 trailer to the typed truncation error.
+/// Map an EOF inside the v2/v3 trailer to the typed truncation error.
 fn truncated(e: std::io::Error) -> CheckpointError {
     if e.kind() == std::io::ErrorKind::UnexpectedEof {
         CheckpointError::TruncatedHistory
@@ -252,24 +341,11 @@ fn truncated(e: std::io::Error) -> CheckpointError {
     }
 }
 
-/// Load either checkpoint version in full.
-pub fn load_full(path: &Path) -> Result<Checkpoint> {
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    let v2 = match &magic {
-        m if m == MAGIC_V1 => false,
-        m if m == MAGIC_V2 => true,
-        _ => return Err(CheckpointError::Corrupt("not a cluster-gcn checkpoint")),
-    };
-    let (state, artifact) = r_body(&mut r)?;
-    if !v2 {
-        return Ok(Checkpoint { state, artifact, epoch: 0, history: None });
-    }
-    let epoch = r_u64(&mut r).map_err(truncated)? as usize;
-    let hist_layers = r_u64(&mut r).map_err(truncated)?;
-    let n = r_u64(&mut r).map_err(truncated)? as usize;
-    let f_hid = r_u64(&mut r).map_err(truncated)? as usize;
+fn r_trailer(r: &mut impl Read) -> Result<(usize, Option<HistorySection>)> {
+    let epoch = r_u64(r).map_err(truncated)? as usize;
+    let hist_layers = r_u64(r).map_err(truncated)?;
+    let n = r_u64(r).map_err(truncated)? as usize;
+    let f_hid = r_u64(r).map_err(truncated)? as usize;
     if hist_layers > MAX_HISTORY_LAYERS {
         return Err(CheckpointError::Corrupt("implausible history layer count"));
     }
@@ -282,18 +358,269 @@ pub fn load_full(path: &Path) -> Result<Checkpoint> {
             .ok_or(CheckpointError::Corrupt("history dims overflow"))?;
         let mut layers = Vec::with_capacity(hist_layers as usize);
         for _ in 0..hist_layers {
-            layers.push(r_f32s(&mut r, len).map_err(truncated)?);
+            layers.push(r_f32s(r, len).map_err(truncated)?);
         }
         Some(HistorySection { f_hid, n, layers })
     };
+    Ok((epoch, history))
+}
+
+// ---------------------------------------------------------------------
+// atomic writes
+// ---------------------------------------------------------------------
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Crash-durable write: the body lands in `<path>.tmp`, is fsynced,
+/// and only then renamed over `path` — so at every instant `path`
+/// holds either the previous complete file or the new complete file,
+/// never a torn mix.  Failpoints: `ckpt.write` fails before the tmp is
+/// opened; the body may inject its own mid-write faults (`ckpt.torn`),
+/// in which case the torn tmp is deliberately left behind (it is what
+/// a crash would leave) and `path` stays untouched.
+fn atomic_write<F>(path: &Path, write_body: F) -> Result<()>
+where
+    F: FnOnce(&mut dyn Write) -> Result<()>,
+{
+    failpoint::check("ckpt.write").map_err(CheckpointError::Injected)?;
+    let tmp = tmp_path(path);
+    let file = File::create(&tmp)?;
+    let mut w = BufWriter::new(file);
+    let res = (|| -> Result<()> {
+        write_body(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = res {
+        // an injected torn write simulates a crash: leave the torn tmp
+        // on disk exactly as a crash would; real IO errors clean up
+        if !matches!(e, CheckpointError::Injected(_)) {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// save / load
+// ---------------------------------------------------------------------
+
+/// Write a `CGCNCKP1` checkpoint (no epoch, no history) — the format
+/// every pre-v2 file uses.  Atomic (tmp + fsync + rename).
+pub fn save(state: &TrainState, artifact: &str, path: &Path) -> Result<()> {
+    atomic_write(path, |w| {
+        w.write_all(MAGIC_V1)?;
+        w_body(w, state, artifact)?;
+        Ok(())
+    })
+}
+
+/// Write a `CGCNCKP2` checkpoint: the v1 body plus the saved-at epoch
+/// and (for VR-GCN runs) the historical-activation store.  Atomic.
+pub fn save_v2(
+    state: &TrainState,
+    artifact: &str,
+    epoch: usize,
+    history: Option<&HistorySection>,
+    path: &Path,
+) -> Result<()> {
+    atomic_write(path, |w| {
+        w.write_all(MAGIC_V2)?;
+        w_body(w, state, artifact)?;
+        w_trailer(w, epoch, history)
+    })
+}
+
+/// Write a `CGCNCKP3` checkpoint: the v2 layout plus a CRC32 trailer
+/// over every preceding byte, so torn/bit-flipped files are detected at
+/// load time.  Atomic.  The `ckpt.torn` failpoint cuts the write after
+/// the body (simulating a crash mid-save); the destination file is
+/// never touched in that case.
+pub fn save_v3(
+    state: &TrainState,
+    artifact: &str,
+    epoch: usize,
+    history: Option<&HistorySection>,
+    path: &Path,
+) -> Result<()> {
+    atomic_write(path, |w| {
+        let mut cw = CrcWriter { inner: w, crc: 0 };
+        cw.write_all(MAGIC_V3)?;
+        w_body(&mut cw, state, artifact)?;
+        failpoint::check("ckpt.torn").map_err(CheckpointError::Injected)?;
+        w_trailer(&mut cw, epoch, history)?;
+        let crc = cw.crc;
+        w_u64(&mut cw.inner, crc as u64)?;
+        Ok(())
+    })
+}
+
+/// Load any checkpoint version in full; v3 files are CRC-verified.
+pub fn load_full(path: &Path) -> Result<Checkpoint> {
+    let mut r = CrcReader { inner: BufReader::new(File::open(path)?), crc: 0 };
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    let version = match &magic {
+        m if m == MAGIC_V1 => 1,
+        m if m == MAGIC_V2 => 2,
+        m if m == MAGIC_V3 => 3,
+        _ => return Err(CheckpointError::Corrupt("not a cluster-gcn checkpoint")),
+    };
+    let (state, artifact) = r_body(&mut r)?;
+    if version == 1 {
+        return Ok(Checkpoint { state, artifact, epoch: 0, history: None });
+    }
+    let (epoch, history) = r_trailer(&mut r)?;
+    if version == 3 {
+        let want = r.crc as u64;
+        let got = r_u64(&mut r).map_err(truncated)?;
+        if got != want {
+            return Err(CheckpointError::ChecksumMismatch);
+        }
+    }
     Ok(Checkpoint { state, artifact, epoch, history })
 }
 
 /// Returns (state, artifact name recorded at save time) — the
-/// compatibility surface; reads both versions and drops the v2 trailer.
+/// compatibility surface; reads every version and drops the trailer.
 pub fn load(path: &Path) -> Result<(TrainState, String)> {
     let ck = load_full(path)?;
     Ok((ck.state, ck.artifact))
+}
+
+/// Load `path`, and when it is torn/corrupt/missing, fall back to the
+/// newest intact epoch-stamped sibling — first `<path>.e<epoch>` (the
+/// plain [`RotatingCheckpoint`] layout), then `<path>.guard.e<epoch>`
+/// (the rotation a `--guard` run keeps beside its `--save` target).
+/// Returns the checkpoint plus the file it actually came from.  The
+/// original error is preserved when no fallback candidate verifies
+/// either.
+pub fn load_full_or_fallback(path: &Path) -> Result<(Checkpoint, PathBuf)> {
+    let primary = match load_full(path) {
+        Ok(ck) => return Ok((ck, path.to_path_buf())),
+        Err(e) => e,
+    };
+    let mut guard_name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    guard_name.push(".guard");
+    for base in [path.to_path_buf(), path.with_file_name(guard_name)] {
+        let store = RotatingCheckpoint::new(base, usize::MAX);
+        if let Ok((ck, from, _skipped)) = store.load_latest() {
+            return Ok((ck, from));
+        }
+    }
+    Err(primary)
+}
+
+// ---------------------------------------------------------------------
+// keep-last-k rotation
+// ---------------------------------------------------------------------
+
+/// Keep-last-k checkpoint rotation over epoch-stamped `CGCNCKP3` files:
+/// [`RotatingCheckpoint::save`] writes `<base>.e<epoch>` atomically and
+/// prunes everything but the newest `keep` epochs;
+/// [`RotatingCheckpoint::load_latest`] walks the set newest-first and
+/// returns the first file that fully verifies — the rollback target the
+/// self-healing trainer ([`crate::session::guard`]) depends on when the
+/// newest save was torn by a crash.
+pub struct RotatingCheckpoint {
+    base: PathBuf,
+    keep: usize,
+}
+
+impl RotatingCheckpoint {
+    /// A rotation set rooted at `base` keeping the newest `keep` (≥ 1)
+    /// epochs.  `base` itself is never written; slots live beside it as
+    /// `<base>.e<epoch>`.
+    pub fn new(base: impl Into<PathBuf>, keep: usize) -> RotatingCheckpoint {
+        RotatingCheckpoint { base: base.into(), keep: keep.max(1) }
+    }
+
+    /// The slot path for `epoch`.
+    pub fn slot(&self, epoch: usize) -> PathBuf {
+        let mut name = self
+            .base
+            .file_name()
+            .map(|s| s.to_os_string())
+            .unwrap_or_default();
+        name.push(format!(".e{epoch}"));
+        self.base.with_file_name(name)
+    }
+
+    /// Epoch-stamped slots currently on disk, ascending by epoch.
+    pub fn list(&self) -> Result<Vec<(usize, PathBuf)>> {
+        let dir = match self.base.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let stem = match self.base.file_name().and_then(|s| s.to_str()) {
+            Some(s) => format!("{s}.e"),
+            None => return Ok(Vec::new()),
+        };
+        let mut slots = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(suffix) = name.strip_prefix(&stem) else { continue };
+            let Ok(epoch) = suffix.parse::<usize>() else { continue };
+            slots.push((epoch, entry.path()));
+        }
+        slots.sort_unstable_by_key(|&(e, _)| e);
+        Ok(slots)
+    }
+
+    /// Save a v3 checkpoint into the `epoch` slot (atomic), then prune
+    /// slots beyond the newest `keep`.  Returns the slot path written.
+    pub fn save(
+        &self,
+        state: &TrainState,
+        artifact: &str,
+        epoch: usize,
+        history: Option<&HistorySection>,
+    ) -> Result<PathBuf> {
+        if let Some(dir) = self.base.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let path = self.slot(epoch);
+        save_v3(state, artifact, epoch, history, &path)?;
+        let slots = self.list()?;
+        if slots.len() > self.keep {
+            for (_, old) in &slots[..slots.len() - self.keep] {
+                let _ = std::fs::remove_file(old);
+            }
+        }
+        Ok(path)
+    }
+
+    /// Newest slot that fully verifies, walking newest-first past any
+    /// torn/corrupt/unreadable file.  Returns the checkpoint, the file
+    /// it came from, and how many newer candidates were rejected.
+    /// [`CheckpointError::NoIntactCheckpoint`] when nothing verifies.
+    pub fn load_latest(&self) -> Result<(Checkpoint, PathBuf, usize)> {
+        let slots = self.list()?;
+        let mut rejected = 0usize;
+        for (_, path) in slots.iter().rev() {
+            match load_full(path) {
+                Ok(ck) => return Ok((ck, path.clone(), rejected)),
+                Err(_) => rejected += 1,
+            }
+        }
+        Err(CheckpointError::NoIntactCheckpoint { tried: rejected })
+    }
 }
 
 #[cfg(test)]
@@ -373,6 +700,67 @@ mod tests {
     }
 
     #[test]
+    fn v3_roundtrips_and_is_bytewise_stable() {
+        let s = state();
+        let h = history();
+        let p = tmp("v3");
+        save_v3(&s, "m3", 9, Some(&h), &p).unwrap();
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.artifact, "m3");
+        assert_eq!(ck.epoch, 9);
+        assert_eq!(ck.history.as_ref(), Some(&h));
+        // save → load → save is bytewise stable (same contract v1/v2 pin)
+        let bytes1 = std::fs::read(&p).unwrap();
+        let p2 = tmp("v3b");
+        save_v3(&ck.state, &ck.artifact, ck.epoch, ck.history.as_ref(), &p2).unwrap();
+        assert_eq!(bytes1, std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn v3_detects_bitflips_anywhere() {
+        let s = state();
+        let p = tmp("v3flip");
+        save_v3(&s, "m", 2, Some(&history()), &p).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // flip one bit in the payload, in the history, and in the CRC
+        for pos in [64usize, clean.len() - 20, clean.len() - 3] {
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 0x10;
+            std::fs::write(&p, &bytes).unwrap();
+            match load_full(&p) {
+                Err(CheckpointError::ChecksumMismatch)
+                | Err(CheckpointError::Corrupt(_)) => {}
+                other => panic!(
+                    "flip at {pos}: expected checksum/corrupt error, got {:?}",
+                    other.err().map(|e| e.to_string())
+                ),
+            }
+        }
+        std::fs::write(&p, &clean).unwrap();
+        assert!(load_full(&p).is_ok(), "unflipped file must still verify");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn atomic_save_never_tears_the_previous_file() {
+        let s = state();
+        let p = tmp("atomic");
+        save_v3(&s, "gen1", 1, None, &p).unwrap();
+        // a failed overwrite must leave gen1 fully intact
+        let before = std::fs::read(&p).unwrap();
+        // simulate failure by writing a tmp and never renaming — the
+        // real crash window; the destination is untouched by contract
+        std::fs::write(tmp_path(&p), b"torn garbage").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), before);
+        let ck = load_full(&p).unwrap();
+        assert_eq!(ck.artifact, "gen1");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(tmp_path(&p)).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
         let p = tmp("bad");
         std::fs::write(&p, b"definitely not a checkpoint").unwrap();
@@ -413,5 +801,53 @@ mod tests {
             }
         }
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_last_k_and_falls_back_past_corruption() {
+        let s = state();
+        let base = tmp("rot");
+        let store = RotatingCheckpoint::new(&base, 3);
+        for epoch in 1..=5 {
+            store.save(&s, "rotm", epoch, None).unwrap();
+        }
+        let slots = store.list().unwrap();
+        let epochs: Vec<usize> = slots.iter().map(|&(e, _)| e).collect();
+        assert_eq!(epochs, vec![3, 4, 5], "keep-last-3 prunes epochs 1 and 2");
+
+        // intact set loads the newest
+        let (ck, from, rejected) = store.load_latest().unwrap();
+        assert_eq!((ck.epoch, rejected), (5, 0));
+        assert_eq!(from, store.slot(5));
+
+        // tear the newest (truncate) and bit-flip the next: fallback
+        // walks to epoch 3, reporting both rejections
+        let newest = std::fs::read(store.slot(5)).unwrap();
+        std::fs::write(store.slot(5), &newest[..newest.len() / 3]).unwrap();
+        let mut mid = std::fs::read(store.slot(4)).unwrap();
+        let flip = mid.len() / 2;
+        mid[flip] ^= 0x40;
+        std::fs::write(store.slot(4), &mid).unwrap();
+        let (ck, from, rejected) = store.load_latest().unwrap();
+        assert_eq!((ck.epoch, rejected), (3, 2));
+        assert_eq!(from, store.slot(3));
+
+        // everything corrupt → typed NoIntactCheckpoint
+        let third = std::fs::read(store.slot(3)).unwrap();
+        std::fs::write(store.slot(3), &third[..10]).unwrap();
+        assert!(matches!(
+            store.load_latest(),
+            Err(CheckpointError::NoIntactCheckpoint { tried: 3 })
+        ));
+
+        // load_full_or_fallback: primary missing, siblings scanned
+        std::fs::write(store.slot(3), &third).unwrap();
+        let (ck, from) = load_full_or_fallback(&base).unwrap();
+        assert_eq!(ck.epoch, 3);
+        assert_eq!(from, store.slot(3));
+
+        for (_, p) in store.list().unwrap() {
+            std::fs::remove_file(p).ok();
+        }
     }
 }

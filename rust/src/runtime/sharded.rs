@@ -174,6 +174,9 @@ impl<B: Backend + Send> Backend for ShardedBackend<B> {
         if k == 0 {
             return Err(anyhow!("step_from past the end of the epoch plan"));
         }
+        // chaos-only: a replica dying mid-exchange surfaces as a typed
+        // error before any replica's gradients are applied
+        crate::util::failpoint::check("shard.exchange")?;
         self.ensure_bufs(source);
         for (j, buf) in self.bufs.iter_mut().enumerate().take(k) {
             source.assemble(first + j, buf);

@@ -10,26 +10,60 @@
 //! channel of boxed jobs — and makes single-threaded behavior exactly
 //! one flush per query, which is what lets `tests/serve.rs` pin
 //! byte-identical replays.
+//!
+//! ## Overload behavior (PR 8)
+//!
+//! Admission and completion are both bounded and typed:
+//!
+//! - **Shedding** ([`Coalescer::with_policy`] `shed_when_full`): a
+//!   submitter finding the queue full while a flush is in progress gets
+//!   [`ServeError::Overloaded`] immediately instead of blocking — queue
+//!   wait stays bounded by `capacity × flush time` under any offered
+//!   load.  When no leader is active the submitter always becomes one,
+//!   so shedding never starves an idle server.
+//! - **Deadlines** (`deadline_ms`): both the wait for queue space and
+//!   the wait for the response observe a per-request deadline,
+//!   returning [`ServeError::DeadlineExceeded`] on expiry.  A leader
+//!   never deadlines its own flush — once it starts executing, it
+//!   finishes and its own response is already in hand.
+//! - **Panic isolation**: the flush executor runs under
+//!   `catch_unwind`; a panic (or a broken one-response-per-request
+//!   contract) fills every request in the flush with
+//!   [`ServeError::EnginePanicked`], releases leadership, and lets the
+//!   next submitter lead — one bad flush can no longer wedge the queue
+//!   behind a permanently-set `busy` flag.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::error::ServeError;
 
 /// Coalescer counters (monotonic since construction or
 /// [`Coalescer::reset_stats`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CoalesceStats {
-    /// queries submitted via [`Coalescer::run`].
+    /// queries submitted via [`Coalescer::run`] (admitted ones; shed
+    /// requests count only in `shed`).
     pub queries: u64,
     /// engine flushes executed; `flushes < queries` means coalescing
     /// actually merged concurrent requests.
     pub flushes: u64,
     /// largest number of requests merged into one flush.
     pub max_flush: usize,
+    /// requests rejected at admission ([`ServeError::Overloaded`]).
+    pub shed: u64,
+    /// requests whose deadline expired ([`ServeError::DeadlineExceeded`]).
+    pub timeouts: u64,
+    /// flushes whose executor panicked (every rider got
+    /// [`ServeError::EnginePanicked`]).
+    pub flush_panics: u64,
 }
 
 /// One caller's response slot: filled by the flush leader, awaited by
 /// the submitter.
 struct Slot {
-    done: Mutex<Option<Vec<f32>>>,
+    done: Mutex<Option<Result<Vec<f32>, ServeError>>>,
     cv: Condvar,
 }
 
@@ -38,18 +72,36 @@ impl Slot {
         Slot { done: Mutex::new(None), cv: Condvar::new() }
     }
 
-    fn fill(&self, resp: Vec<f32>) {
-        *self.done.lock().expect("slot poisoned") = Some(resp);
+    fn fill(&self, resp: Result<Vec<f32>, ServeError>) {
+        // a poisoned slot lock only means some waiter panicked; the
+        // stored value is still a plain Option we fully overwrite
+        *self.done.lock().unwrap_or_else(|p| p.into_inner()) = Some(resp);
         self.cv.notify_one();
     }
 
-    fn wait(&self) -> Vec<f32> {
-        let mut g = self.done.lock().expect("slot poisoned");
+    /// Wait for the response; `None` when `deadline` expires first (the
+    /// leader may still fill the slot later — the result is dropped
+    /// with the Arc).
+    fn wait_until(&self, deadline: Option<Instant>) -> Option<Result<Vec<f32>, ServeError>> {
+        let mut g = self.done.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(resp) = g.take() {
-                return resp;
+                return Some(resp);
             }
-            g = self.cv.wait(g).expect("slot poisoned");
+            match deadline {
+                None => g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner()),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return None;
+                    }
+                    let (ng, _) = self
+                        .cv
+                        .wait_timeout(g, dl - now)
+                        .unwrap_or_else(|p| p.into_inner());
+                    g = ng;
+                }
+            }
         }
     }
 }
@@ -67,8 +119,8 @@ struct Queue {
 }
 
 /// The request coalescer; see the module docs for the leader/follower
-/// protocol.  Shared by reference across caller threads (`&Coalescer`
-/// is all [`Coalescer::run`] needs).
+/// protocol and the overload behavior.  Shared by reference across
+/// caller threads (`&Coalescer` is all [`Coalescer::run`] needs).
 pub struct Coalescer {
     q: Mutex<Queue>,
     /// signalled when the leader drains the queue (bounded-queue
@@ -76,14 +128,26 @@ pub struct Coalescer {
     /// a leader is active).
     space: Condvar,
     capacity: usize,
+    shed_when_full: bool,
+    deadline_ms: u64,
 }
 
 impl Coalescer {
     /// A coalescer whose queue holds at most `capacity` (≥ 1) pending
     /// requests; submitters beyond that block until the active leader
     /// drains (when no leader is active the submitter becomes one, so
-    /// the bound never deadlocks).
+    /// the bound never deadlocks).  No shedding, no deadlines — the
+    /// pre-PR-8 blocking behavior.
     pub fn new(capacity: usize) -> Coalescer {
+        Coalescer::with_policy(capacity, false, 0)
+    }
+
+    /// A coalescer with overload policy: `shed_when_full` rejects
+    /// at-capacity submissions with [`ServeError::Overloaded`] instead
+    /// of blocking, and `deadline_ms` > 0 bounds each request's total
+    /// wait (queue space + response) with
+    /// [`ServeError::DeadlineExceeded`].
+    pub fn with_policy(capacity: usize, shed_when_full: bool, deadline_ms: u64) -> Coalescer {
         assert!(capacity >= 1, "coalescer capacity must be >= 1");
         Coalescer {
             q: Mutex::new(Queue {
@@ -93,29 +157,68 @@ impl Coalescer {
             }),
             space: Condvar::new(),
             capacity,
+            shed_when_full,
+            deadline_ms,
         }
     }
 
-    /// Submit one query and block until its response arrives.
+    /// The queue mutex only ever guards plain bookkeeping (no
+    /// invariants span a panic point while it is held), so a poisoned
+    /// lock is recoverable by construction.
+    fn lock_q(&self) -> MutexGuard<'_, Queue> {
+        self.q.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Submit one query and block until its response arrives (or
+    /// admission/deadline policy rejects it).
     ///
     /// `exec` runs each flush: it receives the node lists of every
     /// request merged into the flush (submission order) and must return
-    /// exactly one response per list.  Only the flush leader's `exec`
+    /// exactly one response per list, or one flush-level error that is
+    /// distributed to every rider.  Only the flush leader's `exec`
     /// closure runs — a call whose request rides in another caller's
     /// flush never invokes its own — so `exec` must be the same logic
-    /// for every caller (the [`super::Server`] passes its engine).
+    /// for every caller (the [`super::Server`] passes its engine).  A
+    /// panicking `exec` is caught: every rider gets
+    /// [`ServeError::EnginePanicked`] and the coalescer stays live.
     ///
     /// Single-threaded use is deterministic by construction: the caller
     /// is always the leader, every query is its own flush, and the
     /// response is whatever `exec` returns for it.
-    pub fn run<F>(&self, nodes: Vec<u32>, mut exec: F) -> Vec<f32>
+    pub fn run<F>(&self, nodes: Vec<u32>, mut exec: F) -> Result<Vec<f32>, ServeError>
     where
-        F: FnMut(&[Vec<u32>]) -> Vec<Vec<f32>>,
+        F: FnMut(&[Vec<u32>]) -> Result<Vec<Vec<f32>>, ServeError>,
     {
+        let deadline = if self.deadline_ms > 0 {
+            Some(Instant::now() + Duration::from_millis(self.deadline_ms))
+        } else {
+            None
+        };
         let slot = Arc::new(Slot::new());
-        let mut q = self.q.lock().expect("coalescer poisoned");
+        let mut q = self.lock_q();
         while q.pending.len() >= self.capacity && q.busy {
-            q = self.space.wait(q).expect("coalescer poisoned");
+            if self.shed_when_full {
+                q.stats.shed += 1;
+                let queue_depth = q.pending.len();
+                return Err(ServeError::Overloaded { queue_depth });
+            }
+            match deadline {
+                None => q = self.space.wait(q).unwrap_or_else(|p| p.into_inner()),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        q.stats.timeouts += 1;
+                        return Err(ServeError::DeadlineExceeded {
+                            deadline_ms: self.deadline_ms,
+                        });
+                    }
+                    let (ng, _) = self
+                        .space
+                        .wait_timeout(q, dl - now)
+                        .unwrap_or_else(|p| p.into_inner());
+                    q = ng;
+                }
+            }
         }
         q.stats.queries += 1;
         q.pending.push(Pending { nodes, slot: Arc::clone(&slot) });
@@ -135,16 +238,42 @@ impl Coalescer {
                     lists.push(p.nodes);
                     slots.push(p.slot);
                 }
-                let responses = exec(&lists);
-                assert_eq!(
-                    responses.len(),
-                    lists.len(),
-                    "flush executor must return one response per request"
-                );
-                for (s, resp) in slots.iter().zip(responses) {
-                    s.fill(resp);
+                // panic isolation: a panicking executor must not leave
+                // `busy` set forever (the pre-PR-8 wedge) — catch it,
+                // fail the riders typed, and continue draining
+                let mut panicked = false;
+                let outcome: Result<Vec<Vec<f32>>, ServeError> =
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        let responses = exec(&lists)?;
+                        assert_eq!(
+                            responses.len(),
+                            lists.len(),
+                            "flush executor must return one response per request"
+                        );
+                        Ok(responses)
+                    })) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            panicked = true;
+                            Err(ServeError::EnginePanicked)
+                        }
+                    };
+                match outcome {
+                    Ok(responses) => {
+                        for (s, resp) in slots.iter().zip(responses) {
+                            s.fill(Ok(resp));
+                        }
+                    }
+                    Err(e) => {
+                        for s in &slots {
+                            s.fill(Err(e.clone()));
+                        }
+                    }
                 }
-                q = self.q.lock().expect("coalescer poisoned");
+                q = self.lock_q();
+                if panicked {
+                    q.stats.flush_panics += 1;
+                }
             }
             q.busy = false;
             drop(q);
@@ -152,38 +281,58 @@ impl Coalescer {
         } else {
             drop(q);
         }
-        slot.wait()
+        match slot.wait_until(deadline) {
+            Some(resp) => resp,
+            None => {
+                self.lock_q().stats.timeouts += 1;
+                Err(ServeError::DeadlineExceeded { deadline_ms: self.deadline_ms })
+            }
+        }
+    }
+
+    /// Current queue depth (requests admitted but not yet drained into
+    /// a flush) — an ops signal, and what overload tests poll.
+    pub fn pending(&self) -> usize {
+        self.lock_q().pending.len()
     }
 
     /// Snapshot of the counters.
     pub fn stats(&self) -> CoalesceStats {
-        self.q.lock().expect("coalescer poisoned").stats
+        self.lock_q().stats
     }
 
     /// Zero the counters (e.g. after a cache warm-up pass).
     pub fn reset_stats(&self) {
-        self.q.lock().expect("coalescer poisoned").stats = CoalesceStats::default();
+        self.lock_q().stats = CoalesceStats::default();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc;
+
+    fn echo(lists: &[Vec<u32>]) -> Result<Vec<Vec<f32>>, ServeError> {
+        Ok(lists.iter().map(|l| l.iter().map(|&v| v as f32).collect()).collect())
+    }
 
     #[test]
     fn single_thread_one_flush_per_query() {
         let co = Coalescer::new(4);
         for i in 0..5u32 {
-            let resp = co.run(vec![i, i + 1], |lists| {
-                assert_eq!(lists.len(), 1);
-                lists.iter().map(|l| l.iter().map(|&v| v as f32).collect()).collect()
-            });
+            let resp = co
+                .run(vec![i, i + 1], |lists| {
+                    assert_eq!(lists.len(), 1);
+                    echo(lists)
+                })
+                .unwrap();
             assert_eq!(resp, vec![i as f32, (i + 1) as f32]);
         }
         let st = co.stats();
         assert_eq!(st.queries, 5);
         assert_eq!(st.flushes, 5);
         assert_eq!(st.max_flush, 1);
+        assert_eq!((st.shed, st.timeouts, st.flush_panics), (0, 0, 0));
         co.reset_stats();
         assert_eq!(co.stats().queries, 0);
     }
@@ -191,14 +340,110 @@ mod tests {
     #[test]
     fn empty_query_round_trips() {
         let co = Coalescer::new(1);
-        let resp = co.run(Vec::new(), |lists| lists.iter().map(|_| Vec::new()).collect());
+        let resp = co
+            .run(Vec::new(), |lists| Ok(lists.iter().map(|_| Vec::new()).collect()))
+            .unwrap();
         assert!(resp.is_empty());
     }
 
     #[test]
-    #[should_panic(expected = "one response per request")]
-    fn executor_must_answer_every_request() {
+    fn executor_error_reaches_the_caller_typed() {
         let co = Coalescer::new(2);
-        let _ = co.run(vec![1], |_| Vec::new());
+        let r = co.run(vec![1], |_| Err(ServeError::Injected("serve.flush")));
+        assert_eq!(r, Err(ServeError::Injected("serve.flush")));
+        // the coalescer is still live
+        assert_eq!(co.run(vec![2], |l| echo(l)).unwrap(), vec![2.0]);
+        assert_eq!(co.stats().flush_panics, 0);
+    }
+
+    #[test]
+    fn panicking_executor_fails_typed_and_does_not_wedge() {
+        let co = Coalescer::new(2);
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected panic
+        let r = co.run(vec![1], |_| -> Result<Vec<Vec<f32>>, ServeError> {
+            panic!("engine blew up")
+        });
+        // a short-answering executor breaks the contract and is treated
+        // like a panic too
+        let short = co.run(vec![2], |_| Ok(Vec::new()));
+        std::panic::set_hook(prev);
+        assert_eq!(r, Err(ServeError::EnginePanicked));
+        assert_eq!(short, Err(ServeError::EnginePanicked));
+        let st = co.stats();
+        assert_eq!(st.flush_panics, 2);
+        // leadership was released: the next query executes normally
+        assert_eq!(co.run(vec![3], |l| echo(l)).unwrap(), vec![3.0]);
+    }
+
+    /// Shedding: with the leader mid-flush and the queue at capacity,
+    /// a further submission returns `Overloaded` immediately.
+    #[test]
+    fn full_queue_sheds_when_configured() {
+        let co = Coalescer::with_policy(1, true, 0);
+        let (enter_tx, enter_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                // the handshake blocks only the first flush: the leader
+                // drains the queued follower in a *second* flush, which
+                // must run through unimpeded
+                let mut first = true;
+                co.run(vec![1], move |lists| {
+                    if first {
+                        first = false;
+                        enter_tx.send(()).unwrap();
+                        release_rx.recv().unwrap();
+                    }
+                    echo(lists)
+                })
+            });
+            enter_rx.recv().unwrap(); // leader is inside exec, busy=true
+            let follower = s.spawn(|| co.run(vec![2], |l| echo(l)));
+            while co.pending() < 1 {
+                std::thread::yield_now(); // follower admitted to the queue
+            }
+            // queue full + busy leader ⇒ typed shed, no blocking
+            let shed = co.run(vec![3], |l| echo(l));
+            assert_eq!(shed, Err(ServeError::Overloaded { queue_depth: 1 }));
+            release_tx.send(()).unwrap();
+            assert_eq!(leader.join().unwrap().unwrap(), vec![1.0]);
+            // the queued follower was served by the leader's drain loop
+            assert_eq!(follower.join().unwrap().unwrap(), vec![2.0]);
+        });
+        let st = co.stats();
+        assert_eq!(st.shed, 1);
+        assert_eq!(st.queries, 2, "shed requests are not admitted");
+    }
+
+    /// Deadlines: a follower whose response does not arrive in time
+    /// gets `DeadlineExceeded`; the leader is unaffected.
+    #[test]
+    fn follower_deadline_expires_typed() {
+        let co = Coalescer::with_policy(8, false, 30);
+        let (enter_tx, enter_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                let mut first = true;
+                co.run(vec![1], move |lists| {
+                    if first {
+                        first = false;
+                        enter_tx.send(()).unwrap();
+                        release_rx.recv().unwrap();
+                    }
+                    echo(lists)
+                })
+            });
+            enter_rx.recv().unwrap(); // leader stuck in exec
+            // follower rides the queue and times out after ~30ms
+            let timed_out = co.run(vec![2], |l| echo(l));
+            assert_eq!(timed_out, Err(ServeError::DeadlineExceeded { deadline_ms: 30 }));
+            release_tx.send(()).unwrap();
+            // the leader's own request still completes (it never
+            // deadlines its own flush)
+            assert_eq!(leader.join().unwrap().unwrap(), vec![1.0]);
+        });
+        assert_eq!(co.stats().timeouts, 1);
     }
 }

@@ -1,0 +1,83 @@
+//! Typed serving failures: every way a query can fail is an enum
+//! variant callers can match on — overload shedding, deadline expiry,
+//! bad input, a panicked flush, or an injected chaos fault.  Nothing in
+//! the serving path panics across the request boundary, and `Clone`
+//! lets one flush-level failure be distributed to every request that
+//! rode in the flush.
+
+/// Why a [`super::Server`] query (or coalescer submission) failed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request: the queue was full while a
+    /// flush was in progress and the server is configured to shed
+    /// rather than block ([`super::ServeConfig::shed_when_full`]).
+    /// Retry later or at lower concurrency.
+    Overloaded {
+        /// queue depth observed at rejection time.
+        queue_depth: usize,
+    },
+    /// The per-request deadline ([`super::ServeConfig::deadline_ms`])
+    /// expired before the response arrived.  The request may still be
+    /// executed by the in-flight flush; its response is discarded.
+    DeadlineExceeded {
+        /// the configured deadline that expired.
+        deadline_ms: u64,
+    },
+    /// A queried node id is outside the served graph.
+    NodeOutOfRange {
+        /// the offending node id.
+        node: u32,
+        /// number of nodes in the served graph.
+        n: usize,
+    },
+    /// The flush executing this request panicked (or broke the
+    /// one-response-per-request contract); the engine recovered and
+    /// subsequent requests proceed, but this one has no response.
+    EnginePanicked,
+    /// A failpoint fired in the serving path (chaos testing only);
+    /// carries the site name.
+    Injected(&'static str),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "server overloaded (queue depth {queue_depth}); request shed")
+            }
+            ServeError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "request deadline of {deadline_ms} ms exceeded")
+            }
+            ServeError::NodeOutOfRange { node, n } => {
+                write!(f, "query node {node} out of range (n = {n})")
+            }
+            ServeError::EnginePanicked => {
+                write!(f, "flush engine panicked; request has no response")
+            }
+            ServeError::Injected(site) => {
+                write!(f, "injected fault at failpoint `{site}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_cause() {
+        assert!(ServeError::Overloaded { queue_depth: 9 }.to_string().contains("9"));
+        assert!(ServeError::DeadlineExceeded { deadline_ms: 25 }
+            .to_string()
+            .contains("25 ms"));
+        assert!(ServeError::NodeOutOfRange { node: 7, n: 4 }.to_string().contains("7"));
+        assert!(ServeError::Injected("serve.flush").to_string().contains("serve.flush"));
+        // errors are cloneable so one flush failure fans out to every
+        // coalesced request
+        let e = ServeError::EnginePanicked;
+        assert_eq!(e.clone(), e);
+    }
+}

@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::util::Rng;
 
+use super::error::ServeError;
 use super::server::Server;
 
 /// Node-popularity model for generated queries.
@@ -75,9 +76,23 @@ pub struct LoadReport {
     /// 99th-percentile per-query latency (nearest-rank, so always
     /// ≥ `p50_us`).
     pub p99_us: f64,
-    /// Order-independent digest over every response's bits — equal
-    /// digests across runs/client-counts pin byte-identical serving.
+    /// Order-independent digest over every *successful* response's
+    /// bits — equal digests across runs/client-counts pin
+    /// byte-identical serving (only meaningful when `shed`, `timeouts`
+    /// and `errors` are all zero, since a rejected query contributes
+    /// nothing).
     pub digest: u64,
+    /// queries answered successfully (latency stats cover only these).
+    pub ok: u64,
+    /// queries shed by admission control
+    /// ([`ServeError::Overloaded`]).
+    pub shed: u64,
+    /// queries whose deadline expired
+    /// ([`ServeError::DeadlineExceeded`]).
+    pub timeouts: u64,
+    /// queries failing with any other typed [`ServeError`] (panicked
+    /// flushes, injected faults) — never a client panic.
+    pub errors: u64,
 }
 
 /// Build a deterministic query plan over a graph of `n` nodes
@@ -131,41 +146,70 @@ pub fn generate(
     plan
 }
 
+/// One client's tally: latencies of successful queries plus the typed
+/// outcome counters.
+#[derive(Default)]
+struct ClientShard {
+    lats: Vec<f64>,
+    digest: u64,
+    ok: u64,
+    shed: u64,
+    timeouts: u64,
+    errors: u64,
+}
+
 /// Replay a query plan against a server from `clients` concurrent
 /// threads (client `k` takes queries `k, k+clients, …`), timing each
-/// query and folding every response into an order-independent digest.
+/// successful query and folding its response into an order-independent
+/// digest.  Typed failures — [`ServeError::Overloaded`] sheds,
+/// [`ServeError::DeadlineExceeded`] expiries, anything else — are
+/// *counted*, never panicked on and never aborting the run: an
+/// overloaded server produces a report with nonzero `shed`, not a dead
+/// load generator.
 pub fn run_load(server: &Server<'_>, queries: &[Vec<u32>], clients: usize) -> Result<LoadReport> {
     let clients = clients.clamp(1, queries.len().max(1));
     let start = Instant::now();
-    let mut shards: Vec<(Vec<f64>, u64)> = Vec::with_capacity(clients);
-    std::thread::scope(|s| -> Result<()> {
+    let mut shards: Vec<ClientShard> = Vec::with_capacity(clients);
+    std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(clients);
         for k in 0..clients {
-            handles.push(s.spawn(move || -> Result<(Vec<f64>, u64)> {
-                let mut lats = Vec::new();
-                let mut digest = 0u64;
+            handles.push(s.spawn(move || -> ClientShard {
+                let mut shard = ClientShard::default();
                 for (qi, q) in queries.iter().enumerate().skip(k).step_by(clients) {
                     let t = Instant::now();
-                    let resp = server.query(q)?;
-                    // floor keeps p50 strictly positive even when a
-                    // warm single-row hit is faster than the clock tick
-                    lats.push((t.elapsed().as_secs_f64() * 1e6).max(1e-3));
-                    digest = digest.wrapping_add(response_digest(qi as u64, &resp));
+                    match server.query(q) {
+                        Ok(resp) => {
+                            shard.ok += 1;
+                            // floor keeps p50 strictly positive even
+                            // when a warm single-row hit is faster than
+                            // the clock tick
+                            shard.lats.push((t.elapsed().as_secs_f64() * 1e6).max(1e-3));
+                            shard.digest = shard
+                                .digest
+                                .wrapping_add(response_digest(qi as u64, &resp));
+                        }
+                        Err(ServeError::Overloaded { .. }) => shard.shed += 1,
+                        Err(ServeError::DeadlineExceeded { .. }) => shard.timeouts += 1,
+                        Err(_) => shard.errors += 1,
+                    }
                 }
-                Ok((lats, digest))
+                shard
             }));
         }
         for h in handles {
-            shards.push(h.join().expect("load client panicked")?);
+            shards.push(h.join().expect("load client panicked"));
         }
-        Ok(())
-    })?;
+    });
     let wall = start.elapsed().as_secs_f64();
     let mut lats: Vec<f64> = Vec::new();
-    let mut digest = 0u64;
-    for (l, d) in shards {
-        lats.extend_from_slice(&l);
-        digest = digest.wrapping_add(d);
+    let (mut digest, mut ok, mut shed, mut timeouts, mut errors) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for sh in shards {
+        lats.extend_from_slice(&sh.lats);
+        digest = digest.wrapping_add(sh.digest);
+        ok += sh.ok;
+        shed += sh.shed;
+        timeouts += sh.timeouts;
+        errors += sh.errors;
     }
     lats.sort_unstable_by(|a, b| a.partial_cmp(b).expect("latency is never NaN"));
     let mean = if lats.is_empty() {
@@ -180,6 +224,10 @@ pub fn run_load(server: &Server<'_>, queries: &[Vec<u32>], clients: usize) -> Re
         p50_us: pct(&lats, 0.50),
         p99_us: pct(&lats, 0.99),
         digest,
+        ok,
+        shed,
+        timeouts,
+        errors,
     })
 }
 

@@ -24,19 +24,29 @@
 //!   (uniform, hot-set, intra- vs cross-cluster batches) and reporting
 //!   p50/p99 latency + QPS.
 //!
-//! The CLI `serve` mode (see `cli/usage.txt`) loads a `CGCNCKP2`
+//! The CLI `serve` mode (see `cli/usage.txt`) loads a versioned
 //! checkpoint, warms the cache, runs the load generator, and writes
 //! `bench_results/BENCH_serve.json`.  See ARCHITECTURE.md "Serving
 //! layer" for the cache keying / invalidation contract and PERF.md for
 //! the expected hit-rate vs query-mix model.
+//!
+//! Overload safety (PR 8): every failure in the serving path is a
+//! typed [`error::ServeError`] — the coalescer sheds at capacity and
+//! enforces per-request deadlines, a panicked flush fails only its own
+//! riders (poison-recovered engine lock, cache version bumped), and
+//! under sustained full-queue pressure an exact server degrades to a
+//! halo-free clustered engine.  See ARCHITECTURE.md "Robustness layer"
+//! for the degradation ladder.
 #![deny(missing_docs)]
 
 pub mod cache;
 pub mod coalesce;
+pub mod error;
 pub mod loadgen;
 pub mod server;
 
 pub use cache::{ActivationCache, CacheStats};
 pub use coalesce::{CoalesceStats, Coalescer};
+pub use error::ServeError;
 pub use loadgen::{generate, run_load, LoadConfig, LoadReport, Mix};
 pub use server::{ServeConfig, ServeMode, Server, ServerStats};

@@ -17,10 +17,26 @@
 //!   against execution via [`pool::pipeline`] so flush-group `i+1`
 //!   assembles while `i` runs the kernels.
 //!
+//! ## Degradation ladder (PR 8)
+//!
+//! With [`ServeConfig::degrade_after`] > 0, an exact-mode server
+//! watches flush sizes: a flush that drained a full queue
+//! (`≥ queue_capacity` merged requests) is *pressured*.  After
+//! `degrade_after` consecutive pressured flushes the server steps down
+//! to a pre-built **halo-free** [`ServeMode::Clustered`] engine (each
+//! cluster forwarded without its neighbor ring — a halo budget of
+//! zero, the cheapest per-flush approximation) and steps back up the
+//! moment a flush is not pressured.  Degraded responses are
+//! approximate by design; shed/timeout/degraded counters surface in
+//! [`ServerStats`] and `BENCH_serve.json`.  Every failure is a typed
+//! [`ServeError`] — a panicked flush poisons no request but its own
+//! riders (the engine lock recovers, the exact cache version is bumped
+//! so no partially-written activation is ever served).
+//!
 //! A socket transport is deliberately out of scope here (ROADMAP item
 //! 4); callers are in-process threads sharing `&Server`.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -30,10 +46,11 @@ use crate::coordinator::{Batch, BatchAssembler};
 use crate::graph::Dataset;
 use crate::norm::NormConfig;
 use crate::runtime::Tensor;
-use crate::util::pool;
+use crate::util::{failpoint, pool};
 
 use super::cache::ActivationCache;
 use super::coalesce::Coalescer;
+use super::error::ServeError;
 
 /// Which execution engine answers flushes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,10 +69,20 @@ pub struct ServeConfig {
     /// Execution engine (see [`ServeMode`]).
     pub mode: ServeMode,
     /// Bounded coalescer queue depth (≥ 1); submitters beyond it block
-    /// until the active flush drains.
+    /// (or shed, see `shed_when_full`) until the active flush drains.
     pub queue_capacity: usize,
     /// Kernel thread cap for the engine.
     pub threads: usize,
+    /// Shed at-capacity submissions with [`ServeError::Overloaded`]
+    /// instead of blocking (admission control; default off).
+    pub shed_when_full: bool,
+    /// Per-request deadline in milliseconds (0 = none): bounds queue
+    /// wait + response wait with [`ServeError::DeadlineExceeded`].
+    pub deadline_ms: u64,
+    /// Degrade to the halo-free clustered engine after this many
+    /// consecutive full-queue flushes (0 = never degrade; exact mode
+    /// only — a clustered server is already the cheap engine).
+    pub degrade_after: usize,
 }
 
 impl Default for ServeConfig {
@@ -64,11 +91,15 @@ impl Default for ServeConfig {
             mode: ServeMode::ExactCached,
             queue_capacity: 64,
             threads: pool::default_threads(),
+            shed_when_full: false,
+            deadline_ms: 0,
+            degrade_after: 0,
         }
     }
 }
 
-/// Combined serving counters: coalescer + (exact-mode) cache.
+/// Combined serving counters: coalescer + (exact-mode) cache +
+/// degradation ladder.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerStats {
     /// queries answered.
@@ -84,6 +115,15 @@ pub struct ServerStats {
     pub misses: u64,
     /// stale cache entries overwritten after invalidation (exact mode).
     pub evictions: u64,
+    /// requests shed at admission ([`ServeError::Overloaded`]).
+    pub shed: u64,
+    /// requests whose deadline expired.
+    pub timeouts: u64,
+    /// flushes whose executor panicked (riders got
+    /// [`ServeError::EnginePanicked`]; the server recovered).
+    pub flush_panics: u64,
+    /// flushes answered by the degraded halo-free clustered engine.
+    pub degraded_flushes: u64,
 }
 
 /// Exact-mode or clustered-mode state, plus the served weights, all
@@ -93,6 +133,13 @@ struct Engine {
     weights: Vec<Tensor>,
     exact: Option<ActivationCache>,
     clustered: Option<Clustered>,
+    /// halo-free clustered engine the degradation ladder steps down to
+    /// (built upfront when `degrade_after` > 0 on an exact server).
+    degraded: Option<Clustered>,
+    /// consecutive pressured (full-queue) flushes.
+    pressure_streak: usize,
+    /// flushes served degraded.
+    degraded_flushes: u64,
 }
 
 /// The in-process serving front.  Share `&Server` across caller
@@ -105,6 +152,8 @@ pub struct Server<'a> {
     owner: Vec<u32>,
     engine: Mutex<Engine>,
     coalescer: Coalescer,
+    queue_capacity: usize,
+    degrade_after: usize,
 }
 
 impl<'a> Server<'a> {
@@ -151,6 +200,16 @@ impl<'a> Server<'a> {
         }
         let classes = weights.last().unwrap().dims[1];
         let threads = cfg.threads.max(1);
+        let degrade_after = match cfg.mode {
+            ServeMode::ExactCached => cfg.degrade_after,
+            // a clustered server is already the cheap engine
+            ServeMode::Clustered => 0,
+        };
+        let degraded = if degrade_after > 0 {
+            Some(Clustered::new(ds, &clusters, norm, residual, threads, false))
+        } else {
+            None
+        };
         let engine = match cfg.mode {
             ServeMode::ExactCached => Engine {
                 weights,
@@ -162,13 +221,20 @@ impl<'a> Server<'a> {
                     threads,
                 )),
                 clustered: None,
+                degraded,
+                pressure_streak: 0,
+                degraded_flushes: 0,
             },
             ServeMode::Clustered => Engine {
                 weights,
                 exact: None,
-                clustered: Some(Clustered::new(ds, &clusters, norm, residual, threads)),
+                clustered: Some(Clustered::new(ds, &clusters, norm, residual, threads, true)),
+                degraded,
+                pressure_streak: 0,
+                degraded_flushes: 0,
             },
         };
+        let queue_capacity = cfg.queue_capacity.max(1);
         Ok(Server {
             ds,
             mode: cfg.mode,
@@ -176,27 +242,52 @@ impl<'a> Server<'a> {
             clusters,
             owner,
             engine: Mutex::new(engine),
-            coalescer: Coalescer::new(cfg.queue_capacity.max(1)),
+            coalescer: Coalescer::with_policy(
+                queue_capacity,
+                cfg.shed_when_full,
+                cfg.deadline_ms,
+            ),
+            queue_capacity,
+            degrade_after,
         })
+    }
+
+    /// Lock the engine, recovering from poison: a flush that panicked
+    /// while holding the lock may have left a partially-written cache
+    /// entry, so recovery bumps the exact cache's version — every entry
+    /// written under the poisoned generation recomputes before it is
+    /// ever served.  (The clustered engines keep no cross-flush state,
+    /// so they need no recovery.)
+    fn lock_engine(&self) -> MutexGuard<'_, Engine> {
+        match self.engine.lock() {
+            Ok(g) => g,
+            Err(p) => {
+                let mut g = p.into_inner();
+                if let Some(cache) = g.exact.as_mut() {
+                    cache.bump_version();
+                }
+                g
+            }
+        }
     }
 
     /// Final-layer rows for `nodes`, row-major `nodes.len() × classes`
     /// (duplicates allowed, any order).  Blocks until the flush carrying
-    /// this request executes; concurrent callers are coalesced.
-    pub fn query(&self, nodes: &[u32]) -> Result<Vec<f32>> {
+    /// this request executes; concurrent callers are coalesced.  Every
+    /// failure is a typed [`ServeError`] — overload shedding, deadline
+    /// expiry, a panicked flush — never a panic or a hang.
+    pub fn query(&self, nodes: &[u32]) -> std::result::Result<Vec<f32>, ServeError> {
         let n = self.ds.n();
         for &v in nodes {
             if v as usize >= n {
-                bail!("query node {v} out of range (n = {n})");
+                return Err(ServeError::NodeOutOfRange { node: v, n });
             }
         }
-        Ok(self
-            .coalescer
-            .run(nodes.to_vec(), |lists| self.execute(lists)))
+        self.coalescer.run(nodes.to_vec(), |lists| self.execute(lists))
     }
 
     /// Single-node convenience wrapper over [`Server::query`].
-    pub fn query_one(&self, v: u32) -> Result<Vec<f32>> {
+    pub fn query_one(&self, v: u32) -> std::result::Result<Vec<f32>, ServeError> {
         self.query(&[v])
     }
 
@@ -205,7 +296,7 @@ impl<'a> Server<'a> {
     /// in exact mode this bumps the cache version so no stale activation
     /// is ever served.
     pub fn install_weights(&self, weights: Vec<Tensor>) -> Result<()> {
-        let mut eng = self.engine.lock().expect("engine poisoned");
+        let mut eng = self.lock_engine();
         if weights.len() != eng.weights.len() {
             bail!(
                 "weight install has {} layers, model has {}",
@@ -229,8 +320,9 @@ impl<'a> Server<'a> {
         Ok(())
     }
 
-    /// Load a `CGCNCKP2` checkpoint and install its weights; returns
-    /// the checkpoint's epoch.
+    /// Load a versioned checkpoint (any `CGCNCKP*` version; v3 files
+    /// are CRC-verified) and install its weights; returns the
+    /// checkpoint's epoch.
     pub fn load_checkpoint(&self, path: &std::path::Path) -> Result<usize> {
         let ck = checkpoint::load_full(path)?;
         self.install_weights(ck.state.weights)
@@ -241,7 +333,7 @@ impl<'a> Server<'a> {
     /// Precompute every cache entry at the current weights (exact mode;
     /// a no-op in clustered mode, which keeps no cross-flush state).
     pub fn warm(&self) {
-        let mut guard = self.engine.lock().expect("engine poisoned");
+        let mut guard = self.lock_engine();
         let eng = &mut *guard;
         if let Some(cache) = eng.exact.as_mut() {
             cache.warm(self.ds, &eng.weights);
@@ -255,15 +347,14 @@ impl<'a> Server<'a> {
             queries: co.queries,
             flushes: co.flushes,
             max_flush: co.max_flush,
+            shed: co.shed,
+            timeouts: co.timeouts,
+            flush_panics: co.flush_panics,
             ..ServerStats::default()
         };
-        if let Some(cache) = self
-            .engine
-            .lock()
-            .expect("engine poisoned")
-            .exact
-            .as_ref()
-        {
+        let eng = self.lock_engine();
+        st.degraded_flushes = eng.degraded_flushes;
+        if let Some(cache) = eng.exact.as_ref() {
             let cs = cache.stats();
             st.hits = cs.hits;
             st.misses = cs.misses;
@@ -275,13 +366,10 @@ impl<'a> Server<'a> {
     /// Zero every counter (e.g. after warm-up, before a benchmark run).
     pub fn reset_stats(&self) {
         self.coalescer.reset_stats();
-        if let Some(cache) = self
-            .engine
-            .lock()
-            .expect("engine poisoned")
-            .exact
-            .as_mut()
-        {
+        let mut eng = self.lock_engine();
+        eng.degraded_flushes = 0;
+        eng.pressure_streak = 0;
+        if let Some(cache) = eng.exact.as_mut() {
             cache.reset_stats();
         }
     }
@@ -306,25 +394,64 @@ impl<'a> Server<'a> {
         &self.owner
     }
 
-    /// Run one flush: every request list in, one response per list out.
-    fn execute(&self, lists: &[Vec<u32>]) -> Vec<Vec<f32>> {
-        let mut guard = self.engine.lock().expect("engine poisoned");
+    /// Run one flush: every request list in, one response per list out
+    /// (or one flush-level error the coalescer fans out to every
+    /// rider).  Failpoints: `serve.flush` fails the flush typed,
+    /// `serve.flush.delay` stalls it (drives queue pressure in chaos
+    /// runs); both are untaken branches when inactive.
+    fn execute(
+        &self,
+        lists: &[Vec<u32>],
+    ) -> std::result::Result<Vec<Vec<f32>>, ServeError> {
+        failpoint::check("serve.flush").map_err(|f| ServeError::Injected(f.site))?;
+        failpoint::maybe_delay("serve.flush.delay", 5);
+        let mut guard = self.lock_engine();
         let eng = &mut *guard;
+
+        // degradation ladder: full-queue flushes are pressure; enough
+        // of them in a row steps down to the halo-free engine, and the
+        // first non-pressured flush steps back up
+        let mut degraded_now = false;
+        if self.degrade_after > 0 {
+            if lists.len() >= self.queue_capacity {
+                eng.pressure_streak += 1;
+            } else {
+                eng.pressure_streak = 0;
+            }
+            degraded_now = eng.pressure_streak >= self.degrade_after;
+        }
+        if degraded_now {
+            if let Some(cl) = eng.degraded.as_mut() {
+                eng.degraded_flushes += 1;
+                return Ok(cl.execute(
+                    self.ds,
+                    &self.clusters,
+                    &self.owner,
+                    &eng.weights,
+                    self.classes,
+                    lists,
+                ));
+            }
+        }
         if let Some(cache) = eng.exact.as_mut() {
-            lists
+            return Ok(lists
                 .iter()
                 .map(|l| cache.rows(self.ds, &eng.weights, l))
-                .collect()
-        } else {
-            let cl = eng.clustered.as_mut().expect("engine has exactly one mode");
-            cl.execute(
+                .collect());
+        }
+        match eng.clustered.as_mut() {
+            Some(cl) => Ok(cl.execute(
                 self.ds,
                 &self.clusters,
                 &self.owner,
                 &eng.weights,
                 self.classes,
                 lists,
-            )
+            )),
+            // unreachable by construction (one engine always exists),
+            // but typed instead of panicking — a wedged server is the
+            // one failure mode this layer must never have
+            None => Err(ServeError::EnginePanicked),
         }
     }
 }
@@ -335,8 +462,12 @@ impl<'a> Server<'a> {
 struct Clustered {
     residual: bool,
     threads: usize,
-    /// cluster → |cluster ∪ neighbors| — the subgraph footprint packing
-    /// uses to group clusters into one flush batch.
+    /// include each cluster's one-hop neighbor ring in its subgraph
+    /// (`false` = the degraded ladder's halo budget of zero: cheaper,
+    /// coarser).
+    halo: bool,
+    /// cluster → subgraph footprint (|cluster ∪ neighbors| with halo,
+    /// |cluster| without) — what packing groups clusters under.
     reach: Vec<usize>,
     b_max: usize,
     assembler: BatchAssembler,
@@ -362,6 +493,7 @@ impl Clustered {
         norm: NormConfig,
         residual: bool,
         threads: usize,
+        halo: bool,
     ) -> Clustered {
         let n = ds.n();
         let mut seen = vec![false; n];
@@ -375,11 +507,13 @@ impl Clustered {
                     touched.push(v);
                     count += 1;
                 }
-                for &u in ds.graph.neighbors(v as usize) {
-                    if !seen[u as usize] {
-                        seen[u as usize] = true;
-                        touched.push(u);
-                        count += 1;
+                if halo {
+                    for &u in ds.graph.neighbors(v as usize) {
+                        if !seen[u as usize] {
+                            seen[u as usize] = true;
+                            touched.push(u);
+                            count += 1;
+                        }
                     }
                 }
             }
@@ -400,6 +534,7 @@ impl Clustered {
         Clustered {
             residual,
             threads,
+            halo,
             reach,
             b_max,
             assembler,
@@ -453,7 +588,9 @@ impl Clustered {
             }
         }
 
-        // 3. one (clusters ∪ halo) node set per group
+        // 3. one node set per group: clusters ∪ halo, or bare clusters
+        //    when the halo budget is zero (degraded mode)
+        let halo = self.halo;
         let group_nodes: Vec<Vec<u32>> = groups
             .iter()
             .map(|g| {
@@ -461,7 +598,9 @@ impl Clustered {
                 for &c in g {
                     for &v in &clusters[c as usize] {
                         nodes.push(v);
-                        nodes.extend_from_slice(ds.graph.neighbors(v as usize));
+                        if halo {
+                            nodes.extend_from_slice(ds.graph.neighbors(v as usize));
+                        }
                     }
                 }
                 nodes.sort_unstable();
@@ -542,12 +681,14 @@ fn forward_scatter(
     let blk = &batch.block;
     debug_assert_eq!(blk.n(), m, "batch must carry its sparse block");
     let f_in = weights[0].dims[0];
+    // chained with f_in the iterator is never empty, so no expect/panic
+    // on the (construction-checked) nonempty-weights invariant
     let max_w = weights
         .iter()
         .map(|w| w.dims[1])
         .chain([f_in])
         .max()
-        .expect("at least one layer");
+        .unwrap_or(f_in);
     if cur.len() < m * max_w {
         cur.resize(m * max_w, 0.0);
     }

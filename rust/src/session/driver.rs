@@ -410,7 +410,23 @@ impl<'a> Driver<'a> {
     }
 
     /// Execute one optimization step (the `StepRun` transition body).
+    /// Failpoints (chaos tests only; inert branches otherwise):
+    /// `driver.step` fails the step with a typed error before any work;
+    /// `driver.loss` corrupts the *reported* loss to NaN while leaving
+    /// the weights untouched — the anomaly the self-healing
+    /// [`super::guard`] detects and rolls back from, chosen so the
+    /// post-recovery trajectory can be compared bitwise against the
+    /// fault-free run.
     fn run_step(&mut self) -> Result<StepOutcome> {
+        crate::util::failpoint::check("driver.step")?;
+        let mut outcome = self.run_step_inner()?;
+        if outcome.loss.is_some() && crate::util::failpoint::should_fail("driver.loss") {
+            outcome.loss = Some(f32::NAN);
+        }
+        Ok(outcome)
+    }
+
+    fn run_step_inner(&mut self) -> Result<StepOutcome> {
         let backend = match &mut self.backend {
             BackendSlot::Owned(b) => b.as_mut(),
             BackendSlot::Borrowed(b) => &mut **b,

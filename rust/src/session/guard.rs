@@ -1,0 +1,402 @@
+//! Self-healing training: a guard loop that consumes [`Event`]s from a
+//! [`Driver`], detects anomalies (NaN/Inf losses, loss spikes, step
+//! errors — including injected faults from
+//! [`crate::util::failpoint`]), and recovers by rolling back to the
+//! last good checkpoint with learning-rate backoff, bounded by a retry
+//! budget.
+//!
+//! ## State machine
+//!
+//! ```text
+//!            build driver (fresh, or resumed from last-good ckpt)
+//!                 │
+//!                 ▼
+//!   ┌───────► RUNNING ── clean EpochEnd ──► rotate CGCNCKP3 save ──┐
+//!   │             │                                                │
+//!   │   anomaly / step error                                       │
+//!   │             ▼                                                │
+//!   │         RECOVER: retries += 1 (give up past max_retries),    │
+//!   │         lr ← lr · backoff, reload newest intact checkpoint   │
+//!   │             │                                                │
+//!   └─────────────┘                        Done ──► GuardOutcome ◄─┘
+//! ```
+//!
+//! Recovery leans on two existing contracts: epoch streams are pure
+//! functions of `(seed, epoch)` (PR 5's bitwise resume), so a rebuilt
+//! driver resumed at the checkpoint's epoch replays exactly what the
+//! uninterrupted run would have done; and
+//! [`RotatingCheckpoint::load_latest`] skips torn/corrupt files, so a
+//! crash during the save itself still leaves a rollback target.  With
+//! `lr_backoff = 1.0` the post-recovery trajectory is therefore
+//! **bitwise identical** to the fault-free run — the invariant the
+//! chaos suite pins.
+//!
+//! The guard is a pure event consumer over the public driver surface
+//! (the same seam as [`super::schedule::Schedule`]): it owns no
+//! training internals, so any method/backend combination the session
+//! can build is guardable.
+
+use std::path::PathBuf;
+
+use crate::coordinator::checkpoint::{Checkpoint, CheckpointError, RotatingCheckpoint};
+use crate::coordinator::trainer::TrainResult;
+use crate::session::{Driver, Event, Observer};
+
+/// Tuning for the anomaly detector and the recovery policy.
+#[derive(Clone, Debug)]
+pub struct GuardConfig {
+    /// An epoch whose mean loss exceeds `spike_factor ×` the EMA of
+    /// previous epoch means is an anomaly (≤ 0 disables spike
+    /// detection; NaN/Inf detection is always on).
+    pub spike_factor: f64,
+    /// EMA smoothing for the epoch-mean loss baseline (weight of the
+    /// newest epoch).
+    pub ema_alpha: f64,
+    /// Recovery attempts before giving up with
+    /// [`GuardError::RetriesExhausted`].
+    pub max_retries: usize,
+    /// Base-LR multiplier applied on every recovery (1.0 = pure
+    /// rollback, which keeps the post-recovery trajectory bitwise equal
+    /// to the fault-free run; < 1.0 trades that for stability).
+    pub lr_backoff: f32,
+    /// Save a rotating checkpoint every k clean epochs (0 ⇒ 1; the
+    /// guard cannot roll back further than its save cadence).
+    pub checkpoint_every: usize,
+}
+
+impl Default for GuardConfig {
+    fn default() -> GuardConfig {
+        GuardConfig {
+            spike_factor: 4.0,
+            ema_alpha: 0.3,
+            max_retries: 3,
+            lr_backoff: 0.5,
+            checkpoint_every: 1,
+        }
+    }
+}
+
+/// What the detector flagged (also the terminal diagnosis when retries
+/// run out).
+#[derive(Clone, Debug)]
+pub enum Anomaly {
+    /// A step reported a NaN/Inf loss, or an epoch's mean was
+    /// non-finite.
+    NonFinite {
+        /// epoch of the offending event.
+        epoch: usize,
+        /// step index within the epoch (0 when flagged at epoch end).
+        step: usize,
+    },
+    /// An epoch's mean loss jumped past `spike_factor ×` the EMA
+    /// baseline.
+    LossSpike {
+        /// epoch whose mean spiked.
+        epoch: usize,
+        /// the spiked mean loss.
+        mean: f64,
+        /// the EMA baseline it was compared against.
+        ema: f64,
+    },
+    /// The driver itself returned an error (backend failure, injected
+    /// `driver.step`/`shard.exchange` fault, checkpoint IO, …).
+    StepError {
+        /// rendered error chain.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for Anomaly {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Anomaly::NonFinite { epoch, step } => {
+                write!(f, "non-finite loss at epoch {epoch} step {step}")
+            }
+            Anomaly::LossSpike { epoch, mean, ema } => write!(
+                f,
+                "loss spike at epoch {epoch}: mean {mean:.4} vs ema {ema:.4}"
+            ),
+            Anomaly::StepError { message } => write!(f, "driver error: {message}"),
+        }
+    }
+}
+
+/// Why a guarded run gave up.
+#[derive(Debug)]
+pub enum GuardError {
+    /// The driver factory failed (bad config, backend construction).
+    Build(anyhow::Error),
+    /// A rotating checkpoint save failed with a real (non-injected
+    /// handled) error.
+    Checkpoint(CheckpointError),
+    /// Every retry was spent; carries the last anomaly seen.
+    RetriesExhausted {
+        /// the configured retry budget that was exhausted.
+        retries: usize,
+        /// the anomaly that consumed the final retry.
+        last: Anomaly,
+    },
+}
+
+impl std::fmt::Display for GuardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GuardError::Build(e) => write!(f, "guard could not build a driver: {e}"),
+            GuardError::Checkpoint(e) => write!(f, "guard checkpoint failure: {e}"),
+            GuardError::RetriesExhausted { retries, last } => {
+                write!(f, "guard gave up after {retries} retries; last anomaly: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GuardError {}
+
+/// A completed guarded run: the training result plus the recovery
+/// ledger.
+pub struct GuardOutcome {
+    /// The final training result (curve, state, timing).
+    pub result: TrainResult,
+    /// Recovery attempts that were spent (0 = fault-free run).
+    pub retries: usize,
+    /// Recoveries that resumed from a checkpoint (the rest restarted
+    /// from scratch because no intact checkpoint existed yet).
+    pub rollbacks: usize,
+    /// Rotating checkpoints written.
+    pub saves: usize,
+    /// The base-LR scale in effect when the run completed
+    /// (`lr_backoff ^ retries`).
+    pub lr_scale: f32,
+}
+
+/// Streaming anomaly detector over driver [`Event`]s: flags NaN/Inf
+/// step losses immediately, and epoch means that are non-finite or
+/// spike past an EMA baseline.  Pure and allocation-free; feed it every
+/// event in order.
+pub struct AnomalyDetector {
+    spike_factor: f64,
+    ema_alpha: f64,
+    ema: Option<f64>,
+}
+
+impl AnomalyDetector {
+    /// Detector with the config's thresholds and an empty baseline.
+    pub fn new(cfg: &GuardConfig) -> AnomalyDetector {
+        AnomalyDetector {
+            spike_factor: cfg.spike_factor,
+            ema_alpha: cfg.ema_alpha.clamp(0.0, 1.0),
+            ema: None,
+        }
+    }
+
+    /// Inspect one event; `Some` means training must not continue past
+    /// it.  Clean epoch means update the EMA baseline.
+    pub fn observe(&mut self, ev: &Event) -> Option<Anomaly> {
+        match ev {
+            Event::StepEnd { epoch, step, loss: Some(l), .. } if !l.is_finite() => {
+                Some(Anomaly::NonFinite { epoch: *epoch, step: *step })
+            }
+            Event::EpochEnd { epoch, mean_loss, .. } => {
+                if !mean_loss.is_finite() {
+                    return Some(Anomaly::NonFinite { epoch: *epoch, step: 0 });
+                }
+                if self.spike_factor > 0.0 {
+                    if let Some(ema) = self.ema {
+                        if *mean_loss > self.spike_factor * ema {
+                            return Some(Anomaly::LossSpike {
+                                epoch: *epoch,
+                                mean: *mean_loss,
+                                ema,
+                            });
+                        }
+                    }
+                }
+                self.ema = Some(match self.ema {
+                    Some(e) => (1.0 - self.ema_alpha) * e + self.ema_alpha * *mean_loss,
+                    None => *mean_loss,
+                });
+                None
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Run training under the guard.  `make_driver` is called for the
+/// initial attempt (`None`) and after every recovery (`Some(last good
+/// checkpoint)`, plus the backed-off base-LR scale); it rebuilds the
+/// driver however the caller likes — typically a fresh
+/// [`super::Session`] with [`super::Session::initial_state`] /
+/// [`super::TrainConfig::start_epoch`] (+
+/// [`super::Session::initial_history`] for VR-GCN) taken from the
+/// checkpoint.  Clean epochs are checkpointed into `store`
+/// ([`Event::CheckpointSaved`] is forwarded to `obs` like every other
+/// event; across retries the observer sees each attempt's stream in
+/// order).
+pub fn run_guarded<'d, F>(
+    mut make_driver: F,
+    cfg: &GuardConfig,
+    store: &RotatingCheckpoint,
+    obs: &mut dyn Observer,
+) -> Result<GuardOutcome, GuardError>
+where
+    F: FnMut(Option<&Checkpoint>, f32) -> anyhow::Result<Driver<'d>>,
+{
+    let every = cfg.checkpoint_every.max(1);
+    let mut lr_scale = 1.0f32;
+    let mut retries = 0usize;
+    let mut rollbacks = 0usize;
+    let mut saves = 0usize;
+    let mut last_good: Option<Checkpoint> = None;
+
+    loop {
+        let mut driver =
+            make_driver(last_good.as_ref(), lr_scale).map_err(GuardError::Build)?;
+        let mut detector = AnomalyDetector::new(cfg);
+        let anomaly: Anomaly = loop {
+            match driver.next_event() {
+                Ok(Some(ev)) => {
+                    obs.on_event(&ev);
+                    if let Some(a) = detector.observe(&ev) {
+                        break a;
+                    }
+                    if let Event::EpochEnd { epoch, .. } = ev {
+                        // the epoch was clean (observe() passed it):
+                        // make it the newest rollback target
+                        if epoch % every == 0 {
+                            let history = driver.history_section();
+                            let path = store
+                                .save(
+                                    driver.state(),
+                                    driver.model(),
+                                    epoch,
+                                    history.as_ref(),
+                                )
+                                .map_err(GuardError::Checkpoint)?;
+                            saves += 1;
+                            obs.on_event(&Event::CheckpointSaved { path });
+                        }
+                    }
+                }
+                Ok(None) => {
+                    let result = driver.into_result().map_err(GuardError::Build)?;
+                    return Ok(GuardOutcome { result, retries, rollbacks, saves, lr_scale });
+                }
+                Err(e) => break Anomaly::StepError { message: format!("{e:#}") },
+            }
+        };
+
+        retries += 1;
+        if retries > cfg.max_retries {
+            return Err(GuardError::RetriesExhausted {
+                retries: cfg.max_retries,
+                last: anomaly,
+            });
+        }
+        lr_scale *= cfg.lr_backoff;
+        last_good = match store.load_latest() {
+            Ok((ck, _path, _skipped)) => {
+                rollbacks += 1;
+                Some(ck)
+            }
+            // nothing intact (or nothing saved yet): restart from scratch
+            Err(CheckpointError::NoIntactCheckpoint { .. }) => None,
+            Err(e) => return Err(GuardError::Checkpoint(e)),
+        };
+    }
+}
+
+/// Convenience: the rotation base path the CLI derives from a `--save`
+/// target (`<save>.guard`), so guard slots never collide with the
+/// session's own final checkpoint.
+pub fn rotation_base(save: &std::path::Path) -> PathBuf {
+    let mut name = save.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".guard");
+    save.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::CurvePoint;
+
+    fn cfg() -> GuardConfig {
+        GuardConfig::default()
+    }
+
+    #[test]
+    fn detector_flags_nonfinite_step_loss() {
+        let mut d = AnomalyDetector::new(&cfg());
+        let ok = Event::StepEnd { epoch: 1, step: 0, loss: Some(0.7), batches: 1 };
+        assert!(d.observe(&ok).is_none());
+        let skip = Event::StepEnd { epoch: 1, step: 1, loss: None, batches: 1 };
+        assert!(d.observe(&skip).is_none(), "no-loss steps are not anomalies");
+        let bad = Event::StepEnd { epoch: 1, step: 2, loss: Some(f32::NAN), batches: 1 };
+        assert!(matches!(
+            d.observe(&bad),
+            Some(Anomaly::NonFinite { epoch: 1, step: 2 })
+        ));
+        let inf = Event::StepEnd {
+            epoch: 2,
+            step: 0,
+            loss: Some(f32::INFINITY),
+            batches: 1,
+        };
+        assert!(matches!(d.observe(&inf), Some(Anomaly::NonFinite { .. })));
+    }
+
+    #[test]
+    fn detector_flags_spikes_against_the_ema() {
+        let mut d = AnomalyDetector::new(&GuardConfig {
+            spike_factor: 2.0,
+            ema_alpha: 0.5,
+            ..cfg()
+        });
+        let epoch_end = |epoch: usize, mean: f64| Event::EpochEnd {
+            epoch,
+            train_seconds: 0.0,
+            mean_loss: mean,
+        };
+        // first epoch seeds the baseline, never spikes
+        assert!(d.observe(&epoch_end(1, 1.0)).is_none());
+        // gentle drift is fine
+        assert!(d.observe(&epoch_end(2, 1.5)).is_none());
+        // ema = 1.25 now; 3.0 > 2 × 1.25 spikes
+        match d.observe(&epoch_end(3, 3.0)) {
+            Some(Anomaly::LossSpike { epoch: 3, mean, ema }) => {
+                assert_eq!(mean, 3.0);
+                assert!((ema - 1.25).abs() < 1e-12);
+            }
+            other => panic!("expected LossSpike, got {other:?}"),
+        }
+        // a spiked epoch must not pollute the baseline
+        assert!(d.observe(&epoch_end(4, 1.5)).is_none());
+        // NaN epoch mean is always an anomaly
+        assert!(matches!(
+            d.observe(&epoch_end(5, f64::NAN)),
+            Some(Anomaly::NonFinite { epoch: 5, step: 0 })
+        ));
+    }
+
+    #[test]
+    fn detector_ignores_spikes_when_disabled() {
+        let mut d = AnomalyDetector::new(&GuardConfig { spike_factor: 0.0, ..cfg() });
+        for (e, m) in [(1usize, 1.0f64), (2, 50.0), (3, 0.1)] {
+            assert!(d
+                .observe(&Event::EpochEnd { epoch: e, train_seconds: 0.0, mean_loss: m })
+                .is_none());
+        }
+        // eval/early-stop/done events are never anomalies
+        let pt = CurvePoint { epoch: 3, train_seconds: 0.0, train_loss: 0.1, eval_f1: 0.9 };
+        assert!(d.observe(&Event::Eval { point: pt }).is_none());
+        assert!(d.observe(&Event::Done { epochs: 3, steps: 9 }).is_none());
+    }
+
+    #[test]
+    fn rotation_base_appends_guard_suffix() {
+        assert_eq!(
+            rotation_base(std::path::Path::new("/tmp/model.ckpt")),
+            PathBuf::from("/tmp/model.ckpt.guard")
+        );
+    }
+}

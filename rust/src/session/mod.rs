@@ -44,10 +44,14 @@
 //! algorithm + its sampling scheme) → [`Driver`] (the pull-based loop)
 //! → [`crate::runtime::Backend`] (where `train_step`/`forward`
 //! execute).  An [`Observer`] attached to the session receives every
-//! [`Event`] as [`Session::run`] drains the driver.
+//! [`Event`] as [`Session::run`] drains the driver.  For self-healing
+//! runs, [`guard::run_guarded`] consumes the same event stream with
+//! anomaly detection, rotating checkpoints, and
+//! rollback-with-LR-backoff recovery.
 #![deny(missing_docs)]
 
 pub mod driver;
+pub mod guard;
 pub mod observer;
 pub mod schedule;
 

@@ -1,0 +1,330 @@
+//! Deterministic fault injection: named failpoint sites compiled into
+//! the checkpoint/batch/pool/sharded/serve paths, activated by a parsed
+//! spec (programmatic or `CGCN_FAILPOINTS`/`CGCN_FAIL_SEED` env vars)
+//! and seeded so a chaos run replays **bit-exactly** — same seed, same
+//! hit sequence ⇒ same injected faults.
+//!
+//! ## Cost when disabled
+//!
+//! Every site check is a single relaxed atomic load plus an untaken
+//! branch — no allocation, no lock, no RNG draw — so the steady-state
+//! zero-allocation pins on the training hot path hold with the sites
+//! compiled in.  The registry lock is only touched while a spec is
+//! installed.
+//!
+//! ## Spec grammar
+//!
+//! `site=prob[:max[:skip]]`, semicolon- or comma-separated:
+//!
+//! - `prob` — probability each *eligible* hit fires (1 = always);
+//! - `max` — total fires allowed (0 = unlimited, the default);
+//! - `skip` — hits to pass through before the site becomes eligible.
+//!
+//! `ckpt.torn=1:1` fires exactly once on the first checkpoint write;
+//! `driver.loss=1:1:12` corrupts the reported loss of the 13th step.
+//! Each site draws from its own [`Rng`] stream seeded by
+//! `(seed, fnv(site))`, so sites are independent and adding one does
+//! not shift another's sequence.
+//!
+//! ## Site map
+//!
+//! | site              | effect at the call site                         |
+//! |-------------------|-------------------------------------------------|
+//! | `ckpt.write`      | typed IO error before the tmp write starts      |
+//! | `ckpt.torn`       | tmp file cut mid-write (crash mid-save)         |
+//! | `driver.step`     | typed error from the training step              |
+//! | `driver.loss`     | reported step loss becomes NaN (weights intact) |
+//! | `batch.assemble`  | assembly stalls (latency fault)                 |
+//! | `pool.run`        | worker-pool dispatch stalls (latency fault)     |
+//! | `shard.exchange`  | typed error in the sharded gradient exchange    |
+//! | `serve.flush`     | flush fails with `ServeError::Injected`         |
+//! | `serve.flush.delay` | flush stalls (drives queue pressure)          |
+//!
+//! Faults are *simulations at the recovery seam*: `driver.loss`
+//! corrupts only the reported loss (never the weights), so a guarded
+//! rollback's post-recovery trajectory can be compared bitwise against
+//! the fault-free run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::rng::Rng;
+
+/// A fault fired by an active failpoint — the typed error injected
+/// sites propagate instead of panicking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// Name of the site that fired.
+    pub site: &'static str,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at failpoint `{}`", self.site)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Per-site counters, for chaos-test assertions and reports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteReport {
+    /// Site name as configured.
+    pub site: String,
+    /// Times the site was evaluated while active.
+    pub hits: u64,
+    /// Times it actually fired.
+    pub fires: u64,
+}
+
+struct Site {
+    name: String,
+    prob: f64,
+    max_fires: u64,
+    skip: u64,
+    hits: u64,
+    fires: u64,
+    rng: Rng,
+}
+
+/// `true` iff a spec is installed; the one word every disabled-path
+/// check reads.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+static REGISTRY: Mutex<Vec<Site>> = Mutex::new(Vec::new());
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, Vec<Site>> {
+    // a panic while holding this lock leaves only counters half-updated
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Install a failpoint plan; replaces any active plan.  See the module
+/// docs for the grammar.  An empty spec deactivates everything (same as
+/// [`clear`]).
+pub fn install(spec: &str, seed: u64) -> Result<(), String> {
+    let mut sites = Vec::new();
+    for part in spec.split([';', ',']).map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, rest) = part
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint `{part}` is missing `=prob`"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("failpoint `{part}` has an empty site name"));
+        }
+        let mut fields = rest.split(':');
+        let prob: f64 = fields
+            .next()
+            .unwrap_or("")
+            .trim()
+            .parse()
+            .map_err(|_| format!("failpoint `{name}`: bad probability in `{rest}`"))?;
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(format!("failpoint `{name}`: probability {prob} not in [0, 1]"));
+        }
+        let max_fires: u64 = match fields.next() {
+            None => 0,
+            Some(v) => v
+                .trim()
+                .parse()
+                .map_err(|_| format!("failpoint `{name}`: bad max-fires in `{rest}`"))?,
+        };
+        let skip: u64 = match fields.next() {
+            None => 0,
+            Some(v) => v
+                .trim()
+                .parse()
+                .map_err(|_| format!("failpoint `{name}`: bad skip count in `{rest}`"))?,
+        };
+        if fields.next().is_some() {
+            return Err(format!("failpoint `{name}`: too many `:` fields in `{rest}`"));
+        }
+        sites.push(Site {
+            name: name.to_string(),
+            prob,
+            max_fires,
+            skip,
+            hits: 0,
+            fires: 0,
+            rng: Rng::new(seed ^ fnv(name)),
+        });
+    }
+    let active = !sites.is_empty();
+    *lock_registry() = sites;
+    ENABLED.store(active, Ordering::Release);
+    Ok(())
+}
+
+/// Install from `CGCN_FAILPOINTS` (+ optional `CGCN_FAIL_SEED`, default
+/// 0); returns whether a plan was activated.  Unset env ⇒ no-op.
+pub fn install_from_env() -> Result<bool, String> {
+    let spec = match std::env::var("CGCN_FAILPOINTS") {
+        Ok(s) if !s.trim().is_empty() => s,
+        _ => return Ok(false),
+    };
+    let seed = match std::env::var("CGCN_FAIL_SEED") {
+        Ok(s) => s
+            .trim()
+            .parse()
+            .map_err(|_| format!("CGCN_FAIL_SEED `{s}` is not a u64"))?,
+        Err(_) => 0,
+    };
+    install(&spec, seed)?;
+    Ok(active())
+}
+
+/// Deactivate every site and drop the plan.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    lock_registry().clear();
+}
+
+/// Whether any failpoint plan is active.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Should `site` fire this hit?  The disabled path is one relaxed
+/// atomic load and an untaken branch — safe on zero-allocation pins.
+#[inline]
+pub fn should_fail(site: &str) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_fail_slow(site)
+}
+
+#[cold]
+fn should_fail_slow(site: &str) -> bool {
+    let mut reg = lock_registry();
+    let s = match reg.iter_mut().find(|s| s.name == site) {
+        Some(s) => s,
+        None => return false,
+    };
+    s.hits += 1;
+    if s.hits <= s.skip {
+        return false;
+    }
+    if s.max_fires > 0 && s.fires >= s.max_fires {
+        return false;
+    }
+    // always draw, so firing history stays a pure function of the
+    // eligible-hit index regardless of prior outcomes
+    let fire = s.rng.f64() < s.prob;
+    if fire {
+        s.fires += 1;
+    }
+    fire
+}
+
+/// `Err(InjectedFault)` when `site` fires — the one-liner error-path
+/// sites use (`failpoint::check("ckpt.write")?`).
+#[inline]
+pub fn check(site: &'static str) -> Result<(), InjectedFault> {
+    if should_fail(site) {
+        Err(InjectedFault { site })
+    } else {
+        Ok(())
+    }
+}
+
+/// Stall for `ms` when `site` fires — the latency-fault injector for
+/// infallible paths (batch assembly, pool dispatch, serve flushes).
+#[inline]
+pub fn maybe_delay(site: &str, ms: u64) {
+    if should_fail(site) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Counter snapshot for every configured site (configured order).
+pub fn report() -> Vec<SiteReport> {
+    lock_registry()
+        .iter()
+        .map(|s| SiteReport { site: s.name.clone(), hits: s.hits, fires: s.fires })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Registry state is process-global; serialize the tests that
+    /// install plans.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_is_inert() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear();
+        assert!(!active());
+        for _ in 0..1000 {
+            assert!(!should_fail("anything"));
+        }
+        assert!(check("anything").is_ok());
+        assert!(report().is_empty());
+    }
+
+    #[test]
+    fn spec_parses_and_fires_deterministically() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let run = |seed: u64| -> Vec<bool> {
+            install("a.b=0.5; c=1:2:3", seed).unwrap();
+            let fired: Vec<bool> = (0..64).map(|_| should_fail("a.b")).collect();
+            clear();
+            fired
+        };
+        let (x, y) = (run(7), run(7));
+        assert_eq!(x, y, "same seed must replay the same fault sequence");
+        assert!(x.iter().any(|&f| f) && x.iter().any(|&f| !f), "p=0.5 mixes outcomes");
+        let z = run(8);
+        assert_ne!(x, z, "different seeds should diverge");
+    }
+
+    #[test]
+    fn skip_and_max_fires_bound_the_site() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        install("s=1:2:3", 0).unwrap();
+        let fired: Vec<bool> = (0..10).map(|_| should_fail("s")).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, false, true, true, false, false, false, false, false],
+            "skip 3 hits, then fire exactly twice"
+        );
+        let rep = report();
+        assert_eq!(rep.len(), 1);
+        assert_eq!((rep[0].hits, rep[0].fires), (10, 2));
+        // unknown sites never fire even while a plan is active
+        assert!(!should_fail("unknown"));
+        clear();
+    }
+
+    #[test]
+    fn check_returns_the_typed_fault() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        install("typed=1:1", 0).unwrap();
+        let e = check("typed").unwrap_err();
+        assert_eq!(e.site, "typed");
+        assert!(e.to_string().contains("typed"));
+        assert!(check("typed").is_ok(), "max-fires exhausted");
+        clear();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear();
+        for bad in ["nameonly", "x=", "x=2.0", "x=0.5:a", "x=0.5:1:b", "x=1:1:1:1", "=1"] {
+            assert!(install(bad, 0).is_err(), "spec {bad:?} should be rejected");
+        }
+        assert!(!active(), "a rejected spec must not activate anything");
+    }
+}

@@ -1,14 +1,17 @@
 //! Shared substrates: deterministic PRNG, minimal JSON, stats/benching,
-//! a tiny thread pool, and the runtime-dispatched SIMD kernels
+//! a tiny thread pool, the runtime-dispatched SIMD kernels, and the
+//! seeded failpoint framework chaos tests replay bit-exactly
 //! (tokio/rand/serde/criterion are unavailable in the offline build —
 //! DESIGN.md §7).
 
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod simd;
 pub mod stats;
 
+pub use failpoint::InjectedFault;
 pub use json::Json;
 pub use pool::{pipeline, WorkerPool};
 pub use rng::Rng;

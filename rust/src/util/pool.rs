@@ -194,6 +194,8 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        // chaos-only latency fault; one untaken branch when disabled
+        super::failpoint::maybe_delay("pool.run", 1);
         let n_chunks = n_chunks.max(1).min(n);
         if n_chunks == 1 || self.threads == 1 {
             // serial fast path still honours the requested decomposition

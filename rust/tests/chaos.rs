@@ -1,0 +1,595 @@
+//! Chaos / robustness acceptance suite (PR 8), driven by the seeded
+//! failpoint framework in `util::failpoint`:
+//!
+//! - **crash-durable checkpoints**: a torn or pre-write injected fault
+//!   fails typed and never corrupts the previous good file; a
+//!   bit-flipped `CGCNCKP3` fails with a typed checksum mismatch and
+//!   the rotation falls back to the newest intact slot;
+//! - **self-healing training**: an injected mid-run NaN triggers a
+//!   guard rollback to the last good rotating checkpoint, and with
+//!   `lr_backoff = 1.0` the post-recovery trajectory is **bitwise**
+//!   identical to the fault-free run; an unrecoverable fault exhausts
+//!   the retry budget with a typed error, never a panic or a hang;
+//! - **overload-safe serving**: at-capacity submissions shed typed,
+//!   sustained full-queue pressure engages the halo-free degraded
+//!   engine (with one partition even degraded responses stay bitwise
+//!   exact), deadlines expire typed under slow flushes, and injected
+//!   flush faults are transient;
+//! - **deep tier** (`CGCN_DEEP=1`): a seeded sweep over the whole
+//!   train → checkpoint → resume → serve pipeline asserting clean
+//!   recovery or typed errors — never a panic, a hang, or a silent
+//!   divergence from the fault-free golden trace.
+//!
+//! The failpoint registry is process-global, so every test here
+//! serializes on one lock and clears the plan on both sides.
+
+use std::sync::Mutex;
+
+use cluster_gcn::coordinator::checkpoint::{self, CheckpointError, RotatingCheckpoint};
+use cluster_gcn::coordinator::inference::{full_forward_cached, gather_rows};
+use cluster_gcn::coordinator::trainer::TrainState;
+use cluster_gcn::datagen::features::{gen_features, gen_labels, LabelModel};
+use cluster_gcn::datagen::{generate, SbmSpec};
+use cluster_gcn::graph::{Dataset, Split, Task};
+use cluster_gcn::norm::{NormCache, NormConfig};
+use cluster_gcn::runtime::ModelSpec;
+use cluster_gcn::serve::{ServeConfig, ServeError, ServeMode};
+use cluster_gcn::session::guard::{run_guarded, Anomaly, GuardConfig, GuardError};
+use cluster_gcn::session::{Method, NullObserver, Session, TrainConfig};
+use cluster_gcn::util::{failpoint, Rng};
+
+/// Serializes every test in this binary: the failpoint registry is
+/// process-global state.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cgcn_chaos_{tag}_{}", std::process::id()))
+}
+
+/// A tiny SBM dataset with strong community→label→feature coupling
+/// (same construction as `tests/driver.rs`).
+fn tiny_sbm(seed: u64) -> Dataset {
+    let n = 240;
+    let communities = 8;
+    let classes = 4;
+    let f_in = 16;
+    let mut rng = Rng::new(seed);
+    let sbm = generate(
+        &SbmSpec { n, communities, avg_deg: 8.0, intra_frac: 0.9, size_skew: 0.5 },
+        &mut rng,
+    );
+    let labels = gen_labels(
+        &LabelModel { task: Task::Multiclass, classes, noise: 0.05, active_per_community: 0 },
+        &sbm.community,
+        communities,
+        &mut rng,
+    );
+    let features =
+        gen_features(&labels, &sbm.community, communities, classes, f_in, 0.3, &mut rng);
+    let split = (0..n)
+        .map(|i| match i % 10 {
+            0..=6 => Split::Train,
+            7..=8 => Split::Val,
+            _ => Split::Test,
+        })
+        .collect();
+    let ds = Dataset {
+        name: "tiny_sbm".into(),
+        task: Task::Multiclass,
+        graph: sbm.graph,
+        f_in,
+        num_classes: classes,
+        features,
+        labels,
+        split,
+    };
+    ds.validate().unwrap();
+    ds
+}
+
+const HIDDEN: usize = 32;
+
+fn cfg(epochs: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        layers: 2,
+        hidden: Some(HIDDEN),
+        b_max: Some(256),
+        lr: 0.05,
+        epochs,
+        eval_every: 1,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// Serving config shape (the weights `into_server` inits for this).
+fn serve_train_cfg(seed: u64) -> TrainConfig {
+    TrainConfig { layers: 2, hidden: Some(HIDDEN), seed, ..TrainConfig::default() }
+}
+
+fn served_weights(ds: &Dataset, seed: u64) -> Vec<cluster_gcn::runtime::Tensor> {
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, HIDDEN, ds.num_classes, 8);
+    TrainState::init(&spec, seed).weights
+}
+
+fn offline_logits(ds: &Dataset, weights: &[cluster_gcn::runtime::Tensor]) -> Vec<f32> {
+    let mut nc = NormCache::new();
+    full_forward_cached(ds, weights, NormConfig::PAPER_DEFAULT, false, &mut nc)
+}
+
+fn state_bits(state: &TrainState) -> Vec<u32> {
+    state
+        .weights
+        .iter()
+        .chain(&state.m)
+        .chain(&state.v)
+        .flat_map(|t| t.data.iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// checkpoint durability
+// ---------------------------------------------------------------------
+
+/// A save that crashes mid-write (torn tmp) or errors before the write
+/// fails with the typed injected fault — and the previous good
+/// checkpoint is byte-for-byte untouched (atomic tmp + rename).
+#[test]
+fn torn_write_fails_typed_and_leaves_previous_checkpoint_intact() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("torn");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ckpt");
+    let spec = ModelSpec::gcn(Task::Multiclass, 2, 8, 16, 4, 8);
+    let st1 = TrainState::init(&spec, 1);
+    checkpoint::save_v3(&st1, "m", 3, None, &path).unwrap();
+
+    failpoint::install("ckpt.torn=1:1", 0).unwrap();
+    let st2 = TrainState::init(&spec, 2);
+    let err = checkpoint::save_v3(&st2, "m", 4, None, &path).unwrap_err();
+    assert!(
+        matches!(err, CheckpointError::Injected(f) if f.site == "ckpt.torn"),
+        "torn write must surface the typed injected fault, got {err}"
+    );
+    failpoint::clear();
+
+    let ck = checkpoint::load_full(&path).unwrap();
+    assert_eq!(ck.epoch, 3, "the torn save must not touch the good file");
+    assert_eq!(state_bits(&ck.state), state_bits(&st1));
+
+    failpoint::install("ckpt.write=1:1", 0).unwrap();
+    let err = checkpoint::save_v3(&st2, "m", 4, None, &path).unwrap_err();
+    assert!(matches!(err, CheckpointError::Injected(f) if f.site == "ckpt.write"));
+    failpoint::clear();
+    assert_eq!(checkpoint::load_full(&path).unwrap().epoch, 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A bit-flipped `CGCNCKP3` fails with the typed checksum mismatch; the
+/// rotation skips corrupt slots (flipped, then truncated) and
+/// `load_full_or_fallback` lands on the newest intact survivor.
+#[test]
+fn corruption_is_detected_typed_and_the_rotation_falls_back() {
+    let _g = lock();
+    failpoint::clear();
+    let dir = tmp("rot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("model.ckpt");
+    let spec = ModelSpec::gcn(Task::Multiclass, 2, 8, 16, 4, 8);
+    let store = RotatingCheckpoint::new(&base, 3);
+    for epoch in 1..=4usize {
+        store
+            .save(&TrainState::init(&spec, epoch as u64), "m", epoch, None)
+            .unwrap();
+    }
+    let slots = store.list().unwrap();
+    assert_eq!(
+        slots.iter().map(|(e, _)| *e).collect::<Vec<_>>(),
+        vec![2, 3, 4],
+        "rotation keeps the last 3 epochs"
+    );
+
+    // flip one bit mid-file in the newest slot
+    let newest = slots.last().unwrap().1.clone();
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&newest, &bytes).unwrap();
+    assert!(
+        matches!(checkpoint::load_full(&newest), Err(CheckpointError::ChecksumMismatch)),
+        "a bit-flip must fail the CRC trailer, typed"
+    );
+    let (ck, path, rejected) = store.load_latest().unwrap();
+    assert_eq!((ck.epoch, rejected), (3, 1), "fallback skips the flipped slot");
+    assert_eq!(path, slots[1].1);
+
+    // truncate the epoch-3 slot too: fallback walks on to epoch 2
+    let bytes = std::fs::read(&slots[1].1).unwrap();
+    std::fs::write(&slots[1].1, &bytes[..bytes.len() - 6]).unwrap();
+    let (ck, _, rejected) = store.load_latest().unwrap();
+    assert_eq!((ck.epoch, rejected), (2, 2));
+
+    // the primary path never existed; the fallback still serves epoch 2
+    let (ck, loaded) = checkpoint::load_full_or_fallback(&base).unwrap();
+    assert_eq!(ck.epoch, 2);
+    assert_eq!(loaded, slots[0].1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// self-healing training
+// ---------------------------------------------------------------------
+
+/// The headline recovery invariant: a NaN injected mid-run (corrupting
+/// only the *reported* loss, never the weights) rolls training back to
+/// the last good rotating checkpoint, and with `lr_backoff = 1.0` the
+/// post-recovery trajectory is **bitwise identical** to the fault-free
+/// run — resume streams are pure functions of `(seed, epoch)`.
+#[test]
+fn guard_recovers_from_injected_nan_and_replays_fault_free_run_bitwise() {
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(7);
+    let fault_free = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(cfg(4, 9))
+        .run()
+        .unwrap();
+
+    let dir = tmp("guard");
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = RotatingCheckpoint::new(dir.join("model.ckpt.guard"), 3);
+    // 6 steps per epoch (6 partitions, q = 1): skip 13 hits so the NaN
+    // lands on epoch 3 step 1, after epochs 1-2 rotated clean saves
+    failpoint::install("driver.loss=1:1:13", 0).unwrap();
+    let gcfg = GuardConfig { lr_backoff: 1.0, max_retries: 2, ..GuardConfig::default() };
+    let mut obs = NullObserver;
+    let outcome = run_guarded(
+        |ck, lr_scale| {
+            let mut c = cfg(4, 9);
+            c.lr *= lr_scale;
+            let mut s = Session::new(&ds).method(Method::Cluster { q: 1 }).partition(6);
+            if let Some(ck) = ck {
+                c.start_epoch = ck.epoch;
+                s = s.initial_state(ck.state.clone());
+            }
+            s.config(c).driver()
+        },
+        &gcfg,
+        &store,
+        &mut obs,
+    )
+    .unwrap();
+    failpoint::clear();
+
+    assert_eq!(outcome.retries, 1, "one anomaly, one recovery");
+    assert_eq!(outcome.rollbacks, 1, "recovery must resume from the rotation");
+    assert!(outcome.saves >= 4, "clean epochs rotate checkpoints");
+    assert_eq!(outcome.lr_scale, 1.0);
+    assert_eq!(
+        state_bits(&fault_free.result.state),
+        state_bits(&outcome.result.state),
+        "post-recovery trajectory must replay the fault-free run bit for bit"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An unrecoverable fault (every step errors) exhausts the retry budget
+/// and surfaces as a typed `RetriesExhausted` — never a panic or hang.
+#[test]
+fn guard_gives_up_typed_after_the_retry_budget() {
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(3);
+    let dir = tmp("exhaust");
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = RotatingCheckpoint::new(dir.join("m.ckpt.guard"), 2);
+    failpoint::install("driver.step=1", 0).unwrap();
+    let gcfg = GuardConfig { max_retries: 2, ..GuardConfig::default() };
+    let mut obs = NullObserver;
+    let err = run_guarded(
+        |ck, _| {
+            let mut c = cfg(2, 5);
+            let mut s = Session::new(&ds).method(Method::Cluster { q: 1 }).partition(4);
+            if let Some(ck) = ck {
+                c.start_epoch = ck.epoch;
+                s = s.initial_state(ck.state.clone());
+            }
+            s.config(c).driver()
+        },
+        &gcfg,
+        &store,
+        &mut obs,
+    )
+    .unwrap_err();
+    failpoint::clear();
+    match err {
+        GuardError::RetriesExhausted { retries, last } => {
+            assert_eq!(retries, 2);
+            assert!(
+                matches!(last, Anomaly::StepError { .. }),
+                "injected step faults surface as step errors, got {last}"
+            );
+        }
+        other => panic!("expected RetriesExhausted, got {other}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// overload-safe serving
+// ---------------------------------------------------------------------
+
+/// Under sustained pressure (every flush stalled, bounded queue, 8
+/// concurrent clients) the server sheds typed at admission and the
+/// degradation ladder engages — and with a single partition even the
+/// degraded halo-free engine answers bitwise-identical to the offline
+/// full forward, so every successful response stays exact.
+#[test]
+fn overloaded_server_sheds_and_degrades_and_stays_exact_with_one_partition() {
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(11);
+    let serve = ServeConfig {
+        mode: ServeMode::ExactCached,
+        queue_capacity: 2,
+        shed_when_full: true,
+        degrade_after: 1,
+        ..ServeConfig::default()
+    };
+    let server = Session::new(&ds)
+        .config(serve_train_cfg(5))
+        .partition(1)
+        .into_server(serve)
+        .unwrap();
+    let full = offline_logits(&ds, &served_weights(&ds, 5));
+    failpoint::install("serve.flush.delay=1", 0).unwrap();
+    let (ok, shed) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let (server, full) = (&server, &full);
+            handles.push(s.spawn(move || {
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for i in 0..40u32 {
+                    let v = (t * 97 + i * 31) % 240;
+                    match server.query_one(v) {
+                        Ok(resp) => {
+                            assert_eq!(
+                                resp,
+                                gather_rows(full, 4, &[v]),
+                                "one partition: even degraded flushes are bitwise exact"
+                            );
+                            ok += 1;
+                        }
+                        Err(ServeError::Overloaded { queue_depth }) => {
+                            assert!(queue_depth > 0);
+                            shed += 1;
+                        }
+                        Err(e) => panic!("unexpected typed failure: {e}"),
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |a, b| (a.0 + b.0, a.1 + b.1))
+    });
+    failpoint::clear();
+    let st = server.stats();
+    assert!(ok > 0, "some queries must succeed");
+    assert!(shed > 0, "admission control must shed under sustained pressure");
+    assert_eq!(st.shed, shed);
+    assert!(st.degraded_flushes > 0, "the degradation ladder must engage");
+    assert_eq!(st.flush_panics, 0);
+    // pressure gone: a lone query is non-pressured and exact again
+    assert_eq!(server.query_one(17).unwrap(), gather_rows(&full, 4, &[17]));
+}
+
+/// Followers waiting behind a stalled flush expire their 1 ms deadlines
+/// with the typed error (the leader never deadlines its own flush), and
+/// the server counts every expiry.
+#[test]
+fn follower_deadlines_expire_typed_under_slow_flushes() {
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(13);
+    let serve = ServeConfig { deadline_ms: 1, ..ServeConfig::default() };
+    let server = Session::new(&ds)
+        .config(serve_train_cfg(7))
+        .partition(1)
+        .into_server(serve)
+        .unwrap();
+    server.warm();
+    failpoint::install("serve.flush.delay=1", 0).unwrap();
+    let timeouts: u64 = std::thread::scope(|s| {
+        (0..6u32)
+            .map(|t| {
+                let server = &server;
+                s.spawn(move || {
+                    let mut timeouts = 0u64;
+                    for i in 0..40u32 {
+                        match server.query_one((t * 37 + i) % 240) {
+                            Ok(_) => {}
+                            Err(ServeError::DeadlineExceeded { deadline_ms }) => {
+                                assert_eq!(deadline_ms, 1);
+                                timeouts += 1;
+                            }
+                            Err(e) => panic!("unexpected failure: {e}"),
+                        }
+                    }
+                    timeouts
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum()
+    });
+    failpoint::clear();
+    assert!(timeouts > 0, "1 ms deadlines must expire under 5 ms flushes");
+    assert_eq!(server.stats().timeouts, timeouts);
+}
+
+/// An injected flush fault fails only the requests riding that flush —
+/// typed, transient, and gone once the fault budget is exhausted.
+#[test]
+fn injected_flush_faults_are_typed_and_transient() {
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(12);
+    let server = Session::new(&ds)
+        .config(serve_train_cfg(6))
+        .partition(1)
+        .into_server(ServeConfig::default())
+        .unwrap();
+    let full = offline_logits(&ds, &served_weights(&ds, 6));
+    failpoint::install("serve.flush=1:2", 0).unwrap();
+    assert_eq!(server.query_one(5), Err(ServeError::Injected("serve.flush")));
+    assert_eq!(server.query_one(5), Err(ServeError::Injected("serve.flush")));
+    // fault budget exhausted: the same request now succeeds, bitwise
+    assert_eq!(server.query_one(5).unwrap(), gather_rows(&full, 4, &[5]));
+    let rep = failpoint::report();
+    assert_eq!((rep[0].hits, rep[0].fires), (3, 2));
+    failpoint::clear();
+}
+
+// ---------------------------------------------------------------------
+// deep tier: the seeded end-to-end chaos sweep
+// ---------------------------------------------------------------------
+
+/// `CGCN_DEEP=1` sweep over train → checkpoint → resume → serve with a
+/// different fault schedule per sweep seed.  Every leg must either
+/// recover cleanly to the fault-free golden bits or fail with a typed
+/// error — never panic, hang, or silently diverge.
+#[test]
+fn deep_seeded_chaos_sweep_over_train_checkpoint_resume_serve() {
+    if std::env::var("CGCN_DEEP").ok().as_deref() != Some("1") {
+        eprintln!("skipping deep chaos sweep (set CGCN_DEEP=1)");
+        return;
+    }
+    let _g = lock();
+    failpoint::clear();
+    let ds = tiny_sbm(29);
+    let fault_free = Session::new(&ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(6)
+        .config(cfg(4, 17))
+        .run()
+        .unwrap();
+    let golden = state_bits(&fault_free.result.state);
+    let gcfg = GuardConfig { lr_backoff: 1.0, max_retries: 3, ..GuardConfig::default() };
+
+    for fail_seed in 0..4u64 {
+        let dir = tmp(&format!("sweep{fail_seed}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = RotatingCheckpoint::new(dir.join("m.ckpt.guard"), 3);
+        let mut obs = NullObserver;
+        let mut make = |ck: Option<&checkpoint::Checkpoint>, lr_scale: f32| {
+            let mut c = cfg(4, 17);
+            c.lr *= lr_scale;
+            let mut s = Session::new(&ds).method(Method::Cluster { q: 1 }).partition(6);
+            if let Some(ck) = ck {
+                c.start_epoch = ck.epoch;
+                s = s.initial_state(ck.state.clone());
+            }
+            s.config(c).driver()
+        };
+
+        // -- train leg: mid-run NaN at a seed-dependent step ------------
+        let skip = 6 + (fail_seed as usize * 5) % 17;
+        failpoint::install(&format!("driver.loss=1:1:{skip}"), fail_seed).unwrap();
+        let outcome = run_guarded(&mut make, &gcfg, &store, &mut obs);
+        failpoint::clear();
+        let outcome = match outcome {
+            Ok(o) => o,
+            Err(e) => panic!("seed {fail_seed}: guard must recover, got {e}"),
+        };
+        assert_eq!(outcome.retries, 1, "seed {fail_seed}: the fault must land once");
+        assert_eq!(
+            state_bits(&outcome.result.state),
+            golden,
+            "seed {fail_seed}: post-recovery trajectory diverged from golden"
+        );
+
+        // -- checkpoint/resume leg: a plain session resumed from the
+        // oldest surviving rotation slot replays to the same bits ------
+        let slots = store.list().unwrap();
+        let (epoch, path) = slots.first().unwrap().clone();
+        let ck = checkpoint::load_full(&path).unwrap();
+        assert_eq!(ck.epoch, epoch);
+        let resumed = Session::new(&ds)
+            .method(Method::Cluster { q: 1 })
+            .partition(6)
+            .config(TrainConfig { start_epoch: ck.epoch, ..cfg(4, 17) })
+            .initial_state(ck.state)
+            .run()
+            .unwrap();
+        assert_eq!(
+            state_bits(&resumed.result.state),
+            golden,
+            "seed {fail_seed}: resume from rotation slot e{epoch} diverged"
+        );
+
+        // -- torn-save leg: a crash during the rotating save itself is a
+        // typed checkpoint error, never a panic -------------------------
+        let dir2 = tmp(&format!("sweep{fail_seed}_torn"));
+        std::fs::create_dir_all(&dir2).unwrap();
+        let store2 = RotatingCheckpoint::new(dir2.join("m.ckpt.guard"), 3);
+        failpoint::install(&format!("ckpt.torn=1:1:{fail_seed}"), fail_seed).unwrap();
+        let res = run_guarded(&mut make, &gcfg, &store2, &mut obs);
+        failpoint::clear();
+        match res {
+            Err(GuardError::Checkpoint(CheckpointError::Injected(f))) => {
+                assert_eq!(f.site, "ckpt.torn", "seed {fail_seed}");
+            }
+            Err(e) => panic!("seed {fail_seed}: expected the typed injected fault, got {e}"),
+            Ok(o) => panic!(
+                "seed {fail_seed}: the torn save must surface (saves = {})",
+                o.saves
+            ),
+        }
+        // ...and every slot the torn run left behind still verifies
+        for (_, p) in store2.list().unwrap() {
+            checkpoint::load_full(&p).unwrap_or_else(|e| {
+                panic!("seed {fail_seed}: torn run left a corrupt slot {p:?}: {e}")
+            });
+        }
+
+        // -- serve leg: final weights served with random flush faults —
+        // every response is bitwise exact or a typed injected error ----
+        let server = Session::new(&ds)
+            .config(cfg(4, 17))
+            .partition(1)
+            .initial_state(outcome.result.state.clone())
+            .into_server(ServeConfig::default())
+            .unwrap();
+        let full = offline_logits(&ds, &outcome.result.state.weights);
+        failpoint::install("serve.flush=0.5", fail_seed).unwrap();
+        let mut injected = 0u64;
+        for i in 0..40u32 {
+            let v = (i * 13 + fail_seed as u32) % 240;
+            match server.query_one(v) {
+                Ok(resp) => assert_eq!(
+                    resp,
+                    gather_rows(&full, 4, &[v]),
+                    "seed {fail_seed}: served bits diverged"
+                ),
+                Err(ServeError::Injected("serve.flush")) => injected += 1,
+                Err(e) => panic!("seed {fail_seed}: unexpected serve failure: {e}"),
+            }
+        }
+        failpoint::clear();
+        assert!(injected > 0, "seed {fail_seed}: chaos faults must land in the serve leg");
+
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+}

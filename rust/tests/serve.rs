@@ -160,18 +160,20 @@ fn coalescer_merges_concurrent_queries_into_fewer_flushes() {
         for t in 0..N as u32 {
             let co = &co;
             s.spawn(move || {
-                let resp = co.run(vec![t], |lists| {
-                    // the first flush leader stalls until every thread
-                    // has enqueued, so the remaining N-1 requests are
-                    // provably coalesced into at most one more flush
-                    while co.stats().queries < N as u64 {
-                        std::thread::yield_now();
-                    }
-                    lists
-                        .iter()
-                        .map(|l| l.iter().map(|&v| v as f32 * 2.0).collect())
-                        .collect()
-                });
+                let resp = co
+                    .run(vec![t], |lists| {
+                        // the first flush leader stalls until every thread
+                        // has enqueued, so the remaining N-1 requests are
+                        // provably coalesced into at most one more flush
+                        while co.stats().queries < N as u64 {
+                            std::thread::yield_now();
+                        }
+                        Ok(lists
+                            .iter()
+                            .map(|l| l.iter().map(|&v| v as f32 * 2.0).collect())
+                            .collect())
+                    })
+                    .unwrap();
                 assert_eq!(resp, vec![t as f32 * 2.0], "caller {t} got someone else's row");
             });
         }
