@@ -382,6 +382,10 @@ fn backward_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, iters: u
         ("adam_scalar_ms".to_string(), Json::num(ms(adam_scalar.mean))),
         ("adam_pooled_ms".to_string(), Json::num(ms(adam_pooled.mean))),
         ("at_b_skip_rate".to_string(), Json::num(skip_rate)),
+        (
+            "peak_rss_bytes".to_string(),
+            Json::num(cluster_gcn::util::memstat::peak_rss_bytes() as f64),
+        ),
     ];
     pairs.extend(simd_pairs);
     let row = Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
@@ -463,6 +467,10 @@ fn sharded_probe(ds: &Dataset, sampler: &ClusterSampler, b_max: usize, steps: us
         pairs.push((format!("shards_{shards}_batches_per_s"), Json::num(rate)));
         pairs.push((format!("shards_{shards}_speedup"), Json::num(rate / base)));
     }
+    pairs.push((
+        "peak_rss_bytes".into(),
+        Json::num(cluster_gcn::util::memstat::peak_rss_bytes() as f64),
+    ));
     let row = Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect());
     bs::dump_row("perf_probe", row.clone());
     let _ = std::fs::create_dir_all("bench_results");

@@ -12,7 +12,8 @@
 #                     (proves goldens are backend-independent), raises
 #                     the simd_parity random-case count, runs a
 #                     larger-preset perf_probe, the seeded end-to-end
-#                     chaos sweep, and the serve overload smoke.
+#                     chaos sweep, the serve overload smoke, and a
+#                     scaled-down table8 out-of-core benchmark smoke.
 set -euo pipefail
 
 cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
@@ -70,9 +71,17 @@ echo "== robustness gates: failpoint chaos suite (fast tier) =="
 # end-to-end across seeds)
 cargo test --release -q --test chaos
 
+echo "== out-of-core storage gates: chunk parity + typed corruption + OOC replay =="
+# the disk arm must be bit-identical to the resident arm at every seam
+# (row reads, normalization, assembled batches, partitions, clustered
+# eval, full training trajectories), and torn / bit-flipped stores must
+# fail with typed StoreErrors instead of garbage reads
+cargo test --release -q --test store
+
 echo "== checkpoint-corruption gate (CLI: bit-flip + truncate, fallback load) =="
 CKDIR="$(mktemp -d)"
-trap 'rm -rf "$CKDIR"' EXIT
+STOREDIR="$(mktemp -d)"
+trap 'rm -rf "$CKDIR" "$STOREDIR"' EXIT
 cargo run --release -q -- train --preset cora_like --backend host --epochs 2 \
   --guard --keep 2 --lr-backoff 1.0 --save "$CKDIR/model.ckpt"
 # flip bytes mid-file: the CRC trailer must reject the primary and the
@@ -97,6 +106,24 @@ cargo run --release -q -- train --preset cora_like --backend host --epochs 3 \
 grep -q "falling back to" "$CKDIR/trunc.log" || {
   cat "$CKDIR/trunc.log" >&2
   echo "expected the truncated-checkpoint fallback warning" >&2; exit 1;
+}
+
+echo "== out-of-core e2e (CLI: datagen -> train -> eval -> serve, --storage disk) =="
+# a deliberately tiny chunk size forces many pread windows per scan;
+# every stage must run off the CGCNGS01 store and land on the same
+# code paths the RAM arm exercises
+cargo run --release -q -- datagen --preset cora_like --storage disk \
+  --chunk-rows 3 --cache "$STOREDIR"
+cargo run --release -q -- train --preset cora_like --backend host --epochs 2 \
+  --storage disk --chunk-rows 3 --cache "$STOREDIR" --save "$STOREDIR/ooc.ckpt"
+cargo run --release -q -- eval --preset cora_like --checkpoint "$STOREDIR/ooc.ckpt" \
+  --storage disk --chunk-rows 3 --cache "$STOREDIR"
+cargo run --release -q -- serve --preset cora_like --checkpoint "$STOREDIR/ooc.ckpt" \
+  --queries 100 --batch 4 --clients 2 --seed 3 \
+  --storage disk --chunk-rows 3 --cache "$STOREDIR" \
+  --out "$STOREDIR/BENCH_serve_disk.json"
+grep -q '"peak_rss_bytes"' "$STOREDIR/BENCH_serve_disk.json" || {
+  echo "serve --storage disk did not record peak_rss_bytes" >&2; exit 1;
 }
 
 echo "== golden-trace regression suite (bitwise loss/F1 trajectories, all methods) =="
@@ -174,6 +201,26 @@ if [ "${CGCN_DEEP:-0}" = 1 ]; then
   grep -Eq '"degraded_flushes": *[1-9]' bench_results/BENCH_serve_overload.json || {
     echo "degradation ladder never engaged under sustained pressure" >&2; exit 1;
   }
+
+  echo "== deep tier: table8 smoke (scaled-down OOC benchmark + RSS accounting) =="
+  # the full amazon2m_full run is a release benchmark, not a CI gate; a
+  # small preset proves the table8 pipeline end-to-end (streamed gen ->
+  # streaming partition -> out-of-core train -> JSON report) and that
+  # peak_rss_bytes is recorded and sane (> 0, under 32 GB)
+  cargo run --release -- table8 --preset cora_like --parts 8 --q 2 --epochs 2 \
+    --eval-every 1 --chunk-rows 64 --cache "$STOREDIR" \
+    --out bench_results/BENCH_table8.json
+  for key in peak_rss_bytes peak_batch_bytes epoch_secs partition_secs gen_secs \
+             final_loss final_f1 n nnz parts q steps; do
+    grep -q "\"$key\"" bench_results/BENCH_table8.json || {
+      echo "BENCH_table8.json missing key $key" >&2; exit 1;
+    }
+  done
+  RSS="$(grep -o '"peak_rss_bytes": *[0-9]*' bench_results/BENCH_table8.json \
+    | grep -o '[0-9]*$')"
+  if [ -z "$RSS" ] || [ "$RSS" -le 0 ] || [ "$RSS" -ge 34359738368 ]; then
+    echo "peak_rss_bytes out of range: ${RSS:-missing}" >&2; exit 1;
+  fi
 fi
 
 echo "CI gate passed."

@@ -58,6 +58,7 @@ pub fn main() -> Result<()> {
         "train" => cmd_train(&argv),
         "eval" => cmd_eval(&argv),
         "serve" => cmd_serve(&argv),
+        "table8" => cmd_table8(&argv),
         "inspect" => cmd_inspect(&argv),
         other => Err(anyhow!("unknown command {other}\n{USAGE}")),
     }
@@ -86,9 +87,94 @@ fn load_ds(a: &Args) -> Result<crate::graph::Dataset> {
     Ok(ds)
 }
 
+/// Resolve the preset named by `--preset` (or `fallback` when given).
+fn resolve_preset(a: &Args, fallback: Option<&str>) -> Result<&'static crate::datagen::Preset> {
+    let name = match (a.get("preset"), fallback) {
+        (Some(n), _) => n.to_string(),
+        (None, Some(f)) => f.to_string(),
+        (None, None) => return Err(anyhow!("--preset required")),
+    };
+    preset(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown preset {name}; have: {}",
+            PRESETS.iter().map(|p| p.name).collect::<Vec<_>>().join(" ")
+        )
+    })
+}
+
+/// Build (or open from cache) the on-disk `CGCNGS01` store for the
+/// `--preset`/`--seed` of `a` — the out-of-core twin of [`load_ds`].
+fn load_store(a: &Args) -> Result<crate::graph::DiskDataset> {
+    let p = resolve_preset(a, None)?;
+    let seed = a.u64_or("seed", 42)?;
+    let cache = a.str_or("cache", "data");
+    let chunk_rows = a.usize_or("chunk-rows", 0)?;
+    let t = Timer::start();
+    let dd = crate::datagen::build_cached_store(
+        p,
+        seed,
+        std::path::Path::new(&cache),
+        chunk_rows,
+    )?;
+    eprintln!(
+        "store {} ready in {:.2}s ({})",
+        p.name,
+        t.secs(),
+        dd.path().display()
+    );
+    Ok(dd)
+}
+
+/// `--storage ram` (default) loads/builds the resident dataset;
+/// `--storage disk` builds the chunk-streamed store and materializes a
+/// dataset from it (byte-identical to the RAM build — pinned by the
+/// `stream` tests).  Commands whose math requires residency (exact
+/// eval, serving) go through this; the out-of-core paths
+/// (`train --storage disk`, `table8`) never materialize.
+fn load_ds_storage(a: &Args) -> Result<crate::graph::Dataset> {
+    match a.str_or("storage", "ram").as_str() {
+        "ram" => load_ds(a),
+        "disk" => Ok(load_store(a)?.to_dataset()?),
+        other => bail!("unknown storage {other} (ram|disk)"),
+    }
+}
+
 fn cmd_datagen(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &["preset", "seed", "cache"])?;
-    let ds = load_ds(&a)?;
+    let a = Args::parse(argv, &["preset", "seed", "cache", "storage", "chunk-rows"])?;
+    if a.str_or("storage", "ram") == "disk" {
+        // report straight off the store header + offset index — the
+        // 2M-node preset never fits as a resident Dataset
+        let dd = load_store(&a)?;
+        let n = dd.n();
+        let (mut dmin, mut dmax, mut dsum) = (usize::MAX, 0usize, 0u64);
+        let (mut tr, mut va, mut te) = (0usize, 0usize, 0usize);
+        for v in 0..n {
+            let d = dd.degree(v);
+            dmin = dmin.min(d);
+            dmax = dmax.max(d);
+            dsum += d as u64;
+            match dd.split_of(v) {
+                crate::graph::Split::Train => tr += 1,
+                crate::graph::Split::Val => va += 1,
+                crate::graph::Split::Test => te += 1,
+            }
+        }
+        println!("name       : {}", dd.name);
+        println!("task       : {:?}", dd.task);
+        println!("#nodes     : {n}");
+        println!("#edges     : {}", dd.nnz() / 2);
+        println!("#labels    : {}", dd.num_classes);
+        println!("#features  : {}", dd.f_in);
+        println!(
+            "degree     : min {} max {dmax} avg {:.1}",
+            if n == 0 { 0 } else { dmin },
+            dsum as f64 / n.max(1) as f64
+        );
+        println!("splits     : {tr}/{va}/{te} (train/val/test)");
+        println!("store      : {}", dd.path().display());
+        return Ok(());
+    }
+    let ds = load_ds_storage(&a)?;
     let (dmin, dmax, davg) = ds.graph.degree_stats();
     let (tr, va, te) = ds.split_counts();
     // Table 3 / Table 12 style report
@@ -192,9 +278,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
             "eval-parts", "resume", "checkpoint-every", "guard",
             "guard-retries", "lr-backoff", "keep", "failpoints", "fail-seed",
+            "storage", "chunk-rows",
         ],
     )?;
     install_failpoints(&a)?;
+    match a.str_or("storage", "ram").as_str() {
+        "ram" => {}
+        "disk" => return cmd_train_disk(&a),
+        other => bail!("unknown storage {other} (ram|disk)"),
+    }
     let ds = load_ds(&a)?;
     let p = preset(&ds.name).unwrap();
     let layers = a.usize_or("layers", 2)?;
@@ -488,12 +580,279 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared setup for the out-of-core paths (`train --storage disk`,
+/// `table8`): open/build the store, partition it with the streaming
+/// partitioner (coarse graph only in RAM), and size the model to the
+/// sampler like the session does.
+struct OocRun {
+    store: crate::graph::GraphStorage,
+    sampler: crate::coordinator::ClusterSampler,
+    spec: crate::runtime::ModelSpec,
+    model: String,
+    parts: usize,
+    q: usize,
+    gen_secs: f64,
+    partition_secs: f64,
+}
+
+fn ooc_setup(a: &Args, p: &crate::datagen::Preset, layers: usize) -> Result<OocRun> {
+    use crate::partition::{StreamingParams, StreamingPartitioner};
+    use crate::util::Rng;
+
+    let ds_seed = a.u64_or("seed", 42)?;
+    let t = Timer::start();
+    let dd = load_store(a)?;
+    let gen_secs = t.secs();
+    let store = crate::graph::GraphStorage::OnDisk(dd);
+
+    let parts = a.usize_or("parts", p.default_partitions)?.max(1);
+    let q = a.usize_or("q", p.default_q)?.max(1).min(parts);
+    let chunk_rows = a.usize_or("chunk-rows", 0)?;
+    let sp = StreamingPartitioner {
+        params: StreamingParams {
+            group_cap: a.usize_or("group-cap", 8)?,
+            chunk_rows: if chunk_rows == 0 {
+                crate::graph::store::DEFAULT_CHUNK_ROWS
+            } else {
+                chunk_rows
+            },
+            ..StreamingParams::default()
+        },
+    };
+    // same partition-seed convention as `cluster-gcn partition`
+    let mut rng = Rng::new(ds_seed ^ 0xBEEF);
+    let t = Timer::start();
+    let part = sp.partition_storage(&store, parts, &mut rng);
+    let partition_secs = t.secs();
+    let sampler = crate::coordinator::ClusterSampler::new(
+        crate::partition::parts_to_clusters(&part, parts),
+        q,
+    );
+
+    let hidden = a.usize_or("hidden", 0)?;
+    let f_hid = if hidden == 0 { p.f_hid } else { hidden };
+    // grow the padded batch to fit the sampler, as the session does
+    let b_max = p.b_max.max(sampler.max_batch_nodes()).next_multiple_of(8);
+    let spec = crate::runtime::ModelSpec::gcn(
+        store.task(),
+        layers,
+        store.f_in(),
+        f_hid,
+        store.num_classes(),
+        b_max,
+    );
+    let model = format!("gcn_l{layers}_h{f_hid}_b{b_max}_ooc");
+    Ok(OocRun { store, sampler, spec, model, parts, q, gen_secs, partition_secs })
+}
+
+/// `train --storage disk`: Cluster-GCN on the host backend with the
+/// graph never resident — batches assemble row-by-row from the store,
+/// the partitioner streams edge chunks, and the convergence curve uses
+/// the clustered eval over the training partitions (a full-graph exact
+/// eval would require residency).
+fn cmd_train_disk(a: &Args) -> Result<()> {
+    for unsupported in ["guard", "shards", "resume", "eval", "eval-parts", "failpoints"] {
+        if a.get(unsupported).is_some() {
+            bail!("--{unsupported} is not supported with --storage disk");
+        }
+    }
+    let method_name = a.str_or("method", "cluster");
+    if method_name != "cluster" {
+        bail!("--storage disk supports --method cluster only (got {method_name})");
+    }
+    if a.str_or("backend", "host") != "host" {
+        bail!(
+            "--storage disk trains on --backend host only: the PJRT step is \
+             driven through the same assembler, but artifact shape resolution \
+             assumes a resident dataset"
+        );
+    }
+    let p = resolve_preset(a, None)?;
+    let layers = a.usize_or("layers", 2)?;
+    let run = ooc_setup(a, p, layers)?;
+
+    let hidden = a.usize_or("hidden", 0)?;
+    let cfg = TrainConfig {
+        layers,
+        hidden: if hidden == 0 { None } else { Some(hidden) },
+        b_max: None,
+        lr: a.f64_or("lr", 0.01)? as f32,
+        epochs: a.usize_or("epochs", 40)?,
+        eval_every: a.usize_or("eval-every", 5)?,
+        seed: a.u64_or("seed", 0)?,
+        schedule: match a.get("lr-decay") {
+            Some(f) => crate::coordinator::LrSchedule::StepDecay {
+                every: a.usize_or("lr-decay-every", 20)?,
+                factor: f.parse().map_err(|_| anyhow!("bad --lr-decay"))?,
+            },
+            None => crate::coordinator::LrSchedule::Constant,
+        },
+        patience: a.usize_or("patience", 0)?,
+        norm: parse_norm(&a.str_or("norm", "sym"))?,
+        ..TrainConfig::default()
+    };
+
+    let mut backend = HostBackend::new();
+    backend.register_model(&run.model, run.spec.clone());
+    let t = Timer::start();
+    let out = crate::coordinator::train_storage(
+        &mut backend,
+        &run.store,
+        &run.sampler,
+        &run.model,
+        &cfg,
+    )?;
+    let wall = t.secs();
+    if let Some(path) = a.get("save") {
+        checkpoint::save_v3(
+            &out.state,
+            &run.model,
+            cfg.epochs,
+            None,
+            std::path::Path::new(path),
+        )?;
+        eprintln!("saved checkpoint to {path}");
+    }
+    println!("method        : cluster ({}, out-of-core)", run.model);
+    println!("backend       : host (--storage disk)");
+    println!("partitions    : {} (q={}, streaming multilevel)", run.parts, run.q);
+    println!("epochs        : {}", out.curve.last().map(|c| c.epoch).unwrap_or(0));
+    println!("steps         : {}", out.steps);
+    println!(
+        "train time    : {:.2}s (wall {:.2}s, partition {:.2}s)",
+        out.train_seconds, wall, run.partition_secs
+    );
+    println!("peak memory   : {:.1} MB", out.peak_bytes as f64 / 1e6);
+    println!(
+        "peak RSS      : {:.1} MB",
+        crate::util::memstat::peak_rss_bytes() as f64 / 1e6
+    );
+    println!("curve (epoch, train_s, loss, clustered_val_f1):");
+    for pt in &out.curve {
+        println!(
+            "  {:4}  {:8.2}  {:.4}  {:.4}",
+            pt.epoch, pt.train_seconds, pt.train_loss, pt.eval_f1
+        );
+    }
+    Ok(())
+}
+
+/// `cluster-gcn table8`: the paper's Table 8 experiment — Cluster-GCN
+/// on Amazon2M-scale data, recording memory alongside time.  Generates
+/// the preset shard-by-shard into the `CGCNGS01` store (O(chunk)
+/// resident), partitions it with the streaming coarsener, trains
+/// out-of-core on the host backend, and writes peak RSS + phase
+/// timings to a benchmark JSON.
+fn cmd_table8(argv: &[String]) -> Result<()> {
+    let a = Args::parse(
+        argv,
+        &[
+            "preset", "seed", "cache", "storage", "chunk-rows", "parts", "q",
+            "group-cap", "layers", "hidden", "epochs", "eval-every", "lr",
+            "norm", "out",
+        ],
+    )?;
+    match a.str_or("storage", "disk").as_str() {
+        "disk" => {}
+        "ram" => bail!("table8 is the out-of-core benchmark; use `train` for RAM runs"),
+        other => bail!("unknown storage {other} (disk)"),
+    }
+    let p = resolve_preset(&a, Some("amazon2m_full"))?;
+    let layers = a.usize_or("layers", 2)?;
+    let run = ooc_setup(&a, p, layers)?;
+
+    let hidden = a.usize_or("hidden", 0)?;
+    let cfg = TrainConfig {
+        layers,
+        hidden: if hidden == 0 { None } else { Some(hidden) },
+        lr: a.f64_or("lr", 0.01)? as f32,
+        epochs: a.usize_or("epochs", 5)?,
+        // Table 8 reports time/memory, not a convergence curve: default
+        // to a single final clustered eval
+        eval_every: a.usize_or("eval-every", 0)?,
+        seed: a.u64_or("seed", 0)?,
+        norm: parse_norm(&a.str_or("norm", "sym"))?,
+        ..TrainConfig::default()
+    };
+
+    let mut backend = HostBackend::new();
+    backend.register_model(&run.model, run.spec.clone());
+    let t = Timer::start();
+    let out = crate::coordinator::train_storage(
+        &mut backend,
+        &run.store,
+        &run.sampler,
+        &run.model,
+        &cfg,
+    )?;
+    let wall = t.secs();
+    let epochs_run = out.curve.last().map(|c| c.epoch).unwrap_or(cfg.epochs);
+    let final_pt = out.curve.last();
+    let peak_rss = crate::util::memstat::peak_rss_bytes();
+
+    let out_path = a.str_or("out", "bench_results/BENCH_table8.json");
+    let json = Json::obj(vec![
+        ("kind", Json::str("table8")),
+        ("preset", Json::str(p.name)),
+        ("storage", Json::str("disk")),
+        ("n", Json::num(run.store.n() as f64)),
+        ("nnz", Json::num(run.store.nnz() as f64)),
+        ("parts", Json::num(run.parts as f64)),
+        ("q", Json::num(run.q as f64)),
+        ("layers", Json::num(layers as f64)),
+        ("b_max", Json::num(run.spec.b_max as f64)),
+        ("epochs", Json::num(epochs_run as f64)),
+        ("steps", Json::num(out.steps as f64)),
+        ("gen_secs", Json::num(run.gen_secs)),
+        ("partition_secs", Json::num(run.partition_secs)),
+        ("train_secs", Json::num(out.train_seconds)),
+        ("wall_secs", Json::num(wall)),
+        (
+            "epoch_secs",
+            Json::num(out.train_seconds / epochs_run.max(1) as f64),
+        ),
+        (
+            "final_loss",
+            Json::num(final_pt.map(|c| c.train_loss).unwrap_or(f64::NAN)),
+        ),
+        (
+            "final_f1",
+            Json::num(final_pt.map(|c| c.eval_f1).unwrap_or(f64::NAN)),
+        ),
+        ("peak_batch_bytes", Json::num(out.peak_bytes as f64)),
+        ("peak_rss_bytes", Json::num(peak_rss as f64)),
+        (
+            "within_edges_per_node",
+            Json::num(out.avg_within_edges_per_node),
+        ),
+    ]);
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, json.to_string())?;
+
+    println!("preset        : {} ({} nodes, {} edges)", p.name, run.store.n(), run.store.nnz() / 2);
+    println!("partitions    : {} (q={})", run.parts, run.q);
+    println!("phases        : gen {:.2}s  partition {:.2}s  train {:.2}s (wall {:.2}s)", run.gen_secs, run.partition_secs, out.train_seconds, wall);
+    println!("per epoch     : {:.2}s over {epochs_run} epochs ({} steps)", out.train_seconds / epochs_run.max(1) as f64, out.steps);
+    if let Some(pt) = final_pt {
+        println!("final         : loss {:.4}  clustered val F1 {:.4}", pt.train_loss, pt.eval_f1);
+    }
+    println!("peak batch    : {:.1} MB", out.peak_bytes as f64 / 1e6);
+    println!("peak RSS      : {:.1} MB", peak_rss as f64 / 1e6);
+    println!("report        : {out_path}");
+    Ok(())
+}
+
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = Args::parse(
         argv,
-        &["preset", "seed", "cache", "checkpoint", "norm", "split"],
+        &[
+            "preset", "seed", "cache", "checkpoint", "norm", "split",
+            "storage", "chunk-rows",
+        ],
     )?;
-    let ds = load_ds(&a)?;
+    let ds = load_ds_storage(&a)?;
     let ckpt = a
         .get("checkpoint")
         .ok_or_else(|| anyhow!("--checkpoint required"))?;
@@ -528,11 +887,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "norm", "checkpoint", "queries", "batch", "mix", "hot-frac",
             "hot-weight", "cross", "clients", "mode", "out", "no-warm",
             "queue", "shed", "deadline-ms", "degrade-after", "failpoints",
-            "fail-seed",
+            "fail-seed", "storage", "chunk-rows",
         ],
     )?;
     install_failpoints(&a)?;
-    let ds = load_ds(&a)?;
+    let ds = load_ds_storage(&a)?;
     let seed = a.u64_or("seed", 0)?;
     let hidden = a.usize_or("hidden", 0)?;
     let cfg = TrainConfig {
@@ -672,6 +1031,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         ("errors", Json::num(report.errors as f64)),
         ("flush_panics", Json::num(st.flush_panics as f64)),
         ("degraded_flushes", Json::num(st.degraded_flushes as f64)),
+        (
+            "peak_rss_bytes",
+            Json::num(crate::util::memstat::peak_rss_bytes() as f64),
+        ),
         // u64 digest as hex text: f64 would silently drop low bits
         ("digest", Json::str(&format!("{:016x}", report.digest))),
     ]);
@@ -742,7 +1105,7 @@ mod tests {
     /// backend selector.
     #[test]
     fn usage_covers_every_subcommand() {
-        for sub in ["datagen", "partition", "train", "eval", "serve", "inspect"] {
+        for sub in ["datagen", "partition", "train", "eval", "serve", "table8", "inspect"] {
             assert!(
                 USAGE.contains(&format!("cluster-gcn {sub}")),
                 "usage.txt missing subcommand {sub}"
@@ -753,7 +1116,8 @@ mod tests {
             "--shards", "--prefetch", "--eval exact|clustered", "--eval-parts",
             "--guard", "--guard-retries", "--lr-backoff", "--keep",
             "--failpoints", "--fail-seed", "--queue", "--shed",
-            "--deadline-ms", "--degrade-after",
+            "--deadline-ms", "--degrade-after", "--storage ram|disk",
+            "--chunk-rows", "--group-cap",
         ] {
             assert!(USAGE.contains(flag), "usage.txt missing flag {flag}");
         }

@@ -20,7 +20,7 @@
 //! entries through `norm::block_edge_val`/`block_diag_val`, so they are
 //! bit-identical by construction.
 
-use crate::graph::{Dataset, Split, SubgraphScratch};
+use crate::graph::{Dataset, GraphStorage, Split, SubgraphScratch};
 use crate::norm::{
     block_diag_val, block_edge_val, build_dense_block_prezeroed, NormConfig,
 };
@@ -129,6 +129,57 @@ pub struct BatchAssembler {
     /// per-row write cursor for the CSR counting sort, reused across
     /// batches.
     cursor: Vec<usize>,
+    /// neighbor-row scratch for storage-backed induced extraction,
+    /// reused across batches.
+    nb: Vec<u32>,
+}
+
+/// Row-level access the assembly core needs.  Implemented by the in-RAM
+/// [`Dataset`] and the [`GraphStorage`] seam so one core serves both
+/// storage modes — the ram and disk paths cannot drift numerically
+/// because they *are* the same code.
+trait AssemblyRows {
+    fn f_in(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn copy_feature_row(&self, v: usize, out: &mut [f32]);
+    fn write_label_row(&self, v: usize, classes: usize, out: &mut [f32]);
+    fn is_train(&self, v: usize) -> bool;
+}
+
+impl AssemblyRows for Dataset {
+    fn f_in(&self) -> usize {
+        self.f_in
+    }
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+    fn copy_feature_row(&self, v: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.feature_row(v));
+    }
+    fn write_label_row(&self, v: usize, classes: usize, out: &mut [f32]) {
+        self.labels.write_row(v, classes, out);
+    }
+    fn is_train(&self, v: usize) -> bool {
+        self.split[v] == Split::Train
+    }
+}
+
+impl AssemblyRows for GraphStorage {
+    fn f_in(&self) -> usize {
+        self.f_in()
+    }
+    fn num_classes(&self) -> usize {
+        self.num_classes()
+    }
+    fn copy_feature_row(&self, v: usize, out: &mut [f32]) {
+        self.feature_row_into(v, out);
+    }
+    fn write_label_row(&self, v: usize, classes: usize, out: &mut [f32]) {
+        GraphStorage::write_label_row(self, v, classes, out);
+    }
+    fn is_train(&self, v: usize) -> bool {
+        self.split_of(v) == Split::Train
+    }
 }
 
 impl BatchAssembler {
@@ -140,12 +191,18 @@ impl BatchAssembler {
             edges: Vec::new(),
             deg: Vec::new(),
             cursor: Vec::new(),
+            nb: Vec::new(),
         }
     }
 
     /// A reusable batch shaped for this assembler and dataset.
     pub fn new_batch(&self, ds: &Dataset) -> Batch {
         Batch::new(self.b_max, ds.f_in, ds.num_classes)
+    }
+
+    /// A reusable batch shaped for this assembler and storage.
+    pub fn new_batch_storage(&self, store: &GraphStorage) -> Batch {
+        Batch::new(self.b_max, store.f_in(), store.num_classes())
     }
 
     /// Assemble a batch over `nodes` using the graph's induced edges.
@@ -183,11 +240,48 @@ impl BatchAssembler {
         self.edges = edges;
     }
 
+    /// Storage-backed twin of [`BatchAssembler::assemble_into`]: the
+    /// induced block is gathered through lazy adjacency-row reads
+    /// ([`induced_edges_by`](crate::graph::induced_edges_by)) and the
+    /// feature/label/mask rows come from the [`GraphStorage`] accessors.
+    /// On the `InRam` arm (and on an `OnDisk` store of the same
+    /// dataset) the result is bit-identical to `assemble_into` — same
+    /// edge order, same core (pinned by the `store` test suite).
+    pub fn assemble_storage_into(
+        &mut self,
+        store: &GraphStorage,
+        nodes: &[u32],
+        batch: &mut Batch,
+    ) {
+        crate::util::failpoint::maybe_delay("batch.assemble", 2);
+        let mut nb = std::mem::take(&mut self.nb);
+        let mut edges = std::mem::take(&mut self.edges);
+        crate::graph::induced_edges_by(nodes, &mut self.scratch, &mut nb, &mut edges, |v, buf| {
+            store.neighbors_into(v as usize, buf)
+        });
+        self.assemble_edges_core(store, nodes, &edges, batch);
+        self.edges = edges;
+        self.nb = nb;
+    }
+
     /// Core assembly into a reused `batch`: clears only the rows the
     /// previous assembly dirtied, then writes the new block/rows.
     pub fn assemble_with_edges_into(
         &mut self,
         ds: &Dataset,
+        nodes: &[u32],
+        edges: &[(u32, u32)],
+        batch: &mut Batch,
+    ) {
+        self.assemble_edges_core(ds, nodes, edges, batch)
+    }
+
+    /// The one assembly core, generic over row storage (see
+    /// [`AssemblyRows`]): dense + sparse block build, feature/label row
+    /// copies, train mask, dirty-row bookkeeping.
+    fn assemble_edges_core<R: AssemblyRows>(
+        &mut self,
+        rows: &R,
         nodes: &[u32],
         edges: &[(u32, u32)],
         batch: &mut Batch,
@@ -199,8 +293,8 @@ impl BatchAssembler {
             "batch of {n_real} nodes exceeds b_max={b}; increase b_max \
              or reduce clusters per batch"
         );
-        let f = ds.f_in;
-        let c = ds.num_classes;
+        let f = rows.f_in();
+        let c = rows.num_classes();
         assert_eq!(batch.a.dims, vec![b, b], "batch shaped for a different assembler");
         assert_eq!(batch.x.dims, vec![b, f], "batch shaped for a different dataset");
         assert_eq!(batch.y.dims, vec![b, c], "batch shaped for a different dataset");
@@ -216,8 +310,8 @@ impl BatchAssembler {
 
         for (i, &v) in nodes.iter().enumerate() {
             let v = v as usize;
-            batch.x.data[i * f..(i + 1) * f].copy_from_slice(ds.feature_row(v));
-            ds.labels.write_row(v, c, &mut batch.y.data[i * c..(i + 1) * c]);
+            rows.copy_feature_row(v, &mut batch.x.data[i * f..(i + 1) * f]);
+            rows.write_label_row(v, c, &mut batch.y.data[i * c..(i + 1) * c]);
         }
         // rows the previous batch used beyond this batch's extent
         if prev > n_real {
@@ -227,7 +321,7 @@ impl BatchAssembler {
 
         let mut n_train = 0;
         for (i, &v) in nodes.iter().enumerate() {
-            if ds.split[v as usize] == Split::Train {
+            if rows.is_train(v as usize) {
                 batch.mask.data[i] = 1.0;
                 n_train += 1;
             } else {
@@ -526,6 +620,32 @@ mod tests {
             assert_eq!(buf.a.data, fresh.a.data, "set {k}");
             assert_eq!(buf.x.data, fresh.x.data, "set {k}");
             assert_eq!(buf.mask.data, fresh.mask.data, "set {k}");
+        }
+    }
+
+    /// The storage twin over an `InRam` wrap is the same code path row
+    /// for row — pin it bitwise anyway so a refactor of either entry
+    /// point can't silently diverge (disk-arm parity lives in
+    /// `tests/store.rs`).
+    #[test]
+    fn storage_assembly_matches_dataset_assembly() {
+        let ds = small_ds();
+        let store = GraphStorage::InRam(small_ds());
+        let mut asm = BatchAssembler::new(ds.n(), 256, NormConfig::PAPER_DEFAULT);
+        for nodes in [(0..200u32).collect::<Vec<_>>(), vec![5, 999, 17, 2000]] {
+            let fresh = asm.assemble(&ds, &nodes);
+            let mut got = asm.new_batch_storage(&store);
+            asm.assemble_storage_into(&store, &nodes, &mut got);
+            assert_eq!(got.nodes, fresh.nodes);
+            assert_eq!(got.a.data, fresh.a.data);
+            assert_eq!(got.x.data, fresh.x.data);
+            assert_eq!(got.y.data, fresh.y.data);
+            assert_eq!(got.mask.data, fresh.mask.data);
+            assert_eq!(got.n_train, fresh.n_train);
+            assert_eq!(got.within_edges, fresh.within_edges);
+            assert_eq!(got.block.cols, fresh.block.cols);
+            assert_eq!(got.block.vals, fresh.block.vals);
+            assert_eq!(got.block.self_loop, fresh.block.self_loop);
         }
     }
 

@@ -16,12 +16,14 @@ pub mod metrics;
 pub mod sampler;
 pub mod schedule;
 pub mod source;
+pub mod storage;
 pub mod trainer;
 
 pub use batch::{Batch, BatchAssembler, SparseBlock};
 pub use sampler::ClusterSampler;
 pub use schedule::{EarlyStopper, LrSchedule};
 pub use source::{BatchSource, ClusterSource, SourceStats};
+pub use storage::{cluster_evaluate_storage, train_storage, StorageClusterSource};
 pub use trainer::{
     evaluate, evaluate_cached, train, train_observed, CurvePoint, TrainResult, TrainState,
 };

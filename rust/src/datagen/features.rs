@@ -68,6 +68,81 @@ pub fn gen_labels(
     }
 }
 
+/// The centroid mixture behind [`gen_features`], split out so the
+/// streaming generator (`datagen::stream`) can produce raw feature rows
+/// one chunk at a time with the exact same RNG draws: centroids are
+/// sampled up front, then each row consumes its per-node draws in node
+/// order.
+pub struct FeatureModel {
+    class_c: Vec<Vec<f32>>,
+    comm_c: Vec<Vec<f32>>,
+    classes: usize,
+    f_in: usize,
+    noise: f64,
+}
+
+impl FeatureModel {
+    /// Sample class + community centroids (consumes the centroid draws
+    /// of [`gen_features`], in the same order).
+    pub fn new(
+        classes: usize,
+        communities: usize,
+        f_in: usize,
+        noise: f64,
+        rng: &mut Rng,
+    ) -> FeatureModel {
+        let centroid = |rng: &mut Rng| -> Vec<f32> {
+            (0..f_in).map(|_| rng.normal() as f32 * 0.8).collect()
+        };
+        let class_c: Vec<Vec<f32>> = (0..classes).map(|_| centroid(rng)).collect();
+        let comm_c: Vec<Vec<f32>> = (0..communities).map(|_| centroid(rng)).collect();
+        FeatureModel { class_c, comm_c, classes, f_in, noise }
+    }
+
+    /// Fill `row` (length `f_in`) with node `v`'s *raw* (unstandardized)
+    /// features. Rows must be generated in node order for RNG parity
+    /// with [`gen_features`].
+    pub fn raw_row(
+        &self,
+        v: usize,
+        labels: &Labels,
+        community: &[u32],
+        rng: &mut Rng,
+        row: &mut [f32],
+    ) {
+        debug_assert_eq!(row.len(), self.f_in);
+        row.iter_mut().for_each(|x| *x = 0.0);
+        let f_in = self.f_in;
+        let noise = self.noise;
+        let cc = &self.comm_c[community[v] as usize];
+        match labels {
+            Labels::Multiclass(l) => {
+                let lc = &self.class_c[l[v] as usize];
+                for j in 0..f_in {
+                    row[j] = lc[j] + 0.5 * cc[j] + noise as f32 * rng.normal() as f32;
+                }
+            }
+            Labels::Multilabel { .. } => {
+                // average of active class centroids
+                let mut cnt = 0f32;
+                for c in 0..self.classes {
+                    if labels.has_label(v, c) {
+                        for j in 0..f_in {
+                            row[j] += self.class_c[c][j];
+                        }
+                        cnt += 1.0;
+                    }
+                }
+                let inv = if cnt > 0.0 { 1.0 / cnt } else { 0.0 };
+                for j in 0..f_in {
+                    row[j] = row[j] * inv + 0.5 * cc[j]
+                        + noise as f32 * rng.normal() as f32;
+                }
+            }
+        }
+    }
+}
+
 /// Features: class-centroid + community-centroid + white noise,
 /// row-major [n, f_in].
 pub fn gen_features(
@@ -80,41 +155,10 @@ pub fn gen_features(
     rng: &mut Rng,
 ) -> Vec<f32> {
     let n = community.len();
-    let centroid = |rng: &mut Rng| -> Vec<f32> {
-        (0..f_in).map(|_| rng.normal() as f32 * 0.8).collect()
-    };
-    let class_c: Vec<Vec<f32>> = (0..classes).map(|_| centroid(rng)).collect();
-    let comm_c: Vec<Vec<f32>> = (0..communities).map(|_| centroid(rng)).collect();
-
+    let model = FeatureModel::new(classes, communities, f_in, noise, rng);
     let mut x = vec![0f32; n * f_in];
     for v in 0..n {
-        let row = &mut x[v * f_in..(v + 1) * f_in];
-        let cc = &comm_c[community[v] as usize];
-        match labels {
-            Labels::Multiclass(l) => {
-                let lc = &class_c[l[v] as usize];
-                for j in 0..f_in {
-                    row[j] = lc[j] + 0.5 * cc[j] + noise as f32 * rng.normal() as f32;
-                }
-            }
-            Labels::Multilabel { .. } => {
-                // average of active class centroids
-                let mut cnt = 0f32;
-                for c in 0..classes {
-                    if labels.has_label(v, c) {
-                        for j in 0..f_in {
-                            row[j] += class_c[c][j];
-                        }
-                        cnt += 1.0;
-                    }
-                }
-                let inv = if cnt > 0.0 { 1.0 / cnt } else { 0.0 };
-                for j in 0..f_in {
-                    row[j] = row[j] * inv + 0.5 * cc[j]
-                        + noise as f32 * rng.normal() as f32;
-                }
-            }
-        }
+        model.raw_row(v, labels, community, rng, &mut x[v * f_in..(v + 1) * f_in]);
     }
     // feature normalization (paper §6.2 "feature normalization is also
     // conducted"): per-feature standardization.

@@ -4,6 +4,8 @@
 pub mod features;
 pub mod presets;
 pub mod sbm;
+pub mod stream;
 
 pub use presets::{build, build_cached, preset, Preset, PRESETS};
 pub use sbm::{generate, SbmGraph, SbmSpec};
+pub use stream::{build_cached_store, build_store};

@@ -148,6 +148,30 @@ pub const PRESETS: &[Preset] = &[
         b_max: 1792,
         f_hid: 400,
     },
+    // Amazon2M at full paper scale: 2M nodes, ~61M sampled edges
+    // (Table 8). Only generatable via `datagen::stream::build_store`
+    // (the in-RAM `build` would need ~2.5 GB for the edge list + CSR +
+    // feature matrix alone); many small partitions keep the dense
+    // batch block b_max² tiny, matching the paper's Amazon2M setting
+    // (10,000 partitions).
+    Preset {
+        name: "amazon2m_full",
+        task: Task::Multiclass,
+        n: 2_000_000,
+        communities: 16_000,
+        avg_deg: 61.0,
+        intra_frac: 0.86,
+        classes: 47,
+        f_in: 100,
+        label_noise: 0.10,
+        feat_noise: 1.1,
+        active_per_community: 0,
+        split: (0.70, 0.05),
+        default_partitions: 10_000,
+        default_q: 2,
+        b_max: 1024,
+        f_hid: 400,
+    },
 ];
 
 pub fn preset(name: &str) -> Option<&'static Preset> {

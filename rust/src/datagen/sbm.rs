@@ -39,6 +39,19 @@ pub struct SbmGraph {
 }
 
 pub fn generate(spec: &SbmSpec, rng: &mut Rng) -> SbmGraph {
+    let (community, members) = layout(spec, rng);
+    let m_total = (spec.n as f64 * spec.avg_deg / 2.0) as usize;
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(m_total + m_total / 8);
+    emit_edges(spec, &members, rng, |u, v| edges.push((u, v)));
+    let graph = Csr::from_edges(spec.n, &edges);
+    SbmGraph { graph, community, members }
+}
+
+/// Community layout: skewed sizes + shuffled node→community map.
+/// Consumes exactly the size/permutation draws of [`generate`]; split
+/// out so the streaming generator (`datagen::stream`) can replay the
+/// same RNG stream without materializing the edge list.
+pub fn layout(spec: &SbmSpec, rng: &mut Rng) -> (Vec<u32>, Vec<Vec<u32>>) {
     assert!(spec.communities >= 1 && spec.n >= spec.communities);
     let k = spec.communities;
 
@@ -80,12 +93,24 @@ pub fn generate(spec: &SbmSpec, rng: &mut Rng) -> SbmGraph {
         }
         cursor += sz;
     }
+    (community, members)
+}
 
-    // --- edges -----------------------------------------------------------
+/// Sample the edge stream into `sink`. Consumes exactly the edge draws
+/// of [`generate`], in the same order; emitted pairs may repeat (and,
+/// for single-community specs, include self loops) — consumers
+/// deduplicate exactly like [`Csr::from_edges`].
+pub fn emit_edges(
+    spec: &SbmSpec,
+    members: &[Vec<u32>],
+    rng: &mut Rng,
+    mut sink: impl FnMut(u32, u32),
+) {
+    let k = members.len();
+    let sizes: Vec<usize> = members.iter().map(|m| m.len()).collect();
     let m_total = (spec.n as f64 * spec.avg_deg / 2.0) as usize;
     let m_intra = (m_total as f64 * spec.intra_frac) as usize;
     let m_inter = m_total - m_intra;
-    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(m_total + m_total / 8);
 
     // intra edges: communities weighted by size (uniform expected degree)
     let cum: Vec<f64> = {
@@ -113,7 +138,7 @@ pub fn generate(spec: &SbmSpec, rng: &mut Rng) -> SbmGraph {
         let u = mem[rng.usize_below(mem.len())];
         let v = mem[rng.usize_below(mem.len())];
         if u != v {
-            edges.push((u, v));
+            sink(u, v);
         }
     }
     for _ in 0..m_inter {
@@ -126,26 +151,23 @@ pub fn generate(spec: &SbmSpec, rng: &mut Rng) -> SbmGraph {
         }
         let u = members[c1][rng.usize_below(members[c1].len())];
         let v = members[c2][rng.usize_below(members[c2].len())];
-        edges.push((u, v));
+        sink(u, v);
     }
 
     // connectivity floor: chain each community's members + chain the
     // community representatives so the graph has one component (METIS
     // and BFS-based initial partitioning behave better, and real GCN
     // datasets are dominated by one giant component).
-    for mem in &members {
+    for mem in members {
         for w in mem.windows(2) {
             if rng.f64() < 0.3 {
-                edges.push((w[0], w[1]));
+                sink(w[0], w[1]);
             }
         }
     }
     for w in members.windows(2) {
-        edges.push((w[0][0], w[1][0]));
+        sink(w[0][0], w[1][0]);
     }
-
-    let graph = Csr::from_edges(spec.n, &edges);
-    SbmGraph { graph, community, members }
 }
 
 #[cfg(test)]

@@ -1,0 +1,377 @@
+//! Streaming preset generation straight into the on-disk `CGCNGS01`
+//! store — the path that makes the million-node presets feasible.
+//!
+//! [`presets::build`] materializes the edge list, the CSR, and the full
+//! feature matrix (~2.5 GB for `amazon2m_full`); [`build_store`] emits
+//! the same dataset with only O(chunk) residency:
+//!
+//! * **Edges** are bucketed by row chunk into ≤256 temp files as they
+//!   are sampled (each undirected pair lands in both endpoints'
+//!   buckets), then each bucket is sorted + deduplicated per row and
+//!   appended to the store — replicating `Csr::from_edges` semantics
+//!   (self loops dropped, per-row sorted dedup) one bucket at a time.
+//! * **Features** are written raw chunk-by-chunk, then standardized in
+//!   place with three chunked passes over the store file (mean, var,
+//!   rewrite) via [`StoreWriter::for_each_feature_chunk_mut`]. The per-
+//!   column f64 accumulations visit rows in the same ascending order as
+//!   the in-RAM path, so the results are bit-identical.
+//!
+//! The RNG stream is consumed in exactly [`presets::build`]'s order
+//! (layout → edges → labels → centroids → feature rows → splits), so
+//! `build_store(p, seed)` produces a file **byte-identical** to
+//! `write_store(&build(p, seed))` — pinned by tests. Per-node arrays
+//! (community map, labels, splits: a few bytes/node) stay resident; the
+//! adjacency and feature matrix never do.
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::graph::store::{chunk_ranges, DEFAULT_CHUNK_ROWS};
+use crate::graph::{DiskDataset, Labels, Split, StoreError, StoreMeta, StoreWriter};
+use crate::util::Rng;
+
+use super::features::{gen_labels, FeatureModel, LabelModel};
+use super::presets::Preset;
+use super::sbm::{emit_edges, layout, SbmSpec};
+
+/// Cap on edge-bucket temp files (and thus file descriptors).
+const MAX_BUCKETS: usize = 256;
+
+/// Directed edge records bucketed by source-row range, spilled to temp
+/// files next to the output store.
+struct EdgeBuckets {
+    dir: PathBuf,
+    writers: Vec<BufWriter<File>>,
+    rows_per_bucket: usize,
+    err: Option<io::Error>,
+}
+
+impl EdgeBuckets {
+    fn create(dir: PathBuf, n: usize) -> io::Result<EdgeBuckets> {
+        if dir.exists() {
+            fs::remove_dir_all(&dir)?;
+        }
+        fs::create_dir_all(&dir)?;
+        let rows_per_bucket = n.div_ceil(MAX_BUCKETS).max(1);
+        let buckets = n.div_ceil(rows_per_bucket);
+        let mut writers = Vec::with_capacity(buckets);
+        for b in 0..buckets {
+            let f = File::create(dir.join(format!("edges_{b:03}.bin")))?;
+            writers.push(BufWriter::new(f));
+        }
+        Ok(EdgeBuckets { dir, writers, rows_per_bucket, err: None })
+    }
+
+    fn buckets(&self) -> usize {
+        self.writers.len()
+    }
+
+    fn row_range(&self, b: usize, n: usize) -> std::ops::Range<usize> {
+        let lo = b * self.rows_per_bucket;
+        lo..(lo + self.rows_per_bucket).min(n)
+    }
+
+    fn push_record(&mut self, row: u32, partner: u32) {
+        if self.err.is_some() {
+            return;
+        }
+        let b = row as usize / self.rows_per_bucket;
+        let mut rec = [0u8; 8];
+        rec[..4].copy_from_slice(&row.to_le_bytes());
+        rec[4..].copy_from_slice(&partner.to_le_bytes());
+        if let Err(e) = self.writers[b].write_all(&rec) {
+            self.err = Some(e);
+        }
+    }
+
+    /// Record an undirected pair under both endpoints (self loops are
+    /// dropped here, matching `Csr::from_edges`).
+    fn push_pair(&mut self, u: u32, v: u32) {
+        if u == v {
+            return;
+        }
+        self.push_record(u, v);
+        self.push_record(v, u);
+    }
+
+    /// Flush writers and surface any deferred write error.
+    fn seal(&mut self) -> io::Result<()> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        for w in &mut self.writers {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Load one bucket's records (the only edge state ever resident:
+    /// ~2·nnz/buckets entries).
+    fn read_bucket(&self, b: usize, out: &mut Vec<(u32, u32)>) -> io::Result<()> {
+        let bytes = fs::read(self.dir.join(format!("edges_{b:03}.bin")))?;
+        if bytes.len() % 8 != 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "torn edge record"));
+        }
+        out.clear();
+        out.reserve(bytes.len() / 8);
+        for c in bytes.chunks_exact(8) {
+            out.push((
+                u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+            ));
+        }
+        Ok(())
+    }
+
+    fn cleanup(self) {
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Generate preset `p` directly into an on-disk store at `out` without
+/// ever materializing the adjacency or feature matrix. Byte-identical
+/// to `write_store(&build(p, seed), out)`.
+pub fn build_store(
+    p: &Preset,
+    seed: u64,
+    out: &Path,
+    chunk_rows: usize,
+) -> Result<(), StoreError> {
+    let chunk_rows = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+    let mut rng = Rng::new(seed ^ 0xC1A5_7E2C_6C4E_5EED);
+    let spec = SbmSpec {
+        n: p.n,
+        communities: p.communities,
+        avg_deg: p.avg_deg,
+        intra_frac: p.intra_frac,
+        size_skew: 1.5,
+    };
+
+    // --- layout + edge sampling → buckets (build()'s draw order) -------
+    let (community, members) = layout(&spec, &mut rng);
+    let file_name = out
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "store".into());
+    let tmp = out.with_file_name(format!("{file_name}.edges-tmp"));
+    let mut buckets = EdgeBuckets::create(tmp, p.n)?;
+    emit_edges(&spec, &members, &mut rng, |u, v| buckets.push_pair(u, v));
+    buckets.seal()?;
+    drop(members);
+
+    // --- labels (resident: a few bytes per node) ------------------------
+    let labels = gen_labels(
+        &LabelModel {
+            task: p.task,
+            classes: p.classes,
+            noise: p.label_noise,
+            active_per_community: p.active_per_community,
+        },
+        &community,
+        p.communities,
+        &mut rng,
+    );
+
+    // --- adjacency rows: per-bucket sort + per-row dedup ----------------
+    let meta = StoreMeta {
+        name: p.name.to_string(),
+        task: p.task,
+        n: p.n,
+        f_in: p.f_in,
+        num_classes: p.classes,
+    };
+    let mut w = StoreWriter::create(out, meta)?;
+    let mut recs: Vec<(u32, u32)> = Vec::new();
+    let mut row_buf: Vec<u32> = Vec::new();
+    for b in 0..buckets.buckets() {
+        buckets.read_bucket(b, &mut recs)?;
+        recs.sort_unstable();
+        let mut i = 0;
+        for v in buckets.row_range(b, p.n) {
+            row_buf.clear();
+            while i < recs.len() && recs[i].0 as usize == v {
+                let partner = recs[i].1;
+                if row_buf.last() != Some(&partner) {
+                    row_buf.push(partner);
+                }
+                i += 1;
+            }
+            w.push_neighbor_row(&row_buf)?;
+        }
+        debug_assert_eq!(i, recs.len(), "edge record outside bucket row range");
+    }
+    buckets.cleanup();
+
+    // --- raw feature rows, chunk at a time ------------------------------
+    let fm = FeatureModel::new(p.classes, p.communities, p.f_in, p.feat_noise, &mut rng);
+    let mut chunk = Vec::new();
+    for r in chunk_ranges(p.n, chunk_rows) {
+        chunk.resize((r.end - r.start) * p.f_in, 0.0f32);
+        for v in r.clone() {
+            let lo = (v - r.start) * p.f_in;
+            fm.raw_row(v, &labels, &community, &mut rng, &mut chunk[lo..lo + p.f_in]);
+        }
+        w.push_feature_rows(&chunk)?;
+    }
+
+    // --- 3-pass chunked standardization (bit-equal to gen_features'
+    //     per-column two-pass: each column's f64 accumulator sees rows
+    //     in the same ascending order) --------------------------------
+    let n = p.n as f64;
+    let f_in = p.f_in;
+    let mut mean = vec![0f64; f_in];
+    w.for_each_feature_chunk_mut(chunk_rows, |_, vals| {
+        for row in vals.chunks_exact(f_in) {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x as f64;
+            }
+        }
+    })?;
+    mean.iter_mut().for_each(|m| *m /= n);
+    let mut var = vec![0f64; f_in];
+    w.for_each_feature_chunk_mut(chunk_rows, |_, vals| {
+        for row in vals.chunks_exact(f_in) {
+            for j in 0..f_in {
+                let d = row[j] as f64 - mean[j];
+                var[j] += d * d;
+            }
+        }
+    })?;
+    let std: Vec<f64> = var.iter().map(|v| (v / n).sqrt().max(1e-6)).collect();
+    w.for_each_feature_chunk_mut(chunk_rows, |_, vals| {
+        for row in vals.chunks_exact_mut(f_in) {
+            for j in 0..f_in {
+                row[j] = ((row[j] as f64 - mean[j]) / std[j]) as f32;
+            }
+        }
+    })?;
+
+    // --- labels + splits (build()'s draw order) -------------------------
+    match &labels {
+        Labels::Multiclass(y) => {
+            for &c in y {
+                w.push_class(c)?;
+            }
+        }
+        Labels::Multilabel { bits, words_per_node } => {
+            for v in 0..p.n {
+                w.push_label_words(&bits[v * words_per_node..(v + 1) * words_per_node])?;
+            }
+        }
+    }
+    for _ in 0..p.n {
+        let r = rng.f64();
+        w.push_split(if r < p.split.0 {
+            Split::Train
+        } else if r < p.split.0 + p.split.1 {
+            Split::Val
+        } else {
+            Split::Test
+        })?;
+    }
+    w.finish()
+}
+
+/// Build or reuse the cached on-disk store `{name}_s{seed}.store` under
+/// `dir`; the streamed twin of [`presets::build_cached`].
+pub fn build_cached_store(
+    p: &Preset,
+    seed: u64,
+    dir: &Path,
+    chunk_rows: usize,
+) -> Result<DiskDataset, StoreError> {
+    fs::create_dir_all(dir).map_err(StoreError::Io)?;
+    let path = dir.join(format!("{}_s{}.store", p.name, seed));
+    if path.exists() {
+        if let Ok(ds) = DiskDataset::open(&path) {
+            return Ok(ds);
+        }
+    }
+    build_store(p, seed, &path, chunk_rows)?;
+    DiskDataset::open(&path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::presets::build;
+    use crate::graph::{write_store, Task};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("cgcn_stream_{}_{}", tag, std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn tiny(task: Task) -> Preset {
+        Preset {
+            name: "stream_tiny",
+            task,
+            n: 600,
+            communities: 8,
+            avg_deg: 6.0,
+            intra_frac: 0.85,
+            classes: if task == Task::Multilabel { 70 } else { 5 },
+            f_in: 9,
+            label_noise: 0.1,
+            feat_noise: 1.0,
+            active_per_community: 12,
+            split: (0.6, 0.2),
+            default_partitions: 4,
+            default_q: 1,
+            b_max: 256,
+            f_hid: 16,
+        }
+    }
+
+    #[test]
+    fn byte_identical_to_in_ram_build() {
+        for task in [Task::Multiclass, Task::Multilabel] {
+            let p = tiny(task);
+            let dir = tmpdir(match task {
+                Task::Multiclass => "mc",
+                Task::Multilabel => "ml",
+            });
+            let ram_path = dir.join("ram.store");
+            let stream_path = dir.join("stream.store");
+            write_store(&build(&p, 11), &ram_path).unwrap();
+            build_store(&p, 11, &stream_path, 37).unwrap();
+            let a = fs::read(&ram_path).unwrap();
+            let b = fs::read(&stream_path).unwrap();
+            assert_eq!(a, b, "stream/{:?} bytes differ from in-RAM build", task);
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_bytes() {
+        let p = tiny(Task::Multiclass);
+        let dir = tmpdir("chunks");
+        let mut files = Vec::new();
+        for (i, chunk_rows) in [1usize, 101, 0].into_iter().enumerate() {
+            let path = dir.join(format!("c{i}.store"));
+            build_store(&p, 3, &path, chunk_rows).unwrap();
+            files.push(fs::read(&path).unwrap());
+        }
+        for f in &files[1..] {
+            assert_eq!(f, &files[0]);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cached_store_roundtrips_and_verifies() {
+        let p = tiny(Task::Multiclass);
+        let dir = tmpdir("cache");
+        let ds = build_cached_store(&p, 5, &dir, 64).unwrap();
+        assert_eq!(ds.n(), 600);
+        ds.verify_data().unwrap();
+        // second call hits the cache (no rebuild: mtime untouched)
+        let again = build_cached_store(&p, 5, &dir, 64).unwrap();
+        assert_eq!(again.n(), 600);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

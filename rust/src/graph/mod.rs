@@ -1,12 +1,16 @@
 //! Graph substrate: CSR store, dataset container, induced-subgraph
-//! extraction, and binary IO.
+//! extraction, binary IO, and the out-of-core `CGCNGS01` storage layer.
 
 pub mod csr;
 pub mod dataset;
 pub mod io;
+pub mod store;
 pub mod subgraph;
 pub mod text_io;
 
 pub use csr::Csr;
 pub use dataset::{Dataset, Labels, Split, Task};
-pub use subgraph::{induced_csr, induced_edges, within_edges, SubgraphScratch};
+pub use store::{write_store, DiskDataset, GraphStorage, StoreError, StoreMeta, StoreWriter};
+pub use subgraph::{
+    induced_csr, induced_edges, induced_edges_by, within_edges, SubgraphScratch,
+};

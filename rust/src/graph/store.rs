@@ -1,0 +1,1076 @@
+//! Out-of-core graph storage: the `CGCNGS01` on-disk dataset format and
+//! the [`GraphStorage`] seam that lets normalization, batch assembly,
+//! and evaluation read rows lazily instead of requiring the whole
+//! adjacency + feature matrix resident (ROADMAP item 1 — the paper's
+//! Table 8 trains Amazon2M, 2M nodes / 61M edges, in 2.2 GB).
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! ```text
+//! +---------------------------------------------------------------+
+//! | magic "CGCNGS01" (8)  | name (32, zero-padded utf-8)          |
+//! | task | n | nnz | f_in | num_classes | words_per_node          |
+//! | index_off | neigh_off | feat_off | label_off | split_off      |
+//! | file_len | data_crc | header_crc            (u64 each)        |
+//! +---------------------------------------------------------------+
+//! | index:  (n+1) x u64   row offsets into the neighbor section,  |
+//! |         in entries (RAM-resident after open: 8(n+1) bytes)    |
+//! | neigh:  nnz x u32     column ids, CSR order                   |
+//! | feat:   n*f_in x f32  row-major features                      |
+//! | label:  multiclass:  n x u32 class ids                        |
+//! |         multilabel:  n*words_per_node x u64 bitset words      |
+//! | split:  n x u8        0=train 1=val 2=test (RAM-resident)     |
+//! +---------------------------------------------------------------+
+//! ```
+//!
+//! `header_crc` (CRC32, IEEE) covers every header byte before itself, so
+//! metadata corruption fails typed at [`DiskDataset::open`]; `data_crc`
+//! covers everything after the header and is checked on demand by
+//! [`DiskDataset::verify_data`] (a full sequential scan — opening stays
+//! O(n) index + split, never O(nnz)).  This mirrors the `CGCNCKP3`
+//! checkpoint pattern: corruption is a typed [`StoreError`], never a
+//! panic or silent garbage.
+//!
+//! ## Residency contract
+//!
+//! After `open`, only the fixed-width row-offset index ((n+1) × u64) and
+//! the split bytes (n × u8, needed by every batch's train mask) are
+//! resident.  Neighbor, feature, and label rows are fetched with
+//! positioned reads (`pread`) on demand; chunked scans
+//! ([`GraphStorage::scan_rows`]) buffer one row-chunk at a time.  The
+//! full adjacency is never materialized by any consumer on the disk
+//! path.
+//!
+//! ## Error contract
+//!
+//! Validation at `open`/`verify_data` is typed.  I/O failures *after* a
+//! successful open (mid-train reads on a validated file) are treated
+//! like allocation failure — the [`GraphStorage`] convenience accessors
+//! panic with context, keeping the hot batch-assembly path infallible
+//! like its in-RAM twin.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use super::csr::Csr;
+use super::dataset::{Dataset, Labels, Split, Task};
+
+/// Format magic, version 1.
+pub const STORE_MAGIC: &[u8; 8] = b"CGCNGS01";
+const NAME_BYTES: usize = 32;
+/// 8 magic + 32 name + 14 u64 fields.
+const HEADER_LEN: u64 = 8 + NAME_BYTES as u64 + 14 * 8;
+/// Default row-chunk granularity for streaming scans (rows per chunk).
+pub const DEFAULT_CHUNK_ROWS: usize = 65_536;
+
+// ---------------------------------------------------------------------
+// typed errors (CGCNCKP3 pattern: corruption fails typed, never panics)
+// ---------------------------------------------------------------------
+
+/// Typed failure modes of the on-disk store.
+#[derive(Debug)]
+pub enum StoreError {
+    /// The file does not start with the `CGCNGS01` magic.
+    BadMagic,
+    /// The file is shorter than the header claims.
+    Truncated {
+        /// Bytes the header (or format minimum) requires.
+        expected: u64,
+        /// Bytes actually present.
+        actual: u64,
+    },
+    /// Structural validation failed (checksum mismatch, inconsistent
+    /// section table, out-of-range values).
+    Corrupt(String),
+    /// An underlying I/O error.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::BadMagic => write!(f, "not a CGCNGS01 graph store (bad magic)"),
+            StoreError::Truncated { expected, actual } => write!(
+                f,
+                "graph store truncated: need {expected} bytes, have {actual}"
+            ),
+            StoreError::Corrupt(m) => write!(f, "graph store corrupt: {m}"),
+            StoreError::Io(e) => write!(f, "graph store I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for StoreError {
+    fn from(e: io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+fn corrupt(msg: impl Into<String>) -> StoreError {
+    StoreError::Corrupt(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE), table-driven — same polynomial as the CGCNCKP3 trailer
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// Fold `bytes` into a running (finalized-form) CRC32; start from 0.
+fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// little-endian positioned-read helpers (no unsafe, io.rs idiom)
+// ---------------------------------------------------------------------
+
+/// Small reads (a feature row, one adjacency row) borrow a stack
+/// buffer; chunk scans fall back to a heap allocation.
+const STACK_BUF: usize = 4096;
+
+fn with_bytes<R>(len: usize, f: impl FnOnce(&mut [u8]) -> io::Result<R>) -> io::Result<R> {
+    if len <= STACK_BUF {
+        let mut buf = [0u8; STACK_BUF];
+        f(&mut buf[..len])
+    } else {
+        let mut buf = vec![0u8; len];
+        f(&mut buf)
+    }
+}
+
+fn read_u32s_at(file: &File, off: u64, count: usize, out: &mut Vec<u32>) -> io::Result<()> {
+    out.clear();
+    out.reserve(count);
+    with_bytes(count * 4, |b| {
+        file.read_exact_at(b, off)?;
+        out.extend(
+            b.chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    })
+}
+
+fn read_u64s_at(file: &File, off: u64, count: usize) -> io::Result<Vec<u64>> {
+    let mut buf = vec![0u8; count * 8];
+    file.read_exact_at(&mut buf, off)?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+fn read_f32s_at(file: &File, off: u64, out: &mut [f32]) -> io::Result<()> {
+    with_bytes(out.len() * 4, |b| {
+        file.read_exact_at(b, off)?;
+        for (o, c) in out.iter_mut().zip(b.chunks_exact(4)) {
+            *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    })
+}
+
+fn u32s_to_bytes(vals: &[u32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Row-chunk ranges `[0, n)` in `chunk_rows` steps (`0` = one full
+/// chunk).  The shared chunking policy for every streaming scan.
+pub fn chunk_ranges(n: usize, chunk_rows: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    let step = if chunk_rows == 0 { n.max(1) } else { chunk_rows };
+    (0..n.div_ceil(step.max(1))).map(move |i| {
+        let start = i * step;
+        start..(start + step).min(n)
+    })
+}
+
+// ---------------------------------------------------------------------
+// metadata + streaming writer
+// ---------------------------------------------------------------------
+
+/// Dataset-level metadata fixed before any row is written.
+#[derive(Clone, Debug)]
+pub struct StoreMeta {
+    /// Dataset name (≤ 31 utf-8 bytes; stored zero-padded).
+    pub name: String,
+    /// Multiclass or multilabel.
+    pub task: Task,
+    /// Node count.
+    pub n: usize,
+    /// Feature width.
+    pub f_in: usize,
+    /// Class count.
+    pub num_classes: usize,
+}
+
+impl StoreMeta {
+    fn words_per_node(&self) -> usize {
+        match self.task {
+            Task::Multiclass => 0,
+            Task::Multilabel => self.num_classes.div_ceil(64),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Stage {
+    Neigh,
+    Feat,
+    Label,
+    Split,
+    Done,
+}
+
+/// Sequential section writer: adjacency rows, then feature rows, then
+/// label rows, then splits — exactly the file order, so a generator can
+/// stream a graph to disk with O(chunk) residency.  `nnz` and the row
+/// index are unknown up front; [`StoreWriter::finish`] back-fills the
+/// index and header with positioned writes.
+pub struct StoreWriter {
+    file: BufWriter<File>,
+    meta: StoreMeta,
+    /// Row offsets in entries; grows to n+1 as rows are pushed.
+    offsets: Vec<u64>,
+    stage: Stage,
+    feat_vals: usize,
+    label_rows: usize,
+    split_rows: usize,
+    /// Absolute byte position of the next sequential write.
+    pos: u64,
+}
+
+impl StoreWriter {
+    /// Create `path` (truncating) and reserve the header + index region.
+    pub fn create(path: &Path, meta: StoreMeta) -> Result<StoreWriter, StoreError> {
+        assert!(meta.n > 0, "empty dataset");
+        assert!(
+            meta.name.len() < NAME_BYTES,
+            "store name too long: {}",
+            meta.name
+        );
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        let neigh_off = HEADER_LEN + (meta.n as u64 + 1) * 8;
+        // reserve the header + index region (back-filled in finish)
+        file.set_len(neigh_off)?;
+        let mut file = BufWriter::new(file);
+        file.seek(SeekFrom::Start(neigh_off))?;
+        Ok(StoreWriter {
+            file,
+            offsets: vec![0u64],
+            meta,
+            stage: Stage::Neigh,
+            feat_vals: 0,
+            label_rows: 0,
+            split_rows: 0,
+            pos: neigh_off,
+        })
+    }
+
+    fn write_bytes(&mut self, b: &[u8]) -> Result<(), StoreError> {
+        self.file.write_all(b)?;
+        self.pos += b.len() as u64;
+        Ok(())
+    }
+
+    /// Append the sorted adjacency row of the next node (rows must
+    /// arrive in node order, `0..n`).
+    pub fn push_neighbor_row(&mut self, cols: &[u32]) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Neigh, "neighbor rows already complete");
+        let mut bytes = Vec::new();
+        u32s_to_bytes(cols, &mut bytes);
+        self.write_bytes(&bytes)?;
+        let last = *self.offsets.last().unwrap();
+        self.offsets.push(last + cols.len() as u64);
+        if self.offsets.len() == self.meta.n + 1 {
+            self.stage = Stage::Feat;
+        }
+        Ok(())
+    }
+
+    /// Append feature values (row-major, any multiple of `f_in`).
+    pub fn push_feature_rows(&mut self, vals: &[f32]) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Feat, "not in the feature stage");
+        assert_eq!(vals.len() % self.meta.f_in, 0, "partial feature row");
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write_bytes(&bytes)?;
+        self.feat_vals += vals.len();
+        assert!(self.feat_vals <= self.meta.n * self.meta.f_in, "too many feature rows");
+        if self.feat_vals == self.meta.n * self.meta.f_in {
+            self.stage = Stage::Label;
+        }
+        Ok(())
+    }
+
+    /// Re-scan written feature rows in place, chunk by chunk (valid
+    /// between the last feature row and the first label row).  This is
+    /// how the streaming generator standardizes columns without holding
+    /// the feature matrix: pass 1 accumulates moments, pass 2 rewrites.
+    pub fn for_each_feature_chunk_mut(
+        &mut self,
+        chunk_rows: usize,
+        mut f: impl FnMut(usize, &mut [f32]),
+    ) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Label, "feature rows incomplete");
+        assert_eq!(self.label_rows, 0, "label rows already started");
+        self.file.flush()?;
+        let fi = self.meta.f_in;
+        let feat_off = self.pos - (self.meta.n * fi * 4) as u64;
+        let file = self.file.get_ref();
+        let mut rows = Vec::new();
+        let mut bytes = Vec::new();
+        for r in chunk_ranges(self.meta.n, chunk_rows) {
+            let vals = (r.end - r.start) * fi;
+            rows.resize(vals, 0.0);
+            let off = feat_off + (r.start * fi * 4) as u64;
+            read_f32s_at(file, off, &mut rows)?;
+            f(r.start, &mut rows);
+            bytes.clear();
+            bytes.reserve(vals * 4);
+            for v in &rows {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            file.write_all_at(&bytes, off)?;
+        }
+        Ok(())
+    }
+
+    /// Append the next node's class id (multiclass stores only).
+    pub fn push_class(&mut self, class: u32) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Label, "not in the label stage");
+        assert_eq!(self.meta.words_per_node(), 0, "multilabel store wants words");
+        let b = class.to_le_bytes();
+        self.write_bytes(&b)?;
+        self.advance_label()
+    }
+
+    /// Append the next node's label bitset words (multilabel stores).
+    pub fn push_label_words(&mut self, words: &[u64]) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Label, "not in the label stage");
+        assert_eq!(words.len(), self.meta.words_per_node(), "label word count");
+        let mut bytes = Vec::with_capacity(words.len() * 8);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        self.write_bytes(&bytes)?;
+        self.advance_label()
+    }
+
+    fn advance_label(&mut self) -> Result<(), StoreError> {
+        self.label_rows += 1;
+        assert!(self.label_rows <= self.meta.n, "too many label rows");
+        if self.label_rows == self.meta.n {
+            self.stage = Stage::Split;
+        }
+        Ok(())
+    }
+
+    /// Append the next node's split tag.
+    pub fn push_split(&mut self, s: Split) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Split, "not in the split stage");
+        let b = [split_to_u8(s)];
+        self.write_bytes(&b)?;
+        self.split_rows += 1;
+        if self.split_rows == self.meta.n {
+            self.stage = Stage::Done;
+        }
+        Ok(())
+    }
+
+    /// Append split tags in bulk.
+    pub fn push_splits(&mut self, splits: &[Split]) -> Result<(), StoreError> {
+        for &s in splits {
+            self.push_split(s)?;
+        }
+        Ok(())
+    }
+
+    /// Back-fill the row index + header (with checksums) and fsync.
+    pub fn finish(mut self) -> Result<(), StoreError> {
+        assert_eq!(self.stage, Stage::Done, "store sections incomplete");
+        self.file.flush()?;
+        let file = self.file.into_inner().map_err(|e| e.into_error())?;
+        let n = self.meta.n as u64;
+        let nnz = *self.offsets.last().unwrap();
+        let index_off = HEADER_LEN;
+        let neigh_off = index_off + (n + 1) * 8;
+        let feat_off = neigh_off + nnz * 4;
+        let label_off = feat_off + n * self.meta.f_in as u64 * 4;
+        let wpn = self.meta.words_per_node() as u64;
+        let label_bytes = if wpn == 0 { n * 4 } else { n * wpn * 8 };
+        let split_off = label_off + label_bytes;
+        let file_len = split_off + n;
+        debug_assert_eq!(self.pos, file_len, "writer position drifted");
+
+        // back-fill the row index
+        let mut index = Vec::with_capacity(self.offsets.len() * 8);
+        for o in &self.offsets {
+            index.extend_from_slice(&o.to_le_bytes());
+        }
+        file.write_all_at(&index, index_off)?;
+
+        // data CRC over everything after the header (one streaming pass)
+        let data_crc = crc_range(&file, HEADER_LEN, file_len)?;
+
+        // header
+        let mut h = Vec::with_capacity(HEADER_LEN as usize);
+        h.extend_from_slice(STORE_MAGIC);
+        let mut name = [0u8; NAME_BYTES];
+        name[..self.meta.name.len()].copy_from_slice(self.meta.name.as_bytes());
+        h.extend_from_slice(&name);
+        let task = match self.meta.task {
+            Task::Multiclass => 0u64,
+            Task::Multilabel => 1u64,
+        };
+        for v in [
+            task,
+            n,
+            nnz,
+            self.meta.f_in as u64,
+            self.meta.num_classes as u64,
+            wpn,
+            index_off,
+            neigh_off,
+            feat_off,
+            label_off,
+            split_off,
+            file_len,
+            data_crc as u64,
+        ] {
+            h.extend_from_slice(&v.to_le_bytes());
+        }
+        let header_crc = crc32_update(0, &h);
+        h.extend_from_slice(&(header_crc as u64).to_le_bytes());
+        debug_assert_eq!(h.len() as u64, HEADER_LEN);
+        file.write_all_at(&h, 0)?;
+        file.sync_all()?;
+        Ok(())
+    }
+}
+
+fn split_to_u8(s: Split) -> u8 {
+    match s {
+        Split::Train => 0,
+        Split::Val => 1,
+        Split::Test => 2,
+    }
+}
+
+fn split_from_u8(b: u8) -> Option<Split> {
+    match b {
+        0 => Some(Split::Train),
+        1 => Some(Split::Val),
+        2 => Some(Split::Test),
+        _ => None,
+    }
+}
+
+/// CRC32 over the byte range `[from, to)` of `file`, streamed.
+fn crc_range(file: &File, from: u64, to: u64) -> io::Result<u32> {
+    let mut crc = 0u32;
+    let mut buf = vec![0u8; 1 << 20];
+    let mut off = from;
+    while off < to {
+        let take = ((to - off) as usize).min(buf.len());
+        file.read_exact_at(&mut buf[..take], off)?;
+        crc = crc32_update(crc, &buf[..take]);
+        off += take as u64;
+    }
+    Ok(crc)
+}
+
+/// Serialize an in-RAM [`Dataset`] to the on-disk format.  Byte-for-byte
+/// identical to what the streaming generator produces for the same
+/// logical content (pinned by tests), so `--storage disk` on a preset
+/// that fits in RAM is a pure representation change.
+pub fn write_store(ds: &Dataset, path: &Path) -> Result<(), StoreError> {
+    let meta = StoreMeta {
+        name: ds.name.clone(),
+        task: ds.task,
+        n: ds.n(),
+        f_in: ds.f_in,
+        num_classes: ds.num_classes,
+    };
+    let mut w = StoreWriter::create(path, meta)?;
+    for v in 0..ds.n() {
+        w.push_neighbor_row(ds.graph.neighbors(v))?;
+    }
+    w.push_feature_rows(&ds.features)?;
+    match &ds.labels {
+        Labels::Multiclass(y) => {
+            for &c in y {
+                w.push_class(c)?;
+            }
+        }
+        Labels::Multilabel { bits, words_per_node } => {
+            for v in 0..ds.n() {
+                w.push_label_words(&bits[v * words_per_node..(v + 1) * words_per_node])?;
+            }
+        }
+    }
+    w.push_splits(&ds.split)?;
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// lazy reader
+// ---------------------------------------------------------------------
+
+/// An opened `CGCNGS01` store: resident row-offset index + split bytes,
+/// positioned (`pread`) access to everything else.
+pub struct DiskDataset {
+    file: File,
+    path: PathBuf,
+    /// Dataset name from the header.
+    pub name: String,
+    /// Multiclass or multilabel.
+    pub task: Task,
+    n: usize,
+    nnz: usize,
+    /// Feature width.
+    pub f_in: usize,
+    /// Class count.
+    pub num_classes: usize,
+    words_per_node: usize,
+    /// Row offsets in entries, length n+1 (the only O(n) adjacency
+    /// state held in RAM — degrees come from here for free).
+    offsets: Vec<u64>,
+    split: Vec<Split>,
+    neigh_off: u64,
+    feat_off: u64,
+    label_off: u64,
+    file_len: u64,
+    data_crc: u32,
+}
+
+impl std::fmt::Debug for DiskDataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DiskDataset")
+            .field("name", &self.name)
+            .field("path", &self.path)
+            .field("n", &self.n)
+            .field("nnz", &self.nnz)
+            .finish()
+    }
+}
+
+impl DiskDataset {
+    /// Open and validate a store: magic, header checksum, section-table
+    /// consistency, file length, index monotonicity, split tags.  Every
+    /// failure mode is a typed [`StoreError`].
+    pub fn open(path: &Path) -> Result<DiskDataset, StoreError> {
+        let file = File::open(path)?;
+        let actual = file.metadata()?.len();
+        if actual < HEADER_LEN {
+            return Err(StoreError::Truncated { expected: HEADER_LEN, actual });
+        }
+        let mut h = vec![0u8; HEADER_LEN as usize];
+        file.read_exact_at(&mut h, 0)?;
+        if &h[..8] != STORE_MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let stored_crc =
+            u64::from_le_bytes(h[HEADER_LEN as usize - 8..].try_into().unwrap()) as u32;
+        if crc32_update(0, &h[..HEADER_LEN as usize - 8]) != stored_crc {
+            return Err(corrupt("header checksum mismatch"));
+        }
+        let name_raw = &h[8..8 + NAME_BYTES];
+        let name_len = name_raw.iter().position(|&b| b == 0).unwrap_or(NAME_BYTES);
+        let name = std::str::from_utf8(&name_raw[..name_len])
+            .map_err(|_| corrupt("name is not utf-8"))?
+            .to_string();
+        let field = |i: usize| -> u64 {
+            let at = 8 + NAME_BYTES + i * 8;
+            u64::from_le_bytes(h[at..at + 8].try_into().unwrap())
+        };
+        let task = match field(0) {
+            0 => Task::Multiclass,
+            1 => Task::Multilabel,
+            t => return Err(corrupt(format!("unknown task tag {t}"))),
+        };
+        let n = field(1) as usize;
+        let nnz = field(2) as usize;
+        let f_in = field(3) as usize;
+        let num_classes = field(4) as usize;
+        let wpn = field(5) as usize;
+        if n == 0 || num_classes == 0 {
+            return Err(corrupt("empty dataset"));
+        }
+        let want_wpn = match task {
+            Task::Multiclass => 0,
+            Task::Multilabel => num_classes.div_ceil(64),
+        };
+        if wpn != want_wpn {
+            return Err(corrupt("words_per_node inconsistent with task"));
+        }
+        // recompute the section table and demand an exact match
+        let index_off = HEADER_LEN;
+        let neigh_off = index_off + (n as u64 + 1) * 8;
+        let feat_off = neigh_off + nnz as u64 * 4;
+        let label_off = feat_off + (n * f_in) as u64 * 4;
+        let label_bytes = if wpn == 0 { n as u64 * 4 } else { (n * wpn) as u64 * 8 };
+        let split_off = label_off + label_bytes;
+        let file_len = split_off + n as u64;
+        let stored = [
+            field(6), field(7), field(8), field(9), field(10), field(11),
+        ];
+        if stored != [index_off, neigh_off, feat_off, label_off, split_off, file_len] {
+            return Err(corrupt("section table inconsistent"));
+        }
+        if actual < file_len {
+            return Err(StoreError::Truncated { expected: file_len, actual });
+        }
+        if actual > file_len {
+            return Err(corrupt("trailing bytes after split section"));
+        }
+        let data_crc = field(12) as u32;
+
+        let offsets = read_u64s_at(&file, index_off, n + 1)?;
+        if offsets[0] != 0
+            || offsets.windows(2).any(|w| w[0] > w[1])
+            || offsets[n] != nnz as u64
+        {
+            return Err(corrupt("row-offset index is not a monotone 0..nnz ramp"));
+        }
+        let mut split_bytes = vec![0u8; n];
+        file.read_exact_at(&mut split_bytes, split_off)?;
+        let split = split_bytes
+            .iter()
+            .map(|&b| split_from_u8(b).ok_or_else(|| corrupt(format!("bad split tag {b}"))))
+            .collect::<Result<Vec<Split>, StoreError>>()?;
+
+        Ok(DiskDataset {
+            file,
+            path: path.to_path_buf(),
+            name,
+            task,
+            n,
+            nnz,
+            f_in,
+            num_classes,
+            words_per_node: wpn,
+            offsets,
+            split,
+            neigh_off,
+            feat_off,
+            label_off,
+            file_len,
+            data_crc,
+        })
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored (directed) adjacency entries.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Degree of `v`, from the resident index (no I/O).
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    /// Adjacency-row entry offset of `v` (index units, not bytes).
+    pub fn row_entry_offset(&self, v: usize) -> u64 {
+        self.offsets[v]
+    }
+
+    /// Split tag of `v` (resident; no I/O).
+    pub fn split_of(&self, v: usize) -> Split {
+        self.split[v]
+    }
+
+    /// Read the adjacency row of `v` into `out` (cleared first).
+    pub fn read_neighbors_into(&self, v: usize, out: &mut Vec<u32>) -> Result<(), StoreError> {
+        let off = self.neigh_off + self.offsets[v] * 4;
+        read_u32s_at(&self.file, off, self.degree(v), out)?;
+        Ok(())
+    }
+
+    /// Read the concatenated adjacency rows `[start, end)` into `out`
+    /// (cleared first) — one positioned read per chunk scan.
+    pub fn read_neighbor_rows_into(
+        &self,
+        start: usize,
+        end: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), StoreError> {
+        let off = self.neigh_off + self.offsets[start] * 4;
+        let count = (self.offsets[end] - self.offsets[start]) as usize;
+        read_u32s_at(&self.file, off, count, out)?;
+        Ok(())
+    }
+
+    /// Read the feature row of `v` into `out` (length `f_in`).
+    pub fn read_feature_row_into(&self, v: usize, out: &mut [f32]) -> Result<(), StoreError> {
+        debug_assert_eq!(out.len(), self.f_in);
+        let off = self.feat_off + (v * self.f_in * 4) as u64;
+        read_f32s_at(&self.file, off, out)?;
+        Ok(())
+    }
+
+    /// Mirror of [`Labels::write_row`] reading the label row from disk:
+    /// zero `row`, then set the one-hot / multi-hot entries.
+    pub fn read_label_row(
+        &self,
+        v: usize,
+        classes: usize,
+        row: &mut [f32],
+    ) -> Result<(), StoreError> {
+        debug_assert_eq!(row.len(), classes);
+        row.iter_mut().for_each(|x| *x = 0.0);
+        if self.words_per_node == 0 {
+            let mut b = [0u8; 4];
+            self.file.read_exact_at(&mut b, self.label_off + v as u64 * 4)?;
+            row[u32::from_le_bytes(b) as usize] = 1.0;
+        } else {
+            let words = self.read_label_words(v)?;
+            for (c, x) in row.iter_mut().enumerate() {
+                if words[c / 64] >> (c % 64) & 1 == 1 {
+                    *x = 1.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mirror of [`Labels::has_label`] with a positioned read.
+    pub fn has_label(&self, v: usize, class: usize) -> Result<bool, StoreError> {
+        if self.words_per_node == 0 {
+            let mut b = [0u8; 4];
+            self.file.read_exact_at(&mut b, self.label_off + v as u64 * 4)?;
+            Ok(u32::from_le_bytes(b) == class as u32)
+        } else {
+            let words = self.read_label_words(v)?;
+            Ok(words[class / 64] >> (class % 64) & 1 == 1)
+        }
+    }
+
+    fn read_label_words(&self, v: usize) -> Result<Vec<u64>, StoreError> {
+        let off = self.label_off + (v * self.words_per_node * 8) as u64;
+        Ok(read_u64s_at(&self.file, off, self.words_per_node)?)
+    }
+
+    /// Stream the post-header bytes against the stored data checksum.
+    /// O(file) sequential read — on demand, not part of `open`.
+    pub fn verify_data(&self) -> Result<(), StoreError> {
+        let crc = crc_range(&self.file, HEADER_LEN, self.file_len)?;
+        if crc != self.data_crc {
+            return Err(corrupt("data checksum mismatch"));
+        }
+        Ok(())
+    }
+
+    /// Fully materialize the store as an in-RAM [`Dataset`] (serving's
+    /// exact engine needs full-graph residency; miniature presets in
+    /// tests).  The inverse of [`write_store`].
+    pub fn to_dataset(&self) -> Result<Dataset, StoreError> {
+        let mut cols = Vec::new();
+        read_u32s_at(&self.file, self.neigh_off, self.nnz, &mut cols)?;
+        let offsets: Vec<usize> = self.offsets.iter().map(|&o| o as usize).collect();
+        let graph = Csr {
+            offsets,
+            cols,
+            weights: vec![1; self.nnz],
+            node_weights: vec![1; self.n],
+        };
+        let mut features = vec![0.0f32; self.n * self.f_in];
+        read_f32s_at(&self.file, self.feat_off, &mut features)?;
+        let labels = if self.words_per_node == 0 {
+            let mut y = Vec::new();
+            read_u32s_at(&self.file, self.label_off, self.n, &mut y)?;
+            Labels::Multiclass(y)
+        } else {
+            let bits = read_u64s_at(&self.file, self.label_off, self.n * self.words_per_node)?;
+            Labels::Multilabel { bits, words_per_node: self.words_per_node }
+        };
+        let ds = Dataset {
+            name: self.name.clone(),
+            task: self.task,
+            graph,
+            f_in: self.f_in,
+            num_classes: self.num_classes,
+            features,
+            labels,
+            split: self.split.clone(),
+        };
+        ds.validate().map_err(corrupt)?;
+        Ok(ds)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the storage seam
+// ---------------------------------------------------------------------
+
+fn read_fail(what: &str, e: StoreError) -> ! {
+    panic!("graph store {what} read failed on a validated file: {e}")
+}
+
+/// Where a dataset's rows live.  `InRam` wraps the classic [`Dataset`];
+/// `OnDisk` reads rows lazily from a `CGCNGS01` file.  Consumers
+/// (normalization, batch assembly, the streaming partitioner, clustered
+/// eval) are written against this enum so the two modes produce
+/// bit-identical results — pinned by the `store` test suite.
+#[derive(Debug)]
+pub enum GraphStorage {
+    /// Everything resident (the classic path).
+    InRam(Dataset),
+    /// Lazy row reads from the on-disk format.
+    OnDisk(DiskDataset),
+}
+
+impl GraphStorage {
+    /// Node count.
+    pub fn n(&self) -> usize {
+        match self {
+            GraphStorage::InRam(ds) => ds.n(),
+            GraphStorage::OnDisk(dd) => dd.n(),
+        }
+    }
+
+    /// Stored (directed) adjacency entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            GraphStorage::InRam(ds) => ds.graph.nnz(),
+            GraphStorage::OnDisk(dd) => dd.nnz(),
+        }
+    }
+
+    /// Feature width.
+    pub fn f_in(&self) -> usize {
+        match self {
+            GraphStorage::InRam(ds) => ds.f_in,
+            GraphStorage::OnDisk(dd) => dd.f_in,
+        }
+    }
+
+    /// Class count.
+    pub fn num_classes(&self) -> usize {
+        match self {
+            GraphStorage::InRam(ds) => ds.num_classes,
+            GraphStorage::OnDisk(dd) => dd.num_classes,
+        }
+    }
+
+    /// Multiclass or multilabel.
+    pub fn task(&self) -> Task {
+        match self {
+            GraphStorage::InRam(ds) => ds.task,
+            GraphStorage::OnDisk(dd) => dd.task,
+        }
+    }
+
+    /// Dataset name.
+    pub fn name(&self) -> &str {
+        match self {
+            GraphStorage::InRam(ds) => &ds.name,
+            GraphStorage::OnDisk(dd) => &dd.name,
+        }
+    }
+
+    /// Degree of `v` (no I/O on either arm).
+    pub fn degree(&self, v: usize) -> usize {
+        match self {
+            GraphStorage::InRam(ds) => ds.graph.degree(v),
+            GraphStorage::OnDisk(dd) => dd.degree(v),
+        }
+    }
+
+    /// Split tag of `v` (no I/O on either arm).
+    pub fn split_of(&self, v: usize) -> Split {
+        match self {
+            GraphStorage::InRam(ds) => ds.split[v],
+            GraphStorage::OnDisk(dd) => dd.split_of(v),
+        }
+    }
+
+    /// Nodes in `want`, ascending — mirror of [`Dataset::nodes_in_split`].
+    pub fn nodes_in_split(&self, want: Split) -> Vec<u32> {
+        (0..self.n())
+            .filter(|&v| self.split_of(v) == want)
+            .map(|v| v as u32)
+            .collect()
+    }
+
+    /// Copy the adjacency row of `v` into `out` (cleared first).
+    pub fn neighbors_into(&self, v: usize, out: &mut Vec<u32>) {
+        match self {
+            GraphStorage::InRam(ds) => {
+                out.clear();
+                out.extend_from_slice(ds.graph.neighbors(v));
+            }
+            GraphStorage::OnDisk(dd) => {
+                if let Err(e) = dd.read_neighbors_into(v, out) {
+                    read_fail("neighbor", e)
+                }
+            }
+        }
+    }
+
+    /// Copy the feature row of `v` into `out` (length `f_in`).
+    pub fn feature_row_into(&self, v: usize, out: &mut [f32]) {
+        match self {
+            GraphStorage::InRam(ds) => out.copy_from_slice(ds.feature_row(v)),
+            GraphStorage::OnDisk(dd) => {
+                if let Err(e) = dd.read_feature_row_into(v, out) {
+                    read_fail("feature", e)
+                }
+            }
+        }
+    }
+
+    /// Mirror of [`Labels::write_row`] over either arm.
+    pub fn write_label_row(&self, v: usize, classes: usize, row: &mut [f32]) {
+        match self {
+            GraphStorage::InRam(ds) => ds.labels.write_row(v, classes, row),
+            GraphStorage::OnDisk(dd) => {
+                if let Err(e) = dd.read_label_row(v, classes, row) {
+                    read_fail("label", e)
+                }
+            }
+        }
+    }
+
+    /// Mirror of [`Labels::has_label`] over either arm.
+    pub fn has_label(&self, v: usize, class: usize) -> bool {
+        match self {
+            GraphStorage::InRam(ds) => ds.labels.has_label(v, class),
+            GraphStorage::OnDisk(dd) => match dd.has_label(v, class) {
+                Ok(b) => b,
+                Err(e) => read_fail("label", e),
+            },
+        }
+    }
+
+    /// Stream every adjacency row in ascending node order, buffering at
+    /// most one `chunk_rows` chunk of the neighbor section (`0` = one
+    /// full chunk).  The scan primitive behind storage normalization
+    /// and the streaming partitioner's coarsening passes.
+    pub fn scan_rows(&self, chunk_rows: usize, mut f: impl FnMut(usize, &[u32])) {
+        match self {
+            GraphStorage::InRam(ds) => {
+                for v in 0..ds.n() {
+                    f(v, ds.graph.neighbors(v));
+                }
+            }
+            GraphStorage::OnDisk(dd) => {
+                let mut cols = Vec::new();
+                for r in chunk_ranges(dd.n(), chunk_rows) {
+                    if let Err(e) = dd.read_neighbor_rows_into(r.start, r.end, &mut cols) {
+                        read_fail("neighbor chunk", e)
+                    }
+                    let base = dd.row_entry_offset(r.start);
+                    for v in r {
+                        let s = (dd.row_entry_offset(v) - base) as usize;
+                        let e = (dd.row_entry_offset(v + 1) - base) as usize;
+                        f(v, &cols[s..e]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The in-RAM dataset, when this storage is resident.
+    pub fn as_ram(&self) -> Option<&Dataset> {
+        match self {
+            GraphStorage::InRam(ds) => Some(ds),
+            GraphStorage::OnDisk(_) => None,
+        }
+    }
+
+    /// Materialize as an in-RAM [`Dataset`] (cloning on the RAM arm).
+    pub fn to_dataset(&self) -> Result<Dataset, StoreError> {
+        match self {
+            GraphStorage::InRam(ds) => Ok(ds.clone()),
+            GraphStorage::OnDisk(dd) => dd.to_dataset(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, c) in [(10, 3), (10, 1), (10, 0), (10, 10), (7, 64), (1, 1)] {
+            let ranges: Vec<_> = chunk_ranges(n, c).collect();
+            assert_eq!(ranges.first().map(|r| r.start), Some(0));
+            assert_eq!(ranges.last().map(|r| r.end), Some(n));
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+        assert_eq!(chunk_ranges(0, 4).count(), 0);
+    }
+
+    #[test]
+    fn crc_is_stable() {
+        // pin the polynomial so a refactor can't silently change the
+        // format (the CGCNCKP3 trailer uses the same IEEE table)
+        assert_eq!(crc32_update(0, b"123456789"), 0xCBF4_3926);
+        let ab = crc32_update(crc32_update(0, b"12345"), b"6789");
+        assert_eq!(ab, 0xCBF4_3926);
+    }
+
+    #[test]
+    fn split_tags_roundtrip() {
+        for s in [Split::Train, Split::Val, Split::Test] {
+            assert_eq!(split_from_u8(split_to_u8(s)), Some(s));
+        }
+        assert_eq!(split_from_u8(3), None);
+    }
+}

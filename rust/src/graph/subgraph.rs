@@ -76,6 +76,32 @@ pub fn induced_edges(
     }
 }
 
+/// Storage-generic twin of [`induced_edges`]: the parent adjacency is
+/// supplied as a row lookup (`neighbors_into` fills `nb_buf` with the
+/// sorted adjacency row of a global id) instead of a resident [`Csr`],
+/// so the out-of-core batch assembler can gather induced blocks with
+/// lazy row reads.  Produces the exact same `(local_u, local_v)` pairs
+/// in the exact same order when the lookup yields the same rows —
+/// the invariant behind ram/disk bitwise batch parity.
+pub fn induced_edges_by(
+    nodes: &[u32],
+    scratch: &mut SubgraphScratch,
+    nb_buf: &mut Vec<u32>,
+    out: &mut Vec<(u32, u32)>,
+    mut neighbors_into: impl FnMut(u32, &mut Vec<u32>),
+) {
+    scratch.begin(nodes);
+    out.clear();
+    for (li, &gi) in nodes.iter().enumerate() {
+        neighbors_into(gi, nb_buf);
+        for &gj in nb_buf.iter() {
+            if let Some(lj) = scratch.local(gj) {
+                out.push((li as u32, lj));
+            }
+        }
+    }
+}
+
 /// Induced subgraph as a standalone Csr (used by tests, the partitioner
 /// per-part reporting, and exact inference over parts).
 pub fn induced_csr(g: &Csr, nodes: &[u32]) -> Csr {
@@ -136,6 +162,24 @@ mod tests {
         assert_eq!(within_edges(&g, &[0, 4], &mut scratch), 0);
         // reuse across calls (epoch reset works)
         assert_eq!(within_edges(&g, &[0, 1], &mut scratch), 2);
+    }
+
+    #[test]
+    fn induced_edges_by_matches_csr_path() {
+        let g = path5();
+        let mut s1 = SubgraphScratch::new(g.n());
+        let mut s2 = SubgraphScratch::new(g.n());
+        let mut nb = Vec::new();
+        for nodes in [vec![1, 2, 3], vec![3, 2], vec![0, 4], vec![4]] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            induced_edges(&g, &nodes, &mut s1, &mut a);
+            induced_edges_by(&nodes, &mut s2, &mut nb, &mut b, |v, buf| {
+                buf.clear();
+                buf.extend_from_slice(g.neighbors(v as usize));
+            });
+            assert_eq!(a, b, "nodes {nodes:?}");
+        }
     }
 
     #[test]

@@ -221,6 +221,68 @@ pub fn normalize_sparse(
     (vals, self_loop)
 }
 
+/// Storage-backed twin of [`normalize_sparse`]: full-graph normalized
+/// values from a [`GraphStorage`](crate::graph::GraphStorage), reading
+/// adjacency rows in `chunk_rows` chunks instead of requiring a resident
+/// CSR (`RowNorm` needs no adjacency reads at all — degrees come from
+/// the resident row-offset index).  Performs the exact same operations
+/// in the exact same order, so the output is **bit-identical** to
+/// `normalize_sparse` on the equivalent in-RAM graph (pinned by the
+/// `store` test suite across chunk sizes).
+///
+/// Note the *output* is still O(nnz): this is the exact-inference /
+/// serving normalization.  The out-of-core training path never calls it
+/// — per-batch renormalization works on induced local edges only.
+pub fn normalize_storage(
+    store: &crate::graph::GraphStorage,
+    cfg: NormConfig,
+    chunk_rows: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    NORMALIZE_SPARSE_CALLS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let n = store.n();
+    let deg: Vec<f32> = (0..n).map(|v| store.degree(v) as f32 + 1.0).collect();
+    let mut vals = vec![0f32; store.nnz()];
+    let mut self_loop = vec![0f32; n];
+    match cfg.kind {
+        NormKind::Sym => {
+            let inv: Vec<f32> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+            let mut pos = 0usize;
+            store.scan_rows(chunk_rows, |v, row| {
+                for &u in row {
+                    vals[pos] = inv[v] * inv[u as usize];
+                    pos += 1;
+                }
+                self_loop[v] = inv[v] * inv[v];
+            });
+            debug_assert_eq!(pos, vals.len());
+        }
+        NormKind::RowNorm => {
+            for v in 0..n {
+                let inv = 1.0 / deg[v];
+                let (start, len) = (entry_offset(store, v), store.degree(v));
+                vals[start..start + len].iter_mut().for_each(|x| *x = inv);
+                self_loop[v] = inv;
+            }
+        }
+    }
+    match cfg.enhance {
+        DiagEnhance::None => {}
+        DiagEnhance::AddIdentity => self_loop.iter_mut().for_each(|s| *s += 1.0),
+        DiagEnhance::AddLambdaDiag(l) => {
+            self_loop.iter_mut().for_each(|s| *s *= 1.0 + l)
+        }
+    }
+    (vals, self_loop)
+}
+
+/// Entry offset of node `v`'s adjacency row within the value array.
+fn entry_offset(store: &crate::graph::GraphStorage, v: usize) -> usize {
+    match store {
+        crate::graph::GraphStorage::InRam(ds) => ds.graph.offsets[v],
+        crate::graph::GraphStorage::OnDisk(dd) => dd.row_entry_offset(v) as usize,
+    }
+}
+
 /// One cached [`normalize_sparse`] result: per-entry values aligned with
 /// the graph's `cols` plus the per-node self-loop value.
 #[derive(Clone, Debug)]

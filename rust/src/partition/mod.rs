@@ -10,11 +10,13 @@ pub mod metrics;
 pub mod multilevel;
 pub mod random;
 pub mod refine;
+pub mod streaming;
 
 pub use metrics::{balance, edge_cut, PartitionStats};
 pub use local_search::LocalSearchPartitioner;
 pub use multilevel::{MultilevelParams, MultilevelPartitioner};
 pub use random::RandomPartitioner;
+pub use streaming::{StreamingParams, StreamingPartitioner};
 
 use crate::graph::Csr;
 use crate::util::Rng;

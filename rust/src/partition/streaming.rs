@@ -1,0 +1,321 @@
+//! Streaming multilevel partitioner for out-of-core graphs.
+//!
+//! The in-RAM `MultilevelPartitioner` clones the full graph per
+//! coarsening level — fine for the miniatures, impossible at the
+//! Amazon2M scale where the adjacency itself never fits. This module
+//! partitions a [`GraphStorage`] (RAM or disk) with only the
+//! *coarsened* graph resident:
+//!
+//! 1. **Pass A — streaming agglomeration.** Scan adjacency rows in
+//!    ascending node order (chunk at a time via
+//!    [`GraphStorage::scan_rows`]) and greedily merge each node into the
+//!    already-formed group it shares the most edges with, subject to a
+//!    size cap. One `u32` per node of state; no adjacency retained.
+//! 2. **Pass B — coarse graph accumulation.** A second scan accumulates
+//!    inter-group edge weights into per-group sorted maps, producing a
+//!    weighted coarse [`Csr`] with `node_weights` = group sizes
+//!    (~n / `group_cap` nodes).
+//! 3. Run the existing in-RAM [`MultilevelPartitioner`] on the coarse
+//!    graph and project the assignment back through the group map.
+//!
+//! Both passes are pure functions of the node order — chunk size cannot
+//! change the result, which the tests pin. The RNG is consumed only by
+//! the in-RAM stage, so a given seed yields one assignment regardless
+//! of storage backend or chunking.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Csr, GraphStorage};
+use crate::util::Rng;
+
+use super::multilevel::{MultilevelParams, MultilevelPartitioner};
+use super::Partitioner;
+
+#[derive(Clone, Debug)]
+pub struct StreamingParams {
+    /// Max fine nodes per streaming group (pass A). Smaller caps keep
+    /// more structure for the refinement stage; larger caps shrink the
+    /// resident coarse graph. 8 matches one heavy-edge-matching level³.
+    pub group_cap: usize,
+    /// Rows per chunk for the two streaming scans (0 = one full chunk).
+    pub chunk_rows: usize,
+    /// Parameters for the in-RAM multilevel stage on the coarse graph.
+    pub multilevel: MultilevelParams,
+}
+
+impl Default for StreamingParams {
+    fn default() -> Self {
+        StreamingParams {
+            group_cap: 8,
+            chunk_rows: crate::graph::store::DEFAULT_CHUNK_ROWS,
+            multilevel: MultilevelParams::default(),
+        }
+    }
+}
+
+pub struct StreamingPartitioner {
+    pub params: StreamingParams,
+}
+
+impl Default for StreamingPartitioner {
+    fn default() -> Self {
+        StreamingPartitioner { params: StreamingParams::default() }
+    }
+}
+
+/// Result of the streaming agglomeration pass: a fine→group map and the
+/// number of groups formed.
+struct Grouping {
+    group: Vec<u32>,
+    num_groups: usize,
+}
+
+impl StreamingPartitioner {
+    /// Partition a storage-backed graph into `k` parts. Same output
+    /// contract as [`Partitioner::partition`]: `part[v] < k` for all v.
+    pub fn partition_storage(
+        &self,
+        store: &GraphStorage,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<u32> {
+        assert!(k >= 1);
+        let n = store.n();
+        if k == 1 || n == 0 {
+            return vec![0; n];
+        }
+        let grouping = self.agglomerate(store);
+        let coarse = self.coarse_graph(store, &grouping);
+        debug_assert_eq!(coarse.n(), grouping.num_groups);
+        debug_assert_eq!(coarse.total_node_weight(), n as u64);
+
+        // Degenerate: fewer groups than requested parts — every group
+        // is its own part (group ids are dense 0..num_groups <= k).
+        let coarse_part = if grouping.num_groups <= k {
+            (0..grouping.num_groups as u32).collect()
+        } else {
+            let ml = MultilevelPartitioner { params: self.params.multilevel.clone() };
+            ml.partition(&coarse, k, rng)
+        };
+
+        grouping
+            .group
+            .iter()
+            .map(|&g| coarse_part[g as usize])
+            .collect()
+    }
+
+    /// Pass A: ascending-order greedy agglomeration. Node `v` joins the
+    /// group among its already-assigned neighbors with the highest
+    /// connection count whose load is below `group_cap` (ties → lowest
+    /// group id); with no eligible neighbor group it opens a new one.
+    /// Depends only on node order, never on chunk boundaries.
+    fn agglomerate(&self, store: &GraphStorage) -> Grouping {
+        let n = store.n();
+        let cap = self.params.group_cap.max(1) as u32;
+        const UNASSIGNED: u32 = u32::MAX;
+        let mut group = vec![UNASSIGNED; n];
+        let mut load: Vec<u32> = Vec::new();
+        // connection-count scratch, reset via the touched list
+        let mut count: Vec<u32> = Vec::new();
+        let mut touched: Vec<u32> = Vec::new();
+        let mut num_groups = 0usize;
+
+        store.scan_rows(self.params.chunk_rows, |v, row| {
+            touched.clear();
+            for &u in row {
+                // ascending order: only u < v can be assigned already
+                if (u as usize) >= v {
+                    continue;
+                }
+                let g = group[u as usize];
+                debug_assert_ne!(g, UNASSIGNED);
+                if load[g as usize] >= cap {
+                    continue;
+                }
+                if count[g as usize] == 0 {
+                    touched.push(g);
+                }
+                count[g as usize] += 1;
+            }
+            let mut best: Option<u32> = None;
+            for &g in &touched {
+                best = Some(match best {
+                    None => g,
+                    Some(b) => {
+                        let (cb, cg) = (count[b as usize], count[g as usize]);
+                        if cg > cb || (cg == cb && g < b) {
+                            g
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            for &g in &touched {
+                count[g as usize] = 0;
+            }
+            let g = match best {
+                Some(g) => g,
+                None => {
+                    let g = num_groups as u32;
+                    num_groups += 1;
+                    load.push(0);
+                    count.push(0);
+                    g
+                }
+            };
+            group[v] = g;
+            load[g as usize] += 1;
+        });
+        Grouping { group, num_groups }
+    }
+
+    /// Pass B: accumulate the weighted coarse adjacency. Each fine
+    /// directed entry (v, u) with `group[v] != group[u]` adds 1 to the
+    /// coarse weight — the fine graph is symmetric, so the coarse graph
+    /// is too. Memory is O(coarse nnz), not O(fine nnz).
+    fn coarse_graph(&self, store: &GraphStorage, grouping: &Grouping) -> Csr {
+        let nc = grouping.num_groups;
+        let group = &grouping.group;
+        let mut adj: Vec<BTreeMap<u32, u32>> = vec![BTreeMap::new(); nc];
+        store.scan_rows(self.params.chunk_rows, |v, row| {
+            let gv = group[v];
+            for &u in row {
+                let gu = group[u as usize];
+                if gu != gv {
+                    *adj[gv as usize].entry(gu).or_insert(0) += 1;
+                }
+            }
+        });
+
+        let mut offsets = vec![0usize; nc + 1];
+        for g in 0..nc {
+            offsets[g + 1] = offsets[g] + adj[g].len();
+        }
+        let nnz = offsets[nc];
+        let mut cols = Vec::with_capacity(nnz);
+        let mut weights = Vec::with_capacity(nnz);
+        for m in &adj {
+            for (&c, &w) in m {
+                cols.push(c);
+                weights.push(w);
+            }
+        }
+        let mut node_weights = vec![0u32; nc];
+        for &g in group {
+            node_weights[g as usize] += 1;
+        }
+        Csr { offsets, cols, weights, node_weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, SbmSpec};
+    use crate::graph::{Dataset, Labels, Split, Task};
+    use crate::partition::metrics::stats;
+    use crate::partition::random::RandomPartitioner;
+
+    fn sbm_storage(n: usize, communities: usize, seed: u64) -> GraphStorage {
+        let mut rng = Rng::new(seed);
+        let g = generate(
+            &SbmSpec {
+                n,
+                communities,
+                avg_deg: 12.0,
+                intra_frac: 0.9,
+                size_skew: 0.5,
+            },
+            &mut rng,
+        );
+        let graph = g.graph;
+        GraphStorage::InRam(Dataset {
+            name: "sbm-test".into(),
+            task: Task::Multiclass,
+            graph,
+            f_in: 1,
+            num_classes: communities,
+            features: vec![0.0; n],
+            labels: Labels::Multiclass(g.community.clone()),
+            split: vec![Split::Train; n],
+        })
+    }
+
+    #[test]
+    fn valid_assignment_and_deterministic() {
+        let store = sbm_storage(1200, 12, 1);
+        let k = 8;
+        let p1 = StreamingPartitioner::default().partition_storage(&store, k, &mut Rng::new(5));
+        let p2 = StreamingPartitioner::default().partition_storage(&store, k, &mut Rng::new(5));
+        assert_eq!(p1.len(), 1200);
+        assert!(p1.iter().all(|&p| (p as usize) < k));
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_result() {
+        let store = sbm_storage(900, 9, 2);
+        let mut parts = Vec::new();
+        for chunk_rows in [1usize, 7, 64, 0] {
+            let sp = StreamingPartitioner {
+                params: StreamingParams { chunk_rows, ..StreamingParams::default() },
+            };
+            parts.push(sp.partition_storage(&store, 6, &mut Rng::new(3)));
+        }
+        for p in &parts[1..] {
+            assert_eq!(p, &parts[0]);
+        }
+    }
+
+    #[test]
+    fn beats_random_on_clustered_graph() {
+        let store = sbm_storage(3000, 30, 4);
+        let g = match &store {
+            GraphStorage::InRam(ds) => ds.graph.clone(),
+            _ => unreachable!(),
+        };
+        let k = 10;
+        let sp = StreamingPartitioner::default()
+            .partition_storage(&store, k, &mut Rng::new(6));
+        let rnd = RandomPartitioner.partition(&g, k, &mut Rng::new(6));
+        let s_sp = stats(&g, &sp, k);
+        let s_rnd = stats(&g, &rnd, k);
+        assert!(
+            s_sp.within_fraction > 0.6,
+            "streaming within={:.3}",
+            s_sp.within_fraction
+        );
+        assert!(
+            s_sp.within_fraction > s_rnd.within_fraction + 0.2,
+            "sp={:.3} rnd={:.3}",
+            s_sp.within_fraction,
+            s_rnd.within_fraction
+        );
+    }
+
+    #[test]
+    fn group_cap_respected() {
+        let store = sbm_storage(600, 6, 7);
+        let sp = StreamingPartitioner::default();
+        let grouping = sp.agglomerate(&store);
+        let mut sizes = vec![0u32; grouping.num_groups];
+        for &g in &grouping.group {
+            assert_ne!(g, u32::MAX);
+            sizes[g as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s <= sp.params.group_cap as u32));
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn k_one_and_small_graphs() {
+        let store = sbm_storage(40, 2, 8);
+        let p = StreamingPartitioner::default().partition_storage(&store, 1, &mut Rng::new(9));
+        assert!(p.iter().all(|&x| x == 0));
+        // k larger than the group count: every group its own part
+        let p = StreamingPartitioner::default().partition_storage(&store, 30, &mut Rng::new(9));
+        assert!(p.iter().all(|&x| (x as usize) < 30));
+    }
+}

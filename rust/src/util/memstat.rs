@@ -1,0 +1,78 @@
+//! Process memory readings from `/proc/self/status`.
+//!
+//! The out-of-core storage work (ISSUE 9 / ROADMAP item 1) is judged on
+//! peak resident set size: the paper's Table 8 headline is Amazon2M in
+//! 2.2 GB while every competing method OOMs.  Every `BENCH_*.json`
+//! writer records `peak_rss_bytes` via this module so the memory
+//! trajectory is tracked from this PR onward.
+//!
+//! Linux-only by nature (procfs); on other platforms the readers return
+//! `None` and the bench writers record 0 rather than failing — the
+//! numbers are a measurement, not a correctness gate.
+
+/// A point-in-time memory reading.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemStat {
+    /// `VmRSS`: current resident set size, bytes.
+    pub rss_bytes: u64,
+    /// `VmHWM`: peak resident set size ("high water mark"), bytes.
+    pub peak_rss_bytes: u64,
+}
+
+/// Read `VmRSS` / `VmHWM` from `/proc/self/status`.
+///
+/// Returns `None` when procfs is unavailable (non-Linux) or the fields
+/// are missing/unparseable.
+pub fn read() -> Option<MemStat> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let rss = parse_kb_line(&status, "VmRSS:")?;
+    let peak = parse_kb_line(&status, "VmHWM:")?;
+    Some(MemStat { rss_bytes: rss, peak_rss_bytes: peak })
+}
+
+/// Peak RSS in bytes, or 0 when unavailable.  The convenience form the
+/// bench writers use: a missing procfs degrades to a recorded zero.
+pub fn peak_rss_bytes() -> u64 {
+    read().map(|m| m.peak_rss_bytes).unwrap_or(0)
+}
+
+/// Parse a `/proc/self/status` line of the form `Key:   12345 kB`
+/// into bytes.
+fn parse_kb_line(status: &str, key: &str) -> Option<u64> {
+    let line = status.lines().find(|l| l.starts_with(key))?;
+    let rest = line[key.len()..].trim();
+    let num = rest.split_whitespace().next()?;
+    let kb: u64 = num.parse().ok()?;
+    // the kernel reports these fields in kB
+    Some(kb * 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kb_lines() {
+        let s = "Name:\tcargo\nVmHWM:\t  204800 kB\nVmRSS:\t   10240 kB\n";
+        assert_eq!(parse_kb_line(s, "VmRSS:"), Some(10240 * 1024));
+        assert_eq!(parse_kb_line(s, "VmHWM:"), Some(204800 * 1024));
+        assert_eq!(parse_kb_line(s, "VmSwap:"), None);
+    }
+
+    #[test]
+    fn malformed_lines_are_none() {
+        assert_eq!(parse_kb_line("VmRSS: lots kB\n", "VmRSS:"), None);
+        assert_eq!(parse_kb_line("", "VmRSS:"), None);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn live_reading_is_sane() {
+        let m = read().expect("procfs reading on linux");
+        // a running test binary is at least 1 MB resident and the high
+        // water mark can never be below the current RSS
+        assert!(m.rss_bytes > 1 << 20);
+        assert!(m.peak_rss_bytes >= m.rss_bytes);
+        assert!(peak_rss_bytes() >= m.rss_bytes);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod failpoint;
 pub mod json;
+pub mod memstat;
 pub mod pool;
 pub mod rng;
 pub mod simd;

@@ -1,0 +1,364 @@
+//! Out-of-core storage acceptance suite (PR 9):
+//!
+//! - **roundtrip**: `write_store` → `DiskDataset::open` preserves every
+//!   section for both tasks, and `to_dataset` is the exact inverse;
+//! - **chunk-stream parity**: normalization and batch assembly over the
+//!   on-disk store are bitwise-equal to the in-RAM path across chunk
+//!   sizes {1, prime, full} — the core `--storage ram|disk` guarantee;
+//! - **typed corruption**: a truncated file, a bit-flipped header, a
+//!   wrong magic, and flipped data bytes each fail with the matching
+//!   `StoreError` variant (mirroring the CGCNCKP3 checkpoint tests) —
+//!   never a panic or silent acceptance;
+//! - **streaming partitioner**: identical assignments on the RAM and
+//!   disk storage arms;
+//! - **out-of-core training**: `train_storage` over `OnDisk` replays
+//!   the `InRam` run bitwise (losses, eval F1, weight bits), and
+//!   `cluster_evaluate_storage` equals the resident
+//!   `batch_eval::cluster_evaluate`.
+
+use std::path::PathBuf;
+
+use cluster_gcn::coordinator::trainer::TrainState;
+use cluster_gcn::coordinator::{
+    cluster_evaluate_storage, train_storage, BatchAssembler, ClusterSampler,
+};
+use cluster_gcn::datagen::{build, Preset};
+use cluster_gcn::graph::{
+    write_store, Dataset, DiskDataset, GraphStorage, Split, StoreError, Task,
+};
+use cluster_gcn::norm::{normalize_sparse, normalize_storage, NormConfig};
+use cluster_gcn::partition::{
+    parts_to_clusters, Partitioner, RandomPartitioner, StreamingPartitioner,
+};
+use cluster_gcn::runtime::{Backend, HostBackend, ModelSpec};
+use cluster_gcn::session::TrainConfig;
+use cluster_gcn::util::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cgcn_store_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Small preset with both-task coverage; big enough that chunked scans
+/// cross several chunk boundaries at chunk_rows ∈ {1, 101}.
+fn tiny(task: Task) -> Preset {
+    Preset {
+        name: "store_tiny",
+        task,
+        n: 700,
+        communities: 10,
+        avg_deg: 7.0,
+        intra_frac: 0.85,
+        classes: if task == Task::Multilabel { 70 } else { 6 },
+        f_in: 12,
+        label_noise: 0.1,
+        feat_noise: 1.0,
+        active_per_community: 14,
+        split: (0.6, 0.2),
+        default_partitions: 6,
+        default_q: 2,
+        b_max: 256,
+        f_hid: 16,
+    }
+}
+
+fn labels_equal(a: &Dataset, b: &Dataset) -> bool {
+    (0..a.n()).all(|v| (0..a.num_classes).all(|c| a.labels.has_label(v, c) == b.labels.has_label(v, c)))
+}
+
+#[test]
+fn roundtrip_both_tasks() {
+    let dir = tmpdir("roundtrip");
+    for task in [Task::Multiclass, Task::Multilabel] {
+        let ds = build(&tiny(task), 11);
+        let path = dir.join(format!("{task:?}.store"));
+        write_store(&ds, &path).unwrap();
+        let dd = DiskDataset::open(&path).unwrap();
+        assert_eq!(dd.n(), ds.n());
+        assert_eq!(dd.nnz(), ds.graph.nnz());
+        assert_eq!(dd.task, ds.task);
+        assert_eq!(dd.f_in, ds.f_in);
+        assert_eq!(dd.num_classes, ds.num_classes);
+        dd.verify_data().unwrap();
+
+        let mut nb = Vec::new();
+        let mut feat = vec![0f32; ds.f_in];
+        for v in 0..ds.n() {
+            assert_eq!(dd.degree(v), ds.graph.degree(v), "degree of {v}");
+            dd.read_neighbors_into(v, &mut nb).unwrap();
+            assert_eq!(nb, ds.graph.neighbors(v), "row of {v}");
+            dd.read_feature_row_into(v, &mut feat).unwrap();
+            assert_eq!(feat, ds.features[v * ds.f_in..(v + 1) * ds.f_in], "features of {v}");
+            assert_eq!(dd.split_of(v), ds.split[v], "split of {v}");
+            for c in 0..ds.num_classes {
+                assert_eq!(
+                    dd.has_label(v, c).unwrap(),
+                    ds.labels.has_label(v, c),
+                    "label ({v},{c})"
+                );
+            }
+        }
+
+        // exact inverse
+        let back = dd.to_dataset().unwrap();
+        assert_eq!(back.graph.offsets, ds.graph.offsets);
+        assert_eq!(back.graph.cols, ds.graph.cols);
+        assert_eq!(back.features, ds.features);
+        assert_eq!(back.split, ds.split);
+        assert!(labels_equal(&back, &ds));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn normalization_chunk_parity() {
+    let dir = tmpdir("norm");
+    let ds = build(&tiny(Task::Multiclass), 3);
+    let path = dir.join("t.store");
+    write_store(&ds, &path).unwrap();
+    let ram = GraphStorage::InRam(ds.clone());
+    let disk = GraphStorage::OnDisk(DiskDataset::open(&path).unwrap());
+    for cfg in [NormConfig::PAPER_DEFAULT, NormConfig::ROW] {
+        let exact = normalize_sparse(&ds.graph, cfg);
+        for chunk in [1usize, 101, 0] {
+            assert_eq!(normalize_storage(&ram, cfg, chunk), exact, "ram chunk {chunk}");
+            assert_eq!(normalize_storage(&disk, cfg, chunk), exact, "disk chunk {chunk}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_assembly_disk_matches_ram_bitwise() {
+    let dir = tmpdir("assembly");
+    for task in [Task::Multiclass, Task::Multilabel] {
+        let ds = build(&tiny(task), 29);
+        let path = dir.join(format!("{task:?}.store"));
+        write_store(&ds, &path).unwrap();
+        let ram = GraphStorage::InRam(ds.clone());
+        let disk = GraphStorage::OnDisk(DiskDataset::open(&path).unwrap());
+
+        let mut rng = Rng::new(5);
+        let part = RandomPartitioner.partition(&ds.graph, 6, &mut rng);
+        let sampler = ClusterSampler::new(parts_to_clusters(&part, 6), 2);
+        let b_max = sampler.max_batch_nodes().next_multiple_of(8);
+
+        let mut asm_ds = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+        let mut asm_ram = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+        let mut asm_disk = BatchAssembler::new(ds.n(), b_max, NormConfig::PAPER_DEFAULT);
+        let mut b_ds = asm_ds.new_batch(&ds);
+        let mut b_ram = asm_ram.new_batch_storage(&ram);
+        let mut b_disk = asm_disk.new_batch_storage(&disk);
+
+        let plan = sampler.epoch_plan(&mut Rng::new(17));
+        let mut nodes = Vec::new();
+        for (i, ids) in plan.iter().enumerate() {
+            sampler.batch_nodes(ids, &mut nodes);
+            asm_ds.assemble_into(&ds, &nodes, &mut b_ds);
+            asm_ram.assemble_storage_into(&ram, &nodes, &mut b_ram);
+            asm_disk.assemble_storage_into(&disk, &nodes, &mut b_disk);
+            for (tag, b) in [("ram", &b_ram), ("disk", &b_disk)] {
+                assert_eq!(b.nodes, b_ds.nodes, "batch {i} {tag} nodes");
+                assert_eq!(b.n_real, b_ds.n_real, "batch {i} {tag} n_real");
+                assert_eq!(b.n_train, b_ds.n_train, "batch {i} {tag} n_train");
+                assert_eq!(b.within_edges, b_ds.within_edges, "batch {i} {tag} edges");
+                assert_eq!(b.a.data, b_ds.a.data, "batch {i} {tag} A");
+                assert_eq!(b.x.data, b_ds.x.data, "batch {i} {tag} X");
+                assert_eq!(b.y.data, b_ds.y.data, "batch {i} {tag} Y");
+                assert_eq!(b.mask.data, b_ds.mask.data, "batch {i} {tag} mask");
+                assert_eq!(b.block.offsets, b_ds.block.offsets, "batch {i} {tag} block");
+                assert_eq!(b.block.cols, b_ds.block.cols, "batch {i} {tag} block cols");
+                assert_eq!(b.block.vals, b_ds.block.vals, "batch {i} {tag} block vals");
+                assert_eq!(b.block.self_loop, b_ds.block.self_loop, "batch {i} {tag} diag");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_file_fails_typed() {
+    let dir = tmpdir("trunc");
+    let ds = build(&tiny(Task::Multiclass), 7);
+    let path = dir.join("t.store");
+    write_store(&ds, &path).unwrap();
+    let full = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(full - 5).unwrap();
+    drop(f);
+    match DiskDataset::open(&path) {
+        Err(StoreError::Truncated { expected, actual }) => {
+            assert_eq!(expected, full);
+            assert_eq!(actual, full - 5);
+        }
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_header_and_magic_fail_typed() {
+    let dir = tmpdir("header");
+    let ds = build(&tiny(Task::Multiclass), 7);
+    let path = dir.join("t.store");
+    write_store(&ds, &path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    // flip one bit inside the checksummed header field region
+    let mut bytes = pristine.clone();
+    bytes[100] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    match DiskDataset::open(&path) {
+        Err(StoreError::Corrupt(_)) => {}
+        other => panic!("expected Corrupt for header bit-flip, got {other:?}"),
+    }
+
+    // wrong magic is its own error, detected before any CRC work
+    let mut bytes = pristine.clone();
+    bytes[0] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    match DiskDataset::open(&path) {
+        Err(StoreError::BadMagic) => {}
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_data_section_fails_verify() {
+    let dir = tmpdir("data");
+    let ds = build(&tiny(Task::Multiclass), 7);
+    let path = dir.join("t.store");
+    write_store(&ds, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // a byte inside the feature section: header (152) + index + neighbors
+    let off = 152 + (ds.n() + 1) * 8 + ds.graph.nnz() * 4 + 16;
+    bytes[off] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    // sections are lazily read, so open still succeeds...
+    let dd = DiskDataset::open(&path).unwrap();
+    // ...but the streamed checksum catches the flip
+    match dd.verify_data() {
+        Err(StoreError::Corrupt(_)) => {}
+        other => panic!("expected Corrupt from verify_data, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streaming_partitioner_backend_invariant() {
+    let dir = tmpdir("part");
+    let ds = build(&tiny(Task::Multiclass), 13);
+    let path = dir.join("t.store");
+    write_store(&ds, &path).unwrap();
+    let ram = GraphStorage::InRam(ds.clone());
+    let disk = GraphStorage::OnDisk(DiskDataset::open(&path).unwrap());
+    let sp = StreamingPartitioner::default();
+    let a = sp.partition_storage(&ram, 6, &mut Rng::new(2));
+    let b = sp.partition_storage(&disk, 6, &mut Rng::new(2));
+    assert_eq!(a, b);
+    assert!(a.iter().all(|&p| p < 6));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn ooc_fixture(task: Task, dir: &std::path::Path) -> (GraphStorage, GraphStorage, ClusterSampler, ModelSpec) {
+    let ds = build(&tiny(task), 23);
+    let path = dir.join(format!("{task:?}.store"));
+    write_store(&ds, &path).unwrap();
+    let mut rng = Rng::new(9);
+    let part = RandomPartitioner.partition(&ds.graph, 6, &mut rng);
+    let sampler = ClusterSampler::new(parts_to_clusters(&part, 6), 2);
+    let b_max = sampler.max_batch_nodes().next_multiple_of(8);
+    let spec = ModelSpec::gcn(ds.task, 2, ds.f_in, 16, ds.num_classes, b_max);
+    let ram = GraphStorage::InRam(ds);
+    let disk = GraphStorage::OnDisk(DiskDataset::open(&path).unwrap());
+    (ram, disk, sampler, spec)
+}
+
+#[test]
+fn ooc_training_disk_replays_ram_bitwise() {
+    let dir = tmpdir("train");
+    for task in [Task::Multiclass, Task::Multilabel] {
+        let (ram, disk, sampler, spec) = ooc_fixture(task, &dir);
+        let cfg = TrainConfig {
+            layers: 2,
+            hidden: Some(16),
+            epochs: 3,
+            eval_every: 1,
+            seed: 4,
+            ..TrainConfig::default()
+        };
+        let run = |store: &GraphStorage| {
+            let mut backend = HostBackend::new();
+            backend.register_model("m", spec.clone());
+            train_storage(&mut backend, store, &sampler, "m", &cfg).unwrap()
+        };
+        let a = run(&ram);
+        let b = run(&disk);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.peak_bytes, b.peak_bytes);
+        assert_eq!(a.curve.len(), 3);
+        for (pa, pb) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(pa.epoch, pb.epoch);
+            assert_eq!(pa.train_loss.to_bits(), pb.train_loss.to_bits(), "{task:?} loss");
+            assert_eq!(pa.eval_f1.to_bits(), pb.eval_f1.to_bits(), "{task:?} f1");
+        }
+        for (wa, wb) in a.state.weights.iter().zip(&b.state.weights) {
+            assert_eq!(wa.data, wb.data, "{task:?} weights");
+        }
+        assert!(
+            a.curve[2].train_loss.is_finite()
+                && a.curve[2].train_loss <= a.curve[0].train_loss * 1.05,
+            "{task:?} loss diverged: {} -> {}",
+            a.curve[0].train_loss,
+            a.curve[2].train_loss
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn storage_eval_matches_resident_cluster_evaluate() {
+    let dir = tmpdir("eval");
+    for task in [Task::Multiclass, Task::Multilabel] {
+        let (ram, disk, sampler, spec) = ooc_fixture(task, &dir);
+        let ds = ram.as_ram().expect("InRam arm").clone();
+        let weights = TrainState::init(&spec, 8).weights;
+        let mut backend = HostBackend::new();
+        backend.register_model("m", spec.clone());
+        // the storage eval re-batches the training clusters one at a
+        // time; hand the resident path the identical q=1 sampler
+        let eval_sampler = ClusterSampler::new(sampler.clusters.clone(), 1);
+        for split in [Split::Val, Split::Test] {
+            let nodes = ds.nodes_in_split(split);
+            let want = cluster_gcn::coordinator::batch_eval::cluster_evaluate(
+                &mut backend,
+                &ds,
+                &eval_sampler,
+                "m",
+                &weights,
+                NormConfig::PAPER_DEFAULT,
+                &nodes,
+                77,
+            )
+            .unwrap();
+            for store in [&ram, &disk] {
+                let got = cluster_evaluate_storage(
+                    &mut backend,
+                    store,
+                    &sampler,
+                    "m",
+                    &weights,
+                    NormConfig::PAPER_DEFAULT,
+                    split,
+                    77,
+                )
+                .unwrap();
+                assert_eq!(got.to_bits(), want.to_bits(), "{task:?} {split:?}");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
