@@ -12,8 +12,10 @@
 #                     (proves goldens are backend-independent), raises
 #                     the simd_parity random-case count, runs a
 #                     larger-preset perf_probe, the seeded end-to-end
-#                     chaos sweep, the serve overload smoke, and a
-#                     scaled-down table8 out-of-core benchmark smoke.
+#                     chaos sweep, the serve overload smoke, a
+#                     scaled-down table8 out-of-core benchmark smoke,
+#                     and the 2-worker distributed socket e2e with an
+#                     injected torn frame.
 set -euo pipefail
 
 cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
@@ -51,6 +53,14 @@ fi
 echo "== shards parity gate (shards=1 bit-identical to HostBackend on a tiny SBM) =="
 cargo test --release -q --test driver sharded
 cargo test --release -q --test driver prefetch
+
+echo "== distributed parity gates (workers=1 bitwise; torn-frame recovery bitwise) =="
+# real spawned worker processes over UNIX/TCP sockets: workers=1 must
+# replay the plain HostBackend run bit-identically, an injected torn
+# request frame must recover to the fault-free 2-worker bits, and the
+# CLI flag surface must match usage.txt (both directions)
+cargo test --release -q --test distributed
+cargo test --release -q usage_flags_match_command_whitelists
 
 echo "== VR-GCN resume-parity gate (interrupt -> checkpoint -> resume, bitwise) =="
 cargo test --release -q --test driver vrgcn_resume
@@ -221,6 +231,28 @@ if [ "${CGCN_DEEP:-0}" = 1 ]; then
   if [ -z "$RSS" ] || [ "$RSS" -le 0 ] || [ "$RSS" -ge 34359738368 ]; then
     echo "peak_rss_bytes out of range: ${RSS:-missing}" >&2; exit 1;
   fi
+
+  echo "== deep tier: 2-worker socket e2e (torn-frame fault -> recovery -> report) =="
+  # two spawned worker processes over a UNIX socket, 8-bit quantized
+  # gradient uplink, and one injected torn request frame: the run must
+  # recover (exit 0), record the retry, and write the wire-cost report
+  cargo run --release -- train --preset cora_like --backend host --epochs 2 \
+    --workers 2 --transport unix --compress q8 \
+    --failpoints 'dist.send.torn=1:1'
+  test -f bench_results/BENCH_distributed.json || {
+    echo "distributed train did not write bench_results/BENCH_distributed.json" >&2
+    exit 1
+  }
+  for key in workers transport compress epochs dist_steps train_secs epoch_secs \
+             bytes_tx bytes_rx grad_raw_bytes grad_wire_bytes compression_ratio \
+             retries reconnects respawns final_loss peak_rss_bytes; do
+    grep -q "\"$key\"" bench_results/BENCH_distributed.json || {
+      echo "BENCH_distributed.json missing key $key" >&2; exit 1;
+    }
+  done
+  grep -Eq '"retries": *[1-9]' bench_results/BENCH_distributed.json || {
+    echo "torn-frame e2e recorded no retry — the fault never engaged" >&2; exit 1;
+  }
 fi
 
 echo "CI gate passed."

@@ -2,7 +2,10 @@
 //!
 //! Grammar: `cluster-gcn <subcommand> [--key value | --flag]...`.
 //! Unknown keys are rejected against a per-command whitelist so typos
-//! fail loudly.
+//! fail loudly.  Boolean switches are declared explicitly per command:
+//! a switch never consumes the next token (`train --guard 5` is an
+//! error, not `guard="5"`), a value flag must be given a value, and a
+//! flag seen twice is rejected instead of last-one-wins.
 
 use std::collections::BTreeMap;
 
@@ -16,7 +19,15 @@ pub struct Args {
 
 impl Args {
     /// Parse from raw argv (without the program name).
-    pub fn parse(argv: &[String], allowed: &[&str]) -> Result<Args> {
+    ///
+    /// `allowed` is the subcommand's full flag whitelist; `bools` is
+    /// the subset that are boolean switches and therefore never take a
+    /// value.  Every key may appear at most once.
+    pub fn parse(argv: &[String], allowed: &[&str], bools: &[&str]) -> Result<Args> {
+        debug_assert!(
+            bools.iter().all(|b| allowed.contains(b)),
+            "every boolean switch must also be in the whitelist"
+        );
         let command = argv
             .first()
             .ok_or_else(|| anyhow!("missing subcommand"))?
@@ -34,12 +45,20 @@ impl Args {
                     allowed.join(", ")
                 );
             }
-            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                opts.insert(key.to_string(), argv[i + 1].clone());
-                i += 2;
-            } else {
+            if opts.contains_key(key) {
+                bail!("duplicate option --{key} for {command}");
+            }
+            if bools.contains(&key) {
                 opts.insert(key.to_string(), "true".to_string());
                 i += 1;
+            } else {
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        opts.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => bail!("--{key} expects a value"),
+                }
             }
         }
         Ok(Args { command, opts })
@@ -98,6 +117,7 @@ mod tests {
         let a = Args::parse(
             &argv(&["train", "--preset", "cora_like", "--epochs", "10", "--verbose"]),
             &["preset", "epochs", "verbose"],
+            &["verbose"],
         )
         .unwrap();
         assert_eq!(a.command, "train");
@@ -109,18 +129,18 @@ mod tests {
 
     #[test]
     fn rejects_unknown_option() {
-        let e = Args::parse(&argv(&["train", "--nope", "1"]), &["preset"]);
+        let e = Args::parse(&argv(&["train", "--nope", "1"]), &["preset"], &[]);
         assert!(e.is_err());
     }
 
     #[test]
     fn rejects_missing_command() {
-        assert!(Args::parse(&[], &[]).is_err());
+        assert!(Args::parse(&[], &[], &[]).is_err());
     }
 
     #[test]
     fn defaults_apply() {
-        let a = Args::parse(&argv(&["x"]), &[]).unwrap();
+        let a = Args::parse(&argv(&["x"]), &[], &[]).unwrap();
         assert_eq!(a.usize_or("k", 7).unwrap(), 7);
         assert_eq!(a.str_or("s", "d"), "d");
         assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
@@ -128,7 +148,56 @@ mod tests {
 
     #[test]
     fn bad_number_errors() {
-        let a = Args::parse(&argv(&["x", "--k", "abc"]), &["k"]).unwrap();
+        let a = Args::parse(&argv(&["x", "--k", "abc"]), &["k"], &[]).unwrap();
         assert!(a.usize_or("k", 1).is_err());
+    }
+
+    /// Regression: a boolean switch must not swallow the next token as
+    /// its value.  `train --guard 5` used to silently set `guard="5"`
+    /// (so `flag("guard")` was false and the guard never engaged); the
+    /// stray token must now be rejected.
+    #[test]
+    fn boolean_switch_never_takes_a_value() {
+        let e = Args::parse(&argv(&["train", "--guard", "5"]), &["guard"], &["guard"]);
+        let msg = format!("{:#}", e.unwrap_err());
+        assert!(msg.contains("expected --flag"), "got: {msg}");
+        // a switch followed by another flag parses as a plain switch
+        let a = Args::parse(
+            &argv(&["train", "--guard", "--keep", "2"]),
+            &["guard", "keep"],
+            &["guard"],
+        )
+        .unwrap();
+        assert!(a.flag("guard"));
+        assert_eq!(a.usize_or("keep", 0).unwrap(), 2);
+    }
+
+    /// Regression: duplicate flags used to silently overwrite each
+    /// other (`--epochs 5 --epochs 50` ran 50); they must error.
+    #[test]
+    fn rejects_duplicate_flags() {
+        let e = Args::parse(
+            &argv(&["train", "--epochs", "5", "--epochs", "50"]),
+            &["epochs"],
+            &[],
+        );
+        let msg = format!("{:#}", e.unwrap_err());
+        assert!(msg.contains("duplicate option --epochs"), "got: {msg}");
+        let e = Args::parse(&argv(&["train", "--guard", "--guard"]), &["guard"], &["guard"]);
+        assert!(e.is_err());
+    }
+
+    /// A value flag with no value (end of argv or another flag next)
+    /// must error instead of becoming `"true"`.
+    #[test]
+    fn value_flag_requires_a_value() {
+        for argvec in [
+            argv(&["train", "--epochs"]),
+            argv(&["train", "--epochs", "--seed", "1"]),
+        ] {
+            let e = Args::parse(&argvec, &["epochs", "seed"], &[]);
+            let msg = format!("{:#}", e.unwrap_err());
+            assert!(msg.contains("--epochs expects a value"), "got: {msg}");
+        }
     }
 }

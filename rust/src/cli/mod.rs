@@ -17,7 +17,11 @@ use crate::baselines::VrgcnParams;
 use crate::coordinator::checkpoint::{self, RotatingCheckpoint};
 use crate::datagen::{build_cached, preset, PRESETS};
 use crate::norm::NormConfig;
-use crate::runtime::{Backend, Engine, HostBackend, ManifestMissing, ShardedBackend};
+use crate::runtime::distributed::WorkerSetup;
+use crate::runtime::{
+    Backend, Compression, DistConfig, DistributedBackend, Engine, HostBackend,
+    ManifestMissing, ShardedBackend, Transport,
+};
 use crate::serve::{generate, run_load, LoadConfig, Mix, ServeConfig, ServeMode};
 use crate::session::guard::{rotation_base, run_guarded, GuardConfig};
 use crate::session::{EvalStrategy, Method, Session, StderrObserver, TrainConfig};
@@ -27,6 +31,87 @@ use args::Args;
 /// The `--help` text; single source of truth shared with the module
 /// docs via `include_str!("usage.txt")`.
 pub const USAGE: &str = include_str!("usage.txt");
+
+/// One subcommand's full flag surface — the single source of truth
+/// shared by every `Args::parse` call site and the usage-drift test
+/// (`usage_flags_match_command_whitelists`), so the synopsis in
+/// `usage.txt` and the parser whitelists cannot diverge.
+pub struct CommandSpec {
+    /// Subcommand name as dispatched by `main`.
+    pub name: &'static str,
+    /// Every accepted `--key` (value flags and boolean switches).
+    pub keys: &'static [&'static str],
+    /// The subset of `keys` that are boolean switches (never take a
+    /// value).
+    pub bools: &'static [&'static str],
+}
+
+/// Flag surface of every public subcommand.  The hidden `__worker`
+/// dispatch (the spawned distributed-training worker entry) takes no
+/// flags and is deliberately absent.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "datagen",
+        keys: &["preset", "seed", "cache", "storage", "chunk-rows"],
+        bools: &[],
+    },
+    CommandSpec {
+        name: "partition",
+        keys: &["preset", "seed", "cache", "parts", "algo"],
+        bools: &[],
+    },
+    CommandSpec {
+        name: "train",
+        keys: &[
+            "preset", "seed", "cache", "layers", "epochs", "method", "q",
+            "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
+            "lr-decay", "lr-decay-every", "patience", "save", "backend",
+            "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
+            "eval-parts", "resume", "checkpoint-every", "guard",
+            "guard-retries", "lr-backoff", "keep", "failpoints", "fail-seed",
+            "storage", "chunk-rows", "workers", "transport", "compress",
+        ],
+        bools: &["prefetch", "no-prefetch", "guard"],
+    },
+    CommandSpec {
+        name: "eval",
+        keys: &[
+            "preset", "seed", "cache", "checkpoint", "norm", "split",
+            "storage", "chunk-rows",
+        ],
+        bools: &[],
+    },
+    CommandSpec {
+        name: "serve",
+        keys: &[
+            "preset", "seed", "cache", "layers", "hidden", "parts", "algo",
+            "norm", "checkpoint", "queries", "batch", "mix", "hot-frac",
+            "hot-weight", "cross", "clients", "mode", "out", "no-warm",
+            "queue", "shed", "deadline-ms", "degrade-after", "failpoints",
+            "fail-seed", "storage", "chunk-rows",
+        ],
+        bools: &["no-warm", "shed"],
+    },
+    CommandSpec {
+        name: "table8",
+        keys: &[
+            "preset", "seed", "cache", "storage", "chunk-rows", "parts", "q",
+            "group-cap", "layers", "hidden", "epochs", "eval-every", "lr",
+            "norm", "out",
+        ],
+        bools: &[],
+    },
+    CommandSpec { name: "inspect", keys: &["artifacts"], bools: &[] },
+];
+
+/// Parse `argv` against the named subcommand's [`CommandSpec`].
+fn parse_cmd(name: &str, argv: &[String]) -> Result<Args> {
+    let c = COMMANDS
+        .iter()
+        .find(|c| c.name == name)
+        .expect("every dispatched command has a CommandSpec");
+    Args::parse(argv, c.keys, c.bools)
+}
 
 pub fn parse_norm(s: &str) -> Result<NormConfig> {
     Ok(match s {
@@ -60,6 +145,10 @@ pub fn main() -> Result<()> {
         "serve" => cmd_serve(&argv),
         "table8" => cmd_table8(&argv),
         "inspect" => cmd_inspect(&argv),
+        // hidden: the distributed-training worker entry point; spawned
+        // by the chief with its rendezvous in CGCN_DIST_* env vars,
+        // never invoked by hand (hence absent from COMMANDS and usage)
+        "__worker" => crate::runtime::distributed::worker_main(),
         other => Err(anyhow!("unknown command {other}\n{USAGE}")),
     }
 }
@@ -140,7 +229,7 @@ fn load_ds_storage(a: &Args) -> Result<crate::graph::Dataset> {
 }
 
 fn cmd_datagen(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &["preset", "seed", "cache", "storage", "chunk-rows"])?;
+    let a = parse_cmd("datagen", argv)?;
     if a.str_or("storage", "ram") == "disk" {
         // report straight off the store header + offset index — the
         // 2M-node preset never fits as a resident Dataset
@@ -193,7 +282,7 @@ fn cmd_partition(argv: &[String]) -> Result<()> {
     use crate::partition::{MultilevelPartitioner, Partitioner, RandomPartitioner};
     use crate::util::Rng;
 
-    let a = Args::parse(argv, &["preset", "seed", "cache", "parts", "algo"])?;
+    let a = parse_cmd("partition", argv)?;
     let ds = load_ds(&a)?;
     let k = a.usize_or(
         "parts",
@@ -269,18 +358,7 @@ fn print_failpoint_report() {
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
-    let a = Args::parse(
-        argv,
-        &[
-            "preset", "seed", "cache", "layers", "epochs", "method", "q",
-            "parts", "norm", "lr", "artifacts", "eval-every", "hidden",
-            "lr-decay", "lr-decay-every", "patience", "save", "backend",
-            "batch", "algo", "shards", "prefetch", "no-prefetch", "eval",
-            "eval-parts", "resume", "checkpoint-every", "guard",
-            "guard-retries", "lr-backoff", "keep", "failpoints", "fail-seed",
-            "storage", "chunk-rows",
-        ],
-    )?;
+    let a = parse_cmd("train", argv)?;
     install_failpoints(&a)?;
     match a.str_or("storage", "ram").as_str() {
         "ram" => {}
@@ -323,6 +401,49 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             );
         }
     }
+    // ---- cross-process distributed backend (--workers N) --------------
+    // chief + N spawned worker processes exchanging gradients over
+    // UNIX/TCP sockets; partition-aligned placement means each worker
+    // assembles only its own clusters' batches
+    let workers = a.usize_or("workers", 1)?;
+    let distributed = a.get("workers").is_some();
+    if distributed {
+        if workers == 0 {
+            bail!("--workers must be >= 1");
+        }
+        if shards > 1 {
+            bail!(
+                "--workers and --shards are exclusive: pick in-process \
+                 replicas (--shards) or worker processes (--workers)"
+            );
+        }
+        if a.flag("guard") {
+            bail!(
+                "--guard is not supported with --workers: the guard rebuilds \
+                 its backend per recovery attempt, which would respawn the \
+                 worker fleet mid-run (distributed runs recover from socket \
+                 faults internally; see --failpoints dist.*)"
+            );
+        }
+        if backend_kind != "host" {
+            bail!(
+                "--workers {workers} needs --backend host: workers compute \
+                 gradients on the host kernels and the chief applies the \
+                 averaged update with the same math"
+            );
+        }
+        if method_name != "cluster" {
+            bail!(
+                "--workers supports --method cluster only: graph partitions \
+                 are the unit of worker ownership (got {method_name})"
+            );
+        }
+    } else if a.get("transport").is_some() || a.get("compress").is_some() {
+        bail!("--transport/--compress only apply with --workers N");
+    }
+    let transport = Transport::parse(&a.str_or("transport", "unix"))?;
+    let compression = Compression::parse(&a.str_or("compress", "none"))?;
+
     let build_backend = || -> Result<Box<dyn Backend>> {
         if shards > 1 {
             Ok(Box::new(ShardedBackend::host(shards)))
@@ -530,11 +651,45 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         return Ok(());
     }
 
+    // distributed: the chief ships a WorkerSetup (configuration only,
+    // never graph data) from which each spawned worker re-derives the
+    // identical dataset, partition, and epoch plans
+    let mut dist_stats = None;
+    let backend_box: Box<dyn Backend> = if distributed {
+        let setup = WorkerSetup {
+            preset: ds.name.clone(),
+            // same flag, different defaults: the dataset cache defaults
+            // to seed 42, the experiment seed to 0 (matches load_ds and
+            // TrainConfig above)
+            ds_seed: a.u64_or("seed", 42)?,
+            cache: a.str_or("cache", "data"),
+            cfg_seed: cfg.seed,
+            layers,
+            hidden: cfg.hidden,
+            b_max: None,
+            parts: parts_n,
+            q: match &method {
+                Method::Cluster { q } => *q,
+                _ => unreachable!("validated above"),
+            },
+            random_partition: random_algo,
+            norm: cfg.norm,
+            n_workers: workers,
+            compression,
+        };
+        let be = DistributedBackend::new(DistConfig::new(workers, transport, setup));
+        dist_stats = Some(be.stats());
+        Box::new(be)
+    } else {
+        build_backend()?
+    };
+
     let mut obs = StderrObserver;
     let mut session = Session::new(&ds)
         .method(method)
         .config(cfg)
-        .backend(build_backend()?)
+        .backend(backend_box)
+        .workers(workers)
         .prefetch(prefetch)
         .observer(&mut obs);
     if let Some(ck) = resumed {
@@ -570,6 +725,69 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         t.secs()
     );
     println!("peak memory   : {:.1} MB", out.result.peak_bytes as f64 / 1e6);
+    if let Some(stats) = &dist_stats {
+        use std::sync::atomic::Ordering::Relaxed;
+        let epochs_run = out.result.curve.last().map(|c| c.epoch).unwrap_or(0);
+        let peak_rss = crate::util::memstat::peak_rss_bytes();
+        println!(
+            "distributed   : {workers} workers over {} ({} dist steps, {} retries, {} reconnects, {} respawns)",
+            transport.label(),
+            stats.steps.load(Relaxed),
+            stats.retries.load(Relaxed),
+            stats.reconnects.load(Relaxed),
+            stats.respawns.load(Relaxed),
+        );
+        println!(
+            "wire          : {:.1} MB tx / {:.1} MB rx (grads {}: {:.2}x compression)",
+            stats.bytes_tx.load(Relaxed) as f64 / 1e6,
+            stats.bytes_rx.load(Relaxed) as f64 / 1e6,
+            compression.label(),
+            stats.compression_ratio(),
+        );
+        println!("peak RSS      : {:.1} MB (chief only)", peak_rss as f64 / 1e6);
+        let json = Json::obj(vec![
+            ("kind", Json::str("distributed")),
+            ("preset", Json::str(&ds.name)),
+            ("workers", Json::num(workers as f64)),
+            ("transport", Json::str(transport.label())),
+            ("compress", Json::str(&compression.label())),
+            ("epochs", Json::num(epochs_run as f64)),
+            ("steps", Json::num(out.result.steps as f64)),
+            ("dist_steps", Json::num(stats.steps.load(Relaxed) as f64)),
+            ("train_secs", Json::num(out.result.train_seconds)),
+            (
+                "epoch_secs",
+                Json::num(out.result.train_seconds / epochs_run.max(1) as f64),
+            ),
+            ("bytes_tx", Json::num(stats.bytes_tx.load(Relaxed) as f64)),
+            ("bytes_rx", Json::num(stats.bytes_rx.load(Relaxed) as f64)),
+            (
+                "grad_raw_bytes",
+                Json::num(stats.raw_grad_bytes.load(Relaxed) as f64),
+            ),
+            (
+                "grad_wire_bytes",
+                Json::num(stats.wire_grad_bytes.load(Relaxed) as f64),
+            ),
+            ("compression_ratio", Json::num(stats.compression_ratio())),
+            ("retries", Json::num(stats.retries.load(Relaxed) as f64)),
+            ("reconnects", Json::num(stats.reconnects.load(Relaxed) as f64)),
+            ("respawns", Json::num(stats.respawns.load(Relaxed) as f64)),
+            (
+                "final_loss",
+                Json::num(
+                    out.result.curve.last().map(|c| c.train_loss).unwrap_or(f64::NAN),
+                ),
+            ),
+            ("peak_rss_bytes", Json::num(peak_rss as f64)),
+        ]);
+        let out_path = "bench_results/BENCH_distributed.json";
+        if let Some(dir) = std::path::Path::new(out_path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(out_path, json.to_string())?;
+        println!("report        : {out_path}");
+    }
     println!("curve (epoch, train_s, loss, val_f1):");
     for pt in &out.result.curve {
         println!(
@@ -651,7 +869,9 @@ fn ooc_setup(a: &Args, p: &crate::datagen::Preset, layers: usize) -> Result<OocR
 /// the clustered eval over the training partitions (a full-graph exact
 /// eval would require residency).
 fn cmd_train_disk(a: &Args) -> Result<()> {
-    for unsupported in ["guard", "shards", "resume", "eval", "eval-parts", "failpoints"] {
+    for unsupported in
+        ["guard", "shards", "resume", "eval", "eval-parts", "failpoints", "workers", "transport", "compress"]
+    {
         if a.get(unsupported).is_some() {
             bail!("--{unsupported} is not supported with --storage disk");
         }
@@ -744,14 +964,7 @@ fn cmd_train_disk(a: &Args) -> Result<()> {
 /// out-of-core on the host backend, and writes peak RSS + phase
 /// timings to a benchmark JSON.
 fn cmd_table8(argv: &[String]) -> Result<()> {
-    let a = Args::parse(
-        argv,
-        &[
-            "preset", "seed", "cache", "storage", "chunk-rows", "parts", "q",
-            "group-cap", "layers", "hidden", "epochs", "eval-every", "lr",
-            "norm", "out",
-        ],
-    )?;
+    let a = parse_cmd("table8", argv)?;
     match a.str_or("storage", "disk").as_str() {
         "disk" => {}
         "ram" => bail!("table8 is the out-of-core benchmark; use `train` for RAM runs"),
@@ -845,13 +1058,7 @@ fn cmd_table8(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_eval(argv: &[String]) -> Result<()> {
-    let a = Args::parse(
-        argv,
-        &[
-            "preset", "seed", "cache", "checkpoint", "norm", "split",
-            "storage", "chunk-rows",
-        ],
-    )?;
+    let a = parse_cmd("eval", argv)?;
     let ds = load_ds_storage(&a)?;
     let ckpt = a
         .get("checkpoint")
@@ -880,16 +1087,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 /// concurrent clients, and write p50/p99 latency, QPS, and cache
 /// hit-rate to a benchmark JSON.
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let a = Args::parse(
-        argv,
-        &[
-            "preset", "seed", "cache", "layers", "hidden", "parts", "algo",
-            "norm", "checkpoint", "queries", "batch", "mix", "hot-frac",
-            "hot-weight", "cross", "clients", "mode", "out", "no-warm",
-            "queue", "shed", "deadline-ms", "degrade-after", "failpoints",
-            "fail-seed", "storage", "chunk-rows",
-        ],
-    )?;
+    let a = parse_cmd("serve", argv)?;
     install_failpoints(&a)?;
     let ds = load_ds_storage(&a)?;
     let seed = a.u64_or("seed", 0)?;
@@ -1061,7 +1259,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_inspect(argv: &[String]) -> Result<()> {
-    let a = Args::parse(argv, &["artifacts"])?;
+    let a = parse_cmd("inspect", argv)?;
     let dir = a.str_or("artifacts", "artifacts");
     let reg = crate::runtime::Registry::load(std::path::Path::new(&dir))?;
     println!(
@@ -1117,7 +1315,8 @@ mod tests {
             "--guard", "--guard-retries", "--lr-backoff", "--keep",
             "--failpoints", "--fail-seed", "--queue", "--shed",
             "--deadline-ms", "--degrade-after", "--storage ram|disk",
-            "--chunk-rows", "--group-cap",
+            "--chunk-rows", "--group-cap", "--workers",
+            "--transport unix|tcp", "--compress none|topk:F|q8",
         ] {
             assert!(USAGE.contains(flag), "usage.txt missing flag {flag}");
         }
@@ -1126,6 +1325,74 @@ mod tests {
         }
         for p in crate::datagen::PRESETS {
             assert!(USAGE.contains(p.name), "usage.txt missing preset {}", p.name);
+        }
+    }
+
+    /// Every `--flag` in the USAGE synopsis of each subcommand must be
+    /// accepted by that subcommand's parser whitelist, and every
+    /// whitelisted key must appear in its synopsis — both directions,
+    /// so `usage.txt` and [`COMMANDS`] cannot drift apart.
+    #[test]
+    fn usage_flags_match_command_whitelists() {
+        // Parse only the synopsis block: from "USAGE:" to the first
+        // blank line that ends it.  A line starting a new command
+        // switches the accumulator; continuation lines attach to the
+        // current command.
+        let body = USAGE
+            .split_once("USAGE:")
+            .expect("usage.txt has a USAGE: section")
+            .1;
+        let mut per_cmd: std::collections::HashMap<&str, std::collections::BTreeSet<String>> =
+            std::collections::HashMap::new();
+        let mut current: Option<&str> = None;
+        for line in body.lines() {
+            if line.trim().is_empty() && current.is_some() {
+                break; // end of the synopsis block
+            }
+            if let Some(rest) = line.trim_start().strip_prefix("cluster-gcn ") {
+                let name = rest.split_whitespace().next().unwrap_or("");
+                let known = COMMANDS.iter().find(|c| c.name == name);
+                current = known.map(|c| c.name);
+                assert!(
+                    current.is_some(),
+                    "usage.txt synopsis names unknown subcommand {name:?}"
+                );
+            }
+            let Some(cmd) = current else { continue };
+            let flags = per_cmd.entry(cmd).or_default();
+            let mut rest = line;
+            while let Some(at) = rest.find("--") {
+                rest = &rest[at + 2..];
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+                    .unwrap_or(rest.len());
+                if end > 0 {
+                    flags.insert(rest[..end].to_string());
+                }
+                rest = &rest[end..];
+            }
+        }
+        for c in COMMANDS {
+            let in_usage = per_cmd
+                .get(c.name)
+                .unwrap_or_else(|| panic!("subcommand {} missing from USAGE synopsis", c.name));
+            for key in c.keys {
+                assert!(
+                    in_usage.contains(*key),
+                    "`{} --{key}` is accepted by the parser but absent from usage.txt",
+                    c.name
+                );
+            }
+            for flag in in_usage {
+                assert!(
+                    c.keys.contains(&flag.as_str()),
+                    "usage.txt advertises `{} --{flag}` but the parser rejects it",
+                    c.name
+                );
+            }
+            for b in c.bools {
+                assert!(c.keys.contains(b), "{}: bool {b} not in keys", c.name);
+            }
         }
     }
 }

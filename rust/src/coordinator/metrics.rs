@@ -1,12 +1,42 @@
 //! Evaluation metrics: micro-F1 (the paper's accuracy metric for both
 //! the multi-class and multi-label tasks) and label entropy (Fig. 2).
+//!
+//! Logits rows with no finite entry (a NaN-poisoned forward) are
+//! scored as wrong — never as "predicted class 0" — and counted in the
+//! process-wide [`non_finite_rows`] counter so the session guard can
+//! tell a poisoned eval from a merely bad one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::graph::{Dataset, Labels, Task};
+
+/// Monotonic count of logits rows rejected because they held no finite
+/// entry (all NaN / −inf).  See [`non_finite_rows`].
+static NON_FINITE_ROWS: AtomicU64 = AtomicU64::new(0);
+
+/// Total non-finite logits rows seen by evaluation since process start
+/// (monotonic).  A caller that wants the per-eval count snapshots the
+/// value before and after — the self-healing guard layer uses the delta
+/// to distinguish a NaN-poisoned forward from a low score.
+pub fn non_finite_rows() -> u64 {
+    NON_FINITE_ROWS.load(Ordering::Relaxed)
+}
+
+/// Record one poisoned (no finite entry) logits row.  Internal to the
+/// metric implementations here and in `coordinator::storage`.
+pub(crate) fn note_non_finite_row() {
+    NON_FINITE_ROWS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Micro-F1 over the given nodes from dense logits rows.
 ///
 /// - multiclass: argmax prediction; micro-F1 == accuracy.
 /// - multilabel: sigmoid(logit) > 0.5 ⇔ logit > 0 per class.
+///
+/// A row with no finite logit scores as wrong (and increments
+/// [`non_finite_rows`]): multiclass skips it as incorrect instead of
+/// letting a saturated argmax claim class 0, multilabel predicts every
+/// class negative so each true label counts as a false negative.
 pub fn micro_f1(
     ds: &Dataset,
     nodes: &[u32],
@@ -19,7 +49,13 @@ pub fn micro_f1(
             let mut correct = 0usize;
             for (i, &v) in nodes.iter().enumerate() {
                 let row = &logits[i * classes..(i + 1) * classes];
-                let pred = argmax(row);
+                let pred = match argmax_finite(row) {
+                    Some(p) => p,
+                    None => {
+                        note_non_finite_row();
+                        continue; // counts as wrong: total is nodes.len()
+                    }
+                };
                 if ds.labels.has_label(v as usize, pred) {
                     correct += 1;
                 }
@@ -34,6 +70,11 @@ pub fn micro_f1(
             let (mut tp, mut fp, mut fnn) = (0u64, 0u64, 0u64);
             for (i, &v) in nodes.iter().enumerate() {
                 let row = &logits[i * classes..(i + 1) * classes];
+                if row.iter().all(|x| !x.is_finite()) {
+                    note_non_finite_row();
+                    // fall through: `NaN > 0.0` is false, so every class
+                    // predicts negative and true labels become fn
+                }
                 for c in 0..classes {
                     let pred = row[c] > 0.0;
                     let truth = ds.labels.has_label(v as usize, c);
@@ -55,16 +96,28 @@ pub fn micro_f1(
     }
 }
 
-pub fn argmax(row: &[f32]) -> usize {
-    let mut best = 0;
+/// Index of the largest *finite* entry, `None` when the row has none
+/// (all NaN / −inf — e.g. a poisoned forward).  Non-finite entries are
+/// skipped, so a partially poisoned row still predicts its best finite
+/// class.
+pub fn argmax_finite(row: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
     let mut bv = f32::NEG_INFINITY;
     for (i, &v) in row.iter().enumerate() {
-        if v > bv {
+        if v.is_finite() && (best.is_none() || v > bv) {
             bv = v;
-            best = i;
+            best = Some(i);
         }
     }
     best
+}
+
+/// [`argmax_finite`] with the historical index-0 fallback for rows
+/// with no finite entry.  Metric code must not use this directly — a
+/// fallback 0 silently scores a poisoned row as "predicted class 0";
+/// use [`argmax_finite`] and count the `None` rows as wrong.
+pub fn argmax(row: &[f32]) -> usize {
+    argmax_finite(row).unwrap_or(0)
 }
 
 /// Label-distribution entropy of a batch (Fig. 2); multiclass uses the
@@ -89,7 +142,7 @@ pub fn subset_accuracy(
     for (i, &v) in nodes.iter().enumerate() {
         let row = &logits[i * classes..(i + 1) * classes];
         let ok = match &ds.labels {
-            Labels::Multiclass(l) => argmax(row) == l[v as usize] as usize,
+            Labels::Multiclass(l) => argmax_finite(row) == Some(l[v as usize] as usize),
             Labels::Multilabel { .. } => (0..classes)
                 .all(|c| (row[c] > 0.0) == ds.labels.has_label(v as usize, c)),
         };
@@ -184,5 +237,66 @@ mod tests {
     fn argmax_first_max() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_skips_non_finite_entries() {
+        assert_eq!(argmax_finite(&[f32::NAN, 1.0, 0.5]), Some(1));
+        assert_eq!(argmax_finite(&[f32::NEG_INFINITY, -2.0]), Some(1));
+        assert_eq!(argmax_finite(&[f32::NAN, f32::NAN]), None);
+        assert_eq!(argmax_finite(&[f32::NEG_INFINITY; 3]), None);
+        assert_eq!(argmax_finite(&[]), None);
+    }
+
+    /// Regression: an all-NaN logits row used to argmax to index 0 and
+    /// silently score as "predicted class 0" — here node0's true label
+    /// *is* 0, so the poisoned eval looked perfect.  It must score as
+    /// wrong and tick the poisoned-row counter.
+    #[test]
+    fn multiclass_nan_row_scores_wrong() {
+        let ds = ds_multiclass();
+        let before = non_finite_rows();
+        let logits = vec![
+            f32::NAN, f32::NAN, f32::NAN, // node0 poisoned (label 0)
+            0.0, 5.0, 0.0, //                node1 -> 1 (right)
+            0.0, 0.0, 9.0, //                node2 -> 2 (right)
+        ];
+        let f1 = micro_f1(&ds, &[0, 1, 2], &logits, 3);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12, "f1={f1}");
+        assert!(non_finite_rows() >= before + 1);
+        // subset accuracy must not credit the poisoned row either
+        let sa = subset_accuracy(&ds, &[0, 1, 2], &logits, 3);
+        assert!((sa - 2.0 / 3.0).abs() < 1e-12, "sa={sa}");
+    }
+
+    /// Same class of bug with −inf saturation instead of NaN.
+    #[test]
+    fn multiclass_neg_inf_row_scores_wrong() {
+        let ds = ds_multiclass();
+        let before = non_finite_rows();
+        let logits = vec![
+            f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, // node0
+            0.0, 5.0, 0.0, //                                           node1
+            0.0, 0.0, 9.0, //                                           node2
+        ];
+        let f1 = micro_f1(&ds, &[0, 1, 2], &logits, 3);
+        assert!((f1 - 2.0 / 3.0).abs() < 1e-12, "f1={f1}");
+        assert!(non_finite_rows() >= before + 1);
+    }
+
+    /// Multilabel: a poisoned row predicts every class negative, so its
+    /// true labels count as false negatives — and the counter ticks.
+    #[test]
+    fn multilabel_nan_row_counts_labels_as_missed() {
+        let ds = ds_multilabel();
+        let before = non_finite_rows();
+        let logits = vec![
+            f32::NAN, f32::NAN, f32::NAN, // node0 poisoned (labels {0,1})
+            -1.0, -1.0, 1.0, //              node1 exact ({2})
+        ];
+        let f1 = micro_f1(&ds, &[0, 1], &logits, 3);
+        // tp=1 fp=0 fn=2 -> 2/(2+0+2) = 0.5
+        assert!((f1 - 0.5).abs() < 1e-12, "f1={f1}");
+        assert!(non_finite_rows() >= before + 1);
     }
 }

@@ -94,6 +94,23 @@ pub trait BatchSource: Send {
         true
     }
 
+    /// The epoch most recently started via [`BatchSource::begin_epoch`]
+    /// (0 before the first epoch).  The distributed backend stamps this
+    /// into its step requests so workers replay the same epoch plan.
+    fn epoch(&self) -> usize {
+        0
+    }
+
+    /// Which distributed worker owns batch `i` of the current epoch
+    /// plan (always 0 for sources without per-worker ownership).  A
+    /// source built with `n_workers > 1` interleaves per-worker plans
+    /// round-robin and the distributed backend routes batch `i` to
+    /// worker `owner_of(i)`, which assembles it from its own clusters.
+    fn owner_of(&self, i: usize) -> usize {
+        let _ = i;
+        0
+    }
+
     /// Assemble batch `i` of the current epoch into `into` (a buffer
     /// from [`BatchSource::new_batch`], reused across steps).
     fn assemble(&mut self, i: usize, into: &mut Batch);
@@ -102,16 +119,38 @@ pub trait BatchSource: Send {
     fn stats(&self) -> SourceStats;
 }
 
+/// Epoch-plan RNG salt of the Cluster-GCN source.  Worker `w`'s
+/// sub-plan mixes `w` into the salt ([`worker_salt`]) so the per-worker
+/// shuffles are independent streams; worker 0's salt is exactly this
+/// constant, which keeps the single-worker plan bit-identical to the
+/// pre-distributed stream.
+const CLUSTER_PLAN_SALT: u64 = 0x5A5A_0000_1111_2222;
+
+/// Plan salt for distributed worker `w` (see [`CLUSTER_PLAN_SALT`]).
+fn worker_salt(w: usize) -> u64 {
+    CLUSTER_PLAN_SALT ^ (w as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
 /// Cluster-GCN's source (Algorithm 1 line 3): per epoch, a shuffled
 /// without-replacement plan of q-cluster batches from the
 /// [`ClusterSampler`]; per batch, the concatenated cluster union
 /// assembled with between-cluster links restored and renormalized.
+///
+/// With [`ClusterSource::new_distributed`] the source carries one
+/// sub-sampler per distributed worker (cluster `c` is owned by worker
+/// `c % n_workers`) and the epoch plan interleaves the per-worker
+/// plans round-robin; every process of a distributed run derives the
+/// identical plan from `(seed, epoch)`, and each batch records which
+/// worker must assemble it ([`BatchSource::owner_of`]).
 pub struct ClusterSource<'a> {
     ds: &'a Dataset,
-    sampler: ClusterSampler,
+    /// One sampler per worker; a non-distributed source has exactly one.
+    samplers: Vec<ClusterSampler>,
     assembler: BatchAssembler,
     seed: u64,
-    plan: Vec<Vec<u32>>,
+    /// `(owner worker, cluster ids local to that worker's sampler)`.
+    plan: Vec<(u32, Vec<u32>)>,
+    epoch: usize,
     nodes: Vec<u32>,
     within_edges: u64,
     batch_nodes: u64,
@@ -128,24 +167,81 @@ impl<'a> ClusterSource<'a> {
         norm: NormConfig,
         seed: u64,
     ) -> Result<ClusterSource<'a>> {
-        if sampler.max_batch_nodes() > spec.b_max {
+        Self::from_samplers(ds, vec![sampler], spec, norm, seed)
+    }
+
+    /// Distributed variant: split the sampler's clusters by ownership
+    /// (`cluster c -> worker c % n_workers`) into one sub-sampler per
+    /// worker.  Each worker keeps the global `q` clamped to its owned
+    /// cluster count; `n_workers = 1` is exactly [`ClusterSource::new`].
+    pub fn new_distributed(
+        ds: &'a Dataset,
+        sampler: ClusterSampler,
+        spec: &ModelSpec,
+        norm: NormConfig,
+        seed: u64,
+        n_workers: usize,
+    ) -> Result<ClusterSource<'a>> {
+        if n_workers <= 1 {
+            return Self::new(ds, sampler, spec, norm, seed);
+        }
+        if n_workers > sampler.clusters.len() {
             return Err(anyhow!(
-                "sampler can produce {} nodes but the model has b_max={}",
-                sampler.max_batch_nodes(),
-                spec.b_max
+                "{} workers but only {} clusters; every worker must own \
+                 at least one cluster (lower --workers or raise --parts)",
+                n_workers,
+                sampler.clusters.len()
             ));
+        }
+        let q = sampler.q;
+        let mut owned: Vec<Vec<Vec<u32>>> = (0..n_workers).map(|_| Vec::new()).collect();
+        for (c, nodes) in sampler.clusters.into_iter().enumerate() {
+            owned[c % n_workers].push(nodes);
+        }
+        let samplers = owned
+            .into_iter()
+            .map(|clusters| {
+                let qw = q.min(clusters.len());
+                ClusterSampler::new(clusters, qw)
+            })
+            .collect();
+        Self::from_samplers(ds, samplers, spec, norm, seed)
+    }
+
+    fn from_samplers(
+        ds: &'a Dataset,
+        samplers: Vec<ClusterSampler>,
+        spec: &ModelSpec,
+        norm: NormConfig,
+        seed: u64,
+    ) -> Result<ClusterSource<'a>> {
+        for s in &samplers {
+            if s.max_batch_nodes() > spec.b_max {
+                return Err(anyhow!(
+                    "sampler can produce {} nodes but the model has b_max={}",
+                    s.max_batch_nodes(),
+                    spec.b_max
+                ));
+            }
         }
         Ok(ClusterSource {
             ds,
-            sampler,
+            samplers,
             assembler: BatchAssembler::new(ds.n(), spec.b_max, norm),
             seed,
             plan: Vec::new(),
+            epoch: 0,
             nodes: Vec::new(),
             within_edges: 0,
             batch_nodes: 0,
             max_batch_bytes: 0,
         })
+    }
+
+    /// Number of distributed workers this source plans for (1 when not
+    /// distributed).
+    pub fn n_workers(&self) -> usize {
+        self.samplers.len()
     }
 }
 
@@ -155,8 +251,33 @@ impl BatchSource for ClusterSource<'_> {
     }
 
     fn begin_epoch(&mut self, epoch: usize) -> usize {
-        let mut rng = epoch_rng(self.seed, 0x5A5A_0000_1111_2222, epoch);
-        self.plan = self.sampler.epoch_plan(&mut rng);
+        self.epoch = epoch;
+        self.plan.clear();
+        if self.samplers.len() == 1 {
+            let mut rng = epoch_rng(self.seed, CLUSTER_PLAN_SALT, epoch);
+            self.plan
+                .extend(self.samplers[0].epoch_plan(&mut rng).into_iter().map(|g| (0, g)));
+        } else {
+            // per-worker plans from independent streams, interleaved
+            // round-robin so one step's W batches hit W distinct workers
+            let plans: Vec<Vec<Vec<u32>>> = self
+                .samplers
+                .iter()
+                .enumerate()
+                .map(|(w, s)| {
+                    let mut rng = epoch_rng(self.seed, worker_salt(w), epoch);
+                    s.epoch_plan(&mut rng)
+                })
+                .collect();
+            let rounds = plans.iter().map(Vec::len).max().unwrap_or(0);
+            for r in 0..rounds {
+                for (w, p) in plans.iter().enumerate() {
+                    if let Some(g) = p.get(r) {
+                        self.plan.push((w as u32, g.clone()));
+                    }
+                }
+            }
+        }
         self.plan.len()
     }
 
@@ -164,8 +285,17 @@ impl BatchSource for ClusterSource<'_> {
         self.plan.len()
     }
 
+    fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    fn owner_of(&self, i: usize) -> usize {
+        self.plan[i].0 as usize
+    }
+
     fn assemble(&mut self, i: usize, into: &mut Batch) {
-        self.sampler.batch_nodes(&self.plan[i], &mut self.nodes);
+        let (w, group) = &self.plan[i];
+        self.samplers[*w as usize].batch_nodes(group, &mut self.nodes);
         self.assembler.assemble_into(self.ds, &self.nodes, into);
         if into.n_train > 0 {
             self.within_edges += into.within_edges as u64;
@@ -229,6 +359,85 @@ mod tests {
             assert_eq!(ba.nodes, bb.nodes, "batch {i}");
             assert_eq!(ba.a.data, bb.a.data, "batch {i}");
         }
+    }
+
+    /// `new_distributed(n_workers = 1)` must be the plain source: same
+    /// plan stream, same batches — this underwrites the workers=1
+    /// bit-parity contract of the distributed backend.
+    #[test]
+    fn single_worker_distributed_plan_matches_plain() {
+        let (ds, spec) = source(5);
+        let mut rng = Rng::new(11);
+        let part = RandomPartitioner.partition(&ds.graph, 8, &mut rng);
+        let sampler = ClusterSampler::new(parts_to_clusters(&part, 8), 2);
+        let mut plain =
+            ClusterSource::new(&ds, sampler.clone(), &spec, NormConfig::PAPER_DEFAULT, 7).unwrap();
+        let mut dist =
+            ClusterSource::new_distributed(&ds, sampler, &spec, NormConfig::PAPER_DEFAULT, 7, 1)
+                .unwrap();
+        for epoch in 1..=3 {
+            assert_eq!(plain.begin_epoch(epoch), dist.begin_epoch(epoch));
+            assert_eq!(plain.plan, dist.plan, "epoch {epoch}");
+            assert_eq!(dist.epoch(), epoch);
+        }
+    }
+
+    /// Distributed plans interleave worker sub-plans round-robin, every
+    /// batch is assembled from its owner's clusters only, and ownership
+    /// respects `c % n_workers`.
+    #[test]
+    fn distributed_plan_interleaves_owners() {
+        let (ds, spec) = source(5);
+        let mut rng = Rng::new(11);
+        let parts = 9;
+        let part = RandomPartitioner.partition(&ds.graph, parts, &mut rng);
+        let clusters = parts_to_clusters(&part, parts);
+        let sampler = ClusterSampler::new(clusters.clone(), 2);
+        let mut src = ClusterSource::new_distributed(
+            &ds,
+            sampler,
+            &spec,
+            NormConfig::PAPER_DEFAULT,
+            7,
+            3,
+        )
+        .unwrap();
+        assert_eq!(src.n_workers(), 3);
+        let n = src.begin_epoch(1);
+        assert!(n >= 3, "n={n}");
+        // round-robin: the first three batches hit three distinct workers
+        assert_eq!(
+            (0..3).map(|i| src.owner_of(i)).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        // each batch's nodes come only from clusters owned by its worker
+        // (worker w owns global clusters c with c % 3 == w)
+        let mut batch = src.new_batch();
+        for i in 0..n {
+            let w = src.owner_of(i);
+            src.assemble(i, &mut batch);
+            for v in &batch.nodes {
+                let c = clusters.iter().position(|cl| cl.contains(v)).unwrap();
+                assert_eq!(c % 3, w, "batch {i} node {v} from cluster {c}");
+            }
+        }
+    }
+
+    /// More workers than clusters cannot give every worker a cluster.
+    #[test]
+    fn too_many_workers_rejected() {
+        let (ds, spec) = source(5);
+        let clusters: Vec<Vec<u32>> = (0..4).map(|c| vec![c as u32]).collect();
+        let sampler = ClusterSampler::new(clusters, 1);
+        let e = ClusterSource::new_distributed(
+            &ds,
+            sampler,
+            &spec,
+            NormConfig::PAPER_DEFAULT,
+            0,
+            5,
+        );
+        assert!(e.is_err());
     }
 
     #[test]

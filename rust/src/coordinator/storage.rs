@@ -31,7 +31,6 @@
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batch::{Batch, BatchAssembler};
-use crate::coordinator::metrics::argmax;
 use crate::coordinator::sampler::ClusterSampler;
 use crate::coordinator::schedule::EarlyStopper;
 use crate::coordinator::source::{epoch_rng, BatchSource, SourceStats};
@@ -143,8 +142,11 @@ impl F1Counts {
         match self {
             F1Counts::Multiclass { correct, total } => {
                 *total += 1;
-                if store.has_label(v, argmax(row)) {
-                    *correct += 1;
+                match crate::coordinator::metrics::argmax_finite(row) {
+                    Some(p) if store.has_label(v, p) => *correct += 1,
+                    Some(_) => {}
+                    // poisoned row: wrong, and visible to the guard layer
+                    None => crate::coordinator::metrics::note_non_finite_row(),
                 }
             }
             F1Counts::Multilabel { tp, fp, fnn } => {

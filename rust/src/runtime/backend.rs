@@ -288,6 +288,17 @@ pub trait Backend {
     /// from the previous epoch's plan); plain backends ignore it.
     fn epoch_begin(&mut self) {}
 
+    /// Whether a lookahead wrapper ([`super::PrefetchBackend`]) may
+    /// drive this backend through [`Backend::train_step`] with batches
+    /// it assembled itself.  `false` for backends that must pull
+    /// batches through their own [`Backend::step_from`] — the
+    /// distributed backend's workers assemble their own clusters'
+    /// batches from worker-local data, so a wrapper handing it
+    /// chief-assembled batches would silently bypass distribution.
+    fn prefetchable(&self) -> bool {
+        true
+    }
+
     /// Execute one optimization step by pulling batches starting at
     /// index `first` from `source` (see the [`BatchSource`] call
     /// contract).  `scratch` is a driver-owned reusable buffer shaped
@@ -397,6 +408,9 @@ impl<B: Backend + ?Sized> Backend for &mut B {
     fn epoch_begin(&mut self) {
         (**self).epoch_begin()
     }
+    fn prefetchable(&self) -> bool {
+        (**self).prefetchable()
+    }
     fn step_from(
         &mut self,
         model: &str,
@@ -471,6 +485,9 @@ impl<B: Backend + ?Sized> Backend for Box<B> {
     }
     fn epoch_begin(&mut self) {
         (**self).epoch_begin()
+    }
+    fn prefetchable(&self) -> bool {
+        (**self).prefetchable()
     }
     fn step_from(
         &mut self,

@@ -1,0 +1,1198 @@
+//! [`DistributedBackend`]: cross-process data-parallel training.  The
+//! chief process spawns `N` worker processes, places each worker over
+//! its own share of the graph clusters (cluster `c` belongs to worker
+//! `c % N` — partition-aligned data placement, so a worker only ever
+//! assembles batches from clusters it owns), and runs a chief
+//! all-reduce per optimization step over a byte protocol on UNIX or
+//! TCP sockets ([`wire`]):
+//!
+//! ```text
+//!   step_from(first):                (one request per plan entry)
+//!     chief ── Step{epoch, i, weights} ──► worker owner(i) ─ Grads ─┐
+//!     chief ── Step{epoch, i+1, ...}  ──► worker owner(i+1) ─ Grads ┼─ avg ─► chief Adam
+//!     chief ── Step{epoch, i+k-1,...} ──► worker owner(...) ─ Grads ┘
+//! ```
+//!
+//! Workers are stateless request servers: every `Step` carries the
+//! full weights, every reply the batch loss + per-layer gradients
+//! (optionally top-k sparsified or 8-bit quantized,
+//! [`wire::Compression`]).  That statelessness is what makes the fault
+//! story simple — an exchange is idempotent (`(epoch, index, weights)`
+//! deterministically produces the same gradient bits), so any socket
+//! fault (dropped frame, torn frame, stalled read; injectable via the
+//! `dist.*` failpoints) is handled by dropping the connection,
+//! re-accepting the worker's reconnect (respawning the process if it
+//! died), and re-running the exchange with bounded backoff — the same
+//! retry discipline as the PR-8 self-healing layer, at the transport
+//! level.  A recovered run replays the exact trajectory of an
+//! unfaulted one.
+//!
+//! Parity contract (mirrors [`super::ShardedBackend`], pinned by
+//! `tests/distributed.rs` and gated in ci.sh): `workers = 1` is
+//! **bit-identical** to [`HostBackend`] — same loss bits, same weight
+//! bits — because the single worker derives the identical epoch plan
+//! (`ClusterSource::new_distributed` with one worker *is* the plain
+//! source), assembles the identical batches, computes gradients with
+//! the same kernels, ships them raw, and the chief applies the same
+//! single-replica Adam step.  `workers = N` grows the per-step batch
+//! N-fold and is loss-curve equivalent, not bitwise.
+//!
+//! Every process derives partition, plan, and shapes from the same
+//! `(preset, seed, parts, q)` via [`crate::session::Session`] — the
+//! `Setup` frame carries configuration, never graph data.
+#![deny(missing_docs)]
+
+pub mod wire;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::batch::Batch;
+use crate::coordinator::source::BatchSource;
+use crate::coordinator::trainer::TrainState;
+use crate::norm::{DiagEnhance, NormConfig, NormKind};
+use crate::runtime::backend::{Backend, ModelSpec, StepOutcome, VrgcnBatch};
+use crate::runtime::exec::Tensor;
+use crate::runtime::host::HostBackend;
+use crate::util::failpoint;
+use crate::util::simd::axpy;
+use wire::{Frame, Kind, PayloadReader, PayloadWriter, FLAG_EMPTY, PROTO_VERSION};
+
+pub use wire::Compression;
+
+/// Socket family the chief listens on and workers dial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// `AF_UNIX` stream socket in the temp dir (default; lowest latency).
+    Unix,
+    /// TCP on `127.0.0.1` (an ephemeral port); the cross-host shape.
+    Tcp,
+}
+
+impl Transport {
+    /// Parse the CLI surface (`unix` | `tcp`).
+    pub fn parse(s: &str) -> Result<Transport> {
+        match s {
+            "unix" => Ok(Transport::Unix),
+            "tcp" => Ok(Transport::Tcp),
+            other => bail!("unknown transport {other:?} (expected unix | tcp)"),
+        }
+    }
+
+    /// Short label for logs and env plumbing.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Transport::Unix => "unix",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transport plumbing
+// ---------------------------------------------------------------------
+
+/// A connected chief↔worker byte stream.
+enum Stream {
+    /// UNIX domain stream.
+    Unix(UnixStream),
+    /// Localhost TCP stream (`TCP_NODELAY` set).
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn connect(transport: Transport, addr: &str) -> Result<Stream> {
+        Ok(match transport {
+            Transport::Unix => Stream::Unix(UnixStream::connect(addr)?),
+            Transport::Tcp => {
+                let s = TcpStream::connect(addr)?;
+                s.set_nodelay(true)?;
+                Stream::Tcp(s)
+            }
+        })
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d)?,
+            Stream::Tcp(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// The chief's accept socket; UNIX sockets clean their path up on drop.
+enum Listener {
+    /// UNIX listener plus the socket path to unlink.
+    Unix(UnixListener, PathBuf),
+    /// Localhost TCP listener on an ephemeral port.
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn bind(transport: Transport) -> Result<Listener> {
+        match transport {
+            Transport::Unix => {
+                static SEQ: AtomicU64 = AtomicU64::new(0);
+                let path = std::env::temp_dir().join(format!(
+                    "cgcn-dist-{}-{}.sock",
+                    std::process::id(),
+                    SEQ.fetch_add(1, Ordering::Relaxed)
+                ));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .with_context(|| format!("bind {}", path.display()))?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Unix(l, path))
+            }
+            Transport::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0")?;
+                l.set_nonblocking(true)?;
+                Ok(Listener::Tcp(l))
+            }
+        }
+    }
+
+    /// The address workers dial (socket path, or `127.0.0.1:port`).
+    fn addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Unix(_, path) => path.display().to_string(),
+            Listener::Tcp(l) => l.local_addr()?.to_string(),
+        })
+    }
+
+    /// Accept one connection, polling until `deadline`; `Ok(None)` on
+    /// timeout (the listener is non-blocking so a dead worker cannot
+    /// hang the chief forever).
+    fn accept_by(&self, deadline: Instant) -> Result<Option<Stream>> {
+        loop {
+            let r = match self {
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+                Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                    let _ = s.set_nodelay(true);
+                    Stream::Tcp(s)
+                }),
+            };
+            match r {
+                Ok(s) => return Ok(Some(s)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run setup shipped to workers
+// ---------------------------------------------------------------------
+
+/// Everything a worker process needs to rebuild the chief's exact view
+/// of the run — configuration only, never graph data: the worker
+/// re-derives dataset, partition, plan, and spec through the same
+/// [`crate::session::Session`] code path the chief used.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSetup {
+    /// Dataset preset name (`cora_like`, ...).
+    pub preset: String,
+    /// Dataset generation seed.
+    pub ds_seed: u64,
+    /// Dataset cache directory (workers reuse the chief's cache).
+    pub cache: String,
+    /// Experiment seed ([`crate::session::TrainConfig::seed`]).
+    pub cfg_seed: u64,
+    /// GCN depth.
+    pub layers: usize,
+    /// Hidden width override.
+    pub hidden: Option<usize>,
+    /// Padded batch size override.
+    pub b_max: Option<usize>,
+    /// Partition count override.
+    pub parts: Option<usize>,
+    /// Clusters per batch.
+    pub q: usize,
+    /// Random instead of multilevel partitioning.
+    pub random_partition: bool,
+    /// Adjacency normalization.
+    pub norm: NormConfig,
+    /// Total distributed workers (the ownership modulus).
+    pub n_workers: usize,
+    /// Gradient uplink compression.
+    pub compression: Compression,
+}
+
+impl WorkerSetup {
+    /// Serialize for the `Setup` frame.
+    pub fn to_payload(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.put_u32(PROTO_VERSION);
+        w.put_str(&self.preset);
+        w.put_u64(self.ds_seed);
+        w.put_str(&self.cache);
+        w.put_u64(self.cfg_seed);
+        w.put_u32(self.layers as u32);
+        put_opt(&mut w, self.hidden);
+        put_opt(&mut w, self.b_max);
+        put_opt(&mut w, self.parts);
+        w.put_u32(self.q as u32);
+        w.put_u8(self.random_partition as u8);
+        w.put_u8(match self.norm.kind {
+            NormKind::Sym => 0,
+            NormKind::RowNorm => 1,
+        });
+        match self.norm.enhance {
+            DiagEnhance::None => {
+                w.put_u8(0);
+                w.put_f32(0.0);
+            }
+            DiagEnhance::AddIdentity => {
+                w.put_u8(1);
+                w.put_f32(0.0);
+            }
+            DiagEnhance::AddLambdaDiag(l) => {
+                w.put_u8(2);
+                w.put_f32(l);
+            }
+        }
+        w.put_u32(self.n_workers as u32);
+        self.compression.put(&mut w);
+        w.buf
+    }
+
+    /// Parse a `Setup` frame payload (rejects protocol mismatches).
+    pub fn from_payload(bytes: &[u8]) -> Result<WorkerSetup> {
+        let mut r = PayloadReader::new(bytes);
+        let ver = r.get_u32()?;
+        if ver != PROTO_VERSION {
+            bail!("protocol version mismatch: chief {ver}, worker {PROTO_VERSION}");
+        }
+        let preset = r.get_str()?;
+        let ds_seed = r.get_u64()?;
+        let cache = r.get_str()?;
+        let cfg_seed = r.get_u64()?;
+        let layers = r.get_u32()? as usize;
+        let hidden = get_opt(&mut r)?;
+        let b_max = get_opt(&mut r)?;
+        let parts = get_opt(&mut r)?;
+        let q = r.get_u32()? as usize;
+        let random_partition = r.get_u8()? != 0;
+        let kind = match r.get_u8()? {
+            0 => NormKind::Sym,
+            1 => NormKind::RowNorm,
+            k => bail!("unknown norm kind tag {k}"),
+        };
+        let etag = r.get_u8()?;
+        let lambda = r.get_f32()?;
+        let enhance = match etag {
+            0 => DiagEnhance::None,
+            1 => DiagEnhance::AddIdentity,
+            2 => DiagEnhance::AddLambdaDiag(lambda),
+            k => bail!("unknown diag-enhance tag {k}"),
+        };
+        let n_workers = r.get_u32()? as usize;
+        let compression = Compression::get(&mut r)?;
+        if !r.done() {
+            bail!("trailing bytes in setup payload");
+        }
+        Ok(WorkerSetup {
+            preset,
+            ds_seed,
+            cache,
+            cfg_seed,
+            layers,
+            hidden,
+            b_max,
+            parts,
+            q,
+            random_partition,
+            norm: NormConfig { kind, enhance },
+            n_workers,
+            compression,
+        })
+    }
+
+    /// Rebuild the session this setup describes over a worker-local
+    /// dataset (same derivation code as the chief's driver).
+    fn session<'a>(&self, ds: &'a crate::graph::Dataset) -> crate::session::Session<'a> {
+        let cfg = crate::session::TrainConfig {
+            layers: self.layers,
+            hidden: self.hidden,
+            b_max: self.b_max,
+            seed: self.cfg_seed,
+            norm: self.norm,
+            ..crate::session::TrainConfig::default()
+        };
+        let mut s = crate::session::Session::new(ds)
+            .method(crate::session::Method::Cluster { q: self.q })
+            .config(cfg)
+            .workers(self.n_workers);
+        if let Some(p) = self.parts {
+            s = s.partition(p);
+        }
+        if self.random_partition {
+            s = s.partition_random();
+        }
+        s
+    }
+}
+
+fn put_opt(w: &mut PayloadWriter, v: Option<usize>) {
+    match v {
+        Some(x) => {
+            w.put_u8(1);
+            w.put_u64(x as u64);
+        }
+        None => {
+            w.put_u8(0);
+            w.put_u64(0);
+        }
+    }
+}
+
+fn get_opt(r: &mut PayloadReader) -> Result<Option<usize>> {
+    let present = r.get_u8()? != 0;
+    let v = r.get_u64()? as usize;
+    Ok(present.then_some(v))
+}
+
+// ---------------------------------------------------------------------
+// Chief-side configuration + stats
+// ---------------------------------------------------------------------
+
+/// Configuration of a [`DistributedBackend`].
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Worker process count (the plan's ownership modulus).
+    pub workers: usize,
+    /// Socket family.
+    pub transport: Transport,
+    /// What workers rebuild the run from.
+    pub setup: WorkerSetup,
+    /// Override the worker command (defaults to
+    /// `current_exe __worker`); integration tests point this at their
+    /// own test binary's worker hook.
+    pub worker_cmd: Option<(PathBuf, Vec<String>)>,
+    /// Exchange retries per step before the step errors.
+    pub max_retries: usize,
+    /// Base backoff between retries (doubled per attempt).
+    pub backoff: Duration,
+    /// Chief-side read timeout per response (a hung worker becomes a
+    /// retriable fault instead of a hang).
+    pub read_timeout: Duration,
+    /// How long to wait for a worker (re)connect.
+    pub accept_timeout: Duration,
+}
+
+impl DistConfig {
+    /// Config with the retry/backoff defaults (4 retries, 25 ms base
+    /// backoff, 120 s read timeout, 60 s accept timeout).
+    pub fn new(workers: usize, transport: Transport, setup: WorkerSetup) -> DistConfig {
+        assert!(workers >= 1, "a distributed backend needs at least one worker");
+        DistConfig {
+            workers,
+            transport,
+            setup,
+            worker_cmd: None,
+            max_retries: 4,
+            backoff: Duration::from_millis(25),
+            read_timeout: Duration::from_secs(120),
+            accept_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Shared transport counters, readable after the run through the
+/// `Arc` handed out by [`DistributedBackend::stats`] (the backend
+/// itself disappears behind `Box<dyn Backend>` in the session).
+#[derive(Debug, Default)]
+pub struct DistStats {
+    /// Bytes written to workers (requests).
+    pub bytes_tx: AtomicU64,
+    /// Bytes read from workers (responses).
+    pub bytes_rx: AtomicU64,
+    /// Dense `f32` bytes the received gradients represent.
+    pub raw_grad_bytes: AtomicU64,
+    /// Gradient payload bytes actually on the wire.
+    pub wire_grad_bytes: AtomicU64,
+    /// Exchanges re-run after a fault.
+    pub retries: AtomicU64,
+    /// Connections re-established.
+    pub reconnects: AtomicU64,
+    /// Worker processes respawned after dying.
+    pub respawns: AtomicU64,
+    /// Optimization steps completed.
+    pub steps: AtomicU64,
+}
+
+impl DistStats {
+    /// Uplink compression ratio: dense gradient bytes over wire
+    /// gradient bytes (1.0 when nothing was exchanged yet).
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.raw_grad_bytes.load(Ordering::Relaxed);
+        let wire = self.wire_grad_bytes.load(Ordering::Relaxed);
+        if wire == 0 {
+            1.0
+        } else {
+            raw as f64 / wire as f64
+        }
+    }
+
+    fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The chief backend
+// ---------------------------------------------------------------------
+
+struct WorkerSlot {
+    child: Option<Child>,
+    conn: Option<Stream>,
+}
+
+/// Cross-process data-parallel [`Backend`]; see the module docs for the
+/// step anatomy, fault handling, and the parity contract.
+pub struct DistributedBackend {
+    chief: HostBackend,
+    cfg: DistConfig,
+    stats: Arc<DistStats>,
+    listener: Option<Listener>,
+    slots: Vec<WorkerSlot>,
+    avg: Vec<Vec<f32>>,
+}
+
+impl DistributedBackend {
+    /// Chief over `cfg.workers` spawned worker processes (spawned
+    /// lazily on the first step, so constructing the backend is cheap
+    /// and registration/eval paths never fork).
+    pub fn new(cfg: DistConfig) -> DistributedBackend {
+        let slots = (0..cfg.workers).map(|_| WorkerSlot { child: None, conn: None }).collect();
+        DistributedBackend {
+            chief: HostBackend::new(),
+            cfg,
+            stats: Arc::new(DistStats::default()),
+            listener: None,
+            slots,
+            avg: Vec::new(),
+        }
+    }
+
+    /// Shared transport counters (keep a clone before boxing the
+    /// backend into a session).
+    pub fn stats(&self) -> Arc<DistStats> {
+        Arc::clone(&self.stats)
+    }
+
+    fn worker_cmd(&self) -> Result<(PathBuf, Vec<String>)> {
+        if let Some(c) = &self.cfg.worker_cmd {
+            return Ok(c.clone());
+        }
+        Ok((std::env::current_exe()?, vec!["__worker".to_string()]))
+    }
+
+    fn spawn_worker(&mut self, id: usize) -> Result<()> {
+        let addr = self
+            .listener
+            .as_ref()
+            .expect("listener bound before spawning")
+            .addr()?;
+        let (exe, args) = self.worker_cmd()?;
+        let child = Command::new(&exe)
+            .args(&args)
+            .env("CGCN_DIST_ADDR", &addr)
+            .env("CGCN_DIST_TRANSPORT", self.cfg.transport.label())
+            .env("CGCN_DIST_ID", id.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawn worker {id} ({})", exe.display()))?;
+        self.slots[id].child = Some(child);
+        Ok(())
+    }
+
+    /// Accept one connection and route it to its slot by the worker id
+    /// in its `Hello`.  Returns the id.  Polls in short slices so a
+    /// worker process that died without connecting fails the handshake
+    /// with its exit status instead of a bare timeout.
+    fn accept_one(&mut self, deadline: Instant) -> Result<usize> {
+        let mut conn = loop {
+            self.reap_dead_children()?;
+            if Instant::now() >= deadline {
+                bail!("timed out waiting for a worker to connect");
+            }
+            let slice = (Instant::now() + Duration::from_millis(200)).min(deadline);
+            let listener = self.listener.as_ref().expect("listener bound");
+            if let Some(conn) = listener.accept_by(slice)? {
+                break conn;
+            }
+        };
+        conn.set_read_timeout(Some(self.cfg.read_timeout))?;
+        let (hello, n) = wire::read_frame(&mut conn)?;
+        DistStats::add(&self.stats.bytes_rx, n as u64);
+        if hello.kind != Kind::Hello {
+            bail!("expected Hello, got {:?}", hello.kind);
+        }
+        let mut r = PayloadReader::new(&hello.payload);
+        let id = r.get_u32()? as usize;
+        let ver = r.get_u32()?;
+        if ver != PROTO_VERSION {
+            bail!("worker {id} speaks protocol {ver}, chief speaks {PROTO_VERSION}");
+        }
+        if id >= self.slots.len() {
+            bail!("worker id {id} out of range ({} workers)", self.slots.len());
+        }
+        let tx = wire::write_frame(
+            &mut conn,
+            Kind::Setup,
+            0,
+            &self.cfg.setup.to_payload(),
+        )?;
+        DistStats::add(&self.stats.bytes_tx, tx as u64);
+        self.slots[id].conn = Some(conn);
+        Ok(id)
+    }
+
+    /// Bind, spawn every worker, and complete the Hello/Setup
+    /// handshake.  Idempotent.
+    fn ensure_started(&mut self) -> Result<()> {
+        if self.listener.is_some() {
+            return Ok(());
+        }
+        self.listener = Some(Listener::bind(self.cfg.transport)?);
+        for id in 0..self.cfg.workers {
+            self.spawn_worker(id)?;
+        }
+        let deadline = Instant::now() + self.cfg.accept_timeout;
+        while self.slots.iter().any(|s| s.conn.is_none()) {
+            self.accept_one(deadline)?;
+        }
+        Ok(())
+    }
+
+    /// Error out early when a worker process died without a connection
+    /// up (misconfigured command, crashed on startup).
+    fn reap_dead_children(&mut self) -> Result<()> {
+        for (id, slot) in self.slots.iter_mut().enumerate() {
+            if slot.conn.is_none() {
+                if let Some(child) = &mut slot.child {
+                    if let Some(status) = child.try_wait()? {
+                        bail!("worker {id} exited without connecting ({status})");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Tear down and re-create worker `id`'s connection: close the old
+    /// stream (the worker's read then fails and it dials back in),
+    /// respawn the process if it died, and re-accept — re-routing any
+    /// *other* worker that happened to reconnect in the meantime.
+    fn reestablish(&mut self, id: usize) -> Result<()> {
+        self.slots[id].conn = None;
+        DistStats::add(&self.stats.reconnects, 1);
+        let deadline = Instant::now() + self.cfg.accept_timeout;
+        loop {
+            let dead = match &mut self.slots[id].child {
+                Some(child) => child.try_wait()?.is_some(),
+                None => true,
+            };
+            if dead {
+                self.slots[id].child = None;
+                DistStats::add(&self.stats.respawns, 1);
+                self.spawn_worker(id)?;
+            }
+            match self.accept_one(deadline) {
+                Ok(got) if got == id => return Ok(()),
+                // some other worker reconnected first; it has been
+                // routed to its slot — keep waiting for ours
+                Ok(_) => {}
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    // the worker died inside the accept window — the
+                    // next pass respawns it
+                    eprintln!("distributed: worker {id} reconnect failed ({e:#}), retrying");
+                }
+            }
+        }
+    }
+
+    /// Serialize the full weight set for a `Step` request prefix.
+    fn weights_payload(state: &TrainState, epoch: u64, index: u64) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.put_u64(epoch);
+        w.put_u64(index);
+        w.put_u32(state.weights.len() as u32);
+        for t in &state.weights {
+            w.put_u32(t.data.len() as u32);
+            w.put_f32s(&t.data);
+        }
+        w.buf
+    }
+}
+
+/// One worker's reply to a `Step`: the batch loss and decoded per-layer
+/// gradients (`None` when the batch held no training node).
+type GradReply = Option<(f32, Vec<Vec<f32>>)>;
+
+/// Run one request/response exchange over an established connection.
+/// Any error (including injected faults) leaves the connection dirty;
+/// the caller must [`DistributedBackend::reestablish`] before retrying.
+fn exchange_one(
+    conn: &mut Stream,
+    payload: &[u8],
+    stats: &DistStats,
+) -> Result<GradReply> {
+    // injected fault: the request frame never makes it onto the wire
+    failpoint::check("dist.send.drop")?;
+    // injected fault: the request frame is cut mid-write; the worker's
+    // frame decode fails (EOF or CRC) and it reconnects
+    if let Err(fault) = failpoint::check("dist.send.torn") {
+        let n = wire::write_torn_frame(conn, Kind::Step, 0, payload)?;
+        DistStats::add(&stats.bytes_tx, n as u64);
+        return Err(fault.into());
+    }
+    let tx = wire::write_frame(conn, Kind::Step, 0, payload)?;
+    DistStats::add(&stats.bytes_tx, tx as u64);
+    // injected fault: a stalled response (latency, not loss)
+    failpoint::maybe_delay("dist.recv.delay", 10);
+    let (frame, rx) = wire::read_frame(conn)?;
+    DistStats::add(&stats.bytes_rx, rx as u64);
+    if frame.kind != Kind::Grads {
+        bail!("expected Grads, got {:?}", frame.kind);
+    }
+    let mut r = PayloadReader::new(&frame.payload);
+    let loss = r.get_f32()?;
+    if frame.flags & FLAG_EMPTY != 0 {
+        return Ok(None);
+    }
+    let layers = r.get_u32()? as usize;
+    let mut grads = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let mut g = Vec::new();
+        wire::decode_grad(&mut r, &mut g)?;
+        DistStats::add(&stats.raw_grad_bytes, g.len() as u64 * 4);
+        grads.push(g);
+    }
+    DistStats::add(&stats.wire_grad_bytes, frame.payload.len() as u64);
+    Ok(Some((loss, grads)))
+}
+
+impl Backend for DistributedBackend {
+    fn name(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        self.chief.model_spec(model)
+    }
+
+    fn register_model(&mut self, model: &str, spec: ModelSpec) -> bool {
+        self.chief.register_model(model, spec)
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &Batch,
+    ) -> Result<f32> {
+        // non-pull entry points (guard replays, ad-hoc steps) run on
+        // the chief's own kernels — bit-identical to a worker's by the
+        // parity contract
+        self.chief.train_step(model, state, lr, batch)
+    }
+
+    fn forward(&mut self, model: &str, weights: &[Tensor], batch: &Batch) -> Result<Tensor> {
+        self.chief.forward(model, weights, batch)
+    }
+
+    fn vrgcn_step(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        batch: &VrgcnBatch,
+    ) -> Result<(f32, Vec<Tensor>)> {
+        self.chief.vrgcn_step(model, state, lr, batch)
+    }
+
+    fn batches_per_step(&self) -> usize {
+        self.cfg.workers
+    }
+
+    fn epoch_begin(&mut self) {
+        self.chief.epoch_begin();
+    }
+
+    fn prefetchable(&self) -> bool {
+        // batches are assembled by worker processes from their own
+        // clusters; a lookahead wrapper feeding chief-assembled batches
+        // into train_step would silently bypass distribution
+        false
+    }
+
+    fn step_from(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        source: &mut dyn BatchSource,
+        first: usize,
+        _scratch: &mut Batch,
+    ) -> Result<StepOutcome> {
+        let k = self.cfg.workers.min(source.len().saturating_sub(first));
+        if k == 0 {
+            return Err(anyhow!("step_from past the end of the epoch plan"));
+        }
+        self.ensure_started()?;
+        let epoch = source.epoch() as u64;
+
+        // one deterministic reply slot per plan entry; retries only
+        // re-run the entries whose exchange faulted
+        let mut replies: Vec<Option<GradReply>> = (0..k).map(|_| None).collect();
+        let mut attempt = 0;
+        loop {
+            let pending: Vec<(usize, usize)> = (0..k)
+                .filter(|&j| replies[j].is_none())
+                .map(|j| (j, source.owner_of(first + j)))
+                .collect();
+            if pending.is_empty() {
+                break;
+            }
+            if attempt > self.cfg.max_retries {
+                bail!(
+                    "distributed step at epoch {epoch} gave up after {} retries \
+                     ({} of {k} exchanges still failing)",
+                    self.cfg.max_retries,
+                    pending.len()
+                );
+            }
+            if attempt > 0 {
+                DistStats::add(&self.stats.retries, pending.len() as u64);
+                std::thread::sleep(self.cfg.backoff * (1 << (attempt - 1).min(6)));
+                let mut owners: Vec<usize> = pending.iter().map(|&(_, o)| o).collect();
+                owners.sort_unstable();
+                owners.dedup();
+                for o in owners {
+                    self.reestablish(o)?;
+                }
+            }
+            attempt += 1;
+
+            // group pending entries by owning worker, then fan out one
+            // thread per worker connection
+            let mut jobs: Vec<Vec<usize>> = vec![Vec::new(); self.cfg.workers];
+            for &(j, o) in &pending {
+                jobs[o].push(j);
+            }
+            let payloads: Vec<Vec<u8>> = (0..k)
+                .map(|j| Self::weights_payload(state, epoch, (first + j) as u64))
+                .collect();
+            let stats: &DistStats = &self.stats;
+            let slots = &mut self.slots;
+            let outcomes: Vec<(usize, Result<GradReply>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .zip(jobs.iter())
+                    .filter(|(_, js)| !js.is_empty())
+                    .map(|(slot, js)| {
+                        let payloads = &payloads;
+                        s.spawn(move || {
+                            let conn = slot
+                                .conn
+                                .as_mut()
+                                .expect("established before exchange");
+                            let mut out = Vec::with_capacity(js.len());
+                            for &j in js {
+                                let r = exchange_one(conn, &payloads[j], stats);
+                                let failed = r.is_err();
+                                out.push((j, r));
+                                if failed {
+                                    // connection is dirty; the retry
+                                    // pass reestablishes it
+                                    break;
+                                }
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| match h.join() {
+                        Ok(v) => v,
+                        Err(p) => std::panic::resume_unwind(p),
+                    })
+                    .collect()
+            });
+            for (j, r) in outcomes {
+                match r {
+                    Ok(reply) => replies[j] = Some(reply),
+                    Err(e) => eprintln!(
+                        "distributed: exchange for batch {} faulted (attempt {attempt}): {e:#}",
+                        first + j
+                    ),
+                }
+            }
+        }
+
+        // ---- all-reduce: sum in plan order, scale once ---------------
+        let active: Vec<(f32, Vec<Vec<f32>>)> = replies
+            .into_iter()
+            .flat_map(|r| r.expect("filled by the retry loop"))
+            .collect();
+        DistStats::add(&self.stats.steps, 1);
+        if active.is_empty() {
+            return Ok(StepOutcome { loss: None, consumed: k });
+        }
+        let layers = active[0].1.len();
+        self.avg.resize(layers, Vec::new());
+        for li in 0..layers {
+            let dst = &mut self.avg[li];
+            dst.clear();
+            dst.extend_from_slice(&active[0].1[li]);
+            for (_, g) in &active[1..] {
+                axpy(dst, &g[li], 1.0);
+            }
+            if active.len() > 1 {
+                // skipped for one contributor: dst == that worker's
+                // gradient, bit for bit (the workers=1 parity contract)
+                let scale = 1.0 / active.len() as f32;
+                for v in dst.iter_mut() {
+                    *v *= scale;
+                }
+            }
+        }
+        self.chief.apply_grads(model, state, lr, &self.avg)?;
+
+        let loss_sum: f32 = active.iter().map(|(l, _)| *l).sum();
+        let loss = if active.len() > 1 {
+            loss_sum / active.len() as f32
+        } else {
+            loss_sum
+        };
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite distributed loss at step {}", state.step));
+        }
+        Ok(StepOutcome { loss: Some(loss), consumed: k })
+    }
+
+    fn grad_step(
+        &mut self,
+        model: &str,
+        weights: &[Tensor],
+        batch: &Batch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        self.chief.grad_step(model, weights, batch, grads)
+    }
+
+    fn apply_grads(
+        &mut self,
+        model: &str,
+        state: &mut TrainState,
+        lr: f32,
+        grads: &[Vec<f32>],
+    ) -> Result<()> {
+        self.chief.apply_grads(model, state, lr, grads)
+    }
+}
+
+impl Drop for DistributedBackend {
+    fn drop(&mut self) {
+        // polite shutdown, then a bounded wait, then the axe
+        for slot in &mut self.slots {
+            if let Some(conn) = &mut slot.conn {
+                let _ = wire::write_frame(conn, Kind::Shutdown, 0, &[]);
+            }
+            slot.conn = None;
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for slot in &mut self.slots {
+            if let Some(child) = &mut slot.child {
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The worker process
+// ---------------------------------------------------------------------
+
+/// Entry point of a spawned worker process (the hidden `__worker` CLI
+/// dispatch).  Reads its rendezvous from `CGCN_DIST_ADDR` /
+/// `CGCN_DIST_TRANSPORT` / `CGCN_DIST_ID`, dials the chief, rebuilds
+/// the run from the `Setup` frame, and serves gradient requests until
+/// `Shutdown` (reconnecting with bounded retries when the chief tears
+/// the connection down to recover from a fault).
+pub fn worker_main() -> Result<()> {
+    let addr = std::env::var("CGCN_DIST_ADDR").context("CGCN_DIST_ADDR not set")?;
+    let transport = Transport::parse(
+        &std::env::var("CGCN_DIST_TRANSPORT").context("CGCN_DIST_TRANSPORT not set")?,
+    )?;
+    let id: usize = std::env::var("CGCN_DIST_ID")
+        .context("CGCN_DIST_ID not set")?
+        .parse()
+        .context("CGCN_DIST_ID must be an integer")?;
+
+    let mut conn = worker_connect(transport, &addr, id)?;
+    let setup_bytes = match wire::read_frame(&mut conn)? {
+        (Frame { kind: Kind::Setup, payload, .. }, _) => payload,
+        (f, _) => bail!("worker {id}: expected Setup, got {:?}", f.kind),
+    };
+    let setup = WorkerSetup::from_payload(&setup_bytes)?;
+
+    // rebuild the chief's exact view: dataset from the shared cache,
+    // partition/plan/spec through the same session code path
+    let p = crate::datagen::preset(&setup.preset)
+        .ok_or_else(|| anyhow!("worker {id}: unknown preset {}", setup.preset))?;
+    let ds = crate::datagen::build_cached(p, setup.ds_seed, std::path::Path::new(&setup.cache))?;
+    let (model, spec, mut source) = setup.session(&ds).into_worker()?;
+    let mut backend = HostBackend::new();
+    backend.register_model(&model, spec.clone());
+    let mut weights: Vec<Tensor> = spec
+        .weight_shapes
+        .iter()
+        .map(|&(a, b)| Tensor::zeros(vec![a, b]))
+        .collect();
+    let mut batch = source.new_batch();
+    let mut grads: Vec<Vec<f32>> = Vec::new();
+    // None until the first Step so epoch 0 still triggers begin_epoch
+    let mut epoch: Option<usize> = None;
+
+    loop {
+        let frame = match wire::read_frame(&mut conn) {
+            Ok((f, _)) => f,
+            Err(e) => {
+                // chief dropped us (fault recovery) — dial back in; a
+                // fresh Setup follows on the new connection
+                eprintln!("worker {id}: connection lost ({e:#}), reconnecting");
+                conn = worker_connect(transport, &addr, id)?;
+                continue;
+            }
+        };
+        match frame.kind {
+            Kind::Shutdown => return Ok(()),
+            Kind::Setup => {
+                if frame.payload != setup_bytes {
+                    bail!("worker {id}: run setup changed mid-run");
+                }
+            }
+            Kind::Step => {
+                let mut r = PayloadReader::new(&frame.payload);
+                let e = r.get_u64()? as usize;
+                let index = r.get_u64()? as usize;
+                let nl = r.get_u32()? as usize;
+                if nl != weights.len() {
+                    bail!("worker {id}: {nl} weight tensors, model has {}", weights.len());
+                }
+                for t in &mut weights {
+                    let n = r.get_u32()? as usize;
+                    if n != t.data.len() {
+                        bail!("worker {id}: weight size {n}, expected {}", t.data.len());
+                    }
+                    let mut data = std::mem::take(&mut t.data);
+                    r.get_f32s(n, &mut data)?;
+                    t.data = data;
+                }
+                if epoch != Some(e) {
+                    source.begin_epoch(e);
+                    epoch = Some(e);
+                }
+                if index >= source.len() {
+                    bail!(
+                        "worker {id}: batch {index} outside epoch {e}'s plan ({})",
+                        source.len()
+                    );
+                }
+                source.assemble(index, &mut batch);
+                let mut w = PayloadWriter::new();
+                let flags = if batch.n_train == 0 {
+                    w.put_f32(0.0);
+                    FLAG_EMPTY
+                } else {
+                    let loss = backend.grad_step(&model, &weights, &batch, &mut grads)?;
+                    w.put_f32(loss);
+                    w.put_u32(grads.len() as u32);
+                    for g in &grads {
+                        wire::encode_grad(setup.compression, g, &mut w);
+                    }
+                    0
+                };
+                if let Err(e) = wire::write_frame(&mut conn, Kind::Grads, flags, &w.buf) {
+                    // reply lost; the chief retries the whole exchange
+                    eprintln!("worker {id}: reply failed ({e:#}), reconnecting");
+                    conn = worker_connect(transport, &addr, id)?;
+                }
+            }
+            other => bail!("worker {id}: unexpected frame {other:?}"),
+        }
+    }
+}
+
+/// Dial the chief and introduce ourselves, with bounded retries (the
+/// chief may be between accept windows during fault recovery).
+fn worker_connect(transport: Transport, addr: &str, id: usize) -> Result<Stream> {
+    let mut last = None;
+    for _ in 0..100 {
+        match Stream::connect(transport, addr) {
+            Ok(mut conn) => {
+                // block until the next Step; if the chief is gone the
+                // timeout turns an orphaned worker into a clean exit
+                conn.set_read_timeout(Some(Duration::from_secs(600)))?;
+                let mut w = PayloadWriter::new();
+                w.put_u32(id as u32);
+                w.put_u32(PROTO_VERSION);
+                wire::write_frame(&mut conn, Kind::Hello, 0, &w.buf)?;
+                return Ok(conn);
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    Err(anyhow!("worker {id}: cannot reach chief at {addr}: {:#?}", last))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norm::NormConfig;
+
+    fn setup() -> WorkerSetup {
+        WorkerSetup {
+            preset: "cora_like".into(),
+            ds_seed: 42,
+            cache: "data".into(),
+            cfg_seed: 7,
+            layers: 2,
+            hidden: Some(16),
+            b_max: None,
+            parts: Some(8),
+            q: 2,
+            random_partition: true,
+            norm: NormConfig::ROW_LAMBDA1,
+            n_workers: 2,
+            compression: Compression::TopK { frac: 0.5 },
+        }
+    }
+
+    #[test]
+    fn worker_setup_roundtrips() {
+        let s = setup();
+        let bytes = s.to_payload();
+        assert_eq!(WorkerSetup::from_payload(&bytes).unwrap(), s);
+        // every norm/compression variant survives
+        for (norm, comp) in [
+            (NormConfig::PAPER_DEFAULT, Compression::None),
+            (NormConfig::ROW, Compression::Quant8),
+            (NormConfig::ROW_IDENTITY, Compression::TopK { frac: 0.01 }),
+        ] {
+            let s = WorkerSetup { norm, compression: comp, hidden: None, ..setup() };
+            assert_eq!(WorkerSetup::from_payload(&s.to_payload()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn setup_rejects_protocol_mismatch() {
+        let mut bytes = setup().to_payload();
+        bytes[0] = 99;
+        let e = WorkerSetup::from_payload(&bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("protocol version"), "{e:#}");
+    }
+
+    #[test]
+    fn transport_parses() {
+        assert_eq!(Transport::parse("unix").unwrap(), Transport::Unix);
+        assert_eq!(Transport::parse("tcp").unwrap(), Transport::Tcp);
+        assert!(Transport::parse("carrier-pigeon").is_err());
+        assert_eq!(Transport::Unix.label(), "unix");
+    }
+
+    #[test]
+    fn stats_compression_ratio() {
+        let s = DistStats::default();
+        assert_eq!(s.compression_ratio(), 1.0);
+        s.raw_grad_bytes.store(4000, Ordering::Relaxed);
+        s.wire_grad_bytes.store(1000, Ordering::Relaxed);
+        assert_eq!(s.compression_ratio(), 4.0);
+    }
+
+    #[test]
+    fn backend_surface_delegates_to_chief() {
+        let mut be = DistributedBackend::new(DistConfig::new(3, Transport::Unix, setup()));
+        assert_eq!(be.name(), "distributed");
+        assert_eq!(be.batches_per_step(), 3);
+        assert!(!be.prefetchable());
+        let spec = ModelSpec::gcn(crate::graph::Task::Multiclass, 2, 4, 8, 2, 16);
+        assert!(be.register_model("m", spec.clone()));
+        assert_eq!(be.model_spec("m").unwrap(), spec);
+        // dropping a never-started backend must not hang or spawn
+        drop(be);
+    }
+}

@@ -1,0 +1,603 @@
+//! Byte protocol of the distributed training backend: length-prefixed,
+//! CRC-guarded frames over a UNIX or TCP stream, plus the gradient
+//! payload codecs (raw / top-k sparsified / 8-bit quantized).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//!   magic   "CGDF"          4 bytes
+//!   kind    u8              Hello | Setup | Step | Grads | Shutdown
+//!   flags   u8              per-kind bits (Grads: bit 0 = empty batch)
+//!   pad     u16             zero
+//!   len     u32             payload byte count
+//!   payload len bytes
+//!   crc32   u32             IEEE CRC over kind..payload
+//! ```
+//!
+//! The CRC turns a torn or corrupted frame into a typed decode error
+//! instead of silently training on garbage gradients; the transport
+//! layer reacts by dropping the connection and re-running the
+//! request/response exchange (every exchange is idempotent: the same
+//! `(epoch, batch index, weights)` request deterministically produces
+//! the same gradient bits, so a retry cannot fork the trajectory).
+#![deny(missing_docs)]
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: "CGDF" (Cluster-GCN Distributed Frame).
+pub const MAGIC: [u8; 4] = *b"CGDF";
+
+/// Protocol version carried in `Hello`; chief and worker must agree.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Frame kinds (the `kind` byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// worker → chief: `worker id u32, proto version u32`.
+    Hello,
+    /// chief → worker: serialized run setup (see `WorkerSetup`).
+    Setup,
+    /// chief → worker: `epoch u64, batch index u64, weights`.
+    Step,
+    /// worker → chief: `loss f32, per-layer gradient payloads`.
+    Grads,
+    /// chief → worker: clean exit request (empty payload).
+    Shutdown,
+}
+
+impl Kind {
+    fn to_u8(self) -> u8 {
+        match self {
+            Kind::Hello => 1,
+            Kind::Setup => 2,
+            Kind::Step => 3,
+            Kind::Grads => 4,
+            Kind::Shutdown => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Kind> {
+        Ok(match b {
+            1 => Kind::Hello,
+            2 => Kind::Setup,
+            3 => Kind::Step,
+            4 => Kind::Grads,
+            5 => Kind::Shutdown,
+            _ => bail!("unknown frame kind {b}"),
+        })
+    }
+}
+
+/// `Grads` flag bit 0: the worker's batch held no training node, so the
+/// frame carries no gradients and must not contribute to the average.
+pub const FLAG_EMPTY: u8 = 1;
+
+/// One decoded frame.
+#[derive(Debug)]
+pub struct Frame {
+    /// What the payload means.
+    pub kind: Kind,
+    /// Per-kind flag bits.
+    pub flags: u8,
+    /// Kind-specific payload bytes.
+    pub payload: Vec<u8>,
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE), table-driven — same scheme as the checkpoint and
+// out-of-core store formats
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+fn crc32_update(crc: u32, bytes: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Serialize one frame into its on-wire bytes.
+pub fn frame_bytes(kind: Kind, flags: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(kind.to_u8());
+    out.push(flags);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32_update(0, &out[4..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Write one frame.  Returns the bytes put on the wire.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: Kind,
+    flags: u8,
+    payload: &[u8],
+) -> Result<usize> {
+    let bytes = frame_bytes(kind, flags, payload);
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(bytes.len())
+}
+
+/// Write a deliberately truncated frame (the `dist.send.torn`
+/// failpoint): header plus half the payload, no CRC.  The peer's
+/// `read_frame` fails on EOF or CRC and the connection is torn down.
+pub fn write_torn_frame(
+    w: &mut impl Write,
+    kind: Kind,
+    flags: u8,
+    payload: &[u8],
+) -> Result<usize> {
+    let bytes = frame_bytes(kind, flags, payload);
+    let cut = 12 + payload.len() / 2;
+    w.write_all(&bytes[..cut])?;
+    w.flush()?;
+    Ok(cut)
+}
+
+/// Read one frame, verifying magic and CRC.  A short read (torn frame,
+/// closed peer) or checksum mismatch is an error — the caller drops the
+/// connection and re-runs the exchange.  Returns the frame and the
+/// bytes consumed from the wire.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize)> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head)?;
+    if head[..4] != MAGIC {
+        bail!("bad frame magic {:02x?}", &head[..4]);
+    }
+    let kind = Kind::from_u8(head[4])?;
+    let flags = head[5];
+    let len = u32::from_le_bytes([head[8], head[9], head[10], head[11]]) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut crc_b = [0u8; 4];
+    r.read_exact(&mut crc_b)?;
+    let got = u32::from_le_bytes(crc_b);
+    let want = crc32_update(crc32_update(0, &head[4..]), &payload);
+    if got != want {
+        bail!("frame CRC mismatch (kind {kind:?}, {len} payload bytes)");
+    }
+    Ok((Frame { kind, flags, payload }, 16 + len))
+}
+
+// ---------------------------------------------------------------------
+// Payload primitives
+// ---------------------------------------------------------------------
+
+/// Append-only payload builder (little-endian primitives).
+#[derive(Default)]
+pub struct PayloadWriter {
+    /// Accumulated payload bytes.
+    pub buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    /// Fresh empty payload.
+    pub fn new() -> PayloadWriter {
+        PayloadWriter::default()
+    }
+
+    /// Append a `u8`.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32` (bit pattern, little-endian).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a slice of `f32` as raw little-endian bytes.
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor-based payload reader mirroring [`PayloadWriter`].
+pub struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> PayloadReader<'a> {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated payload (at {}, want {n})", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Next `u8`.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Next little-endian `u32`.
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Next little-endian `u64`.
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    /// Next `f32` (bit pattern).
+    pub fn get_f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Next length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    /// Next `n` `f32`s into `out` (cleared first).
+    pub fn get_f32s(&mut self, n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let b = self.take(n * 4)?;
+        out.clear();
+        out.reserve(n);
+        for c in b.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(())
+    }
+
+    /// True when every byte has been consumed.
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gradient compression
+// ---------------------------------------------------------------------
+
+/// Gradient uplink compression, selected per run (`--compress`).
+/// Weight downlinks are always raw — the parity contracts require
+/// bit-exact weights on every worker.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compression {
+    /// Raw little-endian `f32` gradients — bit-exact, required for the
+    /// `workers=1` ≡ `HostBackend` parity contract.
+    None,
+    /// Magnitude top-k sparsification: keep `ceil(frac · n)` entries
+    /// per layer (ties broken toward the lower index), zero the rest.
+    TopK {
+        /// Kept fraction in `(0, 1]`.
+        frac: f32,
+    },
+    /// Per-layer linear 8-bit quantization (min/scale + one byte per
+    /// entry; ~4x uplink reduction).
+    Quant8,
+}
+
+impl Compression {
+    /// Parse the CLI surface: `none`, `topk:<frac>`, `q8`.
+    pub fn parse(s: &str) -> Result<Compression> {
+        if s == "none" {
+            return Ok(Compression::None);
+        }
+        if s == "q8" {
+            return Ok(Compression::Quant8);
+        }
+        if let Some(f) = s.strip_prefix("topk:") {
+            let frac: f32 = f
+                .parse()
+                .map_err(|_| anyhow!("bad top-k fraction {f:?} (want e.g. topk:0.1)"))?;
+            if !(frac > 0.0 && frac <= 1.0) {
+                bail!("top-k fraction must be in (0, 1], got {frac}");
+            }
+            return Ok(Compression::TopK { frac });
+        }
+        bail!("unknown compression {s:?} (expected none | topk:<frac> | q8)")
+    }
+
+    /// Short label for logs and the bench report.
+    pub fn label(&self) -> String {
+        match self {
+            Compression::None => "none".into(),
+            Compression::TopK { frac } => format!("topk:{frac}"),
+            Compression::Quant8 => "q8".into(),
+        }
+    }
+
+    /// Serialize into a setup payload.
+    pub fn put(&self, w: &mut PayloadWriter) {
+        match self {
+            Compression::None => {
+                w.put_u8(0);
+                w.put_f32(0.0);
+            }
+            Compression::TopK { frac } => {
+                w.put_u8(1);
+                w.put_f32(*frac);
+            }
+            Compression::Quant8 => {
+                w.put_u8(2);
+                w.put_f32(0.0);
+            }
+        }
+    }
+
+    /// Deserialize from a setup payload.
+    pub fn get(r: &mut PayloadReader) -> Result<Compression> {
+        let tag = r.get_u8()?;
+        let param = r.get_f32()?;
+        Ok(match tag {
+            0 => Compression::None,
+            1 => Compression::TopK { frac: param },
+            2 => Compression::Quant8,
+            _ => bail!("unknown compression tag {tag}"),
+        })
+    }
+}
+
+/// Encode one layer's gradient under `mode`, appending `mode tag, n,
+/// data` to `w`.  The decode side dispatches on the tag alone, so a
+/// worker and chief configured differently still interoperate (the
+/// worker's setup decides).
+pub fn encode_grad(mode: Compression, g: &[f32], w: &mut PayloadWriter) {
+    let n = g.len();
+    match mode {
+        Compression::None => {
+            w.put_u8(0);
+            w.put_u32(n as u32);
+            w.put_f32s(g);
+        }
+        Compression::TopK { frac } => {
+            let k = (((frac as f64) * n as f64).ceil() as usize).clamp(1, n.max(1));
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx.sort_by(|&a, &b| {
+                let (va, vb) = (g[a as usize].abs(), g[b as usize].abs());
+                vb.total_cmp(&va).then(a.cmp(&b))
+            });
+            idx.truncate(k);
+            idx.sort_unstable();
+            w.put_u8(1);
+            w.put_u32(n as u32);
+            w.put_u32(k as u32);
+            for &i in &idx {
+                w.put_u32(i);
+                w.put_f32(g[i as usize]);
+            }
+        }
+        Compression::Quant8 => {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in g {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if g.is_empty() {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            let scale = (hi - lo) / 255.0;
+            w.put_u8(2);
+            w.put_u32(n as u32);
+            w.put_f32(lo);
+            w.put_f32(scale);
+            for &v in g {
+                let code = if scale > 0.0 {
+                    (((v - lo) / scale).round()).clamp(0.0, 255.0) as u8
+                } else {
+                    0
+                };
+                w.put_u8(code);
+            }
+        }
+    }
+}
+
+/// Decode one layer's gradient (inverse of [`encode_grad`]).
+pub fn decode_grad(r: &mut PayloadReader, out: &mut Vec<f32>) -> Result<()> {
+    let tag = r.get_u8()?;
+    let n = r.get_u32()? as usize;
+    match tag {
+        0 => r.get_f32s(n, out)?,
+        1 => {
+            let k = r.get_u32()? as usize;
+            out.clear();
+            out.resize(n, 0.0);
+            for _ in 0..k {
+                let i = r.get_u32()? as usize;
+                let v = r.get_f32()?;
+                *out.get_mut(i)
+                    .ok_or_else(|| anyhow!("top-k index {i} out of bounds ({n})"))? = v;
+            }
+        }
+        2 => {
+            let lo = r.get_f32()?;
+            let scale = r.get_f32()?;
+            out.clear();
+            out.reserve(n);
+            for _ in 0..n {
+                let code = r.get_u8()?;
+                out.push(lo + code as f32 * scale);
+            }
+        }
+        _ => bail!("unknown gradient encoding tag {tag}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"hello gradients".to_vec();
+        let mut wire = Vec::new();
+        let tx = write_frame(&mut wire, Kind::Grads, FLAG_EMPTY, &payload).unwrap();
+        assert_eq!(tx, wire.len());
+        let (f, rx) = read_frame(&mut wire.as_slice()).unwrap();
+        assert_eq!(rx, wire.len());
+        assert_eq!(f.kind, Kind::Grads);
+        assert_eq!(f.flags, FLAG_EMPTY);
+        assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn corrupted_frame_fails_crc() {
+        let mut wire = frame_bytes(Kind::Step, 0, b"0123456789");
+        let mid = wire.len() / 2;
+        wire[mid] ^= 0xFF;
+        let e = read_frame(&mut wire.as_slice()).unwrap_err();
+        assert!(format!("{e:#}").contains("CRC"), "{e:#}");
+    }
+
+    #[test]
+    fn torn_frame_fails_to_read() {
+        let mut wire = Vec::new();
+        write_torn_frame(&mut wire, Kind::Step, 0, &[7u8; 64]).unwrap();
+        assert!(read_frame(&mut wire.as_slice()).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut wire = frame_bytes(Kind::Hello, 0, &[]);
+        wire[0] = b'X';
+        let e = read_frame(&mut wire.as_slice()).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+    }
+
+    #[test]
+    fn payload_primitives_roundtrip() {
+        let mut w = PayloadWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.5);
+        w.put_str("reddit_like");
+        w.put_f32s(&[1.0, 2.5]);
+        let mut r = PayloadReader::new(&w.buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f32().unwrap(), -0.5);
+        assert_eq!(r.get_str().unwrap(), "reddit_like");
+        let mut fs = Vec::new();
+        r.get_f32s(2, &mut fs).unwrap();
+        assert_eq!(fs, vec![1.0, 2.5]);
+        assert!(r.done());
+        assert!(r.get_u8().is_err());
+    }
+
+    #[test]
+    fn compression_parse_and_labels() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("q8").unwrap(), Compression::Quant8);
+        assert_eq!(
+            Compression::parse("topk:0.25").unwrap(),
+            Compression::TopK { frac: 0.25 }
+        );
+        assert!(Compression::parse("topk:0").is_err());
+        assert!(Compression::parse("topk:1.5").is_err());
+        assert!(Compression::parse("zip").is_err());
+        assert_eq!(Compression::parse("topk:0.25").unwrap().label(), "topk:0.25");
+    }
+
+    #[test]
+    fn raw_grads_roundtrip_bitwise() {
+        let g = vec![0.125f32, -3.5, 0.0, f32::MIN_POSITIVE, 1e30];
+        let mut w = PayloadWriter::new();
+        encode_grad(Compression::None, &g, &mut w);
+        let mut out = Vec::new();
+        decode_grad(&mut PayloadReader::new(&w.buf), &mut out).unwrap();
+        assert_eq!(
+            g.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let g = vec![0.1f32, -5.0, 0.2, 4.0, -0.3];
+        let mut w = PayloadWriter::new();
+        encode_grad(Compression::TopK { frac: 0.4 }, &g, &mut w);
+        let mut out = Vec::new();
+        decode_grad(&mut PayloadReader::new(&w.buf), &mut out).unwrap();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn quant8_bounds_error_by_step() {
+        let g: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let mut w = PayloadWriter::new();
+        encode_grad(Compression::Quant8, &g, &mut w);
+        // ~4x smaller than raw (tag + n + min + scale + n bytes)
+        assert!(w.buf.len() < g.len() * 4 / 3);
+        let mut out = Vec::new();
+        decode_grad(&mut PayloadReader::new(&w.buf), &mut out).unwrap();
+        let step = (g.last().unwrap() - g[0]) / 255.0;
+        for (a, b) in g.iter().zip(&out) {
+            assert!((a - b).abs() <= step * 0.5 + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant8_constant_layer() {
+        let g = vec![0.25f32; 9];
+        let mut w = PayloadWriter::new();
+        encode_grad(Compression::Quant8, &g, &mut w);
+        let mut out = Vec::new();
+        decode_grad(&mut PayloadReader::new(&w.buf), &mut out).unwrap();
+        assert_eq!(out, g);
+    }
+}

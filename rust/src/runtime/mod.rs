@@ -5,13 +5,15 @@
 //! artifact-free [`HostBackend`] (forward on the tiled SpMM·GEMM
 //! kernels, gradients + Adam on the pooled [`backward`] engine) — and
 //! the composable combinators layered on top: [`ShardedBackend`]
-//! (data-parallel gradient averaging across replicas) and
+//! (data-parallel gradient averaging across replicas),
 //! [`PrefetchBackend`] (batch assembly double-buffered against
-//! execution).
+//! execution), and [`DistributedBackend`] (cross-process gradient
+//! exchange with spawned workers over UNIX/TCP sockets).
 
 pub mod artifacts;
 pub mod backend;
 pub mod backward;
+pub mod distributed;
 pub mod exec;
 pub mod host;
 pub mod prefetch;
@@ -20,6 +22,7 @@ pub mod sharded;
 pub use artifacts::{ArtifactMeta, Kind, ManifestMissing, Registry};
 pub use backend::{Backend, ModelSpec, StepOutcome, VrgcnAdj, VrgcnBatch};
 pub use backward::BackwardWorkspace;
+pub use distributed::{Compression, DistConfig, DistStats, DistributedBackend, Transport};
 pub use exec::{Engine, Tensor};
 pub use host::HostBackend;
 pub use prefetch::PrefetchBackend;

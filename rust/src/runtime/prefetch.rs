@@ -24,10 +24,13 @@
 //! source declares itself non-prefetchable
 //! ([`BatchSource::prefetchable`], the opt-out for future sources whose
 //! assembly depends on step results — VR-GCN itself bypasses
-//! `BatchSource` entirely and runs inline in the driver) or when the
+//! `BatchSource` entirely and runs inline in the driver), when the
 //! inner backend consumes more than one batch per step (a sharded
-//! inner pulls its own replicas' batches).  The cross-epoch carry is
-//! invalidated by [`Backend::epoch_begin`].
+//! inner pulls its own replicas' batches), or when the inner backend
+//! declares itself non-prefetchable ([`Backend::prefetchable`] — the
+//! distributed backend's batches are assembled by worker processes,
+//! never locally).  The cross-epoch carry is invalidated by
+//! [`Backend::epoch_begin`].
 //!
 //! The wrapper is a *scheduler*, not an execution identity:
 //! [`Backend::name`] forwards the inner backend's name, and the
@@ -132,6 +135,10 @@ impl<B: Backend> Backend for PrefetchBackend<B> {
         self.inner.epoch_begin();
     }
 
+    fn prefetchable(&self) -> bool {
+        self.inner.prefetchable()
+    }
+
     fn step_from(
         &mut self,
         model: &str,
@@ -141,7 +148,10 @@ impl<B: Backend> Backend for PrefetchBackend<B> {
         first: usize,
         scratch: &mut Batch,
     ) -> Result<StepOutcome> {
-        if self.inner.batches_per_step() != 1 || !source.prefetchable() {
+        if self.inner.batches_per_step() != 1
+            || !self.inner.prefetchable()
+            || !source.prefetchable()
+        {
             self.have = None;
             return self.inner.step_from(model, state, lr, source, first, scratch);
         }

@@ -213,6 +213,35 @@ pub struct Session<'a> {
     initial: Option<TrainState>,
     initial_history: Option<checkpoint::HistorySection>,
     prefetch: bool,
+    workers: usize,
+}
+
+/// Resolve the partition count for `ds`: explicit override, else the
+/// preset default, else 10 — clamped to the node count.
+fn resolve_parts(ds: &Dataset, parts: Option<usize>) -> usize {
+    parts
+        .or(preset(&ds.name).map(|p| p.default_partitions))
+        .unwrap_or(10)
+        .clamp(1, ds.n().max(1))
+}
+
+/// The session partition, shared by every process of a run (the chief's
+/// driver, distributed workers, the serving path): identical clusters
+/// are derived from `(seed, parts, random)` via the same
+/// `seed ^ 0xBEEF` RNG stream.
+fn session_clusters(
+    ds: &Dataset,
+    seed: u64,
+    parts_n: usize,
+    random: bool,
+) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let part = if random {
+        RandomPartitioner.partition(&ds.graph, parts_n, &mut rng)
+    } else {
+        MultilevelPartitioner::default().partition(&ds.graph, parts_n, &mut rng)
+    };
+    parts_to_clusters(&part, parts_n)
 }
 
 impl<'a> Session<'a> {
@@ -231,7 +260,20 @@ impl<'a> Session<'a> {
             initial: None,
             initial_history: None,
             prefetch: true,
+            workers: 1,
         }
+    }
+
+    /// Plan the cluster source for `n` distributed workers (cluster `c`
+    /// is owned by worker `c % n`; per-epoch plans interleave the
+    /// workers' shuffles round-robin).  `1` (the default) is the
+    /// ordinary single-process plan.  Pair with a
+    /// [`crate::runtime::DistributedBackend`] of the same width on the
+    /// chief; worker processes derive their matching view via
+    /// [`Session::into_worker`].
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
     }
 
     /// Overlap batch assembly with execution by wrapping the (owned)
@@ -405,17 +447,8 @@ impl<'a> Session<'a> {
             return Err(anyhow!("a model needs at least one layer"));
         }
         let p = preset(&ds.name);
-        let parts_n = parts
-            .or(p.map(|p| p.default_partitions))
-            .unwrap_or(10)
-            .clamp(1, ds.n().max(1));
-        let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
-        let part = if random_partition {
-            RandomPartitioner.partition(&ds.graph, parts_n, &mut rng)
-        } else {
-            MultilevelPartitioner::default().partition(&ds.graph, parts_n, &mut rng)
-        };
-        let clusters = parts_to_clusters(&part, parts_n);
+        let parts_n = resolve_parts(ds, parts);
+        let clusters = session_clusters(ds, cfg.seed, parts_n, random_partition);
         let f_hid = cfg.hidden.or(p.map(|p| p.f_hid)).unwrap_or(128);
         // b_max only shapes batch assembly, which serving sizes itself;
         // the weight shapes it implies are what matter here
@@ -454,6 +487,7 @@ impl<'a> Session<'a> {
             initial,
             initial_history,
             prefetch,
+            workers,
         } = self;
         if cfg.layers == 0 {
             return Err(anyhow!("a model needs at least one layer"));
@@ -461,34 +495,37 @@ impl<'a> Session<'a> {
         // default-on assembly/execute overlap: every owned backend runs
         // behind a PrefetchBackend (a pure scheduling wrapper — name
         // and numerics are the inner backend's; pass-through when the
-        // inner consumes >1 batch per step)
+        // inner consumes >1 batch per step).  Backends that must pull
+        // batches themselves (the distributed backend, whose workers
+        // assemble their own clusters' batches) opt out via
+        // `Backend::prefetchable`.
         if prefetch {
             backend = match backend {
-                BackendSlot::Owned(b) => {
+                BackendSlot::Owned(b) if b.prefetchable() => {
                     BackendSlot::Owned(Box::new(PrefetchBackend::new(b)))
                 }
-                borrowed => borrowed,
+                other => other,
             };
         }
         let p = preset(&ds.name);
 
         // ---- partition + sampler (Cluster-GCN only) -------------------
         let sampler = if let Method::Cluster { q } = &method {
-            let parts = parts
-                .or(p.map(|p| p.default_partitions))
-                .unwrap_or(10)
-                .clamp(1, ds.n().max(1));
+            let parts = resolve_parts(ds, parts);
             let q = (*q).clamp(1, parts);
-            let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
-            let part = if random_partition {
-                RandomPartitioner.partition(&ds.graph, parts, &mut rng)
-            } else {
-                MultilevelPartitioner::default().partition(&ds.graph, parts, &mut rng)
-            };
-            Some(ClusterSampler::new(parts_to_clusters(&part, parts), q))
+            Some(ClusterSampler::new(
+                session_clusters(ds, cfg.seed, parts, random_partition),
+                q,
+            ))
         } else {
             None
         };
+        if workers > 1 && !matches!(method, Method::Cluster { .. }) {
+            return Err(anyhow!(
+                "distributed training supports the cluster method only \
+                 (partitions are the unit of worker ownership)"
+            ));
+        }
 
         // ---- spec registration (host backends synthesize models) ------
         let f_hid = cfg.hidden.or(p.map(|p| p.f_hid)).unwrap_or(128);
@@ -512,8 +549,8 @@ impl<'a> Session<'a> {
         let source = match method {
             Method::Cluster { .. } => {
                 let sampler = sampler.expect("cluster method always builds a sampler");
-                DriverSource::Batched(Box::new(ClusterSource::new(
-                    ds, sampler, &spec, cfg.norm, cfg.seed,
+                DriverSource::Batched(Box::new(ClusterSource::new_distributed(
+                    ds, sampler, &spec, cfg.norm, cfg.seed, workers,
                 )?))
             }
             Method::Expansion { batch } => DriverSource::Batched(Box::new(
@@ -539,6 +576,43 @@ impl<'a> Session<'a> {
 
         let driver = Driver::from_parts(backend, ds, model, cfg, source, initial)?;
         Ok((driver, observer, save))
+    }
+
+    /// Build the pieces a **distributed worker process** needs to serve
+    /// gradient requests for its share of a run's clusters: the model
+    /// id, the resolved spec, and the ownership-aware batch source.
+    /// The derivation runs through the same partition / q-clamp / spec
+    /// sizing code as the chief's [`Session::driver`], so every process
+    /// of a distributed run agrees on clusters, epoch plans, and
+    /// shapes.  Requires [`Method::Cluster`]; set [`Session::workers`]
+    /// to the run's width first.
+    pub fn into_worker(self) -> Result<(String, ModelSpec, ClusterSource<'a>)> {
+        let model = self.model_name();
+        let Session { ds, method, cfg, parts, random_partition, workers, .. } = self;
+        let Method::Cluster { q } = method else {
+            return Err(anyhow!(
+                "distributed training supports the cluster method only \
+                 (partitions are the unit of worker ownership)"
+            ));
+        };
+        if cfg.layers == 0 {
+            return Err(anyhow!("a model needs at least one layer"));
+        }
+        let p = preset(&ds.name);
+        let parts_n = resolve_parts(ds, parts);
+        let q = q.clamp(1, parts_n);
+        let sampler = ClusterSampler::new(
+            session_clusters(ds, cfg.seed, parts_n, random_partition),
+            q,
+        );
+        let f_hid = cfg.hidden.or(p.map(|p| p.f_hid)).unwrap_or(128);
+        let base_bmax = cfg.b_max.or(p.map(|p| p.b_max)).unwrap_or(512);
+        let b_max = base_bmax.max(sampler.max_batch_nodes()).next_multiple_of(8);
+        let spec =
+            ModelSpec::gcn(ds.task, cfg.layers, ds.f_in, f_hid, ds.num_classes, b_max);
+        let source =
+            ClusterSource::new_distributed(ds, sampler, &spec, cfg.norm, cfg.seed, workers)?;
+        Ok((model, spec, source))
     }
 
     /// Run the session to completion: build the [`Driver`], drain every

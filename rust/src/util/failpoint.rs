@@ -39,6 +39,9 @@
 //! | `shard.exchange`  | typed error in the sharded gradient exchange    |
 //! | `serve.flush`     | flush fails with `ServeError::Injected`         |
 //! | `serve.flush.delay` | flush stalls (drives queue pressure)          |
+//! | `dist.send.drop`  | distributed step request dropped before the write (chief reconnects + retries) |
+//! | `dist.send.torn`  | distributed step request cut mid-frame (worker CRC-fails and redials) |
+//! | `dist.recv.delay` | distributed gradient response stalls (latency fault) |
 //!
 //! Faults are *simulations at the recovery seam*: `driver.loss`
 //! corrupts only the reported loss (never the weights), so a guarded

@@ -1,0 +1,260 @@
+//! End-to-end tests of the cross-process [`DistributedBackend`]: a
+//! chief in this test process spawns real worker *processes* (this same
+//! test binary, re-entered through the `worker_entry_hook` test below)
+//! and trains over the socket protocol.
+//!
+//! The two contracts pinned here are the ones ci.sh gates on:
+//!
+//! - `--workers 1` replays the plain `HostBackend` run **bit-identically**
+//!   (loss bits and final weight bits);
+//! - a run with an injected socket fault (torn request frame) replays
+//!   the fault-free distributed run bit-identically, because exchanges
+//!   are idempotent and recovery is reconnect-and-retry.
+
+use std::sync::{Arc, Mutex};
+
+use cluster_gcn::datagen::{build_cached, preset};
+use cluster_gcn::graph::Dataset;
+use cluster_gcn::norm::NormConfig;
+use cluster_gcn::runtime::distributed::{worker_main, WorkerSetup};
+use cluster_gcn::runtime::{Compression, DistConfig, DistStats, DistributedBackend, Transport};
+use cluster_gcn::session::{Method, Session, SessionResult, TrainConfig};
+use cluster_gcn::util::failpoint;
+
+/// Worker-process entry: when the chief spawned us (rendezvous env set)
+/// run the worker loop until `Shutdown`; as an ordinary test in the
+/// normal suite it is a no-op.
+#[test]
+fn worker_entry_hook() {
+    if std::env::var("CGCN_DIST_ADDR").is_err() {
+        return;
+    }
+    worker_main().unwrap();
+}
+
+/// Failpoints and the dataset cache are process-global; serialize the
+/// tests that spawn chiefs.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+const PRESET: &str = "cora_like";
+const DS_SEED: u64 = 42;
+const PARTS: usize = 8;
+const CFG_SEED: u64 = 5;
+
+fn cache_dir() -> String {
+    std::env::temp_dir()
+        .join(format!("cgcn-dist-test-{}", std::process::id()))
+        .display()
+        .to_string()
+}
+
+fn dataset() -> Dataset {
+    let p = preset(PRESET).unwrap();
+    build_cached(p, DS_SEED, std::path::Path::new(&cache_dir())).unwrap()
+}
+
+fn train_cfg() -> TrainConfig {
+    TrainConfig {
+        layers: 2,
+        hidden: Some(16),
+        lr: 0.01,
+        epochs: 2,
+        eval_every: 1,
+        seed: CFG_SEED,
+        ..TrainConfig::default()
+    }
+}
+
+fn worker_setup(n_workers: usize, compression: Compression) -> WorkerSetup {
+    WorkerSetup {
+        preset: PRESET.into(),
+        ds_seed: DS_SEED,
+        cache: cache_dir(),
+        cfg_seed: CFG_SEED,
+        layers: 2,
+        hidden: Some(16),
+        b_max: None,
+        parts: Some(PARTS),
+        q: 1,
+        random_partition: false,
+        norm: NormConfig::PAPER_DEFAULT,
+        n_workers,
+        compression,
+    }
+}
+
+/// Spawned workers re-enter THIS test binary and run only
+/// `worker_entry_hook` (libtest's `--exact` filter).
+fn test_worker_cmd() -> (std::path::PathBuf, Vec<String>) {
+    let exe = std::env::current_exe().unwrap();
+    let args = vec![
+        "worker_entry_hook".to_string(),
+        "--exact".to_string(),
+        "--nocapture".to_string(),
+    ];
+    (exe, args)
+}
+
+fn run_distributed(
+    ds: &Dataset,
+    workers: usize,
+    transport: Transport,
+    compression: Compression,
+) -> (SessionResult, Arc<DistStats>) {
+    let mut cfg = DistConfig::new(workers, transport, worker_setup(workers, compression));
+    cfg.worker_cmd = Some(test_worker_cmd());
+    let be = DistributedBackend::new(cfg);
+    let stats = be.stats();
+    let out = Session::new(ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(PARTS)
+        .config(train_cfg())
+        .workers(workers)
+        .backend(Box::new(be))
+        .run()
+        .unwrap();
+    (out, stats)
+}
+
+fn run_host(ds: &Dataset) -> SessionResult {
+    Session::new(ds)
+        .method(Method::Cluster { q: 1 })
+        .partition(PARTS)
+        .config(train_cfg())
+        .prefetch(false)
+        .run()
+        .unwrap()
+}
+
+/// Bitwise equality of two runs: loss curve bits and final weight bits.
+fn assert_bitwise_equal(a: &SessionResult, b: &SessionResult, what: &str) {
+    assert_eq!(a.result.curve.len(), b.result.curve.len(), "{what}: curve length");
+    for (x, y) in a.result.curve.iter().zip(&b.result.curve) {
+        assert_eq!(x.epoch, y.epoch, "{what}: epoch order");
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "{what}: epoch {} loss bits ({} vs {})",
+            x.epoch,
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(
+            x.eval_f1.to_bits(),
+            y.eval_f1.to_bits(),
+            "{what}: epoch {} eval bits",
+            x.epoch
+        );
+    }
+    let (wa, wb) = (&a.result.state.weights, &b.result.state.weights);
+    assert_eq!(wa.len(), wb.len(), "{what}: weight tensor count");
+    for (li, (ta, tb)) in wa.iter().zip(wb).enumerate() {
+        assert_eq!(ta.data.len(), tb.data.len(), "{what}: layer {li} size");
+        for (i, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: layer {li} weight {i} ({x} vs {y})"
+            );
+        }
+    }
+}
+
+/// `workers = 1` over a real spawned worker process is bit-identical to
+/// the plain single-process `HostBackend` run — the parity contract.
+#[test]
+fn workers_one_replays_host_run_bitwise() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let ds = dataset();
+    let host = run_host(&ds);
+    let (dist, stats) = run_distributed(&ds, 1, Transport::Unix, Compression::None);
+    assert_eq!(dist.backend, "distributed");
+    assert_bitwise_equal(&host, &dist, "workers=1 vs host");
+    assert!(stats.steps.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert_eq!(stats.retries.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(stats.respawns.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // raw gradients on the wire: no compression, ratio stays ~1
+    assert!(stats.compression_ratio() < 1.1, "{}", stats.compression_ratio());
+}
+
+/// Two workers split the clusters and average gradients — not bitwise
+/// vs one worker (the batch per Adam step doubles), but the loss curve
+/// must stay equivalent: training converges to the same neighborhood.
+#[test]
+fn two_workers_stay_loss_curve_equivalent() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let ds = dataset();
+    let host = run_host(&ds);
+    let (dist, stats) = run_distributed(&ds, 2, Transport::Unix, Compression::None);
+    let (hf, df) = (
+        host.result.curve.last().unwrap(),
+        dist.result.curve.last().unwrap(),
+    );
+    assert!(df.train_loss.is_finite() && df.eval_f1.is_finite());
+    let first = dist.result.curve.first().unwrap();
+    assert!(
+        df.train_loss < first.train_loss,
+        "2-worker loss did not decrease ({} -> {})",
+        first.train_loss,
+        df.train_loss
+    );
+    let rel = (df.train_loss - hf.train_loss).abs() / hf.train_loss.abs().max(1e-9);
+    assert!(
+        rel < 0.75,
+        "2-worker final loss {} drifted from host {} (rel {rel:.3})",
+        df.train_loss,
+        hf.train_loss
+    );
+    assert!(stats.bytes_tx.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert!(stats.bytes_rx.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+/// One injected torn request frame (the `dist.send.torn` failpoint,
+/// firing exactly once in the chief) forces a worker reconnect and an
+/// exchange retry — and the recovered run replays the fault-free
+/// 2-worker trajectory bit for bit, because exchanges are idempotent.
+#[test]
+fn torn_frame_recovery_replays_clean_run_bitwise() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let ds = dataset();
+    let (clean, _) = run_distributed(&ds, 2, Transport::Unix, Compression::None);
+    failpoint::install("dist.send.torn=1:1", 0).unwrap();
+    let (faulted, stats) = run_distributed(&ds, 2, Transport::Unix, Compression::None);
+    failpoint::clear();
+    assert!(
+        stats.retries.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "the torn frame must force a retry"
+    );
+    assert!(
+        stats.reconnects.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "the torn frame must force a reconnect"
+    );
+    assert_bitwise_equal(&clean, &faulted, "faulted vs clean 2-worker");
+}
+
+/// TCP transport and 8-bit quantized gradient uplink: still trains, and
+/// the wire carries ~4x fewer gradient bytes than the dense f32s.
+#[test]
+fn tcp_transport_with_quantized_gradients_trains() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear();
+    let ds = dataset();
+    let (dist, stats) = run_distributed(&ds, 2, Transport::Tcp, Compression::Quant8);
+    let first = dist.result.curve.first().unwrap();
+    let last = dist.result.curve.last().unwrap();
+    assert!(last.train_loss.is_finite() && last.eval_f1.is_finite());
+    assert!(
+        last.train_loss < first.train_loss,
+        "quantized run loss did not decrease ({} -> {})",
+        first.train_loss,
+        last.train_loss
+    );
+    assert!(
+        stats.compression_ratio() > 2.5,
+        "q8 compression ratio only {:.2}",
+        stats.compression_ratio()
+    );
+}
